@@ -1,0 +1,113 @@
+//! Ablations of the design choices DESIGN.md calls out (beyond the paper's
+//! figures): error-feedback memory, non-i.i.d. data, partial participation,
+//! the optional entropy-coding stage, and quantizer-table snap resolution.
+//! `cargo bench --bench ablations`
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use m22::compress::entropy::{empirical_entropy, entropy_coded_bits};
+use m22::compress::{BlockCodec, CpuCodec};
+use m22::config::{presets, Scheme};
+use m22::coordinator::run_experiment;
+use m22::data::Dataset;
+use m22::metrics::Recorder;
+use m22::quantizer::{design, Family, QuantizerTables};
+use m22::stats::{Distribution, GenNorm};
+use m22::util::rng::Rng;
+
+fn main() {
+    entropy_stage();
+    table_snap_resolution();
+    federated_ablations();
+}
+
+/// How much the optional lossless stage (paper Sec. II-E) would save on
+/// real LBG index streams at each rate.
+fn entropy_stage() {
+    println!("== ablation: entropy-coding stage on LBG index streams ==");
+    let dist = GenNorm::standardized(0.8);
+    let mut rng = Rng::new(5);
+    let samples: Vec<f64> = (0..60_000).map(|_| dist.sample(&mut rng)).collect();
+    println!("{:<8} {:>12} {:>12} {:>12} {:>9}", "rate", "nominal", "coded", "entropy", "saving");
+    for rq in [1u32, 2, 3, 4] {
+        let q = design(&dist, 2.0, 1 << rq);
+        let idx: Vec<u32> = samples.iter().map(|&x| q.index_of(x) as u32).collect();
+        let nominal = rq as u64 * idx.len() as u64;
+        let coded = entropy_coded_bits(&idx, rq);
+        let h = empirical_entropy(&idx, rq) * idx.len() as f64;
+        println!(
+            "R={rq}      {:>12} {:>12} {:>12.0} {:>8.1}%",
+            nominal,
+            coded,
+            h,
+            100.0 * (1.0 - coded as f64 / nominal as f64)
+        );
+    }
+}
+
+/// Sensitivity of reconstruction quality to the table snap step (Sec. V-B
+/// pre-calculation): finer grids cost more designs but change little.
+fn table_snap_resolution() {
+    println!("\n== ablation: quantizer-table shape-snap resolution ==");
+    let mut rng = Rng::new(9);
+    let truth = GenNorm::new(0.01, 0.83); // off-grid shape
+    let g: Vec<f32> = (0..50_000).map(|_| truth.sample(&mut rng) as f32).collect();
+    let tables = Arc::new(QuantizerTables::new());
+    // exact design at the true shape vs snapped table lookups
+    let std = (g.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / g.len() as f64).sqrt();
+    let mse_of = |q: &m22::quantizer::Quantizer| {
+        let qs = q.scaled(std);
+        let (t, c) = qs.padded_f32(16);
+        let (_, ghat) = CpuCodec.quantize(&g, &t, &c).unwrap();
+        g.iter().zip(&ghat).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / g.len() as f64
+    };
+    let exact = mse_of(&design(&GenNorm::standardized(0.83), 2.0, 8));
+    let snapped = mse_of(&tables.get(Family::GenNorm, 0.83, 2.0, 8)); // snaps to 0.85
+    println!(
+        "exact-shape design mse {exact:.3e} vs snapped(0.05) {snapped:.3e} ({:+.2}%)",
+        100.0 * (snapped / exact - 1.0)
+    );
+}
+
+/// Federated ablations (need artifacts): memory on/off, non-iid, partial
+/// participation — same scheme, same budget, same rounds.
+fn federated_ablations() {
+    println!("\n== ablation: FL variants (M22 GenNorm M=2 R=2, cnn_s) ==");
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipped (artifacts not built)");
+        return;
+    }
+    let rt = m22::runtime::spawn(dir).expect("runtime");
+    let mut base = presets::quickstart("cnn_s", 5);
+    base.scheme = Scheme::M22 { family: Family::GenNorm, m: 2.0 };
+    base.local_steps = 2;
+    base.eval_batches = 2;
+    base.n_clients = 4;
+    let dataset = Dataset::generate(base.dataset);
+    let mut rec = Recorder::new();
+
+    let mut run = |label: &str, f: &dyn Fn(&mut m22::config::ExperimentConfig)| {
+        let mut cfg = base.clone();
+        f(&mut cfg);
+        let out = run_experiment(&cfg, &rt, &dataset, label, &mut rec).expect(label);
+        println!(
+            "  {label:<28} acc={:.4} loss={:.4}",
+            out.final_test_acc, out.final_test_loss
+        );
+    };
+    run("baseline (iid, full part.)", &|_| {});
+    run("error-feedback memory", &|c| {
+        c.memory = true;
+        c.memory_decay = 1.0;
+    });
+    run("non-iid dirichlet(0.3)", &|c| c.dirichlet_alpha = Some(0.3));
+    run("participation 0.5", &|c| c.participation = 0.5);
+    run("non-iid + memory", &|c| {
+        c.dirichlet_alpha = Some(0.3);
+        c.memory = true;
+        c.memory_decay = 0.5;
+    });
+    let _ = &rec;
+}

@@ -1,0 +1,32 @@
+//! Bench target: regenerate Fig. 1 (distribution fitting under topK) and
+//! time the fitting path. `cargo bench --bench fig1_fitting`
+
+use std::path::PathBuf;
+
+use m22::figures::{fig1, FigScale};
+use m22::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
+use m22::stats::{Distribution, GenNorm};
+use m22::util::bench::Bencher;
+use m22::util::rng::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = m22::runtime::spawn(dir).expect("runtime");
+        let csv = fig1(&rt, FigScale::smoke()).expect("fig1");
+        println!("fig1: {} rows (histogram + 4 fitted pdfs, 2 panels)", csv.lines().count());
+    } else {
+        eprintln!("fig1 skipped (artifacts not built)");
+    }
+
+    // perf: moment fitting on a 41k-entry layer (CNN fc1-sized)
+    let truth = GenNorm::new(0.01, 0.8);
+    let mut rng = Rng::new(3);
+    let layer: Vec<f32> = (0..41_472).map(|_| truth.sample(&mut rng) as f32).collect();
+    let b = Bencher::default().throughput(41_472.0);
+    b.run("moments 41k layer", || Moments::from_nonzeros(&layer).unwrap());
+    let m = Moments::from_nonzeros(&layer).unwrap();
+    let b2 = Bencher::default();
+    b2.run("fit gennorm", || fit_gennorm(&m));
+    b2.run("fit weibull", || fit_weibull2(&m));
+}

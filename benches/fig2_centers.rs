@@ -1,0 +1,24 @@
+//! Bench target: regenerate Fig. 2 (quantization centers/thresholds vs M)
+//! and time the LBG designer. `cargo bench --bench fig2_centers`
+
+use m22::quantizer::design;
+use m22::stats::{GenNorm, Weibull2};
+use m22::util::bench::Bencher;
+
+fn main() {
+    // the figure data itself
+    let csv = m22::figures::fig2();
+    let rows = csv.lines().count() - 1;
+    println!("fig2: {rows} (m, kind, index, value) rows");
+    // show the headline trend: innermost positive center vs M
+    for m in [0.0, 2.0, 4.0, 8.0] {
+        let q = design(&GenNorm::standardized(1.0), m, 8);
+        println!("  M={m}: inner center {:.4}, outer {:.4}", q.centers[4], q.centers[7]);
+    }
+
+    // perf: single LBG design (the table-prewarm unit of work)
+    let b = Bencher::default();
+    b.run("lbg design gennorm(1.0) M=2 L=8", || design(&GenNorm::standardized(1.0), 2.0, 8));
+    b.run("lbg design gennorm(0.6) M=9 L=16", || design(&GenNorm::standardized(0.6), 9.0, 16));
+    b.run("lbg design weibull(0.8) M=4 L=8", || design(&Weibull2::standardized(0.8), 4.0, 8));
+}

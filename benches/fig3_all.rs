@@ -1,0 +1,29 @@
+//! Bench target: regenerate Fig. 3 (all schemes at two budgets) at reduced
+//! scale and report wall-clock. `cargo bench --bench fig3_all`
+//! For paper-scale curves run `repro fig3 --full --rate {1,3}`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use m22::figures::{fig3, FigScale};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig3 skipped (artifacts not built)");
+        return;
+    }
+    let rt = m22::runtime::spawn(dir).expect("runtime");
+    let mut scale = FigScale::smoke();
+    scale.rounds = 4;
+    for rq in [1u32, 3] {
+        let t0 = Instant::now();
+        let (rec, _) = fig3(&rt, rq, scale).expect("fig3");
+        println!(
+            "fig3 R={rq}: {} series x {} rounds in {:.1}s",
+            rec.series_names().len(),
+            scale.rounds,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

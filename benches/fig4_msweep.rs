@@ -1,0 +1,26 @@
+//! Bench target: regenerate Fig. 4 (the effect of M) at reduced scale.
+//! `cargo bench --bench fig4_msweep`; paper scale: `repro fig4 --full`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use m22::figures::{fig4, FigScale};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig4 skipped (artifacts not built)");
+        return;
+    }
+    let rt = m22::runtime::spawn(dir).expect("runtime");
+    let mut scale = FigScale::smoke();
+    scale.rounds = 4;
+    let t0 = Instant::now();
+    let (rec, _) = fig4(&rt, scale).expect("fig4");
+    println!(
+        "fig4: {} M values x {} rounds in {:.1}s",
+        rec.series_names().len(),
+        scale.rounds,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,25 @@
+//! Bench target: regenerate Fig. 5 (ResNet non-uniform schemes; VGG budget
+//! sweep) at reduced scale. `cargo bench --bench fig5_models`;
+//! paper scale: `repro fig5a --full` / `repro fig5b --full`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use m22::figures::{fig5a, fig5b, FigScale};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig5 skipped (artifacts not built)");
+        return;
+    }
+    let rt = m22::runtime::spawn(dir).expect("runtime");
+    let mut scale = FigScale::smoke();
+    scale.rounds = 3;
+    let t0 = Instant::now();
+    let (ra, _) = fig5a(&rt, scale).expect("fig5a");
+    println!("fig5a (resnet_s): {} series in {:.1}s", ra.series_names().len(), t0.elapsed().as_secs_f64());
+    let t1 = Instant::now();
+    let (rb, _) = fig5b(&rt, scale).expect("fig5b");
+    println!("fig5b (vgg_s): {} series in {:.1}s", rb.series_names().len(), t1.elapsed().as_secs_f64());
+}

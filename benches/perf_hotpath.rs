@@ -1,0 +1,101 @@
+//! Perf benches: every L3 hot path + the PJRT execution boundary.
+//! `cargo bench --bench perf_hotpath` — the numbers behind
+//! EXPERIMENTS.md §Perf (before/after table).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use m22::compress::m22::{M22, M22Config};
+use m22::compress::rle::{encode_positions, position_bits};
+use m22::compress::topk::topk;
+use m22::compress::bitpack::pack_indices;
+use m22::compress::{BlockCodec, Budget, Compressor, CpuCodec};
+use m22::quantizer::{design, Family, QuantizerTables};
+use m22::stats::fitting::Moments;
+use m22::stats::{Distribution, GenNorm};
+use m22::train::Manifest;
+use m22::util::bench::Bencher;
+use m22::util::rng::Rng;
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let dist = GenNorm::new(0.01, 0.8);
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| dist.sample(&mut rng) as f32).collect()
+}
+
+fn main() {
+    println!("== L3 hot paths (VGG-S-sized gradient d = 174314) ==");
+    let d = 174_314usize;
+    let g = grad(d, 1);
+    let k = (0.6 * d as f64) as usize;
+
+    let b = Bencher::default().throughput(d as f64);
+    b.run("topk quickselect 0.6d", || topk(&g, k).1.len());
+
+    let (sparse, positions) = topk(&g, k);
+    let b = Bencher::default().throughput(k as f64);
+    b.run("rle gap-encode positions", || encode_positions(&positions).len());
+    b.run("rle position_bits (analytic)", || position_bits(&positions));
+
+    let idx: Vec<u32> = (0..k as u32).map(|i| i % 8).collect();
+    b.run("bitpack 3-bit indices", || pack_indices(&idx, 3).len());
+
+    let b1 = Bencher::default().throughput(d as f64);
+    b1.run("moments (rust) full grad", || Moments::from_nonzeros(&sparse).unwrap());
+
+    let q = design(&GenNorm::standardized(0.8), 2.0, 8);
+    let (t, c) = q.padded_f32(16);
+    b1.run("cpu quantize full grad", || CpuCodec.quantize(&sparse, &t, &c).unwrap().0.len());
+
+    // end-to-end compress/decompress (CPU codec path)
+    let spec_layout = {
+        // VGG-shaped spec straight from the manifest if available, else synthetic
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok().and_then(|m| m.model("vgg_s").ok().cloned())
+    };
+    if let Some(spec) = &spec_layout {
+        let tables = Arc::new(QuantizerTables::new());
+        let budget = Budget::paper_point(spec.d(), 2);
+        let gg = grad(spec.d(), 2);
+        let mut comp = M22::new(
+            M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: budget.k_ref, min_fit: 512 },
+            Arc::new(CpuCodec),
+            tables,
+        );
+        // warm the quantizer table so we time the request path, not design
+        let _ = comp.compress(&gg, spec).unwrap();
+        let b2 = Bencher::default().throughput(spec.d() as f64);
+        b2.run("m22 compress e2e (vgg_s, cpu codec)", || {
+            comp.compress(&gg, spec).unwrap().payload.len()
+        });
+        let payload = comp.compress(&gg, spec).unwrap().payload;
+        b2.run("m22 decompress e2e (vgg_s)", || {
+            comp.decompress(&payload, spec).unwrap().len()
+        });
+    }
+
+    println!("\n== PJRT boundary (needs artifacts) ==");
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = m22::runtime::spawn(dir.clone()).expect("runtime");
+        let man = Manifest::load(&dir).unwrap();
+        let ds = m22::data::Dataset::generate(Default::default());
+        for arch in ["cnn_s", "resnet_s", "vgg_s"] {
+            let w = man.load_init(&dir, arch).unwrap();
+            let batch = ds.batch(&ds.train, 0, man.batch);
+            let b3 = Bencher { warmup_iters: 2, samples: 8, iters_per_sample: 1, items_per_iter: None };
+            b3.run(&format!("pjrt train_step {arch}"), || {
+                rt.train_step(arch, &w, &batch.x, &batch.y).unwrap().loss
+            });
+        }
+        // HLO codec block vs CPU codec block
+        let blk = grad(65_536, 3);
+        let b4 = Bencher::default().throughput(65_536.0);
+        b4.run("hlo quantize 64k block", || rt.quantize(&blk, &t, &c).unwrap().0.len());
+        b4.run("cpu quantize 64k block", || CpuCodec.quantize(&blk, &t, &c).unwrap().0.len());
+        b4.run("hlo moments 64k block", || rt.moments(&blk).unwrap()[0]);
+        b4.run("cpu moments 64k block", || CpuCodec.moments(&blk).unwrap()[0]);
+    } else {
+        eprintln!("pjrt benches skipped (artifacts not built)");
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench target: regenerate Table I and Table II (paper Sec. II-D).
+//! `cargo bench --bench tables`
+
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match m22::train::Manifest::load(&dir) {
+        Ok(man) => print!("{}", m22::figures::table1(&man)),
+        Err(e) => eprintln!("table1 skipped (artifacts not built): {e:#}"),
+    }
+    println!();
+    print!("{}", m22::figures::table2());
+}

@@ -1,0 +1,87 @@
+//! Codec-level comparison on a *real* model gradient (no training loop).
+//!
+//!     cargo run --release --example compare_compressors
+//!
+//! Computes one CNN-S gradient through the PJRT train-step artifact, then
+//! pushes it through every scheme of paper Sec. V-A at matched budgets
+//! (R = 1 and R = 3 bits per survivor, K = 0.6 d) and prints the rate /
+//! reconstruction-quality table — the codec view of Fig. 3.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use m22::compress::BlockCodec;
+use m22::config::{presets, ExperimentConfig, Scheme};
+use m22::data::Dataset;
+use m22::quantizer::QuantizerTables;
+use m22::train::Manifest;
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = m22::runtime::spawn(dir.clone())?;
+    let manifest = Manifest::load(&dir)?;
+    let spec = manifest.model("cnn_s")?;
+
+    // one real gradient
+    let w = manifest.load_init(&dir, "cnn_s")?;
+    let ds = Dataset::generate(Default::default());
+    let b = ds.batch(&ds.train, 0, runtime.batch);
+    let step = runtime.train_step("cnn_s", &w, &b.x, &b.y)?;
+    let g = step.grads;
+
+    let tables = Arc::new(QuantizerTables::new());
+    let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
+
+    for rq in [1u32, 3] {
+        println!("\n== budget: R = {rq} bit/survivor, K = 0.6 d ==");
+        println!(
+            "{:<26} {:>9} {:>11} {:>11} {:>9} {:>8}",
+            "scheme", "K", "value_bits", "total_kbit", "mse(1e-6)", "cosine"
+        );
+        for scheme in presets::fig3_schemes(rq) {
+            let cfg = ExperimentConfig::new("cnn_s", scheme, rq, 1);
+            let mut comp = cfg.build_compressor(spec.d(), codec.clone(), tables.clone());
+            let out = comp.compress(&g, spec)?;
+            println!(
+                "{:<26} {:>9} {:>11} {:>11.1} {:>9.3} {:>8.4}",
+                comp.name(),
+                out.report.k,
+                out.report.value_bits,
+                out.report.ideal_total_bits() / 1e3,
+                mse(&g, &out.reconstructed) * 1e6,
+                cosine(&g, &out.reconstructed),
+            );
+        }
+        // the uncompressed reference row
+        let cfg = ExperimentConfig::new("cnn_s", Scheme::None, rq, 1);
+        let mut comp = cfg.build_compressor(spec.d(), codec.clone(), tables.clone());
+        let out = comp.compress(&g, spec)?;
+        println!(
+            "{:<26} {:>9} {:>11} {:>11.1} {:>9.3} {:>8.4}",
+            "none (fp32)",
+            out.report.k,
+            out.report.value_bits,
+            out.report.ideal_total_bits() / 1e3,
+            0.0,
+            1.0
+        );
+    }
+    Ok(())
+}

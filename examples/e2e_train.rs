@@ -1,0 +1,76 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//!     cargo run --release --example e2e_train [-- --rounds 25]
+//!
+//! Proves all three layers compose on a real small workload:
+//!   * L1 Pallas kernels (matmul inside the model; quantize/moments in the
+//!     codec) execute through the AOT HLO artifacts on PJRT;
+//!   * L2 train/eval graphs drive learning;
+//!   * L3 coordinator runs 2-client FedAvg with M22 compression and honest
+//!     payload bytes.
+//!
+//! It trains CNN-S for `rounds × local_steps × n_clients` optimizer steps
+//! (default 25×4×2 = 200 client steps), logging the loss curve, and then
+//! compares against the uncompressed baseline at ~16× the uplink cost,
+//! reporting the per-bit accuracy (paper eq. 9).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use m22::config::{ExperimentConfig, Scheme};
+use m22::coordinator::run_experiment;
+use m22::data::Dataset;
+use m22::metrics::{per_bit_accuracy, PerBitInput, Recorder};
+use m22::quantizer::Family;
+use m22::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).unwrap_or_default();
+    let rounds = args.usize_or("rounds", 25).unwrap_or(25);
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = m22::runtime::spawn(artifacts)?;
+
+    let mut cfg =
+        ExperimentConfig::new("cnn_s", Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 2, rounds);
+    cfg.local_steps = 4;
+    cfg.eval_batches = 6;
+    cfg.dataset.train_per_class = 128;
+    cfg.dataset.test_per_class = 24;
+    let dataset = Dataset::generate(cfg.dataset);
+
+    println!("== e2e: M22 federated training (cnn_s, {} rounds) ==", cfg.rounds);
+    let mut rec = Recorder::new();
+    let m22_out = run_experiment(&cfg, &runtime, &dataset, "m22", &mut rec)?;
+
+    println!("\nround  train_loss  test_loss  test_acc  kbit_up");
+    for r in rec.rows.iter().filter(|r| r.series == "m22") {
+        println!(
+            "{:>5}  {:>10.4}  {:>9.4}  {:>8.4}  {:>7.1}",
+            r.round, r.train_loss, r.test_loss, r.test_acc, r.bits_up / 1e3
+        );
+    }
+
+    println!("\n== baseline: no compression, same schedule ==");
+    let mut base_cfg = cfg.clone();
+    base_cfg.scheme = Scheme::None;
+    let base_out = run_experiment(&base_cfg, &runtime, &dataset, "none", &mut rec)?;
+
+    let delta = per_bit_accuracy(&PerBitInput {
+        reference_final: base_out.final_test_loss,
+        compressed_final: m22_out.final_test_loss,
+        bits_per_round: m22_out.bits_per_round,
+        rounds: cfg.rounds,
+    });
+    println!("\nsummary");
+    println!("  m22   : acc {:.4}  loss {:.4}  {:.1} kbit/round", m22_out.final_test_acc, m22_out.final_test_loss, m22_out.bits_per_round / 1e3);
+    println!("  none  : acc {:.4}  loss {:.4}  {:.1} kbit/round", base_out.final_test_acc, base_out.final_test_loss, base_out.bits_per_round / 1e3);
+    println!("  uplink saving: {:.1}x", base_out.bits_per_round / m22_out.bits_per_round);
+    println!("  per-bit accuracy Δ(T,R) vs uncompressed: {delta:+.3e}");
+
+    rec.write_csv("results/e2e_train.csv")?;
+    eprintln!("curve written to results/e2e_train.csv");
+    Ok(())
+}

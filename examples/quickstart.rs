@@ -1,0 +1,49 @@
+//! Quickstart: the smallest complete M22 federated run.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Spawns the PJRT runtime over the AOT artifacts, runs a few federated
+//! rounds of the CNN with M22 (GenNorm, M = 2, R = 2 bits/survivor,
+//! K = 0.6 d), and prints the accuracy curve and the rate report.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use m22::config::presets;
+use m22::coordinator::run_experiment;
+use m22::data::Dataset;
+use m22::metrics::Recorder;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = m22::runtime::spawn(artifacts)?;
+
+    // a small M22 experiment: 2 clients, 5 rounds, CNN-S
+    let cfg = presets::quickstart("cnn_s", 5);
+    println!("scheme : {}", cfg.scheme.label(cfg.rq));
+    println!("config : {}", cfg.to_json());
+
+    let dataset = Dataset::generate(cfg.dataset);
+    let mut rec = Recorder::new();
+    let out = run_experiment(&cfg, &runtime, &dataset, "quickstart", &mut rec)?;
+
+    println!("\nround  test_loss  test_acc");
+    for (round, acc) in rec.acc_curve("quickstart") {
+        let loss = rec.rows[round].test_loss;
+        println!("{round:>5}  {loss:>9.4}  {acc:>8.4}");
+    }
+    let d = m22::train::Manifest::load(
+        &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )?
+    .model("cnn_s")?
+    .d();
+    println!(
+        "\nfinal accuracy {:.3} using {:.1} kbit/client/round (uncompressed: {:.0} kbit)",
+        out.final_test_acc,
+        out.bits_per_round / 1e3,
+        32.0 * d as f64 / 1e3
+    );
+    let _ = &dataset;
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT compile path: lower every L2 graph ONCE to HLO text + write manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (see Makefile
+``artifacts`` target). Python never runs after this: the Rust coordinator
+loads the HLO text via PJRT (`HloModuleProto::from_text_file`).
+
+Interchange is HLO *text*, not ``lowered.compile()``/``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects with ``proto.id() <= INT_MAX``. The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs in --out-dir:
+  train_step_<arch>.hlo.txt   (w, x, y) -> (loss, grads, acc)
+  eval_<arch>.hlo.txt         (w, x, y) -> (loss, acc)
+  quantize_block.hlo.txt      (g[B], t[15], c[16]) -> (idx i32[B], ghat[B])
+  moments_block.hlo.txt       (g[B]) -> (8,) fused stats
+  distortion_block.hlo.txt    (g[B], ghat[B], m[1]) -> (1,)
+  smoke.hlo.txt               (x[2,2], y[2,2]) -> (x@y + 2,)   [runtime tests]
+  init_<arch>.f32             raw little-endian f32 initial flat params
+  manifest.json               shapes + per-tensor layout for the Rust side
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import kernels as K
+from .model import BATCH, arch_summary, example_shapes, make_graphs
+from .archs import ARCHS, IMG, NUM_CLASSES
+from .params import init_params, manifest_entries
+
+QBLOCK = K.QUANT_BLOCK  # 65536
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path: str, fn, *shapes) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*shapes))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def smoke_fn(x, y):
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--init-seed", type=int, default=17)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    manifest: dict = {
+        "batch": BATCH,
+        "img": IMG,
+        "num_classes": NUM_CLASSES,
+        "quant_block": QBLOCK,
+        "max_levels": K.MAX_LEVELS,
+        "n_stats": K.N_STATS,
+        "init_seed": args.init_seed,
+        "archs": {},
+    }
+
+    for arch in ARCHS:
+        specs, train_step, evaluate = make_graphs(arch)
+        shapes = example_shapes(arch)
+        print(f"[{arch}] lowering train/eval (d={shapes[0].shape[0]})")
+        lower_to(os.path.join(out, f"train_step_{arch}.hlo.txt"),
+                 train_step, *shapes)
+        lower_to(os.path.join(out, f"eval_{arch}.hlo.txt"), evaluate, *shapes)
+
+        w0 = init_params(specs, args.init_seed)
+        init_path = os.path.join(out, f"init_{arch}.f32")
+        with open(init_path, "wb") as f:
+            f.write(bytes(memoryview(jax.device_get(w0))))
+        print(f"  wrote {init_path} ({w0.size} f32)")
+
+        manifest["archs"][arch] = dict(
+            arch_summary(arch), params=manifest_entries(specs)
+        )
+
+    print("[codec] lowering quantize/moments/distortion blocks")
+    lower_to(
+        os.path.join(out, "quantize_block.hlo.txt"),
+        K.quantize_block,
+        f32(QBLOCK), f32(K.MAX_LEVELS - 1), f32(K.MAX_LEVELS),
+    )
+    lower_to(os.path.join(out, "moments_block.hlo.txt"),
+             K.moments_block, f32(QBLOCK))
+    lower_to(
+        os.path.join(out, "distortion_block.hlo.txt"),
+        K.distortion_block,
+        f32(QBLOCK), f32(QBLOCK), f32(1),
+    )
+    lower_to(os.path.join(out, "smoke.hlo.txt"), smoke_fn, f32(2, 2), f32(2, 2))
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

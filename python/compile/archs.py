@@ -1,0 +1,178 @@
+"""The three DNN architectures of the paper (Table I), at reproduction scale.
+
+Paper: CNN (553k params), ResNet18 (11.2M), VGG16 (33.6M) on CIFAR-10.
+Here (DESIGN.md §Substitutions): CNN-S / ResNet-S / VGG-S on 12x12x3 synthetic
+CIFAR-like images — same structural families (plain conv stack; residual
+blocks; deep VGG-style stack whose parameter mass sits in dense layers),
+scaled so interpret-lowered Pallas + XLA-CPU trains in minutes.
+
+Every conv and dense layer is im2col + the L1 Pallas matmul kernel
+(DESIGN.md §Hardware-Adaptation) so the MXU-tiled kernel is on the hot path
+of fwd AND bwd of every model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_matmul
+from .params import ParamSpec
+
+IMG = 12  # input is IMG x IMG x 3
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def im2col_3x3(x: jax.Array) -> jax.Array:
+    """(B, H, W, C) -> (B*H*W, 9C) patches for a SAME 3x3 conv."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [
+        xp[:, dy : dy + h, dx : dx + w, :]
+        for dy in range(3)
+        for dx in range(3)
+    ]
+    patches = jnp.concatenate(cols, axis=-1)  # (B, H, W, 9C)
+    return patches.reshape(b * h * w, 9 * c)
+
+
+def conv3x3(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """SAME 3x3 conv as im2col + Pallas matmul. w: (9*Cin, Cout)."""
+    bsz, h, wd, _ = x.shape
+    cout = w.shape[1]
+    out = pallas_matmul(im2col_3x3(x), w) + b
+    return out.reshape(bsz, h, wd, cout)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return pallas_matmul(x, w) + b
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+# --------------------------------------------------------------------------
+# CNN-S — plain conv stack (paper's "CNN", Table I row 1)
+# --------------------------------------------------------------------------
+
+CNN_S_SPECS = [
+    ParamSpec("conv1.w", (9 * 3, 24), "conv"),
+    ParamSpec("conv1.b", (24,), "bias"),
+    ParamSpec("conv2.w", (9 * 24, 48), "conv"),
+    ParamSpec("conv2.b", (48,), "bias"),
+    ParamSpec("fc1.w", (3 * 3 * 48, 96), "dense"),
+    ParamSpec("fc1.b", (96,), "bias"),
+    ParamSpec("head.w", (96, NUM_CLASSES), "dense"),
+    ParamSpec("head.b", (NUM_CLASSES,), "bias"),
+]
+
+
+def cnn_s_forward(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    b = x.shape[0]
+    h = relu(conv3x3(x, p["conv1.w"], p["conv1.b"]))
+    h = maxpool2(h)  # 6x6x24
+    h = relu(conv3x3(h, p["conv2.w"], p["conv2.b"]))
+    h = maxpool2(h)  # 3x3x48
+    h = h.reshape(b, -1)
+    h = relu(dense(h, p["fc1.w"], p["fc1.b"]))
+    return dense(h, p["head.w"], p["head.b"])
+
+
+# --------------------------------------------------------------------------
+# ResNet-S — residual blocks (paper's "ResNet18", Table I row 2)
+# --------------------------------------------------------------------------
+
+def _resblock_specs(i: int, c: int) -> list[ParamSpec]:
+    return [
+        ParamSpec(f"block{i}.conv_a.w", (9 * c, c), "conv"),
+        ParamSpec(f"block{i}.conv_a.b", (c,), "bias"),
+        ParamSpec(f"block{i}.conv_b.w", (9 * c, c), "conv"),
+        ParamSpec(f"block{i}.conv_b.b", (c,), "bias"),
+    ]
+
+
+RESNET_S_SPECS = (
+    [
+        ParamSpec("stem.w", (9 * 3, 32), "conv"),
+        ParamSpec("stem.b", (32,), "bias"),
+    ]
+    + _resblock_specs(1, 32)
+    + _resblock_specs(2, 32)
+    + [
+        ParamSpec("fc1.w", (3 * 3 * 32, 128), "dense"),
+        ParamSpec("fc1.b", (128,), "bias"),
+        ParamSpec("head.w", (128, NUM_CLASSES), "dense"),
+        ParamSpec("head.b", (NUM_CLASSES,), "bias"),
+    ]
+)
+
+
+def _resblock(p: dict[str, jax.Array], i: int, x: jax.Array) -> jax.Array:
+    h = relu(conv3x3(x, p[f"block{i}.conv_a.w"], p[f"block{i}.conv_a.b"]))
+    h = conv3x3(h, p[f"block{i}.conv_b.w"], p[f"block{i}.conv_b.b"])
+    return relu(h + x)
+
+
+def resnet_s_forward(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    b = x.shape[0]
+    h = relu(conv3x3(x, p["stem.w"], p["stem.b"]))  # 12x12x32
+    h = _resblock(p, 1, h)
+    h = maxpool2(h)  # 6x6x32
+    h = _resblock(p, 2, h)
+    h = maxpool2(h)  # 3x3x32
+    h = h.reshape(b, -1)
+    h = relu(dense(h, p["fc1.w"], p["fc1.b"]))
+    return dense(h, p["head.w"], p["head.b"])
+
+
+# --------------------------------------------------------------------------
+# VGG-S — deep stack, parameter mass in dense layers (paper's "VGG16")
+# --------------------------------------------------------------------------
+
+VGG_S_SPECS = [
+    ParamSpec("conv1a.w", (9 * 3, 32), "conv"),
+    ParamSpec("conv1a.b", (32,), "bias"),
+    ParamSpec("conv1b.w", (9 * 32, 32), "conv"),
+    ParamSpec("conv1b.b", (32,), "bias"),
+    ParamSpec("conv2a.w", (9 * 32, 64), "conv"),
+    ParamSpec("conv2a.b", (64,), "bias"),
+    ParamSpec("conv2b.w", (9 * 64, 64), "conv"),
+    ParamSpec("conv2b.b", (64,), "bias"),
+    ParamSpec("fc1.w", (3 * 3 * 64, 160), "dense"),
+    ParamSpec("fc1.b", (160,), "bias"),
+    ParamSpec("fc2.w", (160, 96), "dense"),
+    ParamSpec("fc2.b", (96,), "bias"),
+    ParamSpec("head.w", (96, NUM_CLASSES), "dense"),
+    ParamSpec("head.b", (NUM_CLASSES,), "bias"),
+]
+
+
+def vgg_s_forward(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    b = x.shape[0]
+    h = relu(conv3x3(x, p["conv1a.w"], p["conv1a.b"]))
+    h = relu(conv3x3(h, p["conv1b.w"], p["conv1b.b"]))
+    h = maxpool2(h)  # 6x6x32
+    h = relu(conv3x3(h, p["conv2a.w"], p["conv2a.b"]))
+    h = relu(conv3x3(h, p["conv2b.w"], p["conv2b.b"]))
+    h = maxpool2(h)  # 3x3x64
+    h = h.reshape(b, -1)
+    h = relu(dense(h, p["fc1.w"], p["fc1.b"]))
+    h = relu(dense(h, p["fc2.w"], p["fc2.b"]))
+    return dense(h, p["head.w"], p["head.b"])
+
+
+ARCHS = {
+    "cnn_s": (CNN_S_SPECS, cnn_s_forward),
+    "resnet_s": (RESNET_S_SPECS, resnet_s_forward),
+    "vgg_s": (VGG_S_SPECS, vgg_s_forward),
+}

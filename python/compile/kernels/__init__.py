@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .matmul import pallas_matmul, matmul_padded, DEFAULT_BLOCK
+from .quantize import quantize_block, MAX_LEVELS, BLOCK as QUANT_BLOCK
+from .moments import moments_block, N_STATS
+from .distortion import distortion_block
+
+__all__ = [
+    "pallas_matmul",
+    "matmul_padded",
+    "DEFAULT_BLOCK",
+    "quantize_block",
+    "MAX_LEVELS",
+    "QUANT_BLOCK",
+    "moments_block",
+    "N_STATS",
+    "distortion_block",
+]

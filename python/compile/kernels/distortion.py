@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: M-magnitude-weighted L2 distortion (paper eq. 12/13).
+
+    d_M(g, ghat) = (1/B) * sum_j |g_j|^M * (g_j - ghat_j)^2
+
+Note on the paper: eq. (12) writes ``|g_j|^M || g_j - ghat_j ||_2`` but the
+LBG centroid rule it derives in eq. (13) — c = E[g^{M+1}] / E[g^M] — is the
+minimizer of the *squared*-error form above, so the squared form is what the
+system actually optimizes (and what we implement, in both this kernel and the
+Rust quantizer designer).
+
+M arrives as a traced (1,) array so one compiled artifact serves every M.
+``0^0`` is defined as 1 (the M=0 case must degrade exactly to plain L2,
+recovering TINYSCRIPT — paper Sec. V-A).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096
+
+
+def _distortion_kernel(g_ref, h_ref, m_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    h = h_ref[...]
+    m = m_ref[0]
+    a = jnp.abs(g)
+    # weight = |g|^M with 0^0 := 1 (zero-weight otherwise for zero entries).
+    w = jnp.where(a > 0.0, jnp.exp(m * jnp.log(jnp.where(a > 0.0, a, 1.0))),
+                  jnp.where(m == 0.0, 1.0, 0.0))
+    e = g - h
+    o_ref[...] += jnp.sum(w * e * e)[None]
+
+
+def distortion_block(g: jax.Array, ghat: jax.Array, m: jax.Array) -> jax.Array:
+    """Weighted distortion *sum* over a 1-D block (caller divides by count).
+
+    g, ghat: (B,) f32 with B a multiple of CHUNK; m: (1,) f32. Returns (1,)."""
+    (b,) = g.shape
+    assert ghat.shape == (b,), (g.shape, ghat.shape)
+    assert m.shape == (1,), m.shape
+    grid = (b // CHUNK,)
+    return pl.pallas_call(
+        _distortion_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(g, ghat, m)

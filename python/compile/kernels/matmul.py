@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled matmul — the MXU workhorse of every conv/dense layer.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper trains its
+DNNs on GPUs; here every conv is im2col + this kernel, tiled for the TPU MXU:
+
+  * grid (M/bm, N/bn, K/bk), K innermost so the (bm, bn) output block stays
+    resident in VMEM across the K loop (accumulate-in-place, one HBM write).
+  * blocks default to 128x128x128 — MXU-aligned; callers pad to multiples
+    via `pad_matmul` (pallas_matmul does it automatically).
+  * f32 accumulation via `preferred_element_type` regardless of input dtype
+    (bf16 inputs hit the MXU's native bf16 path on real hardware).
+
+Kernels are lowered with interpret=True — CPU PJRT cannot execute Mosaic
+custom-calls; the interpreter traces to plain HLO, which XLA-CPU runs natively.
+
+jax.grad does not flow through pallas_call, so `pallas_matmul` carries a
+custom_vjp whose backward passes are themselves pallas matmuls
+(dA = dC @ B^T, dB = A^T @ dC).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile. §Perf opt L2-1: fatter tiles than the classic 128³ —
+# (512, 512, 256) stays ≈ (512·512 + 512·256 + 512·256)·4B ≈ 2 MiB VMEM
+# (≪ 16 MiB, double-buffering headroom ≥ 6×) while cutting the grid-step
+# count ~8×. Interpret-lowered grids become XLA while-loop iterations with
+# dynamic slices, so fewer/fatter steps directly cut train-step latency
+# (ResNet-S fwd+bwd: 732 ms → see EXPERIMENTS.md §Perf).
+DEFAULT_BLOCK = (512, 512, 256)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _pick_block(m: int, k: int, n: int, block) -> tuple[int, int, int]:
+    """Shrink default blocks for small operands so padding never dominates.
+
+    Keeps the lane dimension a multiple of 8 where possible — the VPU/MXU
+    sublane granularity — while capping at the requested block."""
+    bm, bk, bn = block
+
+    def fit(dim: int, b: int) -> int:
+        if dim >= b:
+            return b
+        return max(8, _ceil_to(dim, 8))
+
+    return fit(m, bm), fit(k, bk), fit(n, bn)
+
+
+def matmul_padded(x: jax.Array, y: jax.Array, block=DEFAULT_BLOCK) -> jax.Array:
+    """Pallas matmul over operands already padded to block multiples."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, y.shape, block)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_raw(x: jax.Array, y: jax.Array, block=DEFAULT_BLOCK) -> jax.Array:
+    """Pad-to-block, run the kernel, slice back."""
+    m, k = x.shape
+    _, n = y.shape
+    bm, bk, bn = _pick_block(m, k, n, block)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = matmul_padded(xp, yp, (bm, bk, bn))
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def pallas_matmul(x: jax.Array, y: jax.Array, block=DEFAULT_BLOCK) -> jax.Array:
+    """Differentiable tiled Pallas matmul: ``x @ y`` with f32 accumulation."""
+    return _matmul_raw(x, y, block)
+
+
+def _mm_fwd(x, y, block):
+    return _matmul_raw(x, y, block), (x, y)
+
+
+def _mm_bwd(block, res, g):
+    x, y = res
+    # Backward matmuls reuse the same MXU tiling.
+    dx = _matmul_raw(g, y.T, block).astype(x.dtype)
+    dy = _matmul_raw(x.T, g, block).astype(y.dtype)
+    return dx, dy
+
+
+pallas_matmul.defvjp(_mm_fwd, _mm_bwd)

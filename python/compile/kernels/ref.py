@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: python/tests sweep shapes/dtypes with
+hypothesis and assert_allclose each kernel against its oracle here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quantize import MAX_LEVELS
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul.pallas_matmul."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def quantize_ref(g, thresholds, centers):
+    """Oracle for kernels.quantize.quantize_block (searchsorted semantics)."""
+    idx = jnp.searchsorted(thresholds, g, side="right").astype(jnp.int32)
+    ghat = centers[idx]
+    nz = g != 0.0
+    idx = jnp.where(nz, idx, 0).astype(jnp.int32)
+    ghat = jnp.where(nz, ghat, 0.0)
+    return idx, ghat
+
+
+def moments_ref(g):
+    """Oracle for kernels.moments.moments_block."""
+    a = jnp.abs(g)
+    nz = a > 0.0
+    safe = jnp.where(nz, a, 1.0)
+    return jnp.stack(
+        [
+            jnp.sum(nz.astype(jnp.float32)),
+            jnp.sum(a),
+            jnp.sum(a * a),
+            jnp.sum(jnp.sqrt(a)),
+            jnp.sum(a**3),
+            jnp.max(a),
+            jnp.sum(a**4),
+            jnp.sum(jnp.log(safe)),
+        ]
+    )
+
+
+def distortion_ref(g, ghat, m):
+    """Oracle for kernels.distortion.distortion_block (sum, not mean)."""
+    a = jnp.abs(g)
+    w = jnp.where(a > 0.0, a ** m, jnp.where(m == 0.0, 1.0, 0.0))
+    e = g - ghat
+    return jnp.sum(w * e * e)[None]
+
+
+__all__ = ["matmul_ref", "quantize_ref", "moments_ref", "distortion_ref",
+           "MAX_LEVELS"]

@@ -1,0 +1,79 @@
+"""L2 graphs: federated train-step / eval over the flat parameter vector.
+
+Each graph is lowered once by aot.py to HLO text and executed from the Rust
+coordinator (L3) — python is never on the request path.
+
+Graph signatures (all over a flat f32[d] parameter vector ``w``):
+
+  train_step(w, x, y) -> (loss f32[], grads f32[d], acc f32[])
+  evaluate(w, x, y)   -> (loss f32[], acc f32[])
+
+``x`` is f32[B, IMG, IMG, 3]; ``y`` is i32[B] class labels. Loss is
+categorical cross-entropy (paper Table II). The optimizer (SGD for CNN,
+Adam for ResNet/VGG — Table II) lives in Rust over the flat vector.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .archs import ARCHS, IMG, NUM_CLASSES
+from .params import ParamSpec, total_size, unflatten
+
+BATCH = 32
+
+
+def _loss_acc(logits: jax.Array, y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32).mean()
+    return nll, acc
+
+
+def make_graphs(arch: str):
+    """Return (specs, train_step, evaluate) for one architecture."""
+    specs, forward = ARCHS[arch]
+
+    def loss_fn(w: jax.Array, x: jax.Array, y: jax.Array):
+        p = unflatten(w, specs)
+        logits = forward(p, x)
+        loss, acc = _loss_acc(logits, y)
+        return loss, acc
+
+    def train_step(w: jax.Array, x: jax.Array, y: jax.Array):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(w, x, y)
+        return loss, grads, acc
+
+    def evaluate(w: jax.Array, x: jax.Array, y: jax.Array):
+        loss, acc = loss_fn(w, x, y)
+        return loss, acc
+
+    return specs, train_step, evaluate
+
+
+def example_shapes(arch: str, batch: int = BATCH):
+    """ShapeDtypeStructs for lowering."""
+    specs, _ = ARCHS[arch]
+    d = total_size(specs)
+    return (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, IMG, IMG, 3), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+def arch_summary(arch: str) -> dict:
+    """Table-I style row: layer count + param split by kind."""
+    specs, _ = ARCHS[arch]
+    conv = sum(s.size for s in specs if s.kind == "conv")
+    den = sum(s.size for s in specs if s.kind == "dense")
+    bias = sum(s.size for s in specs if s.kind == "bias")
+    return {
+        "arch": arch,
+        "tensors": len(specs),
+        "total_params": total_size(specs),
+        "conv_params": conv,
+        "dense_params": den,
+        "bias_params": bias,
+    }

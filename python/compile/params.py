@@ -1,0 +1,84 @@
+"""Flat-parameter plumbing for the L2 models.
+
+The Rust coordinator owns model state as ONE flat f32 vector per model (the
+uplink payload of the paper is exactly this vector's update). Each
+architecture publishes a static ``ParamSpec`` table (name, shape, kind);
+offsets are cumulative, so L2 unflattening is static slicing (no dynamic
+shapes in the lowered HLO) and L3 sees the same layout via the manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One tensor in the flat layout."""
+
+    name: str
+    shape: tuple[int, ...]
+    kind: str  # "conv" | "dense" | "bias"
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def offsets(specs: list[ParamSpec]) -> list[int]:
+    offs, o = [], 0
+    for s in specs:
+        offs.append(o)
+        o += s.size
+    return offs
+
+
+def total_size(specs: list[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def unflatten(w: jax.Array, specs: list[ParamSpec]) -> dict[str, jax.Array]:
+    """Static slicing of the flat vector into named tensors."""
+    out = {}
+    for s, o in zip(specs, offsets(specs)):
+        out[s.name] = jax.lax.slice(w, (o,), (o + s.size,)).reshape(s.shape)
+    return out
+
+
+def flatten(params: dict[str, jax.Array], specs: list[ParamSpec]) -> jax.Array:
+    return jnp.concatenate([params[s.name].reshape(-1) for s in specs])
+
+
+def init_params(specs: list[ParamSpec], seed: int) -> jax.Array:
+    """He-normal init for weights, zeros for biases, as one flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.kind == "bias":
+            chunks.append(jnp.zeros((s.size,), jnp.float32))
+        else:
+            fan_in = math.prod(s.shape[:-1])
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            chunks.append(
+                (jax.random.normal(sub, (s.size,), jnp.float32) * std)
+            )
+    return jnp.concatenate(chunks)
+
+
+def manifest_entries(specs: list[ParamSpec]) -> list[dict]:
+    """JSON-ready layout table for the Rust side."""
+    return [
+        {
+            "name": s.name,
+            "shape": list(s.shape),
+            "kind": s.kind,
+            "offset": o,
+            "size": s.size,
+        }
+        for s, o in zip(specs, offsets(specs))
+    ]

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests import the compile package from the repo's python/ dir regardless of
+# where pytest is invoked from.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# Interpret-mode pallas is trace-heavy; keep example counts deliberate.
+settings.register_profile("m22", max_examples=25, deadline=None)
+settings.load_profile("m22")

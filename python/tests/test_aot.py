@@ -1,0 +1,83 @@
+"""AOT artifact emission tests: HLO text well-formedness + manifest schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels as K
+from compile.aot import smoke_fn, to_hlo_text, f32
+from compile.archs import ARCHS
+from compile.model import example_shapes, make_graphs
+from compile.params import manifest_entries, total_size
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_emission_smoke():
+    text = to_hlo_text(jax.jit(smoke_fn).lower(f32(2, 2), f32(2, 2)))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True => tuple-typed root
+    assert "(f32[2,2]" in text
+
+
+def test_hlo_text_quantize_block_graph():
+    text = to_hlo_text(
+        jax.jit(K.quantize_block).lower(
+            f32(K.QUANT_BLOCK), f32(K.MAX_LEVELS - 1), f32(K.MAX_LEVELS)
+        )
+    )
+    assert "s32[65536]" in text and "f32[65536]" in text
+
+
+def test_manifest_entries_offsets_contiguous():
+    for arch in ARCHS:
+        specs, _, _ = make_graphs(arch)
+        ents = manifest_entries(specs)
+        off = 0
+        for e in ents:
+            assert e["offset"] == off
+            assert e["size"] == int(np.prod(e["shape"]))
+            off += e["size"]
+        assert off == total_size(specs)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_complete():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["quant_block"] == K.QUANT_BLOCK
+    assert man["max_levels"] == K.MAX_LEVELS
+    for arch in ARCHS:
+        assert arch in man["archs"]
+        d = man["archs"][arch]["total_params"]
+        init = os.path.join(ART, f"init_{arch}.f32")
+        assert os.path.getsize(init) == 4 * d
+        for stem in (f"train_step_{arch}", f"eval_{arch}"):
+            p = os.path.join(ART, f"{stem}.hlo.txt")
+            with open(p) as fh:
+                assert fh.read(9) == "HloModule", p
+    for stem in ("quantize_block", "moments_block", "distortion_block", "smoke"):
+        assert os.path.exists(os.path.join(ART, f"{stem}.hlo.txt"))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_init_params_finite_and_scaled():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for arch in ARCHS:
+        w = np.fromfile(os.path.join(ART, f"init_{arch}.f32"), dtype="<f4")
+        assert np.isfinite(w).all()
+        # He init: overall rms well below 1, above 0
+        rms = float(np.sqrt((w**2).mean()))
+        assert 1e-3 < rms < 1.0, (arch, rms)

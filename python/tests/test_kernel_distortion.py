@@ -1,0 +1,59 @@
+"""Hypothesis sweep of the M-weighted distortion kernel vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+CHUNK = 4096
+
+
+def _m(v):
+    return jnp.asarray([v], dtype=jnp.float32)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([0.0, 1.0, 2.0, 3.0, 4.0, 6.0, 9.0]),
+    sparsity=st.floats(0.0, 0.9),
+)
+def test_distortion_matches_oracle(seed, m, sparsity):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    g[rng.random(CHUNK) < sparsity] = 0.0
+    ghat = (g + rng.normal(size=CHUNK, scale=0.1)).astype(np.float32)
+    got = np.asarray(K.distortion_block(jnp.asarray(g), jnp.asarray(ghat), _m(m)))
+    want = np.asarray(ref.distortion_ref(jnp.asarray(g), jnp.asarray(ghat), m))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_distortion_zero_when_equal():
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    for m in (0.0, 2.0):
+        out = np.asarray(K.distortion_block(jnp.asarray(g), jnp.asarray(g), _m(m)))
+        np.testing.assert_allclose(out, 0.0, atol=1e-8)
+
+
+def test_distortion_m0_is_plain_l2():
+    """M = 0 must reduce to the unweighted L2 metric (TINYSCRIPT limit)."""
+    rng = np.random.default_rng(1)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    g[::3] = 0.0
+    ghat = (g + rng.normal(size=CHUNK, scale=0.2)).astype(np.float32)
+    out = float(np.asarray(K.distortion_block(jnp.asarray(g), jnp.asarray(ghat), _m(0.0)))[0])
+    np.testing.assert_allclose(out, float(((g - ghat) ** 2).sum()), rtol=1e-4)
+
+
+def test_distortion_weights_emphasize_large_entries():
+    """Same absolute error on a larger-|g| entry must cost more when M>0."""
+    g = np.zeros(CHUNK, np.float32)
+    g[0], g[1] = 0.5, 2.0
+    h_small = g.copy(); h_small[0] += 0.1
+    h_large = g.copy(); h_large[1] += 0.1
+    m = _m(2.0)
+    d_small = float(np.asarray(K.distortion_block(jnp.asarray(g), jnp.asarray(h_small), m))[0])
+    d_large = float(np.asarray(K.distortion_block(jnp.asarray(g), jnp.asarray(h_large), m))[0])
+    assert d_large > d_small

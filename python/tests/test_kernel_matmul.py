@@ -1,0 +1,77 @@
+"""Hypothesis sweep of the L1 Pallas matmul kernel vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape)
+    return jnp.asarray(x.astype(dtype))
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), np.float32)
+    y = _rand(rng, (k, n), np.float32)
+    out = K.pallas_matmul(x, y)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 64), (64, 256, 128)])
+def test_matmul_block_aligned(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (m, k), np.float32)
+    y = _rand(rng, (k, n), np.float32)
+    np.testing.assert_allclose(
+        K.pallas_matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (48, 32), dtype)
+    y = _rand(rng, (32, 40), dtype)
+    out = K.pallas_matmul(x, y)
+    assert out.dtype == jnp.float32  # f32 accumulation always
+    expect = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10)
+def test_matmul_grad_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (33, 21), np.float32)
+    y = _rand(rng, (21, 17), np.float32)
+
+    def f(mm):
+        return lambda a, b: jnp.sum(mm(a, b) ** 2)
+
+    gx, gy = jax.grad(f(K.pallas_matmul), argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f(ref.matmul_ref), argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gy, ry, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_zero_and_identity():
+    eye = jnp.eye(16, dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (16, 16), np.float32)
+    np.testing.assert_allclose(K.pallas_matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    z = jnp.zeros((16, 16), jnp.float32)
+    np.testing.assert_array_equal(K.pallas_matmul(x, z), z)

@@ -1,0 +1,61 @@
+"""Hypothesis sweep of the fused moments kernel vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+CHUNK = 4096
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sparsity=st.floats(0.0, 0.99),
+    scale=st.floats(1e-4, 1e2),
+    nblocks=st.integers(1, 4),
+)
+def test_moments_matches_oracle(seed, sparsity, scale, nblocks):
+    rng = np.random.default_rng(seed)
+    n = CHUNK * nblocks
+    g = (rng.normal(size=n) * scale).astype(np.float32)
+    g[rng.random(n) < sparsity] = 0.0
+    got = np.asarray(K.moments_block(jnp.asarray(g)))
+    want = np.asarray(ref.moments_ref(jnp.asarray(g)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_moments_all_zero_block():
+    g = jnp.zeros((CHUNK,), jnp.float32)
+    got = np.asarray(K.moments_block(g))
+    assert got[0] == 0.0  # nnz
+    np.testing.assert_allclose(got[:5], 0.0)
+    assert got[5] == 0.0  # max
+    assert got[7] == 0.0  # sum log over nonzeros is empty
+
+
+def test_moments_known_values():
+    g = np.zeros(CHUNK, np.float32)
+    g[:4] = [1.0, -2.0, 4.0, 0.5]
+    got = np.asarray(K.moments_block(jnp.asarray(g)))
+    a = np.abs(g[:4])
+    np.testing.assert_allclose(got[0], 4.0)
+    np.testing.assert_allclose(got[1], a.sum(), rtol=1e-6)
+    np.testing.assert_allclose(got[2], (a**2).sum(), rtol=1e-6)
+    np.testing.assert_allclose(got[3], np.sqrt(a).sum(), rtol=1e-6)
+    np.testing.assert_allclose(got[4], (a**3).sum(), rtol=1e-6)
+    np.testing.assert_allclose(got[5], 4.0)
+    np.testing.assert_allclose(got[6], (a**4).sum(), rtol=1e-6)
+    np.testing.assert_allclose(got[7], np.log(a).sum(), rtol=1e-5)
+
+
+def test_moments_scale_relation():
+    """abs-moment homogeneity: s1 scales linearly, s2 quadratically."""
+    rng = np.random.default_rng(3)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    m1 = np.asarray(K.moments_block(jnp.asarray(g)))
+    m2 = np.asarray(K.moments_block(jnp.asarray(2.0 * g)))
+    np.testing.assert_allclose(m2[1], 2 * m1[1], rtol=1e-5)
+    np.testing.assert_allclose(m2[2], 4 * m1[2], rtol=1e-5)
+    np.testing.assert_allclose(m2[5], 2 * m1[5], rtol=1e-6)

@@ -1,0 +1,76 @@
+"""Hypothesis sweep of the quantizer-assignment kernel vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+CHUNK = 4096
+L = K.MAX_LEVELS
+
+
+def _quantizer(rng, levels: int):
+    """Random padded (thresholds, centers) with `levels` live levels."""
+    c = np.sort(rng.normal(size=levels)).astype(np.float32)
+    t = ((c[1:] + c[:-1]) / 2).astype(np.float32)
+    c_pad = np.concatenate([c, np.full(L - levels, c[-1], np.float32)])
+    t_pad = np.concatenate([t, np.full(L - levels, np.float32(np.inf))])
+    return t_pad[: L - 1], c_pad
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    levels=st.sampled_from([2, 4, 8, 16]),
+    sparsity=st.floats(0.0, 0.95),
+    nblocks=st.integers(1, 3),
+)
+def test_quantize_matches_oracle(seed, levels, sparsity, nblocks):
+    rng = np.random.default_rng(seed)
+    n = CHUNK * nblocks
+    g = rng.normal(size=n).astype(np.float32)
+    g[rng.random(n) < sparsity] = 0.0
+    t, c = _quantizer(rng, levels)
+    idx, ghat = K.quantize_block(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    ri, rh = ref.quantize_ref(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(ghat), np.asarray(rh))
+    # live-level invariant: indices stay inside the live range
+    assert int(np.asarray(idx).max()) < levels
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_zeros_survive(seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    g[::2] = 0.0
+    t, c = _quantizer(rng, 8)
+    idx, ghat = K.quantize_block(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    ghat = np.asarray(ghat)
+    assert (ghat[::2] == 0.0).all()
+    assert (np.asarray(idx)[::2] == 0).all()
+
+
+def test_quantize_nearest_center_when_midpoint_thresholds():
+    """With midpoint thresholds, assignment must be nearest-center."""
+    rng = np.random.default_rng(7)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    t, c = _quantizer(rng, 16)
+    _, ghat = K.quantize_block(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    ghat = np.asarray(ghat)
+    nz = g != 0
+    best = c[np.argmin(np.abs(g[:, None] - c[None, :]), axis=1)]
+    np.testing.assert_allclose(ghat[nz], best[nz])
+
+
+def test_quantize_reconstruction_error_bounded():
+    rng = np.random.default_rng(8)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    t, c = _quantizer(rng, 16)
+    _, ghat = K.quantize_block(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    err = np.abs(np.asarray(ghat) - g)
+    # inside the center span the error is at most the largest half-gap
+    span = (g >= c[0]) & (g <= c[-1])
+    max_half_gap = np.max(np.diff(c)) / 2 + 1e-6
+    assert err[span].max() <= max_half_gap

@@ -1,0 +1,98 @@
+"""L2 model graph tests: shapes, gradients, learning signal, Table-I rows."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.archs import ARCHS, IMG, NUM_CLASSES
+from compile.model import arch_summary, example_shapes, make_graphs
+from compile.params import init_params, total_size, unflatten, flatten
+
+BATCH = 8  # small batch for test speed; lowering uses BATCH=32
+
+
+def _batch(rng, batch=BATCH):
+    x = rng.normal(size=(batch, IMG, IMG, 3)).astype(np.float32)
+    y = rng.integers(0, NUM_CLASSES, size=batch).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_train_step_shapes(arch):
+    specs, train_step, evaluate = make_graphs(arch)
+    d = total_size(specs)
+    w = init_params(specs, 0)
+    assert w.shape == (d,)
+    x, y = _batch(np.random.default_rng(0))
+    loss, grads, acc = train_step(w, x, y)
+    assert loss.shape == () and grads.shape == (d,) and acc.shape == ()
+    assert np.isfinite(float(loss)) and 0.0 <= float(acc) <= 1.0
+    assert np.isfinite(np.asarray(grads)).all()
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_grads_nonzero_in_every_tensor(arch):
+    """Compression is per-layer — every tensor must receive gradient."""
+    specs, train_step, _ = make_graphs(arch)
+    w = init_params(specs, 1)
+    x, y = _batch(np.random.default_rng(1))
+    _, grads, _ = train_step(w, x, y)
+    g = unflatten(grads, specs)
+    for s in specs:
+        assert float(jnp.abs(g[s.name]).max()) > 0.0, s.name
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_sgd_reduces_loss(arch):
+    """A few SGD steps on one batch must reduce loss (learning signal)."""
+    specs, train_step, _ = make_graphs(arch)
+    w = init_params(specs, 2)
+    x, y = _batch(np.random.default_rng(2), batch=16)
+    step = jax.jit(train_step)
+    l0, g, _ = step(w, x, y)
+    for _ in range(5):
+        w = w - 0.05 * g
+        loss, g, _ = step(w, x, y)
+    assert float(loss) < float(l0)
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_eval_matches_train_metrics(arch):
+    specs, train_step, evaluate = make_graphs(arch)
+    w = init_params(specs, 3)
+    x, y = _batch(np.random.default_rng(3))
+    l1, _, a1 = train_step(w, x, y)
+    l2, a2 = evaluate(w, x, y)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    np.testing.assert_allclose(float(a1), float(a2))
+
+
+def test_flatten_unflatten_roundtrip():
+    specs, _, _ = make_graphs("cnn_s")
+    w = init_params(specs, 4)
+    np.testing.assert_array_equal(flatten(unflatten(w, specs), specs), w)
+
+
+def test_table1_summaries():
+    """Table I analogue: structural facts the paper reports."""
+    rows = {a: arch_summary(a) for a in ARCHS}
+    # CNN: pure-conv feature extractor (dense only in the small classifier head)
+    assert rows["cnn_s"]["conv_params"] > 0
+    # VGG: parameter mass dominated by dense layers, like VGG16 in the paper
+    assert rows["vgg_s"]["dense_params"] > rows["vgg_s"]["conv_params"]
+    # ordering: CNN < ResNet < VGG, as in Table I
+    assert (
+        rows["cnn_s"]["total_params"]
+        < rows["resnet_s"]["total_params"]
+        < rows["vgg_s"]["total_params"]
+    )
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_example_shapes_consistent(arch):
+    specs, _, _ = make_graphs(arch)
+    w_s, x_s, y_s = example_shapes(arch)
+    assert w_s.shape == (total_size(specs),)
+    assert x_s.shape[1:] == (IMG, IMG, 3)
+    assert y_s.shape == (x_s.shape[0],)

@@ -1,0 +1,104 @@
+"""Cross-layer semantics: the python reference of the M22 codec pipeline.
+
+These tests pin the *contract* the Rust L3 implementation relies on:
+quantize-normalize commutation, moments-driven fitting inputs, and the
+distortion/quantizer consistency that eq. (13) promises.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+CHUNK = 4096
+
+
+def _sorted_quantizer(rng, levels):
+    c = np.sort(rng.normal(size=levels)).astype(np.float32)
+    t = ((c[1:] + c[:-1]) / 2).astype(np.float32)
+    c_pad = np.concatenate([c, np.full(16 - levels, c[-1], np.float32)])
+    t_pad = np.concatenate([t, np.full(15 - len(t), np.float32(np.inf))])
+    return t_pad, c_pad
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 100.0))
+@settings(max_examples=15)
+def test_quantize_scale_commutes(seed, scale):
+    """quantize(g*s, centers*s) == quantize(g, centers)*s — the property
+    that lets Rust design standardized tables and scale by layer std."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    t, c = _sorted_quantizer(rng, 8)
+    s = np.float32(scale)
+    idx1, gh1 = K.quantize_block(jnp.asarray(g * s), jnp.asarray(t * s), jnp.asarray(c * s))
+    idx2, gh2 = K.quantize_block(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    # indices identical (up to f32 rounding at bin edges — use loose check)
+    mismatch = np.mean(np.asarray(idx1) != np.asarray(idx2))
+    assert mismatch < 5e-3, f"index mismatch rate {mismatch}"
+    same = np.asarray(idx1) == np.asarray(idx2)
+    np.testing.assert_allclose(
+        np.asarray(gh1)[same], np.asarray(gh2)[same] * s, rtol=2e-5, atol=1e-6
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10)
+def test_quantizer_centers_minimize_distortion_per_bin(seed):
+    """Within each bin, replacing the center by the bin's weighted centroid
+    is a fixed point (eq. 13a with M=0 over the empirical measure)."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    t, c = _sorted_quantizer(rng, 8)
+    idx, _ = ref.quantize_ref(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    idx = np.asarray(idx)
+    # empirical-centroid quantizer must not have higher M=0 distortion
+    c_opt = c.copy()
+    for b in range(8):
+        mask = (idx == b) & (g != 0)
+        if mask.sum() > 0:
+            c_opt[b] = g[mask].mean()
+    _, gh_orig = ref.quantize_ref(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c))
+    _, gh_opt = ref.quantize_ref(jnp.asarray(g), jnp.asarray(t), jnp.asarray(c_opt))
+    m0 = jnp.asarray([0.0], dtype=jnp.float32)
+    d_orig = float(np.asarray(ref.distortion_ref(jnp.asarray(g), gh_orig, 0.0))[0])
+    d_opt = float(np.asarray(ref.distortion_ref(jnp.asarray(g), gh_opt, 0.0))[0])
+    assert d_opt <= d_orig + 1e-4, f"{d_opt} > {d_orig}"
+
+
+def test_moments_feed_gennorm_ratio_bounds():
+    """The moment ratio (E|x|)²/Ex² of any sample lies in (0, 1) — the
+    domain the Rust bisection fitter assumes."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        g = (rng.normal(size=CHUNK) * rng.uniform(0.001, 10)).astype(np.float32)
+        g[rng.random(CHUNK) < rng.uniform(0, 0.9)] = 0.0
+        if (g != 0).sum() < 2:
+            continue
+        s = np.asarray(K.moments_block(jnp.asarray(g)))
+        n, s1, s2 = float(s[0]), float(s[1]), float(s[2])
+        rho = (s1 / n) ** 2 / (s2 / n)
+        assert 0.0 < rho < 1.0, rho
+
+
+@pytest.mark.parametrize("m_small,m_large", [(0.0, 2.0), (2.0, 6.0)])
+def test_distortion_ordering_under_tail_error(m_small, m_large):
+    """Errors on tail entries cost relatively more as M grows — the paper's
+    design rationale in kernel form."""
+    rng = np.random.default_rng(4)
+    g = rng.normal(size=CHUNK).astype(np.float32)
+    tail = np.abs(g) > 1.5
+    bulk = ~tail
+    h_tail = g.copy()
+    h_tail[tail] += 0.1
+    h_bulk = g.copy()
+    h_bulk[bulk] += 0.1 * np.sqrt(tail.sum() / bulk.sum())  # equal L2 energy budget
+
+    def ratio(m):
+        dt = float(np.asarray(ref.distortion_ref(jnp.asarray(g), jnp.asarray(h_tail), m))[0])
+        db = float(np.asarray(ref.distortion_ref(jnp.asarray(g), jnp.asarray(h_bulk), m))[0])
+        return dt / db
+
+    assert ratio(m_large) > ratio(m_small)

@@ -1,0 +1,173 @@
+//! Bit-level packing of quantization indices (R bits each, LSB-first).
+//!
+//! The value half of every compressed uplink: K surviving entries × R bits.
+
+/// Append `bits` low bits of `value` to the writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits used in the last byte (0 => byte boundary)
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, value: u32, bits: u32) {
+        debug_assert!(bits <= 32 && (bits == 32 || value < (1u32 << bits)));
+        let mut v = value as u64;
+        let mut left = bits;
+        while left > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let space = 8 - self.used;
+            let take = space.min(left);
+            let byte = self.buf.last_mut().unwrap();
+            *byte |= ((v & ((1u64 << take) - 1)) as u8) << self.used;
+            v >>= take;
+            self.used = (self.used + take) % 8;
+            left -= take;
+        }
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        if self.buf.is_empty() {
+            0
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + if self.used == 0 { 8 } else { self.used as u64 }
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential reader matching [`BitWriter`]'s layout.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn read(&mut self, bits: u32) -> Option<u32> {
+        debug_assert!(bits <= 32);
+        if self.pos + bits as u64 > self.buf.len() as u64 * 8 {
+            return None;
+        }
+        let mut out: u64 = 0;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = self.buf[(self.pos / 8) as usize] as u64;
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(bits - got);
+            let chunk = (byte >> off) & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.pos += take as u64;
+        }
+        Some(out as u32)
+    }
+
+    pub fn bits_remaining(&self) -> u64 {
+        self.buf.len() as u64 * 8 - self.pos
+    }
+}
+
+/// Pack a slice of indices at fixed width.
+pub fn pack_indices(idx: &[u32], bits: u32) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &i in idx {
+        w.push(i, bits);
+    }
+    w.into_bytes()
+}
+
+/// Unpack `n` indices at fixed width.
+pub fn unpack_indices(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.read(bits)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_basic() {
+        for bits in 1..=16u32 {
+            let idx: Vec<u32> = (0..100).map(|i| i % (1u32 << bits)).collect();
+            let bytes = pack_indices(&idx, bits);
+            assert_eq!(unpack_indices(&bytes, bits, idx.len()).unwrap(), idx);
+            assert_eq!(bytes.len(), ((idx.len() as u64 * bits as u64 + 7) / 8) as usize);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop_check("bitpack roundtrip", 100, |g| {
+            let bits = g.usize_in(1, 17) as u32;
+            let n = g.usize_in(0, 400);
+            let idx: Vec<u32> = (0..n).map(|_| g.rng.below(1 << bits) as u32).collect();
+            let bytes = pack_indices(&idx, bits);
+            assert_eq!(unpack_indices(&bytes, bits, n).unwrap(), idx);
+        });
+    }
+
+    #[test]
+    fn mixed_width_stream() {
+        let mut w = BitWriter::new();
+        w.push(0b1, 1);
+        w.push(0b1010, 4);
+        w.push(0xffff, 16);
+        w.push(0, 3);
+        let bit_len = w.bit_len();
+        assert_eq!(bit_len, 24);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(1), Some(1));
+        assert_eq!(r.read(4), Some(0b1010));
+        assert_eq!(r.read(16), Some(0xffff));
+        assert_eq!(r.read(3), Some(0));
+        assert_eq!(r.read(1), None);
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let bytes = pack_indices(&[3], 2);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(2), Some(3));
+        // remaining padding bits readable, then None
+        assert!(r.bits_remaining() < 8);
+        assert_eq!(unpack_indices(&bytes, 2, 100), None);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        assert!(w.into_bytes().is_empty());
+        assert_eq!(unpack_indices(&[], 4, 0), Some(vec![]));
+    }
+
+    #[test]
+    fn push_32_bit_values() {
+        let vals = [u32::MAX, 0, 0x8000_0001];
+        let bytes = pack_indices(&vals, 32);
+        assert_eq!(unpack_indices(&bytes, 32, 3).unwrap(), vals);
+    }
+}

@@ -1,0 +1,215 @@
+//! Count-sketch gradient compression (paper Sec. V-A, eq. 16; refs [17]).
+//!
+//! Client: topK sparsify, then fold the survivors into a `depth × width`
+//! count-sketch table via shared hash/sign functions (the "common sketching
+//! operator"). The whole budget goes to the table — no positions are sent,
+//! which is the sketch's selling point.
+//!
+//! Server: estimate every coordinate as the median over rows of
+//! `sign(r,i) · table[r][h(r,i)]`, then keep the K largest-magnitude
+//! estimates (heavy-hitter recovery as in [17]).
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::ModelSpec;
+
+use super::rate::RateReport;
+use super::topk::topk;
+use super::{Compressed, Compressor};
+
+/// Count-sketch compressor with a deterministic shared operator.
+pub struct CountSketch {
+    /// sparsification level before sketching (K_sk)
+    pub k: usize,
+    /// table rows (median-of-3 recovery)
+    pub depth: usize,
+    /// table columns
+    pub width: usize,
+    /// hash seed — shared between client and server ("common operator")
+    pub seed: u64,
+}
+
+impl CountSketch {
+    /// Budget-driven constructor (eq. 16): the table spends
+    /// `sketch_bits = r_sk · K_sk` bits at 32 bits/cell across `depth` rows.
+    pub fn from_budget(k: usize, sketch_bits: u64, depth: usize, seed: u64) -> Self {
+        let cells = (sketch_bits / 32).max(depth as u64);
+        let width = (cells as usize / depth).max(1);
+        CountSketch { k, depth, width, seed }
+    }
+
+    #[inline]
+    fn hash(&self, row: usize, i: usize) -> (usize, f32) {
+        // splitmix-style avalanche of (seed, row, index)
+        let mut z = self
+            .seed
+            .wrapping_add((row as u64).wrapping_mul(0x9e3779b97f4a7c15))
+            .wrapping_add((i as u64).wrapping_mul(0xbf58476d1ce4e5b9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        let col = (z as usize) % self.width;
+        let sign = if (z >> 63) & 1 == 0 { 1.0 } else { -1.0 };
+        (col, sign)
+    }
+
+    fn table_bits(&self) -> u64 {
+        (self.depth * self.width) as u64 * 32
+    }
+
+    fn estimate(&self, table: &[f32], i: usize) -> f32 {
+        let mut est = [0.0f32; 16];
+        debug_assert!(self.depth <= 16);
+        for r in 0..self.depth {
+            let (col, sign) = self.hash(r, i);
+            est[r] = sign * table[r * self.width + col];
+        }
+        let v = &mut est[..self.depth];
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if self.depth % 2 == 1 {
+            v[self.depth / 2]
+        } else {
+            0.5 * (v[self.depth / 2 - 1] + v[self.depth / 2])
+        }
+    }
+
+    fn recover(&self, table: &[f32], d: usize) -> Vec<f32> {
+        // heavy-hitter recovery: estimate all coordinates, keep top-k
+        let est: Vec<f32> = (0..d).map(|i| self.estimate(table, i)).collect();
+        let (kept, _) = topk(&est, self.k.min(d));
+        kept
+    }
+}
+
+impl Compressor for CountSketch {
+    fn name(&self) -> String {
+        "count-sketch".into()
+    }
+
+    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+        if grad.len() != spec.d() {
+            bail!("grad len {} != d {}", grad.len(), spec.d());
+        }
+        let (sparse, positions) = topk(grad, self.k.min(grad.len()));
+        let mut table = vec![0.0f32; self.depth * self.width];
+        for &p in &positions {
+            let i = p as usize;
+            for r in 0..self.depth {
+                let (col, sign) = self.hash(r, i);
+                table[r * self.width + col] += sign * sparse[i];
+            }
+        }
+        let mut payload = Vec::with_capacity(4 * table.len());
+        for &x in &table {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let reconstructed = self.recover(&table, grad.len());
+        let report = RateReport {
+            d: spec.d(),
+            k: positions.len(),
+            // no positions transmitted: all bits live in the table
+            position_bits_ideal: 0.0,
+            position_bits_actual: 0,
+            value_bits: self.table_bits(),
+            side_bits: 0,
+            payload_bytes: payload.len(),
+        };
+        Ok(Compressed { payload, reconstructed, report })
+    }
+
+    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let want = self.depth * self.width * 4;
+        let bytes = payload.get(..want).context("short sketch payload")?;
+        let table: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(self.recover(&table, spec.d()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{grad_like, tiny_spec};
+
+    #[test]
+    fn roundtrip_encode_decode_exact() {
+        let spec = tiny_spec(3000, 0);
+        let g = grad_like(3000, 31);
+        let mut c = CountSketch::from_budget(900, 900 * 32, 3, 42);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+    }
+
+    #[test]
+    fn budget_shapes_table() {
+        let c = CountSketch::from_budget(1000, 3000 * 32, 3, 1);
+        assert_eq!(c.depth * c.width, 3000);
+        assert_eq!(c.table_bits(), 3000 * 32);
+        // degenerate budget still yields a usable table
+        let tiny = CountSketch::from_budget(10, 8, 3, 1);
+        assert!(tiny.width >= 1);
+    }
+
+    #[test]
+    fn sparse_heavy_hitters_recovered() {
+        // A few large coordinates in a mostly-zero vector must be found
+        // when the table comfortably exceeds the support size.
+        let spec = tiny_spec(5000, 0);
+        let mut g = vec![0.0f32; 5000];
+        let heavy = [(7usize, 4.0f32), (1000, -3.0), (2500, 5.0), (4999, 2.0)];
+        for &(i, v) in &heavy {
+            g[i] = v;
+        }
+        let mut c = CountSketch::from_budget(4, 4096 * 32, 5, 9);
+        let out = c.compress(&g, &spec).unwrap();
+        for &(i, v) in &heavy {
+            assert!(
+                (out.reconstructed[i] - v).abs() < 0.3,
+                "coord {i}: {} vs {v}",
+                out.reconstructed[i]
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruction_has_k_support() {
+        let spec = tiny_spec(2000, 0);
+        let g = grad_like(2000, 33);
+        let mut c = CountSketch::from_budget(300, 600 * 32, 3, 5);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(out.reconstructed.iter().filter(|x| **x != 0.0).count(), 300);
+    }
+
+    #[test]
+    fn shared_operator_is_deterministic() {
+        let a = CountSketch::from_budget(10, 1024 * 32, 3, 77);
+        let b = CountSketch::from_budget(10, 1024 * 32, 3, 77);
+        for i in [0usize, 5, 100, 9999] {
+            for r in 0..3 {
+                assert_eq!(a.hash(r, i), b.hash(r, i));
+            }
+        }
+        let c = CountSketch::from_budget(10, 1024 * 32, 3, 78);
+        assert_ne!(
+            (0..50).map(|i| a.hash(0, i).0).collect::<Vec<_>>(),
+            (0..50).map(|i| c.hash(0, i).0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn collision_noise_grows_as_width_shrinks() {
+        let spec = tiny_spec(4000, 0);
+        let g = grad_like(4000, 34);
+        let err = |width_cells: usize| {
+            let mut c = CountSketch::from_budget(2000, (width_cells * 32) as u64, 3, 3);
+            let out = c.compress(&g, &spec).unwrap();
+            g.iter()
+                .zip(&out.reconstructed)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(err(12000) < err(600), "wider sketch must reconstruct better");
+    }
+}

@@ -1,0 +1,410 @@
+//! Minifloat codec: sign-exponent-mantissa representations at 8 and 4 bits
+//! (paper Sec. V-A "topK + floating point", and ref. [22]'s hybrid-fp idea).
+//!
+//! fp8 = E4M3 (1-4-3), fp4 = E2M1 (1-2-1), both with IEEE-style subnormals,
+//! round-to-nearest-even, and saturation to the largest finite value (no
+//! inf/nan codes — gradient payloads never need them).
+
+/// A minifloat format: `exp_bits` + `man_bits` + 1 sign bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniFloat {
+    pub exp_bits: u32,
+    pub man_bits: u32,
+}
+
+/// fp8 (1-4-3).
+pub const FP8: MiniFloat = MiniFloat { exp_bits: 4, man_bits: 3 };
+/// fp4 (1-2-1).
+pub const FP4: MiniFloat = MiniFloat { exp_bits: 2, man_bits: 1 };
+
+impl MiniFloat {
+    pub fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest representable finite value.
+    pub fn max_value(&self) -> f32 {
+        let emax = ((1 << self.exp_bits) - 1) as i32 - self.bias(); // all-ones exp is a normal here
+        let frac = 2.0 - 1.0 / (1 << self.man_bits) as f32; // 1.111..b
+        frac * 2f32.powi(emax)
+    }
+
+    /// Smallest positive (subnormal) value.
+    pub fn min_subnormal(&self) -> f32 {
+        2f32.powi(1 - self.bias() - self.man_bits as i32)
+    }
+
+    /// Encode with round-to-nearest-even and saturation.
+    pub fn encode(&self, x: f32) -> u32 {
+        let sign = if x.is_sign_negative() { 1u32 } else { 0 };
+        let a = x.abs();
+        if a == 0.0 || x.is_nan() {
+            return sign << (self.exp_bits + self.man_bits);
+        }
+        let max = self.max_value();
+        let a = if a > max { max } else { a };
+        let bias = self.bias();
+        // decompose a = m * 2^e with m in [1, 2)
+        let e = a.log2().floor() as i32;
+        let e_min = 1 - bias; // smallest normal exponent
+        let (exp_field, man_field);
+        if e < e_min {
+            // subnormal: value = f / 2^man_bits * 2^e_min
+            let scaled = a / 2f32.powi(e_min - self.man_bits as i32);
+            let f = round_half_even(scaled);
+            if f >= (1 << self.man_bits) as u32 {
+                // rounded up into the smallest normal
+                exp_field = 1;
+                man_field = 0;
+            } else {
+                exp_field = 0;
+                man_field = f;
+            }
+        } else {
+            let m = a / 2f32.powi(e); // [1, 2)
+            let f = round_half_even((m - 1.0) * (1 << self.man_bits) as f32);
+            if f >= (1 << self.man_bits) as u32 {
+                // mantissa overflow: bump exponent
+                let e2 = e + 1;
+                if e2 + bias >= (1 << self.exp_bits) {
+                    exp_field = (1 << self.exp_bits) - 1;
+                    man_field = (1 << self.man_bits) - 1; // saturate
+                } else {
+                    exp_field = (e2 + bias) as u32;
+                    man_field = 0;
+                }
+            } else {
+                exp_field = (e + bias) as u32;
+                man_field = f;
+            }
+        }
+        (sign << (self.exp_bits + self.man_bits)) | (exp_field << self.man_bits) | man_field
+    }
+
+    /// Decode a code produced by [`encode`].
+    pub fn decode(&self, code: u32) -> f32 {
+        let man_mask = (1u32 << self.man_bits) - 1;
+        let exp_mask = (1u32 << self.exp_bits) - 1;
+        let man = code & man_mask;
+        let exp = (code >> self.man_bits) & exp_mask;
+        let sign = if (code >> (self.man_bits + self.exp_bits)) & 1 == 1 { -1.0f32 } else { 1.0 };
+        let bias = self.bias();
+        let v = if exp == 0 {
+            man as f32 * 2f32.powi(1 - bias - self.man_bits as i32)
+        } else {
+            (1.0 + man as f32 / (1 << self.man_bits) as f32) * 2f32.powi(exp as i32 - bias)
+        };
+        sign * v
+    }
+
+    /// Quantize through the codec (encode→decode).
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+}
+
+fn round_half_even(x: f32) -> u32 {
+    let f = x.floor();
+    let frac = x - f;
+    let base = f as u32;
+    if frac > 0.5 {
+        base + 1
+    } else if frac < 0.5 {
+        base
+    } else if base % 2 == 0 {
+        base
+    } else {
+        base + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // powers of two and simple mantissas are exactly representable
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 4.0, 1.5, -3.0, 0.25] {
+            assert_eq!(FP8.quantize(x), x, "fp8 {x}");
+        }
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 1.5, -3.0] {
+            assert_eq!(FP4.quantize(x), x, "fp4 {x}");
+        }
+    }
+
+    #[test]
+    fn formats_have_expected_ranges() {
+        assert_eq!(FP8.total_bits(), 8);
+        assert_eq!(FP4.total_bits(), 4);
+        assert_eq!(FP8.max_value(), 480.0); // E4M3 w/o inf: 1.875 * 2^8
+        assert_eq!(FP4.max_value(), 6.0); // E2M1: 1.5 * 2^2
+        assert!(FP8.min_subnormal() > 0.0);
+    }
+
+    #[test]
+    fn saturation_not_inf() {
+        assert_eq!(FP8.quantize(1e10), FP8.max_value());
+        assert_eq!(FP8.quantize(-1e10), -FP8.max_value());
+        assert_eq!(FP4.quantize(100.0), FP4.max_value());
+    }
+
+    #[test]
+    fn codes_are_in_range_and_monotone() {
+        // decoding all 256 fp8 codes gives monotone values within each sign
+        let mut prev = f32::NEG_INFINITY;
+        for code in 0..128u32 {
+            let v = FP8.decode(code);
+            assert!(v >= 0.0);
+            assert!(v > prev || (code == 0 && v == 0.0), "code {code}: {v} <= {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_property() {
+        prop_check("fp8 relative error", 200, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            let q = FP8.quantize(x);
+            if x.abs() > FP8.min_subnormal() * 8.0 && x.abs() < FP8.max_value() {
+                // 3 mantissa bits => rel err <= 2^-4
+                let rel = ((q - x) / x).abs();
+                assert!(rel <= 1.0 / 16.0 + 1e-6, "x={x} q={q} rel={rel}");
+            }
+        });
+        prop_check("fp4 relative error", 200, |g| {
+            let x = g.f32_in(-6.0, 6.0);
+            let q = FP4.quantize(x);
+            if x.abs() > FP4.min_subnormal() * 4.0 && x.abs() < FP4.max_value() {
+                let rel = ((q - x) / x).abs();
+                assert!(rel <= 0.25 + 1e-6, "x={x} q={q} rel={rel}");
+            }
+        });
+    }
+
+    #[test]
+    fn encode_fits_bit_width() {
+        prop_check("codes fit width", 200, |g| {
+            let x = g.f32_in(-1000.0, 1000.0);
+            assert!(FP8.encode(x) < 256);
+            assert!(FP4.encode(x) < 16);
+        });
+    }
+
+    #[test]
+    fn idempotent_quantization() {
+        prop_check("fp idempotent", 100, |g| {
+            let x = g.f32_in(-50.0, 50.0);
+            let q = FP8.quantize(x);
+            assert_eq!(FP8.quantize(q), q);
+        });
+    }
+
+    #[test]
+    fn zero_and_signed_zero() {
+        assert_eq!(FP8.quantize(0.0), 0.0);
+        assert_eq!(FP8.quantize(-0.0), 0.0);
+        assert_eq!(FP8.encode(0.0), 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// topK + floating-point Compressor (paper eq. 14)
+// ---------------------------------------------------------------------------
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::ModelSpec;
+
+use super::bitpack::{pack_indices, unpack_indices};
+use super::rate::RateReport;
+use super::rle::{decode_positions, encode_positions, position_bits};
+use super::topk::topk;
+use super::{Compressed, Compressor};
+
+/// topK + p-bit minifloat representation: K_fp survivors, p bits each.
+pub struct TopKFp {
+    pub fmt: MiniFloat,
+    pub k: usize,
+}
+
+impl TopKFp {
+    pub fn fp8(k: usize) -> Self {
+        TopKFp { fmt: FP8, k }
+    }
+
+    pub fn fp4(k: usize) -> Self {
+        TopKFp { fmt: FP4, k }
+    }
+}
+
+impl Compressor for TopKFp {
+    fn name(&self) -> String {
+        format!("topk+fp{}", self.fmt.total_bits())
+    }
+
+    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+        if grad.len() != spec.d() {
+            bail!("grad len {} != d {}", grad.len(), spec.d());
+        }
+        let (_, positions) = topk(grad, self.k.min(grad.len()));
+        // per-tensor scale so the minifloat dynamic range covers gradients
+        // (raw DNN gradients ~1e-3 underflow fp4 subnormals): scale = max|g|
+        // over survivors of each tensor, sent as f32 side info.
+        let mut scales = vec![0.0f32; spec.tensors.len()];
+        let mut ti = 0usize;
+        for &p in &positions {
+            let p = p as usize;
+            while p >= spec.range(ti).end {
+                ti += 1;
+            }
+            scales[ti] = scales[ti].max(grad[p].abs());
+        }
+        let bits = self.fmt.total_bits();
+        let mut ghat = vec![0.0f32; grad.len()];
+        let mut codes = Vec::with_capacity(positions.len());
+        let mut ti = 0usize;
+        for &p in &positions {
+            let p = p as usize;
+            while p >= spec.range(ti).end {
+                ti += 1;
+            }
+            let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
+            // normalize into [-max_value, max_value] before encoding
+            let norm = grad[p] / s * self.fmt.max_value();
+            let code = self.fmt.encode(norm);
+            codes.push(code);
+            ghat[p] = self.fmt.decode(code) / self.fmt.max_value() * s;
+        }
+
+        let pos_bytes = encode_positions(&positions);
+        let idx_bytes = pack_indices(&codes, bits);
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&pos_bytes);
+        for s in &scales {
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+        payload.extend_from_slice(&idx_bytes);
+
+        let report = RateReport {
+            d: spec.d(),
+            k: positions.len(),
+            position_bits_ideal: crate::stats::special::log2_choose(
+                spec.d() as u64,
+                positions.len() as u64,
+            ),
+            position_bits_actual: position_bits(&positions),
+            value_bits: positions.len() as u64 * bits as u64,
+            side_bits: scales.len() as u64 * 32,
+            payload_bytes: payload.len(),
+        };
+        Ok(Compressed { payload, reconstructed: ghat, report })
+    }
+
+    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
+            as usize;
+        let npos =
+            u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
+        let mut off = 8;
+        let positions =
+            decode_positions(payload.get(off..off + npos).context("short pos")?, k)
+                .context("positions")?;
+        off += npos;
+        let mut scales = Vec::with_capacity(spec.tensors.len());
+        for _ in 0..spec.tensors.len() {
+            scales.push(f32::from_le_bytes(
+                payload.get(off..off + 4).context("short scales")?.try_into().unwrap(),
+            ));
+            off += 4;
+        }
+        let codes =
+            unpack_indices(&payload[off..], self.fmt.total_bits(), k).context("codes")?;
+        let mut out = vec![0.0f32; spec.d()];
+        let mut ti = 0usize;
+        for (&p, &c) in positions.iter().zip(&codes) {
+            let p = p as usize;
+            while p >= spec.range(ti).end {
+                ti += 1;
+            }
+            let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
+            out[p] = self.fmt.decode(c) / self.fmt.max_value() * s;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod compressor_tests {
+    use super::*;
+    use crate::compress::testutil::{grad_like, tiny_spec};
+
+    #[test]
+    fn fp8_roundtrip_exact() {
+        let spec = tiny_spec(3000, 32);
+        let g = grad_like(3032, 21);
+        let mut c = TopKFp::fp8(800);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+        assert_eq!(out.report.value_bits, 800 * 8);
+        assert_eq!(out.report.k, 800);
+    }
+
+    #[test]
+    fn fp4_roundtrip_exact() {
+        let spec = tiny_spec(2000, 0);
+        let g = grad_like(2000, 22);
+        let mut c = TopKFp::fp4(1500);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+        assert_eq!(out.report.value_bits, 1500 * 4);
+    }
+
+    #[test]
+    fn fp8_more_accurate_than_fp4() {
+        let spec = tiny_spec(4000, 0);
+        let g = grad_like(4000, 23);
+        let mse = |out: &crate::compress::Compressed| {
+            g.iter()
+                .zip(&out.reconstructed)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let o8 = TopKFp::fp8(4000).compress(&g, &spec).unwrap();
+        let o4 = TopKFp::fp4(4000).compress(&g, &spec).unwrap();
+        assert!(mse(&o8) < mse(&o4));
+    }
+
+    #[test]
+    fn tiny_gradients_survive_scaling() {
+        // raw 1e-4-scale gradients would underflow fp4 without the
+        // per-tensor scale normalization
+        let spec = tiny_spec(1000, 0);
+        let g: Vec<f32> = grad_like(1000, 24).iter().map(|x| x * 1e-2).collect();
+        let out = TopKFp::fp4(500).compress(&g, &spec).unwrap();
+        let nonzero = out.reconstructed.iter().filter(|x| **x != 0.0).count();
+        assert!(nonzero > 400, "underflow wiped {} survivors", 500 - nonzero);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        crate::util::prop::prop_check("fp roundtrip", 25, |gen| {
+            let conv = gen.usize_in(50, 1500);
+            let spec = tiny_spec(conv, gen.usize_in(0, 16));
+            let d = spec.total_params;
+            let sp = gen.f64_in(0.0, 0.7);
+            let g = gen.grad_like(d..d + 1, sp);
+            let k = gen.usize_in(1, d);
+            let mut c = if gen.bool() { TopKFp::fp8(k) } else { TopKFp::fp4(k) };
+            let out = c.compress(&g, &spec).unwrap();
+            assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+        });
+    }
+}

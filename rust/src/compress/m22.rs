@@ -1,0 +1,419 @@
+//! M22 — the paper's compressor (Sec. IV): topK sparsification, per-layer
+//! 2-dof distribution fitting, LBG quantization under M-weighted-L2
+//! distortion, and entropy-coded transport.
+//!
+//! Per uplink:
+//!
+//! 1. global topK over the flat gradient (survivor positions → γ-gap RLE);
+//! 2. for every fit-worthy tensor (`size >= min_fit`): fused moments (the
+//!    L1 kernel through [`BlockCodec`]) → shape fit (GenNorm β or d-Weibull
+//!    c) → standardized-table lookup (paper Sec. V-B) → scale by the layer
+//!    std — i.e. normalize-quantize-denormalize without touching the data
+//!    twice;
+//! 3. small tensors (biases, heads) pool into one global group so *every*
+//!    survivor costs exactly `rq` bits — the eq. (17) budget;
+//! 4. payload = k ‖ positions ‖ per-group (std, shape) f32 pairs ‖ packed
+//!    indices. `decompress` rebuilds the identical quantizers from the side
+//!    info (the table snap makes the f32 roundtrip exact), so encode/decode
+//!    is bit-faithful.
+//!
+//! TINYSCRIPT (ref. [26], as adapted in Sec. V-A) is the M = 0, d-Weibull
+//! configuration: [`M22::tinyscript`].
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use crate::quantizer::{Family, QuantizerTables};
+use crate::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
+use crate::train::ModelSpec;
+
+use super::bitpack::{pack_indices, unpack_indices};
+use super::rate::RateReport;
+use super::rle::{decode_positions, encode_positions, position_bits};
+use super::topk::topk;
+use super::{BlockCodec, Compressed, Compressor, MAX_LEVELS};
+
+/// Tensors below this size pool into the global fallback group.
+pub const DEFAULT_MIN_FIT: usize = 512;
+
+/// M22 configuration (one paper curve = one config).
+#[derive(Debug, Clone, Copy)]
+pub struct M22Config {
+    pub family: Family,
+    /// distortion weight exponent M (eq. 12)
+    pub m: f64,
+    /// quantizer rate: bits per surviving entry (R_mw)
+    pub rq: u32,
+    /// sparsification level K
+    pub k: usize,
+    pub min_fit: usize,
+}
+
+impl M22Config {
+    pub fn levels(&self) -> usize {
+        1usize << self.rq
+    }
+}
+
+/// The M22 compressor (also TINYSCRIPT via [`M22::tinyscript`]).
+pub struct M22 {
+    pub cfg: M22Config,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<QuantizerTables>,
+}
+
+/// Per-group side info carried in the payload.
+#[derive(Debug, Clone, Copy)]
+struct GroupParams {
+    std: f32,
+    shape: f32,
+}
+
+impl M22 {
+    pub fn new(cfg: M22Config, codec: Arc<dyn BlockCodec>, tables: Arc<QuantizerTables>) -> M22 {
+        assert!((1..=4).contains(&cfg.rq), "rq={} out of [1,4]", cfg.rq);
+        assert!(cfg.levels() <= MAX_LEVELS);
+        M22 { cfg, codec, tables }
+    }
+
+    /// TINYSCRIPT: M = 0 + d-Weibull fit (paper Sec. V-A).
+    pub fn tinyscript(
+        rq: u32,
+        k: usize,
+        codec: Arc<dyn BlockCodec>,
+        tables: Arc<QuantizerTables>,
+    ) -> M22 {
+        M22::new(
+            M22Config { family: Family::Weibull, m: 0.0, rq, k, min_fit: DEFAULT_MIN_FIT },
+            codec,
+            tables,
+        )
+    }
+
+    /// Group ranges: one per fit-worthy tensor, in layout order.
+    /// Entries outside them belong to the pooled global group.
+    fn fit_groups(&self, spec: &ModelSpec) -> Vec<std::ops::Range<usize>> {
+        spec.tensors
+            .iter()
+            .filter(|t| t.size >= self.cfg.min_fit)
+            .map(|t| t.offset..t.offset + t.size)
+            .collect()
+    }
+
+    /// Group id of a flat position: index into fit_groups, or groups.len()
+    /// for the global group.
+    fn group_of(groups: &[std::ops::Range<usize>], pos: usize) -> usize {
+        for (i, r) in groups.iter().enumerate() {
+            if r.contains(&pos) {
+                return i;
+            }
+        }
+        groups.len()
+    }
+
+    /// Fit one group's (std, shape) from sparse slice values.
+    fn fit_group(&self, values: &[f32]) -> Result<GroupParams> {
+        let sums = self.codec.moments(values)?;
+        let m = match Moments::from_sums(&sums) {
+            Ok(m) => m,
+            // degenerate group (0–1 survivors): unit quantizer, never used
+            Err(_) => return Ok(GroupParams { std: 1.0, shape: 1.0 }),
+        };
+        let (std, shape) = match self.cfg.family {
+            Family::GenNorm => (m.std(), fit_gennorm(&m).beta),
+            Family::Weibull => (m.std(), fit_weibull2(&m).c),
+        };
+        Ok(GroupParams { std: std as f32, shape: shape as f32 })
+    }
+
+    /// (thresholds, centers) f32 arrays for one group — used identically by
+    /// encoder and decoder so reconstructions agree bit-exactly.
+    fn quantizer_arrays(&self, p: GroupParams) -> (Vec<f32>, Vec<f32>) {
+        let q = self
+            .tables
+            .get(self.cfg.family, p.shape as f64, self.cfg.m, self.cfg.levels())
+            .scaled(p.std.max(1e-30) as f64);
+        q.padded_f32(MAX_LEVELS)
+    }
+}
+
+impl Compressor for M22 {
+    fn name(&self) -> String {
+        if self.cfg.m == 0.0 && self.cfg.family == Family::Weibull {
+            format!("tinyscript(R={})", self.cfg.rq)
+        } else {
+            format!("m22-{}(M={}, R={})", self.cfg.family.label(), self.cfg.m, self.cfg.rq)
+        }
+    }
+
+    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+        if grad.len() != spec.d() {
+            bail!("grad len {} != d {}", grad.len(), spec.d());
+        }
+        let cfg = self.cfg;
+        let (sparse, mut positions) = topk(grad, cfg.k.min(grad.len()));
+        // exact-zero entries can be selected when k exceeds the nonzero
+        // count; they carry no information (the decoder reconstructs zeros
+        // by default), so drop them from the transmitted support.
+        positions.retain(|&p| sparse[p as usize] != 0.0);
+        let groups = self.fit_groups(spec);
+
+        // --- fit every group ------------------------------------------------
+        let mut params: Vec<GroupParams> = Vec::with_capacity(groups.len() + 1);
+        for r in &groups {
+            params.push(self.fit_group(&sparse[r.clone()])?);
+        }
+        // global group: everything not covered by a fit group
+        let mut rest: Vec<f32> = Vec::new();
+        let mut cursor = 0usize;
+        for r in &groups {
+            rest.extend_from_slice(&sparse[cursor..r.start]);
+            cursor = r.end;
+        }
+        rest.extend_from_slice(&sparse[cursor..]);
+        params.push(self.fit_group(&rest)?);
+
+        // --- quantize group-wise into dense idx/ghat ------------------------
+        let mut idx_dense: Vec<u32> = vec![0; grad.len()];
+        let mut ghat: Vec<f32> = vec![0.0; grad.len()];
+        for (gi, r) in groups.iter().enumerate() {
+            let (t, c) = self.quantizer_arrays(params[gi]);
+            let (idx, gh) = self.codec.quantize(&sparse[r.clone()], &t, &c)?;
+            idx_dense[r.clone()].copy_from_slice(&idx);
+            ghat[r.clone()].copy_from_slice(&gh);
+        }
+        if !rest.is_empty() {
+            // global group: quantize only the pooled leftover values (§Perf
+            // opt L3-1 — quantizing the full vector again cost ~25% of the
+            // whole compress path), then scatter back into the gaps.
+            let (t, c) = self.quantizer_arrays(*params.last().unwrap());
+            let (idx, gh) = self.codec.quantize(&rest, &t, &c)?;
+            let mut j = 0usize; // cursor into rest
+            let mut cursor = 0usize;
+            let mut scatter = |range: std::ops::Range<usize>, j: &mut usize| {
+                for i in range {
+                    idx_dense[i] = idx[*j];
+                    ghat[i] = gh[*j];
+                    *j += 1;
+                }
+            };
+            for r in &groups {
+                scatter(cursor..r.start, &mut j);
+                cursor = r.end;
+            }
+            scatter(cursor..sparse.len(), &mut j);
+            debug_assert_eq!(j, rest.len());
+        }
+
+        // --- serialize -------------------------------------------------------
+        let pos_bytes = encode_positions(&positions);
+        let survivor_idx: Vec<u32> = positions.iter().map(|&p| idx_dense[p as usize]).collect();
+        let idx_bytes = pack_indices(&survivor_idx, cfg.rq);
+
+        let mut payload = Vec::with_capacity(12 + pos_bytes.len() + idx_bytes.len());
+        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&pos_bytes);
+        for p in &params {
+            payload.extend_from_slice(&p.std.to_le_bytes());
+            payload.extend_from_slice(&p.shape.to_le_bytes());
+        }
+        payload.extend_from_slice(&idx_bytes);
+
+        let report = RateReport {
+            d: spec.d(),
+            k: positions.len(),
+            position_bits_ideal: crate::stats::special::log2_choose(
+                spec.d() as u64,
+                positions.len() as u64,
+            ),
+            position_bits_actual: position_bits(&positions),
+            value_bits: positions.len() as u64 * cfg.rq as u64,
+            side_bits: params.len() as u64 * 64,
+            payload_bytes: payload.len(),
+        };
+        Ok(Compressed { payload, reconstructed: ghat, report })
+    }
+
+    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let cfg = self.cfg;
+        let groups = self.fit_groups(spec);
+        let n_groups = groups.len() + 1;
+
+        let take_u32 = |b: &[u8], at: usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(
+                b.get(at..at + 4).context("short payload")?.try_into().unwrap(),
+            ))
+        };
+        let k = take_u32(payload, 0)? as usize;
+        let npos = take_u32(payload, 4)? as usize;
+        let mut off = 8;
+        let positions = decode_positions(
+            payload.get(off..off + npos).context("short positions")?,
+            k,
+        )
+        .context("positions decode")?;
+        off += npos;
+
+        let mut params = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let std = f32::from_le_bytes(
+                payload.get(off..off + 4).context("short params")?.try_into().unwrap(),
+            );
+            let shape = f32::from_le_bytes(
+                payload.get(off + 4..off + 8).context("short params")?.try_into().unwrap(),
+            );
+            params.push(GroupParams { std, shape });
+            off += 8;
+        }
+        let idx = unpack_indices(&payload[off..], cfg.rq, k).context("indices decode")?;
+
+        // rebuild per-group center tables (same snap path as the encoder)
+        let centers: Vec<Vec<f32>> =
+            params.iter().map(|&p| self.quantizer_arrays(p).1).collect();
+
+        let mut out = vec![0.0f32; spec.d()];
+        for (&pos, &i) in positions.iter().zip(&idx) {
+            let gid = Self::group_of(&groups, pos as usize);
+            out[pos as usize] = centers[gid][i as usize];
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{grad_like, tiny_spec};
+    use crate::compress::CpuCodec;
+
+    fn mk(family: Family, m: f64, rq: u32, k: usize, min_fit: usize) -> M22 {
+        M22::new(
+            M22Config { family, m, rq, k, min_fit },
+            Arc::new(CpuCodec),
+            Arc::new(QuantizerTables::new()),
+        )
+    }
+
+    #[test]
+    fn roundtrip_encode_decode_exact() {
+        let spec = tiny_spec(4000, 64);
+        let g = grad_like(4064, 7);
+        for family in [Family::GenNorm, Family::Weibull] {
+            for m in [0.0, 2.0] {
+                for rq in [1u32, 3] {
+                    let mut c = mk(family, m, rq, 2400, 512);
+                    let out = c.compress(&g, &spec).unwrap();
+                    let dec = c.decompress(&out.payload, &spec).unwrap();
+                    assert_eq!(dec, out.reconstructed, "family={family:?} m={m} rq={rq}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn respects_sparsity_and_rate() {
+        let spec = tiny_spec(4000, 64);
+        let g = grad_like(4064, 8);
+        let k = 1000;
+        let mut c = mk(Family::GenNorm, 2.0, 2, k, 512);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(out.report.k, k);
+        assert_eq!(out.report.value_bits, (k * 2) as u64);
+        assert_eq!(out.reconstructed.iter().filter(|x| **x != 0.0).count(), k);
+        // reconstruction supported exactly on topK positions
+        let (_, pos) = topk(&g, k);
+        for (i, &x) in out.reconstructed.iter().enumerate() {
+            assert_eq!(x != 0.0, pos.contains(&(i as u32)), "pos {i}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_reasonable() {
+        // 4-bit M22 on dense-ish data should reconstruct within a few
+        // percent RMS of the survivors.
+        let spec = tiny_spec(8000, 0);
+        let g = grad_like(8000, 9);
+        let mut c = mk(Family::GenNorm, 0.0, 4, 8000, 512);
+        let out = c.compress(&g, &spec).unwrap();
+        let mse: f64 = g
+            .iter()
+            .zip(&out.reconstructed)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / g.len() as f64;
+        let var: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / g.len() as f64;
+        assert!(mse < 0.02 * var, "mse {mse} var {var}");
+    }
+
+    #[test]
+    fn higher_rate_lower_distortion() {
+        let spec = tiny_spec(6000, 0);
+        let g = grad_like(6000, 10);
+        let mut prev = f64::INFINITY;
+        for rq in [1u32, 2, 3, 4] {
+            let mut c = mk(Family::GenNorm, 2.0, rq, 6000, 512);
+            let out = c.compress(&g, &spec).unwrap();
+            let mse: f64 = g
+                .iter()
+                .zip(&out.reconstructed)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(mse < prev, "rq={rq} mse={mse} prev={prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn tinyscript_is_m0_weibull() {
+        let t = M22::tinyscript(2, 100, Arc::new(CpuCodec), Arc::new(QuantizerTables::new()));
+        assert_eq!(t.cfg.m, 0.0);
+        assert_eq!(t.cfg.family, Family::Weibull);
+        assert!(t.name().starts_with("tinyscript"));
+    }
+
+    #[test]
+    fn payload_size_matches_report() {
+        let spec = tiny_spec(4000, 64);
+        let g = grad_like(4064, 11);
+        let mut c = mk(Family::Weibull, 4.0, 3, 2000, 512);
+        let out = c.compress(&g, &spec).unwrap();
+        assert_eq!(out.report.payload_bytes, out.payload.len());
+        // payload bits within a few bytes of the reported components
+        let reported =
+            out.report.position_bits_actual + out.report.value_bits + out.report.side_bits;
+        let actual_bits = (out.payload.len() as u64) * 8;
+        assert!(actual_bits >= reported);
+        assert!(actual_bits - reported <= 8 * 12, "framing overhead too large");
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        crate::util::prop::prop_check("m22 roundtrip", 15, |gen| {
+            let conv = gen.usize_in(600, 3000);
+            let bias = gen.usize_in(0, 64);
+            let spec = tiny_spec(conv, bias);
+            let d = conv + bias;
+            let sp = gen.f64_in(0.0, 0.5);
+            let g = gen.grad_like(d..d + 1, sp);
+            let k = gen.usize_in(1, d);
+            let rq = *gen.pick(&[1u32, 2, 3, 4]);
+            let family = *gen.pick(&[Family::GenNorm, Family::Weibull]);
+            let mut c = mk(family, gen.f64_in(0.0, 9.0), rq, k, 512);
+            let out = c.compress(&g, &spec).unwrap();
+            let dec = c.decompress(&out.payload, &spec).unwrap();
+            assert_eq!(dec, out.reconstructed);
+        });
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let spec = tiny_spec(2000, 0);
+        let g = grad_like(2000, 12);
+        let mut c = mk(Family::GenNorm, 2.0, 2, 1000, 512);
+        let out = c.compress(&g, &spec).unwrap();
+        for cut in [0usize, 4, 10, out.payload.len() - 20] {
+            assert!(c.decompress(&out.payload[..cut], &spec).is_err(), "cut={cut}");
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Rate accounting — the paper's eqs. (14)–(17).
+//!
+//! Every scheme's uplink budget decomposes as
+//!
+//! ```text
+//! dR = log2 C(d, K)  +  K · (bits per surviving entry)
+//! ```
+//!
+//! (plus per-layer side info, which we track explicitly). The experiment
+//! harness fixes the *value* budget `K · R_q` the way the paper's parameter
+//! lists do (e.g. K = 331724, R_u = 1 ⇒ "dR = 332 kbits") and matches K
+//! across schemes so the positional term cancels in comparisons; both terms
+//! are still reported.
+
+use crate::stats::special::log2_choose;
+
+/// Rate breakdown of one compressed uplink.
+#[derive(Debug, Clone, Default)]
+pub struct RateReport {
+    /// model dimension d
+    pub d: usize,
+    /// surviving (nonzero) entries K
+    pub k: usize,
+    /// ideal positional bits: log2 C(d, K)   (eqs. 14–17 first term)
+    pub position_bits_ideal: f64,
+    /// measured positional bits (γ-gap RLE)
+    pub position_bits_actual: u64,
+    /// value bits: K · R_q (or K_fp · p, or sketch bits)
+    pub value_bits: u64,
+    /// per-layer side info actually transmitted (scales, shapes, counts)
+    pub side_bits: u64,
+    /// total payload bytes produced by the encoder
+    pub payload_bytes: usize,
+}
+
+impl RateReport {
+    /// The paper's nominal budget figure (value bits only — how the
+    /// parameter lists in Sec. V-B are computed).
+    pub fn nominal_bits(&self) -> u64 {
+        self.value_bits
+    }
+
+    /// Ideal total (eq. 14–17): positional entropy + value bits + side info.
+    pub fn ideal_total_bits(&self) -> f64 {
+        self.position_bits_ideal + self.value_bits as f64 + self.side_bits as f64
+    }
+
+    /// Measured total as encoded.
+    pub fn actual_total_bits(&self) -> u64 {
+        self.position_bits_actual + self.value_bits + self.side_bits
+    }
+
+    /// bits per model dimension (the R of the paper's comp_R).
+    pub fn bits_per_dim(&self) -> f64 {
+        self.ideal_total_bits() / self.d as f64
+    }
+}
+
+/// Budget solver: parameters for each scheme at a given nominal budget.
+/// `budget_bits` is the paper-style value budget (e.g. 332k for the CNN at
+/// "1 bit per nonzero" with K = 0.6 d).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub d: usize,
+    /// nominal value-bit budget (K_ref · rq)
+    pub budget_bits: u64,
+    /// reference sparsity level shared by quantizer-family schemes
+    pub k_ref: usize,
+    /// quantizer rate for the reference schemes (bits per nonzero)
+    pub rq: u32,
+}
+
+impl Budget {
+    /// The paper's operating point: K = 0.6 d kept, `rq` bits per survivor.
+    pub fn paper_point(d: usize, rq: u32) -> Budget {
+        let k_ref = (0.6 * d as f64).round() as usize;
+        Budget { d, budget_bits: k_ref as u64 * rq as u64, k_ref, rq }
+    }
+
+    /// eq. (15)/(17): topK + R_q-bit quantizer keeps K_ref survivors.
+    pub fn k_quantized(&self) -> usize {
+        self.k_ref
+    }
+
+    /// eq. (14): topK + p-bit float representation ⇒ K_fp = budget / p.
+    pub fn k_fp(&self, p: u32) -> usize {
+        ((self.budget_bits as f64) / p as f64).floor() as usize
+    }
+
+    /// eq. (16): count sketch with ratio r_sk spends r_sk · K_sk bits;
+    /// the paper sets r_sk = rq and K_sk = K_ref.
+    pub fn sketch_bits(&self) -> u64 {
+        self.budget_bits
+    }
+
+    /// positional entropy at a given K (first term of every budget eq.).
+    pub fn position_bits(&self, k: usize) -> f64 {
+        log2_choose(self.d as u64, k as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cnn_operating_points() {
+        // Paper Sec. V-B, CNN d = 552874: K = 331724, budgets 332k/996k.
+        let d = 552_874usize;
+        let b1 = Budget::paper_point(d, 1);
+        assert_eq!(b1.k_ref, 331_724);
+        assert_eq!(b1.budget_bits, 331_724);
+        assert_eq!(b1.k_fp(8), 41_465); // paper rounds to 41466
+        assert_eq!(b1.k_fp(4), 82_931);
+        let b3 = Budget::paper_point(d, 3);
+        assert_eq!(b3.budget_bits, 995_172); // "996 kbits"
+        assert_eq!(b3.k_fp(8), 124_396); // paper: 124396 ✓
+        assert_eq!(b3.k_fp(4), 248_793); // paper: 248793 ✓
+    }
+
+    #[test]
+    fn fp_schemes_match_budget() {
+        let b = Budget::paper_point(100_000, 2);
+        for p in [4u32, 8] {
+            let kfp = b.k_fp(p);
+            let spent = kfp as u64 * p as u64;
+            assert!(spent <= b.budget_bits);
+            assert!(b.budget_bits - spent < p as u64); // tight to rounding
+        }
+    }
+
+    #[test]
+    fn report_totals_add_up() {
+        let r = RateReport {
+            d: 1000,
+            k: 600,
+            position_bits_ideal: 970.0,
+            position_bits_actual: 1100,
+            value_bits: 600,
+            side_bits: 64,
+            payload_bytes: 250,
+        };
+        assert_eq!(r.nominal_bits(), 600);
+        assert_eq!(r.actual_total_bits(), 1100 + 600 + 64);
+        assert!((r.ideal_total_bits() - (970.0 + 600.0 + 64.0)).abs() < 1e-9);
+        assert!((r.bits_per_dim() - 1.634).abs() < 1e-3);
+    }
+
+    #[test]
+    fn position_entropy_monotone_to_half() {
+        let b = Budget::paper_point(10_000, 1);
+        let mut prev = 0.0;
+        for k in [100usize, 1000, 3000, 5000] {
+            let bits = b.position_bits(k);
+            assert!(bits > prev);
+            prev = bits;
+        }
+        // symmetric around d/2
+        assert!((b.position_bits(2000) - b.position_bits(8000)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,152 @@
+//! topK sparsification (paper Sec. III-B / V-A): keep the K
+//! largest-magnitude entries, zero the rest.
+//!
+//! The hot path uses quickselect (`select_nth_unstable`) on a magnitude
+//! copy — O(d) expected, no full sort. Ties at the threshold are broken by
+//! position (earlier entries win) so exactly K survive, deterministically.
+
+/// Magnitude threshold such that keeping `|g| > thr` plus position-ordered
+/// ties at `|g| == thr` yields exactly K entries. Returns (threshold, and
+/// how many ties at the threshold to keep).
+fn select_threshold(g: &[f32], k: usize) -> (f32, usize) {
+    debug_assert!(k > 0 && k <= g.len());
+    let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    let idx = g.len() - k; // k-th largest sits at this position ascending
+    // total_cmp: NaN-safe (a diverged run must degrade, not crash the PS)
+    let (_, &mut thr, _) = mags.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+    // count strictly-above entries to determine how many threshold ties to keep
+    let above = g.iter().filter(|x| x.abs() > thr).count();
+    (thr, k - above)
+}
+
+/// Zero all but the K largest-|.| entries in place; returns the sorted
+/// positions of the survivors.
+pub fn topk_inplace(g: &mut [f32], k: usize) -> Vec<u32> {
+    assert!(k <= g.len(), "k={k} > d={}", g.len());
+    // non-finite entries carry no usable information (a diverged local
+    // model); zero them so selection and the downstream codec stay sound.
+    for x in g.iter_mut() {
+        if !x.is_finite() {
+            *x = 0.0;
+        }
+    }
+    if k == 0 {
+        g.fill(0.0);
+        return Vec::new();
+    }
+    if k == g.len() {
+        return (0..g.len() as u32).collect();
+    }
+    let (thr, mut ties_left) = select_threshold(g, k);
+    let mut kept = Vec::with_capacity(k);
+    for (i, x) in g.iter_mut().enumerate() {
+        let a = x.abs();
+        if a > thr {
+            kept.push(i as u32);
+        } else if a == thr && ties_left > 0 {
+            ties_left -= 1;
+            kept.push(i as u32);
+        } else {
+            *x = 0.0;
+        }
+    }
+    debug_assert_eq!(kept.len(), k);
+    kept
+}
+
+/// Non-destructive variant: (sparsified copy, survivor positions).
+pub fn topk(g: &[f32], k: usize) -> (Vec<f32>, Vec<u32>) {
+    let mut out = g.to_vec();
+    let pos = topk_inplace(&mut out, k);
+    (out, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let g = vec![0.1f32, -5.0, 0.3, 2.0, -0.2];
+        let (s, pos) = topk(&g, 2);
+        assert_eq!(pos, vec![1, 3]);
+        assert_eq!(s, vec![0.0, -5.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let g = vec![1.0f32, 2.0, 3.0];
+        let (s, pos) = topk(&g, 3);
+        assert_eq!(pos.len(), 3);
+        assert_eq!(s, g);
+        let (s, pos) = topk(&g, 0);
+        assert!(pos.is_empty());
+        assert!(s.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exact_k_with_ties() {
+        let g = vec![1.0f32; 10];
+        let (s, pos) = topk(&g, 4);
+        assert_eq!(pos.len(), 4);
+        assert_eq!(pos, vec![0, 1, 2, 3]); // position-ordered tie-break
+        assert_eq!(s.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn survivors_dominate_casualties_property() {
+        prop_check("topk dominance", 60, |gen| {
+            let g = gen.grad_like(2..3000, 0.3);
+            let k = gen.usize_in(1, g.len() + 1).min(g.len()).max(1);
+            let (s, pos) = topk(&g, k);
+            assert_eq!(pos.len(), k);
+            // positions sorted & unique
+            assert!(pos.windows(2).all(|w| w[0] < w[1]));
+            // every survivor magnitude >= every zeroed magnitude
+            let min_kept = pos.iter().map(|&i| g[i as usize].abs()).fold(f32::INFINITY, f32::min);
+            for (i, &x) in g.iter().enumerate() {
+                if !pos.contains(&(i as u32)) {
+                    assert!(x.abs() <= min_kept, "dropped {} > kept min {}", x.abs(), min_kept);
+                    assert_eq!(s[i], 0.0);
+                } else {
+                    assert_eq!(s[i], g[i]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn preserved_energy_is_maximal() {
+        prop_check("topk max energy", 30, |gen| {
+            let g = gen.grad_like(10..500, 0.0);
+            let k = g.len() / 2;
+            if k == 0 {
+                return;
+            }
+            let (s, _) = topk(&g, k);
+            let kept: f64 = s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            // compare against sorted-top-k energy
+            let mut mags: Vec<f64> = g.iter().map(|&x| (x as f64) * (x as f64)).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let best: f64 = mags[..k].iter().sum();
+            assert!((kept - best).abs() < 1e-9 * best.max(1.0));
+        });
+    }
+
+    #[test]
+    fn nan_entries_do_not_panic() {
+        // non-finite entries are zeroed before selection: the call must not
+        // panic and must keep the largest *finite* magnitudes.
+        let g = vec![1.0f32, f32::NAN, -2.0, 0.5, f32::INFINITY];
+        let (s, pos) = topk(&g, 2);
+        assert_eq!(pos, vec![0, 2]);
+        assert_eq!(s, vec![1.0, 0.0, -2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "k=5 > d=3")]
+    fn k_too_large_panics() {
+        topk(&[1.0, 2.0, 3.0], 5);
+    }
+}

@@ -1,0 +1,239 @@
+//! topK + scalar uniform quantization (paper Sec. V-A, eq. 15).
+//!
+//! Per layer and iteration, 2^{R_u} centers uniformly spaced between the
+//! min and max of that layer's surviving entries; indices cost R_u bits per
+//! survivor, side info is the (min, max) f32 pair per tensor.
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::ModelSpec;
+
+use super::bitpack::{pack_indices, unpack_indices};
+use super::rate::RateReport;
+use super::rle::{decode_positions, encode_positions, position_bits};
+use super::topk::topk;
+use super::{Compressed, Compressor};
+
+/// topK + uniform quantizer.
+pub struct TopKUniform {
+    /// bits per surviving entry (R_u)
+    pub rq: u32,
+    /// sparsification level K
+    pub k: usize,
+}
+
+impl TopKUniform {
+    pub fn new(rq: u32, k: usize) -> Self {
+        assert!((1..=16).contains(&rq));
+        TopKUniform { rq, k }
+    }
+
+    fn levels(&self) -> u32 {
+        1u32 << self.rq
+    }
+
+    fn center(lo: f32, hi: f32, levels: u32, i: u32) -> f32 {
+        if levels == 1 || hi <= lo {
+            return 0.5 * (lo + hi);
+        }
+        lo + (hi - lo) * i as f32 / (levels - 1) as f32
+    }
+
+    fn encode_one(lo: f32, hi: f32, levels: u32, x: f32) -> u32 {
+        if hi <= lo {
+            return 0;
+        }
+        let t = ((x - lo) / (hi - lo) * (levels - 1) as f32).round();
+        (t.max(0.0) as u32).min(levels - 1)
+    }
+}
+
+impl Compressor for TopKUniform {
+    fn name(&self) -> String {
+        format!("topk+uniform(R={})", self.rq)
+    }
+
+    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+        if grad.len() != spec.d() {
+            bail!("grad len {} != d {}", grad.len(), spec.d());
+        }
+        let (sparse, positions) = topk(grad, self.k.min(grad.len()));
+        let levels = self.levels();
+
+        // per-tensor (min, max) over survivors
+        let mut ranges: Vec<(f32, f32)> = Vec::with_capacity(spec.tensors.len());
+        for (ti, _) in spec.tensors.iter().enumerate() {
+            let r = spec.range(ti);
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in &sparse[r] {
+                if x != 0.0 {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+            }
+            if !lo.is_finite() {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            ranges.push((lo, hi));
+        }
+
+        // quantize survivors
+        let mut ghat = vec![0.0f32; grad.len()];
+        let mut codes = Vec::with_capacity(positions.len());
+        let mut ti = 0usize;
+        for &p in &positions {
+            let p = p as usize;
+            while p >= spec.range(ti).end {
+                ti += 1;
+            }
+            let (lo, hi) = ranges[ti];
+            let c = Self::encode_one(lo, hi, levels, sparse[p]);
+            codes.push(c);
+            ghat[p] = Self::center(lo, hi, levels, c);
+        }
+
+        let pos_bytes = encode_positions(&positions);
+        let idx_bytes = pack_indices(&codes, self.rq);
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&pos_bytes);
+        for (lo, hi) in &ranges {
+            payload.extend_from_slice(&lo.to_le_bytes());
+            payload.extend_from_slice(&hi.to_le_bytes());
+        }
+        payload.extend_from_slice(&idx_bytes);
+
+        let report = RateReport {
+            d: spec.d(),
+            k: positions.len(),
+            position_bits_ideal: crate::stats::special::log2_choose(
+                spec.d() as u64,
+                positions.len() as u64,
+            ),
+            position_bits_actual: position_bits(&positions),
+            value_bits: positions.len() as u64 * self.rq as u64,
+            side_bits: ranges.len() as u64 * 64,
+            payload_bytes: payload.len(),
+        };
+        Ok(Compressed { payload, reconstructed: ghat, report })
+    }
+
+    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let levels = self.levels();
+        let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
+            as usize;
+        let npos =
+            u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
+        let mut off = 8;
+        let positions =
+            decode_positions(payload.get(off..off + npos).context("short pos")?, k)
+                .context("positions")?;
+        off += npos;
+        let mut ranges = Vec::with_capacity(spec.tensors.len());
+        for _ in 0..spec.tensors.len() {
+            let lo = f32::from_le_bytes(
+                payload.get(off..off + 4).context("short ranges")?.try_into().unwrap(),
+            );
+            let hi = f32::from_le_bytes(
+                payload.get(off + 4..off + 8).context("short ranges")?.try_into().unwrap(),
+            );
+            ranges.push((lo, hi));
+            off += 8;
+        }
+        let codes = unpack_indices(&payload[off..], self.rq, k).context("indices")?;
+        let mut out = vec![0.0f32; spec.d()];
+        let mut ti = 0usize;
+        for (&p, &c) in positions.iter().zip(&codes) {
+            let p = p as usize;
+            while p >= spec.range(ti).end {
+                ti += 1;
+            }
+            let (lo, hi) = ranges[ti];
+            out[p] = Self::center(lo, hi, levels, c);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{grad_like, tiny_spec};
+
+    #[test]
+    fn roundtrip_exact() {
+        let spec = tiny_spec(3000, 32);
+        let g = grad_like(3032, 5);
+        for rq in [1u32, 2, 3, 8] {
+            let mut c = TopKUniform::new(rq, 1500);
+            let out = c.compress(&g, &spec).unwrap();
+            let dec = c.decompress(&out.payload, &spec).unwrap();
+            assert_eq!(dec, out.reconstructed, "rq={rq}");
+            assert_eq!(out.report.value_bits, 1500 * rq as u64);
+        }
+    }
+
+    #[test]
+    fn reconstruction_within_step() {
+        let spec = tiny_spec(2000, 0);
+        let g = grad_like(2000, 6);
+        let mut c = TopKUniform::new(4, 2000); // no sparsification
+        let out = c.compress(&g, &spec).unwrap();
+        // uniform with 16 levels: error <= half step of the layer range
+        let lo = g.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = g.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 15.0;
+        for (a, b) in g.iter().zip(&out.reconstructed) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn high_rate_beats_low_rate() {
+        let spec = tiny_spec(4000, 0);
+        let g = grad_like(4000, 7);
+        let mse = |rq| {
+            let mut c = TopKUniform::new(rq, 4000);
+            let out = c.compress(&g, &spec).unwrap();
+            g.iter()
+                .zip(&out.reconstructed)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(mse(3) < mse(1));
+    }
+
+    #[test]
+    fn single_survivor_layer() {
+        let spec = tiny_spec(10, 2);
+        let mut g = vec![0.0f32; 12];
+        g[3] = 5.0;
+        g[11] = -1.0;
+        let mut c = TopKUniform::new(2, 2);
+        let out = c.compress(&g, &spec).unwrap();
+        // lone survivor in a tensor: lo == hi == value, reconstructed exactly
+        assert_eq!(out.reconstructed[3], 5.0);
+        assert_eq!(out.reconstructed[11], -1.0);
+        let dec = c.decompress(&out.payload, &spec).unwrap();
+        assert_eq!(dec, out.reconstructed);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        crate::util::prop::prop_check("uniform roundtrip", 30, |gen| {
+            let conv = gen.usize_in(100, 2000);
+            let bias = gen.usize_in(0, 32);
+            let spec = tiny_spec(conv, bias);
+            let d = conv + bias;
+            let sp = gen.f64_in(0.0, 0.8);
+            let g = gen.grad_like(d..d + 1, sp);
+            let k = gen.usize_in(1, d);
+            let mut c = TopKUniform::new(*gen.pick(&[1u32, 2, 3, 4]), k);
+            let out = c.compress(&g, &spec).unwrap();
+            assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Experiment configuration: schemes, budgets, FL hyper-parameters
+//! (paper Table II + Sec. V-B parameter lists), and the compressor factory.
+
+pub mod presets;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::compress::count_sketch::CountSketch;
+use crate::compress::fp::TopKFp;
+use crate::compress::m22::{M22, M22Config, DEFAULT_MIN_FIT};
+use crate::compress::uniform::TopKUniform;
+use crate::compress::{Budget, BlockCodec, Compressor, NoCompression};
+use crate::data::DatasetConfig;
+use crate::quantizer::{Family, QuantizerTables};
+use crate::train::OptimizerKind;
+use crate::util::json::Json;
+
+/// Which compression scheme a run uses (one paper curve each).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// M22 with a distribution family and distortion exponent M.
+    M22 { family: Family, m: f64 },
+    /// TINYSCRIPT = M22 degenerate case (M = 0, d-Weibull).
+    TinyScript,
+    /// topK + uniform scalar quantization.
+    TopKUniform,
+    /// topK + minifloat (8 or 4 bits).
+    TopKFp { bits: u32 },
+    /// count-sketch (no positions, whole budget in the table).
+    CountSketch,
+    /// no compression (Fig. 5-right baseline).
+    None,
+}
+
+impl Scheme {
+    pub fn parse(name: &str, m: f64) -> Result<Scheme> {
+        Ok(match name {
+            "m22-gennorm" | "m22_g" | "G" => Scheme::M22 { family: Family::GenNorm, m },
+            "m22-weibull" | "m22_w" | "W" => Scheme::M22 { family: Family::Weibull, m },
+            "tinyscript" => Scheme::TinyScript,
+            "topk-uniform" | "uniform" => Scheme::TopKUniform,
+            "topk-fp8" | "fp8" => Scheme::TopKFp { bits: 8 },
+            "topk-fp4" | "fp4" => Scheme::TopKFp { bits: 4 },
+            "count-sketch" | "sketch" => Scheme::CountSketch,
+            "none" | "uncompressed" => Scheme::None,
+            _ => bail!("unknown scheme `{name}`"),
+        })
+    }
+
+    /// Legend label matching the paper's figure conventions
+    /// ("G 2" = M22+GenNorm M=2, "W 4" = M22+Weibull M=4, ...).
+    pub fn label(&self, rq: u32) -> String {
+        match self {
+            Scheme::M22 { family, m } => format!("{} {m} (R={rq})", family.label()),
+            Scheme::TinyScript => format!("TINYSCRIPT (R={rq})"),
+            Scheme::TopKUniform => format!("topK+uniform (R={rq})"),
+            Scheme::TopKFp { bits } => format!("topK+{bits}fp"),
+            Scheme::CountSketch => format!("count sketch (r={rq})"),
+            Scheme::None => "no quantization".into(),
+        }
+    }
+}
+
+/// One full experiment run (one curve of one figure).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub arch: String,
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// local SGD/Adam steps per round ("one local epoch" in the paper)
+    pub local_steps: usize,
+    /// fraction of entries surviving topK (paper: 0.6)
+    pub keep_frac: f64,
+    /// bits per surviving entry (R_u / R_mw / r_sk)
+    pub rq: u32,
+    pub scheme: Scheme,
+    /// fraction of clients participating each round (paper Sec. IV-B
+    /// extension: "partial clients are selected in each round")
+    pub participation: f64,
+    /// non-i.i.d. Dirichlet split parameter (None = i.i.d., paper default)
+    pub dirichlet_alpha: Option<f64>,
+    /// error-feedback memory (paper Sec. IV-B)
+    pub memory: bool,
+    pub memory_decay: f64,
+    pub seed: u64,
+    /// test batches used for eval each round (whole test set if usize::MAX)
+    pub eval_batches: usize,
+    pub dataset: DatasetConfig,
+}
+
+impl ExperimentConfig {
+    /// Defaults mirroring the paper's FL setting (Sec. II-D): 2 clients,
+    /// i.i.d. split, report every local epoch.
+    pub fn new(arch: &str, scheme: Scheme, rq: u32, rounds: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            arch: arch.to_string(),
+            n_clients: 2,
+            rounds,
+            local_steps: 4,
+            keep_frac: 0.6,
+            rq,
+            scheme,
+            participation: 1.0,
+            dirichlet_alpha: None,
+            memory: false,
+            memory_decay: 1.0,
+            seed: 33,
+            eval_batches: 4,
+            dataset: DatasetConfig::default(),
+        }
+    }
+
+    pub fn optimizer(&self) -> Result<OptimizerKind> {
+        OptimizerKind::preset(&self.arch)
+    }
+
+    /// The paper-style budget for this config at model dimension `d`.
+    pub fn budget(&self, d: usize) -> Budget {
+        let k_ref = ((self.keep_frac * d as f64).round() as usize).clamp(1, d);
+        Budget { d, budget_bits: k_ref as u64 * self.rq as u64, k_ref, rq: self.rq }
+    }
+
+    /// Build the scheme's compressor for model dimension `d`.
+    pub fn build_compressor(
+        &self,
+        d: usize,
+        codec: Arc<dyn BlockCodec>,
+        tables: Arc<QuantizerTables>,
+    ) -> Box<dyn Compressor> {
+        let b = self.budget(d);
+        match self.scheme {
+            Scheme::M22 { family, m } => Box::new(M22::new(
+                M22Config { family, m, rq: self.rq, k: b.k_ref, min_fit: DEFAULT_MIN_FIT },
+                codec,
+                tables,
+            )),
+            Scheme::TinyScript => Box::new(M22::tinyscript(self.rq, b.k_ref, codec, tables)),
+            Scheme::TopKUniform => Box::new(TopKUniform::new(self.rq, b.k_ref)),
+            Scheme::TopKFp { bits } => Box::new(TopKFp {
+                fmt: if bits == 8 { crate::compress::fp::FP8 } else { crate::compress::fp::FP4 },
+                k: b.k_fp(bits),
+            }),
+            Scheme::CountSketch => {
+                // seed is shared client/server ("common sketching operator")
+                Box::new(CountSketch::from_budget(b.k_ref, b.sketch_bits(), 3, self.seed ^ 0x5ce7_c4a1))
+            }
+            Scheme::None => Box::new(NoCompression),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::from(self.arch.as_str())),
+            ("n_clients", Json::from(self.n_clients)),
+            ("rounds", Json::from(self.rounds)),
+            ("local_steps", Json::from(self.local_steps)),
+            ("keep_frac", Json::from(self.keep_frac)),
+            ("rq", Json::from(self.rq as usize)),
+            ("scheme", Json::from(self.scheme.label(self.rq).as_str())),
+            ("memory", Json::from(self.memory)),
+            ("seed", Json::from(self.seed as usize)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CpuCodec;
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(
+            Scheme::parse("m22-gennorm", 3.0).unwrap(),
+            Scheme::M22 { family: Family::GenNorm, m: 3.0 }
+        );
+        assert_eq!(Scheme::parse("tinyscript", 0.0).unwrap(), Scheme::TinyScript);
+        assert_eq!(Scheme::parse("fp8", 0.0).unwrap(), Scheme::TopKFp { bits: 8 });
+        assert!(Scheme::parse("bogus", 0.0).is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_conventions() {
+        assert_eq!(Scheme::M22 { family: Family::GenNorm, m: 2.0 }.label(1), "G 2 (R=1)");
+        assert_eq!(Scheme::TopKFp { bits: 4 }.label(1), "topK+4fp");
+    }
+
+    #[test]
+    fn budget_uses_keep_frac() {
+        let cfg = ExperimentConfig::new("cnn_s", Scheme::TopKUniform, 1, 5);
+        let b = cfg.budget(552_874);
+        assert_eq!(b.k_ref, 331_724);
+        assert_eq!(b.budget_bits, 331_724);
+    }
+
+    #[test]
+    fn factory_builds_every_scheme() {
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let tables = Arc::new(QuantizerTables::new());
+        for scheme in [
+            Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+            Scheme::TinyScript,
+            Scheme::TopKUniform,
+            Scheme::TopKFp { bits: 8 },
+            Scheme::TopKFp { bits: 4 },
+            Scheme::CountSketch,
+            Scheme::None,
+        ] {
+            let cfg = ExperimentConfig::new("cnn_s", scheme, 2, 3);
+            let c = cfg.build_compressor(10_000, codec.clone(), tables.clone());
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn config_json_has_fields() {
+        let cfg = ExperimentConfig::new("vgg_s", Scheme::TinyScript, 3, 7);
+        let j = cfg.to_json();
+        assert_eq!(j.get("arch").unwrap().as_str().unwrap(), "vgg_s");
+        assert_eq!(j.get("rounds").unwrap().as_usize().unwrap(), 7);
+    }
+}

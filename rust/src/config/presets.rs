@@ -1,0 +1,115 @@
+//! Paper presets: Table II rows and the Sec. V-B scheme lists per figure.
+
+use crate::quantizer::Family;
+
+use super::{ExperimentConfig, Scheme};
+
+/// Table II analogue, printable.
+pub fn table2_rows() -> Vec<Vec<(&'static str, String)>> {
+    let row = |arch: &'static str, opt: &str, lr: f64, batch: usize| {
+        vec![
+            ("Model", arch.to_string()),
+            ("Dataset", "synthetic CIFAR-like (10 classes)".to_string()),
+            ("Optimizer", opt.to_string()),
+            ("Learning Rate", format!("{lr}")),
+            ("Momentum", "0".to_string()),
+            ("Loss", "Categorical Cross Entropy".to_string()),
+            ("Mini-Batch Size", format!("{batch}")),
+        ]
+    };
+    vec![
+        row("cnn_s", "SGD", 0.01, 32),
+        row("resnet_s", "Adam", 0.001, 32),
+        row("vgg_s", "Adam", 0.0005, 32),
+    ]
+}
+
+/// Fig. 3 scheme list at a given quantizer rate (paper Sec. V-B params).
+/// The (M-per-rate) pairs follow the paper: at R=1 → G2/G3, W4;
+/// at R=3 → G2/G9, W7.
+pub fn fig3_schemes(rq: u32) -> Vec<Scheme> {
+    let (g_hi, w_m) = match rq {
+        1 => (3.0, 4.0),
+        2 => (6.0, 5.0),
+        _ => (9.0, 7.0),
+    };
+    vec![
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::GenNorm, m: g_hi },
+        Scheme::TinyScript,
+        Scheme::M22 { family: Family::Weibull, m: w_m },
+        Scheme::CountSketch,
+    ]
+}
+
+/// Fig. 4 M sweep (paper: dR = 664k ⇒ R = 2 bits/nonzero).
+pub fn fig4_ms() -> Vec<f64> {
+    vec![0.0, 2.0, 4.0, 6.0, 8.0]
+}
+
+/// Fig. 5 left: the three non-uniform schemes on ResNet.
+pub fn fig5a_schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::CountSketch,
+        Scheme::TinyScript,
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+    ]
+}
+
+/// Fig. 5 right: no-quantization vs M22 at four budgets (R = 1..4).
+pub fn fig5b_rates() -> Vec<u32> {
+    vec![1, 2, 3, 4]
+}
+
+/// A quick-running default experiment (examples / smoke).
+pub fn quickstart(arch: &str, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        arch,
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        2,
+        rounds,
+    );
+    cfg.dataset.train_per_class = 64;
+    cfg.dataset.test_per_class = 16;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_has_eight_curves_like_the_paper() {
+        for rq in [1u32, 3] {
+            assert_eq!(fig3_schemes(rq).len(), 8);
+        }
+        // rate-adapted M choices (paper: larger M at looser budget)
+        assert!(fig3_schemes(3).contains(&Scheme::M22 { family: Family::GenNorm, m: 9.0 }));
+        assert!(fig3_schemes(1).contains(&Scheme::M22 { family: Family::GenNorm, m: 3.0 }));
+    }
+
+    #[test]
+    fn table2_covers_all_models() {
+        let rows = table2_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0][2].1, "SGD");
+        assert_eq!(rows[1][2].1, "Adam");
+    }
+
+    #[test]
+    fn fig4_and_fig5_presets() {
+        assert_eq!(fig4_ms(), vec![0.0, 2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(fig5a_schemes().len(), 3);
+        assert_eq!(fig5b_rates(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn quickstart_is_small() {
+        let q = quickstart("cnn_s", 3);
+        assert!(q.dataset.train_per_class <= 64);
+        assert_eq!(q.rounds, 3);
+    }
+}

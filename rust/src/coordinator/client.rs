@@ -1,0 +1,127 @@
+//! Remote-client worker: local training + compression, one OS thread each.
+//!
+//! Per round (paper Algorithm 1, client side):
+//!   1. receive the global model w_t;
+//!   2. run `local_steps` optimizer steps on the local shard through the
+//!      PJRT runtime (the L2 train-step artifact);
+//!   3. form the model delta  u = w_t − w_local  (what FedAvg aggregates);
+//!   4. error-feedback: ũ = u + decay·residual (Sec. IV-B);
+//!   5. compress ũ; remember residual = ũ − reconstruct(ũ);
+//!   6. uplink the payload bytes + rate report.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::Result;
+
+use crate::compress::Compressor;
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::runtime::RuntimeHandle;
+use crate::train::{ModelSpec, Optimizer};
+
+use super::memory::Memory;
+use super::messages::{Downlink, Uplink};
+
+/// Everything one client thread owns.
+pub struct ClientWorker {
+    pub id: usize,
+    pub cfg: ExperimentConfig,
+    pub spec: ModelSpec,
+    pub shard: Vec<(u32, u8)>,
+    pub runtime: RuntimeHandle,
+    pub compressor: Box<dyn Compressor>,
+    pub memory: Option<Memory>,
+    pub rx: Receiver<Downlink>,
+    pub tx: Sender<Uplink>,
+    /// batch cursor — advances across rounds so epochs progress
+    cursor: usize,
+}
+
+impl ClientWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        cfg: ExperimentConfig,
+        spec: ModelSpec,
+        shard: Vec<(u32, u8)>,
+        runtime: RuntimeHandle,
+        compressor: Box<dyn Compressor>,
+        rx: Receiver<Downlink>,
+        tx: Sender<Uplink>,
+    ) -> ClientWorker {
+        let memory = cfg.memory.then(|| Memory::new(spec.d(), cfg.memory_decay));
+        ClientWorker { id, cfg, spec, shard, runtime, compressor, memory, rx, tx, cursor: 0 }
+    }
+
+    /// One round of local work; returns the uplink (or the error wrapped).
+    fn round(&mut self, dataset: &Dataset, round: usize, w0: &[f32]) -> Result<Uplink> {
+        let mut w = w0.to_vec();
+        let mut opt = Optimizer::new(self.cfg.optimizer()?, w.len());
+        let mut loss_sum = 0.0f64;
+        for _ in 0..self.cfg.local_steps {
+            let b = dataset.batch(&self.shard, self.cursor, self.runtime.batch);
+            self.cursor = (self.cursor + self.runtime.batch) % self.shard.len().max(1);
+            let step = self.runtime.train_step(&self.cfg.arch, &w, &b.x, &b.y)?;
+            opt.apply(&mut w, &step.grads);
+            loss_sum += step.loss as f64;
+        }
+        // FedAvg delta: subtracting the average of these from w_t lands the
+        // PS exactly on the client-average when compression is lossless.
+        // Sanitize non-finite entries (a locally diverged model must not
+        // poison the codec or the aggregate — the run degrades gracefully
+        // and the divergence shows up in the recorded metrics).
+        let update: Vec<f32> = w0
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| {
+                let u = a - b;
+                if u.is_finite() {
+                    u
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let augmented = match &self.memory {
+            Some(mem) => mem.add_back(&update),
+            None => update,
+        };
+        let out = self.compressor.compress(&augmented, &self.spec)?;
+        if let Some(mem) = &mut self.memory {
+            mem.update(&augmented, &out.reconstructed);
+        }
+        Ok(Uplink {
+            client_id: self.id,
+            round,
+            payload: out.payload,
+            report: out.report,
+            train_loss: loss_sum / self.cfg.local_steps.max(1) as f64,
+            error: None,
+        })
+    }
+
+    /// Thread body: serve rounds until shutdown.
+    pub fn run(mut self, dataset: &Dataset) {
+        while let Ok(msg) = self.rx.recv() {
+            match msg {
+                Downlink::Shutdown => break,
+                Downlink::Round { round, weights } => {
+                    let up = match self.round(dataset, round, &weights) {
+                        Ok(u) => u,
+                        Err(e) => Uplink {
+                            client_id: self.id,
+                            round,
+                            payload: Vec::new(),
+                            report: Default::default(),
+                            train_loss: f64::NAN,
+                            error: Some(format!("{e:#}")),
+                        },
+                    };
+                    if self.tx.send(up).is_err() {
+                        break; // server gone
+                    }
+                }
+            }
+        }
+    }
+}

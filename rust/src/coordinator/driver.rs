@@ -1,0 +1,170 @@
+//! The experiment driver: wires PS + client threads + runtime + metrics.
+//!
+//! Server side of Algorithm 1: broadcast w_t, collect every client's payload
+//! bytes, decode them (the PS holds its own decoder instance of the same
+//! scheme — nothing but bytes crosses the channel), aggregate per eq. (7),
+//! step the global model, evaluate, record.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::BlockCodec;
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::metrics::{Recorder, Row};
+use crate::quantizer::QuantizerTables;
+use crate::runtime::RuntimeHandle;
+
+use super::client::ClientWorker;
+use super::messages::{Downlink, Uplink};
+
+/// Summary of one experiment run.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub series: String,
+    pub final_train_loss: f64,
+    pub final_test_loss: f64,
+    pub final_test_acc: f64,
+    /// ideal uplink bits per client per round (eq. 14–17 accounting)
+    pub bits_per_round: f64,
+    pub rounds: usize,
+}
+
+/// Evaluate the global model on `n` test batches.
+fn evaluate(
+    runtime: &RuntimeHandle,
+    arch: &str,
+    w: &[f32],
+    dataset: &Dataset,
+    n: usize,
+) -> Result<(f64, f64)> {
+    let batches = dataset.test_batches(runtime.batch);
+    if batches.is_empty() {
+        bail!("test set smaller than one batch");
+    }
+    let take = n.min(batches.len());
+    let mut loss = 0.0;
+    let mut acc = 0.0;
+    for b in &batches[..take] {
+        let (l, a) = runtime.eval(arch, w, &b.x, &b.y)?;
+        loss += l as f64;
+        acc += a as f64;
+    }
+    Ok((loss / take as f64, acc / take as f64))
+}
+
+/// Run one (scheme, budget, arch) experiment; rows land in `recorder` under
+/// `series`. The same `runtime` handle (and its artifact set) is shared
+/// across runs — experiments differ only in L3 configuration.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    runtime: &RuntimeHandle,
+    dataset: &Dataset,
+    series: &str,
+    recorder: &mut Recorder,
+) -> Result<RunOutput> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = crate::train::Manifest::load(&dir)?;
+    let spec = manifest.model(&cfg.arch)?.clone();
+    let d = spec.d();
+    let mut w = manifest.load_init(&dir, &cfg.arch)?;
+
+    let tables = Arc::new(QuantizerTables::new());
+    let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
+    // the PS's decoder — same scheme construction as the clients'
+    let server_comp = cfg.build_compressor(d, codec.clone(), tables.clone());
+
+    let (up_tx, up_rx) = channel::<Uplink>();
+    let mut down_txs = Vec::with_capacity(cfg.n_clients);
+
+    let mut output = None;
+    std::thread::scope(|scope| -> Result<()> {
+        // spawn clients
+        for id in 0..cfg.n_clients {
+            let (dtx, drx) = channel::<Downlink>();
+            down_txs.push(dtx);
+            let shard = match cfg.dirichlet_alpha {
+                Some(alpha) => dataset.client_shard_dirichlet(id, cfg.n_clients, alpha),
+                None => dataset.client_shard(id, cfg.n_clients),
+            };
+            let worker = ClientWorker::new(
+                id,
+                cfg.clone(),
+                spec.clone(),
+                shard,
+                runtime.clone(),
+                cfg.build_compressor(d, codec.clone(), tables.clone()),
+                drx,
+                up_tx.clone(),
+            );
+            scope.spawn(move || worker.run(dataset));
+        }
+
+        let mut bits_per_round = 0.0f64;
+        let mut last = (f64::NAN, f64::NAN, f64::NAN); // train_loss, test_loss, test_acc
+        let mut sched_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9d_c3);
+        let n_participants =
+            ((cfg.participation * cfg.n_clients as f64).ceil() as usize).clamp(1, cfg.n_clients);
+        for round in 0..cfg.rounds {
+            let w_arc = Arc::new(w.clone());
+            // client scheduling: sample participants without replacement
+            let mut order: Vec<usize> = (0..cfg.n_clients).collect();
+            sched_rng.shuffle(&mut order);
+            let participants = &order[..n_participants];
+            for &id in participants {
+                down_txs[id]
+                    .send(Downlink::Round { round, weights: w_arc.clone() })
+                    .map_err(|_| anyhow::anyhow!("client thread died"))?;
+            }
+            // collect participating uplinks for this round
+            let mut agg = vec![0.0f32; d];
+            let mut train_loss = 0.0f64;
+            let mut round_bits = 0.0f64;
+            for _ in 0..n_participants {
+                let up = up_rx.recv().context("uplink channel closed")?;
+                if let Some(e) = up.error {
+                    bail!("client {} failed in round {}: {e}", up.client_id, up.round);
+                }
+                let decoded = server_comp.decompress(&up.payload, &spec)?;
+                for (a, x) in agg.iter_mut().zip(&decoded) {
+                    *a += x;
+                }
+                train_loss += up.train_loss;
+                round_bits += up.report.ideal_total_bits();
+            }
+            // eq. (7): average the reconstructed updates, subtract
+            let scale = 1.0 / n_participants as f32;
+            for (wi, a) in w.iter_mut().zip(&agg) {
+                *wi -= scale * a;
+            }
+            bits_per_round = round_bits / n_participants as f64;
+            let (test_loss, test_acc) =
+                evaluate(runtime, &cfg.arch, &w, dataset, cfg.eval_batches)?;
+            let train_loss = train_loss / n_participants as f64;
+            last = (train_loss, test_loss, test_acc);
+            recorder.push(Row {
+                series: series.to_string(),
+                round,
+                train_loss,
+                test_loss,
+                test_acc,
+                bits_up: bits_per_round,
+            });
+        }
+        for dtx in &down_txs {
+            let _ = dtx.send(Downlink::Shutdown);
+        }
+        output = Some(RunOutput {
+            series: series.to_string(),
+            final_train_loss: last.0,
+            final_test_loss: last.1,
+            final_test_acc: last.2,
+            bits_per_round,
+            rounds: cfg.rounds,
+        });
+        Ok(())
+    })?;
+    Ok(output.expect("run completed"))
+}

@@ -1,0 +1,98 @@
+//! Error-feedback memory (paper Sec. IV-B, after Stich et al. [10]).
+//!
+//! Each client keeps the residual between what it wanted to send and what
+//! the compressor actually delivered, and adds it back before the next
+//! compression. The paper notes two FL-specific hazards — memory
+//! accumulation ("memory explosion") and divergent local optima — and
+//! mitigates with a tuned weight; `decay` implements that knob
+//! (1.0 = full feedback, 0.0 = off).
+
+/// Per-client error-feedback state.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    residual: Vec<f32>,
+    /// feedback weight in [0, 1]
+    pub decay: f32,
+}
+
+impl Memory {
+    pub fn new(d: usize, decay: f64) -> Memory {
+        Memory { residual: vec![0.0; d], decay: decay as f32 }
+    }
+
+    /// Augment this round's update with the carried residual.
+    pub fn add_back(&self, update: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(update.len(), self.residual.len());
+        update
+            .iter()
+            .zip(&self.residual)
+            .map(|(u, r)| u + self.decay * r)
+            .collect()
+    }
+
+    /// Record what was actually transmitted: residual = augmented − sent.
+    pub fn update(&mut self, augmented: &[f32], sent: &[f32]) {
+        debug_assert_eq!(augmented.len(), sent.len());
+        for i in 0..self.residual.len() {
+            self.residual[i] = augmented[i] - sent[i];
+        }
+    }
+
+    /// L2 norm of the carried residual (the paper's accumulation hazard —
+    /// exposed so tests/benches can watch for explosion).
+    pub fn residual_norm(&self) -> f64 {
+        self.residual.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_augmented_equals_sent_plus_residual() {
+        crate::util::prop::prop_check("memory conservation", 40, |g| {
+            let d = g.usize_in(1, 500);
+            let mut mem = Memory::new(d, 1.0);
+            let update = g.vec_f32(d..d + 1, -1.0, 1.0);
+            let aug = mem.add_back(&update);
+            // fake compressor: keep half the entries
+            let sent: Vec<f32> =
+                aug.iter().enumerate().map(|(i, &x)| if i % 2 == 0 { x } else { 0.0 }).collect();
+            mem.update(&aug, &sent);
+            let aug2 = mem.add_back(&vec![0.0; d]);
+            for i in 0..d {
+                // residual + sent == augmented
+                assert!((aug2[i] + sent[i] - aug[i]).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_decay_disables_feedback() {
+        let mut mem = Memory::new(3, 0.0);
+        mem.update(&[1.0, 2.0, 3.0], &[0.0, 0.0, 0.0]);
+        assert_eq!(mem.add_back(&[5.0, 5.0, 5.0]), vec![5.0, 5.0, 5.0]);
+        assert!(mem.residual_norm() > 0.0); // residual tracked, just not fed back
+    }
+
+    #[test]
+    fn perfect_compression_keeps_residual_zero() {
+        let mut mem = Memory::new(4, 1.0);
+        let u = vec![0.5f32, -0.25, 0.0, 1.0];
+        let aug = mem.add_back(&u);
+        mem.update(&aug, &aug);
+        assert_eq!(mem.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn residual_feeds_next_round() {
+        let mut mem = Memory::new(2, 1.0);
+        // round 1: compressor drops everything
+        let aug1 = mem.add_back(&[1.0, -2.0]);
+        mem.update(&aug1, &[0.0, 0.0]);
+        // round 2: the lost signal reappears
+        let aug2 = mem.add_back(&[0.0, 0.0]);
+        assert_eq!(aug2, vec![1.0, -2.0]);
+    }
+}

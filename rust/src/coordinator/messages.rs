@@ -1,0 +1,58 @@
+//! Wire messages between the parameter server and clients.
+
+use std::sync::Arc;
+
+use crate::compress::RateReport;
+
+/// PS → client: the global model for round `round` (or shutdown).
+#[derive(Clone)]
+pub enum Downlink {
+    Round { round: usize, weights: Arc<Vec<f32>> },
+    Shutdown,
+}
+
+/// Client → PS: one compressed update.
+pub struct Uplink {
+    pub client_id: usize,
+    pub round: usize,
+    /// encoded bytes — the PS decodes these, nothing else crosses the wire
+    pub payload: Vec<u8>,
+    pub report: RateReport,
+    /// mean local training loss over this round's steps (diagnostics)
+    pub train_loss: f64,
+    /// error string if the client failed (PS aborts the run)
+    pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downlink_is_cheaply_cloneable() {
+        let w = Arc::new(vec![0.0f32; 1024]);
+        let d = Downlink::Round { round: 3, weights: w.clone() };
+        let d2 = d.clone();
+        // both clones share the same allocation
+        if let (Downlink::Round { weights: a, .. }, Downlink::Round { weights: b, .. }) = (&d, &d2)
+        {
+            assert!(Arc::ptr_eq(a, b));
+            assert_eq!(Arc::strong_count(&w), 3);
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn uplink_error_flag() {
+        let u = Uplink {
+            client_id: 0,
+            round: 0,
+            payload: vec![],
+            report: RateReport::default(),
+            train_loss: 0.0,
+            error: Some("boom".into()),
+        };
+        assert!(u.error.is_some());
+    }
+}

@@ -1,0 +1,19 @@
+//! The federated coordinator — the paper's Algorithm 1 as an L3 system.
+//!
+//! Topology: one parameter-server loop (the [`driver`]) + one OS thread per
+//! remote client ([`client::ClientWorker`]). The PS broadcasts the global
+//! model as an `Arc<Vec<f32>>` per round; clients train locally through the
+//! PJRT runtime service, compress their model delta (with optional
+//! error-feedback [`memory`]), and send honest payload bytes up a shared
+//! channel. The PS *decodes the bytes* (never peeks at the client's
+//! reconstruction), aggregates (eq. 7), steps the global model, and
+//! evaluates.
+
+pub mod client;
+pub mod driver;
+pub mod memory;
+pub mod messages;
+
+pub use driver::{run_experiment, RunOutput};
+pub use memory::Memory;
+pub use messages::{Downlink, Uplink};

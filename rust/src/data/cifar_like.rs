@@ -1,0 +1,322 @@
+//! Synthetic CIFAR-like dataset: 10 classes of IMG×IMG×3 images.
+//!
+//! Each class k gets a smooth random prototype field (a sum of random 2-D
+//! sinusoids per channel — structured, spatially correlated, like natural
+//! image classes). A sample is its class prototype under a random ±1-pixel
+//! cyclic shift (spatial nuisance a conv net must marginalize), scaled by a
+//! random contrast, plus white noise. Deterministic in (seed, index).
+//!
+//! The FL split follows the paper (Sec. II-D): the training set is randomly
+//! split across clients, i.i.d. (same distribution per client).
+
+use crate::util::rng::Rng;
+
+/// One minibatch in the layout the HLO train-step expects:
+/// x: `[batch * img * img * 3]` f32 (NHWC flattened), y: `[batch]` i32.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetConfig {
+    pub img: usize,
+    pub num_classes: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// white-noise std on top of the prototype
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            img: 12,
+            num_classes: 10,
+            train_per_class: 200,
+            test_per_class: 40,
+            noise: 1.1,
+            seed: 2022,
+        }
+    }
+}
+
+/// Generated dataset with train/test splits.
+pub struct Dataset {
+    pub cfg: DatasetConfig,
+    prototypes: Vec<Vec<f32>>, // [class][img*img*3]
+    pub train: Vec<(u32, u8)>, // (sample id, class)
+    pub test: Vec<(u32, u8)>,
+}
+
+impl Dataset {
+    pub fn generate(cfg: DatasetConfig) -> Dataset {
+        let root = Rng::new(cfg.seed);
+        let n = cfg.img * cfg.img * 3;
+        let mut prototypes = Vec::with_capacity(cfg.num_classes);
+        for k in 0..cfg.num_classes {
+            let mut rng = root.stream(1, k as u64);
+            let mut proto = vec![0.0f32; n];
+            // sum of random sinusoid fields per channel
+            for c in 0..3 {
+                for _ in 0..4 {
+                    let fx = 0.5 + 2.5 * rng.f64();
+                    let fy = 0.5 + 2.5 * rng.f64();
+                    let px = rng.f64() * std::f64::consts::TAU;
+                    let py = rng.f64() * std::f64::consts::TAU;
+                    let amp = 0.4 + 0.6 * rng.f64();
+                    for yy in 0..cfg.img {
+                        for xx in 0..cfg.img {
+                            let v = amp
+                                * (fx * xx as f64 / cfg.img as f64 * std::f64::consts::TAU + px)
+                                    .sin()
+                                * (fy * yy as f64 / cfg.img as f64 * std::f64::consts::TAU + py)
+                                    .cos();
+                            proto[(yy * cfg.img + xx) * 3 + c] += v as f32;
+                        }
+                    }
+                }
+            }
+            prototypes.push(proto);
+        }
+        // index tables; ids are globally unique so (seed, id) determines a sample
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for k in 0..cfg.num_classes {
+            for i in 0..cfg.train_per_class {
+                train.push(((k * cfg.train_per_class + i) as u32, k as u8));
+            }
+            for i in 0..cfg.test_per_class {
+                test.push(((1_000_000 + k * cfg.test_per_class + i) as u32, k as u8));
+            }
+        }
+        // shuffle train order once (the random split across clients)
+        let mut rng = root.stream(2, 0);
+        rng.shuffle(&mut train);
+        Dataset { cfg, prototypes, train, test }
+    }
+
+    pub fn img_elems(&self) -> usize {
+        self.cfg.img * self.cfg.img * 3
+    }
+
+    /// Materialize one sample deterministically.
+    pub fn sample(&self, id: u32, class: u8) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed).stream(3, id as u64);
+        let proto = &self.prototypes[class as usize];
+        let (dx, dy) = (rng.below(3) as isize - 1, rng.below(3) as isize - 1);
+        let contrast = 0.8 + 0.4 * rng.f32();
+        let img = cfg.img as isize;
+        let mut out = vec![0.0f32; self.img_elems()];
+        for yy in 0..img {
+            for xx in 0..img {
+                let sy = (yy + dy).rem_euclid(img) as usize;
+                let sx = (xx + dx).rem_euclid(img) as usize;
+                for c in 0..3 {
+                    let v = proto[(sy * cfg.img + sx) * 3 + c] * contrast
+                        + cfg.noise * rng.normal() as f32;
+                    out[((yy as usize) * cfg.img + xx as usize) * 3 + c] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// i.i.d. split of the (shuffled) training set across `n` clients.
+    pub fn client_shard(&self, client: usize, n_clients: usize) -> Vec<(u32, u8)> {
+        self.train
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_clients == client)
+            .map(|(_, &s)| s)
+            .collect()
+    }
+
+    /// Non-i.i.d. split: per-class Dirichlet(alpha) allocation across
+    /// clients (the standard FL heterogeneity protocol; paper Sec. IV-B
+    /// notes M22 "could be adapted ... where the local datasets are
+    /// heterogeneous" — this is that extension). Small alpha ⇒ each class
+    /// concentrates on few clients; alpha → ∞ recovers i.i.d.
+    pub fn client_shard_dirichlet(
+        &self,
+        client: usize,
+        n_clients: usize,
+        alpha: f64,
+    ) -> Vec<(u32, u8)> {
+        assert!(alpha > 0.0 && client < n_clients);
+        let root = Rng::new(self.cfg.seed);
+        let mut shard = Vec::new();
+        for class in 0..self.cfg.num_classes {
+            // Dirichlet via normalized Gamma draws — same for every client
+            // (shared stream keyed by class), so shards partition exactly.
+            let mut rng = root.stream(4, class as u64);
+            let gammas: Vec<f64> = (0..n_clients).map(|_| rng.gamma(alpha).max(1e-12)).collect();
+            let total: f64 = gammas.iter().sum();
+            // cumulative boundaries over this class's samples
+            let samples: Vec<(u32, u8)> =
+                self.train.iter().filter(|e| e.1 == class as u8).copied().collect();
+            let n = samples.len();
+            let mut start = 0usize;
+            for (c, g) in gammas.iter().enumerate() {
+                let take = if c + 1 == n_clients {
+                    n - start
+                } else {
+                    ((g / total) * n as f64).round() as usize
+                };
+                let end = (start + take).min(n);
+                if c == client {
+                    shard.extend_from_slice(&samples[start..end]);
+                }
+                start = end;
+            }
+        }
+        shard
+    }
+
+    /// Class histogram of a shard (heterogeneity diagnostics).
+    pub fn class_histogram(&self, shard: &[(u32, u8)]) -> Vec<usize> {
+        let mut h = vec![0usize; self.cfg.num_classes];
+        for &(_, c) in shard {
+            h[c as usize] += 1;
+        }
+        h
+    }
+
+    /// Assemble a batch from an index list slice (wrapping).
+    pub fn batch(&self, entries: &[(u32, u8)], start: usize, batch: usize) -> Batch {
+        let mut x = Vec::with_capacity(batch * self.img_elems());
+        let mut y = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let (id, class) = entries[(start + i) % entries.len()];
+            x.extend_from_slice(&self.sample(id, class));
+            y.push(class as i32);
+        }
+        Batch { x, y, batch }
+    }
+
+    /// The full test set in batches.
+    pub fn test_batches(&self, batch: usize) -> Vec<Batch> {
+        self.test.chunks(batch).filter(|c| c.len() == batch).map(|c| self.batch(c, 0, batch)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::generate(DatasetConfig {
+            train_per_class: 20,
+            test_per_class: 5,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.sample(3, 1), b.sample(3, 1));
+        assert_eq!(a.train, b.train);
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = tiny();
+        assert_eq!(d.train.len(), 200);
+        assert_eq!(d.test.len(), 50);
+        let b = d.batch(&d.train, 0, 8);
+        assert_eq!(b.x.len(), 8 * 12 * 12 * 3);
+        assert_eq!(b.y.len(), 8);
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // same-class samples must be closer (L2) than cross-class on average
+        let d = tiny();
+        let a1 = d.sample(1, 0);
+        let a2 = d.sample(2, 0);
+        let b1 = d.sample(21, 1);
+        let dist = |u: &[f32], v: &[f32]| -> f64 {
+            u.iter().zip(v).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        assert!(dist(&a1, &a2) < dist(&a1, &b1), "intra {} inter {}", dist(&a1, &a2), dist(&a1, &b1));
+    }
+
+    #[test]
+    fn client_shards_partition() {
+        let d = tiny();
+        let s0 = d.client_shard(0, 2);
+        let s1 = d.client_shard(1, 2);
+        assert_eq!(s0.len() + s1.len(), d.train.len());
+        // no overlap
+        let ids0: std::collections::BTreeSet<u32> = s0.iter().map(|e| e.0).collect();
+        assert!(s1.iter().all(|e| !ids0.contains(&e.0)));
+        // both shards see all classes (i.i.d. split)
+        let classes: std::collections::BTreeSet<u8> = s0.iter().map(|e| e.1).collect();
+        assert_eq!(classes.len(), 10);
+    }
+
+    #[test]
+    fn batch_wraps_around() {
+        let d = tiny();
+        let shard = d.client_shard(0, 2);
+        let b = d.batch(&shard, shard.len() - 2, 6);
+        assert_eq!(b.y.len(), 6);
+    }
+
+    #[test]
+    fn test_batches_cover_test_set() {
+        let d = tiny();
+        let tb = d.test_batches(10);
+        assert_eq!(tb.len(), 5);
+    }
+
+
+    #[test]
+    fn dirichlet_shards_partition_exactly() {
+        let d = tiny();
+        for alpha in [0.1, 1.0, 100.0] {
+            let shards: Vec<_> = (0..3).map(|c| d.client_shard_dirichlet(c, 3, alpha)).collect();
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, d.train.len(), "alpha={alpha}");
+            let mut ids: Vec<u32> = shards.iter().flatten().map(|e| e.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), d.train.len(), "overlap at alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_heterogeneity() {
+        let d = Dataset::generate(DatasetConfig {
+            train_per_class: 60,
+            test_per_class: 5,
+            ..Default::default()
+        });
+        // heterogeneity metric: mean abs deviation of class histogram from uniform
+        let spread = |alpha: f64| -> f64 {
+            let shard = d.client_shard_dirichlet(0, 2, alpha);
+            let h = d.class_histogram(&shard);
+            let mean = shard.len() as f64 / 10.0;
+            h.iter().map(|&c| (c as f64 - mean).abs()).sum::<f64>() / 10.0
+        };
+        assert!(spread(0.1) > spread(100.0), "low alpha must be more skewed");
+    }
+
+    #[test]
+    fn pixel_stats_reasonable() {
+        let d = tiny();
+        let s = d.sample(0, 0);
+        let mean: f32 = s.iter().sum::<f32>() / s.len() as f32;
+        let var: f32 = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / s.len() as f32;
+        assert!(mean.abs() < 1.0, "mean {mean}");
+        assert!(var > 0.05 && var < 20.0, "var {var}");
+    }
+}

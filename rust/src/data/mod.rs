@@ -1,0 +1,10 @@
+//! Data substrate: the synthetic CIFAR-10 stand-in and batching.
+//!
+//! DESIGN.md §Substitutions: no network access ⇒ no real CIFAR-10. The
+//! generator produces a 10-class image set whose *gradient statistics* under
+//! conv nets exercise the same code paths (long-tailed, leptokurtic layer
+//! gradients — verified in the Fig. 1 reproduction).
+
+pub mod cifar_like;
+
+pub use cifar_like::{Batch, Dataset, DatasetConfig};

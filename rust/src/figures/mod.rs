@@ -1,0 +1,335 @@
+//! Figure/table regeneration — one function per paper exhibit.
+//!
+//! Each returns CSV text (plus prints a short summary) so the CLI
+//! (`repro figN`), the benches, and EXPERIMENTS.md all share one
+//! implementation. Scale knobs (`FigScale`) let benches shrink rounds /
+//! dataset while keeping the paper's structure.
+
+use anyhow::Result;
+
+use crate::compress::topk::topk;
+use crate::config::{presets, ExperimentConfig, Scheme};
+use crate::coordinator::run_experiment;
+use crate::data::{Dataset, DatasetConfig};
+use crate::metrics::{per_bit_accuracy, PerBitInput, Recorder};
+use crate::quantizer::{design, Family};
+use crate::stats::fitting::{
+    fit_gaussian, fit_gennorm, fit_laplace, fit_weibull2, ks_statistic, mean_nll, Moments,
+};
+use crate::stats::histogram::Histogram;
+use crate::stats::{Distribution, GenNorm};
+use crate::runtime::RuntimeHandle;
+use crate::train::Manifest;
+
+/// Experiment scale: full (CLI default) vs smoke (benches/tests).
+#[derive(Debug, Clone, Copy)]
+pub struct FigScale {
+    pub rounds: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    pub local_steps: usize,
+    pub eval_batches: usize,
+    pub seeds: usize,
+}
+
+impl FigScale {
+    pub fn full() -> Self {
+        FigScale {
+            rounds: 30,
+            train_per_class: 200,
+            test_per_class: 40,
+            local_steps: 4,
+            eval_batches: 8,
+            seeds: 2,
+        }
+    }
+
+    pub fn smoke() -> Self {
+        FigScale {
+            rounds: 3,
+            train_per_class: 48,
+            test_per_class: 8,
+            local_steps: 2,
+            eval_batches: 2,
+            seeds: 1,
+        }
+    }
+
+    fn apply(&self, cfg: &mut ExperimentConfig) {
+        cfg.rounds = self.rounds;
+        cfg.local_steps = self.local_steps;
+        cfg.eval_batches = self.eval_batches;
+        cfg.dataset.train_per_class = self.train_per_class;
+        cfg.dataset.test_per_class = self.test_per_class;
+    }
+}
+
+/// Run one scheme, seed-averaged (the paper averages 5 inits; we default 2).
+fn run_averaged(
+    cfg: &ExperimentConfig,
+    runtime: &RuntimeHandle,
+    dataset: &Dataset,
+    series: &str,
+    seeds: usize,
+    rec: &mut Recorder,
+) -> Result<f64> {
+    let mut per_seed = Vec::new();
+    for s in 0..seeds {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed + s as u64 * 101;
+        let mut tmp = Recorder::new();
+        let out = run_experiment(&c, runtime, dataset, series, &mut tmp)?;
+        per_seed.push((tmp, out.final_test_acc));
+    }
+    // average the curves across seeds into the shared recorder
+    let n = per_seed.len();
+    let rounds = cfg.rounds;
+    for r in 0..rounds {
+        let rows: Vec<&crate::metrics::Row> =
+            per_seed.iter().map(|(t, _)| &t.rows[r]).collect();
+        rec.push(crate::metrics::Row {
+            series: series.to_string(),
+            round: r,
+            train_loss: rows.iter().map(|x| x.train_loss).sum::<f64>() / n as f64,
+            test_loss: rows.iter().map(|x| x.test_loss).sum::<f64>() / n as f64,
+            test_acc: rows.iter().map(|x| x.test_acc).sum::<f64>() / n as f64,
+            bits_up: rows.iter().map(|x| x.bits_up).sum::<f64>() / n as f64,
+        });
+    }
+    Ok(per_seed.iter().map(|(_, a)| a).sum::<f64>() / n as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Table I / Table II
+// ---------------------------------------------------------------------------
+
+/// Table I analogue: per-model parameter summary from the manifest.
+pub fn table1(manifest: &Manifest) -> String {
+    let mut s = String::from(
+        "Table I — model parameter summary (reproduction scale)\n\
+         architecture | tensors | total params | conv params | dense params\n",
+    );
+    for m in &manifest.models {
+        s.push_str(&format!(
+            "{:<12} | {:>7} | {:>12} | {:>11} | {:>12}\n",
+            m.arch,
+            m.tensors.len(),
+            m.total_params,
+            m.conv_params,
+            m.dense_params
+        ));
+    }
+    s
+}
+
+/// Table II analogue: training hyper-parameters.
+pub fn table2() -> String {
+    let mut s = String::from("Table II — training hyper-parameters\n");
+    for row in presets::table2_rows() {
+        for (k, v) in &row {
+            s.push_str(&format!("{k:<18}: {v}\n"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — gradient distribution fitting at two sparsification levels
+// ---------------------------------------------------------------------------
+
+/// Train the CNN briefly, grab a conv-layer gradient at iteration ~10, topK
+/// it at 90% / 40% retention, fit all four families, and emit histogram +
+/// fitted-pdf series (CSV) plus NLL/KS scores.
+pub fn fig1(runtime: &RuntimeHandle, scale: FigScale) -> Result<String> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let arch = "cnn_s";
+    let spec = manifest.model(arch)?;
+    let mut w = manifest.load_init(&dir, arch)?;
+    let ds = Dataset::generate(DatasetConfig {
+        train_per_class: scale.train_per_class,
+        test_per_class: scale.test_per_class,
+        ..Default::default()
+    });
+    // 10 plain SGD iterations (the paper: "CNN, layer 42, iteration 10")
+    let mut grads = vec![0.0f32; spec.d()];
+    for i in 0..10 {
+        let b = ds.batch(&ds.train, i * runtime.batch, runtime.batch);
+        let step = runtime.train_step(arch, &w, &b.x, &b.y)?;
+        for (wi, gi) in w.iter_mut().zip(&step.grads) {
+            *wi -= 0.01 * gi;
+        }
+        grads = step.grads;
+    }
+    // the large conv tensor = "layer 42" analogue
+    let conv = spec
+        .tensors
+        .iter()
+        .filter(|t| t.kind == crate::train::TensorKind::Conv)
+        .max_by_key(|t| t.size)
+        .expect("a conv tensor");
+    let layer = &grads[conv.offset..conv.offset + conv.size];
+
+    let mut csv = String::from(
+        "panel,x,empirical_density,gauss,laplace,gennorm,dweibull\n",
+    );
+    let mut summary = String::new();
+    for (panel, keep_frac) in [("keep90", 0.9), ("keep40", 0.4)] {
+        let k = ((keep_frac * layer.len() as f64) as usize).max(2);
+        let (sparse, _) = topk(layer, k);
+        let m = Moments::from_nonzeros(&sparse)?;
+        let gauss = fit_gaussian(&m);
+        let lap = fit_laplace(&m);
+        let gn = fit_gennorm(&m);
+        let wb = fit_weibull2(&m);
+        let hist = Histogram::spanning(&sparse, 61);
+        for b in 0..hist.bins() {
+            let x = hist.center(b);
+            csv.push_str(&format!(
+                "{panel},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}\n",
+                x,
+                hist.density(b),
+                gauss.pdf(x),
+                lap.pdf(x),
+                gn.pdf(x),
+                wb.pdf(x),
+            ));
+        }
+        summary.push_str(&format!(
+            "# {panel}: beta={:.3} c={:.3} | NLL g={:.3} l={:.3} gn={:.3} w={:.3} | KS g={:.3} l={:.3} gn={:.3} w={:.3}\n",
+            gn.beta,
+            wb.c,
+            mean_nll(&gauss, &sparse),
+            mean_nll(&lap, &sparse),
+            mean_nll(&gn, &sparse),
+            mean_nll(&wb, &sparse),
+            ks_statistic(&gauss, &sparse),
+            ks_statistic(&lap, &sparse),
+            ks_statistic(&gn, &sparse),
+            ks_statistic(&wb, &sparse),
+        ));
+    }
+    print!("{summary}");
+    Ok(csv + &summary)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — quantization centers/thresholds vs M (GenNorm)
+// ---------------------------------------------------------------------------
+
+/// Pure quantizer-design sweep: unit-variance GenNorm, M ∈ [0, 8], 8 levels
+/// (positive region shown, as in the paper).
+pub fn fig2() -> String {
+    let mut csv = String::from("m,kind,index,value\n");
+    let dist = GenNorm::standardized(1.0);
+    for mi in 0..=16 {
+        let m = mi as f64 * 0.5;
+        let q = design(&dist, m, 8);
+        for (i, c) in q.centers.iter().enumerate().skip(4) {
+            csv.push_str(&format!("{m},center,{},{:.6}\n", i - 4, c));
+        }
+        for (i, t) in q.thresholds.iter().enumerate().skip(4) {
+            csv.push_str(&format!("{m},threshold,{},{:.6}\n", i - 4, t));
+        }
+    }
+    csv
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — all schemes, accuracy vs round, at a budget
+// ---------------------------------------------------------------------------
+
+pub fn fig3(runtime: &RuntimeHandle, rq: u32, scale: FigScale) -> Result<(Recorder, String)> {
+    let mut rec = Recorder::new();
+    let mut cfg0 = ExperimentConfig::new("cnn_s", Scheme::TopKUniform, rq, scale.rounds);
+    scale.apply(&mut cfg0);
+    let dataset = Dataset::generate(cfg0.dataset);
+    let mut summary = format!("# Fig. 3 (R={rq}): final accuracy per scheme\n");
+    for scheme in presets::fig3_schemes(rq) {
+        let mut cfg = cfg0.clone();
+        cfg.scheme = scheme;
+        let label = scheme.label(rq);
+        let acc = run_averaged(&cfg, runtime, &dataset, &label, scale.seeds, &mut rec)?;
+        summary.push_str(&format!("#   {label:<24} acc={acc:.4}\n"));
+    }
+    print!("{summary}");
+    Ok((rec, summary))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — the effect of M (GenNorm, R = 2)
+// ---------------------------------------------------------------------------
+
+pub fn fig4(runtime: &RuntimeHandle, scale: FigScale) -> Result<(Recorder, String)> {
+    let mut rec = Recorder::new();
+    let mut cfg0 = ExperimentConfig::new("cnn_s", Scheme::TopKUniform, 2, scale.rounds);
+    scale.apply(&mut cfg0);
+    let dataset = Dataset::generate(cfg0.dataset);
+    let mut summary = String::from("# Fig. 4 (R=2): M sweep, GenNorm\n");
+    for m in presets::fig4_ms() {
+        let mut cfg = cfg0.clone();
+        cfg.scheme = Scheme::M22 { family: Family::GenNorm, m };
+        let label = format!("M={m}");
+        let acc = run_averaged(&cfg, runtime, &dataset, &label, scale.seeds, &mut rec)?;
+        summary.push_str(&format!("#   {label:<6} acc={acc:.4}\n"));
+    }
+    print!("{summary}");
+    Ok((rec, summary))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — other architectures
+// ---------------------------------------------------------------------------
+
+/// Left panel: ResNet, the three non-uniform schemes.
+pub fn fig5a(runtime: &RuntimeHandle, scale: FigScale) -> Result<(Recorder, String)> {
+    let mut rec = Recorder::new();
+    let mut cfg0 = ExperimentConfig::new("resnet_s", Scheme::TopKUniform, 2, scale.rounds);
+    scale.apply(&mut cfg0);
+    let dataset = Dataset::generate(cfg0.dataset);
+    let mut summary = String::from("# Fig. 5 left (ResNet): non-uniform schemes\n");
+    for scheme in presets::fig5a_schemes() {
+        let mut cfg = cfg0.clone();
+        cfg.scheme = scheme;
+        let label = scheme.label(cfg.rq);
+        let acc = run_averaged(&cfg, runtime, &dataset, &label, scale.seeds, &mut rec)?;
+        summary.push_str(&format!("#   {label:<24} acc={acc:.4}\n"));
+    }
+    print!("{summary}");
+    Ok((rec, summary))
+}
+
+/// Right panel: VGG, no-quantization vs M22 at four budgets; also reports
+/// the per-bit accuracy (eq. 9) of each budget against the uncompressed run.
+pub fn fig5b(runtime: &RuntimeHandle, scale: FigScale) -> Result<(Recorder, String)> {
+    let mut rec = Recorder::new();
+    let mut cfg0 = ExperimentConfig::new("vgg_s", Scheme::None, 4, scale.rounds);
+    scale.apply(&mut cfg0);
+    let dataset = Dataset::generate(cfg0.dataset);
+    let mut summary = String::from("# Fig. 5 right (VGG): no-quant vs M22 budgets\n");
+    let base_label = "no quantization";
+    let base_acc =
+        run_averaged(&cfg0, runtime, &dataset, base_label, scale.seeds, &mut rec)?;
+    let base_loss = rec.final_loss(base_label).unwrap();
+    summary.push_str(&format!("#   {base_label:<24} acc={base_acc:.4}\n"));
+    for rq in presets::fig5b_rates() {
+        let mut cfg = cfg0.clone();
+        cfg.rq = rq;
+        cfg.scheme = Scheme::M22 { family: Family::GenNorm, m: if rq >= 3 { 6.0 } else { 2.0 } };
+        let label = format!("M22 (R={rq})");
+        let acc = run_averaged(&cfg, runtime, &dataset, &label, scale.seeds, &mut rec)?;
+        let bits = rec.total_bits(&label) / cfg.rounds as f64;
+        let delta = per_bit_accuracy(&PerBitInput {
+            reference_final: base_loss,
+            compressed_final: rec.final_loss(&label).unwrap(),
+            bits_per_round: bits,
+            rounds: cfg.rounds,
+        });
+        summary.push_str(&format!(
+            "#   {label:<24} acc={acc:.4} per-bit Δ(T,R)={delta:+.3e}\n"
+        ));
+    }
+    print!("{summary}");
+    Ok((rec, summary))
+}

@@ -1,0 +1,25 @@
+//! # M22 — rate-distortion inspired gradient compression for federated learning
+//!
+//! A from-scratch reproduction of *"M22: A Communication-Efficient Algorithm
+//! for Federated Learning Inspired by Rate-Distortion"* (Liu, Rini,
+//! Salehkalaibar, Chen, 2023) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** Pallas kernels and **L2** JAX model graphs live in `python/compile`
+//!   and are AOT-lowered once to HLO text (`make artifacts`);
+//! * **L3** — this crate — owns everything on the request path: the federated
+//!   coordinator, the compression codecs, the quantizer designer, the PJRT
+//!   runtime that executes the artifacts, metrics, config, and the CLI.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod quantizer;
+pub mod runtime;
+pub mod stats;
+pub mod train;
+pub mod util;

@@ -1,0 +1,160 @@
+//! `repro` — the M22 reproduction launcher.
+//!
+//! Subcommands (see DESIGN.md per-experiment index):
+//!   table1 | table2                    paper tables
+//!   fig1 | fig2 | fig3 | fig4 | fig5a | fig5b   figure data (CSV)
+//!   train                              one configurable FL run
+//!   quantizer-table                    dump LBG designs for a shape grid
+//!   smoke                              runtime sanity (PJRT + artifacts)
+//!
+//! Common flags: `--out path.csv` (default "-" = stdout), `--full` for
+//! paper-scale runs (default is a faster reduced scale), `--rounds N`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use m22::config::{ExperimentConfig, Scheme};
+use m22::coordinator::run_experiment;
+use m22::data::Dataset;
+use m22::figures::{self, FigScale};
+use m22::metrics::Recorder;
+use m22::quantizer::design;
+use m22::stats::{GenNorm, Weibull2};
+use m22::train::Manifest;
+use m22::util::cli::Args;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn scale_from(args: &Args) -> Result<FigScale> {
+    let mut scale = if args.bool("full") { FigScale::full() } else { FigScale::smoke() };
+    scale.rounds = args.usize_or("rounds", scale.rounds)?;
+    scale.seeds = args.usize_or("seeds", scale.seeds)?;
+    scale.local_steps = args.usize_or("local-steps", scale.local_steps)?;
+    Ok(scale)
+}
+
+fn write_out(args: &Args, text: &str) -> Result<()> {
+    let out = args.str_or("out", "-");
+    if out == "-" {
+        print!("{text}");
+    } else {
+        if let Some(dir) = std::path::Path::new(&out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&out, text).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn runtime() -> Result<m22::runtime::RuntimeHandle> {
+    m22::runtime::spawn(artifacts_dir())
+        .context("starting PJRT runtime (run `make artifacts` first)")
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "table1" => {
+            let man = Manifest::load(&artifacts_dir())?;
+            write_out(&args, &figures::table1(&man))?;
+        }
+        "table2" => {
+            write_out(&args, &figures::table2())?;
+        }
+        "fig1" => {
+            let rt = runtime()?;
+            let csv = figures::fig1(&rt, scale_from(&args)?)?;
+            write_out(&args, &csv)?;
+        }
+        "fig2" => {
+            write_out(&args, &figures::fig2())?;
+        }
+        "fig3" => {
+            let rq = args.usize_or("rate", 1)? as u32;
+            if !(1..=4).contains(&rq) {
+                bail!("--rate must be 1..4");
+            }
+            let rt = runtime()?;
+            let (rec, summary) = figures::fig3(&rt, rq, scale_from(&args)?)?;
+            write_out(&args, &(rec.to_csv() + &summary))?;
+        }
+        "fig4" => {
+            let rt = runtime()?;
+            let (rec, summary) = figures::fig4(&rt, scale_from(&args)?)?;
+            write_out(&args, &(rec.to_csv() + &summary))?;
+        }
+        "fig5a" => {
+            let rt = runtime()?;
+            let (rec, summary) = figures::fig5a(&rt, scale_from(&args)?)?;
+            write_out(&args, &(rec.to_csv() + &summary))?;
+        }
+        "fig5b" => {
+            let rt = runtime()?;
+            let (rec, summary) = figures::fig5b(&rt, scale_from(&args)?)?;
+            write_out(&args, &(rec.to_csv() + &summary))?;
+        }
+        "train" => {
+            let arch = args.str_or("arch", "cnn_s");
+            let scheme =
+                Scheme::parse(&args.str_or("scheme", "m22-gennorm"), args.f64_or("m", 2.0)?)?;
+            let rq = args.usize_or("rate", 2)? as u32;
+            let scale = scale_from(&args)?;
+            let mut cfg = ExperimentConfig::new(&arch, scheme, rq, scale.rounds);
+            cfg.local_steps = scale.local_steps;
+            cfg.eval_batches = scale.eval_batches;
+            cfg.dataset.train_per_class = scale.train_per_class;
+            cfg.dataset.test_per_class = scale.test_per_class;
+            cfg.memory = args.bool("memory");
+            cfg.n_clients = args.usize_or("clients", 2)?;
+            cfg.keep_frac = args.f64_or("keep", 0.6)?;
+            eprintln!("config: {}", cfg.to_json());
+            let rt = runtime()?;
+            let dataset = Dataset::generate(cfg.dataset);
+            let mut rec = Recorder::new();
+            let label = cfg.scheme.label(cfg.rq);
+            let out = run_experiment(&cfg, &rt, &dataset, &label, &mut rec)?;
+            eprintln!(
+                "final: train_loss={:.4} test_loss={:.4} test_acc={:.4} bits/round={:.0}",
+                out.final_train_loss, out.final_test_loss, out.final_test_acc, out.bits_per_round
+            );
+            write_out(&args, &rec.to_csv())?;
+        }
+        "quantizer-table" => {
+            let levels = args.usize_or("levels", 8)?;
+            let m = args.f64_or("m", 2.0)?;
+            let mut s = String::from("family,shape,m,levels,centers\n");
+            for i in 4..=40 {
+                let shape = i as f64 * 0.05;
+                let qg = design(&GenNorm::standardized(shape), m, levels);
+                let qw = design(&Weibull2::standardized(shape), m, levels);
+                s.push_str(&format!("gennorm,{shape:.2},{m},{levels},{:?}\n", qg.centers));
+                s.push_str(&format!("weibull,{shape:.2},{m},{levels},{:?}\n", qw.centers));
+            }
+            write_out(&args, &s)?;
+        }
+        "smoke" => {
+            let rt = runtime()?;
+            let v = rt.smoke()?;
+            println!("smoke artifact => {v:?}");
+            anyhow::ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "wrong numerics");
+            println!("runtime OK ({} models)", Manifest::load(&artifacts_dir())?.models.len());
+        }
+        "" | "help" => {
+            println!(
+                "repro — M22 reproduction launcher\n\
+                 usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|quantizer-table|smoke> [flags]\n\
+                 flags: --out FILE  --full  --rounds N  --seeds N  --rate R  --arch A --scheme S --m M\n\
+                 see DESIGN.md for the per-experiment index"
+            );
+            return Ok(());
+        }
+        other => bail!("unknown command `{other}` (try `repro help`)"),
+    }
+    args.finish()
+}

@@ -1,0 +1,7 @@
+//! Metrics: the per-bit accuracy measure (paper eq. 9) and run recording.
+
+pub mod perbit;
+pub mod recorder;
+
+pub use perbit::{per_bit_accuracy, PerBitInput};
+pub use recorder::{Recorder, Row};

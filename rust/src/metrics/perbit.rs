@@ -1,0 +1,96 @@
+//! Per-bit accuracy Δ(T, R) — paper eq. (9).
+//!
+//!   Δ(T, R) = (L(w_T) − G_R(ŵ_T)) / (dR · T)
+//!
+//! the average improvement in final loss that one bit of uplink
+//! communication buys over the training horizon. We also expose the
+//! accuracy-flavored variant used when comparing curves (the paper plots
+//! accuracy, and "per-bit accuracy corresponds to the improvement in
+//! accuracy that a gradient compressed within R bits can provide").
+
+/// Inputs to the per-bit computation for one (scheme, budget) run.
+#[derive(Debug, Clone, Copy)]
+pub struct PerBitInput {
+    /// final metric of the *uncompressed* reference run (loss or accuracy)
+    pub reference_final: f64,
+    /// final metric of the compressed run
+    pub compressed_final: f64,
+    /// total uplink bits per client per round (dR)
+    pub bits_per_round: f64,
+    /// number of rounds T
+    pub rounds: usize,
+}
+
+/// Δ(T, R) per eq. (9): metric gap normalized by total bits spent.
+/// For loss metrics the gap is `reference − compressed` (smaller loss is
+/// better); for accuracy metrics pass accuracies and read the sign the
+/// same way (positive = compression cost).
+pub fn per_bit_accuracy(inp: &PerBitInput) -> f64 {
+    let total_bits = inp.bits_per_round * inp.rounds as f64;
+    if total_bits <= 0.0 {
+        return f64::NAN;
+    }
+    (inp.reference_final - inp.compressed_final) / total_bits
+}
+
+/// Bits-efficiency of a compressed run on its own: final metric per bit
+/// (used to rank schemes at matched budgets, where it orders identically
+/// to eq. (9) because reference and bits are shared).
+pub fn metric_per_bit(final_metric: f64, bits_per_round: f64, rounds: usize) -> f64 {
+    let total = bits_per_round * rounds as f64;
+    if total <= 0.0 {
+        f64::NAN
+    } else {
+        final_metric / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq9_basic_algebra() {
+        let inp = PerBitInput {
+            reference_final: 0.5,
+            compressed_final: 0.9, // compressed run ends with higher loss
+            bits_per_round: 1000.0,
+            rounds: 10,
+        };
+        let d = per_bit_accuracy(&inp);
+        assert!((d - (-0.4 / 10_000.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_bits_is_nan() {
+        let inp = PerBitInput {
+            reference_final: 1.0,
+            compressed_final: 1.0,
+            bits_per_round: 0.0,
+            rounds: 5,
+        };
+        assert!(per_bit_accuracy(&inp).is_nan());
+    }
+
+    #[test]
+    fn better_scheme_scores_higher_at_same_budget() {
+        let mk = |acc| PerBitInput {
+            reference_final: acc,
+            compressed_final: 0.0,
+            bits_per_round: 500.0,
+            rounds: 4,
+        };
+        // with shared reference/bits: higher compressed accuracy => higher Δ
+        let good = per_bit_accuracy(&mk(0.8));
+        let bad = per_bit_accuracy(&mk(0.6));
+        assert!(good > bad);
+        assert!(metric_per_bit(0.8, 500.0, 4) > metric_per_bit(0.6, 500.0, 4));
+    }
+
+    #[test]
+    fn scales_inversely_with_budget() {
+        let a = metric_per_bit(0.7, 1000.0, 10);
+        let b = metric_per_bit(0.7, 2000.0, 10);
+        assert!((a - 2.0 * b).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,182 @@
+//! Run recording: accuracy/loss curves per scheme → CSV / JSON series.
+//!
+//! Every figure bench produces a [`Recorder`] whose CSV output is the data
+//! behind the corresponding paper plot (EXPERIMENTS.md indexes them).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One measurement row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub series: String,
+    pub round: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// uplink bits spent this round (per client, ideal accounting)
+    pub bits_up: f64,
+}
+
+/// Accumulates rows across series (one series per scheme/config).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub rows: Vec<Row>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    pub fn series_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for r in &self.rows {
+            if !names.contains(&r.series) {
+                names.push(r.series.clone());
+            }
+        }
+        names
+    }
+
+    /// Final test accuracy of a series.
+    pub fn final_acc(&self, series: &str) -> Option<f64> {
+        self.rows.iter().rev().find(|r| r.series == series).map(|r| r.test_acc)
+    }
+
+    /// Final test loss of a series.
+    pub fn final_loss(&self, series: &str) -> Option<f64> {
+        self.rows.iter().rev().find(|r| r.series == series).map(|r| r.test_loss)
+    }
+
+    /// Accuracy trajectory of a series.
+    pub fn acc_curve(&self, series: &str) -> Vec<(usize, f64)> {
+        self.rows
+            .iter()
+            .filter(|r| r.series == series)
+            .map(|r| (r.round, r.test_acc))
+            .collect()
+    }
+
+    /// Total uplink bits a series spent.
+    pub fn total_bits(&self, series: &str) -> f64 {
+        self.rows.iter().filter(|r| r.series == series).map(|r| r.bits_up).sum()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("series,round,train_loss,test_loss,test_acc,bits_up\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.1}\n",
+                r.series, r.round, r.train_loss, r.test_loss, r.test_acc, r.bits_up
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("series", Json::from(r.series.as_str())),
+                        ("round", Json::from(r.round)),
+                        ("train_loss", Json::from(r.train_loss)),
+                        ("test_loss", Json::from(r.test_loss)),
+                        ("test_acc", Json::from(r.test_acc)),
+                        ("bits_up", Json::from(r.bits_up)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Write CSV to `path`, or stdout when `path` is "-".
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        if path == "-" {
+            print!("{}", self.to_csv());
+            return Ok(());
+        }
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(series: &str, round: usize, acc: f64) -> Row {
+        Row {
+            series: series.into(),
+            round,
+            train_loss: 1.0,
+            test_loss: 2.0 - acc,
+            test_acc: acc,
+            bits_up: 100.0,
+        }
+    }
+
+    #[test]
+    fn series_and_finals() {
+        let mut r = Recorder::new();
+        r.push(row("a", 0, 0.2));
+        r.push(row("b", 0, 0.3));
+        r.push(row("a", 1, 0.5));
+        assert_eq!(r.series_names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(r.final_acc("a"), Some(0.5));
+        assert_eq!(r.final_acc("b"), Some(0.3));
+        assert_eq!(r.final_acc("missing"), None);
+        assert_eq!(r.acc_curve("a"), vec![(0, 0.2), (1, 0.5)]);
+        assert_eq!(r.total_bits("a"), 200.0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut r = Recorder::new();
+        r.push(row("s", 0, 0.25));
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("series,round"));
+        assert!(lines[1].starts_with("s,0,"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Recorder::new();
+        r.push(row("s", 3, 0.4));
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("round").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn write_csv_to_file() {
+        let mut r = Recorder::new();
+        r.push(row("s", 0, 0.1));
+        let dir = std::env::temp_dir().join("m22_test_recorder");
+        let path = dir.join("x.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("s,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

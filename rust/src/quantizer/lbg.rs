@@ -1,0 +1,306 @@
+//! Scalar LBG / Lloyd–Max under M-weighted L2 distortion — paper eq. (13).
+//!
+//! For a symmetric source density f and weight w(g) = |g|^M, the optimal
+//! quantizer alternates
+//!
+//!   c_i  =  ∫_cell g^{M+1} f(g) dg / ∫_cell g^M f(g) dg      (13a)
+//!   t_i  =  (c_i + c_{i+1}) / 2                              (13b)
+//!
+//! Because every [`Distribution`] exposes closed-form partial weighted
+//! moments (incomplete-gamma identities — see stats::distributions), the
+//! centroid integrals are exact; no quadrature, no trouble with the Weibull
+//! c < 1 singularity at the origin.
+//!
+//! Symmetry: the source is symmetric and the weight is even, so the optimal
+//! even-level quantizer is symmetric with a threshold at 0. We design L/2
+//! positive levels on [0, ∞) and mirror.
+
+use crate::stats::Distribution;
+
+/// A designed scalar quantizer: `centers.len() == levels`,
+/// `thresholds.len() == levels - 1`, both strictly increasing, symmetric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantizer {
+    pub centers: Vec<f64>,
+    pub thresholds: Vec<f64>,
+    /// Distortion weight exponent the design used.
+    pub m: f64,
+}
+
+impl Quantizer {
+    /// Bin index of `x` (searchsorted semantics — matches the L1 kernel).
+    pub fn index_of(&self, x: f64) -> usize {
+        self.thresholds.iter().take_while(|&&t| x >= t).count()
+    }
+
+    /// Dequantized value of `x`.
+    pub fn reconstruct(&self, x: f64) -> f64 {
+        self.centers[self.index_of(x)]
+    }
+
+    /// Scale all centers/thresholds (undo unit-variance normalization).
+    pub fn scaled(&self, k: f64) -> Quantizer {
+        Quantizer {
+            centers: self.centers.iter().map(|c| c * k).collect(),
+            thresholds: self.thresholds.iter().map(|t| t * k).collect(),
+            m: self.m,
+        }
+    }
+
+    /// Padded f32 arrays for the fixed-16-level HLO codec artifact:
+    /// thresholds pad with +inf (never crossed), centers repeat the last.
+    pub fn padded_f32(&self, max_levels: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(self.centers.len() <= max_levels);
+        let mut t: Vec<f32> = self.thresholds.iter().map(|&x| x as f32).collect();
+        t.resize(max_levels - 1, f32::INFINITY);
+        let mut c: Vec<f32> = self.centers.iter().map(|&x| x as f32).collect();
+        let last = *c.last().expect("at least one center");
+        c.resize(max_levels, last);
+        (t, c)
+    }
+}
+
+/// Weighted centroid of the positive-side cell [a, b):
+/// ∫ g^{M+1} f / ∫ g^M f  (eq. 13a), exact via partial moments.
+fn centroid(dist: &dyn Distribution, m: f64, a: f64, b: f64) -> f64 {
+    let num = dist.partial_abs_moment(m + 1.0, a, b);
+    let den = dist.partial_abs_moment(m, a, b);
+    if den <= 0.0 || !num.is_finite() {
+        // empty cell: fall back to the midpoint (finite b) or just above a.
+        return if b.is_finite() { 0.5 * (a + b) } else { a * 1.5 + 1e-12 };
+    }
+    num / den
+}
+
+/// Design a symmetric `levels`-level quantizer for `dist` under weight
+/// |g|^M. `levels` must be an even power-of-two-free ≥ 2 (we only require
+/// even). Converges to |Δc| < `tol` or `max_iter` sweeps.
+pub fn design(dist: &dyn Distribution, m: f64, levels: usize) -> Quantizer {
+    assert!(levels >= 2 && levels % 2 == 0, "levels={levels} must be even >= 2");
+    let half = levels / 2;
+
+    // init: positive centers at evenly spaced |X| quantiles.
+    let mut c: Vec<f64> = (0..half)
+        .map(|i| {
+            let p = (i as f64 + 0.5) / half as f64; // (0,1) over |X|
+            dist.quantile(0.5 + 0.5 * p).max(1e-12)
+        })
+        .collect();
+    // guard degenerate inits (quantile collisions on tiny scales)
+    for i in 1..half {
+        if c[i] <= c[i - 1] {
+            c[i] = c[i - 1] * (1.0 + 1e-9) + 1e-12;
+        }
+    }
+
+    let tol = 1e-12;
+    for _ in 0..500 {
+        // thresholds between positive centers; cell 0 starts at 0 (the
+        // symmetric threshold), last cell extends to +inf.
+        let mut t: Vec<f64> = (1..half).map(|i| 0.5 * (c[i - 1] + c[i])).collect();
+        let mut moved: f64 = 0.0;
+        for i in 0..half {
+            let a = if i == 0 { 0.0 } else { t[i - 1] };
+            let b = if i == half - 1 { f64::INFINITY } else { t[i] };
+            let nc = centroid(dist, m, a, b);
+            moved = moved.max((nc - c[i]).abs());
+            c[i] = nc;
+        }
+        // keep ordering under pathological weights
+        for i in 1..half {
+            if c[i] <= c[i - 1] {
+                c[i] = c[i - 1] * (1.0 + 1e-9) + 1e-12;
+            }
+        }
+        t.clear();
+        if moved < tol {
+            break;
+        }
+    }
+
+    // mirror to the full line.
+    let mut centers: Vec<f64> = c.iter().rev().map(|x| -x).collect();
+    centers.extend(c.iter().copied());
+    let mut thresholds = Vec::with_capacity(levels - 1);
+    for i in 1..levels {
+        thresholds.push(0.5 * (centers[i - 1] + centers[i]));
+    }
+    Quantizer { centers, thresholds, m }
+}
+
+/// Expected weighted distortion  E[|X|^M (X - Q(X))²]  of a quantizer on a
+/// symmetric source (exact, via partial moments; ×2 for the negative side).
+pub fn expected_distortion(dist: &dyn Distribution, q: &Quantizer) -> f64 {
+    let half = q.centers.len() / 2;
+    let m = q.m;
+    let mut d = 0.0;
+    for i in 0..half {
+        let c = q.centers[half + i];
+        let a = if i == 0 { 0.0 } else { q.thresholds[half + i - 1] };
+        let b = if half + i < q.thresholds.len() {
+            q.thresholds[half + i]
+        } else {
+            f64::INFINITY
+        };
+        // ∫ g^M (g - c)² f = pm(M+2) - 2c·pm(M+1) + c²·pm(M)
+        d += dist.partial_abs_moment(m + 2.0, a, b)
+            - 2.0 * c * dist.partial_abs_moment(m + 1.0, a, b)
+            + c * c * dist.partial_abs_moment(m, a, b);
+    }
+    2.0 * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Gaussian, GenNorm, Weibull2};
+
+    #[test]
+    fn gaussian_lloyd_max_two_levels() {
+        // Classic result: optimal 1-bit quantizer for N(0,1) has centers
+        // ±sqrt(2/π) ≈ ±0.7979.
+        let q = design(&Gaussian::new(1.0), 0.0, 2);
+        assert_eq!(q.centers.len(), 2);
+        let expect = (2.0 / std::f64::consts::PI).sqrt();
+        assert!((q.centers[1] - expect).abs() < 1e-9, "{}", q.centers[1]);
+        assert!((q.centers[0] + expect).abs() < 1e-9);
+        assert_eq!(q.thresholds, vec![0.0]);
+    }
+
+    #[test]
+    fn gaussian_lloyd_max_four_levels() {
+        // Max (1960) 2-bit optimum for N(0,1): centers ±0.4528, ±1.510,
+        // threshold ±0.9816.
+        let q = design(&Gaussian::new(1.0), 0.0, 4);
+        assert!((q.centers[2] - 0.4528).abs() < 1e-3, "{:?}", q.centers);
+        assert!((q.centers[3] - 1.510).abs() < 2e-3);
+        assert!((q.thresholds[2] - 0.9816).abs() < 2e-3, "{:?}", q.thresholds);
+    }
+
+    #[test]
+    fn centers_sorted_thresholds_interleave() {
+        crate::util::prop::prop_check("lbg ordering invariants", 25, |g| {
+            let beta = g.f64_in(0.4, 3.0);
+            let m = *g.pick(&[0.0, 1.0, 2.0, 4.0, 9.0]);
+            let levels = *g.pick(&[2usize, 4, 8, 16]);
+            let d = GenNorm::standardized(beta);
+            let q = design(&d, m, levels);
+            assert_eq!(q.centers.len(), levels);
+            assert_eq!(q.thresholds.len(), levels - 1);
+            for i in 1..q.centers.len() {
+                assert!(q.centers[i] > q.centers[i - 1], "centers not sorted: {:?}", q.centers);
+            }
+            for i in 0..q.thresholds.len() {
+                assert!(q.centers[i] < q.thresholds[i] && q.thresholds[i] < q.centers[i + 1]);
+                // midpoint rule (13b)
+                let mid = 0.5 * (q.centers[i] + q.centers[i + 1]);
+                assert!((q.thresholds[i] - mid).abs() < 1e-9);
+            }
+            // symmetry
+            for i in 0..levels / 2 {
+                assert!((q.centers[i] + q.centers[levels - 1 - i]).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn larger_m_pushes_centers_outward() {
+        // Fig. 2 of the paper: growing M spreads the centers into the tail.
+        let d = GenNorm::standardized(1.0);
+        let q0 = design(&d, 0.0, 8);
+        let q3 = design(&d, 3.0, 8);
+        let q9 = design(&d, 9.0, 8);
+        // innermost positive center moves outward with M
+        assert!(q3.centers[4] > q0.centers[4]);
+        assert!(q9.centers[4] > q3.centers[4]);
+        // outermost too
+        assert!(q3.centers[7] > q0.centers[7]);
+        assert!(q9.centers[7] > q3.centers[7]);
+    }
+
+    #[test]
+    fn more_levels_reduce_distortion() {
+        let d = GenNorm::standardized(1.5);
+        let mut prev = f64::INFINITY;
+        for levels in [2usize, 4, 8, 16] {
+            let q = design(&d, 2.0, levels);
+            let dist = expected_distortion(&d, &q);
+            assert!(dist < prev, "levels={levels} dist={dist} prev={prev}");
+            assert!(dist >= 0.0);
+            prev = dist;
+        }
+    }
+
+    #[test]
+    fn design_minimizes_weighted_distortion_vs_perturbations() {
+        let d = Weibull2::standardized(0.8);
+        let q = design(&d, 2.0, 8);
+        let base = expected_distortion(&d, &q);
+        // random center jitter must not help
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..20 {
+            let mut qq = q.clone();
+            for c in qq.centers.iter_mut() {
+                *c += 0.02 * (rng.f64() - 0.5);
+            }
+            qq.centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for i in 0..qq.thresholds.len() {
+                qq.thresholds[i] = 0.5 * (qq.centers[i] + qq.centers[i + 1]);
+            }
+            assert!(expected_distortion(&d, &qq) >= base - 1e-9);
+        }
+    }
+
+    #[test]
+    fn index_and_reconstruct_agree() {
+        let d = GenNorm::standardized(1.2);
+        let q = design(&d, 1.0, 8);
+        for x in [-3.0, -0.7, -0.01, 0.0, 0.3, 1.9, 10.0] {
+            let i = q.index_of(x);
+            assert!(i < q.centers.len());
+            assert_eq!(q.reconstruct(x), q.centers[i]);
+            // nearest-center property under midpoint thresholds (ties at the
+            // symmetric threshold x = 0 may resolve to either side)
+            let best_dist = q
+                .centers
+                .iter()
+                .map(|c| (c - x).abs())
+                .fold(f64::INFINITY, f64::min);
+            assert!((q.reconstruct(x) - x).abs() <= best_dist + 1e-12);
+        }
+    }
+
+    #[test]
+    fn scaled_quantizer() {
+        let d = Gaussian::new(1.0);
+        let q = design(&d, 0.0, 4);
+        let q2 = q.scaled(2.5);
+        for i in 0..q.centers.len() {
+            assert!((q2.centers[i] - 2.5 * q.centers[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn padding_for_hlo_artifact() {
+        let d = Gaussian::new(1.0);
+        let q = design(&d, 0.0, 4);
+        let (t, c) = q.padded_f32(16);
+        assert_eq!(t.len(), 15);
+        assert_eq!(c.len(), 16);
+        assert!(t[3..].iter().all(|x| x.is_infinite()));
+        assert!(c[4..].iter().all(|&x| x == c[3]));
+    }
+
+    #[test]
+    fn m0_matches_unweighted_lloyd() {
+        // M = 0 must coincide with the classic (unweighted) Lloyd–Max —
+        // the TINYSCRIPT degenerate case the paper calls out.
+        let d = GenNorm::standardized(2.0);
+        let q = design(&d, 0.0, 4);
+        let g = Gaussian::new(1.0);
+        let qg = design(&g, 0.0, 4);
+        for i in 0..4 {
+            assert!((q.centers[i] - qg.centers[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Quantizer design under the M-magnitude-weighted L2 distortion
+//! (paper Sec. III-B/III-C): the LBG fixed-point iteration of eq. (13) and
+//! the pre-computed center tables the runtime looks up per (shape, M, rate).
+
+pub mod lbg;
+pub mod tables;
+
+pub use lbg::{design, expected_distortion, Quantizer};
+pub use tables::{Family, TableKey, QuantizerTables};

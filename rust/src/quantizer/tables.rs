@@ -1,0 +1,184 @@
+//! Pre-computed quantizer tables — the paper's Sec. V-B trick.
+//!
+//! "this is attained by pre-calculating the quantization centers for
+//!  different values of shape parameter β … at each iteration the gradient
+//!  vector is normalized to obtain a zero-mean unit-variance vector which is
+//!  then quantized using the pre-calculated quantizer."
+//!
+//! Designs are done once per (family, quantized shape, M, levels) on the
+//! *standardized* (unit-variance) distribution and cached; the per-layer
+//! codec path is then: fit shape → snap to grid → table lookup → scale by
+//! the layer's std. Cache is interior-mutable behind a lock so client
+//! worker threads share it.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::stats::{GenNorm, Weibull2};
+
+use super::lbg::{design, Quantizer};
+
+/// Gradient model family (paper Sec. III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    GenNorm,
+    Weibull,
+}
+
+impl Family {
+    pub fn label(self) -> &'static str {
+        match self {
+            Family::GenNorm => "G",
+            Family::Weibull => "W",
+        }
+    }
+}
+
+/// Shape-grid resolution: fits snap to multiples of this before lookup.
+pub const SHAPE_STEP: f64 = 0.05;
+/// M-grid resolution.
+pub const M_STEP: f64 = 0.25;
+
+/// Integer-quantized cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TableKey {
+    pub family: Family,
+    /// shape / SHAPE_STEP, rounded
+    pub shape_q: i32,
+    /// m / M_STEP, rounded
+    pub m_q: i32,
+    pub levels: usize,
+}
+
+impl TableKey {
+    pub fn new(family: Family, shape: f64, m: f64, levels: usize) -> Self {
+        TableKey {
+            family,
+            shape_q: (shape / SHAPE_STEP).round() as i32,
+            m_q: (m / M_STEP).round() as i32,
+            levels,
+        }
+    }
+
+    pub fn shape(&self) -> f64 {
+        self.shape_q as f64 * SHAPE_STEP
+    }
+
+    pub fn m(&self) -> f64 {
+        self.m_q as f64 * M_STEP
+    }
+}
+
+/// Thread-shared cache of standardized quantizer designs.
+#[derive(Debug, Default)]
+pub struct QuantizerTables {
+    cache: Mutex<HashMap<TableKey, Quantizer>>,
+}
+
+impl QuantizerTables {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Standardized (unit-variance) quantizer for the snapped key.
+    pub fn get(&self, family: Family, shape: f64, m: f64, levels: usize) -> Quantizer {
+        let key = TableKey::new(family, shape.max(SHAPE_STEP), m, levels);
+        if let Some(q) = self.cache.lock().unwrap().get(&key) {
+            return q.clone();
+        }
+        let q = match key.family {
+            Family::GenNorm => design(&GenNorm::standardized(key.shape()), key.m(), key.levels),
+            Family::Weibull => design(&Weibull2::standardized(key.shape()), key.m(), key.levels),
+        };
+        self.cache.lock().unwrap().insert(key, q.clone());
+        q
+    }
+
+    /// Pre-warm the grid the experiments sweep (done at startup so the
+    /// request path never designs).
+    pub fn prewarm(&self, family: Family, shapes: &[f64], ms: &[f64], levels_list: &[usize]) {
+        for &s in shapes {
+            for &m in ms {
+                for &l in levels_list {
+                    self.get(family, s, m, l);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapping_reuses_entries() {
+        let t = QuantizerTables::new();
+        let a = t.get(Family::GenNorm, 1.501, 2.0, 8);
+        let b = t.get(Family::GenNorm, 1.499, 2.0, 8); // snaps to same 1.5
+        assert_eq!(a, b);
+        assert_eq!(t.len(), 1);
+        let _c = t.get(Family::GenNorm, 1.56, 2.0, 8); // snaps to 1.55
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn families_are_distinct() {
+        let t = QuantizerTables::new();
+        let g = t.get(Family::GenNorm, 1.0, 0.0, 4);
+        let w = t.get(Family::Weibull, 1.0, 0.0, 4);
+        assert_ne!(g.centers, w.centers);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn standardized_designs_are_unit_scale() {
+        // centers of a unit-variance design live within a few sigma
+        let t = QuantizerTables::new();
+        let q = t.get(Family::GenNorm, 2.0, 0.0, 16);
+        assert!(q.centers.last().unwrap().abs() < 6.0);
+        assert!(q.centers.first().unwrap().abs() < 6.0);
+    }
+
+    #[test]
+    fn prewarm_counts() {
+        let t = QuantizerTables::new();
+        t.prewarm(Family::Weibull, &[0.6, 0.8, 1.0], &[0.0, 2.0], &[2, 8]);
+        assert_eq!(t.len(), 12);
+        // lookups after prewarm hit the cache (len unchanged)
+        t.get(Family::Weibull, 0.8, 2.0, 8);
+        assert_eq!(t.len(), 12);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let t = std::sync::Arc::new(QuantizerTables::new());
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                let shape = 0.8 + 0.1 * (i % 2) as f64;
+                t.get(Family::GenNorm, shape, 2.0, 8).centers.len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 8);
+        }
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        let k = TableKey::new(Family::GenNorm, 1.25, 3.0, 8);
+        assert!((k.shape() - 1.25).abs() < 1e-12);
+        assert!((k.m() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! The single-threaded PJRT engine: HLO text → compiled executables.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — jax ≥ 0.5
+//! emits 64-bit-instruction-id protos that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! All graphs were lowered with `return_tuple=True`, so outputs unpack with
+//! `to_tuple()`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::train::Manifest;
+
+/// Typed result of one federated train step.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+    pub acc: f32,
+}
+
+/// PJRT CPU engine holding every compiled artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    /// Load + compile every artifact the experiments need.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let mut exes = HashMap::new();
+        let mut names = vec![
+            "quantize_block".to_string(),
+            "moments_block".to_string(),
+            "distortion_block".to_string(),
+            "smoke".to_string(),
+        ];
+        for m in &manifest.models {
+            names.push(format!("train_step_{}", m.arch));
+            names.push(format!("eval_{}", m.arch));
+        }
+        for name in names {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(anyhow_xla)
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(anyhow_xla)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name, exe);
+        }
+        Ok(Engine { client, exes, manifest, dir: dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact and unpack its output tuple.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = match self.exes.get(name) {
+            Some(e) => e,
+            None => bail!("unknown artifact `{name}`"),
+        };
+        let out = exe.execute::<xla::Literal>(inputs).map_err(anyhow_xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        lit.to_tuple().map_err(anyhow_xla)
+    }
+
+    fn batch_literals(&self, x: &[f32], y: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        let b = self.manifest.batch as i64;
+        let img = self.manifest.img as i64;
+        if x.len() != (b * img * img * 3) as usize || y.len() != b as usize {
+            bail!("batch shape mismatch: x {} y {}", x.len(), y.len());
+        }
+        let xl = xla::Literal::vec1(x).reshape(&[b, img, img, 3]).map_err(anyhow_xla)?;
+        let yl = xla::Literal::vec1(y);
+        Ok((xl, yl))
+    }
+
+    /// (loss, grads, acc) = train_step_<arch>(w, x, y).
+    pub fn train_step(&self, arch: &str, w: &[f32], x: &[f32], y: &[i32]) -> Result<StepOut> {
+        let spec = self.manifest.model(arch)?;
+        if w.len() != spec.d() {
+            bail!("w len {} != d {}", w.len(), spec.d());
+        }
+        let (xl, yl) = self.batch_literals(x, y)?;
+        let out = self.run(&format!("train_step_{arch}"), &[xla::Literal::vec1(w), xl, yl])?;
+        if out.len() != 3 {
+            bail!("train_step returned {} outputs", out.len());
+        }
+        Ok(StepOut {
+            loss: out[0].to_vec::<f32>().map_err(anyhow_xla)?[0],
+            grads: out[1].to_vec::<f32>().map_err(anyhow_xla)?,
+            acc: out[2].to_vec::<f32>().map_err(anyhow_xla)?[0],
+        })
+    }
+
+    /// (loss, acc) = eval_<arch>(w, x, y).
+    pub fn eval(&self, arch: &str, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let (xl, yl) = self.batch_literals(x, y)?;
+        let out = self.run(&format!("eval_{arch}"), &[xla::Literal::vec1(w), xl, yl])?;
+        if out.len() != 2 {
+            bail!("eval returned {} outputs", out.len());
+        }
+        Ok((
+            out[0].to_vec::<f32>().map_err(anyhow_xla)?[0],
+            out[1].to_vec::<f32>().map_err(anyhow_xla)?[0],
+        ))
+    }
+
+    /// One fixed-size quantize block (the L1 kernel): g[QB], t[15], c[16].
+    pub fn quantize_block(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let qb = self.manifest.quant_block;
+        if g.len() != qb || thresholds.len() != 15 || centers.len() != 16 {
+            bail!("quantize_block shapes: g {} t {} c {}", g.len(), thresholds.len(), centers.len());
+        }
+        let out = self.run(
+            "quantize_block",
+            &[xla::Literal::vec1(g), xla::Literal::vec1(thresholds), xla::Literal::vec1(centers)],
+        )?;
+        Ok((
+            out[0].to_vec::<i32>().map_err(anyhow_xla)?,
+            out[1].to_vec::<f32>().map_err(anyhow_xla)?,
+        ))
+    }
+
+    /// One fixed-size moments block: 8 fused stats.
+    pub fn moments_block(&self, g: &[f32]) -> Result<[f32; 8]> {
+        let qb = self.manifest.quant_block;
+        if g.len() != qb {
+            bail!("moments_block wants {qb} elems, got {}", g.len());
+        }
+        let out = self.run("moments_block", &[xla::Literal::vec1(g)])?;
+        let v = out[0].to_vec::<f32>().map_err(anyhow_xla)?;
+        Ok(v.try_into().map_err(|_| anyhow::anyhow!("moments shape"))?)
+    }
+
+    /// Weighted distortion sum of one block pair.
+    pub fn distortion_block(&self, g: &[f32], ghat: &[f32], m: f32) -> Result<f32> {
+        let out = self.run(
+            "distortion_block",
+            &[xla::Literal::vec1(g), xla::Literal::vec1(ghat), xla::Literal::vec1(&[m])],
+        )?;
+        Ok(out[0].to_vec::<f32>().map_err(anyhow_xla)?[0])
+    }
+
+    /// The reference smoke computation: (x@y + 2) over f32[2,2].
+    pub fn smoke(&self) -> Result<Vec<f32>> {
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).map_err(anyhow_xla)?;
+        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).map_err(anyhow_xla)?;
+        let out = self.run("smoke", &[x, y])?;
+        out[0].to_vec::<f32>().map_err(anyhow_xla)
+    }
+}
+
+/// xla::Error doesn't implement std::error::Error compatibly with anyhow's
+/// blanket conversion under this edition mix — wrap by formatting.
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}

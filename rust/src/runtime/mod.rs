@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once, and
+//! serve executions to the coordinator.
+//!
+//! PJRT handles are not `Send`, so [`service::spawn`] runs a dedicated
+//! runtime thread that owns the [`engine::Engine`] (client + executables);
+//! client workers talk to it through a cloneable [`service::RuntimeHandle`],
+//! which also implements [`crate::compress::BlockCodec`] so the M22 codec
+//! path runs on the L1 Pallas kernels.
+
+pub mod engine;
+pub mod service;
+
+pub use engine::Engine;
+pub use service::{spawn, RuntimeHandle};

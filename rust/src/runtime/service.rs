@@ -1,0 +1,182 @@
+//! Runtime service: a dedicated thread owning the PJRT [`Engine`], serving
+//! executions to any number of client-worker threads over channels.
+//!
+//! PJRT wrappers hold raw pointers and are not `Send`; the service thread
+//! creates the engine itself and never lets handles escape — only plain
+//! `Vec<f32>`/`Vec<i32>` data crosses the channel. [`RuntimeHandle`] is the
+//! cloneable client side; it also implements [`BlockCodec`] (chunking and
+//! padding arbitrary-length slices into the fixed 64k artifact blocks), so
+//! the M22 compressor's moments/quantize inner loops execute on the AOT
+//! Pallas kernels.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compress::{BlockCodec, MAX_LEVELS};
+
+use super::engine::{Engine, StepOut};
+
+enum Request {
+    TrainStep { arch: String, w: Vec<f32>, x: Vec<f32>, y: Vec<i32>, reply: Sender<Result<StepOut>> },
+    Eval { arch: String, w: Vec<f32>, x: Vec<f32>, y: Vec<i32>, reply: Sender<Result<(f32, f32)>> },
+    Quantize { g: Vec<f32>, t: Vec<f32>, c: Vec<f32>, reply: Sender<Result<(Vec<i32>, Vec<f32>)>> },
+    Moments { g: Vec<f32>, reply: Sender<Result<[f32; 8]>> },
+    Distortion { g: Vec<f32>, h: Vec<f32>, m: f32, reply: Sender<Result<f32>> },
+    Smoke { reply: Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Cloneable client handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+    pub quant_block: usize,
+    pub batch: usize,
+    pub img: usize,
+}
+
+/// Spawn the runtime thread; blocks until artifacts are compiled (or fails).
+pub fn spawn(dir: PathBuf) -> Result<RuntimeHandle> {
+    let (tx, rx) = channel::<Request>();
+    let (ready_tx, ready_rx) = channel::<Result<(usize, usize, usize)>>();
+    std::thread::Builder::new()
+        .name("m22-runtime".into())
+        .spawn(move || {
+            let engine = match Engine::load(&dir) {
+                Ok(e) => {
+                    let meta = (e.manifest.quant_block, e.manifest.batch, e.manifest.img);
+                    let _ = ready_tx.send(Ok(meta));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::TrainStep { arch, w, x, y, reply } => {
+                        let _ = reply.send(engine.train_step(&arch, &w, &x, &y));
+                    }
+                    Request::Eval { arch, w, x, y, reply } => {
+                        let _ = reply.send(engine.eval(&arch, &w, &x, &y));
+                    }
+                    Request::Quantize { g, t, c, reply } => {
+                        let _ = reply.send(engine.quantize_block(&g, &t, &c));
+                    }
+                    Request::Moments { g, reply } => {
+                        let _ = reply.send(engine.moments_block(&g));
+                    }
+                    Request::Distortion { g, h, m, reply } => {
+                        let _ = reply.send(engine.distortion_block(&g, &h, m));
+                    }
+                    Request::Smoke { reply } => {
+                        let _ = reply.send(engine.smoke());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })
+        .context("spawning runtime thread")?;
+    let (quant_block, batch, img) =
+        ready_rx.recv().context("runtime thread died before ready")??;
+    Ok(RuntimeHandle { tx, quant_block, batch, img })
+}
+
+impl RuntimeHandle {
+    fn call<T>(&self, build: impl FnOnce(Sender<Result<T>>) -> Request) -> Result<T> {
+        let (reply, rx) = channel();
+        self.tx.send(build(reply)).map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime reply dropped"))?
+    }
+
+    pub fn train_step(&self, arch: &str, w: &[f32], x: &[f32], y: &[i32]) -> Result<StepOut> {
+        self.call(|reply| Request::TrainStep {
+            arch: arch.into(),
+            w: w.to_vec(),
+            x: x.to_vec(),
+            y: y.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn eval(&self, arch: &str, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.call(|reply| Request::Eval {
+            arch: arch.into(),
+            w: w.to_vec(),
+            x: x.to_vec(),
+            y: y.to_vec(),
+            reply,
+        })
+    }
+
+    pub fn distortion(&self, g: &[f32], h: &[f32], m: f32) -> Result<f32> {
+        // chunk into fixed blocks, pad the tail (zeros contribute nothing for
+        // M > 0 and (0-0)² = 0 regardless), and sum.
+        let qb = self.quant_block;
+        let mut total = 0.0f32;
+        for (gc, hc) in g.chunks(qb).zip(h.chunks(qb)) {
+            let (mut gb, mut hb) = (gc.to_vec(), hc.to_vec());
+            gb.resize(qb, 0.0);
+            hb.resize(qb, 0.0);
+            total += self.call(|reply| Request::Distortion { g: gb, h: hb, m, reply })?;
+        }
+        Ok(total)
+    }
+
+    pub fn smoke(&self) -> Result<Vec<f32>> {
+        self.call(|reply| Request::Smoke { reply })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+impl BlockCodec for RuntimeHandle {
+    fn quantize(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        debug_assert_eq!(thresholds.len(), MAX_LEVELS - 1);
+        debug_assert_eq!(centers.len(), MAX_LEVELS);
+        let qb = self.quant_block;
+        let mut idx = Vec::with_capacity(g.len());
+        let mut ghat = Vec::with_capacity(g.len());
+        for chunk in g.chunks(qb) {
+            let mut gb = chunk.to_vec();
+            gb.resize(qb, 0.0); // padded zeros pass through untouched
+            let (i, h) = self.call(|reply| Request::Quantize {
+                g: gb,
+                t: thresholds.to_vec(),
+                c: centers.to_vec(),
+                reply,
+            })?;
+            idx.extend(i[..chunk.len()].iter().map(|&v| v as u32));
+            ghat.extend_from_slice(&h[..chunk.len()]);
+        }
+        Ok((idx, ghat))
+    }
+
+    fn moments(&self, g: &[f32]) -> Result<[f64; 8]> {
+        let qb = self.quant_block;
+        let mut sums = [0.0f64; 8];
+        for chunk in g.chunks(qb) {
+            let mut gb = chunk.to_vec();
+            gb.resize(qb, 0.0); // zeros are skipped by the kernel
+            let s = self.call(|reply| Request::Moments { g: gb, reply })?;
+            for i in 0..8 {
+                if i == 5 {
+                    sums[5] = sums[5].max(s[5] as f64);
+                } else {
+                    sums[i] += s[i] as f64;
+                }
+            }
+        }
+        Ok(sums)
+    }
+}

@@ -1,0 +1,323 @@
+//! Moment-matching fitters for the gradient distributions (paper Sec. III-A).
+//!
+//! Statistics arrive either from the fused `moments_block` HLO artifact (the
+//! L1 kernel) or the pure-Rust fallback [`Moments::from_nonzeros`]; both
+//! produce the same eight sums. The 2-dof fits invert the absolute-moment
+//! ratio  ρ = (E|X|)² / E X²  which is strictly monotone in the shape
+//! parameter for both families:
+//!
+//!   GenNorm:   ρ(β) = Γ(2/β)² / (Γ(1/β) Γ(3/β))      (β→0: 0, β→∞: 3/4)
+//!   dWeibull:  ρ(c) = Γ(1+1/c)² / Γ(1+2/c)           (c→0: 0, c→∞: 1)
+//!
+//! so a bisection recovers the shape, and the first absolute moment then
+//! pins the scale.
+
+use anyhow::{bail, Result};
+
+use super::distributions::{Distribution, Gaussian, GenNorm, Laplace, Weibull2};
+use super::special::{bisect, ln_gamma};
+
+/// Mean absolute moments of the *nonzero* entries of a gradient block.
+/// Layout mirrors the L1 `moments_block` kernel (python/compile/kernels/moments.py).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    pub n: f64,
+    pub mean_abs: f64,
+    pub mean_sq: f64,
+    pub mean_sqrt: f64,
+    pub mean_cube: f64,
+    pub max_abs: f64,
+    pub mean_quad: f64,
+    pub mean_log: f64,
+}
+
+impl Moments {
+    /// Build from the kernel's raw sums: [nnz, Σ|g|, Σg², Σ√|g|, Σ|g|³, max, Σg⁴, Σln|g|].
+    pub fn from_sums(s: &[f64; 8]) -> Result<Moments> {
+        let n = s[0];
+        if n < 2.0 {
+            bail!("need >= 2 nonzero entries to fit, got {n}");
+        }
+        Ok(Moments {
+            n,
+            mean_abs: s[1] / n,
+            mean_sq: s[2] / n,
+            mean_sqrt: s[3] / n,
+            mean_cube: s[4] / n,
+            max_abs: s[5],
+            mean_quad: s[6] / n,
+            mean_log: s[7] / n,
+        })
+    }
+
+    /// Pure-Rust fallback path: accumulate the same sums over a slice,
+    /// skipping (sparsified) zeros.
+    pub fn from_nonzeros(g: &[f32]) -> Result<Moments> {
+        let mut s = [0.0f64; 8];
+        for &x in g {
+            let a = (x as f64).abs();
+            if a == 0.0 {
+                continue;
+            }
+            s[0] += 1.0;
+            s[1] += a;
+            s[2] += a * a;
+            s[3] += a.sqrt();
+            s[4] += a * a * a;
+            s[5] = s[5].max(a);
+            s[6] += a * a * a * a;
+            s[7] += a.ln();
+        }
+        Moments::from_sums(&s)
+    }
+
+    /// Merge partial sums from multiple blocks (layers span several 64k blocks).
+    pub fn merge_sums(parts: &[[f64; 8]]) -> [f64; 8] {
+        let mut out = [0.0f64; 8];
+        for p in parts {
+            for i in 0..8 {
+                if i == 5 {
+                    out[5] = out[5].max(p[5]);
+                } else {
+                    out[i] += p[i];
+                }
+            }
+        }
+        out
+    }
+
+    /// The shape-identifying moment ratio ρ ∈ (0, 1).
+    pub fn rho(&self) -> f64 {
+        self.mean_abs * self.mean_abs / self.mean_sq
+    }
+
+    /// Sample standard deviation of the (zero-mean) nonzero entries.
+    pub fn std(&self) -> f64 {
+        self.mean_sq.sqrt()
+    }
+}
+
+fn gennorm_rho(beta: f64) -> f64 {
+    (2.0 * ln_gamma(2.0 / beta) - ln_gamma(1.0 / beta) - ln_gamma(3.0 / beta)).exp()
+}
+
+fn weibull_rho(c: f64) -> f64 {
+    (2.0 * ln_gamma(1.0 + 1.0 / c) - ln_gamma(1.0 + 2.0 / c)).exp()
+}
+
+pub const GENNORM_BETA_RANGE: (f64, f64) = (0.15, 12.0);
+pub const WEIBULL_C_RANGE: (f64, f64) = (0.12, 20.0);
+
+/// Fit a GenNorm by moment matching. Falls back to the range edge when the
+/// empirical ratio leaves the representable interval (extremely heavy or
+/// uniform-like samples).
+pub fn fit_gennorm(m: &Moments) -> GenNorm {
+    let rho = m.rho();
+    let (lo, hi) = GENNORM_BETA_RANGE;
+    let beta = if rho <= gennorm_rho(lo) {
+        lo
+    } else if rho >= gennorm_rho(hi) {
+        hi
+    } else {
+        bisect(|b| gennorm_rho(b) - rho, lo, hi, 120)
+    };
+    // E|X| = s Γ(2/β)/Γ(1/β)  =>  s = mean_abs Γ(1/β)/Γ(2/β)
+    let s = m.mean_abs * (ln_gamma(1.0 / beta) - ln_gamma(2.0 / beta)).exp();
+    GenNorm::new(s.max(1e-30), beta)
+}
+
+/// Fit a two-sided Weibull by moment matching.
+pub fn fit_weibull2(m: &Moments) -> Weibull2 {
+    let rho = m.rho();
+    let (lo, hi) = WEIBULL_C_RANGE;
+    let c = if rho <= weibull_rho(lo) {
+        lo
+    } else if rho >= weibull_rho(hi) {
+        hi
+    } else {
+        bisect(|c| weibull_rho(c) - rho, lo, hi, 120)
+    };
+    // E|X| = s Γ(1 + 1/c)  =>  s = mean_abs / Γ(1 + 1/c)
+    let s = m.mean_abs / ln_gamma(1.0 + 1.0 / c).exp();
+    Weibull2::new(s.max(1e-30), c)
+}
+
+/// Fit the one-parameter baselines (Fig. 1).
+pub fn fit_gaussian(m: &Moments) -> Gaussian {
+    Gaussian::new(m.std().max(1e-30))
+}
+
+pub fn fit_laplace(m: &Moments) -> Laplace {
+    Laplace::new(m.mean_abs.max(1e-30))
+}
+
+/// Mean negative log-likelihood of `samples` under `d` (Fig. 1 fit score).
+/// Zero entries are skipped (they belong to the sparsification mass, not the
+/// fitted nonzero distribution).
+pub fn mean_nll(d: &dyn Distribution, samples: &[f32]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for &x in samples {
+        if x != 0.0 {
+            sum -= d.ln_pdf(x as f64);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Kolmogorov–Smirnov statistic of nonzero `samples` against `d`.
+pub fn ks_statistic(d: &dyn Distribution, samples: &[f32]) -> f64 {
+    let mut xs: Vec<f64> = samples.iter().filter(|x| **x != 0.0).map(|&x| x as f64).collect();
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mut ks: f64 = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        let f = d.cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        ks = ks.max((f - lo).abs()).max((f - hi).abs());
+    }
+    ks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn draw(d: &dyn Distribution, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng) as f32).collect()
+    }
+
+    #[test]
+    fn rho_is_monotone() {
+        let mut prev = 0.0;
+        for i in 1..60 {
+            let b = 0.2 + i as f64 * 0.2;
+            let r = gennorm_rho(b);
+            assert!(r > prev, "beta={b}");
+            prev = r;
+        }
+        let mut prev = 0.0;
+        for i in 1..60 {
+            let c = 0.15 + i as f64 * 0.3;
+            let r = weibull_rho(c);
+            assert!(r > prev, "c={c}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn rho_special_values() {
+        // Gaussian (beta=2): rho = 2/pi; Laplace (beta=1): rho = 1/2.
+        assert!((gennorm_rho(2.0) - 2.0 / std::f64::consts::PI).abs() < 1e-12);
+        assert!((gennorm_rho(1.0) - 0.5).abs() < 1e-12);
+        // Weibull c=1 (Laplace): Γ(2)²/Γ(3) = 1/2.
+        assert!((weibull_rho(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gennorm_fit_recovers_parameters() {
+        for (s, beta) in [(1.0, 0.7), (0.5, 1.0), (2.0, 1.6), (1.0, 2.0)] {
+            let truth = GenNorm::new(s, beta);
+            let xs = draw(&truth, 200_000, 7);
+            let m = Moments::from_nonzeros(&xs).unwrap();
+            let fit = fit_gennorm(&m);
+            assert!((fit.beta - beta).abs() < 0.08 * beta.max(1.0), "beta {} vs {beta}", fit.beta);
+            assert!((fit.s - s).abs() < 0.05 * s, "s {} vs {s}", fit.s);
+        }
+    }
+
+    #[test]
+    fn weibull_fit_recovers_parameters() {
+        for (s, c) in [(1.0, 0.5), (0.8, 0.9), (1.5, 1.2)] {
+            let truth = Weibull2::new(s, c);
+            let xs = draw(&truth, 200_000, 11);
+            let m = Moments::from_nonzeros(&xs).unwrap();
+            let fit = fit_weibull2(&m);
+            assert!((fit.c - c).abs() < 0.08 * c.max(1.0), "c {} vs {c}", fit.c);
+            assert!((fit.s - s).abs() < 0.06 * s, "s {} vs {s}", fit.s);
+        }
+    }
+
+    #[test]
+    fn one_parameter_fits() {
+        let g = Gaussian::new(1.7);
+        let xs = draw(&g, 100_000, 3);
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        assert!((fit_gaussian(&m).sigma - 1.7).abs() < 0.03);
+        let l = Laplace::new(0.6);
+        let xs = draw(&l, 100_000, 4);
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        assert!((fit_laplace(&m).b - 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn moments_skip_zeros_and_merge() {
+        let xs = vec![0.0f32, 1.0, -2.0, 0.0, 0.5];
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        assert_eq!(m.n, 3.0);
+        assert!((m.mean_abs - (1.0 + 2.0 + 0.5) / 3.0).abs() < 1e-12);
+        assert_eq!(m.max_abs, 2.0);
+
+        let a = [3.0, 3.5, 5.25, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let b = [1.0, 1.0, 1.0, 0.0, 0.0, 3.0, 0.0, 0.0];
+        let merged = Moments::merge_sums(&[a, b]);
+        assert_eq!(merged[0], 4.0);
+        assert_eq!(merged[5], 3.0); // max, not sum
+        assert_eq!(merged[1], 4.5);
+    }
+
+    #[test]
+    fn fit_requires_samples() {
+        assert!(Moments::from_nonzeros(&[0.0, 0.0]).is_err());
+        assert!(Moments::from_nonzeros(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn nll_prefers_true_family() {
+        // Samples from a heavy-tailed GenNorm should score better (lower NLL)
+        // under the fitted GenNorm than under a fitted Gaussian — the Fig. 1 claim.
+        let truth = GenNorm::new(1.0, 0.8);
+        let xs = draw(&truth, 50_000, 21);
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        let nll_gn = mean_nll(&fit_gennorm(&m), &xs);
+        let nll_ga = mean_nll(&fit_gaussian(&m), &xs);
+        assert!(nll_gn < nll_ga, "gennorm {nll_gn} vs gauss {nll_ga}");
+    }
+
+    #[test]
+    fn ks_small_for_true_family() {
+        let truth = Weibull2::new(1.0, 0.7);
+        let xs = draw(&truth, 20_000, 5);
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        let ks_w = ks_statistic(&fit_weibull2(&m), &xs);
+        let ks_g = ks_statistic(&fit_gaussian(&m), &xs);
+        assert!(ks_w < 0.02, "ks_w={ks_w}");
+        assert!(ks_w < ks_g);
+    }
+
+    #[test]
+    fn scale_equivariance_property() {
+        crate::util::prop::prop_check("fit scale equivariance", 20, |gen| {
+            let truth = GenNorm::new(1.0, gen.f64_in(0.6, 2.5));
+            let mut rng = gen.rng.clone();
+            let xs: Vec<f32> = (0..20_000).map(|_| truth.sample(&mut rng) as f32).collect();
+            let k = gen.f64_in(0.1, 10.0) as f32;
+            let scaled: Vec<f32> = xs.iter().map(|x| x * k).collect();
+            let f1 = fit_gennorm(&Moments::from_nonzeros(&xs).unwrap());
+            let f2 = fit_gennorm(&Moments::from_nonzeros(&scaled).unwrap());
+            assert!((f1.beta - f2.beta).abs() < 0.05 * f1.beta, "{} {}", f1.beta, f2.beta);
+            assert!((f2.s / f1.s - k as f64).abs() < 0.05 * k as f64);
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Fixed-bin histograms for the Fig. 1 distribution-fitting plots.
+
+/// Equal-width histogram over [lo, hi]; out-of-range samples clamp to the
+/// edge bins (gradient outliers stay visible instead of vanishing).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    /// Histogram spanning the (symmetric) data range of nonzero entries.
+    pub fn spanning(data: &[f32], bins: usize) -> Self {
+        let mut m = 0.0f64;
+        for &x in data {
+            m = m.max((x as f64).abs());
+        }
+        let m = if m == 0.0 { 1.0 } else { m * 1.001 };
+        let mut h = Histogram::new(-m, m, bins);
+        h.add_nonzeros(data);
+        h
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins() as f64
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let b = ((x - self.lo) / self.width()) as i64;
+        let b = b.clamp(0, self.bins() as i64 - 1) as usize;
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    /// Add nonzero entries only (sparsified gradients: the zero spike is the
+    /// topK mass, not part of the fitted distribution — Fig. 1 semantics).
+    pub fn add_nonzeros(&mut self, data: &[f32]) {
+        for &x in data {
+            if x != 0.0 {
+                self.add(x as f64);
+            }
+        }
+    }
+
+    pub fn center(&self, bin: usize) -> f64 {
+        self.lo + (bin as f64 + 0.5) * self.width()
+    }
+
+    /// Empirical density (integrates to 1 over the span).
+    pub fn density(&self, bin: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[bin] as f64 / (self.total as f64 * self.width())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_land_in_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.counts.iter().all(|&c| c == 1));
+        assert_eq!(h.total, 10);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.add(-100.0);
+        h.add(100.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut h = Histogram::new(-3.0, 3.0, 60);
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..10_000 {
+            h.add(rng.normal().clamp(-2.9, 2.9));
+        }
+        let integral: f64 = (0..h.bins()).map(|b| h.density(b) * h.width()).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonzeros_skips_zeros() {
+        let mut h = Histogram::new(-1.0, 1.0, 2);
+        h.add_nonzeros(&[0.0, 0.5, 0.0, -0.5]);
+        assert_eq!(h.total, 2);
+    }
+
+    #[test]
+    fn spanning_covers_data() {
+        let h = Histogram::spanning(&[0.1, -2.0, 1.5, 0.0], 8);
+        assert!(h.lo < -2.0 && h.hi > 2.0);
+        assert_eq!(h.total, 3);
+        let c: u64 = h.counts.iter().sum();
+        assert_eq!(c, 3);
+    }
+}

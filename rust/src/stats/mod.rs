@@ -1,0 +1,13 @@
+//! Statistical substrate: special functions, the paper's gradient
+//! distributions (Sec. III-A), moment-matching fitters, and histograms.
+//!
+//! The offline vendor set has no special-function crate, so everything here
+//! is from scratch and unit-tested against high-precision reference values.
+
+pub mod fitting;
+pub mod histogram;
+pub mod special;
+
+mod distributions;
+
+pub use distributions::{Distribution, GenNorm, Gaussian, Laplace, Weibull2};

@@ -1,0 +1,9 @@
+//! Training substrate on the Rust side: the model layout (parsed from the
+//! AOT manifest), and the flat-vector optimizers of Table II (SGD for the
+//! CNN, Adam for ResNet/VGG).
+
+pub mod optimizer;
+pub mod spec;
+
+pub use optimizer::{Optimizer, OptimizerKind};
+pub use spec::{Manifest, ModelSpec, TensorInfo, TensorKind};

@@ -1,0 +1,155 @@
+//! Flat-vector optimizers (paper Table II: SGD for the CNN, Adam for
+//! ResNet18/VGG16). Applied by the parameter server to the aggregated,
+//! decompressed update — and by clients during local steps.
+
+use anyhow::{bail, Result};
+
+/// Which optimizer + hyperparameters (Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    Sgd { lr: f64, momentum: f64 },
+    Adam { lr: f64, beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl OptimizerKind {
+    /// Table II presets.
+    pub fn preset(arch: &str) -> Result<OptimizerKind> {
+        Ok(match arch {
+            "cnn_s" => OptimizerKind::Sgd { lr: 0.01, momentum: 0.0 },
+            "resnet_s" => OptimizerKind::Adam { lr: 0.001, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            "vgg_s" => OptimizerKind::Adam { lr: 0.0005, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            _ => bail!("no optimizer preset for arch `{arch}`"),
+        })
+    }
+
+    pub fn lr(&self) -> f64 {
+        match self {
+            OptimizerKind::Sgd { lr, .. } | OptimizerKind::Adam { lr, .. } => *lr,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd { .. } => "SGD",
+            OptimizerKind::Adam { .. } => "Adam",
+        }
+    }
+}
+
+/// Optimizer state over a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    step: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, d: usize) -> Self {
+        let slots = match kind {
+            OptimizerKind::Sgd { momentum, .. } if momentum == 0.0 => 0,
+            OptimizerKind::Sgd { .. } => 1,
+            OptimizerKind::Adam { .. } => 2,
+        };
+        Optimizer {
+            kind,
+            step: 0,
+            m: if slots >= 1 { vec![0.0; d] } else { Vec::new() },
+            v: if slots >= 2 { vec![0.0; d] } else { Vec::new() },
+        }
+    }
+
+    /// In-place parameter update `w -= step(grad)`.
+    pub fn apply(&mut self, w: &mut [f32], grad: &[f32]) {
+        assert_eq!(w.len(), grad.len());
+        self.step += 1;
+        match self.kind {
+            OptimizerKind::Sgd { lr, momentum } => {
+                if momentum == 0.0 {
+                    for (wi, gi) in w.iter_mut().zip(grad) {
+                        *wi -= (lr as f32) * gi;
+                    }
+                } else {
+                    let mu = momentum as f32;
+                    for i in 0..w.len() {
+                        self.m[i] = mu * self.m[i] + grad[i];
+                        w[i] -= (lr as f32) * self.m[i];
+                    }
+                }
+            }
+            OptimizerKind::Adam { lr, beta1, beta2, eps } => {
+                let (b1, b2) = (beta1 as f32, beta2 as f32);
+                let bc1 = 1.0 - (beta1 as f32).powi(self.step as i32);
+                let bc2 = 1.0 - (beta2 as f32).powi(self.step as i32);
+                let alpha = lr as f32 * bc2.sqrt() / bc1;
+                for i in 0..w.len() {
+                    self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+                    self.v[i] = b2 * self.v[i] + (1.0 - b2) * grad[i] * grad[i];
+                    w[i] -= alpha * self.m[i] / (self.v[i].sqrt() + eps as f32);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_reference_step() {
+        let mut o = Optimizer::new(OptimizerKind::Sgd { lr: 0.1, momentum: 0.0 }, 3);
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        o.apply(&mut w, &[1.0, -1.0, 0.5]);
+        assert_eq!(w, vec![0.9, 2.1, 2.95]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut o = Optimizer::new(OptimizerKind::Sgd { lr: 1.0, momentum: 0.5 }, 1);
+        let mut w = vec![0.0f32];
+        o.apply(&mut w, &[1.0]); // m=1, w=-1
+        o.apply(&mut w, &[1.0]); // m=1.5, w=-2.5
+        assert!((w[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_reference_first_step() {
+        // First Adam step moves each coordinate by ~lr * sign(grad)
+        // (bias-corrected m/sqrt(v) = g/|g| at t=1, up to eps).
+        let kind = OptimizerKind::Adam { lr: 0.001, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut o = Optimizer::new(kind, 2);
+        let mut w = vec![1.0f32, 1.0];
+        o.apply(&mut w, &[0.5, -2.0]);
+        assert!((w[0] - (1.0 - 0.001)).abs() < 1e-5, "{}", w[0]);
+        assert!((w[1] - (1.0 + 0.001)).abs() < 1e-5, "{}", w[1]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize f(w) = 0.5 * ||w - target||²
+        let kind = OptimizerKind::Adam { lr: 0.05, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut o = Optimizer::new(kind, 2);
+        let target = [3.0f32, -2.0];
+        let mut w = vec![0.0f32, 0.0];
+        for _ in 0..800 {
+            let g: Vec<f32> = w.iter().zip(&target).map(|(wi, ti)| wi - ti).collect();
+            o.apply(&mut w, &g);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05 && (w[1] + 2.0).abs() < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn presets_match_table2() {
+        assert_eq!(
+            OptimizerKind::preset("cnn_s").unwrap(),
+            OptimizerKind::Sgd { lr: 0.01, momentum: 0.0 }
+        );
+        assert_eq!(OptimizerKind::preset("resnet_s").unwrap().lr(), 0.001);
+        assert_eq!(OptimizerKind::preset("vgg_s").unwrap().lr(), 0.0005);
+        assert!(OptimizerKind::preset("bogus").is_err());
+        assert_eq!(OptimizerKind::preset("cnn_s").unwrap().label(), "SGD");
+        assert_eq!(OptimizerKind::preset("vgg_s").unwrap().label(), "Adam");
+    }
+}

@@ -1,0 +1,231 @@
+//! Model layout: the flat-parameter table shared between L2 and L3.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! tensor (name / shape / kind / offset / size) of each architecture plus the
+//! codec geometry; this module parses it so the Rust compressors slice the
+//! flat gradient exactly the way the JAX graphs laid it out.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor role — the per-layer compressors treat conv/dense weights as
+/// fit-and-quantize targets and biases as raw-fp32 side payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    Conv,
+    Dense,
+    Bias,
+}
+
+impl TensorKind {
+    fn parse(s: &str) -> Result<TensorKind> {
+        Ok(match s {
+            "conv" => TensorKind::Conv,
+            "dense" => TensorKind::Dense,
+            "bias" => TensorKind::Bias,
+            _ => bail!("unknown tensor kind `{s}`"),
+        })
+    }
+}
+
+/// One tensor in the flat layout.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: TensorKind,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One architecture's layout + Table-I style summary.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub arch: String,
+    pub total_params: usize,
+    pub conv_params: usize,
+    pub dense_params: usize,
+    pub bias_params: usize,
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl ModelSpec {
+    pub fn d(&self) -> usize {
+        self.total_params
+    }
+
+    /// Slice bounds of tensor `i` within the flat vector.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        let t = &self.tensors[i];
+        t.offset..t.offset + t.size
+    }
+}
+
+/// The whole AOT manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub img: usize,
+    pub num_classes: usize,
+    pub quant_block: usize,
+    pub max_levels: usize,
+    pub n_stats: usize,
+    pub init_seed: u64,
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse")?;
+        let mut models = Vec::new();
+        for (arch, spec) in j.get("archs")?.as_obj()? {
+            let mut tensors = Vec::new();
+            for p in spec.get("params")?.as_arr()? {
+                tensors.push(TensorInfo {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                    kind: TensorKind::parse(p.get("kind")?.as_str()?)?,
+                    offset: p.get("offset")?.as_usize()?,
+                    size: p.get("size")?.as_usize()?,
+                });
+            }
+            let m = ModelSpec {
+                arch: arch.clone(),
+                total_params: spec.get("total_params")?.as_usize()?,
+                conv_params: spec.get("conv_params")?.as_usize()?,
+                dense_params: spec.get("dense_params")?.as_usize()?,
+                bias_params: spec.get("bias_params")?.as_usize()?,
+                tensors,
+            };
+            // layout sanity: contiguous, covering, matching totals
+            let mut off = 0usize;
+            for t in &m.tensors {
+                if t.offset != off {
+                    bail!("{arch}: tensor {} offset {} != {}", t.name, t.offset, off);
+                }
+                if t.size != t.shape.iter().product::<usize>() {
+                    bail!("{arch}: tensor {} size/shape mismatch", t.name);
+                }
+                off += t.size;
+            }
+            if off != m.total_params {
+                bail!("{arch}: layout covers {off} of {} params", m.total_params);
+            }
+            models.push(m);
+        }
+        Ok(Manifest {
+            batch: j.get("batch")?.as_usize()?,
+            img: j.get("img")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            quant_block: j.get("quant_block")?.as_usize()?,
+            max_levels: j.get("max_levels")?.as_usize()?,
+            n_stats: j.get("n_stats")?.as_usize()?,
+            init_seed: j.get("init_seed")?.as_usize()? as u64,
+            models,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let p = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {} (run `make artifacts`)", p.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn model(&self, arch: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.arch == arch)
+            .with_context(|| format!("arch `{arch}` not in manifest"))
+    }
+
+    /// Load the He-init flat parameter vector written by aot.py.
+    pub fn load_init(&self, dir: &Path, arch: &str) -> Result<Vec<f32>> {
+        let spec = self.model(arch)?;
+        let p = dir.join(format!("init_{arch}.f32"));
+        let bytes = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+        if bytes.len() != 4 * spec.d() {
+            bail!("{}: {} bytes, expected {}", p.display(), bytes.len(), 4 * spec.d());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 32, "img": 12, "num_classes": 10,
+      "quant_block": 65536, "max_levels": 16, "n_stats": 8, "init_seed": 17,
+      "archs": {
+        "tiny": {
+          "arch": "tiny", "tensors": 2, "total_params": 14,
+          "conv_params": 12, "dense_params": 0, "bias_params": 2,
+          "params": [
+            {"name": "c.w", "shape": [3, 4], "kind": "conv", "offset": 0, "size": 12},
+            {"name": "c.b", "shape": [2], "kind": "bias", "offset": 12, "size": 2}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.models.len(), 1);
+        let spec = m.model("tiny").unwrap();
+        assert_eq!(spec.d(), 14);
+        assert_eq!(spec.tensors[0].kind, TensorKind::Conv);
+        assert_eq!(spec.range(1), 12..14);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = SAMPLE.replace("\"offset\": 12", "\"offset\": 13");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_size() {
+        let bad = SAMPLE.replace("\"shape\": [3, 4], \"kind\": \"conv\", \"offset\": 0, \"size\": 12", "\"shape\": [3, 4], \"kind\": \"conv\", \"offset\": 0, \"size\": 11");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = SAMPLE.replace("\"kind\": \"conv\"", "\"kind\": \"mystery\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 3);
+        for arch in ["cnn_s", "resnet_s", "vgg_s"] {
+            let spec = m.model(arch).unwrap();
+            let w = m.load_init(&dir, arch).unwrap();
+            assert_eq!(w.len(), spec.d());
+        }
+        // Table-I ordering
+        let d = |a: &str| m.model(a).unwrap().d();
+        assert!(d("cnn_s") < d("resnet_s") && d("resnet_s") < d("vgg_s"));
+    }
+}

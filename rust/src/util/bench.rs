@@ -1,0 +1,172 @@
+//! Wall-clock micro-benchmark harness (in-tree `criterion` substitute).
+//!
+//! Methodology: warmup iterations, then timed samples; report trimmed mean,
+//! median, p10/p90, and throughput. `benches/*.rs` are `harness = false`
+//! binaries built on this. Output is both human-readable and CSV-appendable
+//! so EXPERIMENTS.md §Perf rows come straight from runs.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// items/second if `items_per_iter` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>12}/s", human(t)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>12}  med {:>12}  p10 {:>12}  p90 {:>12}{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            tp
+        )
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{:.1},{:.1},{:.1},{}",
+            self.name,
+            self.samples,
+            self.mean_ns,
+            self.median_ns,
+            self.p10_ns,
+            self.p90_ns,
+            self.throughput.map(|t| format!("{t:.1}")).unwrap_or_default()
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with warmup + sampling configuration.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+    pub items_per_iter: Option<f64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, samples: 15, iters_per_sample: 1, items_per_iter: None }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1, items_per_iter: None }
+    }
+
+    pub fn throughput(mut self, items: f64) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Time `f`; a `black_box`-style sink prevents dead-code elimination —
+    /// return something cheap from the closure.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / self.iters_per_sample as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        // trimmed mean: drop top/bottom 10%
+        let trim = n / 10;
+        let kept = &times[trim..n - trim];
+        let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: mean,
+            median_ns: times[n / 2],
+            p10_ns: times[n / 10],
+            p90_ns: times[(n * 9) / 10],
+            throughput: self.items_per_iter.map(|i| i * 1e9 / mean),
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn throughput_is_scaled() {
+        let b = Bencher::quick().throughput(1_000.0);
+        let s = b.run("tp", || std::hint::black_box(3u32).pow(2));
+        let tp = s.throughput.unwrap();
+        assert!(tp > 0.0);
+        // throughput = items / mean seconds
+        let expect = 1_000.0 * 1e9 / s.mean_ns;
+        assert!((tp - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI flag parser for the `repro` launcher (in-tree `clap` substitute).
+//!
+//! Grammar: `repro <subcommand> [--flag value | --switch] ...`
+//! Unknown flags are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: one subcommand + `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    /// flags that were consumed by a lookup (for unknown-flag detection)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter();
+        let command = it.next().cloned().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("expected --flag, got `{tok}`");
+            };
+            if name.is_empty() {
+                bail!("empty flag");
+            }
+            // `--flag=value` or `--flag value` or bare switch
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                // peek: next token is a value unless it's another flag
+                let mut peek = it.clone();
+                match peek.next() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(name.to_string(), v.clone());
+                        it = peek;
+                    }
+                    _ => {
+                        flags.insert(name.to_string(), "true".to_string());
+                    }
+                }
+            }
+        }
+        Ok(Args { command, flags, seen: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<usize>().with_context(|| format!("--{key} `{v}` is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<f64>().with_context(|| format!("--{key} `{v}` is not a number")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Call after all lookups: error on flags nobody consumed.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k} for command `{}`", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv(&["fig3", "--rate", "3", "--out", "x.csv"])).unwrap();
+        assert_eq!(a.command, "fig3");
+        assert_eq!(a.usize_or("rate", 1).unwrap(), 3);
+        assert_eq!(a.str_or("out", "-"), "x.csv");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = Args::parse(&argv(&["train", "--lr=0.01", "--verbose"])).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+        assert!(a.bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = Args::parse(&argv(&["x", "--typo", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["x"])).unwrap();
+        assert_eq!(a.usize_or("rounds", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = Args::parse(&argv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+        let b = Args::parse(&argv(&["x", "bare"]));
+        assert!(b.is_err());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = Args::parse(&argv(&["x", "--quiet", "--n", "3"])).unwrap();
+        assert!(a.bool("quiet"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small in-tree substrates that would normally come from crates.io.
+//!
+//! The offline vendor set has no serde/clap/criterion/proptest/rand, so this
+//! module provides the equivalents the rest of the system needs:
+//!
+//! * [`json`]  — minimal JSON parser/serializer (manifest + configs + metrics)
+//! * [`rng`]   — deterministic xoshiro256++ with per-(client, round) streams
+//! * [`prop`]  — seeded property-testing harness with failing-seed reports
+//! * [`bench`] — warmup + trimmed-mean wall-clock micro-benchmark harness
+//! * [`cli`]   — tiny flag parser for the `repro` launcher
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

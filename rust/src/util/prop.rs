@@ -1,0 +1,145 @@
+//! Seeded property-testing harness (in-tree `proptest` substitute).
+//!
+//! `proptest` is not in the offline vendor set (DESIGN.md §Substitutions);
+//! this gives us the same methodology: randomized inputs from generators,
+//! many cases per property, and a reproducible failing-seed report. No
+//! shrinking — failures print the exact seed + case index, which replays
+//! bit-exactly through [`crate::util::rng::Rng`].
+//!
+//! ```ignore
+//! prop_check("codec roundtrip", 200, |g| {
+//!     let v = g.vec_f32(1..5000, -10.0..10.0);
+//!     let enc = encode(&v);
+//!     assert_eq!(decode(&enc), v);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Environment knob: `M22_PROP_CASES` scales all case counts (CI vs local).
+fn case_multiplier() -> f64 {
+    std::env::var("M22_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0)
+}
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    /// Vector of uniform f32 with random length in `len` range.
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Gradient-shaped vector: normal entries, a fraction zeroed (sparsified).
+    pub fn grad_like(&mut self, len: std::ops::Range<usize>, sparsity: f64) -> Vec<f32> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n)
+            .map(|_| {
+                if self.rng.f64() < sparsity {
+                    0.0
+                } else {
+                    self.rng.normal() as f32
+                }
+            })
+            .collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, opts: &'a [T]) -> &'a T {
+        &opts[self.rng.below(opts.len())]
+    }
+}
+
+/// Run `cases` randomized cases of `f`; panic with a replayable seed report
+/// on the first failure.
+pub fn prop_check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, f: F) {
+    let cases = ((cases as f64 * case_multiplier()).ceil() as usize).max(1);
+    // fixed root seed: failures reproduce across runs; override to explore.
+    let root = std::env::var("M22_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x4d32_3232);
+    for case in 0..cases {
+        let seed = root.wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed) };
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay: M22_PROP_SEED={root} seed={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("abs is nonneg", 50, |g| {
+            let x = g.f64_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failing_seed() {
+        prop_check("always fails", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x > 2.0, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        prop_check("gen ranges", 100, |g| {
+            let n = g.usize_in(3, 10);
+            assert!((3..10).contains(&n));
+            let v = g.vec_f32(1..50, -2.0, 2.0);
+            assert!(!v.is_empty() && v.len() < 50);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+            let s = g.grad_like(10..20, 0.5);
+            assert!(s.len() >= 10 && s.len() < 20);
+        });
+    }
+
+    #[test]
+    fn grad_like_sparsity_approximate() {
+        let mut g = Gen { rng: Rng::new(1) };
+        let v = g.grad_like(20_000..20_001, 0.7);
+        let z = v.iter().filter(|x| **x == 0.0).count() as f64 / v.len() as f64;
+        assert!((z - 0.7).abs() < 0.02, "zero fraction {z}");
+    }
+}

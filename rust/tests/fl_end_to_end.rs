@@ -1,0 +1,127 @@
+//! Integration: full federated rounds through PS + client threads + PJRT.
+
+use std::path::PathBuf;
+
+use m22::config::{presets, ExperimentConfig, Scheme};
+use m22::coordinator::run_experiment;
+use m22::data::Dataset;
+use m22::metrics::Recorder;
+use m22::quantizer::Family;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn handle() -> m22::runtime::RuntimeHandle {
+    use std::sync::OnceLock;
+    static HANDLE: OnceLock<m22::runtime::RuntimeHandle> = OnceLock::new();
+    HANDLE
+        .get_or_init(|| m22::runtime::spawn(artifacts_dir().unwrap()).expect("runtime spawn"))
+        .clone()
+}
+
+fn tiny_cfg(scheme: Scheme, rounds: usize) -> ExperimentConfig {
+    let mut cfg = presets::quickstart("cnn_s", rounds);
+    cfg.scheme = scheme;
+    cfg.local_steps = 2;
+    cfg.eval_batches = 2;
+    cfg.dataset.train_per_class = 48;
+    cfg.dataset.test_per_class = 8;
+    cfg
+}
+
+#[test]
+fn m22_federated_run_learns() {
+    skip_without_artifacts!();
+    let cfg = tiny_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 6);
+    let dataset = Dataset::generate(cfg.dataset);
+    let mut rec = Recorder::new();
+    let out = run_experiment(&cfg, &handle(), &dataset, "m22", &mut rec).unwrap();
+    assert_eq!(out.rounds, 6);
+    assert!(out.final_test_acc > 0.15, "no learning: acc {}", out.final_test_acc);
+    // loss decreased from round 0
+    let curve = rec.acc_curve("m22");
+    assert_eq!(curve.len(), 6);
+    let first_loss = rec.rows.first().unwrap().test_loss;
+    assert!(out.final_test_loss < first_loss, "{} -> {}", first_loss, out.final_test_loss);
+    assert!(out.bits_per_round > 0.0);
+}
+
+#[test]
+fn all_schemes_run_one_round() {
+    skip_without_artifacts!();
+    let schemes = [
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ];
+    let dataset = Dataset::generate(tiny_cfg(Scheme::None, 1).dataset);
+    let mut rec = Recorder::new();
+    for scheme in schemes {
+        let cfg = tiny_cfg(scheme, 1);
+        let label = cfg.scheme.label(cfg.rq);
+        let out = run_experiment(&cfg, &handle(), &dataset, &label, &mut rec).unwrap();
+        assert!(out.final_test_loss.is_finite(), "{label}");
+    }
+    assert_eq!(rec.series_names().len(), schemes.len());
+}
+
+#[test]
+fn uncompressed_spends_far_more_bits() {
+    skip_without_artifacts!();
+    let dataset = Dataset::generate(tiny_cfg(Scheme::None, 1).dataset);
+    let mut rec = Recorder::new();
+    let o_none =
+        run_experiment(&tiny_cfg(Scheme::None, 1), &handle(), &dataset, "none", &mut rec).unwrap();
+    let o_m22 = run_experiment(
+        &tiny_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 1),
+        &handle(),
+        &dataset,
+        "m22",
+        &mut rec,
+    )
+    .unwrap();
+    assert!(o_none.bits_per_round > 8.0 * o_m22.bits_per_round);
+}
+
+#[test]
+fn memory_variant_runs() {
+    skip_without_artifacts!();
+    let mut cfg = tiny_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 3);
+    cfg.memory = true;
+    cfg.memory_decay = 0.5;
+    let dataset = Dataset::generate(cfg.dataset);
+    let mut rec = Recorder::new();
+    let out = run_experiment(&cfg, &handle(), &dataset, "m22+mem", &mut rec).unwrap();
+    assert!(out.final_test_loss.is_finite());
+}
+
+#[test]
+fn deterministic_across_runs() {
+    skip_without_artifacts!();
+    let cfg = tiny_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 2);
+    let dataset = Dataset::generate(cfg.dataset);
+    let mut r1 = Recorder::new();
+    let mut r2 = Recorder::new();
+    let o1 = run_experiment(&cfg, &handle(), &dataset, "a", &mut r1).unwrap();
+    let o2 = run_experiment(&cfg, &handle(), &dataset, "a", &mut r2).unwrap();
+    assert_eq!(o1.final_test_acc, o2.final_test_acc);
+    assert_eq!(o1.final_test_loss, o2.final_test_loss);
+}

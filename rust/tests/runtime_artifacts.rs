@@ -1,0 +1,185 @@
+//! Integration: PJRT runtime loads the real AOT artifacts and executes them.
+//!
+//! These tests need `make artifacts`; they are skipped (not failed) when the
+//! artifacts directory is absent so `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use m22::compress::{BlockCodec, CpuCodec};
+use m22::data::{Dataset, DatasetConfig};
+use m22::quantizer::{design, Family, QuantizerTables};
+use m22::stats::{Distribution, GenNorm};
+use m22::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn handle() -> m22::runtime::RuntimeHandle {
+    // one shared service for the whole test binary
+    use std::sync::OnceLock;
+    static HANDLE: OnceLock<m22::runtime::RuntimeHandle> = OnceLock::new();
+    HANDLE
+        .get_or_init(|| m22::runtime::spawn(artifacts_dir().unwrap()).expect("runtime spawn"))
+        .clone()
+}
+
+#[test]
+fn smoke_artifact_reproduces_reference() {
+    skip_without_artifacts!();
+    // same numbers as /opt/xla-example/load_hlo: matmul+2 => [5,5,9,9]
+    assert_eq!(handle().smoke().unwrap(), vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn hlo_quantize_matches_cpu_codec() {
+    skip_without_artifacts!();
+    let h = handle();
+    let mut rng = Rng::new(5);
+    // arbitrary length exercises chunk+pad
+    let g: Vec<f32> = (0..100_000)
+        .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let q = design(&GenNorm::standardized(1.2), 2.0, 8);
+    let (t, c) = q.padded_f32(16);
+    let (ih, gh) = h.quantize(&g, &t, &c).unwrap();
+    let (ic, gc) = CpuCodec.quantize(&g, &t, &c).unwrap();
+    assert_eq!(ih, ic);
+    assert_eq!(gh, gc);
+}
+
+#[test]
+fn hlo_moments_match_cpu_codec() {
+    skip_without_artifacts!();
+    let h = handle();
+    let mut rng = Rng::new(7);
+    let g: Vec<f32> = (0..70_000).map(|_| (rng.normal() * 0.02) as f32).collect();
+    let mh = h.moments(&g).unwrap();
+    let mc = CpuCodec.moments(&g).unwrap();
+    for i in 0..8 {
+        let rel = (mh[i] - mc[i]).abs() / mc[i].abs().max(1.0);
+        // kernel accumulates in f32; CPU reference in f64
+        assert!(rel < 2e-4, "stat {i}: {} vs {}", mh[i], mc[i]);
+    }
+}
+
+#[test]
+fn hlo_distortion_matches_reference() {
+    skip_without_artifacts!();
+    let h = handle();
+    let mut rng = Rng::new(9);
+    let g: Vec<f32> = (0..80_000).map(|_| rng.normal() as f32).collect();
+    let ghat: Vec<f32> = g.iter().map(|x| x + 0.1).collect();
+    for m in [0.0f32, 2.0] {
+        let d = h.distortion(&g, &ghat, m).unwrap();
+        let expect: f64 = g
+            .iter()
+            .map(|&x| (x as f64).abs().powf(m as f64) * 0.1f64.powi(2))
+            .sum();
+        let rel = (d as f64 - expect).abs() / expect;
+        assert!(rel < 5e-3, "m={m}: {d} vs {expect}");
+    }
+}
+
+#[test]
+fn train_step_and_eval_consistent() {
+    skip_without_artifacts!();
+    let h = handle();
+    let ds = Dataset::generate(DatasetConfig { train_per_class: 16, test_per_class: 4, ..Default::default() });
+    let man = m22::train::Manifest::load(&artifacts_dir().unwrap()).unwrap();
+    for arch in ["cnn_s", "resnet_s", "vgg_s"] {
+        let w = man.load_init(&artifacts_dir().unwrap(), arch).unwrap();
+        let b = ds.batch(&ds.train, 0, man.batch);
+        let step = h.train_step(arch, &w, &b.x, &b.y).unwrap();
+        assert!(step.loss.is_finite() && step.loss > 0.0, "{arch} loss {}", step.loss);
+        assert!((0.0..=1.0).contains(&step.acc));
+        assert_eq!(step.grads.len(), w.len());
+        let gnorm: f64 = step.grads.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(gnorm > 0.0 && gnorm.is_finite(), "{arch} gnorm {gnorm}");
+        // eval on the same batch reports the same metrics
+        let (el, ea) = h.eval(arch, &w, &b.x, &b.y).unwrap();
+        assert!((el - step.loss).abs() < 1e-4, "{arch}: {el} vs {}", step.loss);
+        assert!((ea - step.acc).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn sgd_through_artifacts_learns() {
+    skip_without_artifacts!();
+    let h = handle();
+    let dir = artifacts_dir().unwrap();
+    let man = m22::train::Manifest::load(&dir).unwrap();
+    let ds = Dataset::generate(DatasetConfig { train_per_class: 32, test_per_class: 4, ..Default::default() });
+    let arch = "cnn_s";
+    let mut w = man.load_init(&dir, arch).unwrap();
+    let b = ds.batch(&ds.train, 0, man.batch);
+    let first = h.train_step(arch, &w, &b.x, &b.y).unwrap();
+    let mut loss = first.loss;
+    let mut grads = first.grads;
+    for _ in 0..15 {
+        for (wi, gi) in w.iter_mut().zip(&grads) {
+            *wi -= 0.05 * gi;
+        }
+        let s = h.train_step(arch, &w, &b.x, &b.y).unwrap();
+        loss = s.loss;
+        grads = s.grads;
+    }
+    assert!(loss < first.loss * 0.9, "no learning: {} -> {loss}", first.loss);
+}
+
+#[test]
+fn m22_compressor_on_hlo_codec_roundtrips() {
+    skip_without_artifacts!();
+    let h = handle();
+    let dir = artifacts_dir().unwrap();
+    let man = m22::train::Manifest::load(&dir).unwrap();
+    let spec = man.model("cnn_s").unwrap();
+    let mut rng = Rng::new(11);
+    let g: Vec<f32> = (0..spec.d()).map(|_| (rng.normal() * 0.01) as f32).collect();
+    let tables = Arc::new(QuantizerTables::new());
+    let k = (0.6 * spec.d() as f64) as usize;
+    use m22::compress::m22::{M22, M22Config};
+    use m22::compress::Compressor;
+    let mut comp = M22::new(
+        M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k, min_fit: 512 },
+        Arc::new(h.clone()),
+        tables.clone(),
+    );
+    let out = comp.compress(&g, spec).unwrap();
+    assert_eq!(out.report.k, k);
+    let dec = comp.decompress(&out.payload, spec).unwrap();
+    assert_eq!(dec, out.reconstructed);
+    // and the HLO path agrees with the pure-Rust codec end to end
+    let mut comp_cpu = M22::new(
+        M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k, min_fit: 512 },
+        Arc::new(CpuCodec),
+        tables,
+    );
+    let out_cpu = comp_cpu.compress(&g, spec).unwrap();
+    // HLO moments accumulate in f32, the CPU reference in f64, so fitted
+    // scales differ in the last ulp: compare reconstructions approximately
+    // and supports exactly.
+    assert_eq!(out.reconstructed.len(), out_cpu.reconstructed.len());
+    let mut max_rel = 0.0f64;
+    for (a, b) in out.reconstructed.iter().zip(&out_cpu.reconstructed) {
+        assert_eq!(*a == 0.0, *b == 0.0, "support mismatch");
+        if *b != 0.0 {
+            max_rel = max_rel.max(((a - b) as f64 / *b as f64).abs());
+        }
+    }
+    assert!(max_rel < 1e-3, "HLO vs CPU codec rel diff {max_rel}");
+}
