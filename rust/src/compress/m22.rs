@@ -23,7 +23,7 @@
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-use crate::quantizer::{Family, QuantizerTables};
+use crate::quantizer::{Family, TableSource};
 use crate::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
 use crate::train::ModelSpec;
 
@@ -59,7 +59,9 @@ impl M22Config {
 pub struct M22 {
     pub cfg: M22Config,
     codec: Arc<dyn BlockCodec>,
-    tables: Arc<QuantizerTables>,
+    /// Shared standardized-design provider — the unbounded
+    /// `QuantizerTables` or the fedserve LRU cache.
+    tables: Arc<dyn TableSource>,
 }
 
 /// Per-group side info carried in the payload.
@@ -70,7 +72,7 @@ struct GroupParams {
 }
 
 impl M22 {
-    pub fn new(cfg: M22Config, codec: Arc<dyn BlockCodec>, tables: Arc<QuantizerTables>) -> M22 {
+    pub fn new(cfg: M22Config, codec: Arc<dyn BlockCodec>, tables: Arc<dyn TableSource>) -> M22 {
         assert!((1..=4).contains(&cfg.rq), "rq={} out of [1,4]", cfg.rq);
         assert!(cfg.levels() <= MAX_LEVELS);
         M22 { cfg, codec, tables }
@@ -81,7 +83,7 @@ impl M22 {
         rq: u32,
         k: usize,
         codec: Arc<dyn BlockCodec>,
-        tables: Arc<QuantizerTables>,
+        tables: Arc<dyn TableSource>,
     ) -> M22 {
         M22::new(
             M22Config { family: Family::Weibull, m: 0.0, rq, k, min_fit: DEFAULT_MIN_FIT },
@@ -286,6 +288,7 @@ mod tests {
     use super::*;
     use crate::compress::testutil::{grad_like, tiny_spec};
     use crate::compress::CpuCodec;
+    use crate::quantizer::QuantizerTables;
 
     fn mk(family: Family, m: f64, rq: u32, k: usize, min_fit: usize) -> M22 {
         M22::new(

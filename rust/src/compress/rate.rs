@@ -54,6 +54,13 @@ impl RateReport {
     pub fn bits_per_dim(&self) -> f64 {
         self.ideal_total_bits() / self.d as f64
     }
+
+    /// Bits actually crossing the wire once framed: the encoded payload
+    /// plus the transport's fixed per-message overhead (for the fedserve
+    /// wire protocol pass `fedserve::wire::UPDATE_OVERHEAD`).
+    pub fn framed_total_bits(&self, frame_overhead_bytes: usize) -> u64 {
+        (self.payload_bytes as u64 + frame_overhead_bytes as u64) * 8
+    }
 }
 
 /// Budget solver: parameters for each scheme at a given nominal budget.
@@ -144,6 +151,9 @@ mod tests {
         assert_eq!(r.actual_total_bits(), 1100 + 600 + 64);
         assert!((r.ideal_total_bits() - (970.0 + 600.0 + 64.0)).abs() < 1e-9);
         assert!((r.bits_per_dim() - 1.634).abs() < 1e-3);
+        // wire framing: payload plus the fixed per-message overhead
+        assert_eq!(r.framed_total_bits(0), 250 * 8);
+        assert_eq!(r.framed_total_bits(93), (250 + 93) * 8);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::compress::m22::{M22, M22Config, DEFAULT_MIN_FIT};
 use crate::compress::uniform::TopKUniform;
 use crate::compress::{Budget, BlockCodec, Compressor, NoCompression};
 use crate::data::DatasetConfig;
-use crate::quantizer::{Family, QuantizerTables};
+use crate::quantizer::{Family, TableSource};
 use crate::train::OptimizerKind;
 use crate::util::json::Json;
 
@@ -63,6 +63,36 @@ impl Scheme {
     }
 }
 
+/// Parameter-server knobs for the `fedserve` subsystem (ROADMAP: scale the
+/// PS loop past a handful of clients).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerConfig {
+    /// worker shards for the aggregation reduce (1 = serial; parity with the
+    /// serial eq.-(7) path is bit-exact at any count)
+    pub shards: usize,
+    /// explicit k-of-n participant sample per round; `None` derives k from
+    /// `ExperimentConfig::participation`
+    pub sampled_clients: Option<usize>,
+    /// straggler deadline per round — uplinks arriving later are dropped
+    /// (and counted) rather than stalling the round. 0 (the default) waits
+    /// indefinitely, matching the original blocking driver so experiment
+    /// results never depend on wall clock unless opted in.
+    pub straggler_timeout_ms: u64,
+    /// capacity of the shared LRU quantizer-table cache
+    pub table_cache_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            shards: 1,
+            sampled_clients: None,
+            straggler_timeout_ms: 0,
+            table_cache_capacity: 256,
+        }
+    }
+}
+
 /// One full experiment run (one curve of one figure).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -88,6 +118,8 @@ pub struct ExperimentConfig {
     /// test batches used for eval each round (whole test set if usize::MAX)
     pub eval_batches: usize,
     pub dataset: DatasetConfig,
+    /// fedserve parameter-server knobs (shards, sampling, deadlines, cache)
+    pub server: ServerConfig,
 }
 
 impl ExperimentConfig {
@@ -109,7 +141,20 @@ impl ExperimentConfig {
             seed: 33,
             eval_batches: 4,
             dataset: DatasetConfig::default(),
+            server: ServerConfig::default(),
         }
+    }
+
+    /// k of n: how many clients the server samples each round
+    /// (`server.sampled_clients` wins over the `participation` fraction).
+    pub fn participants_per_round(&self) -> usize {
+        if self.n_clients == 0 {
+            return 0;
+        }
+        self.server
+            .sampled_clients
+            .unwrap_or((self.participation * self.n_clients as f64).ceil() as usize)
+            .clamp(1, self.n_clients)
     }
 
     pub fn optimizer(&self) -> Result<OptimizerKind> {
@@ -127,7 +172,7 @@ impl ExperimentConfig {
         &self,
         d: usize,
         codec: Arc<dyn BlockCodec>,
-        tables: Arc<QuantizerTables>,
+        tables: Arc<dyn TableSource>,
     ) -> Box<dyn Compressor> {
         let b = self.budget(d);
         match self.scheme {
@@ -161,6 +206,9 @@ impl ExperimentConfig {
             ("scheme", Json::from(self.scheme.label(self.rq).as_str())),
             ("memory", Json::from(self.memory)),
             ("seed", Json::from(self.seed as usize)),
+            ("shards", Json::from(self.server.shards)),
+            ("participants_per_round", Json::from(self.participants_per_round())),
+            ("table_cache_capacity", Json::from(self.server.table_cache_capacity)),
         ])
     }
 }
@@ -169,6 +217,7 @@ impl ExperimentConfig {
 mod tests {
     use super::*;
     use crate::compress::CpuCodec;
+    use crate::quantizer::QuantizerTables;
 
     #[test]
     fn scheme_parsing() {
@@ -212,6 +261,32 @@ mod tests {
             let c = cfg.build_compressor(10_000, codec.clone(), tables.clone());
             assert!(!c.name().is_empty());
         }
+    }
+
+    #[test]
+    fn participants_sampling_rules() {
+        let mut cfg = ExperimentConfig::new("cnn_s", Scheme::TopKUniform, 1, 5);
+        cfg.n_clients = 10;
+        assert_eq!(cfg.participants_per_round(), 10); // participation 1.0
+        cfg.participation = 0.25;
+        assert_eq!(cfg.participants_per_round(), 3); // ceil(2.5)
+        cfg.server.sampled_clients = Some(4);
+        assert_eq!(cfg.participants_per_round(), 4); // explicit k wins
+        cfg.server.sampled_clients = Some(99);
+        assert_eq!(cfg.participants_per_round(), 10); // clamped to n
+        cfg.server.sampled_clients = Some(0);
+        assert_eq!(cfg.participants_per_round(), 1); // at least one
+        cfg.n_clients = 0;
+        assert_eq!(cfg.participants_per_round(), 0); // degenerate, no panic
+    }
+
+    #[test]
+    fn server_defaults_are_conservative() {
+        let s = ServerConfig::default();
+        assert_eq!(s.shards, 1);
+        assert_eq!(s.sampled_clients, None);
+        assert_eq!(s.straggler_timeout_ms, 0); // wait forever, like the old driver
+        assert!(s.table_cache_capacity > 0);
     }
 
     #[test]

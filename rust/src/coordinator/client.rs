@@ -1,26 +1,33 @@
 //! Remote-client worker: local training + compression, one OS thread each.
 //!
 //! Per round (paper Algorithm 1, client side):
-//!   1. receive the global model w_t;
+//!   1. receive the global model w_t as a framed wire broadcast;
 //!   2. run `local_steps` optimizer steps on the local shard through the
 //!      PJRT runtime (the L2 train-step artifact);
 //!   3. form the model delta  u = w_t − w_local  (what FedAvg aggregates);
-//!   4. error-feedback: ũ = u + decay·residual (Sec. IV-B);
-//!   5. compress ũ; remember residual = ũ − reconstruct(ũ);
-//!   6. uplink the payload bytes + rate report.
+//!   4. hand the delta to the [`ClientSession`], which applies error
+//!      feedback (Sec. IV-B), compresses, and records the residual;
+//!   5. uplink the payload bytes + rate report as one checksummed frame.
+//!
+//! Both directions are honest bytes (`fedserve::wire`): the worker parses
+//! downlink frames and emits uplink frames, so swapping the in-process
+//! channel for a socket touches neither endpoint.
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
+use crate::fedserve::session::ClientSession;
+use crate::fedserve::wire;
 use crate::runtime::RuntimeHandle;
 use crate::train::{ModelSpec, Optimizer};
 
 use super::memory::Memory;
-use super::messages::{Downlink, Uplink};
+use super::messages::Uplink;
 
 /// Everything one client thread owns.
 pub struct ClientWorker {
@@ -29,10 +36,9 @@ pub struct ClientWorker {
     pub spec: ModelSpec,
     pub shard: Vec<(u32, u8)>,
     pub runtime: RuntimeHandle,
-    pub compressor: Box<dyn Compressor>,
-    pub memory: Option<Memory>,
-    pub rx: Receiver<Downlink>,
-    pub tx: Sender<Uplink>,
+    pub session: ClientSession,
+    pub rx: Receiver<Arc<Vec<u8>>>,
+    pub tx: Sender<Vec<u8>>,
     /// batch cursor — advances across rounds so epochs progress
     cursor: usize,
 }
@@ -46,11 +52,12 @@ impl ClientWorker {
         shard: Vec<(u32, u8)>,
         runtime: RuntimeHandle,
         compressor: Box<dyn Compressor>,
-        rx: Receiver<Downlink>,
-        tx: Sender<Uplink>,
+        rx: Receiver<Arc<Vec<u8>>>,
+        tx: Sender<Vec<u8>>,
     ) -> ClientWorker {
         let memory = cfg.memory.then(|| Memory::new(spec.d(), cfg.memory_decay));
-        ClientWorker { id, cfg, spec, shard, runtime, compressor, memory, rx, tx, cursor: 0 }
+        let session = ClientSession::new(id, compressor, memory);
+        ClientWorker { id, cfg, spec, shard, runtime, session, rx, tx, cursor: 0 }
     }
 
     /// One round of local work; returns the uplink (or the error wrapped).
@@ -82,14 +89,7 @@ impl ClientWorker {
                 }
             })
             .collect();
-        let augmented = match &self.memory {
-            Some(mem) => mem.add_back(&update),
-            None => update,
-        };
-        let out = self.compressor.compress(&augmented, &self.spec)?;
-        if let Some(mem) = &mut self.memory {
-            mem.update(&augmented, &out.reconstructed);
-        }
+        let out = self.session.encode_update(round, &update, &self.spec)?;
         Ok(Uplink {
             client_id: self.id,
             round,
@@ -100,24 +100,30 @@ impl ClientWorker {
         })
     }
 
-    /// Thread body: serve rounds until shutdown.
+    /// Thread body: serve framed rounds until shutdown.
     pub fn run(mut self, dataset: &Dataset) {
-        while let Ok(msg) = self.rx.recv() {
+        while let Ok(frame) = self.rx.recv() {
+            let msg = match wire::decode(&frame) {
+                Ok(m) => m,
+                Err(e) => {
+                    let up = Uplink::failure(
+                        self.id,
+                        wire::ROUND_UNKNOWN,
+                        format!("bad downlink frame: {e:#}"),
+                    );
+                    let _ = self.tx.send(wire::encode_update(&up));
+                    break;
+                }
+            };
             match msg {
-                Downlink::Shutdown => break,
-                Downlink::Round { round, weights } => {
+                wire::Message::Shutdown => break,
+                wire::Message::Update(_) => break, // protocol violation; stop
+                wire::Message::Round { round, weights } => {
                     let up = match self.round(dataset, round, &weights) {
                         Ok(u) => u,
-                        Err(e) => Uplink {
-                            client_id: self.id,
-                            round,
-                            payload: Vec::new(),
-                            report: Default::default(),
-                            train_loss: f64::NAN,
-                            error: Some(format!("{e:#}")),
-                        },
+                        Err(e) => Uplink::failure(self.id, round, format!("{e:#}")),
                     };
-                    if self.tx.send(up).is_err() {
+                    if self.tx.send(wire::encode_update(&up)).is_err() {
                         break; // server gone
                     }
                 }

@@ -1,24 +1,26 @@
-//! The experiment driver: wires PS + client threads + runtime + metrics.
+//! The experiment driver — now a thin client of `fedserve`.
 //!
-//! Server side of Algorithm 1: broadcast w_t, collect every client's payload
-//! bytes, decode them (the PS holds its own decoder instance of the same
-//! scheme — nothing but bytes crosses the channel), aggregate per eq. (7),
-//! step the global model, evaluate, record.
+//! The driver contributes what is experiment-specific: artifact loading,
+//! client-thread spawning with real local training, per-round evaluation,
+//! and row recording. Everything server-side — participant sampling, framed
+//! byte transport, straggler deadlines, payload decode, the sharded
+//! eq.-(7) reduce, the shared LRU quantizer-table cache — lives in
+//! [`crate::fedserve`] and is exercised identically by `repro serve`.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::BlockCodec;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
-use crate::metrics::{Recorder, Row};
-use crate::quantizer::QuantizerTables;
+use crate::fedserve::table_cache::LruTableCache;
+use crate::fedserve::{wire, FedServer};
+use crate::metrics::{Recorder, Row, ServerStats};
 use crate::runtime::RuntimeHandle;
 
 use super::client::ClientWorker;
-use super::messages::{Downlink, Uplink};
 
 /// Summary of one experiment run.
 #[derive(Debug, Clone)]
@@ -30,6 +32,8 @@ pub struct RunOutput {
     /// ideal uplink bits per client per round (eq. 14–17 accounting)
     pub bits_per_round: f64,
     pub rounds: usize,
+    /// fedserve timings, straggler counts, and table-cache hit rate
+    pub server_stats: ServerStats,
 }
 
 /// Evaluate the global model on `n` test batches.
@@ -71,19 +75,22 @@ pub fn run_experiment(
     let d = spec.d();
     let mut w = manifest.load_init(&dir, &cfg.arch)?;
 
-    let tables = Arc::new(QuantizerTables::new());
+    // one bounded LRU of standardized LBG designs, shared by the server
+    // decoder and every client compressor
+    let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
     // the PS's decoder — same scheme construction as the clients'
     let server_comp = cfg.build_compressor(d, codec.clone(), tables.clone());
+    let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, server_comp);
+    let n_participants = cfg.participants_per_round();
 
-    let (up_tx, up_rx) = channel::<Uplink>();
-    let mut down_txs = Vec::with_capacity(cfg.n_clients);
-
-    let mut output = None;
-    std::thread::scope(|scope| -> Result<()> {
-        // spawn clients
+    let (last, bits_per_round) = std::thread::scope(|scope| -> Result<((f64, f64, f64), f64)> {
+        let (up_tx, up_rx) = channel::<Vec<u8>>();
+        // down_txs lives inside the scope closure so an early error drops the
+        // senders, unblocking (and thus joining) every client thread
+        let mut down_txs = Vec::with_capacity(cfg.n_clients);
         for id in 0..cfg.n_clients {
-            let (dtx, drx) = channel::<Downlink>();
+            let (dtx, drx) = channel::<Arc<Vec<u8>>>();
             down_txs.push(dtx);
             let shard = match cfg.dirichlet_alpha {
                 Some(alpha) => dataset.client_shard_dirichlet(id, cfg.n_clients, alpha),
@@ -101,70 +108,57 @@ pub fn run_experiment(
             );
             scope.spawn(move || worker.run(dataset));
         }
+        drop(up_tx); // clients hold the remaining clones
 
         let mut bits_per_round = 0.0f64;
-        let mut last = (f64::NAN, f64::NAN, f64::NAN); // train_loss, test_loss, test_acc
-        let mut sched_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9d_c3);
-        let n_participants =
-            ((cfg.participation * cfg.n_clients as f64).ceil() as usize).clamp(1, cfg.n_clients);
+        let mut last = (f64::NAN, f64::NAN, f64::NAN); // train, test loss, acc
         for round in 0..cfg.rounds {
-            let w_arc = Arc::new(w.clone());
-            // client scheduling: sample participants without replacement
-            let mut order: Vec<usize> = (0..cfg.n_clients).collect();
-            sched_rng.shuffle(&mut order);
-            let participants = &order[..n_participants];
-            for &id in participants {
+            let participants = server.select(n_participants);
+            // the downlink: one encoded frame, shared across participants
+            let frame = Arc::new(wire::encode_round(round, &w));
+            for &id in &participants {
                 down_txs[id]
-                    .send(Downlink::Round { round, weights: w_arc.clone() })
-                    .map_err(|_| anyhow::anyhow!("client thread died"))?;
+                    .send(frame.clone())
+                    .map_err(|_| anyhow!("client {id} thread died"))?;
             }
-            // collect participating uplinks for this round
-            let mut agg = vec![0.0f32; d];
-            let mut train_loss = 0.0f64;
-            let mut round_bits = 0.0f64;
-            for _ in 0..n_participants {
-                let up = up_rx.recv().context("uplink channel closed")?;
-                if let Some(e) = up.error {
-                    bail!("client {} failed in round {}: {e}", up.client_id, up.round);
-                }
-                let decoded = server_comp.decompress(&up.payload, &spec)?;
-                for (a, x) in agg.iter_mut().zip(&decoded) {
-                    *a += x;
-                }
-                train_loss += up.train_loss;
-                round_bits += up.report.ideal_total_bits();
+            let summary = server
+                .run_round(round, &participants, &up_rx, &spec, &mut w)
+                .with_context(|| format!("server round {round}"))?;
+            if summary.received == 0 {
+                bail!(
+                    "round {round}: all {} participants missed the {} ms deadline",
+                    participants.len(),
+                    cfg.server.straggler_timeout_ms
+                );
             }
-            // eq. (7): average the reconstructed updates, subtract
-            let scale = 1.0 / n_participants as f32;
-            for (wi, a) in w.iter_mut().zip(&agg) {
-                *wi -= scale * a;
-            }
-            bits_per_round = round_bits / n_participants as f64;
+            bits_per_round = summary.bits_per_client;
             let (test_loss, test_acc) =
                 evaluate(runtime, &cfg.arch, &w, dataset, cfg.eval_batches)?;
-            let train_loss = train_loss / n_participants as f64;
-            last = (train_loss, test_loss, test_acc);
+            last = (summary.train_loss_mean, test_loss, test_acc);
             recorder.push(Row {
                 series: series.to_string(),
                 round,
-                train_loss,
+                train_loss: summary.train_loss_mean,
                 test_loss,
                 test_acc,
                 bits_up: bits_per_round,
             });
         }
         for dtx in &down_txs {
-            let _ = dtx.send(Downlink::Shutdown);
+            let _ = dtx.send(Arc::new(wire::encode_shutdown()));
         }
-        output = Some(RunOutput {
-            series: series.to_string(),
-            final_train_loss: last.0,
-            final_test_loss: last.1,
-            final_test_acc: last.2,
-            bits_per_round,
-            rounds: cfg.rounds,
-        });
-        Ok(())
+        Ok((last, bits_per_round))
     })?;
-    Ok(output.expect("run completed"))
+
+    let cache = tables.stats();
+    server.stats.set_cache(cache.hits, cache.misses);
+    Ok(RunOutput {
+        series: series.to_string(),
+        final_train_loss: last.0,
+        final_test_loss: last.1,
+        final_test_acc: last.2,
+        bits_per_round,
+        rounds: cfg.rounds,
+        server_stats: server.stats,
+    })
 }

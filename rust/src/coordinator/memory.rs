@@ -7,6 +7,8 @@
 //! mitigates with a tuned weight; `decay` implements that knob
 //! (1.0 = full feedback, 0.0 = off).
 
+use anyhow::{bail, Result};
+
 /// Per-client error-feedback state.
 #[derive(Debug, Clone)]
 pub struct Memory {
@@ -21,13 +23,24 @@ impl Memory {
     }
 
     /// Augment this round's update with the carried residual.
-    pub fn add_back(&self, update: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(update.len(), self.residual.len());
-        update
+    ///
+    /// A length mismatch is a hard error (not just a debug assert): zipping
+    /// a truncated residual in a release build would silently corrupt the
+    /// error-feedback state after a model-dimension change.
+    pub fn add_back(&self, update: &[f32]) -> Result<Vec<f32>> {
+        if update.len() != self.residual.len() {
+            bail!(
+                "error-feedback dimension mismatch: update has {} entries, \
+                 residual has {} — did the model layout change mid-run?",
+                update.len(),
+                self.residual.len()
+            );
+        }
+        Ok(update
             .iter()
             .zip(&self.residual)
             .map(|(u, r)| u + self.decay * r)
-            .collect()
+            .collect())
     }
 
     /// Record what was actually transmitted: residual = augmented − sent.
@@ -55,12 +68,12 @@ mod tests {
             let d = g.usize_in(1, 500);
             let mut mem = Memory::new(d, 1.0);
             let update = g.vec_f32(d..d + 1, -1.0, 1.0);
-            let aug = mem.add_back(&update);
+            let aug = mem.add_back(&update).unwrap();
             // fake compressor: keep half the entries
             let sent: Vec<f32> =
                 aug.iter().enumerate().map(|(i, &x)| if i % 2 == 0 { x } else { 0.0 }).collect();
             mem.update(&aug, &sent);
-            let aug2 = mem.add_back(&vec![0.0; d]);
+            let aug2 = mem.add_back(&vec![0.0; d]).unwrap();
             for i in 0..d {
                 // residual + sent == augmented
                 assert!((aug2[i] + sent[i] - aug[i]).abs() < 1e-6);
@@ -72,7 +85,7 @@ mod tests {
     fn zero_decay_disables_feedback() {
         let mut mem = Memory::new(3, 0.0);
         mem.update(&[1.0, 2.0, 3.0], &[0.0, 0.0, 0.0]);
-        assert_eq!(mem.add_back(&[5.0, 5.0, 5.0]), vec![5.0, 5.0, 5.0]);
+        assert_eq!(mem.add_back(&[5.0, 5.0, 5.0]).unwrap(), vec![5.0, 5.0, 5.0]);
         assert!(mem.residual_norm() > 0.0); // residual tracked, just not fed back
     }
 
@@ -80,7 +93,7 @@ mod tests {
     fn perfect_compression_keeps_residual_zero() {
         let mut mem = Memory::new(4, 1.0);
         let u = vec![0.5f32, -0.25, 0.0, 1.0];
-        let aug = mem.add_back(&u);
+        let aug = mem.add_back(&u).unwrap();
         mem.update(&aug, &aug);
         assert_eq!(mem.residual_norm(), 0.0);
     }
@@ -89,10 +102,19 @@ mod tests {
     fn residual_feeds_next_round() {
         let mut mem = Memory::new(2, 1.0);
         // round 1: compressor drops everything
-        let aug1 = mem.add_back(&[1.0, -2.0]);
+        let aug1 = mem.add_back(&[1.0, -2.0]).unwrap();
         mem.update(&aug1, &[0.0, 0.0]);
         // round 2: the lost signal reappears
-        let aug2 = mem.add_back(&[0.0, 0.0]);
+        let aug2 = mem.add_back(&[0.0, 0.0]).unwrap();
         assert_eq!(aug2, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_a_hard_error() {
+        let mem = Memory::new(4, 1.0);
+        let err = mem.add_back(&[1.0, 2.0]).unwrap_err();
+        assert!(format!("{err}").contains("dimension mismatch"), "{err}");
+        // matching length still works
+        assert!(mem.add_back(&[0.0; 4]).is_ok());
     }
 }

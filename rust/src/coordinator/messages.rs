@@ -1,17 +1,15 @@
-//! Wire messages between the parameter server and clients.
-
-use std::sync::Arc;
+//! Logical PS↔client messages.
+//!
+//! These are the *decoded* forms; on the transport they travel as framed
+//! bytes produced/parsed by `fedserve::wire` (round broadcasts are encoded
+//! once and shared as `Arc<Vec<u8>>` across participants, uplinks are one
+//! owned frame each). The old in-memory `Downlink` enum is gone — the
+//! server's downlink *is* the encoded frame.
 
 use crate::compress::RateReport;
 
-/// PS → client: the global model for round `round` (or shutdown).
-#[derive(Clone)]
-pub enum Downlink {
-    Round { round: usize, weights: Arc<Vec<f32>> },
-    Shutdown,
-}
-
 /// Client → PS: one compressed update.
+#[derive(Debug)]
 pub struct Uplink {
     pub client_id: usize,
     pub round: usize,
@@ -20,28 +18,30 @@ pub struct Uplink {
     pub report: RateReport,
     /// mean local training loss over this round's steps (diagnostics)
     pub train_loss: f64,
-    /// error string if the client failed (PS aborts the run)
+    /// error string if the client failed (PS aborts the run when the
+    /// failure belongs to the current round)
     pub error: Option<String>,
+}
+
+impl Uplink {
+    /// The failure uplink: empty payload, NaN loss, an error message. Use
+    /// `fedserve::wire::ROUND_UNKNOWN` as `round` when the client could not
+    /// even decode which round the downlink was for.
+    pub fn failure(client_id: usize, round: usize, error: String) -> Uplink {
+        Uplink {
+            client_id,
+            round,
+            payload: Vec::new(),
+            report: RateReport::default(),
+            train_loss: f64::NAN,
+            error: Some(error),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn downlink_is_cheaply_cloneable() {
-        let w = Arc::new(vec![0.0f32; 1024]);
-        let d = Downlink::Round { round: 3, weights: w.clone() };
-        let d2 = d.clone();
-        // both clones share the same allocation
-        if let (Downlink::Round { weights: a, .. }, Downlink::Round { weights: b, .. }) = (&d, &d2)
-        {
-            assert!(Arc::ptr_eq(a, b));
-            assert_eq!(Arc::strong_count(&w), 3);
-        } else {
-            panic!("wrong variant");
-        }
-    }
 
     #[test]
     fn uplink_error_flag() {
@@ -54,5 +54,16 @@ mod tests {
             error: Some("boom".into()),
         };
         assert!(u.error.is_some());
+    }
+
+    #[test]
+    fn round_broadcast_frame_is_cheaply_shareable() {
+        // the Arc-shared downlink frame replaces the old Downlink enum:
+        // every participant clones the same encoded bytes
+        use std::sync::Arc;
+        let frame = Arc::new(crate::fedserve::wire::encode_round(3, &[0.0f32; 1024]));
+        let f2 = frame.clone();
+        assert!(Arc::ptr_eq(&frame, &f2));
+        assert_eq!(Arc::strong_count(&frame), 2);
     }
 }

@@ -1,13 +1,15 @@
 //! The federated coordinator — the paper's Algorithm 1 as an L3 system.
 //!
-//! Topology: one parameter-server loop (the [`driver`]) + one OS thread per
-//! remote client ([`client::ClientWorker`]). The PS broadcasts the global
-//! model as an `Arc<Vec<f32>>` per round; clients train locally through the
-//! PJRT runtime service, compress their model delta (with optional
-//! error-feedback [`memory`]), and send honest payload bytes up a shared
-//! channel. The PS *decodes the bytes* (never peeks at the client's
-//! reconstruction), aggregates (eq. 7), steps the global model, and
-//! evaluates.
+//! Topology: one parameter-server loop (the [`driver`], a thin client of
+//! [`crate::fedserve`]) + one OS thread per remote client
+//! ([`client::ClientWorker`]). The PS broadcasts the global model as one
+//! shared encoded wire frame per round; clients train locally through the
+//! PJRT runtime service, compress their model delta through a
+//! [`crate::fedserve::session::ClientSession`] (with optional
+//! error-feedback [`memory`]), and send honest framed payload bytes up a
+//! shared channel. The PS *decodes the bytes* (never peeks at the client's
+//! reconstruction), aggregates on the sharded reducer (eq. 7), steps the
+//! global model, and evaluates.
 
 pub mod client;
 pub mod driver;
@@ -16,4 +18,4 @@ pub mod messages;
 
 pub use driver::{run_experiment, RunOutput};
 pub use memory::Memory;
-pub use messages::{Downlink, Uplink};
+pub use messages::Uplink;

@@ -1,0 +1,114 @@
+//! Sharded aggregation of decoded client deltas — eq. (7) at scale.
+//!
+//! The d-dimensional decoded updates are split into contiguous shards and
+//! reduced on scoped worker threads, one per shard (spawned per reduce; a
+//! persistent pool is a ROADMAP follow-on). Parity guarantee:
+//! within every dimension the additions happen in the same client order as
+//! the serial path, and f32 addition per index is order-identical, so
+//! [`aggregate_sharded`] is **bit-exact** against [`aggregate_serial`] for
+//! every shard count (asserted by `tests/fedserve_parity.rs` across
+//! {1, 3, 8} shards).
+
+/// Serial eq.-(7) reference: sum the decoded deltas in the given order.
+pub fn aggregate_serial(decoded: &[Vec<f32>], d: usize) -> Vec<f32> {
+    let mut agg = vec![0.0f32; d];
+    for dec in decoded {
+        assert_eq!(dec.len(), d, "decoded delta has wrong dimension");
+        for (a, x) in agg.iter_mut().zip(dec) {
+            *a += *x;
+        }
+    }
+    agg
+}
+
+/// Sharded reduce: contiguous dimension ranges, one scoped worker each.
+/// Bit-identical to [`aggregate_serial`] (same per-index addition order).
+pub fn aggregate_sharded(decoded: &[Vec<f32>], d: usize, shards: usize) -> Vec<f32> {
+    let shards = shards.max(1).min(d.max(1));
+    if shards <= 1 || decoded.is_empty() || d == 0 {
+        return aggregate_serial(decoded, d);
+    }
+    for dec in decoded {
+        assert_eq!(dec.len(), d, "decoded delta has wrong dimension");
+    }
+    let mut agg = vec![0.0f32; d];
+    let chunk = (d + shards - 1) / shards;
+    std::thread::scope(|s| {
+        for (si, slice) in agg.chunks_mut(chunk).enumerate() {
+            let start = si * chunk;
+            s.spawn(move || {
+                for dec in decoded {
+                    let src = &dec[start..start + slice.len()];
+                    for (a, x) in slice.iter_mut().zip(src) {
+                        *a += *x;
+                    }
+                }
+            });
+        }
+    });
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn deltas(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let root = Rng::new(seed);
+        (0..n)
+            .map(|c| {
+                let mut r = root.stream(11, c as u64);
+                (0..d).map(|_| (r.normal() * 0.1) as f32).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_is_bitwise_equal_to_serial() {
+        for &(n, d) in &[(1usize, 17usize), (4, 1000), (9, 4097)] {
+            let dec = deltas(n, d, 5);
+            let serial = aggregate_serial(&dec, d);
+            for shards in [1usize, 2, 3, 7, 8, 64] {
+                let sharded = aggregate_sharded(&dec, d, shards);
+                assert_eq!(serial.len(), sharded.len());
+                for i in 0..d {
+                    assert_eq!(
+                        serial[i].to_bits(),
+                        sharded[i].to_bits(),
+                        "n={n} d={d} shards={shards} dim={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_above_dimension_is_clamped() {
+        let dec = deltas(3, 5, 2);
+        let out = aggregate_sharded(&dec, 5, 1000);
+        assert_eq!(out, aggregate_serial(&dec, 5));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(aggregate_sharded(&[], 10, 4), vec![0.0f32; 10]);
+        assert!(aggregate_sharded(&[Vec::new()], 0, 4).is_empty());
+    }
+
+    #[test]
+    fn order_sensitivity_is_why_parity_matters() {
+        // three f32 values whose sum depends on association order — the
+        // shard split must never regroup across clients
+        let a = 1.0e8f32;
+        let b = -1.0e8f32;
+        let c = 1.0f32;
+        let dec = vec![vec![a], vec![b], vec![c]];
+        let serial = aggregate_serial(&dec, 1);
+        assert_eq!(serial[0], 1.0); // (a + b) + c
+        let sharded = aggregate_sharded(&dec, 1, 3);
+        assert_eq!(sharded[0].to_bits(), serial[0].to_bits());
+        // the other association would differ
+        assert_ne!(a + (b + c), (a + b) + c);
+    }
+}

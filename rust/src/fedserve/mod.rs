@@ -1,0 +1,38 @@
+//! fedserve — the sharded, pipelined parameter-server subsystem.
+//!
+//! The original `coordinator::driver` reproduced Algorithm 1 as a
+//! synchronous thread-per-client loop with in-memory message structs. This
+//! subsystem turns the server side into something a production deployment
+//! can grow from (see DESIGN.md §fedserve):
+//!
+//! * [`wire`] — a framed binary protocol (version header, length prefix,
+//!   CRC-32) so *only bytes* cross the transport and the in-process channel
+//!   can be swapped for a socket;
+//! * [`session`] — per-client sessions owning error-feedback memory and
+//!   round bookkeeping, plus the deterministic k-of-n participant
+//!   [`session::Scheduler`] (partial participation);
+//! * [`server`] — the [`server::FedServer`] round loop: deadline-drop
+//!   stragglers, discard stale frames, decode honest payloads, apply the
+//!   averaged step;
+//! * [`aggregate`] — the sharded eq.-(7) reduce, bit-exact against the
+//!   serial path at any shard count;
+//! * [`table_cache`] — a bounded LRU of standardized LBG designs shared by
+//!   all sessions and the server decoder, with hit-rate metrics;
+//! * [`sim`] — a runtime-free N-client exercise of all of the above (the
+//!   `repro serve` subcommand).
+//!
+//! `coordinator::driver::run_experiment` is now a thin client of this
+//! module: it contributes only training, evaluation, and row recording.
+
+pub mod aggregate;
+pub mod server;
+pub mod session;
+pub mod sim;
+pub mod table_cache;
+pub mod wire;
+
+pub use aggregate::{aggregate_serial, aggregate_sharded};
+pub use server::{FedServer, RoundSummary};
+pub use session::{ClientSession, Scheduler, SessionStats};
+pub use sim::{simulate, SimReport};
+pub use table_cache::{CacheStats, LruTableCache};

@@ -1,0 +1,366 @@
+//! The sharded, pipelined parameter server.
+//!
+//! [`FedServer`] owns the server half of Algorithm 1: sample participants,
+//! collect framed uplinks off the transport (deadline-dropping stragglers
+//! and discarding stale-round frames), decode the honest payload bytes with
+//! its own compressor instance, reduce the decoded deltas on the sharded
+//! aggregator, and apply the averaged step to the global model. The
+//! experiment driver (`coordinator::driver`) and the `repro serve`
+//! simulation are both thin clients of this loop.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::Compressor;
+use crate::config::ServerConfig;
+use crate::metrics::server::{RoundTiming, ServerStats};
+use crate::train::ModelSpec;
+
+use super::aggregate::aggregate_sharded;
+use super::session::{Scheduler, SessionStats};
+use super::wire;
+
+/// Outcome of one server round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundSummary {
+    pub round: usize,
+    /// uplinks accepted before the deadline
+    pub received: usize,
+    /// sampled participants that missed the deadline
+    pub dropped: usize,
+    /// frames discarded (stale round, duplicate, or unsampled sender)
+    pub stale: usize,
+    /// mean reported local training loss over received uplinks
+    pub train_loss_mean: f64,
+    /// mean ideal uplink bits (eq. 14–17 accounting) over received uplinks
+    pub bits_per_client: f64,
+    /// honest wire bytes received this round, framing included
+    pub framed_bytes: u64,
+}
+
+/// The parameter server: scheduler + per-client ledgers + decoder + stats.
+pub struct FedServer {
+    pub cfg: ServerConfig,
+    decoder: Box<dyn Compressor>,
+    scheduler: Scheduler,
+    pub sessions: Vec<SessionStats>,
+    pub stats: ServerStats,
+}
+
+impl FedServer {
+    pub fn new(
+        cfg: ServerConfig,
+        n_clients: usize,
+        seed: u64,
+        decoder: Box<dyn Compressor>,
+    ) -> FedServer {
+        FedServer {
+            cfg,
+            decoder,
+            scheduler: Scheduler::new(seed),
+            sessions: vec![SessionStats::default(); n_clients],
+            stats: ServerStats::default(),
+        }
+    }
+
+    /// Sample this round's participants (k of n, shuffled order — the order
+    /// is also the aggregation order).
+    pub fn select(&mut self, k: usize) -> Vec<usize> {
+        self.scheduler.sample(self.sessions.len(), k)
+    }
+
+    /// Serve one round: collect uplinks for `participants` off `up_rx`,
+    /// decode, shard-aggregate, and apply the eq.-(7) averaged step to `w`.
+    pub fn run_round(
+        &mut self,
+        round: usize,
+        participants: &[usize],
+        up_rx: &Receiver<Vec<u8>>,
+        spec: &ModelSpec,
+        w: &mut [f32],
+    ) -> Result<RoundSummary> {
+        let t0 = Instant::now();
+        // 0 = no deadline: block until every participant reports (the
+        // original driver semantics — results never depend on wall clock)
+        let deadline = (self.cfg.straggler_timeout_ms > 0)
+            .then(|| t0 + Duration::from_millis(self.cfg.straggler_timeout_ms));
+        let mut slots: Vec<Option<crate::coordinator::messages::Uplink>> = Vec::new();
+        slots.resize_with(participants.len(), || None);
+        let mut pending = participants.len();
+        let mut stale = 0usize;
+        let mut framed_bytes = 0u64;
+        'collect: while pending > 0 {
+            let frame = match deadline {
+                None => up_rx.recv().context("uplink channel closed")?,
+                Some(dl) => {
+                    let wait = dl.saturating_duration_since(Instant::now());
+                    // once the deadline passes, still drain frames that are
+                    // already queued — our own parse time must not
+                    // reclassify timely clients as stragglers
+                    let recv = if wait.is_zero() {
+                        up_rx.try_recv().map_err(|e| match e {
+                            TryRecvError::Empty => RecvTimeoutError::Timeout,
+                            TryRecvError::Disconnected => RecvTimeoutError::Disconnected,
+                        })
+                    } else {
+                        up_rx.recv_timeout(wait)
+                    };
+                    match recv {
+                        Ok(f) => f,
+                        Err(RecvTimeoutError::Timeout) => break 'collect,
+                        Err(RecvTimeoutError::Disconnected) => bail!("uplink channel closed"),
+                    }
+                }
+            };
+            framed_bytes += frame.len() as u64;
+            let up = match wire::decode(&frame)? {
+                wire::Message::Update(u) => u,
+                other => bail!("unexpected frame on the uplink channel: {other:?}"),
+            };
+            if let Some(e) = &up.error {
+                // a late error from an *earlier* round belongs to a client
+                // this round already dropped — count it stale instead of
+                // aborting; current-round (or unknown-round) failures abort
+                if up.round == round || up.round == wire::ROUND_UNKNOWN {
+                    bail!("client {} failed in round {round}: {e}", up.client_id);
+                }
+                stale += 1;
+                continue 'collect;
+            }
+            let slot = participants.iter().position(|&p| p == up.client_id);
+            match slot {
+                Some(i) if up.round == round && slots[i].is_none() => {
+                    slots[i] = Some(up);
+                    pending -= 1;
+                }
+                _ => stale += 1,
+            }
+        }
+        let collect_ns = t0.elapsed().as_nanos() as u64;
+
+        let mut dropped = 0usize;
+        for (i, &id) in participants.iter().enumerate() {
+            let s = &mut self.sessions[id];
+            match &slots[i] {
+                Some(up) => {
+                    s.participated += 1;
+                    s.last_round = Some(round);
+                    s.bytes_up += (up.payload.len() + wire::UPDATE_OVERHEAD) as u64;
+                }
+                None => {
+                    s.dropped += 1;
+                    dropped += 1;
+                }
+            }
+        }
+
+        let t1 = Instant::now();
+        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(participants.len());
+        let mut train_loss = 0.0f64;
+        let mut bits = 0.0f64;
+        for up in slots.iter().flatten() {
+            decoded.push(self.decoder.decompress(&up.payload, spec)?);
+            train_loss += up.train_loss;
+            bits += up.report.ideal_total_bits();
+        }
+        let decode_ns = t1.elapsed().as_nanos() as u64;
+
+        let t2 = Instant::now();
+        let received = decoded.len();
+        if received > 0 {
+            // eq. (7): average the reconstructed updates, subtract
+            let agg = aggregate_sharded(&decoded, w.len(), self.cfg.shards);
+            let scale = 1.0 / received as f32;
+            for (wi, a) in w.iter_mut().zip(&agg) {
+                *wi -= scale * a;
+            }
+        }
+        let aggregate_ns = t2.elapsed().as_nanos() as u64;
+
+        self.stats.push(RoundTiming {
+            round,
+            collect_ns,
+            decode_ns,
+            aggregate_ns,
+            received,
+            dropped,
+            stale,
+            framed_bytes,
+        });
+        Ok(RoundSummary {
+            round,
+            received,
+            dropped,
+            stale,
+            train_loss_mean: if received > 0 { train_loss / received as f64 } else { f64::NAN },
+            bits_per_client: if received > 0 { bits / received as f64 } else { 0.0 },
+            framed_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::tiny_spec;
+    use crate::compress::{Compressor, NoCompression};
+    use crate::coordinator::messages::Uplink;
+    use std::sync::mpsc::channel;
+
+    fn uplink_for(id: usize, round: usize, g: &[f32], spec: &ModelSpec) -> Vec<u8> {
+        let mut c = NoCompression;
+        let out = c.compress(g, spec).unwrap();
+        wire::encode_update(&Uplink {
+            client_id: id,
+            round,
+            payload: out.payload,
+            report: out.report,
+            train_loss: 1.5,
+            error: None,
+        })
+    }
+
+    fn quick_cfg(deadline_ms: u64, shards: usize) -> ServerConfig {
+        ServerConfig { straggler_timeout_ms: deadline_ms, shards, ..Default::default() }
+    }
+
+    #[test]
+    fn full_round_applies_the_averaged_step() {
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(5000, 2), 2, 1, Box::new(NoCompression));
+        let g0 = vec![1.0f32; 8];
+        let g1 = vec![3.0f32; 8];
+        tx.send(uplink_for(0, 0, &g0, &spec)).unwrap();
+        tx.send(uplink_for(1, 0, &g1, &spec)).unwrap();
+        let mut w = vec![10.0f32; 8];
+        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        assert_eq!(s.received, 2);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.train_loss_mean, 1.5);
+        assert_eq!(w, vec![8.0f32; 8]); // 10 - (1+3)/2
+        assert_eq!(server.sessions[0].participated, 1);
+        assert!(server.sessions[0].bytes_up > 0);
+        assert_eq!(server.stats.rounds.len(), 1);
+        assert!(s.framed_bytes > 0);
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_but_keeps_the_round() {
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
+        let g0 = vec![2.0f32; 8];
+        tx.send(uplink_for(0, 0, &g0, &spec)).unwrap();
+        // client 1 never reports
+        let mut w = vec![0.0f32; 8];
+        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        assert_eq!(s.received, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(w, vec![-2.0f32; 8]); // average over the received one
+        assert_eq!(server.sessions[1].dropped, 1);
+        assert_eq!(server.sessions[1].participated, 0);
+    }
+
+    #[test]
+    fn stale_round_frames_are_discarded() {
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
+        let g = vec![1.0f32; 8];
+        tx.send(uplink_for(0, 7, &g, &spec)).unwrap(); // wrong round
+        tx.send(uplink_for(1, 0, &g, &spec)).unwrap();
+        let mut w = vec![0.0f32; 8];
+        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        assert_eq!(s.stale, 1);
+        assert_eq!(s.received, 1);
+        assert_eq!(s.dropped, 1); // client 0's real uplink never came
+    }
+
+    #[test]
+    fn stale_error_from_an_earlier_round_does_not_abort() {
+        // a straggler dropped in round 0 sends its failure late; round 1
+        // must count it stale, not kill the run
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
+        tx.send(wire::encode_update(&Uplink::failure(0, 0, "late crash".into()))).unwrap();
+        tx.send(uplink_for(1, 1, &[1.0f32; 8], &spec)).unwrap();
+        let mut w = vec![0.0f32; 8];
+        let s = server.run_round(1, &[0, 1], &rx, &spec, &mut w).unwrap();
+        assert_eq!(s.stale, 1);
+        assert_eq!(s.received, 1);
+    }
+
+    #[test]
+    fn unknown_round_error_aborts() {
+        // a client that could not decode the downlink has no round to name;
+        // its failure must still abort instead of deadlocking the collect
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(0, 1), 1, 1, Box::new(NoCompression));
+        tx.send(wire::encode_update(&Uplink::failure(
+            0,
+            wire::ROUND_UNKNOWN,
+            "bad downlink frame".into(),
+        )))
+        .unwrap();
+        let mut w = vec![0.0f32; 8];
+        let err = server.run_round(5, &[0], &rx, &spec, &mut w).unwrap_err();
+        assert!(format!("{err}").contains("bad downlink frame"), "{err}");
+    }
+
+    #[test]
+    fn zero_deadline_blocks_until_all_report() {
+        // straggler_timeout_ms = 0 waits: send the uplink from another
+        // thread after a delay and the round still completes with no drops
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(0, 1), 1, 1, Box::new(NoCompression));
+        let spec2 = spec.clone();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(uplink_for(0, 0, &[4.0f32; 8], &spec2)).unwrap();
+        });
+        let mut w = vec![0.0f32; 8];
+        let s = server.run_round(0, &[0], &rx, &spec, &mut w).unwrap();
+        sender.join().unwrap();
+        assert_eq!(s.received, 1);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(w, vec![-4.0f32; 8]);
+    }
+
+    #[test]
+    fn client_error_aborts_the_round() {
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(1000, 1), 1, 1, Box::new(NoCompression));
+        tx.send(wire::encode_update(&Uplink {
+            client_id: 0,
+            round: 0,
+            payload: Vec::new(),
+            report: Default::default(),
+            train_loss: f64::NAN,
+            error: Some("local divergence".into()),
+        }))
+        .unwrap();
+        let mut w = vec![0.0f32; 8];
+        let err = server.run_round(0, &[0], &rx, &spec, &mut w).unwrap_err();
+        assert!(format!("{err}").contains("local divergence"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_frame_is_an_error_not_a_crash() {
+        let spec = tiny_spec(6, 2);
+        let (tx, rx) = channel();
+        let mut server = FedServer::new(quick_cfg(1000, 1), 1, 1, Box::new(NoCompression));
+        let mut f = uplink_for(0, 0, &[1.0f32; 8], &spec);
+        let len = f.len();
+        f[len - 1] ^= 0xff; // corrupt the checksum
+        tx.send(f).unwrap();
+        let mut w = vec![0.0f32; 8];
+        assert!(server.run_round(0, &[0], &rx, &spec, &mut w).is_err());
+    }
+}

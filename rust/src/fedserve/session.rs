@@ -1,0 +1,180 @@
+//! Per-client session state and the participant scheduler.
+//!
+//! [`ClientSession`] is the client endpoint's working state: the
+//! error-feedback [`Memory`], the compressor (which owns the fitted
+//! distribution state through its shared table source), and round
+//! bookkeeping. Both the threaded [`crate::coordinator::client`] worker and
+//! the `serve` simulation drive their uplinks through it, so the
+//! compress/error-feedback interplay lives in exactly one place.
+//!
+//! [`Scheduler`] is the server's deterministic k-of-n participant sampler
+//! (partial participation, paper Sec. IV-B); [`SessionStats`] is the
+//! server's per-client ledger (participation, straggler drops, honest
+//! uplink bytes).
+
+use anyhow::Result;
+
+use crate::compress::{Compressed, Compressor};
+use crate::coordinator::memory::Memory;
+use crate::train::ModelSpec;
+use crate::util::rng::Rng;
+
+use super::wire;
+
+/// Client-side session: error feedback + compression + bookkeeping.
+pub struct ClientSession {
+    pub id: usize,
+    pub memory: Option<Memory>,
+    pub compressor: Box<dyn Compressor>,
+    /// rounds this session produced an uplink for
+    pub rounds_participated: usize,
+    pub last_round: Option<usize>,
+    /// honest bytes sent up, including wire framing
+    pub bytes_up: u64,
+}
+
+impl ClientSession {
+    pub fn new(id: usize, compressor: Box<dyn Compressor>, memory: Option<Memory>) -> Self {
+        ClientSession {
+            id,
+            memory,
+            compressor,
+            rounds_participated: 0,
+            last_round: None,
+            bytes_up: 0,
+        }
+    }
+
+    /// One uplink: error-feedback augment, compress, record the residual,
+    /// update bookkeeping. Returns the encoded payload + reconstruction.
+    pub fn encode_update(
+        &mut self,
+        round: usize,
+        update: &[f32],
+        spec: &ModelSpec,
+    ) -> Result<Compressed> {
+        let augmented = match &self.memory {
+            Some(mem) => mem.add_back(update)?,
+            None => update.to_vec(),
+        };
+        let out = self.compressor.compress(&augmented, spec)?;
+        if let Some(mem) = &mut self.memory {
+            mem.update(&augmented, &out.reconstructed);
+        }
+        self.rounds_participated += 1;
+        self.last_round = Some(round);
+        self.bytes_up += (out.payload.len() + wire::UPDATE_OVERHEAD) as u64;
+        Ok(out)
+    }
+
+    /// L2 norm of the carried error-feedback residual (0 without memory).
+    pub fn residual_norm(&self) -> f64 {
+        self.memory.as_ref().map_or(0.0, |m| m.residual_norm())
+    }
+}
+
+/// Server-side per-client ledger.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    /// uplinks accepted from this client
+    pub participated: usize,
+    /// rounds where this client was sampled but missed the deadline
+    pub dropped: usize,
+    /// honest uplink bytes received, including wire framing
+    pub bytes_up: u64,
+    pub last_round: Option<usize>,
+}
+
+/// Deterministic k-of-n participant sampler (one shuffle per round, seeded
+/// from the experiment seed so whole runs replay bit-exactly).
+pub struct Scheduler {
+    rng: Rng,
+}
+
+impl Scheduler {
+    pub fn new(seed: u64) -> Scheduler {
+        Scheduler { rng: Rng::new(seed ^ 0x9d_c3) }
+    }
+
+    /// Sample `k` of `n` clients without replacement; the returned order is
+    /// the aggregation order (the parity-tested serial reference uses it
+    /// verbatim).
+    pub fn sample(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        order.truncate(k.clamp(1, n.max(1)));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::tiny_spec;
+    use crate::compress::NoCompression;
+
+    #[test]
+    fn session_bookkeeping_counts_framed_bytes() {
+        let spec = tiny_spec(30, 2);
+        let mut s = ClientSession::new(3, Box::new(NoCompression), None);
+        let update = vec![0.5f32; 32];
+        let out = s.encode_update(0, &update, &spec).unwrap();
+        assert_eq!(s.rounds_participated, 1);
+        assert_eq!(s.last_round, Some(0));
+        assert_eq!(s.bytes_up, (out.payload.len() + wire::UPDATE_OVERHEAD) as u64);
+        s.encode_update(1, &update, &spec).unwrap();
+        assert_eq!(s.rounds_participated, 2);
+        assert_eq!(s.last_round, Some(1));
+    }
+
+    #[test]
+    fn session_error_feedback_matches_memory_semantics() {
+        // NoCompression reconstructs exactly, so the residual stays zero.
+        let spec = tiny_spec(30, 2);
+        let mut s = ClientSession::new(0, Box::new(NoCompression), Some(Memory::new(32, 1.0)));
+        let update = vec![0.25f32; 32];
+        s.encode_update(0, &update, &spec).unwrap();
+        assert_eq!(s.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn session_dimension_mismatch_fails_hard() {
+        let spec = tiny_spec(30, 2);
+        let mut s = ClientSession::new(0, Box::new(NoCompression), Some(Memory::new(10, 1.0)));
+        let err = s.encode_update(0, &vec![0.0f32; 32], &spec).unwrap_err();
+        assert!(format!("{err}").contains("dimension mismatch"), "{err}");
+        // failed rounds are not counted as participation
+        assert_eq!(s.rounds_participated, 0);
+    }
+
+    #[test]
+    fn scheduler_is_deterministic_and_unbiased_enough() {
+        let mut a = Scheduler::new(33);
+        let mut b = Scheduler::new(33);
+        for _ in 0..5 {
+            assert_eq!(a.sample(10, 4), b.sample(10, 4));
+        }
+        // samples are permutation prefixes: distinct ids in range
+        let mut c = Scheduler::new(7);
+        for _ in 0..50 {
+            let s = c.sample(10, 4);
+            assert_eq!(s.len(), 4);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4);
+            assert!(sorted.iter().all(|&x| x < 10));
+        }
+        // different seed, different schedule (astronomically likely)
+        let mut d = Scheduler::new(8);
+        let diffs = (0..10).filter(|_| c.sample(10, 10) != d.sample(10, 10)).count();
+        assert!(diffs > 0);
+    }
+
+    #[test]
+    fn scheduler_clamps_k() {
+        let mut s = Scheduler::new(1);
+        assert_eq!(s.sample(5, 99).len(), 5);
+        assert_eq!(s.sample(5, 0).len(), 1);
+    }
+}

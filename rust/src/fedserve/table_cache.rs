@@ -1,0 +1,195 @@
+//! Bounded LRU cache of standardized LBG quantizer designs.
+//!
+//! The paper's Sec. V-B trick pre-computes quantizers per snapped
+//! `(family, shape, M, levels)` key; the unbounded `QuantizerTables` serves
+//! single experiments fine, but a long-lived parameter server sees an
+//! open-ended stream of fitted shapes across rounds and concurrent
+//! sessions. [`LruTableCache`] bounds that memory with
+//! least-recently-used eviction and exposes hit/miss counters so the
+//! server's metrics can report the reuse rate (the whole point of the
+//! table snap: repeated rounds should *hit*, not re-run LBG).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::quantizer::tables::design_for;
+use crate::quantizer::{Family, Quantizer, TableKey, TableSource, SHAPE_STEP};
+
+/// Cache counters snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+impl CacheStats {
+    /// hits / lookups, 0 when untouched.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    q: Quantizer,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<TableKey, Entry>,
+    /// monotone logical clock for recency
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-shared bounded LRU of standardized quantizer designs.
+pub struct LruTableCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl LruTableCache {
+    pub fn new(capacity: usize) -> LruTableCache {
+        LruTableCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.map.len(),
+        }
+    }
+}
+
+impl TableSource for LruTableCache {
+    fn get(&self, family: Family, shape: f64, m: f64, levels: usize) -> Quantizer {
+        let key = TableKey::new(family, shape.max(SHAPE_STEP), m, levels);
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            match inner.map.get_mut(&key) {
+                Some(e) => {
+                    e.last_used = tick;
+                    inner.hits += 1;
+                    return e.q.clone();
+                }
+                None => inner.misses += 1,
+            }
+        }
+        // LBG runs outside the lock so concurrent sessions don't serialize
+        // on a design; a racing miss on the same key just re-designs the
+        // identical (deterministic) table and the second insert wins.
+        let q = design_for(key);
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+            let victim = inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            if let Some(v) = victim {
+                inner.map.remove(&v);
+                inner.evictions += 1;
+            }
+        }
+        inner.map.insert(key, Entry { q: q.clone(), last_used: tick });
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn hits_and_misses_are_counted() {
+        let c = LruTableCache::new(8);
+        let a = c.get(Family::GenNorm, 1.501, 2.0, 8);
+        let b = c.get(Family::GenNorm, 1.499, 2.0, 8); // snaps to the same key
+        assert_eq!(a, b);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_bounds_and_lru_eviction() {
+        let c = LruTableCache::new(2);
+        c.get(Family::GenNorm, 1.0, 0.0, 4); // A
+        c.get(Family::GenNorm, 1.5, 0.0, 4); // B
+        c.get(Family::GenNorm, 1.0, 0.0, 4); // touch A (hit)
+        c.get(Family::GenNorm, 2.0, 0.0, 4); // C evicts B (least recent)
+        let s = c.stats();
+        assert_eq!(s.len, 2);
+        assert_eq!(s.evictions, 1);
+        // A still cached (hit), B gone (miss)
+        c.get(Family::GenNorm, 1.0, 0.0, 4);
+        let s2 = c.stats();
+        assert_eq!(s2.hits, s.hits + 1);
+        c.get(Family::GenNorm, 1.5, 0.0, 4);
+        assert_eq!(c.stats().misses, s2.misses + 1);
+    }
+
+    #[test]
+    fn matches_unbounded_tables_designs() {
+        use crate::quantizer::QuantizerTables;
+        let lru = LruTableCache::new(16);
+        let plain = QuantizerTables::new();
+        for shape in [0.6, 1.0, 1.8] {
+            let a = TableSource::get(&lru, Family::Weibull, shape, 2.0, 8);
+            let b = plain.get(Family::Weibull, shape, 2.0, 8);
+            assert_eq!(a, b, "shape {shape}");
+        }
+    }
+
+    #[test]
+    fn usable_as_dyn_table_source_across_threads() {
+        let c: Arc<dyn TableSource> = Arc::new(LruTableCache::new(8));
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let shape = 0.8 + 0.1 * (i % 2) as f64;
+                c.get(Family::GenNorm, shape, 2.0, 8).centers.len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 8);
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let c = LruTableCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.get(Family::GenNorm, 1.0, 0.0, 4);
+        c.get(Family::GenNorm, 1.5, 0.0, 4);
+        assert_eq!(c.stats().len, 1);
+    }
+}

@@ -1,0 +1,423 @@
+//! Framed binary wire protocol between the parameter server and clients.
+//!
+//! Nothing but bytes crosses the channel: every PS↔client message is one
+//! length-prefixed frame with a version header and a CRC-32 checksum, so
+//! the in-process mpsc transport can be swapped for a real socket without
+//! touching either endpoint.
+//!
+//! ```text
+//! frame := magic[2] ("M2") | version u8 | kind u8 | len u32 LE
+//!          | payload[len] | crc32 u32 LE
+//! ```
+//!
+//! The checksum covers `version..payload` (everything except the magic and
+//! the checksum itself), so any single corrupted byte is rejected: magic and
+//! length damage fail structurally, everything else fails the CRC.
+//!
+//! Message payloads (all little-endian):
+//! * `Round`    — round u64 | n u32 | n × f32 weights (bit-exact roundtrip,
+//!                NaN included)
+//! * `Shutdown` — empty
+//! * `Update`   — client u32 | round u64 | train_loss f64 | flags u8
+//!                | [err_len u32 | err utf-8] | RateReport (7 × u64/f64)
+//!                | body_len u32 | encoded compressor payload
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::RateReport;
+use crate::coordinator::messages::Uplink;
+
+/// Frame magic: "M2".
+pub const MAGIC: [u8; 2] = [0x4d, 0x32];
+/// Wire protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed frame header: magic + version + kind + payload length.
+pub const HEADER_BYTES: usize = 8;
+/// Fixed per-frame overhead: header + CRC-32 trailer.
+pub const FRAME_OVERHEAD: usize = HEADER_BYTES + 4;
+/// Fixed wire overhead of an `Update` carrying no error string: frame
+/// overhead + client id + round + train loss + flags + rate report
+/// + body length. Everything beyond this is the compressor payload itself.
+pub const UPDATE_OVERHEAD: usize = FRAME_OVERHEAD + 4 + 8 + 8 + 1 + 56 + 4;
+
+/// Sentinel round id for uplinks whose round is unknowable (e.g. the
+/// client could not decode the downlink frame that named the round).
+/// The server treats error uplinks carrying it as current, never stale.
+pub const ROUND_UNKNOWN: usize = usize::MAX;
+
+const KIND_ROUND: u8 = 1;
+const KIND_SHUTDOWN: u8 = 2;
+const KIND_UPDATE: u8 = 3;
+
+/// One decoded wire message.
+#[derive(Debug)]
+pub enum Message {
+    /// PS → client: the global model for a round.
+    Round { round: usize, weights: Vec<f32> },
+    /// PS → client: stop serving.
+    Shutdown,
+    /// Client → PS: one compressed update.
+    Update(Uplink),
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[2..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Encode a PS → client round broadcast.
+pub fn encode_round(round: usize, weights: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + 4 * weights.len());
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    p.extend_from_slice(&(weights.len() as u32).to_le_bytes());
+    for &w in weights {
+        p.extend_from_slice(&w.to_le_bytes());
+    }
+    frame(KIND_ROUND, &p)
+}
+
+/// Encode a PS → client shutdown.
+pub fn encode_shutdown() -> Vec<u8> {
+    frame(KIND_SHUTDOWN, &[])
+}
+
+/// Encode a client → PS update.
+pub fn encode_update(up: &Uplink) -> Vec<u8> {
+    let err_len = up.error.as_ref().map_or(0, |e| 4 + e.len());
+    let mut p = Vec::with_capacity(UPDATE_OVERHEAD - FRAME_OVERHEAD + err_len + up.payload.len());
+    p.extend_from_slice(&(up.client_id as u32).to_le_bytes());
+    // the unknown-round sentinel is pinned to u64::MAX on the wire so it
+    // survives endpoints with different pointer widths
+    let round_wire = if up.round == ROUND_UNKNOWN { u64::MAX } else { up.round as u64 };
+    p.extend_from_slice(&round_wire.to_le_bytes());
+    p.extend_from_slice(&up.train_loss.to_le_bytes());
+    match &up.error {
+        None => p.push(0),
+        Some(e) => {
+            p.push(1);
+            p.extend_from_slice(&(e.len() as u32).to_le_bytes());
+            p.extend_from_slice(e.as_bytes());
+        }
+    }
+    let r = &up.report;
+    p.extend_from_slice(&(r.d as u64).to_le_bytes());
+    p.extend_from_slice(&(r.k as u64).to_le_bytes());
+    p.extend_from_slice(&r.position_bits_ideal.to_le_bytes());
+    p.extend_from_slice(&r.position_bits_actual.to_le_bytes());
+    p.extend_from_slice(&r.value_bits.to_le_bytes());
+    p.extend_from_slice(&r.side_bits.to_le_bytes());
+    p.extend_from_slice(&(r.payload_bytes as u64).to_le_bytes());
+    p.extend_from_slice(&(up.payload.len() as u32).to_le_bytes());
+    p.extend_from_slice(&up.payload);
+    frame(KIND_UPDATE, &p)
+}
+
+/// Little-endian cursor over a frame payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).context("payload length overflow")?;
+        let s = self.buf.get(self.off..end).context("short payload")?;
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("{} trailing bytes in payload", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+fn parse_round(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let round = r.u64()? as usize;
+    let n = r.u32()? as usize;
+    let raw = r.take(n.checked_mul(4).context("weight count overflow")?)?;
+    let weights = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    r.done()?;
+    Ok(Message::Round { round, weights })
+}
+
+fn parse_update(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let client_id = r.u32()? as usize;
+    let round_wire = r.u64()?;
+    let round = if round_wire == u64::MAX { ROUND_UNKNOWN } else { round_wire as usize };
+    let train_loss = r.f64()?;
+    let error = match r.u8()? {
+        0 => None,
+        1 => {
+            let n = r.u32()? as usize;
+            let raw = r.take(n)?;
+            Some(String::from_utf8(raw.to_vec()).context("non-utf8 error string")?)
+        }
+        f => bail!("bad update flags {f:#04x}"),
+    };
+    let report = RateReport {
+        d: r.u64()? as usize,
+        k: r.u64()? as usize,
+        position_bits_ideal: r.f64()?,
+        position_bits_actual: r.u64()?,
+        value_bits: r.u64()?,
+        side_bits: r.u64()?,
+        payload_bytes: r.u64()? as usize,
+    };
+    let n = r.u32()? as usize;
+    let body = r.take(n)?.to_vec();
+    r.done()?;
+    Ok(Message::Update(Uplink { client_id, round, payload: body, report, train_loss, error }))
+}
+
+/// Decode one frame from the front of `buf`; returns the message and the
+/// number of bytes consumed (streaming transports feed a growing buffer).
+pub fn decode_prefix(buf: &[u8]) -> Result<(Message, usize)> {
+    if buf.len() < FRAME_OVERHEAD {
+        bail!("short frame: {} bytes", buf.len());
+    }
+    if buf[0..2] != MAGIC {
+        bail!("bad frame magic {:02x}{:02x}", buf[0], buf[1]);
+    }
+    if buf[2] != VERSION {
+        bail!("unsupported wire version {}", buf[2]);
+    }
+    let kind = buf[3];
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let total = FRAME_OVERHEAD.checked_add(len).context("frame length overflow")?;
+    if buf.len() < total {
+        bail!("truncated frame: have {} of {} bytes", buf.len(), total);
+    }
+    let crc_got = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
+    let crc_want = crc32(&buf[2..HEADER_BYTES + len]);
+    if crc_got != crc_want {
+        bail!("frame checksum mismatch: got {crc_got:08x}, want {crc_want:08x}");
+    }
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + len];
+    let msg = match kind {
+        KIND_ROUND => parse_round(payload)?,
+        KIND_SHUTDOWN => {
+            if !payload.is_empty() {
+                bail!("shutdown frame with {} payload bytes", payload.len());
+            }
+            Message::Shutdown
+        }
+        KIND_UPDATE => parse_update(payload)?,
+        k => bail!("unknown frame kind {k}"),
+    };
+    Ok((msg, total))
+}
+
+/// Decode a buffer holding exactly one frame.
+pub fn decode(buf: &[u8]) -> Result<Message> {
+    let (msg, used) = decode_prefix(buf)?;
+    if used != buf.len() {
+        bail!("{} trailing bytes after frame", buf.len() - used);
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn round_roundtrips_bit_exactly() {
+        let weights = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, -3.25e-20];
+        let frame = encode_round(42, &weights);
+        match decode(&frame).unwrap() {
+            Message::Round { round, weights: w } => {
+                assert_eq!(round, 42);
+                assert_eq!(w.len(), weights.len());
+                for (a, b) in w.iter().zip(&weights) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_roundtrips() {
+        let f = encode_shutdown();
+        assert_eq!(f.len(), FRAME_OVERHEAD);
+        assert!(matches!(decode(&f).unwrap(), Message::Shutdown));
+    }
+
+    fn sample_uplink(error: Option<String>) -> Uplink {
+        Uplink {
+            client_id: 7,
+            round: 3,
+            payload: vec![1, 2, 3, 250, 251],
+            report: RateReport {
+                d: 1000,
+                k: 600,
+                position_bits_ideal: 970.25,
+                position_bits_actual: 1100,
+                value_bits: 1200,
+                side_bits: 64,
+                payload_bytes: 5,
+            },
+            train_loss: 0.75,
+            error,
+        }
+    }
+
+    #[test]
+    fn update_roundtrips_with_report() {
+        let up = sample_uplink(None);
+        let f = encode_update(&up);
+        assert_eq!(f.len(), UPDATE_OVERHEAD + up.payload.len());
+        match decode(&f).unwrap() {
+            Message::Update(u) => {
+                assert_eq!(u.client_id, 7);
+                assert_eq!(u.round, 3);
+                assert_eq!(u.payload, vec![1, 2, 3, 250, 251]);
+                assert_eq!(u.train_loss, 0.75);
+                assert_eq!(u.error, None);
+                assert_eq!(u.report.d, 1000);
+                assert_eq!(u.report.k, 600);
+                assert_eq!(u.report.position_bits_ideal, 970.25);
+                assert_eq!(u.report.position_bits_actual, 1100);
+                assert_eq!(u.report.value_bits, 1200);
+                assert_eq!(u.report.side_bits, 64);
+                assert_eq!(u.report.payload_bytes, 5);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn update_error_string_roundtrips() {
+        let up = sample_uplink(Some("boom: ünïcode".into()));
+        let f = encode_update(&up);
+        match decode(&f).unwrap() {
+            Message::Update(u) => assert_eq!(u.error.as_deref(), Some("boom: ünïcode")),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_unknown_sentinel_roundtrips() {
+        let up = Uplink::failure(3, ROUND_UNKNOWN, "no idea which round".into());
+        match decode(&encode_update(&up)).unwrap() {
+            Message::Update(u) => {
+                assert_eq!(u.round, ROUND_UNKNOWN);
+                assert_eq!(u.error.as_deref(), Some("no idea which round"));
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let f = encode_round(9, &[1.0, 2.0, 3.0]);
+        for i in 0..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x41;
+            assert!(decode(&bad).is_err(), "corruption at byte {i} accepted");
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let f = encode_update(&sample_uplink(None));
+        for cut in 0..f.len() {
+            assert!(decode(&f[..cut]).is_err(), "truncation to {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_and_version_rejected() {
+        // hand-build structurally valid frames with bad kind / version
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, 9, 0, 0, 0, 0];
+        let crc = crc32(&f[2..]);
+        f.extend_from_slice(&crc.to_le_bytes());
+        let err = decode(&f).unwrap_err();
+        assert!(format!("{err}").contains("unknown frame kind"), "{err}");
+
+        let mut f = vec![MAGIC[0], MAGIC[1], 99, KIND_SHUTDOWN, 0, 0, 0, 0];
+        let crc = crc32(&f[2..]);
+        f.extend_from_slice(&crc.to_le_bytes());
+        assert!(decode(&f).is_err());
+    }
+
+    #[test]
+    fn decode_prefix_walks_concatenated_frames() {
+        let mut buf = encode_round(1, &[5.0]);
+        let first_len = buf.len();
+        buf.extend_from_slice(&encode_shutdown());
+        let (m1, used) = decode_prefix(&buf).unwrap();
+        assert_eq!(used, first_len);
+        assert!(matches!(m1, Message::Round { round: 1, .. }));
+        let (m2, used2) = decode_prefix(&buf[used..]).unwrap();
+        assert_eq!(used + used2, buf.len());
+        assert!(matches!(m2, Message::Shutdown));
+        // decode() on the concatenation rejects the trailing frame
+        assert!(decode(&buf).is_err());
+    }
+}

@@ -16,6 +16,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fedserve;
 pub mod figures;
 pub mod metrics;
 pub mod quantizer;

@@ -4,6 +4,8 @@
 //!   table1 | table2                    paper tables
 //!   fig1 | fig2 | fig3 | fig4 | fig5a | fig5b   figure data (CSV)
 //!   train                              one configurable FL run
+//!   serve                              fedserve: N simulated clients through
+//!                                      the wire format (no PJRT needed)
 //!   quantizer-table                    dump LBG designs for a shape grid
 //!   smoke                              runtime sanity (PJRT + artifacts)
 //!
@@ -125,6 +127,44 @@ fn main() -> Result<()> {
             );
             write_out(&args, &rec.to_csv())?;
         }
+        "serve" => {
+            // fedserve end-to-end without PJRT: simulated clients, real wire
+            // frames, sharded aggregation, LRU table cache
+            let clients = args.usize_or("clients", 8)?;
+            let rounds = args.usize_or("rounds", 5)?;
+            let d = args.usize_or("dim", 8192)?;
+            anyhow::ensure!(clients > 0, "--clients must be at least 1");
+            anyhow::ensure!(rounds > 0, "--rounds must be at least 1");
+            anyhow::ensure!(d > 0, "--dim must be at least 1");
+            let scheme =
+                Scheme::parse(&args.str_or("scheme", "m22-gennorm"), args.f64_or("m", 2.0)?)?;
+            let rq = args.usize_or("rate", 2)? as u32;
+            let mut cfg = ExperimentConfig::new("sim", scheme, rq, rounds);
+            cfg.n_clients = clients;
+            cfg.keep_frac = args.f64_or("keep", 0.6)?;
+            cfg.seed = args.usize_or("seed", 33)? as u64;
+            cfg.memory = args.bool("memory");
+            cfg.server.shards = args.usize_or("shards", 4)?;
+            cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 30_000)? as u64;
+            cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
+            let sample = args.usize_or("sample", 0)?;
+            if sample > 0 {
+                cfg.server.sampled_clients = Some(sample);
+            }
+            eprintln!("config: {}", cfg.to_json());
+            let report = m22::fedserve::simulate(&cfg, d)?;
+            eprintln!("{}", report.stats.summary());
+            eprintln!(
+                "final |w| = {:.6}  bits/round/client = {:.0}  \
+                 ({} clients, d = {}, {} rounds)",
+                report.w_norm(),
+                report.bits_per_round,
+                report.clients,
+                report.d,
+                report.rounds
+            );
+            write_out(&args, &report.stats.to_csv())?;
+        }
         "quantizer-table" => {
             let levels = args.usize_or("levels", 8)?;
             let m = args.f64_or("m", 2.0)?;
@@ -148,8 +188,9 @@ fn main() -> Result<()> {
         "" | "help" => {
             println!(
                 "repro — M22 reproduction launcher\n\
-                 usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|quantizer-table|smoke> [flags]\n\
+                 usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|serve|quantizer-table|smoke> [flags]\n\
                  flags: --out FILE  --full  --rounds N  --seeds N  --rate R  --arch A --scheme S --m M\n\
+                 serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory\n\
                  see DESIGN.md for the per-experiment index"
             );
             return Ok(());

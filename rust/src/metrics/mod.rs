@@ -1,7 +1,10 @@
-//! Metrics: the per-bit accuracy measure (paper eq. 9) and run recording.
+//! Metrics: the per-bit accuracy measure (paper eq. 9), run recording, and
+//! fedserve server-side timings/cache counters.
 
 pub mod perbit;
 pub mod recorder;
+pub mod server;
 
 pub use perbit::{per_bit_accuracy, PerBitInput};
 pub use recorder::{Recorder, Row};
+pub use server::{RoundTiming, ServerStats};

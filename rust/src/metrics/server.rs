@@ -1,0 +1,164 @@
+//! Server-side run metrics for the fedserve parameter server: per-round
+//! phase timings, straggler accounting, honest framed-byte totals, and the
+//! quantizer-table cache hit rate.
+
+/// Timings + counters of one server round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundTiming {
+    pub round: usize,
+    /// waiting on + validating framed uplinks
+    pub collect_ns: u64,
+    /// byte-payload decode (the PS-side decompressor)
+    pub decode_ns: u64,
+    /// sharded eq.-(7) reduce + model step
+    pub aggregate_ns: u64,
+    pub received: usize,
+    pub dropped: usize,
+    pub stale: usize,
+    /// wire bytes received this round, framing included
+    pub framed_bytes: u64,
+}
+
+/// Accumulated server statistics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub rounds: Vec<RoundTiming>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServerStats {
+    pub fn push(&mut self, t: RoundTiming) {
+        self.rounds.push(t);
+    }
+
+    /// Record the table-cache counters (called once, at end of run).
+    pub fn set_cache(&mut self, hits: u64, misses: u64) {
+        self.cache_hits = hits;
+        self.cache_misses = misses;
+    }
+
+    /// Quantizer-table cache hit rate over the whole run (0 if untouched).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn total_received(&self) -> usize {
+        self.rounds.iter().map(|t| t.received).sum()
+    }
+
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|t| t.dropped).sum()
+    }
+
+    pub fn total_framed_bytes(&self) -> u64 {
+        self.rounds.iter().map(|t| t.framed_bytes).sum()
+    }
+
+    /// Per-round CSV (milliseconds for the phase timings).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,collect_ms,decode_ms,aggregate_ms,received,dropped,stale,framed_bytes\n",
+        );
+        for t in &self.rounds {
+            s.push_str(&format!(
+                "{},{:.3},{:.3},{:.3},{},{},{},{}\n",
+                t.round,
+                t.collect_ns as f64 / 1e6,
+                t.decode_ns as f64 / 1e6,
+                t.aggregate_ns as f64 / 1e6,
+                t.received,
+                t.dropped,
+                t.stale,
+                t.framed_bytes
+            ));
+        }
+        s
+    }
+
+    /// One-paragraph human summary for CLI output.
+    pub fn summary(&self) -> String {
+        let n = self.rounds.len().max(1) as f64;
+        let mean = |f: fn(&RoundTiming) -> u64| {
+            self.rounds.iter().map(f).sum::<u64>() as f64 / n / 1e6
+        };
+        format!(
+            "server: {} rounds | mean per round: collect {:.3} ms, decode {:.3} ms, \
+             aggregate {:.3} ms | uplinks: {} received, {} dropped | \
+             {} framed bytes | table cache: {:.1}% hits ({} / {})",
+            self.rounds.len(),
+            mean(|t| t.collect_ns),
+            mean(|t| t.decode_ns),
+            mean(|t| t.aggregate_ns),
+            self.total_received(),
+            self.total_dropped(),
+            self.total_framed_bytes(),
+            100.0 * self.cache_hit_rate(),
+            self.cache_hits,
+            self.cache_hits + self.cache_misses
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(round: usize, received: usize, dropped: usize) -> RoundTiming {
+        RoundTiming {
+            round,
+            collect_ns: 2_000_000,
+            decode_ns: 1_000_000,
+            aggregate_ns: 500_000,
+            received,
+            dropped,
+            stale: 0,
+            framed_bytes: 1000,
+        }
+    }
+
+    #[test]
+    fn totals_and_hit_rate() {
+        let mut s = ServerStats::default();
+        s.push(timing(0, 4, 0));
+        s.push(timing(1, 3, 1));
+        s.set_cache(30, 10);
+        assert_eq!(s.total_received(), 7);
+        assert_eq!(s.total_dropped(), 1);
+        assert_eq!(s.total_framed_bytes(), 2000);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = ServerStats::default();
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.total_received(), 0);
+        assert!(s.summary().contains("0 rounds"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut s = ServerStats::default();
+        s.push(timing(0, 2, 0));
+        let csv = s.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,collect_ms"));
+        assert!(lines[1].starts_with("0,2.000,1.000,0.500,2,0,0,1000"));
+    }
+
+    #[test]
+    fn summary_mentions_cache() {
+        let mut s = ServerStats::default();
+        s.push(timing(0, 1, 0));
+        s.set_cache(3, 1);
+        let sum = s.summary();
+        assert!(sum.contains("75.0% hits"), "{sum}");
+    }
+}

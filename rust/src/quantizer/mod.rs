@@ -6,4 +6,4 @@ pub mod lbg;
 pub mod tables;
 
 pub use lbg::{design, expected_distortion, Quantizer};
-pub use tables::{Family, TableKey, QuantizerTables};
+pub use tables::{design_for, Family, QuantizerTables, TableKey, TableSource, SHAPE_STEP};

@@ -69,7 +69,27 @@ impl TableKey {
     }
 }
 
-/// Thread-shared cache of standardized quantizer designs.
+/// A provider of standardized quantizer designs. Implementations differ in
+/// caching policy only — the design itself is a pure function of the snapped
+/// [`TableKey`] (see [`design_for`]), so every provider returns identical
+/// tables and the codec path is provider-agnostic.
+pub trait TableSource: Send + Sync {
+    /// Standardized (unit-variance) quantizer for the snapped
+    /// (family, shape, M, levels) key.
+    fn get(&self, family: Family, shape: f64, m: f64, levels: usize) -> Quantizer;
+}
+
+/// Design the standardized quantizer for a snapped key — the single LBG
+/// entry point shared by every [`TableSource`] implementation.
+pub fn design_for(key: TableKey) -> Quantizer {
+    match key.family {
+        Family::GenNorm => design(&GenNorm::standardized(key.shape()), key.m(), key.levels),
+        Family::Weibull => design(&Weibull2::standardized(key.shape()), key.m(), key.levels),
+    }
+}
+
+/// Thread-shared cache of standardized quantizer designs (unbounded; the
+/// bounded LRU variant lives in `fedserve::table_cache`).
 #[derive(Debug, Default)]
 pub struct QuantizerTables {
     cache: Mutex<HashMap<TableKey, Quantizer>>,
@@ -86,10 +106,7 @@ impl QuantizerTables {
         if let Some(q) = self.cache.lock().unwrap().get(&key) {
             return q.clone();
         }
-        let q = match key.family {
-            Family::GenNorm => design(&GenNorm::standardized(key.shape()), key.m(), key.levels),
-            Family::Weibull => design(&Weibull2::standardized(key.shape()), key.m(), key.levels),
-        };
+        let q = design_for(key);
         self.cache.lock().unwrap().insert(key, q.clone());
         q
     }
@@ -112,6 +129,12 @@ impl QuantizerTables {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+impl TableSource for QuantizerTables {
+    fn get(&self, family: Family, shape: f64, m: f64, levels: usize) -> Quantizer {
+        QuantizerTables::get(self, family, shape, m, levels)
     }
 }
 

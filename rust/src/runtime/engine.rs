@@ -5,11 +5,22 @@
 //! text parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 //! All graphs were lowered with `return_tuple=True`, so outputs unpack with
 //! `to_tuple()`.
+//!
+//! The real engine needs the `xla` bindings and the native xla_extension
+//! toolchain, which the offline build does not carry; it is gated behind the
+//! `pjrt` cargo feature. Without the feature a stub [`Engine`] with the same
+//! API compiles instead — `load` fails with a clear message, so every
+//! artifact-executing path degrades to a runtime error while the pure-Rust
+//! paths (compressors, quantizer design, fedserve) stay fully functional.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
 
 use crate::train::Manifest;
 
@@ -22,6 +33,7 @@ pub struct StepOut {
 }
 
 /// PJRT CPU engine holding every compiled artifact.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -29,6 +41,7 @@ pub struct Engine {
     pub dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load + compile every artifact the experiments need.
     pub fn load(dir: &Path) -> Result<Engine> {
@@ -171,6 +184,63 @@ impl Engine {
 
 /// xla::Error doesn't implement std::error::Error compatibly with anyhow's
 /// blanket conversion under this edition mix — wrap by formatting.
+#[cfg(feature = "pjrt")]
 fn anyhow_xla(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Stub engine for builds without the `pjrt` feature: same API surface,
+/// every artifact execution fails with a clear message.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "built without the `pjrt` feature: rebuild with \
+     `--features pjrt` (requires the xla_extension toolchain) to execute \
+     AOT artifacts";
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: there is no PJRT client in this build. The manifest is
+    /// parsed first so a missing-artifacts problem is reported as such.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let _ = Manifest::load(dir)?;
+        bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".into()
+    }
+
+    pub fn train_step(&self, _arch: &str, _w: &[f32], _x: &[f32], _y: &[i32]) -> Result<StepOut> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn eval(&self, _arch: &str, _w: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, f32)> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn quantize_block(
+        &self,
+        _g: &[f32],
+        _thresholds: &[f32],
+        _centers: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn moments_block(&self, _g: &[f32]) -> Result<[f32; 8]> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn distortion_block(&self, _g: &[f32], _ghat: &[f32], _m: f32) -> Result<f32> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn smoke(&self) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
 }

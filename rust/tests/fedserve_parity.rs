@@ -1,0 +1,145 @@
+//! Integration: the full fedserve path (client sessions → wire frames →
+//! server decode → sharded aggregation) reproduces a hand-rolled serial
+//! eq.-(7) coordinator bit-exactly at every shard count, and the shared
+//! LRU quantizer-table cache actually gets hit in multi-round runs.
+
+use std::sync::Arc;
+
+use m22::compress::{BlockCodec, Compressor, CpuCodec};
+use m22::config::{ExperimentConfig, Scheme};
+use m22::coordinator::Memory;
+use m22::fedserve::aggregate::{aggregate_serial, aggregate_sharded};
+use m22::fedserve::session::Scheduler;
+use m22::fedserve::sim::{sim_spec, sim_update, simulate};
+use m22::fedserve::table_cache::LruTableCache;
+use m22::quantizer::Family;
+use m22::util::rng::Rng;
+
+fn base_cfg(scheme: Scheme, clients: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new("sim", scheme, 2, rounds);
+    cfg.n_clients = clients;
+    cfg
+}
+
+/// The serial reference: same schedule, same sessions, same decoders — but
+/// no wire, no threads, no sharding. This is the pre-fedserve driver loop.
+fn serial_reference(cfg: &ExperimentConfig, d: usize) -> Vec<f32> {
+    let spec = sim_spec(d);
+    let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let decoder = cfg.build_compressor(d, codec.clone(), tables.clone());
+    let mut comps: Vec<_> = (0..cfg.n_clients)
+        .map(|_| cfg.build_compressor(d, codec.clone(), tables.clone()))
+        .collect();
+    let mut mems: Vec<Option<Memory>> = (0..cfg.n_clients)
+        .map(|_| cfg.memory.then(|| Memory::new(d, cfg.memory_decay)))
+        .collect();
+    let mut sched = Scheduler::new(cfg.seed);
+    let k = cfg.participants_per_round();
+    let mut w = vec![0.0f32; d];
+    for round in 0..cfg.rounds {
+        let participants = sched.sample(cfg.n_clients, k);
+        let mut decoded = Vec::with_capacity(participants.len());
+        for &id in &participants {
+            let update = sim_update(cfg.seed, id, round, d);
+            let augmented = match &mems[id] {
+                Some(m) => m.add_back(&update).unwrap(),
+                None => update.clone(),
+            };
+            let out = comps[id].compress(&augmented, &spec).unwrap();
+            if let Some(m) = &mut mems[id] {
+                m.update(&augmented, &out.reconstructed);
+            }
+            // the server decodes bytes, never the client's reconstruction
+            decoded.push(decoder.decompress(&out.payload, &spec).unwrap());
+        }
+        let agg = aggregate_serial(&decoded, d);
+        let scale = 1.0 / participants.len() as f32;
+        for (wi, a) in w.iter_mut().zip(&agg) {
+            *wi -= scale * a;
+        }
+    }
+    w
+}
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+#[test]
+fn sharded_aggregation_parity_across_shard_counts() {
+    // pure aggregation parity on synthetic decoded deltas
+    let root = Rng::new(4242);
+    for &(n, d) in &[(2usize, 999usize), (6, 4096), (11, 10_000)] {
+        let decoded: Vec<Vec<f32>> = (0..n)
+            .map(|c| {
+                let mut r = root.stream(3, c as u64);
+                (0..d).map(|_| (r.normal() * 0.2) as f32).collect()
+            })
+            .collect();
+        let serial = aggregate_serial(&decoded, d);
+        for shards in [1usize, 3, 8] {
+            let sharded = aggregate_sharded(&decoded, d, shards);
+            assert_bitwise_eq(&serial, &sharded, &format!("n={n} d={d} shards={shards}"));
+        }
+    }
+}
+
+#[test]
+fn wire_driver_reproduces_serial_coordinator_m22() {
+    let d = 4096;
+    let cfg = base_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 5, 4);
+    let reference = serial_reference(&cfg, d);
+    assert!(reference.iter().any(|&x| x != 0.0), "reference did nothing");
+    for shards in [1usize, 3, 8] {
+        let mut c = cfg.clone();
+        c.server.shards = shards;
+        let rep = simulate(&c, d).unwrap();
+        assert_bitwise_eq(&reference, &rep.w, &format!("shards={shards}"));
+        // acceptance: the shared table cache shows hits in a multi-round run
+        assert!(
+            rep.stats.cache_hits > 0,
+            "shards={shards}: no cache hits ({:?})",
+            rep.stats
+        );
+        assert_eq!(rep.stats.rounds.len(), 4);
+        assert_eq!(rep.stats.total_dropped(), 0);
+        assert!(rep.stats.total_framed_bytes() > 0);
+    }
+}
+
+#[test]
+fn wire_driver_parity_with_memory_and_partial_participation() {
+    let d = 2000;
+    let mut cfg = base_cfg(Scheme::M22 { family: Family::Weibull, m: 4.0 }, 8, 5);
+    cfg.memory = true;
+    cfg.memory_decay = 0.5;
+    cfg.server.sampled_clients = Some(3);
+    let reference = serial_reference(&cfg, d);
+    for shards in [1usize, 8] {
+        let mut c = cfg.clone();
+        c.server.shards = shards;
+        let rep = simulate(&c, d).unwrap();
+        assert_bitwise_eq(&reference, &rep.w, &format!("memory shards={shards}"));
+        for t in &rep.stats.rounds {
+            assert_eq!(t.received, 3);
+        }
+    }
+}
+
+#[test]
+fn wire_driver_parity_other_schemes() {
+    // schemes without table lookups must also survive the wire + shards
+    let d = 1024;
+    for scheme in [Scheme::TopKUniform, Scheme::TopKFp { bits: 8 }, Scheme::None] {
+        let cfg = base_cfg(scheme, 4, 3);
+        let reference = serial_reference(&cfg, d);
+        let mut c = cfg.clone();
+        c.server.shards = 3;
+        let rep = simulate(&c, d).unwrap();
+        assert_bitwise_eq(&reference, &rep.w, &format!("{scheme:?}"));
+    }
+}

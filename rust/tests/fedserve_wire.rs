@@ -1,0 +1,162 @@
+//! Integration: the fedserve wire protocol round-trips arbitrary payloads
+//! bit-exactly and rejects every corruption we can throw at it.
+
+use m22::compress::RateReport;
+use m22::coordinator::Uplink;
+use m22::fedserve::wire::{
+    self, decode, decode_prefix, encode_round, encode_shutdown, encode_update,
+};
+use m22::util::prop::prop_check;
+
+#[test]
+fn round_frames_roundtrip_property() {
+    prop_check("wire round roundtrip", 60, |g| {
+        let round = g.usize_in(0, 1_000_000);
+        let mut weights = g.vec_f32(0..2000, -1e6, 1e6);
+        // sprinkle special values — the frame must carry raw bits
+        if !weights.is_empty() {
+            weights[0] = f32::NAN;
+            let n = weights.len();
+            weights[n - 1] = -0.0;
+        }
+        let frame = encode_round(round, &weights);
+        match decode(&frame).unwrap() {
+            wire::Message::Round { round: r, weights: w } => {
+                assert_eq!(r, round);
+                assert_eq!(w.len(), weights.len());
+                for (a, b) in w.iter().zip(&weights) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    });
+}
+
+fn arbitrary_uplink(g: &mut m22::util::prop::Gen) -> Uplink {
+    let n = g.usize_in(0, 4096);
+    let payload: Vec<u8> = (0..n).map(|_| (g.rng.next_u64() & 0xff) as u8).collect();
+    let error = if g.bool() {
+        None
+    } else {
+        Some(format!("client exploded at step {}", g.usize_in(0, 100)))
+    };
+    Uplink {
+        client_id: g.usize_in(0, 10_000),
+        round: g.usize_in(0, 10_000),
+        payload,
+        report: RateReport {
+            d: g.usize_in(1, 1_000_000),
+            k: g.usize_in(0, 500_000),
+            position_bits_ideal: g.f64_in(0.0, 1e9),
+            position_bits_actual: g.usize_in(0, 1_000_000) as u64,
+            value_bits: g.usize_in(0, 1_000_000) as u64,
+            side_bits: g.usize_in(0, 10_000) as u64,
+            payload_bytes: g.usize_in(0, 4096),
+        },
+        train_loss: g.f64_in(-10.0, 10.0),
+        error,
+    }
+}
+
+#[test]
+fn update_frames_roundtrip_property() {
+    prop_check("wire update roundtrip", 60, |g| {
+        let up = arbitrary_uplink(g);
+        let frame = encode_update(&up);
+        match decode(&frame).unwrap() {
+            wire::Message::Update(u) => {
+                assert_eq!(u.client_id, up.client_id);
+                assert_eq!(u.round, up.round);
+                assert_eq!(u.payload, up.payload);
+                assert_eq!(u.train_loss.to_bits(), up.train_loss.to_bits());
+                assert_eq!(u.error, up.error);
+                assert_eq!(u.report.d, up.report.d);
+                assert_eq!(u.report.k, up.report.k);
+                assert_eq!(
+                    u.report.position_bits_ideal.to_bits(),
+                    up.report.position_bits_ideal.to_bits()
+                );
+                assert_eq!(u.report.position_bits_actual, up.report.position_bits_actual);
+                assert_eq!(u.report.value_bits, up.report.value_bits);
+                assert_eq!(u.report.side_bits, up.report.side_bits);
+                assert_eq!(u.report.payload_bytes, up.report.payload_bytes);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn corrupted_frames_rejected_property() {
+    prop_check("wire corruption rejected", 80, |g| {
+        let frame = if g.bool() {
+            encode_update(&arbitrary_uplink(g))
+        } else {
+            encode_round(g.usize_in(0, 100), &g.vec_f32(1..256, -2.0, 2.0))
+        };
+        let mut bad = frame.clone();
+        let at = g.usize_in(0, bad.len());
+        let flip = 1 + (g.rng.next_u64() % 255) as u8;
+        bad[at] ^= flip;
+        assert!(decode(&bad).is_err(), "byte {at} xor {flip:#x} accepted");
+    });
+}
+
+#[test]
+fn truncation_rejected_property() {
+    prop_check("wire truncation rejected", 40, |g| {
+        let frame = encode_round(g.usize_in(0, 100), &g.vec_f32(1..512, -2.0, 2.0));
+        let cut = g.usize_in(0, frame.len());
+        assert!(decode(&frame[..cut]).is_err(), "truncation to {cut} accepted");
+    });
+}
+
+#[test]
+fn streaming_reader_walks_mixed_frames() {
+    let mut buf = Vec::new();
+    let frames = vec![
+        encode_round(0, &[1.0, 2.0]),
+        encode_update(&Uplink {
+            client_id: 1,
+            round: 0,
+            payload: vec![9, 9, 9],
+            report: RateReport::default(),
+            train_loss: 0.5,
+            error: None,
+        }),
+        encode_shutdown(),
+    ];
+    for f in &frames {
+        buf.extend_from_slice(f);
+    }
+    let mut off = 0;
+    let mut seen = Vec::new();
+    while off < buf.len() {
+        let (msg, used) = decode_prefix(&buf[off..]).unwrap();
+        off += used;
+        seen.push(msg);
+    }
+    assert_eq!(off, buf.len());
+    assert_eq!(seen.len(), 3);
+    assert!(matches!(seen[0], wire::Message::Round { .. }));
+    assert!(matches!(seen[1], wire::Message::Update(_)));
+    assert!(matches!(seen[2], wire::Message::Shutdown));
+}
+
+#[test]
+fn framed_rate_accounting_matches_the_wire() {
+    // RateReport::framed_total_bits with UPDATE_OVERHEAD reports exactly the
+    // bytes an error-free update occupies on the wire
+    let payload = vec![7u8; 321];
+    let up = Uplink {
+        client_id: 2,
+        round: 5,
+        payload: payload.clone(),
+        report: RateReport { payload_bytes: payload.len(), ..Default::default() },
+        train_loss: 0.0,
+        error: None,
+    };
+    let frame = encode_update(&up);
+    assert_eq!(frame.len() as u64 * 8, up.report.framed_total_bits(wire::UPDATE_OVERHEAD));
+}

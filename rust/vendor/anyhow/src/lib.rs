@@ -1,0 +1,269 @@
+//! Minimal in-tree `anyhow` substitute (DESIGN.md §Substitutions).
+//!
+//! The offline build has no crates.io access, so this vendored crate
+//! provides the slice of the `anyhow` 1.x API the repository uses:
+//! [`Error`] (an ordered context chain), [`Result`], the [`Context`]
+//! extension trait for `Result` and `Option`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Formatting matches upstream: `{}` prints
+//! the outermost message, `{:#}` the full `outer: ...: root` chain, and
+//! `{:?}` the message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// An error: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std_chain(e: &dyn std::error::Error) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { chain }
+    }
+
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The chain of messages, outermost first (mirrors `anyhow::Chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same blanket conversion upstream anyhow uses; it is coherent because
+// `Error` itself does not implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std_chain(&e)
+    }
+}
+
+mod ext {
+    /// Sealed conversion implemented for both std errors and [`crate::Error`]
+    /// so one `Context` impl covers `Result<_, E>` and `Result<_, Error>`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from_std_chain(&self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors, like `anyhow::Context`.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(context.to_string())),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().wrap(f().to_string())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!(
+                "Condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("mid layer")
+            .context("outer layer")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer layer");
+        assert_eq!(format!("{e:#}"), "outer layer: mid layer: root cause");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root cause"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let n = 3;
+        let e = anyhow!("bad n {n} ({})", n + 1);
+        assert_eq!(e.to_string(), "bad n 3 (4)");
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(11).is_err());
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let called = std::cell::Cell::new(false);
+        let ok: Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| {
+                called.set(true);
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called.get());
+    }
+}
