@@ -5,11 +5,13 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use m22::compress::bitpack::pack_indices;
 use m22::compress::m22::{M22, M22Config};
 use m22::compress::rle::{encode_positions, position_bits};
 use m22::compress::topk::topk;
-use m22::compress::bitpack::pack_indices;
-use m22::compress::{BlockCodec, Budget, Compressor, CpuCodec};
+use m22::compress::{encode_once, BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder};
+use m22::fedserve::aggregate::{accumulate_sharded, aggregate_serial, aggregate_sharded};
+use m22::fedserve::sim::sim_spec;
 use m22::quantizer::{design, Family, QuantizerTables};
 use m22::stats::fitting::Moments;
 use m22::stats::{Distribution, GenNorm};
@@ -47,7 +49,64 @@ fn main() {
     let (t, c) = q.padded_f32(16);
     b1.run("cpu quantize full grad", || CpuCodec.quantize(&sparse, &t, &c).unwrap().0.len());
 
-    // end-to-end compress/decompress (CPU codec path)
+    // --- the PS hot loop: decode + eq.-(7) reduce, before vs after --------
+    //
+    // "dense" is the pre-split path: every payload decoded to a dense
+    // Vec<f32> (one d-sized allocation per client per round), then the
+    // sharded dense reduce. "fused" is the Encoder/Decoder-split path the
+    // server now runs: survivors stream straight into the shard
+    // accumulators — zero dense ĝ materializations, allocations independent
+    // of client count.
+    {
+        let d = 65_536usize;
+        let spec = sim_spec(d);
+        let budget = Budget::paper_point(d, 2);
+        let tables = Arc::new(QuantizerTables::new());
+        let comp = M22::new(
+            M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: budget.k_ref, min_fit: 512 },
+            Arc::new(CpuCodec),
+            tables,
+        );
+        for n_clients in [4usize, 16, 64] {
+            let payloads: Vec<Vec<u8>> = (0..n_clients)
+                .map(|i| encode_once(&comp, &grad(d, 100 + i as u64), &spec).unwrap().0)
+                .collect();
+            let slices: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+            let bps = Bencher::default().throughput((n_clients * d) as f64);
+            bps.run(&format!("ps dense decode+reduce  (n={n_clients}, 4 shards)"), || {
+                let decoded: Vec<Vec<f32>> = slices
+                    .iter()
+                    .map(|p| comp.decode_dense(p, &spec).unwrap())
+                    .collect();
+                aggregate_sharded(&decoded, d, 4).len()
+            });
+            let mut acc = vec![0.0f32; d];
+            bps.run(&format!("ps fused  decode+reduce (n={n_clients}, 4 shards)"), || {
+                acc.clear();
+                acc.resize(d, 0.0);
+                accumulate_sharded(&comp, &slices, &spec, 4, &mut acc).unwrap();
+                acc.len()
+            });
+            bps.run(&format!("ps fused  decode+reduce (n={n_clients}, serial)"), || {
+                acc.clear();
+                acc.resize(d, 0.0);
+                for p in &slices {
+                    comp.decode_accumulate(p, &spec, 1.0, &mut acc).unwrap();
+                }
+                acc.len()
+            });
+            // sanity: the two paths agree bit-exactly
+            let decoded: Vec<Vec<f32>> =
+                slices.iter().map(|p| comp.decode_dense(p, &spec).unwrap()).collect();
+            let dense = aggregate_serial(&decoded, d);
+            acc.clear();
+            acc.resize(d, 0.0);
+            accumulate_sharded(&comp, &slices, &spec, 4, &mut acc).unwrap();
+            assert!(dense.iter().zip(&acc).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    // end-to-end encode/decode (CPU codec path)
     let spec_layout = {
         // VGG-shaped spec straight from the manifest if available, else synthetic
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -57,20 +116,28 @@ fn main() {
         let tables = Arc::new(QuantizerTables::new());
         let budget = Budget::paper_point(spec.d(), 2);
         let gg = grad(spec.d(), 2);
-        let mut comp = M22::new(
+        let comp = M22::new(
             M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: budget.k_ref, min_fit: 512 },
             Arc::new(CpuCodec),
             tables,
         );
+        // persistent scratch: the steady-state (allocation-free) encode path
+        let mut ctx = EncodeCtx::new();
         // warm the quantizer table so we time the request path, not design
-        let _ = comp.compress(&gg, spec).unwrap();
+        let _ = comp.encode(&gg, spec, &mut ctx).unwrap();
         let b2 = Bencher::default().throughput(spec.d() as f64);
-        b2.run("m22 compress e2e (vgg_s, cpu codec)", || {
-            comp.compress(&gg, spec).unwrap().payload.len()
+        b2.run("m22 encode e2e (vgg_s, cpu codec, reused ctx)", || {
+            comp.encode(&gg, spec, &mut ctx).unwrap().payload_bytes
         });
-        let payload = comp.compress(&gg, spec).unwrap().payload;
-        b2.run("m22 decompress e2e (vgg_s)", || {
-            comp.decompress(&payload, spec).unwrap().len()
+        comp.encode(&gg, spec, &mut ctx).unwrap();
+        let payload = ctx.payload().to_vec();
+        b2.run("m22 decode_dense e2e (vgg_s)", || {
+            comp.decode_dense(&payload, spec).unwrap().len()
+        });
+        let mut acc = vec![0.0f32; spec.d()];
+        b2.run("m22 decode_accumulate e2e (vgg_s)", || {
+            comp.decode_accumulate(&payload, spec, 1.0, &mut acc).unwrap();
+            acc.len()
         });
     }
 

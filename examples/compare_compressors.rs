@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use m22::compress::BlockCodec;
+use m22::compress::{BlockCodec, EncodeCtx, Encoder};
 use m22::config::{presets, ExperimentConfig, Scheme};
 use m22::data::Dataset;
 use m22::quantizer::QuantizerTables;
@@ -49,6 +49,8 @@ fn main() -> Result<()> {
     let tables = Arc::new(QuantizerTables::new());
     let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
 
+    // one reusable scratch context shared across every scheme and budget
+    let mut ctx = EncodeCtx::new();
     for rq in [1u32, 3] {
         println!("\n== budget: R = {rq} bit/survivor, K = 0.6 d ==");
         println!(
@@ -57,28 +59,28 @@ fn main() -> Result<()> {
         );
         for scheme in presets::fig3_schemes(rq) {
             let cfg = ExperimentConfig::new("cnn_s", scheme, rq, 1);
-            let mut comp = cfg.build_compressor(spec.d(), codec.clone(), tables.clone());
-            let out = comp.compress(&g, spec)?;
+            let enc = cfg.build_encoder(spec.d(), codec.clone(), tables.clone())?;
+            let report = enc.encode(&g, spec, &mut ctx)?;
             println!(
                 "{:<26} {:>9} {:>11} {:>11.1} {:>9.3} {:>8.4}",
-                comp.name(),
-                out.report.k,
-                out.report.value_bits,
-                out.report.ideal_total_bits() / 1e3,
-                mse(&g, &out.reconstructed) * 1e6,
-                cosine(&g, &out.reconstructed),
+                enc.name(),
+                report.k,
+                report.value_bits,
+                report.ideal_total_bits() / 1e3,
+                mse(&g, ctx.reconstructed()) * 1e6,
+                cosine(&g, ctx.reconstructed()),
             );
         }
         // the uncompressed reference row
         let cfg = ExperimentConfig::new("cnn_s", Scheme::None, rq, 1);
-        let mut comp = cfg.build_compressor(spec.d(), codec.clone(), tables.clone());
-        let out = comp.compress(&g, spec)?;
+        let enc = cfg.build_encoder(spec.d(), codec.clone(), tables.clone())?;
+        let report = enc.encode(&g, spec, &mut ctx)?;
         println!(
             "{:<26} {:>9} {:>11} {:>11.1} {:>9.3} {:>8.4}",
             "none (fp32)",
-            out.report.k,
-            out.report.value_bits,
-            out.report.ideal_total_bits() / 1e3,
+            report.k,
+            report.value_bits,
+            report.ideal_total_bits() / 1e3,
             0.0,
             1.0
         );

@@ -15,6 +15,14 @@ impl BitWriter {
         Self::default()
     }
 
+    /// Wrap an existing byte buffer, appending the bit stream after its
+    /// current contents (the stream starts byte-aligned). Reclaim the buffer
+    /// with [`BitWriter::into_bytes`] — this is how reused scratch avoids
+    /// per-round allocations.
+    pub fn from_vec(buf: Vec<u8>) -> Self {
+        BitWriter { buf, used: 0 }
+    }
+
     pub fn push(&mut self, value: u32, bits: u32) {
         debug_assert!(bits <= 32 && (bits == 32 || value < (1u32 << bits)));
         let mut v = value as u64;
@@ -83,13 +91,22 @@ impl<'a> BitReader<'a> {
     }
 }
 
-/// Pack a slice of indices at fixed width.
-pub fn pack_indices(idx: &[u32], bits: u32) -> Vec<u8> {
-    let mut w = BitWriter::new();
+/// Pack a slice of indices at fixed width into a reused buffer (cleared
+/// first; capacity is kept, so the steady state allocates nothing).
+pub fn pack_indices_into(idx: &[u32], bits: u32, out: &mut Vec<u8>) {
+    out.clear();
+    let mut w = BitWriter::from_vec(std::mem::take(out));
     for &i in idx {
         w.push(i, bits);
     }
-    w.into_bytes()
+    *out = w.into_bytes();
+}
+
+/// Pack a slice of indices at fixed width.
+pub fn pack_indices(idx: &[u32], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_indices_into(idx, bits, &mut out);
+    out
 }
 
 /// Unpack `n` indices at fixed width.
@@ -113,7 +130,7 @@ mod tests {
             let idx: Vec<u32> = (0..100).map(|i| i % (1u32 << bits)).collect();
             let bytes = pack_indices(&idx, bits);
             assert_eq!(unpack_indices(&bytes, bits, idx.len()).unwrap(), idx);
-            assert_eq!(bytes.len(), ((idx.len() as u64 * bits as u64 + 7) / 8) as usize);
+            assert_eq!(bytes.len(), (idx.len() as u64 * bits as u64).div_ceil(8) as usize);
         }
     }
 

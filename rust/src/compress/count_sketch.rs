@@ -7,15 +7,18 @@
 //!
 //! Server: estimate every coordinate as the median over rows of
 //! `sign(r,i) · table[r][h(r,i)]`, then keep the K largest-magnitude
-//! estimates (heavy-hitter recovery as in [17]).
+//! estimates (heavy-hitter recovery as in [17]). Unlike the positional
+//! schemes, the sketch decode is inherently dense — recovery scans every
+//! coordinate — so its [`Decoder`] impl materializes the estimate vector
+//! internally before visiting the surviving top-K.
 
 use anyhow::{bail, Context, Result};
 
 use crate::train::ModelSpec;
 
 use super::rate::RateReport;
-use super::topk::topk;
-use super::{Compressed, Compressor};
+use super::topk::{topk, topk_inplace_into};
+use super::{Decoder, EncodeCtx, Encoder};
 
 /// Count-sketch compressor with a deterministic shared operator.
 pub struct CountSketch {
@@ -79,51 +82,93 @@ impl CountSketch {
         let (kept, _) = topk(&est, self.k.min(d));
         kept
     }
+
+    fn parse_table(&self, payload: &[u8]) -> Result<Vec<f32>> {
+        let want = self.depth * self.width * 4;
+        let bytes = payload.get(..want).context("short sketch payload")?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
 }
 
-impl Compressor for CountSketch {
+impl Encoder for CountSketch {
     fn name(&self) -> String {
         "count-sketch".into()
     }
 
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport> {
         if grad.len() != spec.d() {
             bail!("grad len {} != d {}", grad.len(), spec.d());
         }
-        let (sparse, positions) = topk(grad, self.k.min(grad.len()));
-        let mut table = vec![0.0f32; self.depth * self.width];
-        for &p in &positions {
+        ctx.begin(grad);
+        topk_inplace_into(&mut ctx.sparse, self.k.min(grad.len()), &mut ctx.positions, &mut ctx.vals);
+        let survivors = ctx.positions.len();
+        // the sketch table lives in the vals scratch
+        ctx.vals.clear();
+        ctx.vals.resize(self.depth * self.width, 0.0);
+        for &p in &ctx.positions {
             let i = p as usize;
             for r in 0..self.depth {
                 let (col, sign) = self.hash(r, i);
-                table[r * self.width + col] += sign * sparse[i];
+                ctx.vals[r * self.width + col] += sign * ctx.sparse[i];
             }
         }
-        let mut payload = Vec::with_capacity(4 * table.len());
-        for &x in &table {
-            payload.extend_from_slice(&x.to_le_bytes());
+        ctx.payload.reserve(4 * ctx.vals.len());
+        for &x in &ctx.vals {
+            ctx.payload.extend_from_slice(&x.to_le_bytes());
         }
-        let reconstructed = self.recover(&table, grad.len());
-        let report = RateReport {
+        // reconstruction = heavy-hitter recovery from our own table:
+        // estimate every coordinate into ghat, then keep the top-k
+        ctx.ghat.clear();
+        for i in 0..grad.len() {
+            ctx.ghat.push(self.estimate(&ctx.vals, i));
+        }
+        topk_inplace_into(&mut ctx.ghat, self.k.min(grad.len()), &mut ctx.positions, &mut ctx.vals2);
+
+        Ok(RateReport {
             d: spec.d(),
-            k: positions.len(),
+            k: survivors,
             // no positions transmitted: all bits live in the table
             position_bits_ideal: 0.0,
             position_bits_actual: 0,
             value_bits: self.table_bits(),
             side_bits: 0,
-            payload_bytes: payload.len(),
-        };
-        Ok(Compressed { payload, reconstructed, report })
+            payload_bytes: ctx.payload.len(),
+        })
+    }
+}
+
+impl Decoder for CountSketch {
+    fn name(&self) -> String {
+        "count-sketch".into()
     }
 
-    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
-        let want = self.depth * self.width * 4;
-        let bytes = payload.get(..want).context("short sketch payload")?;
-        let table: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+    /// Recovery is a dense O(d·depth) scan with table/estimate allocations;
+    /// the sharded reduce must not repeat it per shard.
+    fn sparse_walk_is_cheap(&self) -> bool {
+        false
+    }
+
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
+        let table = self.parse_table(payload)?;
+        let est = self.recover(&table, spec.d());
+        for (i, &v) in est.iter().enumerate() {
+            if v != 0.0 {
+                visit(i, v);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_dense(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let table = self.parse_table(payload)?;
         Ok(self.recover(&table, spec.d()))
     }
 }
@@ -131,15 +176,16 @@ impl Compressor for CountSketch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::encode_once;
     use crate::compress::testutil::{grad_like, tiny_spec};
 
     #[test]
     fn roundtrip_encode_decode_exact() {
         let spec = tiny_spec(3000, 0);
         let g = grad_like(3000, 31);
-        let mut c = CountSketch::from_budget(900, 900 * 32, 3, 42);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+        let c = CountSketch::from_budget(900, 900 * 32, 3, 42);
+        let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
     }
 
     #[test]
@@ -162,13 +208,13 @@ mod tests {
         for &(i, v) in &heavy {
             g[i] = v;
         }
-        let mut c = CountSketch::from_budget(4, 4096 * 32, 5, 9);
-        let out = c.compress(&g, &spec).unwrap();
+        let c = CountSketch::from_budget(4, 4096 * 32, 5, 9);
+        let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
         for &(i, v) in &heavy {
             assert!(
-                (out.reconstructed[i] - v).abs() < 0.3,
+                (reconstructed[i] - v).abs() < 0.3,
                 "coord {i}: {} vs {v}",
-                out.reconstructed[i]
+                reconstructed[i]
             );
         }
     }
@@ -177,9 +223,9 @@ mod tests {
     fn reconstruction_has_k_support() {
         let spec = tiny_spec(2000, 0);
         let g = grad_like(2000, 33);
-        let mut c = CountSketch::from_budget(300, 600 * 32, 3, 5);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(out.reconstructed.iter().filter(|x| **x != 0.0).count(), 300);
+        let c = CountSketch::from_budget(300, 600 * 32, 3, 5);
+        let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(reconstructed.iter().filter(|x| **x != 0.0).count(), 300);
     }
 
     #[test]
@@ -203,10 +249,10 @@ mod tests {
         let spec = tiny_spec(4000, 0);
         let g = grad_like(4000, 34);
         let err = |width_cells: usize| {
-            let mut c = CountSketch::from_budget(2000, (width_cells * 32) as u64, 3, 3);
-            let out = c.compress(&g, &spec).unwrap();
+            let c = CountSketch::from_budget(2000, (width_cells * 32) as u64, 3, 3);
+            let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
             g.iter()
-                .zip(&out.reconstructed)
+                .zip(&reconstructed)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum::<f64>()
         };

@@ -214,18 +214,18 @@ mod tests {
 }
 
 // ---------------------------------------------------------------------------
-// topK + floating-point Compressor (paper eq. 14)
+// topK + floating-point encoder/decoder (paper eq. 14)
 // ---------------------------------------------------------------------------
 
 use anyhow::{bail, Context, Result};
 
 use crate::train::ModelSpec;
 
-use super::bitpack::{pack_indices, unpack_indices};
+use super::bitpack::{pack_indices_into, BitReader};
 use super::rate::RateReport;
-use super::rle::{decode_positions, encode_positions, position_bits};
-use super::topk::topk;
-use super::{Compressed, Compressor};
+use super::rle::{encode_positions_into, position_bits, PositionReader};
+use super::topk::topk_inplace_into;
+use super::{Decoder, EncodeCtx, Encoder};
 
 /// topK + p-bit minifloat representation: K_fp survivors, p bits each.
 pub struct TopKFp {
@@ -243,80 +243,87 @@ impl TopKFp {
     }
 }
 
-impl Compressor for TopKFp {
+impl Encoder for TopKFp {
     fn name(&self) -> String {
         format!("topk+fp{}", self.fmt.total_bits())
     }
 
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport> {
         if grad.len() != spec.d() {
             bail!("grad len {} != d {}", grad.len(), spec.d());
         }
-        let (_, positions) = topk(grad, self.k.min(grad.len()));
+        ctx.begin(grad);
+        topk_inplace_into(&mut ctx.sparse, self.k.min(grad.len()), &mut ctx.positions, &mut ctx.vals);
         // per-tensor scale so the minifloat dynamic range covers gradients
         // (raw DNN gradients ~1e-3 underflow fp4 subnormals): scale = max|g|
         // over survivors of each tensor, sent as f32 side info.
         let mut scales = vec![0.0f32; spec.tensors.len()];
         let mut ti = 0usize;
-        for &p in &positions {
+        for &p in &ctx.positions {
             let p = p as usize;
             while p >= spec.range(ti).end {
                 ti += 1;
             }
-            scales[ti] = scales[ti].max(grad[p].abs());
+            scales[ti] = scales[ti].max(ctx.sparse[p].abs());
         }
         let bits = self.fmt.total_bits();
-        let mut ghat = vec![0.0f32; grad.len()];
-        let mut codes = Vec::with_capacity(positions.len());
         let mut ti = 0usize;
-        for &p in &positions {
+        for &p in &ctx.positions {
             let p = p as usize;
             while p >= spec.range(ti).end {
                 ti += 1;
             }
             let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
             // normalize into [-max_value, max_value] before encoding
-            let norm = grad[p] / s * self.fmt.max_value();
+            let norm = ctx.sparse[p] / s * self.fmt.max_value();
             let code = self.fmt.encode(norm);
-            codes.push(code);
-            ghat[p] = self.fmt.decode(code) / self.fmt.max_value() * s;
+            ctx.codes.push(code);
+            ctx.ghat[p] = self.fmt.decode(code) / self.fmt.max_value() * s;
         }
 
-        let pos_bytes = encode_positions(&positions);
-        let idx_bytes = pack_indices(&codes, bits);
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&pos_bytes);
+        encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
+        pack_indices_into(&ctx.codes, bits, &mut ctx.code_bytes);
+        ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&(ctx.pos_bytes.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&ctx.pos_bytes);
         for s in &scales {
-            payload.extend_from_slice(&s.to_le_bytes());
+            ctx.payload.extend_from_slice(&s.to_le_bytes());
         }
-        payload.extend_from_slice(&idx_bytes);
+        ctx.payload.extend_from_slice(&ctx.code_bytes);
 
-        let report = RateReport {
+        Ok(RateReport {
             d: spec.d(),
-            k: positions.len(),
+            k: ctx.positions.len(),
             position_bits_ideal: crate::stats::special::log2_choose(
                 spec.d() as u64,
-                positions.len() as u64,
+                ctx.positions.len() as u64,
             ),
-            position_bits_actual: position_bits(&positions),
-            value_bits: positions.len() as u64 * bits as u64,
+            position_bits_actual: position_bits(&ctx.positions),
+            value_bits: ctx.positions.len() as u64 * bits as u64,
             side_bits: scales.len() as u64 * 32,
-            payload_bytes: payload.len(),
-        };
-        Ok(Compressed { payload, reconstructed: ghat, report })
+            payload_bytes: ctx.payload.len(),
+        })
+    }
+}
+
+impl Decoder for TopKFp {
+    fn name(&self) -> String {
+        format!("topk+fp{}", self.fmt.total_bits())
     }
 
-    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
+        let d = spec.d();
         let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
             as usize;
         let npos =
             u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
         let mut off = 8;
-        let positions =
-            decode_positions(payload.get(off..off + npos).context("short pos")?, k)
-                .context("positions")?;
+        let pos_bytes = payload.get(off..off + npos).context("short pos")?;
         off += npos;
         let mut scales = Vec::with_capacity(spec.tensors.len());
         for _ in 0..spec.tensors.len() {
@@ -325,61 +332,65 @@ impl Compressor for TopKFp {
             ));
             off += 4;
         }
-        let codes =
-            unpack_indices(&payload[off..], self.fmt.total_bits(), k).context("codes")?;
-        let mut out = vec![0.0f32; spec.d()];
+        let mut positions = PositionReader::new(pos_bytes);
+        let mut codes = BitReader::new(&payload[off..]);
         let mut ti = 0usize;
-        for (&p, &c) in positions.iter().zip(&codes) {
-            let p = p as usize;
+        for _ in 0..k {
+            let p = positions.next_position().context("positions decode")? as usize;
+            let c = codes.read(self.fmt.total_bits()).context("codes decode")?;
+            if p >= d {
+                bail!("survivor position {p} out of range (d = {d})");
+            }
             while p >= spec.range(ti).end {
                 ti += 1;
             }
             let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
-            out[p] = self.fmt.decode(c) / self.fmt.max_value() * s;
+            visit(p, self.fmt.decode(c) / self.fmt.max_value() * s);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod compressor_tests {
     use super::*;
+    use crate::compress::encode_once;
     use crate::compress::testutil::{grad_like, tiny_spec};
 
     #[test]
     fn fp8_roundtrip_exact() {
         let spec = tiny_spec(3000, 32);
         let g = grad_like(3032, 21);
-        let mut c = TopKFp::fp8(800);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
-        assert_eq!(out.report.value_bits, 800 * 8);
-        assert_eq!(out.report.k, 800);
+        let c = TopKFp::fp8(800);
+        let (payload, reconstructed, report) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
+        assert_eq!(report.value_bits, 800 * 8);
+        assert_eq!(report.k, 800);
     }
 
     #[test]
     fn fp4_roundtrip_exact() {
         let spec = tiny_spec(2000, 0);
         let g = grad_like(2000, 22);
-        let mut c = TopKFp::fp4(1500);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
-        assert_eq!(out.report.value_bits, 1500 * 4);
+        let c = TopKFp::fp4(1500);
+        let (payload, reconstructed, report) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
+        assert_eq!(report.value_bits, 1500 * 4);
     }
 
     #[test]
     fn fp8_more_accurate_than_fp4() {
         let spec = tiny_spec(4000, 0);
         let g = grad_like(4000, 23);
-        let mse = |out: &crate::compress::Compressed| {
+        let mse = |reconstructed: &[f32]| {
             g.iter()
-                .zip(&out.reconstructed)
+                .zip(reconstructed)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum::<f64>()
         };
-        let o8 = TopKFp::fp8(4000).compress(&g, &spec).unwrap();
-        let o4 = TopKFp::fp4(4000).compress(&g, &spec).unwrap();
-        assert!(mse(&o8) < mse(&o4));
+        let (_, r8, _) = encode_once(&TopKFp::fp8(4000), &g, &spec).unwrap();
+        let (_, r4, _) = encode_once(&TopKFp::fp4(4000), &g, &spec).unwrap();
+        assert!(mse(&r8) < mse(&r4));
     }
 
     #[test]
@@ -388,8 +399,8 @@ mod compressor_tests {
         // per-tensor scale normalization
         let spec = tiny_spec(1000, 0);
         let g: Vec<f32> = grad_like(1000, 24).iter().map(|x| x * 1e-2).collect();
-        let out = TopKFp::fp4(500).compress(&g, &spec).unwrap();
-        let nonzero = out.reconstructed.iter().filter(|x| **x != 0.0).count();
+        let (_, reconstructed, _) = encode_once(&TopKFp::fp4(500), &g, &spec).unwrap();
+        let nonzero = reconstructed.iter().filter(|x| **x != 0.0).count();
         assert!(nonzero > 400, "underflow wiped {} survivors", 500 - nonzero);
     }
 
@@ -402,9 +413,9 @@ mod compressor_tests {
             let sp = gen.f64_in(0.0, 0.7);
             let g = gen.grad_like(d..d + 1, sp);
             let k = gen.usize_in(1, d);
-            let mut c = if gen.bool() { TopKFp::fp8(k) } else { TopKFp::fp4(k) };
-            let out = c.compress(&g, &spec).unwrap();
-            assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+            let c = if gen.bool() { TopKFp::fp8(k) } else { TopKFp::fp4(k) };
+            let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+            assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
         });
     }
 }

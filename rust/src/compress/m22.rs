@@ -13,9 +13,15 @@
 //! 3. small tensors (biases, heads) pool into one global group so *every*
 //!    survivor costs exactly `rq` bits — the eq. (17) budget;
 //! 4. payload = k ‖ positions ‖ per-group (std, shape) f32 pairs ‖ packed
-//!    indices. `decompress` rebuilds the identical quantizers from the side
+//!    indices. The decoder rebuilds the identical quantizers from the side
 //!    info (the table snap makes the f32 roundtrip exact), so encode/decode
 //!    is bit-faithful.
+//!
+//! [`M22`] implements both halves of the split API: [`Encoder`] writes into
+//! the caller's [`EncodeCtx`] scratch (zero steady-state allocation on the
+//! CPU codec path), and [`Decoder`] streams `(position, center)` pairs off
+//! the payload — positions and codes are walked in lockstep, so the server
+//! reduce never materializes a dense ĝ.
 //!
 //! TINYSCRIPT (ref. [26], as adapted in Sec. V-A) is the M = 0, d-Weibull
 //! configuration: [`M22::tinyscript`].
@@ -27,11 +33,11 @@ use crate::quantizer::{Family, TableSource};
 use crate::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
 use crate::train::ModelSpec;
 
-use super::bitpack::{pack_indices, unpack_indices};
+use super::bitpack::{BitReader, BitWriter};
 use super::rate::RateReport;
-use super::rle::{decode_positions, encode_positions, position_bits};
-use super::topk::topk;
-use super::{BlockCodec, Compressed, Compressor, MAX_LEVELS};
+use super::rle::{encode_positions_into, position_bits, PositionReader};
+use super::topk::topk_inplace_into;
+use super::{BlockCodec, Decoder, EncodeCtx, Encoder, MAX_LEVELS};
 
 /// Tensors below this size pool into the global fallback group.
 pub const DEFAULT_MIN_FIT: usize = 512;
@@ -55,7 +61,7 @@ impl M22Config {
     }
 }
 
-/// The M22 compressor (also TINYSCRIPT via [`M22::tinyscript`]).
+/// The M22 encoder/decoder (also TINYSCRIPT via [`M22::tinyscript`]).
 pub struct M22 {
     pub cfg: M22Config,
     codec: Arc<dyn BlockCodec>,
@@ -103,14 +109,16 @@ impl M22 {
     }
 
     /// Group id of a flat position: index into fit_groups, or groups.len()
-    /// for the global group.
+    /// for the global group. Groups are sorted and disjoint, so a binary
+    /// search over the range ends finds the only candidate in O(log groups)
+    /// (the old linear scan cost O(groups) per survivor on deep models).
     fn group_of(groups: &[std::ops::Range<usize>], pos: usize) -> usize {
-        for (i, r) in groups.iter().enumerate() {
-            if r.contains(&pos) {
-                return i;
-            }
+        let i = groups.partition_point(|r| r.end <= pos);
+        if i < groups.len() && groups[i].contains(&pos) {
+            i
+        } else {
+            groups.len()
         }
-        groups.len()
     }
 
     /// Fit one group's (std, shape) from sparse slice values.
@@ -137,111 +145,14 @@ impl M22 {
             .scaled(p.std.max(1e-30) as f64);
         q.padded_f32(MAX_LEVELS)
     }
-}
 
-impl Compressor for M22 {
-    fn name(&self) -> String {
-        if self.cfg.m == 0.0 && self.cfg.family == Family::Weibull {
-            format!("tinyscript(R={})", self.cfg.rq)
-        } else {
-            format!("m22-{}(M={}, R={})", self.cfg.family.label(), self.cfg.m, self.cfg.rq)
-        }
-    }
-
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
-        if grad.len() != spec.d() {
-            bail!("grad len {} != d {}", grad.len(), spec.d());
-        }
-        let cfg = self.cfg;
-        let (sparse, mut positions) = topk(grad, cfg.k.min(grad.len()));
-        // exact-zero entries can be selected when k exceeds the nonzero
-        // count; they carry no information (the decoder reconstructs zeros
-        // by default), so drop them from the transmitted support.
-        positions.retain(|&p| sparse[p as usize] != 0.0);
-        let groups = self.fit_groups(spec);
-
-        // --- fit every group ------------------------------------------------
-        let mut params: Vec<GroupParams> = Vec::with_capacity(groups.len() + 1);
-        for r in &groups {
-            params.push(self.fit_group(&sparse[r.clone()])?);
-        }
-        // global group: everything not covered by a fit group
-        let mut rest: Vec<f32> = Vec::new();
-        let mut cursor = 0usize;
-        for r in &groups {
-            rest.extend_from_slice(&sparse[cursor..r.start]);
-            cursor = r.end;
-        }
-        rest.extend_from_slice(&sparse[cursor..]);
-        params.push(self.fit_group(&rest)?);
-
-        // --- quantize group-wise into dense idx/ghat ------------------------
-        let mut idx_dense: Vec<u32> = vec![0; grad.len()];
-        let mut ghat: Vec<f32> = vec![0.0; grad.len()];
-        for (gi, r) in groups.iter().enumerate() {
-            let (t, c) = self.quantizer_arrays(params[gi]);
-            let (idx, gh) = self.codec.quantize(&sparse[r.clone()], &t, &c)?;
-            idx_dense[r.clone()].copy_from_slice(&idx);
-            ghat[r.clone()].copy_from_slice(&gh);
-        }
-        if !rest.is_empty() {
-            // global group: quantize only the pooled leftover values (§Perf
-            // opt L3-1 — quantizing the full vector again cost ~25% of the
-            // whole compress path), then scatter back into the gaps.
-            let (t, c) = self.quantizer_arrays(*params.last().unwrap());
-            let (idx, gh) = self.codec.quantize(&rest, &t, &c)?;
-            let mut j = 0usize; // cursor into rest
-            let mut cursor = 0usize;
-            let mut scatter = |range: std::ops::Range<usize>, j: &mut usize| {
-                for i in range {
-                    idx_dense[i] = idx[*j];
-                    ghat[i] = gh[*j];
-                    *j += 1;
-                }
-            };
-            for r in &groups {
-                scatter(cursor..r.start, &mut j);
-                cursor = r.end;
-            }
-            scatter(cursor..sparse.len(), &mut j);
-            debug_assert_eq!(j, rest.len());
-        }
-
-        // --- serialize -------------------------------------------------------
-        let pos_bytes = encode_positions(&positions);
-        let survivor_idx: Vec<u32> = positions.iter().map(|&p| idx_dense[p as usize]).collect();
-        let idx_bytes = pack_indices(&survivor_idx, cfg.rq);
-
-        let mut payload = Vec::with_capacity(12 + pos_bytes.len() + idx_bytes.len());
-        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&pos_bytes);
-        for p in &params {
-            payload.extend_from_slice(&p.std.to_le_bytes());
-            payload.extend_from_slice(&p.shape.to_le_bytes());
-        }
-        payload.extend_from_slice(&idx_bytes);
-
-        let report = RateReport {
-            d: spec.d(),
-            k: positions.len(),
-            position_bits_ideal: crate::stats::special::log2_choose(
-                spec.d() as u64,
-                positions.len() as u64,
-            ),
-            position_bits_actual: position_bits(&positions),
-            value_bits: positions.len() as u64 * cfg.rq as u64,
-            side_bits: params.len() as u64 * 64,
-            payload_bytes: payload.len(),
-        };
-        Ok(Compressed { payload, reconstructed: ghat, report })
-    }
-
-    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
-        let cfg = self.cfg;
-        let groups = self.fit_groups(spec);
-        let n_groups = groups.len() + 1;
-
+    /// Parse the payload header shared by both decode surfaces: returns
+    /// (k, positions bytes, per-group params, packed-code bytes).
+    fn parse_payload<'a>(
+        &self,
+        payload: &'a [u8],
+        n_groups: usize,
+    ) -> Result<(usize, &'a [u8], Vec<GroupParams>, &'a [u8])> {
         let take_u32 = |b: &[u8], at: usize| -> Result<u32> {
             Ok(u32::from_le_bytes(
                 b.get(at..at + 4).context("short payload")?.try_into().unwrap(),
@@ -250,13 +161,8 @@ impl Compressor for M22 {
         let k = take_u32(payload, 0)? as usize;
         let npos = take_u32(payload, 4)? as usize;
         let mut off = 8;
-        let positions = decode_positions(
-            payload.get(off..off + npos).context("short positions")?,
-            k,
-        )
-        .context("positions decode")?;
+        let pos_bytes = payload.get(off..off + npos).context("short positions")?;
         off += npos;
-
         let mut params = Vec::with_capacity(n_groups);
         for _ in 0..n_groups {
             let std = f32::from_le_bytes(
@@ -268,25 +174,164 @@ impl Compressor for M22 {
             params.push(GroupParams { std, shape });
             off += 8;
         }
-        let idx = unpack_indices(&payload[off..], cfg.rq, k).context("indices decode")?;
+        Ok((k, pos_bytes, params, &payload[off..]))
+    }
+}
+
+impl Encoder for M22 {
+    fn name(&self) -> String {
+        if self.cfg.m == 0.0 && self.cfg.family == Family::Weibull {
+            format!("tinyscript(R={})", self.cfg.rq)
+        } else {
+            format!("m22-{}(M={}, R={})", self.cfg.family.label(), self.cfg.m, self.cfg.rq)
+        }
+    }
+
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport> {
+        if grad.len() != spec.d() {
+            bail!("grad len {} != d {}", grad.len(), spec.d());
+        }
+        let cfg = self.cfg;
+        ctx.begin(grad);
+        topk_inplace_into(&mut ctx.sparse, cfg.k.min(grad.len()), &mut ctx.positions, &mut ctx.vals);
+        // exact-zero entries can be selected when k exceeds the nonzero
+        // count; they carry no information (the decoder reconstructs zeros
+        // by default), so drop them from the transmitted support.
+        let sparse = &ctx.sparse;
+        ctx.positions.retain(|&p| sparse[p as usize] != 0.0);
+        let groups = self.fit_groups(spec);
+
+        // --- fit every group ------------------------------------------------
+        let mut params: Vec<GroupParams> = Vec::with_capacity(groups.len() + 1);
+        for r in &groups {
+            params.push(self.fit_group(&ctx.sparse[r.clone()])?);
+        }
+        // global group: everything not covered by a fit group, pooled into
+        // the vals scratch
+        ctx.vals.clear();
+        let mut cursor = 0usize;
+        for r in &groups {
+            ctx.vals.extend_from_slice(&ctx.sparse[cursor..r.start]);
+            cursor = r.end;
+        }
+        ctx.vals.extend_from_slice(&ctx.sparse[cursor..]);
+        params.push(self.fit_group(&ctx.vals)?);
+
+        // --- quantize group-wise into the dense idx/ghat scratch ------------
+        ctx.idx.resize(grad.len(), 0);
+        for (gi, r) in groups.iter().enumerate() {
+            let (t, c) = self.quantizer_arrays(params[gi]);
+            self.codec.quantize_into(
+                &ctx.sparse[r.clone()],
+                &t,
+                &c,
+                &mut ctx.idx[r.clone()],
+                &mut ctx.ghat[r.clone()],
+            )?;
+        }
+        if !ctx.vals.is_empty() {
+            // global group: quantize only the pooled leftover values (§Perf
+            // opt L3-1 — quantizing the full vector again cost ~25% of the
+            // whole compress path), then scatter back into the gaps.
+            let (t, c) = self.quantizer_arrays(*params.last().unwrap());
+            ctx.codes.resize(ctx.vals.len(), 0);
+            ctx.vals2.resize(ctx.vals.len(), 0.0);
+            self.codec.quantize_into(&ctx.vals, &t, &c, &mut ctx.codes, &mut ctx.vals2)?;
+            let mut j = 0usize; // cursor into the pooled values
+            let mut cursor = 0usize;
+            for r in &groups {
+                for i in cursor..r.start {
+                    ctx.idx[i] = ctx.codes[j];
+                    ctx.ghat[i] = ctx.vals2[j];
+                    j += 1;
+                }
+                cursor = r.end;
+            }
+            for i in cursor..grad.len() {
+                ctx.idx[i] = ctx.codes[j];
+                ctx.ghat[i] = ctx.vals2[j];
+                j += 1;
+            }
+            debug_assert_eq!(j, ctx.vals.len());
+        }
+
+        // --- serialize -------------------------------------------------------
+        encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
+        ctx.code_bytes.clear();
+        let mut w = BitWriter::from_vec(std::mem::take(&mut ctx.code_bytes));
+        for &p in &ctx.positions {
+            w.push(ctx.idx[p as usize], cfg.rq);
+        }
+        ctx.code_bytes = w.into_bytes();
+
+        ctx.payload.reserve(12 + ctx.pos_bytes.len() + 8 * params.len() + ctx.code_bytes.len());
+        ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&(ctx.pos_bytes.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&ctx.pos_bytes);
+        for p in &params {
+            ctx.payload.extend_from_slice(&p.std.to_le_bytes());
+            ctx.payload.extend_from_slice(&p.shape.to_le_bytes());
+        }
+        ctx.payload.extend_from_slice(&ctx.code_bytes);
+
+        Ok(RateReport {
+            d: spec.d(),
+            k: ctx.positions.len(),
+            position_bits_ideal: crate::stats::special::log2_choose(
+                spec.d() as u64,
+                ctx.positions.len() as u64,
+            ),
+            position_bits_actual: position_bits(&ctx.positions),
+            value_bits: ctx.positions.len() as u64 * cfg.rq as u64,
+            side_bits: params.len() as u64 * 64,
+            payload_bytes: ctx.payload.len(),
+        })
+    }
+}
+
+impl Decoder for M22 {
+    fn name(&self) -> String {
+        Encoder::name(self)
+    }
+
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
+        let cfg = self.cfg;
+        let d = spec.d();
+        let groups = self.fit_groups(spec);
+        let (k, pos_bytes, params, code_bytes) = self.parse_payload(payload, groups.len() + 1)?;
 
         // rebuild per-group center tables (same snap path as the encoder)
         let centers: Vec<Vec<f32>> =
             params.iter().map(|&p| self.quantizer_arrays(p).1).collect();
 
-        let mut out = vec![0.0f32; spec.d()];
-        for (&pos, &i) in positions.iter().zip(&idx) {
-            let gid = Self::group_of(&groups, pos as usize);
-            out[pos as usize] = centers[gid][i as usize];
+        // walk positions and packed codes in lockstep — no dense ĝ, no
+        // intermediate position/index vectors
+        let mut positions = PositionReader::new(pos_bytes);
+        let mut codes = BitReader::new(code_bytes);
+        for _ in 0..k {
+            let pos = positions.next_position().context("positions decode")? as usize;
+            let code = codes.read(cfg.rq).context("indices decode")? as usize;
+            if pos >= d {
+                bail!("survivor position {pos} out of range (d = {d})");
+            }
+            let gid = Self::group_of(&groups, pos);
+            visit(pos, centers[gid][code]);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::encode_once;
     use crate::compress::testutil::{grad_like, tiny_spec};
+    use crate::compress::topk::topk;
     use crate::compress::CpuCodec;
     use crate::quantizer::QuantizerTables;
 
@@ -305,13 +350,28 @@ mod tests {
         for family in [Family::GenNorm, Family::Weibull] {
             for m in [0.0, 2.0] {
                 for rq in [1u32, 3] {
-                    let mut c = mk(family, m, rq, 2400, 512);
-                    let out = c.compress(&g, &spec).unwrap();
-                    let dec = c.decompress(&out.payload, &spec).unwrap();
-                    assert_eq!(dec, out.reconstructed, "family={family:?} m={m} rq={rq}");
+                    let c = mk(family, m, rq, 2400, 512);
+                    let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+                    let dec = c.decode_dense(&payload, &spec).unwrap();
+                    assert_eq!(dec, reconstructed, "family={family:?} m={m} rq={rq}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn group_of_binary_search_matches_linear_scan() {
+        let groups = vec![0..100usize, 100..500, 800..1000, 1500..1501];
+        let linear = |pos: usize| {
+            groups
+                .iter()
+                .position(|r| r.contains(&pos))
+                .unwrap_or(groups.len())
+        };
+        for pos in [0usize, 50, 99, 100, 499, 500, 700, 799, 800, 999, 1000, 1500, 1501, 9999] {
+            assert_eq!(M22::group_of(&groups, pos), linear(pos), "pos {pos}");
+        }
+        assert_eq!(M22::group_of(&[], 5), 0);
     }
 
     #[test]
@@ -319,14 +379,14 @@ mod tests {
         let spec = tiny_spec(4000, 64);
         let g = grad_like(4064, 8);
         let k = 1000;
-        let mut c = mk(Family::GenNorm, 2.0, 2, k, 512);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(out.report.k, k);
-        assert_eq!(out.report.value_bits, (k * 2) as u64);
-        assert_eq!(out.reconstructed.iter().filter(|x| **x != 0.0).count(), k);
+        let c = mk(Family::GenNorm, 2.0, 2, k, 512);
+        let (_, reconstructed, report) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(report.k, k);
+        assert_eq!(report.value_bits, (k * 2) as u64);
+        assert_eq!(reconstructed.iter().filter(|x| **x != 0.0).count(), k);
         // reconstruction supported exactly on topK positions
         let (_, pos) = topk(&g, k);
-        for (i, &x) in out.reconstructed.iter().enumerate() {
+        for (i, &x) in reconstructed.iter().enumerate() {
             assert_eq!(x != 0.0, pos.contains(&(i as u32)), "pos {i}");
         }
     }
@@ -337,11 +397,11 @@ mod tests {
         // percent RMS of the survivors.
         let spec = tiny_spec(8000, 0);
         let g = grad_like(8000, 9);
-        let mut c = mk(Family::GenNorm, 0.0, 4, 8000, 512);
-        let out = c.compress(&g, &spec).unwrap();
+        let c = mk(Family::GenNorm, 0.0, 4, 8000, 512);
+        let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
         let mse: f64 = g
             .iter()
-            .zip(&out.reconstructed)
+            .zip(&reconstructed)
             .map(|(a, b)| ((a - b) as f64).powi(2))
             .sum::<f64>()
             / g.len() as f64;
@@ -355,11 +415,11 @@ mod tests {
         let g = grad_like(6000, 10);
         let mut prev = f64::INFINITY;
         for rq in [1u32, 2, 3, 4] {
-            let mut c = mk(Family::GenNorm, 2.0, rq, 6000, 512);
-            let out = c.compress(&g, &spec).unwrap();
+            let c = mk(Family::GenNorm, 2.0, rq, 6000, 512);
+            let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
             let mse: f64 = g
                 .iter()
-                .zip(&out.reconstructed)
+                .zip(&reconstructed)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum();
             assert!(mse < prev, "rq={rq} mse={mse} prev={prev}");
@@ -372,20 +432,19 @@ mod tests {
         let t = M22::tinyscript(2, 100, Arc::new(CpuCodec), Arc::new(QuantizerTables::new()));
         assert_eq!(t.cfg.m, 0.0);
         assert_eq!(t.cfg.family, Family::Weibull);
-        assert!(t.name().starts_with("tinyscript"));
+        assert!(Encoder::name(&t).starts_with("tinyscript"));
     }
 
     #[test]
     fn payload_size_matches_report() {
         let spec = tiny_spec(4000, 64);
         let g = grad_like(4064, 11);
-        let mut c = mk(Family::Weibull, 4.0, 3, 2000, 512);
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(out.report.payload_bytes, out.payload.len());
+        let c = mk(Family::Weibull, 4.0, 3, 2000, 512);
+        let (payload, _, report) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(report.payload_bytes, payload.len());
         // payload bits within a few bytes of the reported components
-        let reported =
-            out.report.position_bits_actual + out.report.value_bits + out.report.side_bits;
-        let actual_bits = (out.payload.len() as u64) * 8;
+        let reported = report.position_bits_actual + report.value_bits + report.side_bits;
+        let actual_bits = (payload.len() as u64) * 8;
         assert!(actual_bits >= reported);
         assert!(actual_bits - reported <= 8 * 12, "framing overhead too large");
     }
@@ -402,10 +461,10 @@ mod tests {
             let k = gen.usize_in(1, d);
             let rq = *gen.pick(&[1u32, 2, 3, 4]);
             let family = *gen.pick(&[Family::GenNorm, Family::Weibull]);
-            let mut c = mk(family, gen.f64_in(0.0, 9.0), rq, k, 512);
-            let out = c.compress(&g, &spec).unwrap();
-            let dec = c.decompress(&out.payload, &spec).unwrap();
-            assert_eq!(dec, out.reconstructed);
+            let c = mk(family, gen.f64_in(0.0, 9.0), rq, k, 512);
+            let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+            let dec = c.decode_dense(&payload, &spec).unwrap();
+            assert_eq!(dec, reconstructed);
         });
     }
 
@@ -413,10 +472,10 @@ mod tests {
     fn truncated_payload_errors() {
         let spec = tiny_spec(2000, 0);
         let g = grad_like(2000, 12);
-        let mut c = mk(Family::GenNorm, 2.0, 2, 1000, 512);
-        let out = c.compress(&g, &spec).unwrap();
-        for cut in [0usize, 4, 10, out.payload.len() - 20] {
-            assert!(c.decompress(&out.payload[..cut], &spec).is_err(), "cut={cut}");
+        let c = mk(Family::GenNorm, 2.0, 2, 1000, 512);
+        let (payload, _, _) = encode_once(&c, &g, &spec).unwrap();
+        for cut in [0usize, 4, 10, payload.len() - 20] {
+            assert!(c.decode_dense(&payload[..cut], &spec).is_err(), "cut={cut}");
         }
     }
 }

@@ -1,10 +1,22 @@
 //! Gradient compression stack — the paper's Sec. V-A benchmark suite.
 //!
-//! Every scheme implements [`Compressor`]: flat gradient in → encoded
-//! payload + dense reconstruction + [`rate::RateReport`] out. The server
-//! side is a real decoder ([`Compressor::decompress`]) — tests assert
-//! `decompress(compress(g).payload) == reconstructed` bit-exactly, so the
-//! simulated channel carries honest bytes.
+//! The API is split into the two halves of the channel:
+//!
+//! * [`Encoder`] — client side. `encode(grad, spec, &mut EncodeCtx)` writes
+//!   the honest payload bytes and the dense reconstruction ĝ into a caller-
+//!   owned [`EncodeCtx`] whose buffers are reused round after round, so the
+//!   steady-state encode path allocates (almost) nothing.
+//! * [`Decoder`] — server side. The primary surface is sparse:
+//!   [`Decoder::for_each_survivor`] streams `(position, value)` pairs off the
+//!   payload bytes and [`Decoder::decode_accumulate`] folds `weight · ĝ`
+//!   straight into an accumulator. The parameter server's eq.-(7) reduce
+//!   never materializes a dense per-client ĝ; [`Decoder::decode_dense`] is
+//!   the reference path kept for tests and parity checks.
+//!
+//! Every scheme struct implements both traits; [`registry`] is the single
+//! construction surface (`SchemeSpec` → boxed encoder/decoder halves).
+//! Tests assert `decode_dense(payload) == ctx.reconstructed()` bit-exactly,
+//! so the simulated channel carries honest bytes.
 //!
 //! Schemes (paper Sec. V-A):
 //! * [`topk`] + [`uniform`]  — topK + scalar uniform quantization (eq. 15)
@@ -23,15 +35,17 @@ pub mod entropy;
 pub mod fp;
 pub mod m22;
 pub mod rate;
+pub mod registry;
 pub mod rle;
 pub mod topk;
 pub mod uniform;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::train::ModelSpec;
 
 pub use rate::{Budget, RateReport};
+pub use registry::{Scheme, SchemeSpec};
 
 /// Fixed codec geometry shared with the HLO artifacts (manifest fields).
 pub const QUANT_BLOCK: usize = 65536;
@@ -44,6 +58,24 @@ pub trait BlockCodec: Send + Sync {
     /// Zeros pass through as (0, 0.0). Returns (indices, ghat).
     fn quantize(&self, g: &[f32], thresholds: &[f32], centers: &[f32])
         -> Result<(Vec<u32>, Vec<f32>)>;
+
+    /// Allocation-free variant: write the bin indices and reconstructions
+    /// into caller-owned slices (`idx.len() == ghat.len() == g.len()`).
+    /// The default delegates to [`BlockCodec::quantize`]; the pure-Rust
+    /// codec overrides it to write in place.
+    fn quantize_into(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+        idx: &mut [u32],
+        ghat: &mut [f32],
+    ) -> Result<()> {
+        let (i, gh) = self.quantize(g, thresholds, centers)?;
+        idx.copy_from_slice(&i);
+        ghat.copy_from_slice(&gh);
+        Ok(())
+    }
 
     /// Fused moment sums of nonzero entries:
     /// [nnz, Σ|g|, Σg², Σ√|g|, Σ|g|³, max|g|, Σg⁴, Σln|g|].
@@ -62,24 +94,38 @@ impl BlockCodec for CpuCodec {
         thresholds: &[f32],
         centers: &[f32],
     ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let mut idx = vec![0u32; g.len()];
+        let mut ghat = vec![0.0f32; g.len()];
+        self.quantize_into(g, thresholds, centers, &mut idx, &mut ghat)?;
+        Ok((idx, ghat))
+    }
+
+    fn quantize_into(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+        idx: &mut [u32],
+        ghat: &mut [f32],
+    ) -> Result<()> {
         debug_assert_eq!(thresholds.len(), MAX_LEVELS - 1);
         debug_assert_eq!(centers.len(), MAX_LEVELS);
-        let mut idx = Vec::with_capacity(g.len());
-        let mut ghat = Vec::with_capacity(g.len());
-        for &x in g {
+        debug_assert_eq!(idx.len(), g.len());
+        debug_assert_eq!(ghat.len(), g.len());
+        for (j, &x) in g.iter().enumerate() {
             if x == 0.0 {
-                idx.push(0);
-                ghat.push(0.0);
+                idx[j] = 0;
+                ghat[j] = 0.0;
                 continue;
             }
             // searchsorted(side=right): #thresholds <= x.
             // partition_point = binary search (4 compares for 15 thresholds
             // vs ~8 for a linear scan — §Perf opt L3-2).
             let i = thresholds.partition_point(|&t| x >= t);
-            idx.push(i as u32);
-            ghat.push(centers[i]);
+            idx[j] = i as u32;
+            ghat[j] = centers[i];
         }
-        Ok((idx, ghat))
+        Ok(())
     }
 
     fn moments(&self, g: &[f32]) -> Result<[f64; 8]> {
@@ -102,53 +148,210 @@ impl BlockCodec for CpuCodec {
     }
 }
 
-/// One compressed uplink.
-#[derive(Debug, Clone)]
-pub struct Compressed {
-    /// Honest encoded bytes — what would go over the wire.
-    pub payload: Vec<u8>,
-    /// Dense ĝ (== what `decompress(payload)` yields).
-    pub reconstructed: Vec<f32>,
-    pub report: RateReport,
+/// Reusable encode scratch: every buffer an encoder needs per round, owned
+/// by the caller (the [`crate::fedserve::ClientSession`]) and recycled so
+/// the steady-state encode path allocates nothing proportional to d or K.
+///
+/// After a successful [`Encoder::encode`] call, [`EncodeCtx::payload`]
+/// holds the honest wire bytes and [`EncodeCtx::reconstructed`] the dense
+/// ĝ the server-side decode will reproduce bit-exactly (the input to
+/// error-feedback memory).
+#[derive(Debug, Default)]
+pub struct EncodeCtx {
+    /// sparsified working copy of the gradient (dense, d entries)
+    pub(crate) sparse: Vec<f32>,
+    /// sorted survivor positions
+    pub(crate) positions: Vec<u32>,
+    /// dense per-entry quantization indices
+    pub(crate) idx: Vec<u32>,
+    /// dense reconstruction ĝ — exactly what the decoder will produce
+    pub(crate) ghat: Vec<f32>,
+    /// survivor codes (bit-packed into the payload)
+    pub(crate) codes: Vec<u32>,
+    /// f32 scratch (pooled group values, sketch tables)
+    pub(crate) vals: Vec<f32>,
+    /// second f32 scratch (pooled-group reconstructions)
+    pub(crate) vals2: Vec<f32>,
+    /// encoded survivor-position bytes (γ-gap RLE)
+    pub(crate) pos_bytes: Vec<u8>,
+    /// bit-packed survivor-code bytes
+    pub(crate) code_bytes: Vec<u8>,
+    /// the encoded payload — what crosses the wire
+    pub(crate) payload: Vec<u8>,
 }
 
-/// A gradient compression scheme.
-pub trait Compressor: Send {
+impl EncodeCtx {
+    pub fn new() -> EncodeCtx {
+        EncodeCtx::default()
+    }
+
+    /// Reset every buffer for a fresh encode of `grad` (capacity is kept).
+    /// `sparse` starts as a copy of the gradient; `ghat` starts zeroed.
+    pub(crate) fn begin(&mut self, grad: &[f32]) {
+        self.sparse.clear();
+        self.sparse.extend_from_slice(grad);
+        self.ghat.clear();
+        self.ghat.resize(grad.len(), 0.0);
+        self.positions.clear();
+        self.idx.clear();
+        self.codes.clear();
+        self.vals.clear();
+        self.vals2.clear();
+        self.pos_bytes.clear();
+        self.code_bytes.clear();
+        self.payload.clear();
+    }
+
+    /// The encoded payload bytes of the last [`Encoder::encode`] call.
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// The dense reconstruction ĝ of the last [`Encoder::encode`] call —
+    /// bit-exactly what the server-side decode of [`EncodeCtx::payload`]
+    /// yields.
+    pub fn reconstructed(&self) -> &[f32] {
+        &self.ghat
+    }
+}
+
+/// The client half of a compression scheme: flat gradient in, payload bytes
+/// + dense reconstruction out, all through caller-owned scratch.
+pub trait Encoder: Send {
     fn name(&self) -> String;
 
-    /// Encode one flat gradient.
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed>;
+    /// Encode one flat gradient into `ctx` (payload + reconstruction land
+    /// in its reusable buffers); returns the eq. 14–17 rate accounting.
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport>;
+}
 
-    /// Server-side decode of `payload` into a dense ĝ.
-    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>>;
+/// The server half of a compression scheme: a streaming decoder over the
+/// payload bytes. The sparse-visit surface is primary — the fedserve
+/// reduce folds survivors straight into shard accumulators without ever
+/// building a dense per-client ĝ.
+pub trait Decoder: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Visit every surviving `(position, value)` of the encoded payload in
+    /// ascending position order. Implementations validate positions against
+    /// `spec.d()` before visiting.
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()>;
+
+    /// Whether [`Decoder::for_each_survivor`] is cheap enough to repeat —
+    /// true for the positional schemes, whose walk is an O(k) streaming
+    /// parse. Inherently dense decoders (count-sketch recovery scans every
+    /// coordinate and allocates) return false so the fused sharded reduce
+    /// decodes each payload exactly once instead of once per shard.
+    fn sparse_walk_is_cheap(&self) -> bool {
+        true
+    }
+
+    /// Fold `weight · ĝ` into `acc` (`acc.len() == spec.d()`) without
+    /// materializing ĝ. At `weight == 1.0` the additions are bit-identical
+    /// to `acc[i] += decode_dense(payload)[i]` in the survivor positions
+    /// (and no-ops elsewhere), which is what keeps the fused fedserve
+    /// reduce bit-exact against the dense reference path.
+    fn decode_accumulate(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if acc.len() != spec.d() {
+            bail!("accumulator has {} entries, model d = {}", acc.len(), spec.d());
+        }
+        if weight == 1.0 {
+            self.for_each_survivor(payload, spec, &mut |i, v| acc[i] += v)
+        } else {
+            self.for_each_survivor(payload, spec, &mut |i, v| acc[i] += weight * v)
+        }
+    }
+
+    /// Dense ĝ — the reference decode path (tests, parity checks, old-style
+    /// consumers). Default: scatter the survivors over zeros.
+    fn decode_dense(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; spec.d()];
+        self.for_each_survivor(payload, spec, &mut |i, v| out[i] = v)?;
+        Ok(out)
+    }
+}
+
+/// One-shot encode through a fresh scratch context — convenience for tests,
+/// examples and benches (steady-state callers hold a persistent
+/// [`EncodeCtx`] instead).
+pub fn encode_once(
+    enc: &dyn Encoder,
+    grad: &[f32],
+    spec: &ModelSpec,
+) -> Result<(Vec<u8>, Vec<f32>, RateReport)> {
+    let mut ctx = EncodeCtx::new();
+    let report = enc.encode(grad, spec, &mut ctx)?;
+    Ok((std::mem::take(&mut ctx.payload), std::mem::take(&mut ctx.ghat), report))
 }
 
 /// The identity scheme (Fig. 5-right baseline): 32 bits per dimension.
 pub struct NoCompression;
 
-impl Compressor for NoCompression {
+impl Encoder for NoCompression {
     fn name(&self) -> String {
         "none".into()
     }
 
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
-        let mut payload = Vec::with_capacity(4 * grad.len());
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport> {
+        ctx.begin(grad);
+        ctx.ghat.copy_from_slice(grad);
+        ctx.payload.reserve(4 * grad.len());
         for &x in grad {
-            payload.extend_from_slice(&x.to_le_bytes());
+            ctx.payload.extend_from_slice(&x.to_le_bytes());
         }
-        let report = RateReport {
+        Ok(RateReport {
             d: spec.d(),
             k: grad.iter().filter(|x| **x != 0.0).count(),
             position_bits_ideal: 0.0,
             position_bits_actual: 0,
             value_bits: 32 * grad.len() as u64,
             side_bits: 0,
-            payload_bytes: payload.len(),
-        };
-        Ok(Compressed { payload, reconstructed: grad.to_vec(), report })
+            payload_bytes: ctx.payload.len(),
+        })
+    }
+}
+
+impl Decoder for NoCompression {
+    fn name(&self) -> String {
+        "none".into()
     }
 
-    fn decompress(&self, payload: &[u8], _spec: &ModelSpec) -> Result<Vec<f32>> {
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
+        if payload.len() % 4 != 0 {
+            bail!("uncompressed payload length {} not a multiple of 4", payload.len());
+        }
+        if payload.len() / 4 > spec.d() {
+            bail!("uncompressed payload has {} entries, model d = {}", payload.len() / 4, spec.d());
+        }
+        for (i, c) in payload.chunks_exact(4).enumerate() {
+            let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            if v != 0.0 {
+                visit(i, v);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_dense(&self, payload: &[u8], _spec: &ModelSpec) -> Result<Vec<f32>> {
+        if payload.len() % 4 != 0 {
+            bail!("uncompressed payload length {} not a multiple of 4", payload.len());
+        }
         Ok(payload
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -216,6 +419,12 @@ mod tests {
         let (idx, ghat) = CpuCodec.quantize(&g, &t, &c).unwrap();
         assert_eq!(idx, vec![0, 1, 1, 0, 2, 3, 3]);
         assert_eq!(ghat, vec![-2.0, -0.5, -0.5, 0.0, 0.5, 2.0, 2.0]);
+        // the in-place variant writes identical results
+        let mut idx2 = vec![9u32; g.len()];
+        let mut ghat2 = vec![9.0f32; g.len()];
+        CpuCodec.quantize_into(&g, &t, &c, &mut idx2, &mut ghat2).unwrap();
+        assert_eq!(idx2, idx);
+        assert_eq!(ghat2, ghat);
     }
 
     #[test]
@@ -232,11 +441,48 @@ mod tests {
     fn no_compression_roundtrip() {
         let spec = tiny_spec(100, 4);
         let g = grad_like(104, 1);
-        let mut c = NoCompression;
-        let out = c.compress(&g, &spec).unwrap();
-        assert_eq!(out.reconstructed, g);
-        assert_eq!(out.report.value_bits, 32 * 104);
-        let dec = c.decompress(&out.payload, &spec).unwrap();
+        let c = NoCompression;
+        let (payload, reconstructed, report) = encode_once(&c, &g, &spec).unwrap();
+        assert_eq!(reconstructed, g);
+        assert_eq!(report.value_bits, 32 * 104);
+        let dec = c.decode_dense(&payload, &spec).unwrap();
         assert_eq!(dec, g);
+    }
+
+    #[test]
+    fn no_compression_accumulate_matches_dense() {
+        let spec = tiny_spec(30, 2);
+        let g = grad_like(32, 2);
+        let (payload, _, _) = encode_once(&NoCompression, &g, &spec).unwrap();
+        let dense = NoCompression.decode_dense(&payload, &spec).unwrap();
+        let mut acc = vec![0.5f32; 32];
+        let mut want = acc.clone();
+        NoCompression.decode_accumulate(&payload, &spec, 2.0, &mut acc).unwrap();
+        for (w, d) in want.iter_mut().zip(&dense) {
+            *w += 2.0 * d;
+        }
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn decode_accumulate_rejects_wrong_dimension() {
+        let spec = tiny_spec(30, 2);
+        let g = grad_like(32, 3);
+        let (payload, _, _) = encode_once(&NoCompression, &g, &spec).unwrap();
+        let mut acc = vec![0.0f32; 7];
+        assert!(NoCompression.decode_accumulate(&payload, &spec, 1.0, &mut acc).is_err());
+    }
+
+    #[test]
+    fn encode_ctx_buffers_are_reused() {
+        let spec = tiny_spec(100, 4);
+        let g = grad_like(104, 4);
+        let mut ctx = EncodeCtx::new();
+        NoCompression.encode(&g, &spec, &mut ctx).unwrap();
+        let cap = ctx.payload.capacity();
+        let first = ctx.payload().to_vec();
+        NoCompression.encode(&g, &spec, &mut ctx).unwrap();
+        assert_eq!(ctx.payload(), &first[..]);
+        assert_eq!(ctx.payload.capacity(), cap, "payload buffer was reallocated");
     }
 }

@@ -1,0 +1,383 @@
+//! One construction surface for every compression scheme.
+//!
+//! [`SchemeSpec`] is the fully-resolved "which codec, at which operating
+//! point" record: parseable from a one-line config string
+//! (`"m22-gennorm:m=2,rq=3"`, `"tinyscript:rq=1,k=5000"`, `"fp8"`,
+//! `"sketch:depth=5"`), derivable from an experiment budget
+//! ([`SchemeSpec::resolve`]), and buildable into either half of the split
+//! codec API ([`build_encoder`] / [`build_decoder`]). Everything that used
+//! to hand-construct scheme structs — the experiment config, the fedserve
+//! simulation, the coordinator workers, examples and benches — goes through
+//! here, so adding a scenario sweep is a one-line `SchemeSpec` change.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quantizer::{Family, PrewarmPlan, TableSource};
+
+use super::count_sketch::CountSketch;
+use super::fp::TopKFp;
+use super::m22::{M22, M22Config, DEFAULT_MIN_FIT};
+use super::rate::Budget;
+use super::uniform::TopKUniform;
+use super::{BlockCodec, Decoder, Encoder, NoCompression};
+
+/// Which compression scheme a run uses (one paper curve each).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// M22 with a distribution family and distortion exponent M.
+    M22 { family: Family, m: f64 },
+    /// TINYSCRIPT = M22 degenerate case (M = 0, d-Weibull).
+    TinyScript,
+    /// topK + uniform scalar quantization.
+    TopKUniform,
+    /// topK + minifloat (8 or 4 bits).
+    TopKFp { bits: u32 },
+    /// count-sketch (no positions, whole budget in the table).
+    CountSketch,
+    /// no compression (Fig. 5-right baseline).
+    None,
+}
+
+impl Scheme {
+    pub fn parse(name: &str, m: f64) -> Result<Scheme> {
+        Ok(match name {
+            "m22-gennorm" | "m22_g" | "G" => Scheme::M22 { family: Family::GenNorm, m },
+            "m22-weibull" | "m22_w" | "W" => Scheme::M22 { family: Family::Weibull, m },
+            "tinyscript" => Scheme::TinyScript,
+            "topk-uniform" | "uniform" => Scheme::TopKUniform,
+            "topk-fp8" | "fp8" => Scheme::TopKFp { bits: 8 },
+            "topk-fp4" | "fp4" => Scheme::TopKFp { bits: 4 },
+            "count-sketch" | "sketch" => Scheme::CountSketch,
+            "none" | "uncompressed" => Scheme::None,
+            _ => bail!("unknown scheme `{name}`"),
+        })
+    }
+
+    /// Legend label matching the paper's figure conventions
+    /// ("G 2" = M22+GenNorm M=2, "W 4" = M22+Weibull M=4, ...).
+    pub fn label(&self, rq: u32) -> String {
+        match self {
+            Scheme::M22 { family, m } => format!("{} {m} (R={rq})", family.label()),
+            Scheme::TinyScript => format!("TINYSCRIPT (R={rq})"),
+            Scheme::TopKUniform => format!("topK+uniform (R={rq})"),
+            Scheme::TopKFp { bits } => format!("topK+{bits}fp"),
+            Scheme::CountSketch => format!("count sketch (r={rq})"),
+            Scheme::None => "no quantization".into(),
+        }
+    }
+}
+
+/// A scheme plus its construction parameters. Zero-valued numeric fields
+/// mean "derive from the budget" — fill them with [`SchemeSpec::resolve`]
+/// before building.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchemeSpec {
+    pub scheme: Scheme,
+    /// bits per surviving entry (0 = derive from the budget)
+    pub rq: u32,
+    /// sparsification level K (0 = derive: K_ref, or budget/p for fp)
+    pub k: usize,
+    /// M22: tensors below this size pool into the global group
+    pub min_fit: usize,
+    /// count-sketch: table rows
+    pub sketch_depth: usize,
+    /// count-sketch operator seed (0 = derive from the experiment seed)
+    pub seed: u64,
+}
+
+impl SchemeSpec {
+    pub fn new(scheme: Scheme, rq: u32, k: usize) -> SchemeSpec {
+        SchemeSpec { scheme, rq, k, min_fit: DEFAULT_MIN_FIT, sketch_depth: 3, seed: 0 }
+    }
+
+    /// Parse a one-line scheme string: `name[:key=val,...]`.
+    ///
+    /// The name is anything [`Scheme::parse`] accepts; keys are `m` (M22
+    /// distortion exponent), `rq`/`rate`, `k`, `min_fit`, `depth`
+    /// (count-sketch rows) and `seed`. Examples:
+    /// `"m22-gennorm:m=2,rq=3"`, `"tinyscript:rq=1,k=5000"`, `"fp8"`,
+    /// `"sketch:depth=5"`, `"none"`.
+    pub fn parse(s: &str) -> Result<SchemeSpec> {
+        let (name, opts) = match s.split_once(':') {
+            Some((n, o)) => (n, Some(o)),
+            None => (s, None),
+        };
+        let mut m = 0.0f64;
+        let mut rq = 0u32;
+        let mut k = 0usize;
+        let mut min_fit = DEFAULT_MIN_FIT;
+        let mut depth = 3usize;
+        let mut seed = 0u64;
+        if let Some(opts) = opts {
+            for kv in opts.split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (key, val) = kv
+                    .split_once('=')
+                    .with_context(|| format!("expected key=value in `{kv}`"))?;
+                let val = val.trim();
+                match key.trim() {
+                    "m" => m = val.parse().with_context(|| format!("bad m `{val}`"))?,
+                    "rq" | "rate" => {
+                        rq = val.parse().with_context(|| format!("bad rq `{val}`"))?
+                    }
+                    "k" => k = val.parse().with_context(|| format!("bad k `{val}`"))?,
+                    "min_fit" => {
+                        min_fit = val.parse().with_context(|| format!("bad min_fit `{val}`"))?
+                    }
+                    "depth" => {
+                        depth = val.parse().with_context(|| format!("bad depth `{val}`"))?
+                    }
+                    "seed" => seed = val.parse().with_context(|| format!("bad seed `{val}`"))?,
+                    other => bail!("unknown scheme option `{other}`"),
+                }
+            }
+        }
+        let scheme = Scheme::parse(name, m)?;
+        Ok(SchemeSpec { scheme, rq, k, min_fit, sketch_depth: depth, seed })
+    }
+
+    /// Fill every unset (zero) field from the experiment budget: the rate,
+    /// the per-scheme sparsity derivation (K_ref for quantizer schemes,
+    /// budget/p for minifloat), and the shared-operator seed.
+    pub fn resolve(mut self, b: &Budget, seed: u64) -> SchemeSpec {
+        if self.rq == 0 {
+            self.rq = b.rq;
+        }
+        if self.k == 0 {
+            self.k = match self.scheme {
+                Scheme::TopKFp { bits } => b.k_fp(bits),
+                _ => b.k_ref,
+            };
+        }
+        if self.seed == 0 {
+            self.seed = seed;
+        }
+        self
+    }
+
+    pub fn label(&self) -> String {
+        self.scheme.label(self.rq)
+    }
+
+    /// The (family, shape, M, levels) grid a parameter server should
+    /// prewarm for this scheme, if it uses LBG tables at all.
+    pub fn prewarm_plan(&self) -> Option<PrewarmPlan> {
+        match self.scheme {
+            Scheme::M22 { family, m } => {
+                Some(PrewarmPlan::paper_grid(family, m, 1usize << self.rq))
+            }
+            Scheme::TinyScript => {
+                Some(PrewarmPlan::paper_grid(Family::Weibull, 0.0, 1usize << self.rq))
+            }
+            _ => None,
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.scheme == Scheme::None {
+            return Ok(());
+        }
+        if self.k == 0 {
+            bail!("scheme spec `{}` has k = 0 — resolve() it against a budget first", self.label());
+        }
+        match self.scheme {
+            Scheme::M22 { .. } | Scheme::TinyScript => {
+                if !(1..=4).contains(&self.rq) {
+                    bail!("rq = {} out of [1, 4] for M22/TINYSCRIPT", self.rq);
+                }
+            }
+            Scheme::TopKUniform => {
+                if !(1..=16).contains(&self.rq) {
+                    bail!("rq = {} out of [1, 16] for topk+uniform", self.rq);
+                }
+            }
+            Scheme::TopKFp { bits } => {
+                if bits != 4 && bits != 8 {
+                    bail!("fp bits = {bits} (only 4 and 8 are supported)");
+                }
+            }
+            Scheme::CountSketch => {
+                if self.sketch_depth == 0 || self.sketch_depth > 16 {
+                    bail!("sketch depth = {} out of [1, 16]", self.sketch_depth);
+                }
+            }
+            Scheme::None => {}
+        }
+        Ok(())
+    }
+}
+
+/// The count-sketch hash seed never equals the raw experiment seed (the
+/// xor keeps the shared operator decorrelated from data sampling).
+const SKETCH_SEED_SALT: u64 = 0x5ce7_c4a1;
+
+fn m22_config(spec: &SchemeSpec, family: Family, m: f64) -> M22Config {
+    M22Config { family, m, rq: spec.rq, k: spec.k, min_fit: spec.min_fit }
+}
+
+fn sketch(spec: &SchemeSpec) -> CountSketch {
+    CountSketch::from_budget(
+        spec.k,
+        spec.k as u64 * spec.rq as u64,
+        spec.sketch_depth,
+        spec.seed ^ SKETCH_SEED_SALT,
+    )
+}
+
+/// Build the client (encode) half of a scheme.
+pub fn build_encoder(
+    spec: &SchemeSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<dyn TableSource>,
+) -> Result<Box<dyn Encoder>> {
+    spec.check()?;
+    Ok(match spec.scheme {
+        Scheme::M22 { family, m } => {
+            Box::new(M22::new(m22_config(spec, family, m), codec, tables))
+        }
+        Scheme::TinyScript => Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables)),
+        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k)),
+        Scheme::TopKFp { bits } => {
+            Box::new(if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) })
+        }
+        Scheme::CountSketch => Box::new(sketch(spec)),
+        Scheme::None => Box::new(NoCompression),
+    })
+}
+
+/// Build the server (decode) half of a scheme. The two halves share no
+/// state beyond the deterministic table snap, so constructing them
+/// independently is sound — tests assert the byte-level roundtrip.
+pub fn build_decoder(
+    spec: &SchemeSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<dyn TableSource>,
+) -> Result<Box<dyn Decoder>> {
+    spec.check()?;
+    Ok(match spec.scheme {
+        Scheme::M22 { family, m } => {
+            Box::new(M22::new(m22_config(spec, family, m), codec, tables))
+        }
+        Scheme::TinyScript => Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables)),
+        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k)),
+        Scheme::TopKFp { bits } => {
+            Box::new(if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) })
+        }
+        Scheme::CountSketch => Box::new(sketch(spec)),
+        Scheme::None => Box::new(NoCompression),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CpuCodec;
+    use crate::quantizer::QuantizerTables;
+
+    fn all_schemes() -> Vec<Scheme> {
+        vec![
+            Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+            Scheme::M22 { family: Family::Weibull, m: 4.0 },
+            Scheme::TinyScript,
+            Scheme::TopKUniform,
+            Scheme::TopKFp { bits: 8 },
+            Scheme::TopKFp { bits: 4 },
+            Scheme::CountSketch,
+            Scheme::None,
+        ]
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(
+            Scheme::parse("m22-gennorm", 3.0).unwrap(),
+            Scheme::M22 { family: Family::GenNorm, m: 3.0 }
+        );
+        assert_eq!(Scheme::parse("tinyscript", 0.0).unwrap(), Scheme::TinyScript);
+        assert_eq!(Scheme::parse("fp8", 0.0).unwrap(), Scheme::TopKFp { bits: 8 });
+        assert!(Scheme::parse("bogus", 0.0).is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_conventions() {
+        assert_eq!(Scheme::M22 { family: Family::GenNorm, m: 2.0 }.label(1), "G 2 (R=1)");
+        assert_eq!(Scheme::TopKFp { bits: 4 }.label(1), "topK+4fp");
+    }
+
+    #[test]
+    fn spec_string_parsing() {
+        let s = SchemeSpec::parse("m22-gennorm:m=2.5,rq=3,k=1200").unwrap();
+        assert_eq!(s.scheme, Scheme::M22 { family: Family::GenNorm, m: 2.5 });
+        assert_eq!((s.rq, s.k), (3, 1200));
+        let s = SchemeSpec::parse("tinyscript:rq=1").unwrap();
+        assert_eq!(s.scheme, Scheme::TinyScript);
+        assert_eq!(s.k, 0); // derived later
+        let s = SchemeSpec::parse("sketch:depth=5,seed=7").unwrap();
+        assert_eq!((s.sketch_depth, s.seed), (5, 7));
+        assert_eq!(SchemeSpec::parse("fp8").unwrap().scheme, Scheme::TopKFp { bits: 8 });
+        assert!(SchemeSpec::parse("m22-gennorm:bogus=1").is_err());
+        assert!(SchemeSpec::parse("m22-gennorm:rq").is_err());
+        assert!(SchemeSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn resolve_fills_zeros_from_budget() {
+        let b = Budget::paper_point(100_000, 2);
+        let s = SchemeSpec::parse("m22-gennorm:m=2").unwrap().resolve(&b, 33);
+        assert_eq!(s.rq, 2);
+        assert_eq!(s.k, b.k_ref);
+        assert_eq!(s.seed, 33);
+        // explicit values win over the budget
+        let s = SchemeSpec::parse("m22-gennorm:m=2,rq=4,k=17,seed=5").unwrap().resolve(&b, 33);
+        assert_eq!((s.rq, s.k, s.seed), (4, 17, 5));
+        // fp derives K from the bit budget
+        let s = SchemeSpec::new(Scheme::TopKFp { bits: 8 }, 0, 0).resolve(&b, 1);
+        assert_eq!(s.k, b.k_fp(8));
+    }
+
+    #[test]
+    fn builds_every_scheme_both_halves() {
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
+        let b = Budget::paper_point(10_000, 2);
+        for scheme in all_schemes() {
+            let spec = SchemeSpec::new(scheme, 0, 0).resolve(&b, 9);
+            let enc = build_encoder(&spec, codec.clone(), tables.clone()).unwrap();
+            let dec = build_decoder(&spec, codec.clone(), tables.clone()).unwrap();
+            assert!(!enc.name().is_empty());
+            assert_eq!(enc.name(), dec.name(), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn unresolved_spec_is_rejected() {
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
+        let spec = SchemeSpec::new(Scheme::TopKUniform, 2, 0); // k unset
+        assert!(build_encoder(&spec, codec.clone(), tables.clone()).is_err());
+        // NoCompression needs nothing
+        let spec = SchemeSpec::new(Scheme::None, 0, 0);
+        assert!(build_decoder(&spec, codec, tables).is_ok());
+    }
+
+    #[test]
+    fn prewarm_plans_only_for_table_schemes() {
+        let b = Budget::paper_point(1000, 2);
+        let m22 = SchemeSpec::new(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 0, 0)
+            .resolve(&b, 1);
+        let plan = m22.prewarm_plan().unwrap();
+        assert_eq!(plan.family, Family::GenNorm);
+        assert_eq!(plan.levels, vec![4]);
+        assert!(!plan.shapes.is_empty());
+        let ts = SchemeSpec::new(Scheme::TinyScript, 0, 0).resolve(&b, 1);
+        assert_eq!(ts.prewarm_plan().unwrap().family, Family::Weibull);
+        for scheme in [Scheme::TopKUniform, Scheme::TopKFp { bits: 8 }, Scheme::CountSketch, Scheme::None] {
+            assert!(SchemeSpec::new(scheme, 2, 10).prewarm_plan().is_none(), "{scheme:?}");
+        }
+    }
+}

@@ -40,27 +40,53 @@ fn gamma_decode(r: &mut BitReader) -> Option<u64> {
     Some((1u64 << zeros) | rem)
 }
 
-/// Encode sorted, strictly increasing positions (gap + 1 per entry).
-pub fn encode_positions(positions: &[u32]) -> Vec<u8> {
-    let mut w = BitWriter::new();
+/// Encode sorted, strictly increasing positions (gap + 1 per entry) into a
+/// reused buffer (cleared first; capacity kept).
+pub fn encode_positions_into(positions: &[u32], out: &mut Vec<u8>) {
+    out.clear();
+    let mut w = BitWriter::from_vec(std::mem::take(out));
     let mut prev: i64 = -1;
     for &p in positions {
         debug_assert!(p as i64 > prev, "positions must be strictly increasing");
         gamma_encode(&mut w, (p as i64 - prev) as u64);
         prev = p as i64;
     }
-    w.into_bytes()
+    *out = w.into_bytes();
+}
+
+/// Encode sorted, strictly increasing positions (gap + 1 per entry).
+pub fn encode_positions(positions: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_positions_into(positions, &mut out);
+    out
+}
+
+/// Streaming decoder over a γ-gap position stream — the zero-allocation
+/// surface the sparse decode path ([`crate::compress::Decoder`]) walks.
+pub struct PositionReader<'a> {
+    r: BitReader<'a>,
+    prev: i64,
+}
+
+impl<'a> PositionReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> PositionReader<'a> {
+        PositionReader { r: BitReader::new(bytes), prev: -1 }
+    }
+
+    /// The next position, or `None` when the stream is exhausted/corrupt.
+    pub fn next_position(&mut self) -> Option<u32> {
+        let gap = gamma_decode(&mut self.r)? as i64;
+        self.prev += gap;
+        u32::try_from(self.prev).ok()
+    }
 }
 
 /// Decode `k` positions.
 pub fn decode_positions(bytes: &[u8], k: usize) -> Option<Vec<u32>> {
-    let mut r = BitReader::new(bytes);
+    let mut r = PositionReader::new(bytes);
     let mut out = Vec::with_capacity(k);
-    let mut prev: i64 = -1;
     for _ in 0..k {
-        let gap = gamma_decode(&mut r)? as i64;
-        prev += gap;
-        out.push(u32::try_from(prev).ok()?);
+        out.push(r.next_position()?);
     }
     Some(out)
 }

@@ -7,10 +7,13 @@
 
 /// Magnitude threshold such that keeping `|g| > thr` plus position-ordered
 /// ties at `|g| == thr` yields exactly K entries. Returns (threshold, and
-/// how many ties at the threshold to keep).
-fn select_threshold(g: &[f32], k: usize) -> (f32, usize) {
+/// how many ties at the threshold to keep). `mags` is quickselect scratch
+/// (cleared and refilled — pass a reused buffer for zero steady-state
+/// allocation).
+fn select_threshold(g: &[f32], k: usize, mags: &mut Vec<f32>) -> (f32, usize) {
     debug_assert!(k > 0 && k <= g.len());
-    let mut mags: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    mags.clear();
+    mags.extend(g.iter().map(|x| x.abs()));
     let idx = g.len() - k; // k-th largest sits at this position ascending
     // total_cmp: NaN-safe (a diverged run must degrade, not crash the PS)
     let (_, &mut thr, _) = mags.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
@@ -19,10 +22,13 @@ fn select_threshold(g: &[f32], k: usize) -> (f32, usize) {
     (thr, k - above)
 }
 
-/// Zero all but the K largest-|.| entries in place; returns the sorted
-/// positions of the survivors.
-pub fn topk_inplace(g: &mut [f32], k: usize) -> Vec<u32> {
+/// Zero all but the K largest-|.| entries in place; appends the sorted
+/// survivor positions to `kept` and uses `mags` as quickselect scratch
+/// (both cleared first — pass reused buffers for an allocation-free steady
+/// state).
+pub fn topk_inplace_into(g: &mut [f32], k: usize, kept: &mut Vec<u32>, mags: &mut Vec<f32>) {
     assert!(k <= g.len(), "k={k} > d={}", g.len());
+    kept.clear();
     // non-finite entries carry no usable information (a diverged local
     // model); zero them so selection and the downstream codec stay sound.
     for x in g.iter_mut() {
@@ -32,13 +38,14 @@ pub fn topk_inplace(g: &mut [f32], k: usize) -> Vec<u32> {
     }
     if k == 0 {
         g.fill(0.0);
-        return Vec::new();
+        return;
     }
     if k == g.len() {
-        return (0..g.len() as u32).collect();
+        kept.extend(0..g.len() as u32);
+        return;
     }
-    let (thr, mut ties_left) = select_threshold(g, k);
-    let mut kept = Vec::with_capacity(k);
+    let (thr, mut ties_left) = select_threshold(g, k, mags);
+    kept.reserve(k);
     for (i, x) in g.iter_mut().enumerate() {
         let a = x.abs();
         if a > thr {
@@ -51,6 +58,13 @@ pub fn topk_inplace(g: &mut [f32], k: usize) -> Vec<u32> {
         }
     }
     debug_assert_eq!(kept.len(), k);
+}
+
+/// Allocating variant of [`topk_inplace_into`]: returns the positions.
+pub fn topk_inplace(g: &mut [f32], k: usize) -> Vec<u32> {
+    let mut kept = Vec::new();
+    let mut mags = Vec::new();
+    topk_inplace_into(g, k, &mut kept, &mut mags);
     kept
 }
 

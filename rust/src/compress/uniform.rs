@@ -8,11 +8,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::train::ModelSpec;
 
-use super::bitpack::{pack_indices, unpack_indices};
+use super::bitpack::{pack_indices_into, BitReader};
 use super::rate::RateReport;
-use super::rle::{decode_positions, encode_positions, position_bits};
-use super::topk::topk;
-use super::{Compressed, Compressor};
+use super::rle::{encode_positions_into, position_bits, PositionReader};
+use super::topk::topk_inplace_into;
+use super::{Decoder, EncodeCtx, Encoder};
 
 /// topK + uniform quantizer.
 pub struct TopKUniform {
@@ -48,16 +48,17 @@ impl TopKUniform {
     }
 }
 
-impl Compressor for TopKUniform {
+impl Encoder for TopKUniform {
     fn name(&self) -> String {
         format!("topk+uniform(R={})", self.rq)
     }
 
-    fn compress(&mut self, grad: &[f32], spec: &ModelSpec) -> Result<Compressed> {
+    fn encode(&self, grad: &[f32], spec: &ModelSpec, ctx: &mut EncodeCtx) -> Result<RateReport> {
         if grad.len() != spec.d() {
             bail!("grad len {} != d {}", grad.len(), spec.d());
         }
-        let (sparse, positions) = topk(grad, self.k.min(grad.len()));
+        ctx.begin(grad);
+        topk_inplace_into(&mut ctx.sparse, self.k.min(grad.len()), &mut ctx.positions, &mut ctx.vals);
         let levels = self.levels();
 
         // per-tensor (min, max) over survivors
@@ -66,7 +67,7 @@ impl Compressor for TopKUniform {
             let r = spec.range(ti);
             let mut lo = f32::INFINITY;
             let mut hi = f32::NEG_INFINITY;
-            for &x in &sparse[r] {
+            for &x in &ctx.sparse[r] {
                 if x != 0.0 {
                     lo = lo.min(x);
                     hi = hi.max(x);
@@ -80,57 +81,63 @@ impl Compressor for TopKUniform {
         }
 
         // quantize survivors
-        let mut ghat = vec![0.0f32; grad.len()];
-        let mut codes = Vec::with_capacity(positions.len());
         let mut ti = 0usize;
-        for &p in &positions {
+        for &p in &ctx.positions {
             let p = p as usize;
             while p >= spec.range(ti).end {
                 ti += 1;
             }
             let (lo, hi) = ranges[ti];
-            let c = Self::encode_one(lo, hi, levels, sparse[p]);
-            codes.push(c);
-            ghat[p] = Self::center(lo, hi, levels, c);
+            let c = Self::encode_one(lo, hi, levels, ctx.sparse[p]);
+            ctx.codes.push(c);
+            ctx.ghat[p] = Self::center(lo, hi, levels, c);
         }
 
-        let pos_bytes = encode_positions(&positions);
-        let idx_bytes = pack_indices(&codes, self.rq);
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&(positions.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&(pos_bytes.len() as u32).to_le_bytes());
-        payload.extend_from_slice(&pos_bytes);
+        encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
+        pack_indices_into(&ctx.codes, self.rq, &mut ctx.code_bytes);
+        ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&(ctx.pos_bytes.len() as u32).to_le_bytes());
+        ctx.payload.extend_from_slice(&ctx.pos_bytes);
         for (lo, hi) in &ranges {
-            payload.extend_from_slice(&lo.to_le_bytes());
-            payload.extend_from_slice(&hi.to_le_bytes());
+            ctx.payload.extend_from_slice(&lo.to_le_bytes());
+            ctx.payload.extend_from_slice(&hi.to_le_bytes());
         }
-        payload.extend_from_slice(&idx_bytes);
+        ctx.payload.extend_from_slice(&ctx.code_bytes);
 
-        let report = RateReport {
+        Ok(RateReport {
             d: spec.d(),
-            k: positions.len(),
+            k: ctx.positions.len(),
             position_bits_ideal: crate::stats::special::log2_choose(
                 spec.d() as u64,
-                positions.len() as u64,
+                ctx.positions.len() as u64,
             ),
-            position_bits_actual: position_bits(&positions),
-            value_bits: positions.len() as u64 * self.rq as u64,
+            position_bits_actual: position_bits(&ctx.positions),
+            value_bits: ctx.positions.len() as u64 * self.rq as u64,
             side_bits: ranges.len() as u64 * 64,
-            payload_bytes: payload.len(),
-        };
-        Ok(Compressed { payload, reconstructed: ghat, report })
+            payload_bytes: ctx.payload.len(),
+        })
+    }
+}
+
+impl Decoder for TopKUniform {
+    fn name(&self) -> String {
+        format!("topk+uniform(R={})", self.rq)
     }
 
-    fn decompress(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
         let levels = self.levels();
+        let d = spec.d();
         let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
             as usize;
         let npos =
             u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
         let mut off = 8;
-        let positions =
-            decode_positions(payload.get(off..off + npos).context("short pos")?, k)
-                .context("positions")?;
+        let pos_bytes = payload.get(off..off + npos).context("short pos")?;
         off += npos;
         let mut ranges = Vec::with_capacity(spec.tensors.len());
         for _ in 0..spec.tensors.len() {
@@ -143,18 +150,22 @@ impl Compressor for TopKUniform {
             ranges.push((lo, hi));
             off += 8;
         }
-        let codes = unpack_indices(&payload[off..], self.rq, k).context("indices")?;
-        let mut out = vec![0.0f32; spec.d()];
+        let mut positions = PositionReader::new(pos_bytes);
+        let mut codes = BitReader::new(&payload[off..]);
         let mut ti = 0usize;
-        for (&p, &c) in positions.iter().zip(&codes) {
-            let p = p as usize;
+        for _ in 0..k {
+            let p = positions.next_position().context("positions decode")? as usize;
+            let c = codes.read(self.rq).context("indices decode")?;
+            if p >= d {
+                bail!("survivor position {p} out of range (d = {d})");
+            }
             while p >= spec.range(ti).end {
                 ti += 1;
             }
             let (lo, hi) = ranges[ti];
-            out[p] = Self::center(lo, hi, levels, c);
+            visit(p, Self::center(lo, hi, levels, c));
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -162,17 +173,18 @@ impl Compressor for TopKUniform {
 mod tests {
     use super::*;
     use crate::compress::testutil::{grad_like, tiny_spec};
+    use crate::compress::encode_once;
 
     #[test]
     fn roundtrip_exact() {
         let spec = tiny_spec(3000, 32);
         let g = grad_like(3032, 5);
         for rq in [1u32, 2, 3, 8] {
-            let mut c = TopKUniform::new(rq, 1500);
-            let out = c.compress(&g, &spec).unwrap();
-            let dec = c.decompress(&out.payload, &spec).unwrap();
-            assert_eq!(dec, out.reconstructed, "rq={rq}");
-            assert_eq!(out.report.value_bits, 1500 * rq as u64);
+            let c = TopKUniform::new(rq, 1500);
+            let (payload, reconstructed, report) = encode_once(&c, &g, &spec).unwrap();
+            let dec = c.decode_dense(&payload, &spec).unwrap();
+            assert_eq!(dec, reconstructed, "rq={rq}");
+            assert_eq!(report.value_bits, 1500 * rq as u64);
         }
     }
 
@@ -180,13 +192,13 @@ mod tests {
     fn reconstruction_within_step() {
         let spec = tiny_spec(2000, 0);
         let g = grad_like(2000, 6);
-        let mut c = TopKUniform::new(4, 2000); // no sparsification
-        let out = c.compress(&g, &spec).unwrap();
+        let c = TopKUniform::new(4, 2000); // no sparsification
+        let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
         // uniform with 16 levels: error <= half step of the layer range
         let lo = g.iter().cloned().fold(f32::INFINITY, f32::min);
         let hi = g.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let step = (hi - lo) / 15.0;
-        for (a, b) in g.iter().zip(&out.reconstructed) {
+        for (a, b) in g.iter().zip(&reconstructed) {
             assert!((a - b).abs() <= step / 2.0 + 1e-6);
         }
     }
@@ -196,10 +208,10 @@ mod tests {
         let spec = tiny_spec(4000, 0);
         let g = grad_like(4000, 7);
         let mse = |rq| {
-            let mut c = TopKUniform::new(rq, 4000);
-            let out = c.compress(&g, &spec).unwrap();
+            let c = TopKUniform::new(rq, 4000);
+            let (_, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
             g.iter()
-                .zip(&out.reconstructed)
+                .zip(&reconstructed)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum::<f64>()
         };
@@ -212,13 +224,13 @@ mod tests {
         let mut g = vec![0.0f32; 12];
         g[3] = 5.0;
         g[11] = -1.0;
-        let mut c = TopKUniform::new(2, 2);
-        let out = c.compress(&g, &spec).unwrap();
+        let c = TopKUniform::new(2, 2);
+        let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
         // lone survivor in a tensor: lo == hi == value, reconstructed exactly
-        assert_eq!(out.reconstructed[3], 5.0);
-        assert_eq!(out.reconstructed[11], -1.0);
-        let dec = c.decompress(&out.payload, &spec).unwrap();
-        assert_eq!(dec, out.reconstructed);
+        assert_eq!(reconstructed[3], 5.0);
+        assert_eq!(reconstructed[11], -1.0);
+        let dec = c.decode_dense(&payload, &spec).unwrap();
+        assert_eq!(dec, reconstructed);
     }
 
     #[test]
@@ -231,9 +243,9 @@ mod tests {
             let sp = gen.f64_in(0.0, 0.8);
             let g = gen.grad_like(d..d + 1, sp);
             let k = gen.usize_in(1, d);
-            let mut c = TopKUniform::new(*gen.pick(&[1u32, 2, 3, 4]), k);
-            let out = c.compress(&g, &spec).unwrap();
-            assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+            let c = TopKUniform::new(*gen.pick(&[1u32, 2, 3, 4]), k);
+            let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+            assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
         });
     }
 }

@@ -1,74 +1,44 @@
 //! Experiment configuration: schemes, budgets, FL hyper-parameters
-//! (paper Table II + Sec. V-B parameter lists), and the compressor factory.
+//! (paper Table II + Sec. V-B parameter lists). Scheme construction itself
+//! lives in [`crate::compress::registry`] — this module derives a
+//! [`SchemeSpec`] from the experiment budget and delegates.
 
 pub mod presets;
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::compress::count_sketch::CountSketch;
-use crate::compress::fp::TopKFp;
-use crate::compress::m22::{M22, M22Config, DEFAULT_MIN_FIT};
-use crate::compress::uniform::TopKUniform;
-use crate::compress::{Budget, BlockCodec, Compressor, NoCompression};
+use crate::compress::registry;
+use crate::compress::{BlockCodec, Budget, Decoder, Encoder};
 use crate::data::DatasetConfig;
-use crate::quantizer::{Family, TableSource};
+use crate::quantizer::TableSource;
 use crate::train::OptimizerKind;
 use crate::util::json::Json;
 
-/// Which compression scheme a run uses (one paper curve each).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Scheme {
-    /// M22 with a distribution family and distortion exponent M.
-    M22 { family: Family, m: f64 },
-    /// TINYSCRIPT = M22 degenerate case (M = 0, d-Weibull).
-    TinyScript,
-    /// topK + uniform scalar quantization.
-    TopKUniform,
-    /// topK + minifloat (8 or 4 bits).
-    TopKFp { bits: u32 },
-    /// count-sketch (no positions, whole budget in the table).
-    CountSketch,
-    /// no compression (Fig. 5-right baseline).
-    None,
-}
+pub use crate::compress::registry::{Scheme, SchemeSpec};
 
-impl Scheme {
-    pub fn parse(name: &str, m: f64) -> Result<Scheme> {
-        Ok(match name {
-            "m22-gennorm" | "m22_g" | "G" => Scheme::M22 { family: Family::GenNorm, m },
-            "m22-weibull" | "m22_w" | "W" => Scheme::M22 { family: Family::Weibull, m },
-            "tinyscript" => Scheme::TinyScript,
-            "topk-uniform" | "uniform" => Scheme::TopKUniform,
-            "topk-fp8" | "fp8" => Scheme::TopKFp { bits: 8 },
-            "topk-fp4" | "fp4" => Scheme::TopKFp { bits: 4 },
-            "count-sketch" | "sketch" => Scheme::CountSketch,
-            "none" | "uncompressed" => Scheme::None,
-            _ => bail!("unknown scheme `{name}`"),
-        })
-    }
-
-    /// Legend label matching the paper's figure conventions
-    /// ("G 2" = M22+GenNorm M=2, "W 4" = M22+Weibull M=4, ...).
-    pub fn label(&self, rq: u32) -> String {
-        match self {
-            Scheme::M22 { family, m } => format!("{} {m} (R={rq})", family.label()),
-            Scheme::TinyScript => format!("TINYSCRIPT (R={rq})"),
-            Scheme::TopKUniform => format!("topK+uniform (R={rq})"),
-            Scheme::TopKFp { bits } => format!("topK+{bits}fp"),
-            Scheme::CountSketch => format!("count sketch (r={rq})"),
-            Scheme::None => "no quantization".into(),
-        }
-    }
+/// Explicit scheme-construction overrides (from a `--scheme name:key=val`
+/// spec string). Zero-valued fields mean "derive from the budget /
+/// registry defaults" — see [`ExperimentConfig::scheme_spec`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SchemeTuning {
+    /// explicit sparsity level K
+    pub k: usize,
+    /// M22: pool tensors below this size into the global group
+    pub min_fit: usize,
+    /// count-sketch: table rows
+    pub sketch_depth: usize,
+    /// count-sketch operator seed
+    pub seed: u64,
 }
 
 /// Parameter-server knobs for the `fedserve` subsystem (ROADMAP: scale the
 /// PS loop past a handful of clients).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServerConfig {
-    /// worker shards for the aggregation reduce (1 = serial; parity with the
-    /// serial eq.-(7) path is bit-exact at any count)
+    /// worker shards for the fused decode+reduce (1 = serial; parity with
+    /// the serial eq.-(7) path is bit-exact at any count)
     pub shards: usize,
     /// explicit k-of-n participant sample per round; `None` derives k from
     /// `ExperimentConfig::participation`
@@ -80,6 +50,9 @@ pub struct ServerConfig {
     pub straggler_timeout_ms: u64,
     /// capacity of the shared LRU quantizer-table cache
     pub table_cache_capacity: usize,
+    /// design the paper's (family, shape, rq) table grid at server start
+    /// (ROADMAP: prewarm) so first-round uplinks never pay an LBG design
+    pub prewarm: bool,
 }
 
 impl Default for ServerConfig {
@@ -89,6 +62,7 @@ impl Default for ServerConfig {
             sampled_clients: None,
             straggler_timeout_ms: 0,
             table_cache_capacity: 256,
+            prewarm: true,
         }
     }
 }
@@ -106,6 +80,10 @@ pub struct ExperimentConfig {
     /// bits per surviving entry (R_u / R_mw / r_sk)
     pub rq: u32,
     pub scheme: Scheme,
+    /// explicit scheme-construction overrides (k, min_fit, sketch depth,
+    /// operator seed) — zero fields derive from the budget; set by spec
+    /// strings like `"tinyscript:k=5000"` or `"sketch:depth=5"`
+    pub scheme_tuning: SchemeTuning,
     /// fraction of clients participating each round (paper Sec. IV-B
     /// extension: "partial clients are selected in each round")
     pub participation: f64,
@@ -134,6 +112,7 @@ impl ExperimentConfig {
             keep_frac: 0.6,
             rq,
             scheme,
+            scheme_tuning: SchemeTuning::default(),
             participation: 1.0,
             dirichlet_alpha: None,
             memory: false,
@@ -167,32 +146,41 @@ impl ExperimentConfig {
         Budget { d, budget_bits: k_ref as u64 * self.rq as u64, k_ref, rq: self.rq }
     }
 
-    /// Build the scheme's compressor for model dimension `d`.
-    pub fn build_compressor(
+    /// The fully-resolved scheme spec for model dimension `d` — the single
+    /// input to [`registry::build_encoder`] / [`registry::build_decoder`].
+    /// Explicit [`SchemeTuning`] overrides win; zero fields derive from the
+    /// budget and the registry defaults.
+    pub fn scheme_spec(&self, d: usize) -> SchemeSpec {
+        let t = self.scheme_tuning;
+        let mut s = SchemeSpec::new(self.scheme, 0, t.k);
+        if t.min_fit != 0 {
+            s.min_fit = t.min_fit;
+        }
+        if t.sketch_depth != 0 {
+            s.sketch_depth = t.sketch_depth;
+        }
+        s.seed = t.seed; // 0 = derive from the experiment seed in resolve()
+        s.resolve(&self.budget(d), self.seed)
+    }
+
+    /// Build the scheme's client (encode) half for model dimension `d`.
+    pub fn build_encoder(
         &self,
         d: usize,
         codec: Arc<dyn BlockCodec>,
         tables: Arc<dyn TableSource>,
-    ) -> Box<dyn Compressor> {
-        let b = self.budget(d);
-        match self.scheme {
-            Scheme::M22 { family, m } => Box::new(M22::new(
-                M22Config { family, m, rq: self.rq, k: b.k_ref, min_fit: DEFAULT_MIN_FIT },
-                codec,
-                tables,
-            )),
-            Scheme::TinyScript => Box::new(M22::tinyscript(self.rq, b.k_ref, codec, tables)),
-            Scheme::TopKUniform => Box::new(TopKUniform::new(self.rq, b.k_ref)),
-            Scheme::TopKFp { bits } => Box::new(TopKFp {
-                fmt: if bits == 8 { crate::compress::fp::FP8 } else { crate::compress::fp::FP4 },
-                k: b.k_fp(bits),
-            }),
-            Scheme::CountSketch => {
-                // seed is shared client/server ("common sketching operator")
-                Box::new(CountSketch::from_budget(b.k_ref, b.sketch_bits(), 3, self.seed ^ 0x5ce7_c4a1))
-            }
-            Scheme::None => Box::new(NoCompression),
-        }
+    ) -> Result<Box<dyn Encoder>> {
+        registry::build_encoder(&self.scheme_spec(d), codec, tables)
+    }
+
+    /// Build the scheme's server (decode) half for model dimension `d`.
+    pub fn build_decoder(
+        &self,
+        d: usize,
+        codec: Arc<dyn BlockCodec>,
+        tables: Arc<dyn TableSource>,
+    ) -> Result<Box<dyn Decoder>> {
+        registry::build_decoder(&self.scheme_spec(d), codec, tables)
     }
 
     pub fn to_json(&self) -> Json {
@@ -209,6 +197,7 @@ impl ExperimentConfig {
             ("shards", Json::from(self.server.shards)),
             ("participants_per_round", Json::from(self.participants_per_round())),
             ("table_cache_capacity", Json::from(self.server.table_cache_capacity)),
+            ("prewarm", Json::from(self.server.prewarm)),
         ])
     }
 }
@@ -217,24 +206,7 @@ impl ExperimentConfig {
 mod tests {
     use super::*;
     use crate::compress::CpuCodec;
-    use crate::quantizer::QuantizerTables;
-
-    #[test]
-    fn scheme_parsing() {
-        assert_eq!(
-            Scheme::parse("m22-gennorm", 3.0).unwrap(),
-            Scheme::M22 { family: Family::GenNorm, m: 3.0 }
-        );
-        assert_eq!(Scheme::parse("tinyscript", 0.0).unwrap(), Scheme::TinyScript);
-        assert_eq!(Scheme::parse("fp8", 0.0).unwrap(), Scheme::TopKFp { bits: 8 });
-        assert!(Scheme::parse("bogus", 0.0).is_err());
-    }
-
-    #[test]
-    fn labels_match_paper_conventions() {
-        assert_eq!(Scheme::M22 { family: Family::GenNorm, m: 2.0 }.label(1), "G 2 (R=1)");
-        assert_eq!(Scheme::TopKFp { bits: 4 }.label(1), "topK+4fp");
-    }
+    use crate::quantizer::{Family, QuantizerTables};
 
     #[test]
     fn budget_uses_keep_frac() {
@@ -258,9 +230,34 @@ mod tests {
             Scheme::None,
         ] {
             let cfg = ExperimentConfig::new("cnn_s", scheme, 2, 3);
-            let c = cfg.build_compressor(10_000, codec.clone(), tables.clone());
-            assert!(!c.name().is_empty());
+            let enc = cfg.build_encoder(10_000, codec.clone(), tables.clone()).unwrap();
+            let dec = cfg.build_decoder(10_000, codec.clone(), tables.clone()).unwrap();
+            assert!(!enc.name().is_empty());
+            assert_eq!(enc.name(), dec.name());
         }
+    }
+
+    #[test]
+    fn scheme_spec_resolution_and_tuning_overrides() {
+        let mut cfg = ExperimentConfig::new("cnn_s", Scheme::TopKUniform, 2, 3);
+        let spec = cfg.scheme_spec(10_000);
+        assert_eq!(spec.rq, 2);
+        assert_eq!(spec.k, cfg.budget(10_000).k_ref);
+        assert_eq!(spec.seed, cfg.seed);
+        cfg.scheme_tuning.k = 123;
+        assert_eq!(cfg.scheme_spec(10_000).k, 123);
+        // fp derives its own K from the bit budget
+        cfg.scheme_tuning.k = 0;
+        cfg.scheme = Scheme::TopKFp { bits: 8 };
+        assert_eq!(cfg.scheme_spec(10_000).k, cfg.budget(10_000).k_fp(8));
+        // min_fit / depth / seed overrides reach the resolved spec
+        cfg.scheme = Scheme::CountSketch;
+        cfg.scheme_tuning =
+            SchemeTuning { k: 0, min_fit: 1024, sketch_depth: 5, seed: 99 };
+        let spec = cfg.scheme_spec(10_000);
+        assert_eq!(spec.min_fit, 1024);
+        assert_eq!(spec.sketch_depth, 5);
+        assert_eq!(spec.seed, 99);
     }
 
     #[test]
@@ -287,6 +284,7 @@ mod tests {
         assert_eq!(s.sampled_clients, None);
         assert_eq!(s.straggler_timeout_ms, 0); // wait forever, like the old driver
         assert!(s.table_cache_capacity > 0);
+        assert!(s.prewarm); // startup cost, not a behavior change
     }
 
     #[test]

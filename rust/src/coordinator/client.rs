@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::compress::Compressor;
+use crate::compress::Encoder;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::fedserve::session::ClientSession;
@@ -51,17 +51,18 @@ impl ClientWorker {
         spec: ModelSpec,
         shard: Vec<(u32, u8)>,
         runtime: RuntimeHandle,
-        compressor: Box<dyn Compressor>,
+        encoder: Box<dyn Encoder>,
         rx: Receiver<Arc<Vec<u8>>>,
         tx: Sender<Vec<u8>>,
     ) -> ClientWorker {
         let memory = cfg.memory.then(|| Memory::new(spec.d(), cfg.memory_decay));
-        let session = ClientSession::new(id, compressor, memory);
+        let session = ClientSession::new(id, encoder, memory);
         ClientWorker { id, cfg, spec, shard, runtime, session, rx, tx, cursor: 0 }
     }
 
-    /// One round of local work; returns the uplink (or the error wrapped).
-    fn round(&mut self, dataset: &Dataset, round: usize, w0: &[f32]) -> Result<Uplink> {
+    /// One round of local work; returns the framed uplink (the bytes are
+    /// framed straight out of the session's reusable encode scratch).
+    fn round(&mut self, dataset: &Dataset, round: usize, w0: &[f32]) -> Result<Vec<u8>> {
         let mut w = w0.to_vec();
         let mut opt = Optimizer::new(self.cfg.optimizer()?, w.len());
         let mut loss_sum = 0.0f64;
@@ -89,15 +90,9 @@ impl ClientWorker {
                 }
             })
             .collect();
-        let out = self.session.encode_update(round, &update, &self.spec)?;
-        Ok(Uplink {
-            client_id: self.id,
-            round,
-            payload: out.payload,
-            report: out.report,
-            train_loss: loss_sum / self.cfg.local_steps.max(1) as f64,
-            error: None,
-        })
+        let report = self.session.encode_update(round, &update, &self.spec)?;
+        let train_loss = loss_sum / self.cfg.local_steps.max(1) as f64;
+        Ok(self.session.frame_update(round, &report, train_loss))
     }
 
     /// Thread body: serve framed rounds until shutdown.
@@ -119,11 +114,15 @@ impl ClientWorker {
                 wire::Message::Shutdown => break,
                 wire::Message::Update(_) => break, // protocol violation; stop
                 wire::Message::Round { round, weights } => {
-                    let up = match self.round(dataset, round, &weights) {
-                        Ok(u) => u,
-                        Err(e) => Uplink::failure(self.id, round, format!("{e:#}")),
+                    let uplink_frame = match self.round(dataset, round, &weights) {
+                        Ok(f) => f,
+                        Err(e) => wire::encode_update(&Uplink::failure(
+                            self.id,
+                            round,
+                            format!("{e:#}"),
+                        )),
                     };
-                    if self.tx.send(wire::encode_update(&up)).is_err() {
+                    if self.tx.send(uplink_frame).is_err() {
                         break; // server gone
                     }
                 }

@@ -76,12 +76,13 @@ pub fn run_experiment(
     let mut w = manifest.load_init(&dir, &cfg.arch)?;
 
     // one bounded LRU of standardized LBG designs, shared by the server
-    // decoder and every client compressor
+    // decoder and every client encoder
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
-    // the PS's decoder — same scheme construction as the clients'
-    let server_comp = cfg.build_compressor(d, codec.clone(), tables.clone());
-    let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, server_comp);
+    // the PS's decode half — same scheme registry as the clients' encoders
+    let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
+    let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, decoder);
+    server.prewarm_for(cfg, d, &tables);
     let n_participants = cfg.participants_per_round();
 
     let (last, bits_per_round) = std::thread::scope(|scope| -> Result<((f64, f64, f64), f64)> {
@@ -102,7 +103,7 @@ pub fn run_experiment(
                 spec.clone(),
                 shard,
                 runtime.clone(),
-                cfg.build_compressor(d, codec.clone(), tables.clone()),
+                cfg.build_encoder(d, codec.clone(), tables.clone())?,
                 drx,
                 up_tx.clone(),
             );
@@ -152,6 +153,7 @@ pub fn run_experiment(
 
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
+    server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
     Ok(RunOutput {
         series: series.to_string(),
         final_train_loss: last.0,

@@ -22,12 +22,13 @@ impl Memory {
         Memory { residual: vec![0.0; d], decay: decay as f32 }
     }
 
-    /// Augment this round's update with the carried residual.
+    /// Augment this round's update with the carried residual, writing into
+    /// a reused buffer (cleared first; capacity kept).
     ///
     /// A length mismatch is a hard error (not just a debug assert): zipping
     /// a truncated residual in a release build would silently corrupt the
     /// error-feedback state after a model-dimension change.
-    pub fn add_back(&self, update: &[f32]) -> Result<Vec<f32>> {
+    pub fn add_back_into(&self, update: &[f32], out: &mut Vec<f32>) -> Result<()> {
         if update.len() != self.residual.len() {
             bail!(
                 "error-feedback dimension mismatch: update has {} entries, \
@@ -36,11 +37,16 @@ impl Memory {
                 self.residual.len()
             );
         }
-        Ok(update
-            .iter()
-            .zip(&self.residual)
-            .map(|(u, r)| u + self.decay * r)
-            .collect())
+        out.clear();
+        out.extend(update.iter().zip(&self.residual).map(|(u, r)| u + self.decay * r));
+        Ok(())
+    }
+
+    /// Allocating variant of [`Memory::add_back_into`].
+    pub fn add_back(&self, update: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(update.len());
+        self.add_back_into(update, &mut out)?;
+        Ok(out)
     }
 
     /// Record what was actually transmitted: residual = augmented − sent.
@@ -73,7 +79,8 @@ mod tests {
             let sent: Vec<f32> =
                 aug.iter().enumerate().map(|(i, &x)| if i % 2 == 0 { x } else { 0.0 }).collect();
             mem.update(&aug, &sent);
-            let aug2 = mem.add_back(&vec![0.0; d]).unwrap();
+            let zeros = vec![0.0f32; d];
+            let aug2 = mem.add_back(&zeros).unwrap();
             for i in 0..d {
                 // residual + sent == augmented
                 assert!((aug2[i] + sent[i] - aug[i]).abs() < 1e-6);

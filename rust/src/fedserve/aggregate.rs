@@ -1,13 +1,98 @@
-//! Sharded aggregation of decoded client deltas — eq. (7) at scale.
+//! Sharded aggregation of client deltas — eq. (7) at scale.
 //!
-//! The d-dimensional decoded updates are split into contiguous shards and
-//! reduced on scoped worker threads, one per shard (spawned per reduce; a
-//! persistent pool is a ROADMAP follow-on). Parity guarantee:
-//! within every dimension the additions happen in the same client order as
-//! the serial path, and f32 addition per index is order-identical, so
-//! [`aggregate_sharded`] is **bit-exact** against [`aggregate_serial`] for
-//! every shard count (asserted by `tests/fedserve_parity.rs` across
-//! {1, 3, 8} shards).
+//! Two surfaces:
+//!
+//! * **Fused decode+reduce** ([`accumulate_serial`] / [`accumulate_sharded`])
+//!   — the production path. Each client's payload is decoded *sparsely*
+//!   through [`Decoder::for_each_survivor`] and its survivors fold straight
+//!   into the accumulator, so a round never materializes a dense per-client
+//!   ĝ: memory traffic is O(d + Σ payload bytes) instead of
+//!   O(n_clients × d), and per-round allocations stop scaling with client
+//!   count.
+//! * **Dense reference** ([`aggregate_serial`] / [`aggregate_sharded`]) —
+//!   the pre-split API's decode-then-reduce path, kept as the parity oracle
+//!   and for benches.
+//!
+//! Parity guarantee: in every surface the per-index additions happen in the
+//! same client order, skipped zero survivors are exact no-ops (an f32
+//! accumulator reachable from +0.0 is never −0.0, and x + ±0.0 == x
+//! otherwise), and the shard split never regroups across clients — so all
+//! four paths are **bit-exact** against each other at every shard count
+//! (asserted by `tests/fedserve_parity.rs` across {1, 3, 8} shards).
+//!
+//! Shards run on scoped worker threads, one per contiguous dimension range
+//! (spawned per reduce; a persistent pool is a ROADMAP follow-on). In the
+//! fused path every shard walks every payload and keeps the survivors in
+//! its range: for the positional schemes that walk is an allocation-free
+//! O(k) streaming parse, so decode work is O(shards × Σk) with shards
+//! small. Decoders whose walk is inherently dense (count-sketch) opt out
+//! via [`Decoder::sparse_walk_is_cheap`] and take the serial fold —
+//! exactly one decode per payload, same as the old dense path.
+
+use anyhow::Result;
+
+use crate::compress::Decoder;
+use crate::train::ModelSpec;
+
+/// Fused decode+reduce, serial: fold every payload's survivors into `acc`
+/// in client order (`acc.len() == spec.d()`), never building a dense ĝ.
+pub fn accumulate_serial(
+    decoder: &dyn Decoder,
+    payloads: &[&[u8]],
+    spec: &ModelSpec,
+    acc: &mut [f32],
+) -> Result<()> {
+    for p in payloads {
+        decoder.decode_accumulate(p, spec, 1.0, acc)?;
+    }
+    Ok(())
+}
+
+/// Fused decode+reduce over contiguous dimension shards, one scoped worker
+/// each. Bit-identical to [`accumulate_serial`] (each dimension is owned by
+/// exactly one shard, and every shard adds in client order). Decoders whose
+/// survivor walk is not a cheap streaming parse
+/// ([`Decoder::sparse_walk_is_cheap`] is false, e.g. count-sketch) fall
+/// back to the serial fold so each payload is decoded exactly once.
+pub fn accumulate_sharded(
+    decoder: &dyn Decoder,
+    payloads: &[&[u8]],
+    spec: &ModelSpec,
+    shards: usize,
+    acc: &mut [f32],
+) -> Result<()> {
+    let d = acc.len();
+    let shards = shards.max(1).min(d.max(1));
+    if shards <= 1 || payloads.is_empty() || d == 0 || !decoder.sparse_walk_is_cheap() {
+        return accumulate_serial(decoder, payloads, spec, acc);
+    }
+    let chunk = d.div_ceil(shards);
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = acc
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(si, slice)| {
+                s.spawn(move || -> Result<()> {
+                    let start = si * chunk;
+                    let end = start + slice.len();
+                    for p in payloads {
+                        decoder.for_each_survivor(p, spec, &mut |i, v| {
+                            if (start..end).contains(&i) {
+                                slice[i - start] += v;
+                            }
+                        })?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
 
 /// Serial eq.-(7) reference: sum the decoded deltas in the given order.
 pub fn aggregate_serial(decoded: &[Vec<f32>], d: usize) -> Vec<f32> {
@@ -32,7 +117,7 @@ pub fn aggregate_sharded(decoded: &[Vec<f32>], d: usize, shards: usize) -> Vec<f
         assert_eq!(dec.len(), d, "decoded delta has wrong dimension");
     }
     let mut agg = vec![0.0f32; d];
-    let chunk = (d + shards - 1) / shards;
+    let chunk = d.div_ceil(shards);
     std::thread::scope(|s| {
         for (si, slice) in agg.chunks_mut(chunk).enumerate() {
             let start = si * chunk;
@@ -94,6 +179,51 @@ mod tests {
     fn empty_inputs() {
         assert_eq!(aggregate_sharded(&[], 10, 4), vec![0.0f32; 10]);
         assert!(aggregate_sharded(&[Vec::new()], 0, 4).is_empty());
+    }
+
+    #[test]
+    fn fused_accumulate_matches_dense_reference_bitwise() {
+        use crate::compress::testutil::tiny_spec;
+        use crate::compress::{encode_once, NoCompression};
+        let spec = tiny_spec(900, 100);
+        let d = spec.d();
+        let root = Rng::new(77);
+        let payloads: Vec<Vec<u8>> = (0..5)
+            .map(|c| {
+                let mut r = root.stream(7, c as u64);
+                let g: Vec<f32> = (0..d).map(|_| (r.normal() * 0.1) as f32).collect();
+                encode_once(&NoCompression, &g, &spec).unwrap().0
+            })
+            .collect();
+        let slices: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        // dense reference: decode each then reduce
+        let decoded: Vec<Vec<f32>> = slices
+            .iter()
+            .map(|p| NoCompression.decode_dense(p, &spec).unwrap())
+            .collect();
+        let dense = aggregate_serial(&decoded, d);
+        for shards in [1usize, 3, 8] {
+            let mut acc = vec![0.0f32; d];
+            accumulate_sharded(&NoCompression, &slices, &spec, shards, &mut acc).unwrap();
+            for i in 0..d {
+                assert_eq!(dense[i].to_bits(), acc[i].to_bits(), "shards={shards} dim={i}");
+            }
+        }
+        let mut acc = vec![0.0f32; d];
+        accumulate_serial(&NoCompression, &slices, &spec, &mut acc).unwrap();
+        assert_eq!(acc, dense);
+    }
+
+    #[test]
+    fn fused_accumulate_propagates_decode_errors() {
+        use crate::compress::testutil::tiny_spec;
+        use crate::compress::NoCompression;
+        let spec = tiny_spec(10, 0);
+        let bad = vec![0u8; 7]; // not a multiple of 4
+        let slices: Vec<&[u8]> = vec![&bad];
+        let mut acc = vec![0.0f32; 10];
+        assert!(accumulate_serial(&NoCompression, &slices, &spec, &mut acc).is_err());
+        assert!(accumulate_sharded(&NoCompression, &slices, &spec, 4, &mut acc).is_err());
     }
 
     #[test]

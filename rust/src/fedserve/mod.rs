@@ -12,10 +12,11 @@
 //!   round bookkeeping, plus the deterministic k-of-n participant
 //!   [`session::Scheduler`] (partial participation);
 //! * [`server`] — the [`server::FedServer`] round loop: deadline-drop
-//!   stragglers, discard stale frames, decode honest payloads, apply the
-//!   averaged step;
-//! * [`aggregate`] — the sharded eq.-(7) reduce, bit-exact against the
-//!   serial path at any shard count;
+//!   stragglers, discard stale frames, stream honest payload bytes through
+//!   the fused sparse decode+reduce, apply the averaged step;
+//! * [`aggregate`] — the fused (decode folded into the reduce, no dense
+//!   per-client ĝ) and dense-reference eq.-(7) reducers, all bit-exact
+//!   against each other at any shard count;
 //! * [`table_cache`] — a bounded LRU of standardized LBG designs shared by
 //!   all sessions and the server decoder, with hit-rate metrics;
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
@@ -31,7 +32,7 @@ pub mod sim;
 pub mod table_cache;
 pub mod wire;
 
-pub use aggregate::{aggregate_serial, aggregate_sharded};
+pub use aggregate::{accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded};
 pub use server::{FedServer, RoundSummary};
 pub use session::{ClientSession, Scheduler, SessionStats};
 pub use sim::{simulate, SimReport};

@@ -2,9 +2,11 @@
 //!
 //! [`FedServer`] owns the server half of Algorithm 1: sample participants,
 //! collect framed uplinks off the transport (deadline-dropping stragglers
-//! and discarding stale-round frames), decode the honest payload bytes with
-//! its own compressor instance, reduce the decoded deltas on the sharded
-//! aggregator, and apply the averaged step to the global model. The
+//! and discarding stale-round frames), then run the **fused decode+reduce**:
+//! each payload's survivors stream through [`Decoder::for_each_survivor`]
+//! straight into the sharded eq.-(7) accumulator — the server never builds
+//! a dense per-client ĝ, so a round's memory traffic is O(d) regardless of
+//! client count and the accumulator scratch is reused across rounds. The
 //! experiment driver (`coordinator::driver`) and the `repro serve`
 //! simulation are both thin clients of this loop.
 
@@ -13,13 +15,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::compress::Compressor;
+use crate::compress::Decoder;
 use crate::config::ServerConfig;
 use crate::metrics::server::{RoundTiming, ServerStats};
+use crate::quantizer::PrewarmPlan;
 use crate::train::ModelSpec;
 
-use super::aggregate::aggregate_sharded;
+use super::aggregate::accumulate_sharded;
 use super::session::{Scheduler, SessionStats};
+use super::table_cache::LruTableCache;
 use super::wire;
 
 /// Outcome of one server round.
@@ -43,10 +47,12 @@ pub struct RoundSummary {
 /// The parameter server: scheduler + per-client ledgers + decoder + stats.
 pub struct FedServer {
     pub cfg: ServerConfig,
-    decoder: Box<dyn Compressor>,
+    decoder: Box<dyn Decoder>,
     scheduler: Scheduler,
     pub sessions: Vec<SessionStats>,
     pub stats: ServerStats,
+    /// reusable eq.-(7) accumulator (zeroed per round, never reallocated)
+    acc: Vec<f32>,
 }
 
 impl FedServer {
@@ -54,7 +60,7 @@ impl FedServer {
         cfg: ServerConfig,
         n_clients: usize,
         seed: u64,
-        decoder: Box<dyn Compressor>,
+        decoder: Box<dyn Decoder>,
     ) -> FedServer {
         FedServer {
             cfg,
@@ -62,6 +68,36 @@ impl FedServer {
             scheduler: Scheduler::new(seed),
             sessions: vec![SessionStats::default(); n_clients],
             stats: ServerStats::default(),
+            acc: Vec::new(),
+        }
+    }
+
+    /// ROADMAP: prewarm the shared quantizer-table cache from the paper's
+    /// shape grid so first-round uplinks never pay an LBG design on the
+    /// request path. Records the prewarm size in [`ServerStats`]; the hit
+    /// attribution lands there at end of run via `set_prewarm`.
+    pub fn prewarm_tables(&mut self, tables: &LruTableCache, plan: &PrewarmPlan) -> usize {
+        let inserted = tables.prewarm(plan);
+        self.stats.prewarmed_tables = inserted as u64;
+        inserted
+    }
+
+    /// The configured prewarm gate shared by the driver and the simulation:
+    /// prewarm `cfg`'s scheme grid when `cfg.server.prewarm` is set (no-op
+    /// for schemes without LBG tables). Returns how many tables were
+    /// designed.
+    pub fn prewarm_for(
+        &mut self,
+        cfg: &crate::config::ExperimentConfig,
+        d: usize,
+        tables: &LruTableCache,
+    ) -> usize {
+        if !cfg.server.prewarm {
+            return 0;
+        }
+        match cfg.scheme_spec(d).prewarm_plan() {
+            Some(plan) => self.prewarm_tables(tables, &plan),
+            None => 0,
         }
     }
 
@@ -156,34 +192,34 @@ impl FedServer {
             }
         }
 
+        // fused decode+reduce: stream every payload's survivors straight
+        // into the sharded accumulator — no dense per-client ĝ, ever
         let t1 = Instant::now();
-        let mut decoded: Vec<Vec<f32>> = Vec::with_capacity(participants.len());
+        let mut payloads: Vec<&[u8]> = Vec::with_capacity(participants.len());
         let mut train_loss = 0.0f64;
         let mut bits = 0.0f64;
         for up in slots.iter().flatten() {
-            decoded.push(self.decoder.decompress(&up.payload, spec)?);
+            payloads.push(&up.payload);
             train_loss += up.train_loss;
             bits += up.report.ideal_total_bits();
         }
-        let decode_ns = t1.elapsed().as_nanos() as u64;
-
-        let t2 = Instant::now();
-        let received = decoded.len();
+        let received = payloads.len();
         if received > 0 {
-            // eq. (7): average the reconstructed updates, subtract
-            let agg = aggregate_sharded(&decoded, w.len(), self.cfg.shards);
+            self.acc.clear();
+            self.acc.resize(w.len(), 0.0);
+            accumulate_sharded(&*self.decoder, &payloads, spec, self.cfg.shards, &mut self.acc)?;
+            // eq. (7): average the accumulated updates, subtract
             let scale = 1.0 / received as f32;
-            for (wi, a) in w.iter_mut().zip(&agg) {
+            for (wi, a) in w.iter_mut().zip(&self.acc) {
                 *wi -= scale * a;
             }
         }
-        let aggregate_ns = t2.elapsed().as_nanos() as u64;
+        let reduce_ns = t1.elapsed().as_nanos() as u64;
 
         self.stats.push(RoundTiming {
             round,
             collect_ns,
-            decode_ns,
-            aggregate_ns,
+            reduce_ns,
             received,
             dropped,
             stale,
@@ -205,18 +241,17 @@ impl FedServer {
 mod tests {
     use super::*;
     use crate::compress::testutil::tiny_spec;
-    use crate::compress::{Compressor, NoCompression};
+    use crate::compress::{encode_once, NoCompression};
     use crate::coordinator::messages::Uplink;
     use std::sync::mpsc::channel;
 
     fn uplink_for(id: usize, round: usize, g: &[f32], spec: &ModelSpec) -> Vec<u8> {
-        let mut c = NoCompression;
-        let out = c.compress(g, spec).unwrap();
+        let (payload, _, report) = encode_once(&NoCompression, g, spec).unwrap();
         wire::encode_update(&Uplink {
             client_id: id,
             round,
-            payload: out.payload,
-            report: out.report,
+            payload,
+            report,
             train_loss: 1.5,
             error: None,
         })

@@ -14,18 +14,25 @@
 
 use anyhow::Result;
 
-use crate::compress::{Compressed, Compressor};
+use crate::compress::{EncodeCtx, Encoder, RateReport};
 use crate::coordinator::memory::Memory;
 use crate::train::ModelSpec;
 use crate::util::rng::Rng;
 
 use super::wire;
 
-/// Client-side session: error feedback + compression + bookkeeping.
+/// Client-side session: error feedback + encoding + bookkeeping. Owns the
+/// [`EncodeCtx`] scratch, so across rounds the whole uplink path —
+/// error-feedback augment, sparsify, quantize, serialize — reuses the same
+/// buffers and allocates (almost) nothing.
 pub struct ClientSession {
     pub id: usize,
     pub memory: Option<Memory>,
-    pub compressor: Box<dyn Compressor>,
+    pub encoder: Box<dyn Encoder>,
+    /// reusable encode scratch (payload + reconstruction land here)
+    ctx: EncodeCtx,
+    /// reusable error-feedback augment buffer
+    augmented: Vec<f32>,
     /// rounds this session produced an uplink for
     pub rounds_participated: usize,
     pub last_round: Option<usize>,
@@ -34,37 +41,58 @@ pub struct ClientSession {
 }
 
 impl ClientSession {
-    pub fn new(id: usize, compressor: Box<dyn Compressor>, memory: Option<Memory>) -> Self {
+    pub fn new(id: usize, encoder: Box<dyn Encoder>, memory: Option<Memory>) -> Self {
         ClientSession {
             id,
             memory,
-            compressor,
+            encoder,
+            ctx: EncodeCtx::new(),
+            augmented: Vec::new(),
             rounds_participated: 0,
             last_round: None,
             bytes_up: 0,
         }
     }
 
-    /// One uplink: error-feedback augment, compress, record the residual,
-    /// update bookkeeping. Returns the encoded payload + reconstruction.
+    /// One uplink: error-feedback augment, encode into the session scratch,
+    /// record the residual, update bookkeeping. The payload bytes are at
+    /// [`ClientSession::payload`] (valid until the next encode), the dense
+    /// reconstruction at [`ClientSession::reconstructed`].
     pub fn encode_update(
         &mut self,
         round: usize,
         update: &[f32],
         spec: &ModelSpec,
-    ) -> Result<Compressed> {
-        let augmented = match &self.memory {
-            Some(mem) => mem.add_back(update)?,
-            None => update.to_vec(),
-        };
-        let out = self.compressor.compress(&augmented, spec)?;
+    ) -> Result<RateReport> {
+        self.augmented.clear();
+        match &self.memory {
+            Some(mem) => mem.add_back_into(update, &mut self.augmented)?,
+            None => self.augmented.extend_from_slice(update),
+        }
+        let report = self.encoder.encode(&self.augmented, spec, &mut self.ctx)?;
         if let Some(mem) = &mut self.memory {
-            mem.update(&augmented, &out.reconstructed);
+            mem.update(&self.augmented, self.ctx.reconstructed());
         }
         self.rounds_participated += 1;
         self.last_round = Some(round);
-        self.bytes_up += (out.payload.len() + wire::UPDATE_OVERHEAD) as u64;
-        Ok(out)
+        self.bytes_up += (self.ctx.payload().len() + wire::UPDATE_OVERHEAD) as u64;
+        Ok(report)
+    }
+
+    /// The encoded payload of the last [`ClientSession::encode_update`].
+    pub fn payload(&self) -> &[u8] {
+        self.ctx.payload()
+    }
+
+    /// The dense reconstruction ĝ of the last encode — what the server-side
+    /// decode of [`ClientSession::payload`] reproduces bit-exactly.
+    pub fn reconstructed(&self) -> &[f32] {
+        self.ctx.reconstructed()
+    }
+
+    /// Frame the last encode as a wire uplink (no intermediate copies).
+    pub fn frame_update(&self, round: usize, report: &RateReport, train_loss: f64) -> Vec<u8> {
+        wire::encode_update_parts(self.id, round, self.payload(), report, train_loss)
     }
 
     /// L2 norm of the carried error-feedback residual (0 without memory).
@@ -118,10 +146,13 @@ mod tests {
         let spec = tiny_spec(30, 2);
         let mut s = ClientSession::new(3, Box::new(NoCompression), None);
         let update = vec![0.5f32; 32];
-        let out = s.encode_update(0, &update, &spec).unwrap();
+        let report = s.encode_update(0, &update, &spec).unwrap();
         assert_eq!(s.rounds_participated, 1);
         assert_eq!(s.last_round, Some(0));
-        assert_eq!(s.bytes_up, (out.payload.len() + wire::UPDATE_OVERHEAD) as u64);
+        assert_eq!(s.bytes_up, (s.payload().len() + wire::UPDATE_OVERHEAD) as u64);
+        // the framed uplink is identical to the struct-based encoding
+        let frame = s.frame_update(0, &report, 0.25);
+        assert_eq!(frame.len(), wire::UPDATE_OVERHEAD + s.payload().len());
         s.encode_update(1, &update, &spec).unwrap();
         assert_eq!(s.rounds_participated, 2);
         assert_eq!(s.last_round, Some(1));
@@ -141,7 +172,7 @@ mod tests {
     fn session_dimension_mismatch_fails_hard() {
         let spec = tiny_spec(30, 2);
         let mut s = ClientSession::new(0, Box::new(NoCompression), Some(Memory::new(10, 1.0)));
-        let err = s.encode_update(0, &vec![0.0f32; 32], &spec).unwrap_err();
+        let err = s.encode_update(0, &[0.0f32; 32], &spec).unwrap_err();
         assert!(format!("{err}").contains("dimension mismatch"), "{err}");
         // failed rounds are not counted as participation
         assert_eq!(s.rounds_participated, 0);

@@ -96,8 +96,9 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
-    let decoder = cfg.build_compressor(d, codec.clone(), tables.clone());
+    let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
     let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, decoder);
+    server.prewarm_for(cfg, d, &tables);
     let mut w = vec![0.0f32; d];
     let k = cfg.participants_per_round();
 
@@ -110,7 +111,7 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
             let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
             let mut session = ClientSession::new(
                 id,
-                cfg.build_compressor(d, codec.clone(), tables.clone()),
+                cfg.build_encoder(d, codec.clone(), tables.clone())?,
                 memory,
             );
             let up_tx = up_tx.clone();
@@ -123,18 +124,16 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
                         _ => break, // shutdown, protocol error: stop serving
                     };
                     let update = sim_update(seed, id, round, d);
-                    let up = match session.encode_update(round, &update, spec) {
-                        Ok(out) => Uplink {
-                            client_id: id,
+                    // frame straight out of the session's reusable scratch
+                    let uplink_frame = match session.encode_update(round, &update, spec) {
+                        Ok(report) => session.frame_update(round, &report, 0.0),
+                        Err(e) => wire::encode_update(&Uplink::failure(
+                            id,
                             round,
-                            payload: out.payload,
-                            report: out.report,
-                            train_loss: 0.0,
-                            error: None,
-                        },
-                        Err(e) => Uplink::failure(id, round, format!("{e:#}")),
+                            format!("{e:#}"),
+                        )),
                     };
-                    if up_tx.send(wire::encode_update(&up)).is_err() {
+                    if up_tx.send(uplink_frame).is_err() {
                         break;
                     }
                 }
@@ -169,6 +168,7 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
 
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
+    server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
     Ok(SimReport {
         rounds: cfg.rounds,
         clients: cfg.n_clients,
@@ -227,6 +227,30 @@ mod tests {
         // the acceptance-criteria metric: repeated rounds share LBG designs
         assert!(rep.stats.cache_hits > 0, "no table-cache hits: {:?}", rep.stats);
         assert!(rep.stats.cache_hit_rate() > 0.0);
+        // the paper grid was prewarmed at server start (ROADMAP item)
+        assert!(rep.stats.prewarmed_tables > 0, "no prewarm: {:?}", rep.stats);
+    }
+
+    #[test]
+    fn prewarm_can_be_disabled_and_changes_no_numbers() {
+        let mut cfg = ExperimentConfig::new(
+            "sim",
+            Scheme::M22 { family: Family::Weibull, m: 4.0 },
+            2,
+            2,
+        );
+        cfg.n_clients = 3;
+        let warm = simulate(&cfg, 1024).unwrap();
+        cfg.server.prewarm = false;
+        let cold = simulate(&cfg, 1024).unwrap();
+        assert_eq!(cold.stats.prewarmed_tables, 0);
+        assert!(warm.stats.prewarmed_tables > 0);
+        // prewarm is a cache warmup, never a numerics change
+        assert_eq!(warm.w, cold.w);
+        // the warm run resolves some lookups against prewarmed tables when
+        // the fitted shapes land inside the paper grid (they may not for
+        // every synthetic draw, so only the counters' consistency is hard)
+        assert!(warm.stats.prewarm_hits <= warm.stats.cache_hits);
     }
 
     #[test]

@@ -8,12 +8,17 @@
 //! least-recently-used eviction and exposes hit/miss counters so the
 //! server's metrics can report the reuse rate (the whole point of the
 //! table snap: repeated rounds should *hit*, not re-run LBG).
+//!
+//! [`LruTableCache::prewarm`] designs a [`PrewarmPlan`] grid up front
+//! (ROADMAP item): entries inserted that way are tagged, and hits on them
+//! are counted separately so `ServerStats` can report how much of the
+//! request-path traffic the prewarm absorbed.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::quantizer::tables::design_for;
-use crate::quantizer::{Family, Quantizer, TableKey, TableSource, SHAPE_STEP};
+use crate::quantizer::{Family, PrewarmPlan, Quantizer, TableKey, TableSource, SHAPE_STEP};
 
 /// Cache counters snapshot.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -22,6 +27,10 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub len: usize,
+    /// tables inserted by [`LruTableCache::prewarm`]
+    pub prewarmed: u64,
+    /// lookups served by a prewarmed table
+    pub prewarm_hits: u64,
 }
 
 impl CacheStats {
@@ -34,11 +43,23 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Fraction of all lookups served by a prewarmed table.
+    pub fn prewarm_hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prewarm_hits as f64 / total as f64
+        }
+    }
 }
 
 struct Entry {
     q: Quantizer,
     last_used: u64,
+    /// inserted by `prewarm` (hit attribution)
+    prewarmed: bool,
 }
 
 struct Inner {
@@ -48,6 +69,22 @@ struct Inner {
     hits: u64,
     misses: u64,
     evictions: u64,
+    prewarmed: u64,
+    prewarm_hits: u64,
+}
+
+impl Inner {
+    /// Evict the least-recently-used entry if inserting `key` would exceed
+    /// `capacity`.
+    fn make_room(&mut self, key: &TableKey, capacity: usize) {
+        if !self.map.contains_key(key) && self.map.len() >= capacity {
+            let victim = self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            if let Some(v) = victim {
+                self.map.remove(&v);
+                self.evictions += 1;
+            }
+        }
+    }
 }
 
 /// Thread-shared bounded LRU of standardized quantizer designs.
@@ -65,6 +102,8 @@ impl LruTableCache {
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                prewarmed: 0,
+                prewarm_hits: 0,
             }),
             capacity: capacity.max(1),
         }
@@ -81,7 +120,34 @@ impl LruTableCache {
             misses: inner.misses,
             evictions: inner.evictions,
             len: inner.map.len(),
+            prewarmed: inner.prewarmed,
+            prewarm_hits: inner.prewarm_hits,
         }
+    }
+
+    /// Design and insert every key of `plan` that is not already cached
+    /// (LBG runs outside the lock, like the miss path). Prewarm neither
+    /// counts as lookups nor hits; returns how many tables were inserted.
+    pub fn prewarm(&self, plan: &PrewarmPlan) -> usize {
+        let mut inserted = 0usize;
+        for key in plan.keys() {
+            if self.inner.lock().unwrap().map.contains_key(&key) {
+                continue;
+            }
+            let q = design_for(key);
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if inner.map.contains_key(&key) {
+                continue; // a racing request-path miss beat us to it
+            }
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.make_room(&key, self.capacity);
+            inner.map.insert(key, Entry { q, last_used: tick, prewarmed: true });
+            inner.prewarmed += 1;
+            inserted += 1;
+        }
+        inserted
     }
 }
 
@@ -96,8 +162,13 @@ impl TableSource for LruTableCache {
             match inner.map.get_mut(&key) {
                 Some(e) => {
                     e.last_used = tick;
+                    let prewarmed = e.prewarmed;
+                    let q = e.q.clone();
                     inner.hits += 1;
-                    return e.q.clone();
+                    if prewarmed {
+                        inner.prewarm_hits += 1;
+                    }
+                    return q;
                 }
                 None => inner.misses += 1,
             }
@@ -110,14 +181,8 @@ impl TableSource for LruTableCache {
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
-        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
-            let victim = inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
-            if let Some(v) = victim {
-                inner.map.remove(&v);
-                inner.evictions += 1;
-            }
-        }
-        inner.map.insert(key, Entry { q: q.clone(), last_used: tick });
+        inner.make_room(&key, self.capacity);
+        inner.map.insert(key, Entry { q: q.clone(), last_used: tick, prewarmed: false });
         q
     }
 }
@@ -136,6 +201,9 @@ mod tests {
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        // nothing was prewarmed
+        assert_eq!((s.prewarmed, s.prewarm_hits), (0, 0));
+        assert_eq!(s.prewarm_hit_rate(), 0.0);
     }
 
     #[test]
@@ -191,5 +259,52 @@ mod tests {
         c.get(Family::GenNorm, 1.0, 0.0, 4);
         c.get(Family::GenNorm, 1.5, 0.0, 4);
         assert_eq!(c.stats().len, 1);
+    }
+
+    #[test]
+    fn prewarm_inserts_grid_and_attributes_hits() {
+        let c = LruTableCache::new(64);
+        let plan = PrewarmPlan::paper_grid(Family::GenNorm, 2.0, 4);
+        let inserted = c.prewarm(&plan);
+        assert_eq!(inserted, plan.len());
+        let s = c.stats();
+        assert_eq!(s.prewarmed, plan.len() as u64);
+        assert_eq!(s.len, plan.len());
+        // prewarm itself is not a lookup
+        assert_eq!((s.hits, s.misses), (0, 0));
+        // a request inside the grid hits a prewarmed table...
+        c.get(Family::GenNorm, 0.8, 2.0, 4);
+        // ...one outside misses, and a repeat of it hits a non-prewarmed one
+        c.get(Family::GenNorm, 3.0, 2.0, 4);
+        c.get(Family::GenNorm, 3.0, 2.0, 4);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert_eq!(s.prewarm_hits, 1);
+        assert!((s.prewarm_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // prewarming again is a no-op
+        assert_eq!(c.prewarm(&plan), 0);
+    }
+
+    #[test]
+    fn prewarm_matches_request_path_designs() {
+        let warm = LruTableCache::new(64);
+        warm.prewarm(&PrewarmPlan::paper_grid(Family::Weibull, 0.0, 8));
+        let cold = LruTableCache::new(64);
+        let a = warm.get(Family::Weibull, 0.6, 0.0, 8);
+        let b = cold.get(Family::Weibull, 0.6, 0.0, 8);
+        assert_eq!(a, b);
+        // the warm cache served it without a miss
+        assert_eq!(warm.stats().misses, 0);
+        assert_eq!(cold.stats().misses, 1);
+    }
+
+    #[test]
+    fn prewarm_respects_capacity() {
+        let c = LruTableCache::new(4);
+        let plan = PrewarmPlan::paper_grid(Family::GenNorm, 0.0, 2); // 13 keys
+        c.prewarm(&plan);
+        let s = c.stats();
+        assert_eq!(s.len, 4);
+        assert_eq!(s.evictions, 9);
     }
 }

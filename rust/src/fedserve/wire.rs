@@ -115,17 +115,48 @@ pub fn encode_shutdown() -> Vec<u8> {
     frame(KIND_SHUTDOWN, &[])
 }
 
+/// Encode a client → PS update from its parts. `payload` is borrowed —
+/// sessions frame straight out of their reusable encode scratch without
+/// building an intermediate owned [`Uplink`].
+pub fn encode_update_parts(
+    client_id: usize,
+    round: usize,
+    payload: &[u8],
+    report: &RateReport,
+    train_loss: f64,
+) -> Vec<u8> {
+    encode_update_raw(client_id, round, train_loss, None, report, payload)
+}
+
 /// Encode a client → PS update.
 pub fn encode_update(up: &Uplink) -> Vec<u8> {
-    let err_len = up.error.as_ref().map_or(0, |e| 4 + e.len());
-    let mut p = Vec::with_capacity(UPDATE_OVERHEAD - FRAME_OVERHEAD + err_len + up.payload.len());
-    p.extend_from_slice(&(up.client_id as u32).to_le_bytes());
+    encode_update_raw(
+        up.client_id,
+        up.round,
+        up.train_loss,
+        up.error.as_deref(),
+        &up.report,
+        &up.payload,
+    )
+}
+
+fn encode_update_raw(
+    client_id: usize,
+    round: usize,
+    train_loss: f64,
+    error: Option<&str>,
+    report: &RateReport,
+    payload: &[u8],
+) -> Vec<u8> {
+    let err_len = error.map_or(0, |e| 4 + e.len());
+    let mut p = Vec::with_capacity(UPDATE_OVERHEAD - FRAME_OVERHEAD + err_len + payload.len());
+    p.extend_from_slice(&(client_id as u32).to_le_bytes());
     // the unknown-round sentinel is pinned to u64::MAX on the wire so it
     // survives endpoints with different pointer widths
-    let round_wire = if up.round == ROUND_UNKNOWN { u64::MAX } else { up.round as u64 };
+    let round_wire = if round == ROUND_UNKNOWN { u64::MAX } else { round as u64 };
     p.extend_from_slice(&round_wire.to_le_bytes());
-    p.extend_from_slice(&up.train_loss.to_le_bytes());
-    match &up.error {
+    p.extend_from_slice(&train_loss.to_le_bytes());
+    match error {
         None => p.push(0),
         Some(e) => {
             p.push(1);
@@ -133,16 +164,15 @@ pub fn encode_update(up: &Uplink) -> Vec<u8> {
             p.extend_from_slice(e.as_bytes());
         }
     }
-    let r = &up.report;
-    p.extend_from_slice(&(r.d as u64).to_le_bytes());
-    p.extend_from_slice(&(r.k as u64).to_le_bytes());
-    p.extend_from_slice(&r.position_bits_ideal.to_le_bytes());
-    p.extend_from_slice(&r.position_bits_actual.to_le_bytes());
-    p.extend_from_slice(&r.value_bits.to_le_bytes());
-    p.extend_from_slice(&r.side_bits.to_le_bytes());
-    p.extend_from_slice(&(r.payload_bytes as u64).to_le_bytes());
-    p.extend_from_slice(&(up.payload.len() as u32).to_le_bytes());
-    p.extend_from_slice(&up.payload);
+    p.extend_from_slice(&(report.d as u64).to_le_bytes());
+    p.extend_from_slice(&(report.k as u64).to_le_bytes());
+    p.extend_from_slice(&report.position_bits_ideal.to_le_bytes());
+    p.extend_from_slice(&report.position_bits_actual.to_le_bytes());
+    p.extend_from_slice(&report.value_bits.to_le_bytes());
+    p.extend_from_slice(&report.side_bits.to_le_bytes());
+    p.extend_from_slice(&(report.payload_bytes as u64).to_le_bytes());
+    p.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    p.extend_from_slice(payload);
     frame(KIND_UPDATE, &p)
 }
 
@@ -349,6 +379,15 @@ mod tests {
             }
             other => panic!("wrong message: {other:?}"),
         }
+    }
+
+    #[test]
+    fn update_parts_frame_is_identical_to_struct_frame() {
+        let up = sample_uplink(None);
+        let from_struct = encode_update(&up);
+        let from_parts =
+            encode_update_parts(up.client_id, up.round, &up.payload, &up.report, up.train_loss);
+        assert_eq!(from_struct, from_parts);
     }
 
     #[test]

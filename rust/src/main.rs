@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use m22::config::{ExperimentConfig, Scheme};
+use m22::config::{ExperimentConfig, Scheme, SchemeSpec, SchemeTuning};
 use m22::coordinator::run_experiment;
 use m22::data::Dataset;
 use m22::figures::{self, FigScale};
@@ -57,6 +57,33 @@ fn write_out(args: &Args, text: &str) -> Result<()> {
 fn runtime() -> Result<m22::runtime::RuntimeHandle> {
     m22::runtime::spawn(artifacts_dir())
         .context("starting PJRT runtime (run `make artifacts` first)")
+}
+
+/// Resolve `--scheme` into a [`SchemeSpec`]: a plain name keeps the legacy
+/// `--m` flag behavior, a `name:key=val,...` string carries everything
+/// inline (one-line scenario sweeps via the compress registry).
+fn scheme_from_args(args: &Args) -> Result<SchemeSpec> {
+    let s = args.str_or("scheme", "m22-gennorm");
+    if s.contains(':') {
+        SchemeSpec::parse(&s)
+    } else {
+        Ok(SchemeSpec::new(Scheme::parse(&s, args.f64_or("m", 2.0)?)?, 0, 0))
+    }
+}
+
+/// Apply a parsed scheme spec onto an experiment config (every explicit
+/// spec field wins over the budget-derived defaults).
+fn apply_scheme(cfg: &mut ExperimentConfig, spec: &SchemeSpec) {
+    cfg.scheme = spec.scheme;
+    if spec.rq != 0 {
+        cfg.rq = spec.rq;
+    }
+    cfg.scheme_tuning = SchemeTuning {
+        k: spec.k,
+        min_fit: spec.min_fit,
+        sketch_depth: spec.sketch_depth,
+        seed: spec.seed,
+    };
 }
 
 fn main() -> Result<()> {
@@ -103,11 +130,11 @@ fn main() -> Result<()> {
         }
         "train" => {
             let arch = args.str_or("arch", "cnn_s");
-            let scheme =
-                Scheme::parse(&args.str_or("scheme", "m22-gennorm"), args.f64_or("m", 2.0)?)?;
+            let sspec = scheme_from_args(&args)?;
             let rq = args.usize_or("rate", 2)? as u32;
             let scale = scale_from(&args)?;
-            let mut cfg = ExperimentConfig::new(&arch, scheme, rq, scale.rounds);
+            let mut cfg = ExperimentConfig::new(&arch, sspec.scheme, rq, scale.rounds);
+            apply_scheme(&mut cfg, &sspec);
             cfg.local_steps = scale.local_steps;
             cfg.eval_batches = scale.eval_batches;
             cfg.dataset.train_per_class = scale.train_per_class;
@@ -136,10 +163,10 @@ fn main() -> Result<()> {
             anyhow::ensure!(clients > 0, "--clients must be at least 1");
             anyhow::ensure!(rounds > 0, "--rounds must be at least 1");
             anyhow::ensure!(d > 0, "--dim must be at least 1");
-            let scheme =
-                Scheme::parse(&args.str_or("scheme", "m22-gennorm"), args.f64_or("m", 2.0)?)?;
+            let sspec = scheme_from_args(&args)?;
             let rq = args.usize_or("rate", 2)? as u32;
-            let mut cfg = ExperimentConfig::new("sim", scheme, rq, rounds);
+            let mut cfg = ExperimentConfig::new("sim", sspec.scheme, rq, rounds);
+            apply_scheme(&mut cfg, &sspec);
             cfg.n_clients = clients;
             cfg.keep_frac = args.f64_or("keep", 0.6)?;
             cfg.seed = args.usize_or("seed", 33)? as u64;
@@ -147,6 +174,7 @@ fn main() -> Result<()> {
             cfg.server.shards = args.usize_or("shards", 4)?;
             cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 30_000)? as u64;
             cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
+            cfg.server.prewarm = !args.bool("no-prewarm");
             let sample = args.usize_or("sample", 0)?;
             if sample > 0 {
                 cfg.server.sampled_clients = Some(sample);
@@ -190,7 +218,9 @@ fn main() -> Result<()> {
                 "repro — M22 reproduction launcher\n\
                  usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|serve|quantizer-table|smoke> [flags]\n\
                  flags: --out FILE  --full  --rounds N  --seeds N  --rate R  --arch A --scheme S --m M\n\
-                 serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory\n\
+                 scheme strings: a name (m22-gennorm, tinyscript, fp8, sketch, none) or\n\
+                 name:key=val,... (keys m, rq, k, min_fit, depth, seed), e.g. m22-gennorm:m=2,rq=3\n\
+                 serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory --no-prewarm\n\
                  see DESIGN.md for the per-experiment index"
             );
             return Ok(());

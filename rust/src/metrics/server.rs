@@ -1,6 +1,6 @@
 //! Server-side run metrics for the fedserve parameter server: per-round
 //! phase timings, straggler accounting, honest framed-byte totals, and the
-//! quantizer-table cache hit rate.
+//! quantizer-table cache hit/prewarm rates.
 
 /// Timings + counters of one server round.
 #[derive(Debug, Clone, Copy, Default)]
@@ -8,10 +8,9 @@ pub struct RoundTiming {
     pub round: usize,
     /// waiting on + validating framed uplinks
     pub collect_ns: u64,
-    /// byte-payload decode (the PS-side decompressor)
-    pub decode_ns: u64,
-    /// sharded eq.-(7) reduce + model step
-    pub aggregate_ns: u64,
+    /// the fused decode+reduce: sparse payload decode folded straight into
+    /// the shard accumulators, plus the model step
+    pub reduce_ns: u64,
     pub received: usize,
     pub dropped: usize,
     pub stale: usize,
@@ -25,6 +24,10 @@ pub struct ServerStats {
     pub rounds: Vec<RoundTiming>,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// quantizer tables designed at startup (ROADMAP: prewarm)
+    pub prewarmed_tables: u64,
+    /// lookups served by a prewarmed table
+    pub prewarm_hits: u64,
 }
 
 impl ServerStats {
@@ -38,6 +41,12 @@ impl ServerStats {
         self.cache_misses = misses;
     }
 
+    /// Record the prewarm counters (called once, at end of run).
+    pub fn set_prewarm(&mut self, tables: u64, hits: u64) {
+        self.prewarmed_tables = tables;
+        self.prewarm_hits = hits;
+    }
+
     /// Quantizer-table cache hit rate over the whole run (0 if untouched).
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
@@ -45,6 +54,16 @@ impl ServerStats {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of all table lookups absorbed by the startup prewarm.
+    pub fn prewarm_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prewarm_hits as f64 / total as f64
         }
     }
 
@@ -63,15 +82,14 @@ impl ServerStats {
     /// Per-round CSV (milliseconds for the phase timings).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,collect_ms,decode_ms,aggregate_ms,received,dropped,stale,framed_bytes\n",
+            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes\n",
         );
         for t in &self.rounds {
             s.push_str(&format!(
-                "{},{:.3},{:.3},{:.3},{},{},{},{}\n",
+                "{},{:.3},{:.3},{},{},{},{}\n",
                 t.round,
                 t.collect_ns as f64 / 1e6,
-                t.decode_ns as f64 / 1e6,
-                t.aggregate_ns as f64 / 1e6,
+                t.reduce_ns as f64 / 1e6,
                 t.received,
                 t.dropped,
                 t.stale,
@@ -87,21 +105,28 @@ impl ServerStats {
         let mean = |f: fn(&RoundTiming) -> u64| {
             self.rounds.iter().map(f).sum::<u64>() as f64 / n / 1e6
         };
-        format!(
-            "server: {} rounds | mean per round: collect {:.3} ms, decode {:.3} ms, \
-             aggregate {:.3} ms | uplinks: {} received, {} dropped | \
+        let mut s = format!(
+            "server: {} rounds | mean per round: collect {:.3} ms, \
+             decode+reduce {:.3} ms | uplinks: {} received, {} dropped | \
              {} framed bytes | table cache: {:.1}% hits ({} / {})",
             self.rounds.len(),
             mean(|t| t.collect_ns),
-            mean(|t| t.decode_ns),
-            mean(|t| t.aggregate_ns),
+            mean(|t| t.reduce_ns),
             self.total_received(),
             self.total_dropped(),
             self.total_framed_bytes(),
             100.0 * self.cache_hit_rate(),
             self.cache_hits,
             self.cache_hits + self.cache_misses
-        )
+        );
+        if self.prewarmed_tables > 0 {
+            s.push_str(&format!(
+                " | prewarm: {} tables, {:.1}% of lookups",
+                self.prewarmed_tables,
+                100.0 * self.prewarm_hit_rate()
+            ));
+        }
+        s
     }
 }
 
@@ -113,8 +138,7 @@ mod tests {
         RoundTiming {
             round,
             collect_ns: 2_000_000,
-            decode_ns: 1_000_000,
-            aggregate_ns: 500_000,
+            reduce_ns: 1_500_000,
             received,
             dropped,
             stale: 0,
@@ -135,11 +159,25 @@ mod tests {
     }
 
     #[test]
+    fn prewarm_rates() {
+        let mut s = ServerStats::default();
+        s.set_cache(30, 10);
+        s.set_prewarm(13, 20);
+        assert_eq!(s.prewarmed_tables, 13);
+        assert!((s.prewarm_hit_rate() - 0.5).abs() < 1e-12);
+        let sum = s.summary();
+        assert!(sum.contains("prewarm: 13 tables"), "{sum}");
+        assert!(sum.contains("50.0% of lookups"), "{sum}");
+    }
+
+    #[test]
     fn empty_stats_are_safe() {
         let s = ServerStats::default();
         assert_eq!(s.cache_hit_rate(), 0.0);
+        assert_eq!(s.prewarm_hit_rate(), 0.0);
         assert_eq!(s.total_received(), 0);
         assert!(s.summary().contains("0 rounds"));
+        assert!(!s.summary().contains("prewarm"));
     }
 
     #[test]
@@ -149,8 +187,8 @@ mod tests {
         let csv = s.to_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
-        assert!(lines[0].starts_with("round,collect_ms"));
-        assert!(lines[1].starts_with("0,2.000,1.000,0.500,2,0,0,1000"));
+        assert!(lines[0].starts_with("round,collect_ms,reduce_ms"));
+        assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000"));
     }
 
     #[test]

@@ -6,4 +6,6 @@ pub mod lbg;
 pub mod tables;
 
 pub use lbg::{design, expected_distortion, Quantizer};
-pub use tables::{design_for, Family, QuantizerTables, TableKey, TableSource, SHAPE_STEP};
+pub use tables::{
+    design_for, Family, PrewarmPlan, QuantizerTables, TableKey, TableSource, SHAPE_STEP,
+};

@@ -69,6 +69,48 @@ impl TableKey {
     }
 }
 
+/// A prewarm grid: the (family, shape, M, levels) tables a long-lived
+/// server expects to serve. Designed at startup so the first rounds never
+/// pay an LBG design on the request path (ROADMAP: table prewarm).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrewarmPlan {
+    pub family: Family,
+    pub shapes: Vec<f64>,
+    pub ms: Vec<f64>,
+    pub levels: Vec<usize>,
+}
+
+impl PrewarmPlan {
+    /// The paper's Sec. V-B operating grid for one (M, rate) point: fitted
+    /// shapes land in ~[0.4, 1.6] (Fig. 1 histograms), sampled at every
+    /// other [`SHAPE_STEP`] so startup stays cheap (13 designs).
+    pub fn paper_grid(family: Family, m: f64, levels: usize) -> PrewarmPlan {
+        let shapes = (4..=16).map(|i| i as f64 * 2.0 * SHAPE_STEP).collect();
+        PrewarmPlan { family, shapes, ms: vec![m], levels: vec![levels] }
+    }
+
+    /// Every snapped table key of the grid.
+    pub fn keys(&self) -> Vec<TableKey> {
+        let mut out = Vec::with_capacity(self.len());
+        for &s in &self.shapes {
+            for &m in &self.ms {
+                for &l in &self.levels {
+                    out.push(TableKey::new(self.family, s.max(SHAPE_STEP), m, l));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shapes.len() * self.ms.len() * self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// A provider of standardized quantizer designs. Implementations differ in
 /// caching policy only — the design itself is a pure function of the snapped
 /// [`TableKey`] (see [`design_for`]), so every provider returns identical
@@ -203,5 +245,21 @@ mod tests {
         let k = TableKey::new(Family::GenNorm, 1.25, 3.0, 8);
         assert!((k.shape() - 1.25).abs() < 1e-12);
         assert!((k.m() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_grid_covers_the_fitted_shape_band() {
+        let plan = PrewarmPlan::paper_grid(Family::GenNorm, 2.0, 4);
+        assert_eq!(plan.len(), 13);
+        assert!(!plan.is_empty());
+        let keys = plan.keys();
+        assert_eq!(keys.len(), plan.len());
+        // distinct snapped keys spanning [0.4, 1.6]
+        let mut uniq = keys.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len());
+        assert!((keys.first().unwrap().shape() - 0.4).abs() < 1e-9);
+        assert!((keys.last().unwrap().shape() - 1.6).abs() < 1e-9);
+        assert!(keys.iter().all(|k| k.levels == 4 && (k.m() - 2.0).abs() < 1e-9));
     }
 }

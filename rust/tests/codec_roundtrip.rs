@@ -1,0 +1,143 @@
+//! Property tests for the split Encoder/Decoder API, run in the default
+//! `cargo test` lane (CI):
+//!
+//! 1. **Fused-accumulate equivalence** — for every scheme and random
+//!    weight, `decode_accumulate(p, w, acc)` is bit-exactly
+//!    `acc[i] += w · decode_dense(p)[i]` (zero entries included: skipping
+//!    a zero survivor is an exact f32 no-op for accumulators that never
+//!    hold −0.0, which aggregation accumulators — zero-initialized and
+//!    add-only — cannot).
+//! 2. **Encode determinism under scratch reuse** — an [`EncodeCtx`] dirtied
+//!    by encoding other gradients produces byte- and bit-identical output
+//!    to a fresh one; stale buffer contents must never leak into a round.
+
+use std::sync::Arc;
+
+use m22::compress::registry::{self, Scheme, SchemeSpec};
+use m22::compress::{BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder};
+use m22::fedserve::sim::sim_spec;
+use m22::quantizer::{Family, QuantizerTables, TableSource};
+use m22::util::prop::prop_check;
+
+fn all_schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ]
+}
+
+fn build_pair(scheme: Scheme, b: &Budget, seed: u64) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
+    let spec = SchemeSpec::new(scheme, 0, 0).resolve(b, seed);
+    let enc = registry::build_encoder(&spec, codec.clone(), tables.clone()).unwrap();
+    let dec = registry::build_decoder(&spec, codec, tables).unwrap();
+    (enc, dec)
+}
+
+/// Drop the (astronomically unlikely) −0.0 a generator could produce: the
+/// equivalence below is stated for accumulators without negative zeros,
+/// which is the only kind the add-only aggregation path can hold.
+fn sanitize(acc: Vec<f32>) -> Vec<f32> {
+    acc.into_iter().map(|x| if x == 0.0 { 0.0 } else { x }).collect()
+}
+
+#[test]
+fn decode_accumulate_equals_weighted_dense_decode_bitwise() {
+    prop_check("decode_accumulate ≡ acc += w·dense", 12, |g| {
+        let d = g.usize_in(400, 2000);
+        let spec = sim_spec(d);
+        let b = Budget::paper_point(d, *g.pick(&[1u32, 2, 3, 4]));
+        let grad = g.grad_like(d..d + 1, g.f64_in(0.0, 0.6));
+        let weight = *g.pick(&[1.0f32, -1.0, 0.5, 2.25, 0.0]);
+        for scheme in all_schemes() {
+            let (enc, dec) = build_pair(scheme, &b, 7);
+            let mut ctx = EncodeCtx::new();
+            enc.encode(&grad, &spec, &mut ctx).unwrap();
+            let dense = dec.decode_dense(ctx.payload(), &spec).unwrap();
+            assert_eq!(dense.len(), d, "{scheme:?}");
+            // dense reference: acc2[i] += w * dense[i] over every dimension
+            let acc0 = sanitize(g.vec_f32(d..d + 1, -1.0, 1.0));
+            let mut want = acc0.clone();
+            for (a, x) in want.iter_mut().zip(&dense) {
+                *a += weight * x;
+            }
+            let mut acc = acc0;
+            dec.decode_accumulate(ctx.payload(), &spec, weight, &mut acc).unwrap();
+            for i in 0..d {
+                assert_eq!(
+                    acc[i].to_bits(),
+                    want[i].to_bits(),
+                    "{scheme:?} w={weight} dim {i}: {} vs {}",
+                    acc[i],
+                    want[i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn encode_is_deterministic_under_ctx_reuse() {
+    prop_check("dirty scratch never leaks", 10, |g| {
+        let d = g.usize_in(400, 1500);
+        let spec = sim_spec(d);
+        let b = Budget::paper_point(d, *g.pick(&[1u32, 2, 3]));
+        let grad = g.grad_like(d..d + 1, g.f64_in(0.0, 0.5));
+        // a different gradient (possibly different support size) to dirty
+        // every scratch buffer first
+        let other = g.grad_like(d..d + 1, g.f64_in(0.0, 0.9));
+        for scheme in all_schemes() {
+            let (enc, _) = build_pair(scheme, &b, 7);
+            let mut fresh = EncodeCtx::new();
+            let r1 = enc.encode(&grad, &spec, &mut fresh).unwrap();
+            let clean_payload = fresh.payload().to_vec();
+            let clean_ghat = fresh.reconstructed().to_vec();
+
+            let mut dirty = EncodeCtx::new();
+            enc.encode(&other, &spec, &mut dirty).unwrap();
+            let r2 = enc.encode(&grad, &spec, &mut dirty).unwrap();
+            assert_eq!(dirty.payload(), &clean_payload[..], "{scheme:?}: payload drifted");
+            let got = dirty.reconstructed();
+            assert_eq!(got.len(), clean_ghat.len(), "{scheme:?}");
+            for i in 0..got.len() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    clean_ghat[i].to_bits(),
+                    "{scheme:?}: reconstruction drifted at dim {i}"
+                );
+            }
+            assert_eq!(r1.payload_bytes, r2.payload_bytes, "{scheme:?}");
+            assert_eq!(r1.k, r2.k, "{scheme:?}");
+        }
+    });
+}
+
+#[test]
+fn zero_weight_and_zero_acc_edge_cases() {
+    let d = 600;
+    let spec = sim_spec(d);
+    let b = Budget::paper_point(d, 2);
+    for scheme in all_schemes() {
+        let (enc, dec) = build_pair(scheme, &b, 3);
+        let grad: Vec<f32> = (0..d).map(|i| ((i % 7) as f32 - 3.0) * 0.01).collect();
+        let mut ctx = EncodeCtx::new();
+        enc.encode(&grad, &spec, &mut ctx).unwrap();
+        // zero-initialized accumulator at weight 1 reproduces dense decode
+        let mut acc = vec![0.0f32; d];
+        dec.decode_accumulate(ctx.payload(), &spec, 1.0, &mut acc).unwrap();
+        let dense = dec.decode_dense(ctx.payload(), &spec).unwrap();
+        for i in 0..d {
+            assert_eq!(acc[i].to_bits(), dense[i].to_bits(), "{scheme:?} dim {i}");
+        }
+        // wrong-dimension accumulator is rejected, not corrupted
+        let mut short = vec![0.0f32; d - 1];
+        assert!(dec.decode_accumulate(ctx.payload(), &spec, 1.0, &mut short).is_err());
+    }
+}

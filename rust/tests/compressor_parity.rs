@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use m22::compress::m22::{M22, M22Config};
 use m22::compress::uniform::TopKUniform;
-use m22::compress::{Budget, Compressor, CpuCodec};
+use m22::compress::{encode_once, Budget, CpuCodec, Decoder};
 use m22::quantizer::{Family, QuantizerTables};
 use m22::stats::{Distribution, GenNorm};
 use m22::train::{ModelSpec, TensorInfo, TensorKind};
@@ -78,19 +78,19 @@ fn value_bits_match_across_quantizer_schemes() {
     let b = Budget::paper_point(spec.d(), 2);
     let tables = Arc::new(QuantizerTables::new());
     let codec = Arc::new(CpuCodec);
-    let mut uniform = TopKUniform::new(2, b.k_ref);
-    let mut m22 = M22::new(
+    let uniform = TopKUniform::new(2, b.k_ref);
+    let m22 = M22::new(
         M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: b.k_ref, min_fit: 512 },
         codec,
         tables,
     );
-    let ou = uniform.compress(&g, &spec).unwrap();
-    let om = m22.compress(&g, &spec).unwrap();
+    let (_, _, ru) = encode_once(&uniform, &g, &spec).unwrap();
+    let (_, _, rm) = encode_once(&m22, &g, &spec).unwrap();
     // eq. 15 vs eq. 17: identical K and identical value budget
-    assert_eq!(ou.report.k, om.report.k);
-    assert_eq!(ou.report.value_bits, om.report.value_bits);
+    assert_eq!(ru.k, rm.k);
+    assert_eq!(ru.value_bits, rm.value_bits);
     // positional terms identical too (same K over same d)
-    assert_eq!(ou.report.position_bits_actual, om.report.position_bits_actual);
+    assert_eq!(ru.position_bits_actual, rm.position_bits_actual);
 }
 
 #[test]
@@ -106,15 +106,16 @@ fn m22_beats_uniform_on_long_tailed_gradients() {
         let mut err_m = 0.0;
         for seed in 0..3u64 {
             let g = realistic_grad(&spec, seed);
-            let ou = TopKUniform::new(rq, b.k_ref).compress(&g, &spec).unwrap();
-            let mut m22 = M22::new(
+            let (_, rec_u, _) =
+                encode_once(&TopKUniform::new(rq, b.k_ref), &g, &spec).unwrap();
+            let m22 = M22::new(
                 M22Config { family: Family::GenNorm, m: 0.0, rq, k: b.k_ref, min_fit: 512 },
                 Arc::new(CpuCodec),
                 tables.clone(),
             );
-            let om = m22.compress(&g, &spec).unwrap();
-            err_u += mse(&g, &ou.reconstructed);
-            err_m += mse(&g, &om.reconstructed);
+            let (_, rec_m, _) = encode_once(&m22, &g, &spec).unwrap();
+            err_u += mse(&g, &rec_u);
+            err_m += mse(&g, &rec_m);
         }
         assert!(err_m < err_u, "rq={rq}: m22 {err_m} vs uniform {err_u}");
     }
@@ -129,12 +130,12 @@ fn matched_m_minimizes_its_own_distortion() {
     let b = Budget::paper_point(spec.d(), 3);
     let g = realistic_grad(&spec, 9);
     let compress_with = |m: f64| {
-        let mut c = M22::new(
+        let c = M22::new(
             M22Config { family: Family::GenNorm, m, rq: 3, k: b.k_ref, min_fit: 512 },
             Arc::new(CpuCodec),
             tables.clone(),
         );
-        c.compress(&g, &spec).unwrap().reconstructed
+        encode_once(&c, &g, &spec).unwrap().1
     };
     let r0 = compress_with(0.0);
     let r4 = compress_with(4.0);
@@ -152,12 +153,12 @@ fn per_layer_fit_beats_global_fit() {
     let b = Budget::paper_point(spec.d(), 2);
     let g = realistic_grad(&spec, 17);
     let rec = |min_fit: usize| {
-        let mut c = M22::new(
+        let c = M22::new(
             M22Config { family: Family::GenNorm, m: 0.0, rq: 2, k: b.k_ref, min_fit },
             Arc::new(CpuCodec),
             tables.clone(),
         );
-        c.compress(&g, &spec).unwrap().reconstructed
+        encode_once(&c, &g, &spec).unwrap().1
     };
     let per_layer = mse(&g, &rec(256));
     let global = mse(&g, &rec(usize::MAX));
@@ -169,14 +170,14 @@ fn weibull_family_also_roundtrips_on_realistic_grads() {
     let spec = model_spec();
     let g = realistic_grad(&spec, 23);
     let b = Budget::paper_point(spec.d(), 1);
-    let mut c = M22::new(
+    let c = M22::new(
         M22Config { family: Family::Weibull, m: 4.0, rq: 1, k: b.k_ref, min_fit: 512 },
         Arc::new(CpuCodec),
         Arc::new(QuantizerTables::new()),
     );
-    let out = c.compress(&g, &spec).unwrap();
-    assert_eq!(c.decompress(&out.payload, &spec).unwrap(), out.reconstructed);
+    let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();
+    assert_eq!(c.decode_dense(&payload, &spec).unwrap(), reconstructed);
     // 1-bit quantization: reconstruction correlates positively with source
-    let dot: f64 = g.iter().zip(&out.reconstructed).map(|(a, b)| (a * b) as f64).sum();
+    let dot: f64 = g.iter().zip(&reconstructed).map(|(a, b)| (a * b) as f64).sum();
     assert!(dot > 0.0);
 }

@@ -1,14 +1,21 @@
 //! Integration: the full fedserve path (client sessions → wire frames →
-//! server decode → sharded aggregation) reproduces a hand-rolled serial
-//! eq.-(7) coordinator bit-exactly at every shard count, and the shared
-//! LRU quantizer-table cache actually gets hit in multi-round runs.
+//! fused sparse decode+reduce on shards) reproduces a hand-rolled serial
+//! dense-decode coordinator bit-exactly at every shard count, and the
+//! shared LRU quantizer-table cache actually gets hit in multi-round runs.
+//!
+//! This is the acceptance oracle for the Encoder/Decoder split: the serial
+//! reference below decodes every payload *densely* (the pre-split server
+//! behavior) while `simulate` runs the fused `accumulate_sharded` path that
+//! never materializes a per-client ĝ — final models must agree to the bit.
 
 use std::sync::Arc;
 
-use m22::compress::{BlockCodec, Compressor, CpuCodec};
+use m22::compress::{encode_once, BlockCodec, CpuCodec, Decoder};
 use m22::config::{ExperimentConfig, Scheme};
 use m22::coordinator::Memory;
-use m22::fedserve::aggregate::{aggregate_serial, aggregate_sharded};
+use m22::fedserve::aggregate::{
+    accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded,
+};
 use m22::fedserve::session::Scheduler;
 use m22::fedserve::sim::{sim_spec, sim_update, simulate};
 use m22::fedserve::table_cache::LruTableCache;
@@ -22,14 +29,16 @@ fn base_cfg(scheme: Scheme, clients: usize, rounds: usize) -> ExperimentConfig {
 }
 
 /// The serial reference: same schedule, same sessions, same decoders — but
-/// no wire, no threads, no sharding. This is the pre-fedserve driver loop.
+/// no wire, no threads, no sharding, and *dense* decode-then-reduce (the
+/// old `Compressor::decompress` server path). This is the pre-fedserve,
+/// pre-split driver loop.
 fn serial_reference(cfg: &ExperimentConfig, d: usize) -> Vec<f32> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
-    let decoder = cfg.build_compressor(d, codec.clone(), tables.clone());
-    let mut comps: Vec<_> = (0..cfg.n_clients)
-        .map(|_| cfg.build_compressor(d, codec.clone(), tables.clone()))
+    let decoder = cfg.build_decoder(d, codec.clone(), tables.clone()).unwrap();
+    let comps: Vec<_> = (0..cfg.n_clients)
+        .map(|_| cfg.build_encoder(d, codec.clone(), tables.clone()).unwrap())
         .collect();
     let mut mems: Vec<Option<Memory>> = (0..cfg.n_clients)
         .map(|_| cfg.memory.then(|| Memory::new(d, cfg.memory_decay)))
@@ -46,12 +55,13 @@ fn serial_reference(cfg: &ExperimentConfig, d: usize) -> Vec<f32> {
                 Some(m) => m.add_back(&update).unwrap(),
                 None => update.clone(),
             };
-            let out = comps[id].compress(&augmented, &spec).unwrap();
+            let (payload, reconstructed, _) =
+                encode_once(&*comps[id], &augmented, &spec).unwrap();
             if let Some(m) = &mut mems[id] {
-                m.update(&augmented, &out.reconstructed);
+                m.update(&augmented, &reconstructed);
             }
             // the server decodes bytes, never the client's reconstruction
-            decoded.push(decoder.decompress(&out.payload, &spec).unwrap());
+            decoded.push(decoder.decode_dense(&payload, &spec).unwrap());
         }
         let agg = aggregate_serial(&decoded, d);
         let scale = 1.0 / participants.len() as f32;
@@ -71,7 +81,7 @@ fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
 
 #[test]
 fn sharded_aggregation_parity_across_shard_counts() {
-    // pure aggregation parity on synthetic decoded deltas
+    // pure dense aggregation parity on synthetic decoded deltas
     let root = Rng::new(4242);
     for &(n, d) in &[(2usize, 999usize), (6, 4096), (11, 10_000)] {
         let decoded: Vec<Vec<f32>> = (0..n)
@@ -84,6 +94,49 @@ fn sharded_aggregation_parity_across_shard_counts() {
         for shards in [1usize, 3, 8] {
             let sharded = aggregate_sharded(&decoded, d, shards);
             assert_bitwise_eq(&serial, &sharded, &format!("n={n} d={d} shards={shards}"));
+        }
+    }
+}
+
+#[test]
+fn fused_sparse_reduce_matches_dense_reduce_for_every_scheme() {
+    // decode_accumulate / for_each_survivor vs decode_dense + dense reduce:
+    // bit-exact at every shard count, for every scheme's real payloads
+    let d = 3000;
+    let spec = sim_spec(d);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    for scheme in [
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ] {
+        let cfg = base_cfg(scheme, 5, 1);
+        let tables = Arc::new(LruTableCache::new(64));
+        let encoder = cfg.build_encoder(d, codec.clone(), tables.clone()).unwrap();
+        let decoder = cfg.build_decoder(d, codec.clone(), tables.clone()).unwrap();
+        let payloads: Vec<Vec<u8>> = (0..cfg.n_clients)
+            .map(|id| {
+                let g = sim_update(cfg.seed, id, 0, d);
+                encode_once(&*encoder, &g, &spec).unwrap().0
+            })
+            .collect();
+        let slices: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let decoded: Vec<Vec<f32>> = slices
+            .iter()
+            .map(|p| decoder.decode_dense(p, &spec).unwrap())
+            .collect();
+        let dense = aggregate_serial(&decoded, d);
+        let mut acc = vec![0.0f32; d];
+        accumulate_serial(&*decoder, &slices, &spec, &mut acc).unwrap();
+        assert_bitwise_eq(&dense, &acc, &format!("{scheme:?} serial"));
+        for shards in [3usize, 8] {
+            let mut acc = vec![0.0f32; d];
+            accumulate_sharded(&*decoder, &slices, &spec, shards, &mut acc).unwrap();
+            assert_bitwise_eq(&dense, &acc, &format!("{scheme:?} shards={shards}"));
         }
     }
 }

@@ -153,29 +153,29 @@ fn m22_compressor_on_hlo_codec_roundtrips() {
     let tables = Arc::new(QuantizerTables::new());
     let k = (0.6 * spec.d() as f64) as usize;
     use m22::compress::m22::{M22, M22Config};
-    use m22::compress::Compressor;
-    let mut comp = M22::new(
+    use m22::compress::{encode_once, Decoder};
+    let comp = M22::new(
         M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k, min_fit: 512 },
         Arc::new(h.clone()),
         tables.clone(),
     );
-    let out = comp.compress(&g, spec).unwrap();
-    assert_eq!(out.report.k, k);
-    let dec = comp.decompress(&out.payload, spec).unwrap();
-    assert_eq!(dec, out.reconstructed);
+    let (payload, reconstructed, report) = encode_once(&comp, &g, spec).unwrap();
+    assert_eq!(report.k, k);
+    let dec = comp.decode_dense(&payload, spec).unwrap();
+    assert_eq!(dec, reconstructed);
     // and the HLO path agrees with the pure-Rust codec end to end
-    let mut comp_cpu = M22::new(
+    let comp_cpu = M22::new(
         M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k, min_fit: 512 },
         Arc::new(CpuCodec),
         tables,
     );
-    let out_cpu = comp_cpu.compress(&g, spec).unwrap();
+    let (_, reconstructed_cpu, _) = encode_once(&comp_cpu, &g, spec).unwrap();
     // HLO moments accumulate in f32, the CPU reference in f64, so fitted
     // scales differ in the last ulp: compare reconstructions approximately
     // and supports exactly.
-    assert_eq!(out.reconstructed.len(), out_cpu.reconstructed.len());
+    assert_eq!(reconstructed.len(), reconstructed_cpu.len());
     let mut max_rel = 0.0f64;
-    for (a, b) in out.reconstructed.iter().zip(&out_cpu.reconstructed) {
+    for (a, b) in reconstructed.iter().zip(&reconstructed_cpu) {
         assert_eq!(*a == 0.0, *b == 0.0, "support mismatch");
         if *b != 0.0 {
             max_rel = max_rel.max(((a - b) as f64 / *b as f64).abs());
