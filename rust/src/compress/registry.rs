@@ -110,6 +110,7 @@ impl SchemeSpec {
         let mut min_fit = DEFAULT_MIN_FIT;
         let mut depth = 3usize;
         let mut seed = 0u64;
+        let mut seen: Vec<&str> = Vec::new();
         if let Some(opts) = opts {
             for kv in opts.split(',') {
                 let kv = kv.trim();
@@ -120,6 +121,16 @@ impl SchemeSpec {
                     .split_once('=')
                     .with_context(|| format!("expected key=value in `{kv}`"))?;
                 let val = val.trim();
+                // a repeated key is a typo in a sweep script, not a
+                // preference order — refuse instead of last-one-wins
+                let canon = match key.trim() {
+                    "rate" => "rq",
+                    other => other,
+                };
+                if seen.contains(&canon) {
+                    bail!("duplicate scheme option `{}` in `{s}`", key.trim());
+                }
+                seen.push(canon);
                 match key.trim() {
                     "m" => m = val.parse().with_context(|| format!("bad m `{val}`"))?,
                     "rq" | "rate" => {
@@ -323,6 +334,28 @@ mod tests {
         assert!(SchemeSpec::parse("m22-gennorm:bogus=1").is_err());
         assert!(SchemeSpec::parse("m22-gennorm:rq").is_err());
         assert!(SchemeSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn spec_string_errors_name_the_offending_token() {
+        // an empty value must not silently fall back to a default
+        let e = SchemeSpec::parse("m22-gennorm:m=").unwrap_err();
+        assert!(format!("{e:#}").contains("bad m ``"), "{e:#}");
+        // unknown scheme family names the family
+        let e = SchemeSpec::parse("m99-cauchy:m=2").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown scheme `m99-cauchy`"), "{e:#}");
+        // duplicate keys are a config bug, not a preference order
+        let e = SchemeSpec::parse("m22-gennorm:k=100,k=200").unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate scheme option `k`"), "{e:#}");
+        // `rate` is an alias of `rq`: repeating across spellings still dups
+        let e = SchemeSpec::parse("tinyscript:rq=1,rate=2").unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate scheme option `rate`"), "{e:#}");
+        // unknown option names the key
+        let e = SchemeSpec::parse("sketch:depht=5").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown scheme option `depht`"), "{e:#}");
+        // non-numeric values name both key and value
+        let e = SchemeSpec::parse("m22-weibull:m=two").unwrap_err();
+        assert!(format!("{e:#}").contains("bad m `two`"), "{e:#}");
     }
 
     #[test]

@@ -9,12 +9,9 @@
 //!      feedback (Sec. IV-B), compresses, and records the residual;
 //!   5. uplink the payload bytes + rate report as one checksummed frame.
 //!
-//! Both directions are honest bytes (`fedserve::wire`): the worker parses
-//! downlink frames and emits uplink frames, so swapping the in-process
-//! channel for a socket touches neither endpoint.
-
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+//! Both directions are honest bytes (`fedserve::wire`) through a
+//! [`ClientTransport`], so the same worker serves rounds off the
+//! in-process channel pair or a real socket — the endpoint cannot tell.
 
 use anyhow::Result;
 
@@ -22,6 +19,7 @@ use crate::compress::Encoder;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::fedserve::session::ClientSession;
+use crate::fedserve::transport::ClientTransport;
 use crate::fedserve::wire;
 use crate::runtime::RuntimeHandle;
 use crate::train::{ModelSpec, Optimizer};
@@ -37,8 +35,7 @@ pub struct ClientWorker {
     pub shard: Vec<(u32, u8)>,
     pub runtime: RuntimeHandle,
     pub session: ClientSession,
-    pub rx: Receiver<Arc<Vec<u8>>>,
-    pub tx: Sender<Vec<u8>>,
+    transport: Box<dyn ClientTransport>,
     /// batch cursor — advances across rounds so epochs progress
     cursor: usize,
 }
@@ -52,12 +49,11 @@ impl ClientWorker {
         shard: Vec<(u32, u8)>,
         runtime: RuntimeHandle,
         encoder: Box<dyn Encoder>,
-        rx: Receiver<Arc<Vec<u8>>>,
-        tx: Sender<Vec<u8>>,
+        transport: Box<dyn ClientTransport>,
     ) -> ClientWorker {
         let memory = cfg.memory.then(|| Memory::new(spec.d(), cfg.memory_decay));
         let session = ClientSession::new(id, encoder, memory);
-        ClientWorker { id, cfg, spec, shard, runtime, session, rx, tx, cursor: 0 }
+        ClientWorker { id, cfg, spec, shard, runtime, session, transport, cursor: 0 }
     }
 
     /// One round of local work; returns the framed uplink (the bytes are
@@ -97,22 +93,22 @@ impl ClientWorker {
 
     /// Thread body: serve framed rounds until shutdown.
     pub fn run(mut self, dataset: &Dataset) {
-        while let Ok(frame) = self.rx.recv() {
-            let msg = match wire::decode(&frame) {
-                Ok(m) => m,
+        loop {
+            let msg = match self.transport.recv() {
+                Ok(Some(m)) => m,
+                Ok(None) => break, // server gone without a shutdown frame
                 Err(e) => {
                     let up = Uplink::failure(
                         self.id,
                         wire::ROUND_UNKNOWN,
                         format!("bad downlink frame: {e:#}"),
                     );
-                    let _ = self.tx.send(wire::encode_update(&up));
+                    let _ = self.transport.send(&wire::encode_update(&up));
                     break;
                 }
             };
             match msg {
                 wire::Message::Shutdown => break,
-                wire::Message::Update(_) => break, // protocol violation; stop
                 wire::Message::Round { round, weights } => {
                     let uplink_frame = match self.round(dataset, round, &weights) {
                         Ok(f) => f,
@@ -122,10 +118,11 @@ impl ClientWorker {
                             format!("{e:#}"),
                         )),
                     };
-                    if self.tx.send(uplink_frame).is_err() {
+                    if self.transport.send(&uplink_frame).is_err() {
                         break; // server gone
                     }
                 }
+                _ => break, // protocol violation; stop serving
             }
         }
     }

@@ -7,16 +7,16 @@
 //! eq.-(7) reduce, the shared LRU quantizer-table cache — lives in
 //! [`crate::fedserve`] and is exercised identically by `repro serve`.
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::BlockCodec;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::fedserve::table_cache::LruTableCache;
-use crate::fedserve::{wire, FedServer};
+use crate::fedserve::transport::{ChannelTransport, Transport};
+use crate::fedserve::FedServer;
 use crate::metrics::{Recorder, Row, ServerStats};
 use crate::runtime::RuntimeHandle;
 
@@ -85,14 +85,12 @@ pub fn run_experiment(
     server.prewarm_for(cfg, d, &tables);
     let n_participants = cfg.participants_per_round();
 
-    let (last, bits_per_round) = std::thread::scope(|scope| -> Result<((f64, f64, f64), f64)> {
-        let (up_tx, up_rx) = channel::<Vec<u8>>();
-        // down_txs lives inside the scope closure so an early error drops the
-        // senders, unblocking (and thus joining) every client thread
-        let mut down_txs = Vec::with_capacity(cfg.n_clients);
-        for id in 0..cfg.n_clients {
-            let (dtx, drx) = channel::<Arc<Vec<u8>>>();
-            down_txs.push(dtx);
+    let (last, bits_per_round, tstats) = std::thread::scope(|scope| {
+        // the transport lives inside the scope closure so an early error
+        // drops the downlink senders, unblocking (and thus joining) every
+        // client thread
+        let (mut transport, client_ends) = ChannelTransport::pair(cfg.n_clients);
+        for (id, ct) in client_ends.into_iter().enumerate() {
             let shard = match cfg.dirichlet_alpha {
                 Some(alpha) => dataset.client_shard_dirichlet(id, cfg.n_clients, alpha),
                 None => dataset.client_shard(id, cfg.n_clients),
@@ -104,26 +102,17 @@ pub fn run_experiment(
                 shard,
                 runtime.clone(),
                 cfg.build_encoder(d, codec.clone(), tables.clone())?,
-                drx,
-                up_tx.clone(),
+                Box::new(ct),
             );
             scope.spawn(move || worker.run(dataset));
         }
-        drop(up_tx); // clients hold the remaining clones
 
         let mut bits_per_round = 0.0f64;
         let mut last = (f64::NAN, f64::NAN, f64::NAN); // train, test loss, acc
         for round in 0..cfg.rounds {
             let participants = server.select(n_participants);
-            // the downlink: one encoded frame, shared across participants
-            let frame = Arc::new(wire::encode_round(round, &w));
-            for &id in &participants {
-                down_txs[id]
-                    .send(frame.clone())
-                    .map_err(|_| anyhow!("client {id} thread died"))?;
-            }
             let summary = server
-                .run_round(round, &participants, &up_rx, &spec, &mut w)
+                .run_round(round, &participants, &mut transport, &spec, &mut w)
                 .with_context(|| format!("server round {round}"))?;
             if summary.received == 0 {
                 bail!(
@@ -145,15 +134,14 @@ pub fn run_experiment(
                 bits_up: bits_per_round,
             });
         }
-        for dtx in &down_txs {
-            let _ = dtx.send(Arc::new(wire::encode_shutdown()));
-        }
-        Ok((last, bits_per_round))
+        transport.close()?;
+        Ok::<_, anyhow::Error>((last, bits_per_round, transport.stats()))
     })?;
 
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
     server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
+    server.stats.set_transport(tstats);
     Ok(RunOutput {
         series: series.to_string(),
         final_train_loss: last.0,

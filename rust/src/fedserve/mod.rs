@@ -6,13 +6,19 @@
 //! can grow from (see DESIGN.md §fedserve):
 //!
 //! * [`wire`] — a framed binary protocol (version header, length prefix,
-//!   CRC-32) so *only bytes* cross the transport and the in-process channel
-//!   can be swapped for a socket;
+//!   CRC-32) so *only bytes* cross the transport; `scan_prefix` streams
+//!   frames out of arbitrary read fragments with typed corruption errors;
+//! * [`transport`] — the pluggable byte mover: a [`transport::Transport`] /
+//!   [`transport::ClientTransport`] trait pair with the original in-process
+//!   channel implementation and a real TCP one (per-connection
+//!   `FrameBuffer` reassembly, nonblocking deadline-driven reads,
+//!   socket-measured byte counters, graceful shutdown frames);
 //! * [`session`] — per-client sessions owning error-feedback memory and
 //!   round bookkeeping, plus the deterministic k-of-n participant
 //!   [`session::Scheduler`] (partial participation);
-//! * [`server`] — the [`server::FedServer`] round loop: deadline-drop
-//!   stragglers, discard stale frames, stream honest payload bytes through
+//! * [`server`] — the [`server::FedServer`] round loop: broadcast through
+//!   the transport, deadline-drop stragglers, discard stale frames, count
+//!   malformed uplinks per client, stream honest payload bytes through
 //!   the fused sparse decode+reduce, apply the averaged step;
 //! * [`aggregate`] — the fused (decode folded into the reduce, no dense
 //!   per-client ĝ) and dense-reference eq.-(7) reducers, all bit-exact
@@ -20,7 +26,9 @@
 //! * [`table_cache`] — a bounded LRU of standardized LBG designs shared by
 //!   all sessions and the server decoder, with hit-rate metrics;
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
-//!   `repro serve` subcommand).
+//!   `repro serve` subcommand), over channels, a TCP loopback in one
+//!   process (`--tcp-loopback`), or split server/client processes
+//!   (`--listen` / `--connect`).
 //!
 //! `coordinator::driver::run_experiment` is now a thin client of this
 //! module: it contributes only training, evaluation, and row recording.
@@ -30,10 +38,15 @@ pub mod server;
 pub mod session;
 pub mod sim;
 pub mod table_cache;
+pub mod transport;
 pub mod wire;
 
 pub use aggregate::{accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded};
 pub use server::{FedServer, RoundSummary};
 pub use session::{ClientSession, Scheduler, SessionStats};
-pub use sim::{simulate, SimReport};
+pub use sim::{simulate, simulate_with, SimReport, TransportMode};
 pub use table_cache::{CacheStats, LruTableCache};
+pub use transport::{
+    ChannelClient, ChannelTransport, ClientTransport, Event, FrameBuffer, TcpClientTransport,
+    TcpServerTransport, Transport,
+};

@@ -1,22 +1,26 @@
 //! The sharded, pipelined parameter server.
 //!
 //! [`FedServer`] owns the server half of Algorithm 1: sample participants,
-//! collect framed uplinks off the transport (deadline-dropping stragglers
-//! and discarding stale-round frames), then run the **fused decode+reduce**:
-//! each payload's survivors stream through [`Decoder::for_each_survivor`]
-//! straight into the sharded eq.-(7) accumulator — the server never builds
-//! a dense per-client ĝ, so a round's memory traffic is O(d) regardless of
-//! client count and the accumulator scratch is reused across rounds. The
-//! experiment driver (`coordinator::driver`) and the `repro serve`
-//! simulation are both thin clients of this loop.
+//! broadcast the round over a [`Transport`] (in-process channels or real
+//! TCP sockets — the server is transport-agnostic), collect framed uplinks
+//! off it (deadline-dropping stragglers, discarding stale-round frames,
+//! counting malformed ones instead of stalling), then run the **fused
+//! decode+reduce**: each payload's survivors stream through
+//! [`Decoder::for_each_survivor`] straight into the sharded eq.-(7)
+//! accumulator — the server never builds a dense per-client ĝ, so a
+//! round's memory traffic is O(d) regardless of client count and the
+//! accumulator scratch is reused across rounds. The experiment driver
+//! (`coordinator::driver`) and the `repro serve` simulation are both thin
+//! clients of this loop.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::compress::Decoder;
 use crate::config::ServerConfig;
+use crate::coordinator::messages::Uplink;
 use crate::metrics::server::{RoundTiming, ServerStats};
 use crate::quantizer::PrewarmPlan;
 use crate::train::ModelSpec;
@@ -24,6 +28,7 @@ use crate::train::ModelSpec;
 use super::aggregate::accumulate_sharded;
 use super::session::{Scheduler, SessionStats};
 use super::table_cache::LruTableCache;
+use super::transport::{Event, Transport};
 use super::wire;
 
 /// Outcome of one server round.
@@ -36,6 +41,8 @@ pub struct RoundSummary {
     pub dropped: usize,
     /// frames discarded (stale round, duplicate, or unsampled sender)
     pub stale: usize,
+    /// uplinks rejected at frame validation (CRC / framing / structure)
+    pub decode_errors: usize,
     /// mean reported local training loss over received uplinks
     pub train_loss_mean: f64,
     /// mean ideal uplink bits (eq. 14–17 accounting) over received uplinks
@@ -107,53 +114,83 @@ impl FedServer {
         self.scheduler.sample(self.sessions.len(), k)
     }
 
-    /// Serve one round: collect uplinks for `participants` off `up_rx`,
-    /// decode, shard-aggregate, and apply the eq.-(7) averaged step to `w`.
+    /// Serve one round: broadcast the model to `participants` over
+    /// `transport`, collect their uplinks off it, decode, shard-aggregate,
+    /// and apply the eq.-(7) averaged step to `w`.
     pub fn run_round(
         &mut self,
         round: usize,
         participants: &[usize],
-        up_rx: &Receiver<Vec<u8>>,
+        transport: &mut dyn Transport,
         spec: &ModelSpec,
         w: &mut [f32],
     ) -> Result<RoundSummary> {
         let t0 = Instant::now();
+        let mut slots: Vec<Option<Uplink>> = Vec::new();
+        slots.resize_with(participants.len(), || None);
+        let mut pending = participants.len();
+        let mut stale = 0usize;
+        let mut decode_errors = 0usize;
+        let mut framed_bytes = 0u64;
+        // the downlink: one encoded frame, shared across participants. A
+        // client whose downlink cannot be delivered (dead thread, closed
+        // socket — e.g. dropped for a malformed uplink last round) cannot
+        // serve this round: count it dropped instead of killing the run;
+        // callers still fail when a round ends with zero uplinks.
+        let frame = Arc::new(wire::encode_round(round, w));
+        let mut unreachable = vec![false; participants.len()];
+        for (i, &id) in participants.iter().enumerate() {
+            if transport.send(id, &frame).is_err() {
+                unreachable[i] = true;
+                pending -= 1;
+            }
+        }
         // 0 = no deadline: block until every participant reports (the
         // original driver semantics — results never depend on wall clock)
         let deadline = (self.cfg.straggler_timeout_ms > 0)
             .then(|| t0 + Duration::from_millis(self.cfg.straggler_timeout_ms));
-        let mut slots: Vec<Option<crate::coordinator::messages::Uplink>> = Vec::new();
-        slots.resize_with(participants.len(), || None);
-        let mut pending = participants.len();
-        let mut stale = 0usize;
-        let mut framed_bytes = 0u64;
         'collect: while pending > 0 {
-            let frame = match deadline {
-                None => up_rx.recv().context("uplink channel closed")?,
-                Some(dl) => {
-                    let wait = dl.saturating_duration_since(Instant::now());
-                    // once the deadline passes, still drain frames that are
-                    // already queued — our own parse time must not
-                    // reclassify timely clients as stragglers
-                    let recv = if wait.is_zero() {
-                        up_rx.try_recv().map_err(|e| match e {
-                            TryRecvError::Empty => RecvTimeoutError::Timeout,
-                            TryRecvError::Disconnected => RecvTimeoutError::Disconnected,
-                        })
-                    } else {
-                        up_rx.recv_timeout(wait)
-                    };
-                    match recv {
-                        Ok(f) => f,
-                        Err(RecvTimeoutError::Timeout) => break 'collect,
-                        Err(RecvTimeoutError::Disconnected) => bail!("uplink channel closed"),
+            // once the deadline passes, a zero wait still drains frames
+            // that already arrived — our own parse time must not
+            // reclassify timely clients as stragglers
+            let wait = deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
+            let event = match transport.poll(wait).context("uplink poll")? {
+                Some(ev) => ev,
+                None => break 'collect, // deadline hit
+            };
+            let up = match event {
+                Event::Garbage { client, error, wire_bytes } => {
+                    // a malformed uplink is counted, never silently waited
+                    // out: when the transport can attribute it, that client
+                    // sent its one frame for the round — stop expecting it
+                    framed_bytes += wire_bytes as u64;
+                    decode_errors += 1;
+                    if let Some(c) = client {
+                        if let Some(s) = self.sessions.get_mut(c) {
+                            s.decode_errors += 1;
+                        }
+                        if let Some(i) = participants.iter().position(|&p| p == c) {
+                            if slots[i].is_none() && !unreachable[i] {
+                                unreachable[i] = true; // its one frame is spent
+                                pending -= 1;
+                            }
+                        }
+                    } else if deadline.is_none() {
+                        // without attribution there is no sender to stop
+                        // expecting, and without a deadline the round would
+                        // wait forever — fail fast like the pre-transport
+                        // collect loop did
+                        bail!("malformed uplink frame on the shared channel: {error}");
+                    }
+                    continue 'collect;
+                }
+                Event::Frame { msg, wire_bytes } => {
+                    framed_bytes += wire_bytes as u64;
+                    match msg {
+                        wire::Message::Update(u) => u,
+                        other => bail!("unexpected frame on the uplink path: {other:?}"),
                     }
                 }
-            };
-            framed_bytes += frame.len() as u64;
-            let up = match wire::decode(&frame)? {
-                wire::Message::Update(u) => u,
-                other => bail!("unexpected frame on the uplink channel: {other:?}"),
             };
             if let Some(e) = &up.error {
                 // a late error from an *earlier* round belongs to a client
@@ -167,7 +204,7 @@ impl FedServer {
             }
             let slot = participants.iter().position(|&p| p == up.client_id);
             match slot {
-                Some(i) if up.round == round && slots[i].is_none() => {
+                Some(i) if up.round == round && slots[i].is_none() && !unreachable[i] => {
                     slots[i] = Some(up);
                     pending -= 1;
                 }
@@ -223,6 +260,7 @@ impl FedServer {
             received,
             dropped,
             stale,
+            decode_errors,
             framed_bytes,
         });
         Ok(RoundSummary {
@@ -230,6 +268,7 @@ impl FedServer {
             received,
             dropped,
             stale,
+            decode_errors,
             train_loss_mean: if received > 0 { train_loss / received as f64 } else { f64::NAN },
             bits_per_client: if received > 0 { bits / received as f64 } else { 0.0 },
             framed_bytes,
@@ -242,8 +281,7 @@ mod tests {
     use super::*;
     use crate::compress::testutil::tiny_spec;
     use crate::compress::{encode_once, NoCompression};
-    use crate::coordinator::messages::Uplink;
-    use std::sync::mpsc::channel;
+    use crate::fedserve::transport::{ChannelClient, ChannelTransport, ClientTransport};
 
     fn uplink_for(id: usize, round: usize, g: &[f32], spec: &ModelSpec) -> Vec<u8> {
         let (payload, _, report) = encode_once(&NoCompression, g, spec).unwrap();
@@ -261,37 +299,50 @@ mod tests {
         ServerConfig { straggler_timeout_ms: deadline_ms, shards, ..Default::default() }
     }
 
+    /// A connected transport pair; the client halves are kept alive so the
+    /// uplink channel stays open for the duration of a test round.
+    fn pair(n: usize) -> (ChannelTransport, Vec<ChannelClient>) {
+        ChannelTransport::pair(n)
+    }
+
     #[test]
     fn full_round_applies_the_averaged_step() {
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(2);
         let mut server = FedServer::new(quick_cfg(5000, 2), 2, 1, Box::new(NoCompression));
         let g0 = vec![1.0f32; 8];
         let g1 = vec![3.0f32; 8];
-        tx.send(uplink_for(0, 0, &g0, &spec)).unwrap();
-        tx.send(uplink_for(1, 0, &g1, &spec)).unwrap();
+        clients[0].send(&uplink_for(0, 0, &g0, &spec)).unwrap();
+        clients[1].send(&uplink_for(1, 0, &g1, &spec)).unwrap();
         let mut w = vec![10.0f32; 8];
-        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        let s = server.run_round(0, &[0, 1], &mut t, &spec, &mut w).unwrap();
         assert_eq!(s.received, 2);
         assert_eq!(s.dropped, 0);
+        assert_eq!(s.decode_errors, 0);
         assert_eq!(s.train_loss_mean, 1.5);
         assert_eq!(w, vec![8.0f32; 8]); // 10 - (1+3)/2
         assert_eq!(server.sessions[0].participated, 1);
         assert!(server.sessions[0].bytes_up > 0);
         assert_eq!(server.stats.rounds.len(), 1);
         assert!(s.framed_bytes > 0);
+        // the broadcast left through the transport: both clients can read
+        // the round frame the server sent before collecting
+        for c in &mut clients {
+            assert!(matches!(c.recv().unwrap(), Some(wire::Message::Round { round: 0, .. })));
+        }
+        assert!(t.stats().bytes_out > 0);
     }
 
     #[test]
     fn deadline_drops_stragglers_but_keeps_the_round() {
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(2);
         let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
         let g0 = vec![2.0f32; 8];
-        tx.send(uplink_for(0, 0, &g0, &spec)).unwrap();
+        clients[0].send(&uplink_for(0, 0, &g0, &spec)).unwrap();
         // client 1 never reports
         let mut w = vec![0.0f32; 8];
-        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        let s = server.run_round(0, &[0, 1], &mut t, &spec, &mut w).unwrap();
         assert_eq!(s.received, 1);
         assert_eq!(s.dropped, 1);
         assert_eq!(w, vec![-2.0f32; 8]); // average over the received one
@@ -302,13 +353,13 @@ mod tests {
     #[test]
     fn stale_round_frames_are_discarded() {
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(2);
         let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
         let g = vec![1.0f32; 8];
-        tx.send(uplink_for(0, 7, &g, &spec)).unwrap(); // wrong round
-        tx.send(uplink_for(1, 0, &g, &spec)).unwrap();
+        clients[0].send(&uplink_for(0, 7, &g, &spec)).unwrap(); // wrong round
+        clients[1].send(&uplink_for(1, 0, &g, &spec)).unwrap();
         let mut w = vec![0.0f32; 8];
-        let s = server.run_round(0, &[0, 1], &rx, &spec, &mut w).unwrap();
+        let s = server.run_round(0, &[0, 1], &mut t, &spec, &mut w).unwrap();
         assert_eq!(s.stale, 1);
         assert_eq!(s.received, 1);
         assert_eq!(s.dropped, 1); // client 0's real uplink never came
@@ -319,12 +370,12 @@ mod tests {
         // a straggler dropped in round 0 sends its failure late; round 1
         // must count it stale, not kill the run
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(2);
         let mut server = FedServer::new(quick_cfg(50, 1), 2, 1, Box::new(NoCompression));
-        tx.send(wire::encode_update(&Uplink::failure(0, 0, "late crash".into()))).unwrap();
-        tx.send(uplink_for(1, 1, &[1.0f32; 8], &spec)).unwrap();
+        clients[0].send(&wire::encode_update(&Uplink::failure(0, 0, "late crash".into()))).unwrap();
+        clients[1].send(&uplink_for(1, 1, &[1.0f32; 8], &spec)).unwrap();
         let mut w = vec![0.0f32; 8];
-        let s = server.run_round(1, &[0, 1], &rx, &spec, &mut w).unwrap();
+        let s = server.run_round(1, &[0, 1], &mut t, &spec, &mut w).unwrap();
         assert_eq!(s.stale, 1);
         assert_eq!(s.received, 1);
     }
@@ -334,16 +385,12 @@ mod tests {
         // a client that could not decode the downlink has no round to name;
         // its failure must still abort instead of deadlocking the collect
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(1);
         let mut server = FedServer::new(quick_cfg(0, 1), 1, 1, Box::new(NoCompression));
-        tx.send(wire::encode_update(&Uplink::failure(
-            0,
-            wire::ROUND_UNKNOWN,
-            "bad downlink frame".into(),
-        )))
-        .unwrap();
+        let up = Uplink::failure(0, wire::ROUND_UNKNOWN, "bad downlink frame".into());
+        clients[0].send(&wire::encode_update(&up)).unwrap();
         let mut w = vec![0.0f32; 8];
-        let err = server.run_round(5, &[0], &rx, &spec, &mut w).unwrap_err();
+        let err = server.run_round(5, &[0], &mut t, &spec, &mut w).unwrap_err();
         assert!(format!("{err}").contains("bad downlink frame"), "{err}");
     }
 
@@ -352,15 +399,17 @@ mod tests {
         // straggler_timeout_ms = 0 waits: send the uplink from another
         // thread after a delay and the round still completes with no drops
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(1);
         let mut server = FedServer::new(quick_cfg(0, 1), 1, 1, Box::new(NoCompression));
+        let mut client = clients.remove(0);
         let spec2 = spec.clone();
         let sender = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
-            tx.send(uplink_for(0, 0, &[4.0f32; 8], &spec2)).unwrap();
+            client.send(&uplink_for(0, 0, &[4.0f32; 8], &spec2)).unwrap();
+            client // keep the uplink open until after the send
         });
         let mut w = vec![0.0f32; 8];
-        let s = server.run_round(0, &[0], &rx, &spec, &mut w).unwrap();
+        let s = server.run_round(0, &[0], &mut t, &spec, &mut w).unwrap();
         sender.join().unwrap();
         assert_eq!(s.received, 1);
         assert_eq!(s.dropped, 0);
@@ -370,32 +419,41 @@ mod tests {
     #[test]
     fn client_error_aborts_the_round() {
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
+        let (mut t, mut clients) = pair(1);
         let mut server = FedServer::new(quick_cfg(1000, 1), 1, 1, Box::new(NoCompression));
-        tx.send(wire::encode_update(&Uplink {
+        let up = Uplink {
             client_id: 0,
             round: 0,
             payload: Vec::new(),
             report: Default::default(),
             train_loss: f64::NAN,
             error: Some("local divergence".into()),
-        }))
-        .unwrap();
+        };
+        clients[0].send(&wire::encode_update(&up)).unwrap();
         let mut w = vec![0.0f32; 8];
-        let err = server.run_round(0, &[0], &rx, &spec, &mut w).unwrap_err();
+        let err = server.run_round(0, &[0], &mut t, &spec, &mut w).unwrap_err();
         assert!(format!("{err}").contains("local divergence"), "{err}");
     }
 
     #[test]
-    fn corrupted_frame_is_an_error_not_a_crash() {
+    fn malformed_uplink_is_counted_not_silently_waited_out() {
+        // the old collect loop aborted on a corrupt frame; now it is a
+        // per-client decode-error count and the round completes on its
+        // deadline with the sender dropped
         let spec = tiny_spec(6, 2);
-        let (tx, rx) = channel();
-        let mut server = FedServer::new(quick_cfg(1000, 1), 1, 1, Box::new(NoCompression));
+        let (mut t, mut clients) = pair(1);
+        let mut server = FedServer::new(quick_cfg(50, 1), 1, 1, Box::new(NoCompression));
         let mut f = uplink_for(0, 0, &[1.0f32; 8], &spec);
         let len = f.len();
         f[len - 1] ^= 0xff; // corrupt the checksum
-        tx.send(f).unwrap();
+        clients[0].send(&f).unwrap();
         let mut w = vec![0.0f32; 8];
-        assert!(server.run_round(0, &[0], &rx, &spec, &mut w).is_err());
+        let s = server.run_round(0, &[0], &mut t, &spec, &mut w).unwrap();
+        assert_eq!(s.decode_errors, 1);
+        assert_eq!(s.received, 0);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(w, vec![0.0f32; 8]); // nothing was aggregated
+        assert_eq!(server.stats.rounds[0].decode_errors, 1);
+        assert_eq!(server.stats.total_decode_errors(), 1);
     }
 }

@@ -108,6 +108,9 @@ pub struct SessionStats {
     pub participated: usize,
     /// rounds where this client was sampled but missed the deadline
     pub dropped: usize,
+    /// uplinks from this client rejected at frame validation (only
+    /// countable on transports with per-client connections, e.g. TCP)
+    pub decode_errors: usize,
     /// honest uplink bytes received, including wire framing
     pub bytes_up: u64,
     pub last_round: Option<usize>,

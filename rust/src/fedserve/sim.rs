@@ -1,30 +1,53 @@
-//! Runtime-free fedserve exercise: N simulated clients, real wire frames.
+//! Runtime-free fedserve exercise: N simulated clients, real wire frames,
+//! over either transport.
 //!
 //! The `repro serve` subcommand (and the parity tests) drive the full
 //! server path — sessions, framed transport, deadline collection, sharded
 //! aggregation, LRU table cache — without PJRT or AOT artifacts: clients
 //! synthesize deterministic gradient-like updates instead of training.
 //! Every update still round-trips through honest payload bytes inside
-//! checksummed wire frames, so this is the subsystem end-to-end minus the
-//! learning itself.
+//! checksummed wire frames, and with [`TransportMode::TcpLoopback`] (or the
+//! split `serve_listen` / `serve_connect` pair) those frames cross a real
+//! socket, so the encode → wire → fused decode+reduce loop is the
+//! subsystem end-to-end minus the learning itself.
 
-use std::sync::mpsc::channel;
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compress::{BlockCodec, CpuCodec};
 use crate::config::ExperimentConfig;
 use crate::coordinator::memory::Memory;
 use crate::coordinator::messages::Uplink;
-use crate::metrics::server::ServerStats;
+use crate::metrics::server::{ServerStats, TransportStats};
 use crate::train::{ModelSpec, TensorInfo, TensorKind};
 use crate::util::rng::Rng;
 
 use super::server::FedServer;
 use super::session::ClientSession;
 use super::table_cache::LruTableCache;
+use super::transport::{
+    ChannelTransport, ClientTransport, TcpClientTransport, TcpServerTransport, Transport,
+};
 use super::wire;
+
+/// How long a loopback run waits for its own clients to connect.
+const LOOPBACK_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long a loopback client retries its connect.
+const LOOPBACK_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Which transport a simulated run exchanges frames over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportMode {
+    /// In-process mpsc channels (the original plumbing).
+    Channel,
+    /// Real sockets over `127.0.0.1:0`: k client threads against a bound
+    /// listener, so the full round loop crosses a genuine network boundary
+    /// in one process (and in CI).
+    TcpLoopback,
+}
 
 /// Synthetic model layout for dimension `d`: a conv bulk, a dense block,
 /// and a bias tail — enough structure to engage per-tensor fitting.
@@ -90,93 +113,228 @@ impl SimReport {
     }
 }
 
-/// Drive `cfg.rounds` federated rounds of `cfg.n_clients` simulated clients
-/// at model dimension `d` through the wire format and the sharded server.
-pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
+/// Client endpoint body shared by every transport (loopback threads and
+/// the `repro serve --connect` process): serve framed rounds with
+/// deterministic synthetic updates until shutdown, a protocol violation,
+/// or the server going away.
+pub fn sim_client_loop<T: ClientTransport>(
+    transport: &mut T,
+    session: &mut ClientSession,
+    seed: u64,
+    d: usize,
+    spec: &ModelSpec,
+) {
+    loop {
+        let round = match transport.recv() {
+            Ok(Some(wire::Message::Round { round, .. })) => round,
+            Ok(Some(wire::Message::Shutdown)) | Ok(None) => return,
+            Ok(Some(_)) => return, // protocol violation: stop serving
+            Err(e) => {
+                let up = Uplink::failure(
+                    session.id,
+                    wire::ROUND_UNKNOWN,
+                    format!("bad downlink frame: {e:#}"),
+                );
+                let _ = transport.send(&wire::encode_update(&up));
+                return;
+            }
+        };
+        let update = sim_update(seed, session.id, round, d);
+        // frame straight out of the session's reusable scratch
+        let frame = match session.encode_update(round, &update, spec) {
+            Ok(report) => session.frame_update(round, &report, 0.0),
+            Err(e) => wire::encode_update(&Uplink::failure(session.id, round, format!("{e:#}"))),
+        };
+        if transport.send(&frame).is_err() {
+            return; // server gone
+        }
+    }
+}
+
+/// Drive every round through `transport` and close it gracefully. Returns
+/// the last round's mean ideal uplink bits per client.
+fn drive_rounds(
+    server: &mut FedServer,
+    transport: &mut dyn Transport,
+    cfg: &ExperimentConfig,
+    spec: &ModelSpec,
+    w: &mut [f32],
+) -> Result<f64> {
+    let k = cfg.participants_per_round();
+    let mut bits = 0.0f64;
+    for round in 0..cfg.rounds {
+        let participants = server.select(k);
+        let summary = server.run_round(round, &participants, transport, spec, w)?;
+        if summary.received == 0 {
+            bail!(
+                "round {round}: all {} participants missed the {} ms deadline",
+                participants.len(),
+                cfg.server.straggler_timeout_ms
+            );
+        }
+        bits = summary.bits_per_client;
+    }
+    transport.close()?;
+    Ok(bits)
+}
+
+fn build_sessions(
+    cfg: &ExperimentConfig,
+    d: usize,
+    codec: &Arc<dyn BlockCodec>,
+    tables: &Arc<LruTableCache>,
+) -> Result<Vec<ClientSession>> {
+    (0..cfg.n_clients)
+        .map(|id| {
+            let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
+            Ok(ClientSession::new(
+                id,
+                cfg.build_encoder(d, codec.clone(), tables.clone())?,
+                memory,
+            ))
+        })
+        .collect()
+}
+
+/// The server-side pieces every serve mode constructs the same way.
+struct SimServer {
+    spec: ModelSpec,
+    tables: Arc<LruTableCache>,
+    codec: Arc<dyn BlockCodec>,
+    server: FedServer,
+}
+
+fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
     let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
     let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, decoder);
     server.prewarm_for(cfg, d, &tables);
-    let mut w = vec![0.0f32; d];
-    let k = cfg.participants_per_round();
+    Ok(SimServer { spec, tables, codec, server })
+}
 
-    let bits_per_round = std::thread::scope(|scope| -> Result<f64> {
-        let (up_tx, up_rx) = channel::<Vec<u8>>();
-        let mut down_txs = Vec::with_capacity(cfg.n_clients);
-        for id in 0..cfg.n_clients {
-            let (dtx, drx) = channel::<Arc<Vec<u8>>>();
-            down_txs.push(dtx);
-            let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
-            let mut session = ClientSession::new(
-                id,
-                cfg.build_encoder(d, codec.clone(), tables.clone())?,
-                memory,
-            );
-            let up_tx = up_tx.clone();
-            let spec = &spec;
-            let seed = cfg.seed;
-            scope.spawn(move || {
-                while let Ok(frame) = drx.recv() {
-                    let round = match wire::decode(&frame) {
-                        Ok(wire::Message::Round { round, .. }) => round,
-                        _ => break, // shutdown, protocol error: stop serving
-                    };
-                    let update = sim_update(seed, id, round, d);
-                    // frame straight out of the session's reusable scratch
-                    let uplink_frame = match session.encode_update(round, &update, spec) {
-                        Ok(report) => session.frame_update(round, &report, 0.0),
-                        Err(e) => wire::encode_update(&Uplink::failure(
-                            id,
-                            round,
-                            format!("{e:#}"),
-                        )),
-                    };
-                    if up_tx.send(uplink_frame).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(up_tx); // the clones owned by client threads keep it open
-
-        let mut bits = 0.0f64;
-        for round in 0..cfg.rounds {
-            let participants = server.select(k);
-            let frame = Arc::new(wire::encode_round(round, &w));
-            for &id in &participants {
-                down_txs[id]
-                    .send(frame.clone())
-                    .map_err(|_| anyhow!("client {id} thread died"))?;
-            }
-            let summary = server.run_round(round, &participants, &up_rx, &spec, &mut w)?;
-            if summary.received == 0 {
-                bail!(
-                    "round {round}: all {} participants missed the {} ms deadline",
-                    participants.len(),
-                    cfg.server.straggler_timeout_ms
-                );
-            }
-            bits = summary.bits_per_client;
-        }
-        for dtx in &down_txs {
-            let _ = dtx.send(Arc::new(wire::encode_shutdown()));
-        }
-        Ok(bits)
-    })?;
-
+/// Fold the end-of-run counters into the stats and assemble the report.
+fn finish_report(
+    cfg: &ExperimentConfig,
+    d: usize,
+    w: Vec<f32>,
+    bits_per_round: f64,
+    mut server: FedServer,
+    tables: &LruTableCache,
+    tstats: TransportStats,
+) -> SimReport {
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
     server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
-    Ok(SimReport {
+    server.stats.set_transport(tstats);
+    SimReport {
         rounds: cfg.rounds,
         clients: cfg.n_clients,
         d,
         w,
         bits_per_round,
         stats: server.stats,
-    })
+    }
+}
+
+/// Drive `cfg.rounds` federated rounds of `cfg.n_clients` simulated clients
+/// at model dimension `d` over the in-process channel transport.
+pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
+    simulate_with(cfg, d, TransportMode::Channel)
+}
+
+/// [`simulate`] with an explicit transport: the per-scheme aggregate
+/// results are bit-exact across modes (see `tests/fedserve_tcp.rs`) — the
+/// transport moves bytes, it never touches numerics.
+pub fn simulate_with(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
+    let SimServer { spec, tables, codec, mut server } = build_server(cfg, d)?;
+    let sessions = build_sessions(cfg, d, &codec, &tables)?;
+    let mut w = vec![0.0f32; d];
+
+    let (bits_per_round, tstats) = match mode {
+        TransportMode::Channel => std::thread::scope(|scope| {
+            let (mut transport, clients) = ChannelTransport::pair(cfg.n_clients);
+            let spec_ref = &spec;
+            let seed = cfg.seed;
+            for (mut ct, mut session) in clients.into_iter().zip(sessions) {
+                scope.spawn(move || sim_client_loop(&mut ct, &mut session, seed, d, spec_ref));
+            }
+            let bits = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
+            Ok::<_, anyhow::Error>((bits, transport.stats()))
+        })?,
+        TransportMode::TcpLoopback => {
+            let listener = TcpListener::bind("127.0.0.1:0").context("binding 127.0.0.1:0")?;
+            let addr = listener.local_addr().context("loopback address")?.to_string();
+            let mut listener = Some(listener);
+            std::thread::scope(|scope| {
+                let spec_ref = &spec;
+                let seed = cfg.seed;
+                for (id, mut session) in sessions.into_iter().enumerate() {
+                    let addr = addr.clone();
+                    scope.spawn(move || {
+                        // a connect failure means the server never came up;
+                        // there is nothing to serve and nothing to report
+                        if let Ok(mut ct) =
+                            TcpClientTransport::connect(&addr, id, LOOPBACK_CONNECT_TIMEOUT)
+                        {
+                            sim_client_loop(&mut ct, &mut session, seed, d, spec_ref);
+                        }
+                    });
+                }
+                let l = listener.take().expect("listener moved in");
+                let accepted =
+                    TcpServerTransport::accept(&l, cfg.n_clients, LOOPBACK_ACCEPT_TIMEOUT);
+                // drop the listener either way: an accept failure must not
+                // strand a backlogged-but-unaccepted client thread
+                drop(l);
+                let mut transport = accepted?;
+                let bits = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
+                Ok::<_, anyhow::Error>((bits, transport.stats()))
+            })?
+        }
+    };
+
+    Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
+}
+
+/// `repro serve --listen`: bind `addr`, accept `cfg.n_clients` remote
+/// clients (each `repro serve --connect` processes, or anything speaking
+/// the wire protocol), run the rounds, report.
+pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimReport> {
+    let SimServer { spec, tables, codec: _, mut server } = build_server(cfg, d)?;
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "fedserve: listening on {} for {} clients",
+        listener.local_addr().context("listen address")?,
+        cfg.n_clients
+    );
+    let accepted = TcpServerTransport::accept(&listener, cfg.n_clients, Duration::from_secs(120));
+    drop(listener);
+    let mut transport = accepted?;
+    let mut w = vec![0.0f32; d];
+    let bits_per_round = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
+    let tstats = transport.stats();
+    Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
+}
+
+/// `repro serve --connect`: one simulated client serving rounds against a
+/// remote parameter server until it sends shutdown. The quantizer tables
+/// are designed locally — LBG is deterministic, so the client's encode and
+/// the server's decode agree bit-exactly across processes.
+pub fn serve_connect(cfg: &ExperimentConfig, d: usize, addr: &str, id: usize) -> Result<()> {
+    let spec = sim_spec(d);
+    let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
+    let mut session = ClientSession::new(id, cfg.build_encoder(d, codec, tables)?, memory);
+    let mut transport = TcpClientTransport::connect(addr, id, Duration::from_secs(60))?;
+    sim_client_loop(&mut transport, &mut session, cfg.seed, d, &spec);
+    eprintln!(
+        "client {id}: served {} rounds, {} B up / {} B down",
+        session.rounds_participated, transport.bytes_out, transport.bytes_in
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -229,6 +387,10 @@ mod tests {
         assert!(rep.stats.cache_hit_rate() > 0.0);
         // the paper grid was prewarmed at server start (ROADMAP item)
         assert!(rep.stats.prewarmed_tables > 0, "no prewarm: {:?}", rep.stats);
+        // transport accounting flowed into the stats
+        assert_eq!(rep.stats.transport.label, "channel");
+        assert!(rep.stats.transport.bytes_in >= rep.stats.total_framed_bytes());
+        assert_eq!(rep.stats.transport.per_client.len(), 4);
     }
 
     #[test]
@@ -267,5 +429,24 @@ mod tests {
         }
         let total: usize = rep.stats.rounds.iter().map(|t| t.received).sum();
         assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn tcp_loopback_runs_and_counts_socket_bytes() {
+        let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 2);
+        cfg.n_clients = 3;
+        cfg.server.straggler_timeout_ms = 30_000;
+        let rep = simulate_with(&cfg, 512, TransportMode::TcpLoopback).unwrap();
+        assert_eq!(rep.stats.rounds.len(), 2);
+        assert!(rep.w_norm() > 0.0);
+        assert_eq!(rep.stats.transport.label, "tcp");
+        assert_eq!(rep.stats.transport.per_client.len(), 3);
+        for (i, &(b_in, b_out)) in rep.stats.transport.per_client.iter().enumerate() {
+            assert!(b_in > 0, "client {i} sent nothing");
+            assert!(b_out > 0, "client {i} received nothing");
+        }
+        // socket truth ≥ per-round framed sums (handshakes also cross it)
+        assert!(rep.stats.transport.bytes_in >= rep.stats.total_framed_bytes());
+        assert_eq!(rep.stats.transport.decode_errors, 0);
     }
 }

@@ -1,0 +1,777 @@
+//! Transport layer between the parameter server and its clients.
+//!
+//! The wire protocol (`fedserve::wire`) made *what* crosses the PS↔client
+//! boundary pure bytes; this module makes *how* they cross it pluggable:
+//!
+//! * [`Transport`] / [`ClientTransport`] — the two endpoint traits: routed
+//!   downlink frames out and framed uplink [`Event`]s in on the server
+//!   side, blocking framed rounds on the client side;
+//! * [`ChannelTransport`] / [`ChannelClient`] — the original in-process
+//!   mpsc pair, refactored behind the trait with zero behavior change;
+//! * [`TcpServerTransport`] / [`TcpClientTransport`] — real sockets:
+//!   one `TcpStream` per client (identified by a `Hello` handshake frame),
+//!   nonblocking deadline-driven reads on the server, per-connection
+//!   [`FrameBuffer`] reassembly driven by the streaming `wire::scan_prefix`.
+//!
+//! Byte counters are measured where the bytes actually move (at the socket
+//! for TCP), so `ServerStats` reports framed-bit totals that were *observed*
+//! on the transport, not inferred from payload sizes. A frame that fails
+//! validation surfaces as [`Event::Garbage`] with the sending connection
+//! attributed when the transport knows it — the server counts it instead of
+//! stalling the round; a corrupt TCP stream is closed because past a bad
+//! magic/length/CRC there is no trustworthy resynchronization point.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::metrics::server::TransportStats;
+
+use super::wire::{self, FrameError, Message, Scan};
+
+/// How long the TCP poll loop sleeps between nonblocking read passes.
+const POLL_INTERVAL: Duration = Duration::from_millis(1);
+/// Socket read chunk size (uplinks and round broadcasts are usually KBs).
+const READ_CHUNK: usize = 64 * 1024;
+/// How long a downlink write may keep retrying a full send buffer before
+/// the client is declared gone. Broadcasts larger than the kernel buffer
+/// make progress only as fast as the peer reads; a peer that stops
+/// reading entirely must not stall the server forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One observation off the server's uplink path.
+#[derive(Debug)]
+pub enum Event {
+    /// A validated frame; `wire_bytes` is its full framed size.
+    Frame { msg: Message, wire_bytes: usize },
+    /// Bytes that failed frame validation (magic/CRC/structure). `client`
+    /// is the sending connection when the transport has one per client.
+    Garbage { client: Option<usize>, error: String, wire_bytes: usize },
+}
+
+/// The server half of a transport: routed downlink frames out, framed
+/// uplink events in, graceful shutdown on close.
+pub trait Transport: Send {
+    /// Deliver `frame` to client `id`. Errors when the client is gone —
+    /// a round cannot proceed if its downlink never left.
+    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()>;
+
+    /// Wait up to `timeout` for the next uplink event. `None` blocks until
+    /// an event arrives; `Some(ZERO)` only drains bytes that already
+    /// arrived (so the server's own parse time never reclassifies timely
+    /// clients as stragglers); `Ok(None)` is a timeout.
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>>;
+
+    /// Graceful shutdown: deliver a shutdown frame to every live client.
+    fn close(&mut self) -> Result<()>;
+
+    /// Measured byte counters — the honest framed-bit accounting.
+    fn stats(&self) -> TransportStats;
+}
+
+/// The client half: blocking receive of server frames, framed sends up.
+pub trait ClientTransport: Send {
+    /// Block for the next server message; `Ok(None)` when the server went
+    /// away without a shutdown frame.
+    fn recv(&mut self) -> Result<Option<Message>>;
+    /// Send one uplink frame.
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------
+// streaming frame reassembly
+// ---------------------------------------------------------------------
+
+/// Reassembles wire frames from arbitrary read fragments: raw bytes in,
+/// whole validated frames out. Consumed prefixes are compacted lazily so
+/// steady-state rounds do not reallocate.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+/// Compact once the dead prefix crosses this many bytes (or the buffer is
+/// fully consumed, which makes compaction free).
+const COMPACT_THRESHOLD: usize = 1 << 16;
+
+impl FrameBuffer {
+    pub fn new() -> FrameBuffer {
+        FrameBuffer::default()
+    }
+
+    /// Append raw transport bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.start > 0 && (self.start == self.buf.len() || self.start >= COMPACT_THRESHOLD) {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes received but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next complete frame. `Ok(None)` means "need more bytes" and
+    /// consumes nothing (safe to call repeatedly); a typed [`FrameError`]
+    /// means the stream is corrupt.
+    pub fn next_frame(&mut self) -> Result<Option<(Message, usize)>, FrameError> {
+        match wire::scan_prefix(&self.buf[self.start..])? {
+            Scan::Incomplete { .. } => Ok(None),
+            Scan::Frame { msg, used } => {
+                self.start += used;
+                Ok(Some((msg, used)))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// in-process channel transport (the original plumbing, behind the trait)
+// ---------------------------------------------------------------------
+
+/// The in-process transport: one mpsc pair per client, downlink frames
+/// shared as `Arc` so a round broadcast is encoded once for all clients.
+pub struct ChannelTransport {
+    down: Vec<Sender<Arc<Vec<u8>>>>,
+    up: Receiver<Vec<u8>>,
+    bytes_in: u64,
+    bytes_out: u64,
+    decode_errors: u64,
+    per_client: Vec<(u64, u64)>,
+}
+
+/// The client half of [`ChannelTransport::pair`].
+pub struct ChannelClient {
+    rx: Receiver<Arc<Vec<u8>>>,
+    tx: Sender<Vec<u8>>,
+}
+
+impl ChannelTransport {
+    /// Build a server endpoint wired to `n` client endpoints.
+    pub fn pair(n: usize) -> (ChannelTransport, Vec<ChannelClient>) {
+        let (up_tx, up_rx) = channel();
+        let mut down = Vec::with_capacity(n);
+        let mut clients = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (dtx, drx) = channel();
+            down.push(dtx);
+            clients.push(ChannelClient { rx: drx, tx: up_tx.clone() });
+        }
+        // the clones owned by the client halves keep the uplink open
+        drop(up_tx);
+        let server = ChannelTransport {
+            down,
+            up: up_rx,
+            bytes_in: 0,
+            bytes_out: 0,
+            decode_errors: 0,
+            per_client: vec![(0, 0); n],
+        };
+        (server, clients)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+        let n = self.down.len();
+        let tx = self.down.get(client).with_context(|| format!("no client {client} (n = {n})"))?;
+        tx.send(frame.clone()).map_err(|_| anyhow!("client {client} is gone"))?;
+        self.bytes_out += frame.len() as u64;
+        self.per_client[client].1 += frame.len() as u64;
+        Ok(())
+    }
+
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        let frame = match timeout {
+            None => match self.up.recv() {
+                Ok(f) => f,
+                Err(_) => bail!("uplink channel closed"),
+            },
+            Some(t) if t.is_zero() => match self.up.try_recv() {
+                Ok(f) => f,
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => bail!("uplink channel closed"),
+            },
+            Some(t) => match self.up.recv_timeout(t) {
+                Ok(f) => f,
+                Err(RecvTimeoutError::Timeout) => return Ok(None),
+                Err(RecvTimeoutError::Disconnected) => bail!("uplink channel closed"),
+            },
+        };
+        self.bytes_in += frame.len() as u64;
+        match wire::decode(&frame) {
+            Ok(msg) => {
+                if let Message::Update(u) = &msg {
+                    if let Some(c) = self.per_client.get_mut(u.client_id) {
+                        c.0 += frame.len() as u64;
+                    }
+                }
+                Ok(Some(Event::Frame { msg, wire_bytes: frame.len() }))
+            }
+            Err(e) => {
+                // the shared uplink channel cannot attribute a frame whose
+                // contents failed validation — the sender id is inside it
+                self.decode_errors += 1;
+                Ok(Some(Event::Garbage {
+                    client: None,
+                    error: format!("{e:#}"),
+                    wire_bytes: frame.len(),
+                }))
+            }
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        let f = Arc::new(wire::encode_shutdown());
+        for (id, tx) in self.down.iter().enumerate() {
+            if tx.send(f.clone()).is_ok() {
+                self.bytes_out += f.len() as u64;
+                self.per_client[id].1 += f.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            label: "channel",
+            bytes_in: self.bytes_in,
+            bytes_out: self.bytes_out,
+            decode_errors: self.decode_errors,
+            per_client: self.per_client.clone(),
+        }
+    }
+}
+
+impl ClientTransport for ChannelClient {
+    fn recv(&mut self) -> Result<Option<Message>> {
+        match self.rx.recv() {
+            // the server hung up without a shutdown frame (early error)
+            Err(_) => Ok(None),
+            Ok(frame) => Ok(Some(wire::decode(&frame).context("bad downlink frame")?)),
+        }
+    }
+
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx.send(frame.to_vec()).map_err(|_| anyhow!("server is gone"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct TcpConn {
+    stream: TcpStream,
+    rx: FrameBuffer,
+    open: bool,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+/// The socket transport: one TCP connection per client, identified by a
+/// `Hello` handshake frame so downlinks can be routed by client id.
+/// Reads are nonblocking and deadline-driven; per-connection byte counters
+/// measure framed traffic at the socket.
+#[derive(Debug)]
+pub struct TcpServerTransport {
+    conns: Vec<TcpConn>,
+    /// round-robin start so one chatty client cannot starve the rest
+    cursor: usize,
+    decode_errors: u64,
+}
+
+impl TcpServerTransport {
+    /// Accept exactly `n` clients off `listener`; each must introduce
+    /// itself with a `Hello` frame naming a unique id in `0..n` before
+    /// `timeout` elapses.
+    pub fn accept(
+        listener: &TcpListener,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<TcpServerTransport> {
+        ensure!(n > 0, "a server transport needs at least one client");
+        let deadline = Instant::now() + timeout;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let mut slots: Vec<Option<TcpConn>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut filled = 0usize;
+        while filled < n {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let (id, conn) = handshake(stream, deadline)
+                        .with_context(|| format!("handshake with {peer}"))?;
+                    ensure!(id < n, "{peer} introduced itself as client {id}, but n = {n}");
+                    ensure!(
+                        slots[id].is_none(),
+                        "duplicate connection for client {id} from {peer}"
+                    );
+                    slots[id] = Some(conn);
+                    filled += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("only {filled} of {n} clients connected before the accept deadline");
+                    }
+                    std::thread::sleep(POLL_INTERVAL);
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+        let conns = slots.into_iter().map(|s| s.expect("filled == n")).collect();
+        Ok(TcpServerTransport { conns, cursor: 0, decode_errors: 0 })
+    }
+}
+
+/// Read the `Hello` frame off a freshly-accepted connection and switch the
+/// stream into the nonblocking mode the poll loop needs.
+fn handshake(stream: TcpStream, deadline: Instant) -> Result<(usize, TcpConn)> {
+    stream.set_nodelay(true).ok();
+    // accepted sockets do not reliably inherit the listener's nonblocking
+    // flag across platforms — pin the handshake to blocking + read timeout
+    stream.set_nonblocking(false).context("handshake blocking mode")?;
+    let mut conn =
+        TcpConn { stream, rx: FrameBuffer::new(), open: true, bytes_in: 0, bytes_out: 0 };
+    let mut chunk = [0u8; 4096];
+    let id = loop {
+        if let Some((msg, _)) = conn.rx.next_frame()? {
+            match msg {
+                Message::Hello { client } => break client,
+                other => bail!("expected a hello frame, got {other:?}"),
+            }
+        }
+        // re-arm with the *current* remaining budget each read, so the
+        // accept deadline bounds the whole handshake — a byte-dribbling
+        // peer cannot re-grant itself the full window per byte (and stall
+        // everyone queued behind this serial accept loop)
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            bail!("handshake timed out");
+        }
+        conn.stream.set_read_timeout(Some(remaining)).context("handshake read timeout")?;
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => bail!("connection closed during handshake"),
+            Ok(k) => {
+                conn.bytes_in += k as u64;
+                conn.rx.extend(&chunk[..k]);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                bail!("handshake timed out")
+            }
+            Err(e) => return Err(e).context("handshake read"),
+        }
+    };
+    conn.stream.set_read_timeout(None).context("clearing read timeout")?;
+    conn.stream.set_nonblocking(true).context("poll nonblocking mode")?;
+    Ok((id, conn))
+}
+
+/// Write one whole frame to a nonblocking stream: loop on `WouldBlock`
+/// (the kernel send buffer fills whenever a broadcast outruns the peer's
+/// reading) with a hard deadline. `std::io::Write::write_all` would error
+/// out on the first `WouldBlock` after an unknown partial write.
+/// Byte accounting happens here so even failed partial writes are counted.
+fn write_frame(conn: &mut TcpConn, frame: &[u8], timeout: Duration) -> std::io::Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut off = 0;
+    while off < frame.len() {
+        match conn.stream.write(&frame[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(ErrorKind::WriteZero, "connection closed"));
+            }
+            Ok(k) => {
+                off += k;
+                conn.bytes_out += k as u64;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        ErrorKind::TimedOut,
+                        "downlink write timed out",
+                    ));
+                }
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+impl Transport for TcpServerTransport {
+    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+        let n = self.conns.len();
+        let conn =
+            self.conns.get_mut(client).with_context(|| format!("no client {client} (n = {n})"))?;
+        ensure!(conn.open, "client {client} disconnected");
+        if let Err(e) = write_frame(conn, frame, WRITE_TIMEOUT) {
+            // a partial downlink is unrecoverable for the peer's framing —
+            // close rather than risk appending the next frame mid-frame
+            conn.open = false;
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            return Err(e).with_context(|| format!("downlink write to client {client}"));
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let n = self.conns.len();
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            // 1. pop a frame already reassembled in some connection buffer
+            for i in 0..n {
+                let c = (self.cursor + i) % n;
+                let conn = &mut self.conns[c];
+                match conn.rx.next_frame() {
+                    Ok(None) => {}
+                    Ok(Some((msg, used))) => {
+                        self.cursor = (c + 1) % n;
+                        return Ok(Some(Event::Frame { msg, wire_bytes: used }));
+                    }
+                    Err(e) => {
+                        // unrecoverable past a framing error: without a
+                        // trustworthy length prefix there is nothing to
+                        // skip by, so the connection is closed
+                        let dropped = conn.rx.pending();
+                        conn.rx = FrameBuffer::new();
+                        conn.open = false;
+                        let _ = conn.stream.shutdown(Shutdown::Both);
+                        self.decode_errors += 1;
+                        self.cursor = (c + 1) % n;
+                        return Ok(Some(Event::Garbage {
+                            client: Some(c),
+                            error: e.to_string(),
+                            wire_bytes: dropped,
+                        }));
+                    }
+                }
+            }
+            // 2. nonblocking read pass over every open connection
+            let mut progressed = false;
+            for conn in self.conns.iter_mut().filter(|c| c.open) {
+                loop {
+                    match conn.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            // peer closed; a partial frame left behind is
+                            // simply lost bytes, not a protocol error
+                            conn.open = false;
+                            break;
+                        }
+                        Ok(k) => {
+                            conn.bytes_in += k as u64;
+                            conn.rx.extend(&chunk[..k]);
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            conn.open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if progressed {
+                continue; // the new bytes may complete a frame
+            }
+            // every connection closed and nothing decodable buffered: no
+            // event can ever arrive. With a deadline the caller's wait is
+            // bounded and a partial round can still complete; without one
+            // an unbounded sleep loop would hang forever — error out (the
+            // channel transport's "uplink channel closed" equivalent).
+            if deadline.is_none() && self.conns.iter().all(|c| !c.open) {
+                bail!("all client connections closed");
+            }
+            match deadline {
+                Some(dl) if Instant::now() >= dl => return Ok(None),
+                _ => std::thread::sleep(POLL_INTERVAL),
+            }
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        let f = wire::encode_shutdown();
+        for conn in self.conns.iter_mut().filter(|c| c.open) {
+            let _ = write_frame(conn, &f, Duration::from_secs(1));
+            // half-close: the client drains the shutdown frame, sees EOF,
+            // and closes its end — no RST on a socket with data in flight
+            let _ = conn.stream.shutdown(Shutdown::Write);
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut t = TransportStats { label: "tcp", ..Default::default() };
+        for conn in &self.conns {
+            t.bytes_in += conn.bytes_in;
+            t.bytes_out += conn.bytes_out;
+            t.per_client.push((conn.bytes_in, conn.bytes_out));
+        }
+        t.decode_errors = self.decode_errors;
+        t
+    }
+}
+
+/// A client's socket endpoint: connects, introduces itself with `Hello`,
+/// then serves blocking framed rounds.
+#[derive(Debug)]
+pub struct TcpClientTransport {
+    stream: TcpStream,
+    rx: FrameBuffer,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl TcpClientTransport {
+    /// Connect to `addr` and identify as `client`. Connection refusals are
+    /// retried until `timeout`, so clients may start before the server
+    /// listens.
+    pub fn connect(addr: &str, client: usize, timeout: Duration) -> Result<TcpClientTransport> {
+        let deadline = Instant::now() + timeout;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connecting to {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        let mut t =
+            TcpClientTransport { stream, rx: FrameBuffer::new(), bytes_in: 0, bytes_out: 0 };
+        t.send(&wire::encode_hello(client))?;
+        Ok(t)
+    }
+}
+
+impl ClientTransport for TcpClientTransport {
+    fn recv(&mut self) -> Result<Option<Message>> {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            if let Some((msg, _)) = self.rx.next_frame()? {
+                return Ok(Some(msg));
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(None), // server closed without shutdown
+                Ok(k) => {
+                    self.bytes_in += k as u64;
+                    self.rx.extend(&chunk[..k]);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("downlink read"),
+            }
+        }
+    }
+
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.stream.write_all(frame).context("uplink write")?;
+        self.bytes_out += frame.len() as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn connect(addr: &str, id: usize) -> TcpClientTransport {
+        TcpClientTransport::connect(addr, id, Duration::from_secs(10)).unwrap()
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_split_frames() {
+        let f1 = wire::encode_round(5, &[1.5f32, -2.0]);
+        let f2 = wire::encode_shutdown();
+        let mut stream = f1.clone();
+        stream.extend_from_slice(&f2);
+        for cut in 0..=stream.len() {
+            let mut fb = FrameBuffer::new();
+            let mut got = 0;
+            fb.extend(&stream[..cut]);
+            while fb.next_frame().unwrap().is_some() {
+                got += 1;
+            }
+            fb.extend(&stream[cut..]);
+            while fb.next_frame().unwrap().is_some() {
+                got += 1;
+            }
+            assert_eq!(got, 2, "cut at {cut}");
+            assert_eq!(fb.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn frame_buffer_incomplete_consumes_nothing() {
+        let f = wire::encode_round(1, &[4.0f32]);
+        let mut fb = FrameBuffer::new();
+        fb.extend(&f[..f.len() - 1]);
+        // polling repeatedly while incomplete is idempotent
+        assert!(fb.next_frame().unwrap().is_none());
+        assert!(fb.next_frame().unwrap().is_none());
+        assert_eq!(fb.pending(), f.len() - 1);
+        fb.extend(&f[f.len() - 1..]);
+        let (msg, used) = fb.next_frame().unwrap().unwrap();
+        assert_eq!(used, f.len());
+        assert!(matches!(msg, Message::Round { round: 1, .. }));
+    }
+
+    #[test]
+    fn frame_buffer_surfaces_typed_corruption() {
+        let mut f = wire::encode_round(1, &[4.0f32; 8]);
+        let n = f.len();
+        f[n - 2] ^= 0x40; // damage the CRC trailer
+        let mut fb = FrameBuffer::new();
+        fb.extend(&f);
+        assert!(matches!(fb.next_frame(), Err(FrameError::BadCrc { .. })));
+    }
+
+    #[test]
+    fn channel_pair_roundtrip_and_accounting() {
+        let (mut server, mut clients) = ChannelTransport::pair(2);
+        let down = Arc::new(wire::encode_round(0, &[1.0f32; 4]));
+        server.send(1, &down).unwrap();
+        match clients[1].recv().unwrap().unwrap() {
+            Message::Round { round: 0, weights } => assert_eq!(weights.len(), 4),
+            other => panic!("wrong downlink: {other:?}"),
+        }
+        // nothing waiting: a zero-duration poll must not block
+        assert!(server.poll(Some(Duration::ZERO)).unwrap().is_none());
+        let up = wire::encode_hello(1);
+        clients[1].send(&up).unwrap();
+        match server.poll(None).unwrap().unwrap() {
+            Event::Frame { msg: Message::Hello { client: 1 }, wire_bytes } => {
+                assert_eq!(wire_bytes, up.len());
+            }
+            other => panic!("wrong uplink: {other:?}"),
+        }
+        let s = server.stats();
+        assert_eq!(s.label, "channel");
+        assert_eq!(s.bytes_out, down.len() as u64);
+        assert_eq!(s.bytes_in, up.len() as u64);
+        assert_eq!(s.per_client.len(), 2);
+        assert_eq!(s.per_client[1].1, down.len() as u64);
+    }
+
+    #[test]
+    fn channel_garbage_is_an_event_not_an_error() {
+        let (mut server, mut clients) = ChannelTransport::pair(1);
+        clients[0].send(b"definitely not a frame").unwrap();
+        match server.poll(Some(Duration::from_millis(200))).unwrap().unwrap() {
+            Event::Garbage { client: None, wire_bytes, .. } => {
+                assert_eq!(wire_bytes, 22);
+            }
+            other => panic!("expected garbage: {other:?}"),
+        }
+        assert_eq!(server.stats().decode_errors, 1);
+    }
+
+    #[test]
+    fn channel_close_delivers_shutdown() {
+        let (mut server, mut clients) = ChannelTransport::pair(2);
+        server.close().unwrap();
+        for c in &mut clients {
+            assert!(matches!(c.recv().unwrap(), Some(Message::Shutdown)));
+        }
+    }
+
+    #[test]
+    fn tcp_loopback_handshake_roundtrip_and_garbage() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|id| {
+                    let addr = addr.clone();
+                    scope.spawn(move || {
+                        let mut t = connect(&addr, id);
+                        // echo one round back as a hello, then obey shutdown
+                        match t.recv().unwrap().unwrap() {
+                            Message::Round { round, .. } => {
+                                if id == 0 {
+                                    t.send(&wire::encode_hello(round)).unwrap();
+                                } else {
+                                    // client 1 sends a corrupt frame
+                                    let mut bad = wire::encode_hello(round);
+                                    let n = bad.len();
+                                    bad[n - 1] ^= 0xff;
+                                    t.send(&bad).unwrap();
+                                }
+                            }
+                            other => panic!("client {id}: wrong downlink {other:?}"),
+                        }
+                        assert!(matches!(t.recv().unwrap(), Some(Message::Shutdown) | None));
+                    })
+                })
+                .collect();
+
+            let mut server =
+                TcpServerTransport::accept(&listener, 2, Duration::from_secs(10)).unwrap();
+            let down = Arc::new(wire::encode_round(7, &[0.5f32; 3]));
+            server.send(0, &down).unwrap();
+            server.send(1, &down).unwrap();
+            let mut ok = 0;
+            let mut bad = 0;
+            for _ in 0..2 {
+                match server.poll(Some(Duration::from_secs(10))).unwrap().unwrap() {
+                    Event::Frame { msg: Message::Hello { client: 7 }, .. } => ok += 1,
+                    Event::Garbage { client: Some(1), .. } => bad += 1,
+                    other => panic!("unexpected event: {other:?}"),
+                }
+            }
+            assert_eq!((ok, bad), (1, 1));
+            let s = server.stats();
+            assert_eq!(s.label, "tcp");
+            assert_eq!(s.decode_errors, 1);
+            assert!(s.bytes_in > 0 && s.bytes_out > 0);
+            assert_eq!(s.per_client.len(), 2);
+            server.close().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn tcp_accept_rejects_out_of_range_and_duplicate_ids() {
+        // id 5 with n = 2 must be refused
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let _t = connect(&addr, 5);
+        });
+        let err = TcpServerTransport::accept(&listener, 2, Duration::from_secs(10)).unwrap_err();
+        assert!(format!("{err:#}").contains("client 5"), "{err:#}");
+        h.join().unwrap();
+
+        // two connections both claiming id 0: the second one is refused
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let _t = connect(&addr, 0);
+                })
+            })
+            .collect();
+        let err = TcpServerTransport::accept(&listener, 2, Duration::from_secs(10)).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate connection for client 0"), "{err:#}");
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+}

@@ -21,6 +21,10 @@
 //! * `Update`   — client u32 | round u64 | train_loss f64 | flags u8
 //!                | [err_len u32 | err utf-8] | RateReport (7 × u64/f64)
 //!                | body_len u32 | encoded compressor payload
+//! * `Hello`    — client u32 (the socket handshake: a connecting client
+//!                introduces itself so the server can route downlinks)
+
+use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
@@ -45,9 +49,16 @@ pub const UPDATE_OVERHEAD: usize = FRAME_OVERHEAD + 4 + 8 + 8 + 1 + 56 + 4;
 /// The server treats error uplinks carrying it as current, never stale.
 pub const ROUND_UNKNOWN: usize = usize::MAX;
 
+/// Largest payload a frame may declare. The CRC only validates a length
+/// prefix once the whole frame has arrived, so a streaming transport must
+/// bound how many bytes it is willing to buffer on the strength of an
+/// unverified header (256 MiB ≈ a 67M-parameter round broadcast).
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 28;
+
 const KIND_ROUND: u8 = 1;
 const KIND_SHUTDOWN: u8 = 2;
 const KIND_UPDATE: u8 = 3;
+const KIND_HELLO: u8 = 4;
 
 /// One decoded wire message.
 #[derive(Debug)]
@@ -58,6 +69,63 @@ pub enum Message {
     Shutdown,
     /// Client → PS: one compressed update.
     Update(Uplink),
+    /// Client → PS: connection handshake naming the sender.
+    Hello { client: usize },
+}
+
+/// Typed frame-validation failure at the transport boundary. A streaming
+/// reader needs to tell *corruption* (drop the connection: past a bad
+/// magic/length/CRC there is no trustworthy resynchronization point) apart
+/// from *incompleteness* (keep the bytes, wait for more) — anyhow strings
+/// cannot carry that distinction, this enum does.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The buffer does not start with the frame magic — desynchronized.
+    BadMagic { got: [u8; 2] },
+    /// Unsupported protocol version.
+    BadVersion { got: u8 },
+    /// The declared payload length exceeds [`MAX_PAYLOAD_BYTES`].
+    Oversized { len: usize },
+    /// Checksum mismatch — at least one byte of the frame is corrupt.
+    BadCrc { got: u32, want: u32 },
+    /// Structurally valid frame of a kind this endpoint does not know.
+    UnknownKind { kind: u8 },
+    /// The frame passed the CRC but its payload failed structural parsing.
+    BadPayload { kind: u8, reason: String },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic { got } => {
+                write!(f, "bad frame magic {:02x}{:02x}", got[0], got[1])
+            }
+            FrameError::BadVersion { got } => write!(f, "unsupported wire version {got}"),
+            FrameError::Oversized { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_PAYLOAD_BYTES} cap")
+            }
+            FrameError::BadCrc { got, want } => {
+                write!(f, "frame checksum mismatch: got {got:08x}, want {want:08x}")
+            }
+            FrameError::UnknownKind { kind } => write!(f, "unknown frame kind {kind}"),
+            FrameError::BadPayload { kind, reason } => {
+                write!(f, "bad payload in kind-{kind} frame: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Outcome of scanning the front of a streaming receive buffer.
+#[derive(Debug)]
+pub enum Scan {
+    /// The buffer holds a valid prefix of a frame; `need` is the total
+    /// byte count required before scanning can progress (a lower bound
+    /// while the header itself is still incomplete).
+    Incomplete { need: usize },
+    /// One whole validated frame, `used` bytes long.
+    Frame { msg: Message, used: usize },
 }
 
 const fn crc_table() -> [u32; 256] {
@@ -113,6 +181,11 @@ pub fn encode_round(round: usize, weights: &[f32]) -> Vec<u8> {
 /// Encode a PS → client shutdown.
 pub fn encode_shutdown() -> Vec<u8> {
     frame(KIND_SHUTDOWN, &[])
+}
+
+/// Encode a client → PS connection handshake.
+pub fn encode_hello(client: usize) -> Vec<u8> {
+    frame(KIND_HELLO, &(client as u32).to_le_bytes())
 }
 
 /// Encode a client → PS update from its parts. `payload` is borrowed —
@@ -257,42 +330,76 @@ fn parse_update(payload: &[u8]) -> Result<Message> {
     Ok(Message::Update(Uplink { client_id, round, payload: body, report, train_loss, error }))
 }
 
-/// Decode one frame from the front of `buf`; returns the message and the
-/// number of bytes consumed (streaming transports feed a growing buffer).
-pub fn decode_prefix(buf: &[u8]) -> Result<(Message, usize)> {
-    if buf.len() < FRAME_OVERHEAD {
-        bail!("short frame: {} bytes", buf.len());
+fn parse_hello(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let client = r.u32()? as usize;
+    r.done()?;
+    Ok(Message::Hello { client })
+}
+
+/// Scan the front of a streaming receive buffer: either a whole validated
+/// frame, a request for more bytes, or a typed [`FrameError`]. Corruption
+/// is detected as early as the bytes allow (a wrong magic byte fails on
+/// the first read, not after a full bogus frame has been buffered).
+pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
+    if !buf.is_empty() && buf[0] != MAGIC[0] {
+        return Err(FrameError::BadMagic { got: [buf[0], buf.get(1).copied().unwrap_or(0)] });
     }
-    if buf[0..2] != MAGIC {
-        bail!("bad frame magic {:02x}{:02x}", buf[0], buf[1]);
+    if buf.len() >= 2 && buf[1] != MAGIC[1] {
+        return Err(FrameError::BadMagic { got: [buf[0], buf[1]] });
     }
-    if buf[2] != VERSION {
-        bail!("unsupported wire version {}", buf[2]);
+    if buf.len() >= 3 && buf[2] != VERSION {
+        return Err(FrameError::BadVersion { got: buf[2] });
+    }
+    if buf.len() < HEADER_BYTES {
+        return Ok(Scan::Incomplete { need: FRAME_OVERHEAD });
     }
     let kind = buf[3];
     let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-    let total = FRAME_OVERHEAD.checked_add(len).context("frame length overflow")?;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(FrameError::Oversized { len });
+    }
+    let total = FRAME_OVERHEAD + len;
     if buf.len() < total {
-        bail!("truncated frame: have {} of {} bytes", buf.len(), total);
+        return Ok(Scan::Incomplete { need: total });
     }
     let crc_got = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
     let crc_want = crc32(&buf[2..HEADER_BYTES + len]);
     if crc_got != crc_want {
-        bail!("frame checksum mismatch: got {crc_got:08x}, want {crc_want:08x}");
+        return Err(FrameError::BadCrc { got: crc_got, want: crc_want });
     }
     let payload = &buf[HEADER_BYTES..HEADER_BYTES + len];
-    let msg = match kind {
-        KIND_ROUND => parse_round(payload)?,
+    let parsed = match kind {
+        KIND_ROUND => parse_round(payload),
         KIND_SHUTDOWN => {
-            if !payload.is_empty() {
-                bail!("shutdown frame with {} payload bytes", payload.len());
+            if payload.is_empty() {
+                Ok(Message::Shutdown)
+            } else {
+                Err(anyhow::anyhow!("shutdown frame with {} payload bytes", payload.len()))
             }
-            Message::Shutdown
         }
-        KIND_UPDATE => parse_update(payload)?,
-        k => bail!("unknown frame kind {k}"),
+        KIND_UPDATE => parse_update(payload),
+        KIND_HELLO => parse_hello(payload),
+        k => return Err(FrameError::UnknownKind { kind: k }),
     };
-    Ok((msg, total))
+    match parsed {
+        Ok(msg) => Ok(Scan::Frame { msg, used: total }),
+        Err(e) => Err(FrameError::BadPayload { kind, reason: format!("{e:#}") }),
+    }
+}
+
+/// Decode one frame from the front of `buf`; returns the message and the
+/// number of bytes consumed (streaming transports feed a growing buffer).
+/// An incomplete buffer is an error here — use [`scan_prefix`] to tell
+/// "wait for more bytes" apart from corruption.
+pub fn decode_prefix(buf: &[u8]) -> Result<(Message, usize)> {
+    match scan_prefix(buf) {
+        Ok(Scan::Frame { msg, used }) => Ok((msg, used)),
+        Ok(Scan::Incomplete { need }) => {
+            bail!("truncated frame: have {} of {} bytes", buf.len(), need)
+        }
+        Err(e) => Err(e.into()),
+    }
 }
 
 /// Decode a buffer holding exactly one frame.
@@ -443,6 +550,55 @@ mod tests {
         let crc = crc32(&f[2..]);
         f.extend_from_slice(&crc.to_le_bytes());
         assert!(decode(&f).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let f = encode_hello(42);
+        match decode(&f).unwrap() {
+            Message::Hello { client } => assert_eq!(client, 42),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scan_prefix_distinguishes_incomplete_from_corrupt() {
+        let f = encode_round(3, &[1.0, 2.0]);
+        // every proper prefix is Incomplete, never an error
+        for cut in 0..f.len() {
+            match scan_prefix(&f[..cut]).unwrap() {
+                Scan::Incomplete { need } => {
+                    assert!(need > cut, "cut {cut}: need {need} already satisfied");
+                    assert!(need <= f.len());
+                }
+                Scan::Frame { .. } => panic!("frame decoded from {cut}-byte prefix"),
+            }
+        }
+        assert!(matches!(scan_prefix(&f).unwrap(), Scan::Frame { used, .. } if used == f.len()));
+
+        // a flipped payload byte is a typed CRC error
+        let mut bad = f.clone();
+        bad[HEADER_BYTES + 1] ^= 0x20;
+        assert!(matches!(scan_prefix(&bad), Err(FrameError::BadCrc { .. })));
+
+        // a wrong magic byte fails on the very first byte
+        let mut bad = f.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(scan_prefix(&bad[..1]), Err(FrameError::BadMagic { .. })));
+
+        // a wrong version fails as soon as it is visible
+        let mut bad = f;
+        bad[2] = 99;
+        assert!(matches!(scan_prefix(&bad[..3]), Err(FrameError::BadVersion { got: 99 })));
+    }
+
+    #[test]
+    fn scan_prefix_caps_the_declared_length() {
+        // a corrupt length prefix must not convince a streaming reader to
+        // buffer gigabytes before the CRC can reject the frame
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND];
+        f.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(scan_prefix(&f), Err(FrameError::Oversized { .. })));
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //!   fig1 | fig2 | fig3 | fig4 | fig5a | fig5b   figure data (CSV)
 //!   train                              one configurable FL run
 //!   serve                              fedserve: N simulated clients through
-//!                                      the wire format (no PJRT needed)
+//!                                      the wire format (no PJRT needed), over
+//!                                      channels, --tcp-loopback sockets, or
+//!                                      split --listen / --connect processes
 //!   quantizer-table                    dump LBG designs for a shape grid
 //!   smoke                              runtime sanity (PJRT + artifacts)
 //!
@@ -156,7 +158,11 @@ fn main() -> Result<()> {
         }
         "serve" => {
             // fedserve end-to-end without PJRT: simulated clients, real wire
-            // frames, sharded aggregation, LRU table cache
+            // frames, sharded aggregation, LRU table cache. Transport modes:
+            //   (default)       in-process channels
+            //   --tcp-loopback  k client threads against 127.0.0.1:0
+            //   --listen ADDR   this process is the PS, clients are remote
+            //   --connect ADDR  this process is one client (--id N)
             let clients = args.usize_or("clients", 8)?;
             let rounds = args.usize_or("rounds", 5)?;
             let d = args.usize_or("dim", 8192)?;
@@ -179,8 +185,33 @@ fn main() -> Result<()> {
             if sample > 0 {
                 cfg.server.sampled_clients = Some(sample);
             }
+            let listen = args.str_opt("listen").map(String::from);
+            let connect = args.str_opt("connect").map(String::from);
+            let tcp_loopback = args.bool("tcp-loopback");
+            let client_id = args.usize_or("id", 0)?;
+            anyhow::ensure!(
+                usize::from(listen.is_some())
+                    + usize::from(connect.is_some())
+                    + usize::from(tcp_loopback)
+                    <= 1,
+                "--listen, --connect, and --tcp-loopback are mutually exclusive"
+            );
             eprintln!("config: {}", cfg.to_json());
-            let report = m22::fedserve::simulate(&cfg, d)?;
+            if let Some(addr) = connect {
+                anyhow::ensure!(client_id < clients, "--id {client_id} needs --clients > it");
+                m22::fedserve::sim::serve_connect(&cfg, d, &addr, client_id)?;
+                return args.finish();
+            }
+            let report = if let Some(addr) = listen {
+                m22::fedserve::sim::serve_listen(&cfg, d, &addr)?
+            } else {
+                let mode = if tcp_loopback {
+                    m22::fedserve::TransportMode::TcpLoopback
+                } else {
+                    m22::fedserve::TransportMode::Channel
+                };
+                m22::fedserve::simulate_with(&cfg, d, mode)?
+            };
             eprintln!("{}", report.stats.summary());
             eprintln!(
                 "final |w| = {:.6}  bits/round/client = {:.0}  \
@@ -221,6 +252,8 @@ fn main() -> Result<()> {
                  scheme strings: a name (m22-gennorm, tinyscript, fp8, sketch, none) or\n\
                  name:key=val,... (keys m, rq, k, min_fit, depth, seed), e.g. m22-gennorm:m=2,rq=3\n\
                  serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory --no-prewarm\n\
+                        --tcp-loopback (real sockets over 127.0.0.1 in one process)\n\
+                        --listen ADDR (be the PS) | --connect ADDR --id N (be one client)\n\
                  see DESIGN.md for the per-experiment index"
             );
             return Ok(());

@@ -14,8 +14,26 @@ pub struct RoundTiming {
     pub received: usize,
     pub dropped: usize,
     pub stale: usize,
+    /// uplinks rejected at frame validation (CRC / framing / structure)
+    pub decode_errors: usize,
     /// wire bytes received this round, framing included
     pub framed_bytes: u64,
+}
+
+/// Byte counters measured at the transport: per-connection at the socket
+/// for TCP, per channel frame for the in-process pair. This is the honest
+/// framed-bit accounting — observed where the bytes move, not inferred
+/// from payload sizes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// transport implementation ("channel", "tcp"; "" when unset)
+    pub label: &'static str,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// frames the transport rejected at decode
+    pub decode_errors: u64,
+    /// per-client `(bytes_in, bytes_out)`, indexed by client id
+    pub per_client: Vec<(u64, u64)>,
 }
 
 /// Accumulated server statistics for one run.
@@ -28,6 +46,8 @@ pub struct ServerStats {
     pub prewarmed_tables: u64,
     /// lookups served by a prewarmed table
     pub prewarm_hits: u64,
+    /// transport-measured byte totals (socket truth for TCP runs)
+    pub transport: TransportStats,
 }
 
 impl ServerStats {
@@ -45,6 +65,11 @@ impl ServerStats {
     pub fn set_prewarm(&mut self, tables: u64, hits: u64) {
         self.prewarmed_tables = tables;
         self.prewarm_hits = hits;
+    }
+
+    /// Record the transport byte counters (called once, at end of run).
+    pub fn set_transport(&mut self, t: TransportStats) {
+        self.transport = t;
     }
 
     /// Quantizer-table cache hit rate over the whole run (0 if untouched).
@@ -79,21 +104,26 @@ impl ServerStats {
         self.rounds.iter().map(|t| t.framed_bytes).sum()
     }
 
+    pub fn total_decode_errors(&self) -> usize {
+        self.rounds.iter().map(|t| t.decode_errors).sum()
+    }
+
     /// Per-round CSV (milliseconds for the phase timings).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes\n",
+            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors\n",
         );
         for t in &self.rounds {
             s.push_str(&format!(
-                "{},{:.3},{:.3},{},{},{},{}\n",
+                "{},{:.3},{:.3},{},{},{},{},{}\n",
                 t.round,
                 t.collect_ns as f64 / 1e6,
                 t.reduce_ns as f64 / 1e6,
                 t.received,
                 t.dropped,
                 t.stale,
-                t.framed_bytes
+                t.framed_bytes,
+                t.decode_errors
             ));
         }
         s
@@ -126,6 +156,15 @@ impl ServerStats {
                 100.0 * self.prewarm_hit_rate()
             ));
         }
+        if !self.transport.label.is_empty() {
+            s.push_str(&format!(
+                " | wire[{}]: {} B in / {} B out, {} decode errors",
+                self.transport.label,
+                self.transport.bytes_in,
+                self.transport.bytes_out,
+                self.transport.decode_errors
+            ));
+        }
         s
     }
 }
@@ -142,6 +181,7 @@ mod tests {
             received,
             dropped,
             stale: 0,
+            decode_errors: 0,
             framed_bytes: 1000,
         }
     }
@@ -188,7 +228,8 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,collect_ms,reduce_ms"));
-        assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000"));
+        assert!(lines[0].ends_with("framed_bytes,decode_errors"));
+        assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000,0"));
     }
 
     #[test]
@@ -198,5 +239,25 @@ mod tests {
         s.set_cache(3, 1);
         let sum = s.summary();
         assert!(sum.contains("75.0% hits"), "{sum}");
+        // no transport recorded: no wire section
+        assert!(!sum.contains("wire["), "{sum}");
+    }
+
+    #[test]
+    fn transport_counters_reach_the_summary() {
+        let mut s = ServerStats::default();
+        let mut t = timing(0, 2, 0);
+        t.decode_errors = 3;
+        s.push(t);
+        assert_eq!(s.total_decode_errors(), 3);
+        s.set_transport(TransportStats {
+            label: "tcp",
+            bytes_in: 4096,
+            bytes_out: 1024,
+            decode_errors: 3,
+            per_client: vec![(2048, 512), (2048, 512)],
+        });
+        let sum = s.summary();
+        assert!(sum.contains("wire[tcp]: 4096 B in / 1024 B out, 3 decode errors"), "{sum}");
     }
 }

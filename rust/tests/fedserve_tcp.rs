@@ -1,0 +1,387 @@
+//! Integration: fedserve over real loopback sockets.
+//!
+//! The bandwidth-constrained channel is the paper's whole premise, so the
+//! framed-bit accounting has to survive a genuine network boundary:
+//! * channel-vs-TCP **bit parity** for every registry scheme (the transport
+//!   moves bytes, it never touches numerics) — the same oracle style as
+//!   `tests/fedserve_parity.rs`, with the channel run as the reference;
+//! * k-of-n selection with a deliberately stalled client hitting the
+//!   straggler deadline over a real socket;
+//! * clean shutdown with no leaked threads (every test runs under
+//!   `std::thread::scope`, which cannot return while a thread lives);
+//! * fault injection at the wire/transport boundary: frames split at
+//!   arbitrary byte offsets, dribbled one byte at a time, and corrupted —
+//!   reassembly resumes across splits, corruption is a typed error.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use m22::compress::{encode_once, NoCompression};
+use m22::config::{ExperimentConfig, Scheme, ServerConfig};
+use m22::coordinator::Uplink;
+use m22::fedserve::sim::{sim_spec, simulate_with, TransportMode};
+use m22::fedserve::transport::{
+    ClientTransport, Event, FrameBuffer, TcpClientTransport, TcpServerTransport, Transport,
+};
+use m22::fedserve::wire::{self, FrameError};
+use m22::fedserve::FedServer;
+use m22::quantizer::Family;
+
+const NET_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+fn base_cfg(scheme: Scheme, clients: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new("sim", scheme, 2, rounds);
+    cfg.n_clients = clients;
+    // generous deadline: irrelevant when every client answers, but keeps a
+    // wedged run from hanging CI instead of failing
+    cfg.server.straggler_timeout_ms = 30_000;
+    cfg
+}
+
+#[test]
+fn tcp_loopback_bit_parity_with_channel_for_every_scheme() {
+    let d = 1500;
+    for scheme in [
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ] {
+        let mut cfg = base_cfg(scheme, 4, 3);
+        cfg.server.shards = 3;
+        let chan = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+        let tcp = simulate_with(&cfg, d, TransportMode::TcpLoopback).unwrap();
+        assert_bitwise_eq(&chan.w, &tcp.w, &format!("{scheme:?}"));
+        assert!(chan.w.iter().any(|&x| x != 0.0), "{scheme:?}: run did nothing");
+        // framed accounting is now measured at the socket
+        assert_eq!(tcp.stats.transport.label, "tcp");
+        assert_eq!(chan.stats.transport.label, "channel");
+        assert!(
+            tcp.stats.transport.bytes_in >= tcp.stats.total_framed_bytes(),
+            "{scheme:?}: socket counted {} B in < {} framed B",
+            tcp.stats.transport.bytes_in,
+            tcp.stats.total_framed_bytes()
+        );
+        assert_eq!(tcp.stats.transport.decode_errors, 0, "{scheme:?}");
+        assert_eq!(tcp.stats.total_dropped(), 0, "{scheme:?}");
+    }
+}
+
+#[test]
+fn tcp_loopback_parity_with_memory_and_partial_participation() {
+    let d = 1024;
+    let mut cfg = base_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 }, 6, 4);
+    cfg.memory = true;
+    cfg.memory_decay = 0.5;
+    cfg.server.sampled_clients = Some(3);
+    cfg.server.shards = 8;
+    let chan = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+    let tcp = simulate_with(&cfg, d, TransportMode::TcpLoopback).unwrap();
+    assert_bitwise_eq(&chan.w, &tcp.w, "memory + k-of-n");
+    for t in &tcp.stats.rounds {
+        assert_eq!(t.received, 3);
+        assert_eq!(t.dropped, 0);
+    }
+}
+
+#[test]
+fn tcp_straggler_hits_the_deadline_and_the_round_survives() {
+    let d = 256;
+    let spec = sim_spec(d);
+    let n = 4;
+    let rounds = 2;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        // k-of-n selection: clients 0..=2 are sampled every round (client 3
+        // stays connected but unsampled). Clients 0 and 1 answer; client 2
+        // reads its downlinks but never uplinks — the deliberate straggler.
+        for id in 0..n {
+            let addr = addr.clone();
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut t = TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap();
+                loop {
+                    match t.recv() {
+                        Ok(Some(wire::Message::Round { round, .. })) => {
+                            if id == 2 {
+                                continue; // stall: read rounds, answer none
+                            }
+                            let g = vec![(id + 1) as f32; d];
+                            let (payload, _, report) =
+                                encode_once(&NoCompression, &g, spec).unwrap();
+                            let up = Uplink {
+                                client_id: id,
+                                round,
+                                payload,
+                                report,
+                                train_loss: 0.0,
+                                error: None,
+                            };
+                            t.send(&wire::encode_update(&up)).unwrap();
+                        }
+                        // shutdown frame or server-close: either releases us
+                        _ => return,
+                    }
+                }
+            });
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
+        let cfg = ServerConfig { straggler_timeout_ms: 400, ..Default::default() };
+        let mut server = FedServer::new(cfg, n, 1, Box::new(NoCompression));
+        let mut w = vec![0.0f32; d];
+        for round in 0..rounds {
+            let s = server.run_round(round, &[0, 1, 2], &mut transport, &spec, &mut w).unwrap();
+            assert_eq!(s.received, 2, "round {round}");
+            assert_eq!(s.dropped, 1, "round {round}");
+            assert_eq!(s.decode_errors, 0, "round {round}");
+        }
+        assert_eq!(server.sessions[2].dropped, rounds);
+        assert_eq!(server.sessions[2].participated, 0);
+        assert_eq!(server.sessions[0].participated, rounds);
+        assert_eq!(server.sessions[1].participated, rounds);
+        // the unsampled client was never selected, never dropped
+        assert_eq!(server.sessions[3].participated, 0);
+        assert_eq!(server.sessions[3].dropped, 0);
+        // graceful shutdown releases the straggler too; the scope below
+        // joins every client thread — a leak would hang, not pass
+        transport.close().unwrap();
+    });
+}
+
+#[test]
+fn tcp_malformed_uplink_is_counted_per_client_and_round_completes() {
+    let d = 128;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        for id in 0..2 {
+            let addr = addr.clone();
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut t = TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap();
+                let mut first = true;
+                loop {
+                    match t.recv() {
+                        Ok(Some(wire::Message::Round { round, .. })) => {
+                            let g = vec![(id + 1) as f32; d];
+                            let (payload, _, report) =
+                                encode_once(&NoCompression, &g, spec).unwrap();
+                            let up = Uplink {
+                                client_id: id,
+                                round,
+                                payload,
+                                report,
+                                train_loss: 0.0,
+                                error: None,
+                            };
+                            let mut f = wire::encode_update(&up);
+                            if id == 0 && first {
+                                // a corrupt uplink: valid prefix, one
+                                // flipped byte mid-frame
+                                let n = f.len();
+                                f[n / 2] ^= 0x01;
+                            }
+                            first = false;
+                            if t.send(&f).is_err() {
+                                return; // the server dropped this connection
+                            }
+                        }
+                        // shutdown frame, or the server closed our socket
+                        _ => return,
+                    }
+                }
+            });
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, 2, NET_TIMEOUT).unwrap();
+        let cfg = ServerConfig { straggler_timeout_ms: 10_000, ..Default::default() };
+        let mut server = FedServer::new(cfg, 2, 1, Box::new(NoCompression));
+        let mut w = vec![0.0f32; d];
+        let s = server.run_round(0, &[0, 1], &mut transport, &spec, &mut w).unwrap();
+        // the corrupt sender is attributed, counted, and not waited for —
+        // the round completes on client 1 alone, well before the deadline
+        assert_eq!(s.decode_errors, 1);
+        assert_eq!(s.received, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(server.sessions[0].decode_errors, 1);
+        assert_eq!(server.sessions[1].decode_errors, 0);
+        assert_eq!(w, vec![-2.0f32; d]); // only client 1's update landed
+        assert_eq!(transport.stats().decode_errors, 1);
+        // the corrupt client's connection is gone, but the run survives:
+        // the next round counts its failed downlink as a drop and carries
+        // on with the healthy client
+        let s1 = server.run_round(1, &[0, 1], &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s1.received, 1);
+        assert_eq!(s1.dropped, 1);
+        assert_eq!(s1.decode_errors, 0);
+        assert_eq!(w, vec![-4.0f32; d]);
+        assert_eq!(server.sessions[0].dropped, 2);
+        transport.close().unwrap();
+    });
+}
+
+#[test]
+fn tcp_shutdown_is_clean_across_back_to_back_runs() {
+    // two consecutive loopback runs: the first one's threads, sockets, and
+    // port must be fully released for the second to pass (simulate_with
+    // joins its client threads via thread::scope before returning)
+    let mut cfg = base_cfg(Scheme::TopKUniform, 4, 2);
+    cfg.server.shards = 2;
+    let a = simulate_with(&cfg, 512, TransportMode::TcpLoopback).unwrap();
+    let b = simulate_with(&cfg, 512, TransportMode::TcpLoopback).unwrap();
+    assert_bitwise_eq(&a.w, &b.w, "repeat run");
+    assert_eq!(a.stats.transport.bytes_in, b.stats.transport.bytes_in);
+}
+
+// ---------------------------------------------------------------------
+// fault injection at the wire/transport boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn reassembly_resumes_across_every_split_point() {
+    let f1 = wire::encode_round(7, &[1.0f32, -2.5, f32::NAN, 0.0]);
+    let f2 = wire::encode_update(&Uplink {
+        client_id: 3,
+        round: 7,
+        payload: vec![9u8; 37],
+        report: Default::default(),
+        train_loss: 0.25,
+        error: None,
+    });
+    let mut stream = f1.clone();
+    stream.extend_from_slice(&f2);
+    for cut in 0..=stream.len() {
+        let mut fb = FrameBuffer::new();
+        let mut got = Vec::new();
+        fb.extend(&stream[..cut]);
+        while let Some((m, _)) = fb.next_frame().unwrap() {
+            got.push(m);
+        }
+        fb.extend(&stream[cut..]);
+        while let Some((m, _)) = fb.next_frame().unwrap() {
+            got.push(m);
+        }
+        assert_eq!(got.len(), 2, "cut at {cut}");
+        assert!(matches!(got[0], wire::Message::Round { round: 7, .. }), "cut at {cut}");
+        match &got[1] {
+            wire::Message::Update(u) => assert_eq!(u.payload, vec![9u8; 37], "cut at {cut}"),
+            other => panic!("cut at {cut}: wrong second frame {other:?}"),
+        }
+        assert_eq!(fb.pending(), 0, "cut at {cut}");
+    }
+}
+
+#[test]
+fn reassembly_survives_duplicated_partial_reads() {
+    // a transport that delivers one byte per read, polling after every
+    // push: incomplete polls must consume nothing and stay repeatable
+    let f = wire::encode_round(3, &[0.25f32; 64]);
+    let mut fb = FrameBuffer::new();
+    for &b in &f[..f.len() - 1] {
+        fb.extend(&[b]);
+        assert!(fb.next_frame().unwrap().is_none());
+        assert!(fb.next_frame().unwrap().is_none()); // double-poll: idempotent
+    }
+    fb.extend(&f[f.len() - 1..]);
+    let (msg, used) = fb.next_frame().unwrap().unwrap();
+    assert_eq!(used, f.len());
+    assert!(matches!(msg, wire::Message::Round { round: 3, .. }));
+}
+
+#[test]
+fn one_flipped_payload_byte_is_a_typed_crc_error() {
+    let f = wire::encode_round(1, &[4.0f32; 16]);
+    for at in wire::HEADER_BYTES..f.len() {
+        let mut bad = f.clone();
+        bad[at] ^= 0x10;
+        let mut fb = FrameBuffer::new();
+        fb.extend(&bad);
+        match fb.next_frame() {
+            Err(FrameError::BadCrc { got, want }) => assert_ne!(got, want, "byte {at}"),
+            other => panic!("byte {at}: expected BadCrc, got {other:?}"),
+        }
+    }
+    // header damage is typed too, and caught before the frame completes
+    let mut bad = f.clone();
+    bad[0] ^= 0xff;
+    let mut fb = FrameBuffer::new();
+    fb.extend(&bad[..1]);
+    assert!(matches!(fb.next_frame(), Err(FrameError::BadMagic { .. })));
+    let mut bad = f;
+    bad[2] = 200;
+    let mut fb = FrameBuffer::new();
+    fb.extend(&bad[..3]);
+    assert!(matches!(fb.next_frame(), Err(FrameError::BadVersion { got: 200 })));
+}
+
+#[test]
+fn transport_shim_split_duplicate_and_flip_against_a_live_server() {
+    // end-to-end shim: a raw TCP client that (a) splits its handshake and
+    // uplink frames at awkward offsets with pauses between fragments, and
+    // (b) then sends a flipped-byte frame — the server reassembles (a)
+    // and surfaces (b) as a counted Garbage event
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            let hello = wire::encode_hello(0);
+            // dribble the handshake: 1 byte, pause, the rest
+            s.write_all(&hello[..1]).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            s.write_all(&hello[1..]).unwrap();
+            // a valid frame split into three fragments with pauses
+            let good = wire::encode_hello(777);
+            for chunk in [&good[..3], &good[3..7], &good[7..]] {
+                s.write_all(chunk).unwrap();
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            // then a flipped byte inside a second frame
+            let mut bad = wire::encode_hello(888);
+            bad[9] ^= 0x40;
+            s.write_all(&bad).unwrap();
+            // hold the socket open until the server has seen everything
+            std::thread::sleep(Duration::from_millis(200));
+        });
+
+        let mut transport = TcpServerTransport::accept(&listener, 1, NET_TIMEOUT).unwrap();
+        match transport.poll(Some(NET_TIMEOUT)).unwrap().unwrap() {
+            Event::Frame { msg: wire::Message::Hello { client: 777 }, .. } => {}
+            other => panic!("expected the split frame first, got {other:?}"),
+        }
+        match transport.poll(Some(NET_TIMEOUT)).unwrap().unwrap() {
+            Event::Garbage { client: Some(0), error, .. } => {
+                assert!(error.contains("checksum"), "{error}");
+            }
+            other => panic!("expected garbage second, got {other:?}"),
+        }
+        assert_eq!(transport.stats().decode_errors, 1);
+    });
+}
+
+#[test]
+fn loopback_client_connect_requires_a_listening_server_eventually() {
+    // connect() retries, so a client may race ahead of the listener — but
+    // a server that never appears is a clean error, not a hang
+    let patience = Duration::from_millis(120);
+    let err = TcpClientTransport::connect("127.0.0.1:1", 0, patience).unwrap_err();
+    assert!(format!("{err:#}").contains("connecting to 127.0.0.1:1"), "{err:#}");
+}
