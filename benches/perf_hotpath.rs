@@ -1,6 +1,12 @@
 //! Perf benches: every L3 hot path + the PJRT execution boundary.
 //! `cargo bench --bench perf_hotpath` — the numbers behind
 //! EXPERIMENTS.md §Perf (before/after table).
+//!
+//! CI mode (the `bench-smoke` lane): `BENCH_QUICK=1` switches every
+//! bencher to the quick sampling profile and `BENCH_JSON=path` writes the
+//! machine-readable `BENCH_ci.json` artifact that
+//! `python/tools/fill_experiments.py` folds into the EXPERIMENTS.md
+//! wall-clock cells.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -10,13 +16,15 @@ use m22::compress::m22::{M22, M22Config};
 use m22::compress::rle::{encode_positions, position_bits};
 use m22::compress::topk::topk;
 use m22::compress::{encode_once, BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder};
+use m22::config::{ExperimentConfig, Scheme};
 use m22::fedserve::aggregate::{accumulate_sharded, aggregate_serial, aggregate_sharded};
 use m22::fedserve::sim::sim_spec;
+use m22::fedserve::{simulate_with, TransportMode};
 use m22::quantizer::{design, Family, QuantizerTables};
 use m22::stats::fitting::Moments;
 use m22::stats::{Distribution, GenNorm};
 use m22::train::Manifest;
-use m22::util::bench::Bencher;
+use m22::util::bench::{quick_mode, BenchLog, Bencher};
 use m22::util::rng::Rng;
 
 fn grad(d: usize, seed: u64) -> Vec<f32> {
@@ -26,28 +34,32 @@ fn grad(d: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
+    let mut log = BenchLog::new();
+
     println!("== L3 hot paths (VGG-S-sized gradient d = 174314) ==");
     let d = 174_314usize;
     let g = grad(d, 1);
     let k = (0.6 * d as f64) as usize;
 
-    let b = Bencher::default().throughput(d as f64);
-    b.run("topk quickselect 0.6d", || topk(&g, k).1.len());
+    let b = Bencher::from_env().throughput(d as f64);
+    log.push(b.run("topk quickselect 0.6d", || topk(&g, k).1.len()));
 
     let (sparse, positions) = topk(&g, k);
-    let b = Bencher::default().throughput(k as f64);
-    b.run("rle gap-encode positions", || encode_positions(&positions).len());
-    b.run("rle position_bits (analytic)", || position_bits(&positions));
+    let b = Bencher::from_env().throughput(k as f64);
+    log.push(b.run("rle gap-encode positions", || encode_positions(&positions).len()));
+    log.push(b.run("rle position_bits (analytic)", || position_bits(&positions)));
 
     let idx: Vec<u32> = (0..k as u32).map(|i| i % 8).collect();
-    b.run("bitpack 3-bit indices", || pack_indices(&idx, 3).len());
+    log.push(b.run("bitpack 3-bit indices", || pack_indices(&idx, 3).len()));
 
-    let b1 = Bencher::default().throughput(d as f64);
-    b1.run("moments (rust) full grad", || Moments::from_nonzeros(&sparse).unwrap());
+    let b1 = Bencher::from_env().throughput(d as f64);
+    log.push(b1.run("moments (rust) full grad", || Moments::from_nonzeros(&sparse).unwrap()));
 
     let q = design(&GenNorm::standardized(0.8), 2.0, 8);
     let (t, c) = q.padded_f32(16);
-    b1.run("cpu quantize full grad", || CpuCodec.quantize(&sparse, &t, &c).unwrap().0.len());
+    log.push(
+        b1.run("cpu quantize full grad", || CpuCodec.quantize(&sparse, &t, &c).unwrap().0.len()),
+    );
 
     // --- the PS hot loop: decode + eq.-(7) reduce, before vs after --------
     //
@@ -72,29 +84,29 @@ fn main() {
                 .map(|i| encode_once(&comp, &grad(d, 100 + i as u64), &spec).unwrap().0)
                 .collect();
             let slices: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-            let bps = Bencher::default().throughput((n_clients * d) as f64);
-            bps.run(&format!("ps dense decode+reduce  (n={n_clients}, 4 shards)"), || {
+            let bps = Bencher::from_env().throughput((n_clients * d) as f64);
+            log.push(bps.run(&format!("ps dense decode+reduce  (n={n_clients}, 4 shards)"), || {
                 let decoded: Vec<Vec<f32>> = slices
                     .iter()
                     .map(|p| comp.decode_dense(p, &spec).unwrap())
                     .collect();
                 aggregate_sharded(&decoded, d, 4).len()
-            });
+            }));
             let mut acc = vec![0.0f32; d];
-            bps.run(&format!("ps fused  decode+reduce (n={n_clients}, 4 shards)"), || {
+            log.push(bps.run(&format!("ps fused  decode+reduce (n={n_clients}, 4 shards)"), || {
                 acc.clear();
                 acc.resize(d, 0.0);
                 accumulate_sharded(&comp, &slices, &spec, 4, &mut acc).unwrap();
                 acc.len()
-            });
-            bps.run(&format!("ps fused  decode+reduce (n={n_clients}, serial)"), || {
+            }));
+            log.push(bps.run(&format!("ps fused  decode+reduce (n={n_clients}, serial)"), || {
                 acc.clear();
                 acc.resize(d, 0.0);
                 for p in &slices {
                     comp.decode_accumulate(p, &spec, 1.0, &mut acc).unwrap();
                 }
                 acc.len()
-            });
+            }));
             // sanity: the two paths agree bit-exactly
             let decoded: Vec<Vec<f32>> =
                 slices.iter().map(|p| comp.decode_dense(p, &spec).unwrap()).collect();
@@ -103,6 +115,39 @@ fn main() {
             acc.resize(d, 0.0);
             accumulate_sharded(&comp, &slices, &spec, 4, &mut acc).unwrap();
             assert!(dense.iter().zip(&acc).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    // --- fedserve round latency: thread-per-client era vs the reactor ----
+    //
+    // Whole `simulate_with` runs (connect/accept + 2 rounds + shutdown) at
+    // growing connection counts, channel vs TCP loopback. The TCP side is
+    // the reactor: ONE server thread multiplexing every socket via
+    // poll(2); what used to be a 1 ms sleep-spin over nonblocking reads.
+    // Reported throughput is rounds/second; EXPERIMENTS.md §reactor holds
+    // the connections-vs-latency table these rows populate.
+    println!("\n== fedserve rounds (reactor, 2 rounds/run, d = 4096) ==");
+    {
+        let rounds = 2usize;
+        let d = 4096usize;
+        let macro_bench = || Bencher {
+            warmup_iters: 0,
+            samples: if quick_mode() { 2 } else { 5 },
+            iters_per_sample: 1,
+            items_per_iter: Some(rounds as f64),
+        };
+        for n in [8usize, 64, 256] {
+            let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, rounds);
+            cfg.n_clients = n;
+            cfg.server.shards = 4;
+            cfg.server.straggler_timeout_ms = 120_000;
+            let mb = macro_bench();
+            log.push(mb.run(&format!("fedserve 2-round run (channel, n={n})"), || {
+                simulate_with(&cfg, d, TransportMode::Channel).unwrap().rounds
+            }));
+            log.push(mb.run(&format!("fedserve 2-round run (tcp reactor, n={n})"), || {
+                simulate_with(&cfg, d, TransportMode::TcpLoopback).unwrap().rounds
+            }));
         }
     }
 
@@ -125,20 +170,20 @@ fn main() {
         let mut ctx = EncodeCtx::new();
         // warm the quantizer table so we time the request path, not design
         let _ = comp.encode(&gg, spec, &mut ctx).unwrap();
-        let b2 = Bencher::default().throughput(spec.d() as f64);
-        b2.run("m22 encode e2e (vgg_s, cpu codec, reused ctx)", || {
+        let b2 = Bencher::from_env().throughput(spec.d() as f64);
+        log.push(b2.run("m22 encode e2e (vgg_s, cpu codec, reused ctx)", || {
             comp.encode(&gg, spec, &mut ctx).unwrap().payload_bytes
-        });
+        }));
         comp.encode(&gg, spec, &mut ctx).unwrap();
         let payload = ctx.payload().to_vec();
-        b2.run("m22 decode_dense e2e (vgg_s)", || {
+        log.push(b2.run("m22 decode_dense e2e (vgg_s)", || {
             comp.decode_dense(&payload, spec).unwrap().len()
-        });
+        }));
         let mut acc = vec![0.0f32; spec.d()];
-        b2.run("m22 decode_accumulate e2e (vgg_s)", || {
+        log.push(b2.run("m22 decode_accumulate e2e (vgg_s)", || {
             comp.decode_accumulate(&payload, spec, 1.0, &mut acc).unwrap();
             acc.len()
-        });
+        }));
     }
 
     println!("\n== PJRT boundary (needs artifacts) ==");
@@ -150,19 +195,32 @@ fn main() {
         for arch in ["cnn_s", "resnet_s", "vgg_s"] {
             let w = man.load_init(&dir, arch).unwrap();
             let batch = ds.batch(&ds.train, 0, man.batch);
-            let b3 = Bencher { warmup_iters: 2, samples: 8, iters_per_sample: 1, items_per_iter: None };
-            b3.run(&format!("pjrt train_step {arch}"), || {
+            let b3 = Bencher {
+                warmup_iters: if quick_mode() { 1 } else { 2 },
+                samples: if quick_mode() { 3 } else { 8 },
+                iters_per_sample: 1,
+                items_per_iter: None,
+            };
+            log.push(b3.run(&format!("pjrt train_step {arch}"), || {
                 rt.train_step(arch, &w, &batch.x, &batch.y).unwrap().loss
-            });
+            }));
         }
         // HLO codec block vs CPU codec block
         let blk = grad(65_536, 3);
-        let b4 = Bencher::default().throughput(65_536.0);
-        b4.run("hlo quantize 64k block", || rt.quantize(&blk, &t, &c).unwrap().0.len());
-        b4.run("cpu quantize 64k block", || CpuCodec.quantize(&blk, &t, &c).unwrap().0.len());
-        b4.run("hlo moments 64k block", || rt.moments(&blk).unwrap()[0]);
-        b4.run("cpu moments 64k block", || CpuCodec.moments(&blk).unwrap()[0]);
+        let b4 = Bencher::from_env().throughput(65_536.0);
+        log.push(b4.run("hlo quantize 64k block", || rt.quantize(&blk, &t, &c).unwrap().0.len()));
+        log.push(b4.run("cpu quantize 64k block", || {
+            CpuCodec.quantize(&blk, &t, &c).unwrap().0.len()
+        }));
+        log.push(b4.run("hlo moments 64k block", || rt.moments(&blk).unwrap()[0]));
+        log.push(b4.run("cpu moments 64k block", || CpuCodec.moments(&blk).unwrap()[0]));
     } else {
         eprintln!("pjrt benches skipped (artifacts not built)");
+    }
+
+    match log.write_env() {
+        Ok(Some(path)) => eprintln!("wrote {path} ({} bench rows)", log.len()),
+        Ok(None) => {}
+        Err(e) => panic!("writing BENCH_JSON: {e}"),
     }
 }

@@ -35,7 +35,7 @@ pub struct SchemeTuning {
 
 /// Parameter-server knobs for the `fedserve` subsystem (ROADMAP: scale the
 /// PS loop past a handful of clients).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// worker shards for the fused decode+reduce (1 = serial; parity with
     /// the serial eq.-(7) path is bit-exact at any count)
@@ -53,6 +53,10 @@ pub struct ServerConfig {
     /// design the paper's (family, shape, rq) table grid at server start
     /// (ROADMAP: prewarm) so first-round uplinks never pay an LBG design
     pub prewarm: bool,
+    /// persist the hot quantizer tables here at end of run and reload them
+    /// at server start (ROADMAP: the cross-run half of the prewarm item);
+    /// `None` (the default) keeps the cache in-memory only
+    pub table_cache_path: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -63,6 +67,7 @@ impl Default for ServerConfig {
             straggler_timeout_ms: 0,
             table_cache_capacity: 256,
             prewarm: true,
+            table_cache_path: None,
         }
     }
 }

@@ -81,7 +81,9 @@ pub fn run_experiment(
     let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
     // the PS's decode half — same scheme registry as the clients' encoders
     let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
-    let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, decoder);
+    let mut server = FedServer::new(cfg.server.clone(), cfg.n_clients, cfg.seed, decoder);
+    // a persisted cache first (cheap reload), then design the rest fresh
+    server.preload_tables(&tables);
     server.prewarm_for(cfg, d, &tables);
     let n_participants = cfg.participants_per_round();
 
@@ -138,6 +140,7 @@ pub fn run_experiment(
         Ok::<_, anyhow::Error>((last, bits_per_round, transport.stats()))
     })?;
 
+    server.persist_tables(&tables);
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
     server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);

@@ -8,11 +8,20 @@
 //! * [`wire`] — a framed binary protocol (version header, length prefix,
 //!   CRC-32) so *only bytes* cross the transport; `scan_prefix` streams
 //!   frames out of arbitrary read fragments with typed corruption errors;
+//! * [`reactor`] — the readiness engine: a `poll(2)`-backed
+//!   [`reactor::Poller`] (vendored syscall shim; portable spin fallback
+//!   behind the `spin-poll` feature), a slotted [`reactor::TimerWheel`]
+//!   for straggler and write deadlines, and the [`reactor::Reactor`] loop
+//!   both transports route their uplink waits through — one server thread
+//!   multiplexes every client connection, no per-client threads, no
+//!   sleep-spin;
 //! * [`transport`] — the pluggable byte mover: a [`transport::Transport`] /
 //!   [`transport::ClientTransport`] trait pair with the original in-process
 //!   channel implementation and a real TCP one (per-connection
-//!   `FrameBuffer` reassembly, nonblocking deadline-driven reads,
-//!   socket-measured byte counters, graceful shutdown frames);
+//!   `FrameBuffer` reassembly on read-readiness, per-connection outbound
+//!   queues flushed by bounded progress-looping writes on
+//!   write-readiness, socket-measured byte counters, graceful shutdown
+//!   frames);
 //! * [`session`] — per-client sessions owning error-feedback memory and
 //!   round bookkeeping, plus the deterministic k-of-n participant
 //!   [`session::Scheduler`] (partial participation);
@@ -34,6 +43,7 @@
 //! module: it contributes only training, evaluation, and row recording.
 
 pub mod aggregate;
+pub mod reactor;
 pub mod server;
 pub mod session;
 pub mod sim;
@@ -42,6 +52,7 @@ pub mod transport;
 pub mod wire;
 
 pub use aggregate::{accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded};
+pub use reactor::{Poller, Reactor, TimerWheel};
 pub use server::{FedServer, RoundSummary};
 pub use session::{ClientSession, Scheduler, SessionStats};
 pub use sim::{simulate, simulate_with, SimReport, TransportMode};

@@ -1,0 +1,507 @@
+//! The fedserve readiness reactor: one loop multiplexing every client.
+//!
+//! PR 3's TCP transport collected uplinks with a 1 ms-granularity
+//! nonblocking sleep-spin, and the channel transport blocked on
+//! `recv_timeout` — fine for dozens of connections, a ceiling for hundreds
+//! (ROADMAP: async-runtime migration). This module replaces both wait
+//! primitives with a shared readiness abstraction:
+//!
+//! * [`Poller`] — *which endpoints are ready?* Backed by `poll(2)` through
+//!   the tiny vendored [`pollshim`] syscall shim (the same offline-build
+//!   idiom as the in-tree `anyhow`); non-Unix targets and the `spin-poll`
+//!   feature fall back to the portable 1 ms spin the old transport used,
+//!   behind the identical API.
+//! * [`TimerWheel`] — *when is the next deadline?* A slotted timer wheel
+//!   holding straggler deadlines and per-connection write deadlines, so
+//!   timeouts are enforced by the readiness wait itself (`poll`'s timeout
+//!   argument is the wheel's next expiry) instead of sleep granularity.
+//! * [`Reactor`] + [`EventSource`] — the loop: pop completed events, fire
+//!   due timers, compute the wait budget (caller deadline ∧ next timer),
+//!   and let the source service whatever became ready. Both
+//!   `TcpServerTransport` and `ChannelTransport` implement [`EventSource`],
+//!   so `FedServer::run_round` stays transport-agnostic and a single
+//!   reactor thread drives hundreds of client sockets with zero per-client
+//!   server threads.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::transport::Event;
+
+/// Identifies a timer or a pollable endpoint to its [`EventSource`].
+pub type Token = usize;
+
+/// What an endpoint wants to be woken for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const READ_WRITE: Interest = Interest { read: true, write: true };
+}
+
+/// One endpoint registration for a [`Poller::wait`] pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEntry {
+    pub token: Token,
+    /// Raw descriptor on Unix; ignored by the spin fallback.
+    pub fd: i32,
+    pub interest: Interest,
+}
+
+/// One endpoint's readiness result.
+#[derive(Debug, Clone, Copy)]
+pub struct Ready {
+    pub token: Token,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// The raw descriptor of a socket, for [`PollEntry::fd`].
+#[cfg(unix)]
+pub fn fd_of<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+/// Non-Unix: the spin fallback never inspects descriptors.
+#[cfg(not(unix))]
+pub fn fd_of<T>(_t: &T) -> i32 {
+    -1
+}
+
+/// How long one spin-fallback tick sleeps (the old transport's
+/// `POLL_INTERVAL`, now confined to targets without `poll(2)`).
+#[cfg(any(not(unix), feature = "spin-poll"))]
+const SPIN_INTERVAL: Duration = Duration::from_millis(1);
+
+/// Readiness waiter over a set of endpoints. On Unix this is one `poll(2)`
+/// call per wakeup; the fallback sleeps one [`SPIN_INTERVAL`] tick and
+/// reports every entry ready (level-triggered over-approximation — a
+/// not-actually-ready endpoint just observes `WouldBlock` and moves on,
+/// which is exactly the retired spin loop's behavior).
+#[derive(Debug, Default)]
+pub struct Poller {
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    fds: Vec<pollshim::PollFd>,
+    /// readiness wakeups served (reactor observability, flows into
+    /// `TransportStats.wakeups`)
+    pub wakeups: u64,
+}
+
+impl Poller {
+    pub fn new() -> Poller {
+        Poller::default()
+    }
+
+    /// Wait until an entry is ready or `timeout` elapses (`None` blocks).
+    /// Returns the ready subset; an empty result is a timeout.
+    pub fn wait(
+        &mut self,
+        entries: &[PollEntry],
+        timeout: Option<Duration>,
+    ) -> Result<Vec<Ready>> {
+        self.wakeups += 1;
+        self.wait_impl(entries, timeout)
+    }
+
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    fn wait_impl(
+        &mut self,
+        entries: &[PollEntry],
+        timeout: Option<Duration>,
+    ) -> Result<Vec<Ready>> {
+        self.fds.clear();
+        for e in entries {
+            let mut events = 0i16;
+            if e.interest.read {
+                events |= pollshim::POLLIN;
+            }
+            if e.interest.write {
+                events |= pollshim::POLLOUT;
+            }
+            self.fds.push(pollshim::PollFd::new(e.fd, events));
+        }
+        let ms = match timeout {
+            None => -1i32,
+            Some(t) if t.is_zero() => 0, // drain-only: strictly nonblocking
+            // ceil so a 100 µs budget is not rounded into a busy loop
+            Some(t) => t.as_nanos().div_ceil(1_000_000).min(i32::MAX as u128) as i32,
+        };
+        let n = pollshim::poll(&mut self.fds, ms)?;
+        let mut ready = Vec::with_capacity(n);
+        for (e, fd) in entries.iter().zip(&self.fds) {
+            if fd.revents != 0 {
+                ready.push(Ready {
+                    token: e.token,
+                    // HUP/ERR surface as readable so the owner observes the
+                    // EOF / socket error on its next read and closes cleanly
+                    readable: fd.readable() || fd.invalid(),
+                    writable: fd.writable(),
+                });
+            }
+        }
+        Ok(ready)
+    }
+
+    #[cfg(any(not(unix), feature = "spin-poll"))]
+    fn wait_impl(
+        &mut self,
+        entries: &[PollEntry],
+        timeout: Option<Duration>,
+    ) -> Result<Vec<Ready>> {
+        let nap = match timeout {
+            None => SPIN_INTERVAL,
+            Some(t) => t.min(SPIN_INTERVAL),
+        };
+        if !nap.is_zero() {
+            std::thread::sleep(nap);
+        }
+        Ok(entries
+            .iter()
+            .map(|e| Ready {
+                token: e.token,
+                readable: e.interest.read,
+                writable: e.interest.write,
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+// timer wheel
+// ---------------------------------------------------------------------
+
+/// Wheel resolution: timers land in one of [`WHEEL_SLOTS`] buckets of this
+/// many milliseconds. Expiry is still exact — entries carry their real
+/// `Instant` and only *bucketing* uses the tick, so deadline error is
+/// bounded by the poll timeout rounding (~1 ms), not by the tick size.
+const WHEEL_TICK_MS: u64 = 4;
+const WHEEL_SLOTS: usize = 256;
+
+#[derive(Debug, Clone, Copy)]
+struct Timer {
+    token: Token,
+    deadline: Instant,
+}
+
+/// Slotted timer wheel for straggler and write deadlines. A token → slot
+/// index makes arm/cancel/is_armed O(1) map operations (plus a retain over
+/// the one slot holding the token); the expiry sweep visits only the slots
+/// whose ticks elapsed since the last sweep; `next_deadline` is
+/// O(slots + armed). Entries beyond one wheel revolution simply stay in
+/// their slot until their revolution comes around — standard wheel
+/// semantics, no allocation per tick.
+#[derive(Debug)]
+pub struct TimerWheel {
+    slots: Vec<Vec<Timer>>,
+    /// which slot each armed token lives in
+    index: std::collections::HashMap<Token, usize>,
+    origin: Instant,
+    /// tick of the last expiry sweep
+    cursor: u64,
+}
+
+impl Default for TimerWheel {
+    fn default() -> TimerWheel {
+        TimerWheel::new()
+    }
+}
+
+impl TimerWheel {
+    pub fn new() -> TimerWheel {
+        TimerWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            index: std::collections::HashMap::new(),
+            origin: Instant::now(),
+            cursor: 0,
+        }
+    }
+
+    fn tick_of(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.origin).as_millis() as u64 / WHEEL_TICK_MS
+    }
+
+    /// Arm (or re-arm) `token` to fire at `deadline`. A token is unique
+    /// per owner — re-arming cancels the previous deadline first.
+    pub fn arm(&mut self, token: Token, deadline: Instant) {
+        self.cancel(token);
+        let slot = (self.tick_of(deadline) as usize) % WHEEL_SLOTS;
+        self.slots[slot].push(Timer { token, deadline });
+        self.index.insert(token, slot);
+    }
+
+    /// Disarm `token`. A no-op if it is not armed.
+    pub fn cancel(&mut self, token: Token) {
+        if let Some(slot) = self.index.remove(&token) {
+            self.slots[slot].retain(|t| t.token != token);
+        }
+    }
+
+    pub fn armed(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Whether `token` currently has a pending deadline.
+    pub fn is_armed(&self, token: Token) -> bool {
+        self.index.contains_key(&token)
+    }
+
+    /// The earliest armed deadline, if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.slots.iter().flatten().map(|t| t.deadline).min()
+    }
+
+    /// Collect every timer due at `now` into `due`, sweeping only the
+    /// slots whose ticks elapsed since the last sweep (clamped to one full
+    /// revolution — beyond that every slot has been visited once anyway).
+    pub fn expire(&mut self, now: Instant, due: &mut Vec<Token>) {
+        if self.index.is_empty() {
+            self.cursor = self.tick_of(now);
+            return;
+        }
+        let fired_from = due.len();
+        let end = self.tick_of(now);
+        let span = (end.saturating_sub(self.cursor) + 1).min(WHEEL_SLOTS as u64);
+        for i in 0..span {
+            let slot = &mut self.slots[((self.cursor + i) as usize) % WHEEL_SLOTS];
+            slot.retain(|t| {
+                if t.deadline <= now {
+                    due.push(t.token);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        for t in &due[fired_from..] {
+            self.index.remove(t);
+        }
+        self.cursor = end;
+    }
+}
+
+// ---------------------------------------------------------------------
+// the reactor loop
+// ---------------------------------------------------------------------
+
+/// What the reactor multiplexes: a transport's endpoints. The source owns
+/// the sockets/queues and does the actual IO; the reactor owns the loop
+/// shape, the timer wheel, and the deadline arithmetic.
+pub trait EventSource {
+    /// Pop the next completed event (a reassembled frame, or garbage from
+    /// a corrupt stream), consuming no wall-clock. Called before every
+    /// wait so buffered work never pays a syscall. Popping garbage may
+    /// kill the offending endpoint — `wheel` is passed so its pending
+    /// deadlines die with it.
+    fn pop(&mut self, wheel: &mut TimerWheel) -> Result<Option<Event>>;
+
+    /// Block until something is ready, at most `budget` (`None` = until
+    /// readiness), then service it: drain readable endpoints into
+    /// reassembly buffers, flush writable outbound queues, arm/cancel
+    /// write-deadline timers on `wheel`.
+    fn service(&mut self, wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()>;
+
+    /// A timer armed by this source fired.
+    fn on_timer(&mut self, wheel: &mut TimerWheel, token: Token);
+
+    /// True when no event can ever arrive again (every endpoint closed).
+    fn exhausted(&self) -> bool;
+}
+
+/// The readiness loop driver shared by every transport.
+#[derive(Debug, Default)]
+pub struct Reactor {
+    pub wheel: TimerWheel,
+}
+
+impl Reactor {
+    pub fn new() -> Reactor {
+        Reactor::default()
+    }
+
+    /// One transport `poll`: wait up to `timeout` for the next [`Event`],
+    /// firing due timers along the way. `None` blocks until an event;
+    /// `Some(ZERO)` drains only work that already arrived (one
+    /// zero-budget service pass); `Ok(None)` is a timeout.
+    pub fn poll_events<S: EventSource>(
+        &mut self,
+        src: &mut S,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Event>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut due: Vec<Token> = Vec::new();
+        let mut drained = false;
+        loop {
+            if let Some(ev) = src.pop(&mut self.wheel)? {
+                return Ok(Some(ev));
+            }
+            let now = Instant::now();
+            due.clear();
+            self.wheel.expire(now, &mut due);
+            for &t in &due {
+                src.on_timer(&mut self.wheel, t);
+            }
+            if let Some(ev) = src.pop(&mut self.wheel)? {
+                return Ok(Some(ev));
+            }
+            // every endpoint closed and nothing buffered: no event can
+            // ever arrive. With a deadline the caller's wait stays bounded
+            // (a partial round can still complete); without one, blocking
+            // would hang forever — fail like the closed-channel path.
+            if src.exhausted() && deadline.is_none() {
+                bail!("all client connections closed");
+            }
+            let mut budget = self.wheel.next_deadline().map(|d| d.saturating_duration_since(now));
+            if let Some(dl) = deadline {
+                let remaining = dl.saturating_duration_since(now);
+                if remaining.is_zero() {
+                    // the deadline has passed: one zero-budget pass drains
+                    // bytes that already arrived (our own parse time must
+                    // not reclassify timely clients), then time out
+                    if drained {
+                        return Ok(None);
+                    }
+                    drained = true;
+                    budget = Some(Duration::ZERO);
+                } else {
+                    budget = Some(budget.map_or(remaining, |b| b.min(remaining)));
+                }
+            }
+            src.service(&mut self.wheel, budget)?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn expired(w: &mut TimerWheel, now: Instant) -> Vec<Token> {
+        let mut due = Vec::new();
+        w.expire(now, &mut due);
+        due
+    }
+
+    #[test]
+    fn wheel_fires_in_deadline_order_across_sweeps() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        w.arm(1, now + Duration::from_millis(10));
+        w.arm(2, now + Duration::from_millis(30));
+        assert_eq!(w.armed(), 2);
+        assert_eq!(w.next_deadline(), Some(now + Duration::from_millis(10)));
+        assert!(expired(&mut w, now).is_empty());
+        assert_eq!(expired(&mut w, now + Duration::from_millis(15)), vec![1]);
+        assert_eq!(w.armed(), 1);
+        assert_eq!(expired(&mut w, now + Duration::from_millis(40)), vec![2]);
+        assert_eq!(w.armed(), 0);
+        assert_eq!(w.next_deadline(), None);
+    }
+
+    #[test]
+    fn wheel_cancel_and_rearm() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        w.arm(7, now + Duration::from_millis(5));
+        assert!(w.is_armed(7));
+        assert!(!w.is_armed(8));
+        w.cancel(7);
+        assert!(!w.is_armed(7));
+        assert_eq!(w.armed(), 0);
+        assert!(expired(&mut w, now + Duration::from_millis(50)).is_empty());
+        // re-arming replaces the old deadline instead of duplicating it
+        w.arm(9, now + Duration::from_millis(5));
+        w.arm(9, now + Duration::from_millis(500));
+        assert_eq!(w.armed(), 1);
+        assert!(expired(&mut w, now + Duration::from_millis(100)).is_empty());
+        assert_eq!(expired(&mut w, now + Duration::from_millis(600)), vec![9]);
+    }
+
+    #[test]
+    fn wheel_survives_deadlines_beyond_one_revolution() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        let revolution = Duration::from_millis(WHEEL_TICK_MS * WHEEL_SLOTS as u64);
+        // two revolutions out: shares a slot with a near timer
+        w.arm(1, now + Duration::from_millis(20));
+        w.arm(2, now + 2 * revolution + Duration::from_millis(20));
+        assert_eq!(expired(&mut w, now + Duration::from_millis(25)), vec![1]);
+        // sweeping the same slot again must not fire the far timer early
+        assert!(expired(&mut w, now + revolution).is_empty());
+        assert_eq!(w.armed(), 1);
+        let far = now + 2 * revolution + Duration::from_millis(30);
+        assert_eq!(expired(&mut w, far), vec![2]);
+    }
+
+    #[test]
+    fn wheel_sweep_gap_larger_than_the_wheel_is_clamped() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        for t in 0..10 {
+            w.arm(t, now + Duration::from_millis(3 * t as u64));
+        }
+        // one sweep far in the future visits every slot exactly once
+        let mut due = expired(&mut w, now + Duration::from_secs(3600));
+        due.sort_unstable();
+        assert_eq!(due, (0..10).collect::<Vec<_>>());
+        assert_eq!(w.armed(), 0);
+    }
+
+    // readiness assertions only hold for real poll(2): the spin fallback
+    // deliberately over-approximates
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    mod poller {
+        use super::super::*;
+        use std::io::Write;
+        use std::net::{TcpListener, TcpStream};
+
+        fn pair() -> (TcpStream, TcpStream) {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let a = TcpStream::connect(addr).unwrap();
+            let (b, _) = listener.accept().unwrap();
+            (a, b)
+        }
+
+        #[test]
+        fn reports_readability_per_token() {
+            let (a, mut b) = pair();
+            let (c, _d) = pair();
+            b.write_all(b"ping").unwrap();
+            let mut p = Poller::new();
+            let entries = [
+                PollEntry { token: 10, fd: fd_of(&a), interest: Interest::READ },
+                PollEntry { token: 20, fd: fd_of(&c), interest: Interest::READ },
+            ];
+            let ready = p.wait(&entries, Some(Duration::from_secs(5))).unwrap();
+            assert!(ready.iter().any(|r| r.token == 10 && r.readable));
+            assert!(ready.iter().all(|r| r.token != 20));
+            assert_eq!(p.wakeups, 1);
+        }
+
+        #[test]
+        fn timeout_returns_empty() {
+            let (a, _b) = pair();
+            let mut p = Poller::new();
+            let entries = [PollEntry { token: 0, fd: fd_of(&a), interest: Interest::READ }];
+            let t0 = Instant::now();
+            let ready = p.wait(&entries, Some(Duration::from_millis(40))).unwrap();
+            assert!(ready.is_empty());
+            assert!(t0.elapsed() >= Duration::from_millis(35));
+        }
+
+        #[test]
+        fn write_interest_on_a_fresh_socket_is_immediate() {
+            let (a, _b) = pair();
+            let mut p = Poller::new();
+            let entries = [PollEntry { token: 3, fd: fd_of(&a), interest: Interest::READ_WRITE }];
+            let ready = p.wait(&entries, Some(Duration::from_secs(5))).unwrap();
+            assert!(ready.iter().any(|r| r.token == 3 && r.writable && !r.readable));
+        }
+    }
+}

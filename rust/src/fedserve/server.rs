@@ -108,6 +108,47 @@ impl FedServer {
         }
     }
 
+    /// ROADMAP: the cross-run half of the prewarm story. Reload the
+    /// quantizer designs a previous run persisted at `cfg.table_cache_path`
+    /// (if the config names one and the file exists yet), recording the
+    /// count in [`ServerStats`]. A corrupt cache file is reported but not
+    /// fatal — the server just starts cold.
+    pub fn preload_tables(&mut self, tables: &LruTableCache) -> usize {
+        let Some(path) = self.cfg.table_cache_path.clone() else {
+            return 0;
+        };
+        let path = std::path::Path::new(&path);
+        if !path.exists() {
+            return 0;
+        }
+        match tables.load(path) {
+            Ok(n) => {
+                self.stats.set_preloaded(n as u64);
+                n
+            }
+            Err(e) => {
+                eprintln!("fedserve: ignoring table cache {}: {e:#}", path.display());
+                0
+            }
+        }
+    }
+
+    /// Persist the hot quantizer tables for the next run's
+    /// [`FedServer::preload_tables`]. A write failure is reported but not
+    /// fatal — the run's results are already complete.
+    pub fn persist_tables(&self, tables: &LruTableCache) -> usize {
+        let Some(path) = self.cfg.table_cache_path.as_deref() else {
+            return 0;
+        };
+        match tables.save(std::path::Path::new(path)) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("fedserve: failed to persist table cache {path}: {e:#}");
+                0
+            }
+        }
+    }
+
     /// Sample this round's participants (k of n, shuffled order — the order
     /// is also the aggregation order).
     pub fn select(&mut self, k: usize) -> Vec<usize> {
@@ -143,6 +184,8 @@ impl FedServer {
             if transport.send(id, &frame).is_err() {
                 unreachable[i] = true;
                 pending -= 1;
+            } else if let Some(s) = self.sessions.get_mut(id) {
+                s.bytes_down += frame.len() as u64;
             }
         }
         // 0 = no deadline: block until every participant reports (the
@@ -323,6 +366,9 @@ mod tests {
         assert_eq!(w, vec![8.0f32; 8]); // 10 - (1+3)/2
         assert_eq!(server.sessions[0].participated, 1);
         assert!(server.sessions[0].bytes_up > 0);
+        // the broadcast is accounted per client, both directions
+        assert_eq!(server.sessions[0].bytes_down, server.sessions[1].bytes_down);
+        assert!(server.sessions[0].bytes_down > 0);
         assert_eq!(server.stats.rounds.len(), 1);
         assert!(s.framed_bytes > 0);
         // the broadcast left through the transport: both clients can read

@@ -113,6 +113,13 @@ pub struct SessionStats {
     pub decode_errors: usize,
     /// honest uplink bytes received, including wire framing
     pub bytes_up: u64,
+    /// framed downlink bytes handed to the transport for this client
+    /// (round broadcasts the transport accepted — on TCP that may include
+    /// bytes still queued when a peer later dies; the socket-measured
+    /// truth is `TransportStats.per_client`). The per-client mirror of
+    /// `bytes_up`, so the ledger accounts both directions of the paper's
+    /// PS↔learner channel.
+    pub bytes_down: u64,
     pub last_round: Option<usize>,
 }
 

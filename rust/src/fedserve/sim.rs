@@ -209,12 +209,16 @@ fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
     let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
-    let mut server = FedServer::new(cfg.server, cfg.n_clients, cfg.seed, decoder);
+    let mut server = FedServer::new(cfg.server.clone(), cfg.n_clients, cfg.seed, decoder);
+    // a persisted cache first (cheap reload), then design whatever of the
+    // prewarm grid the file did not already cover
+    server.preload_tables(&tables);
     server.prewarm_for(cfg, d, &tables);
     Ok(SimServer { spec, tables, codec, server })
 }
 
-/// Fold the end-of-run counters into the stats and assemble the report.
+/// Fold the end-of-run counters into the stats, persist the hot quantizer
+/// tables when the config names a cache path, and assemble the report.
 fn finish_report(
     cfg: &ExperimentConfig,
     d: usize,
@@ -224,6 +228,7 @@ fn finish_report(
     tables: &LruTableCache,
     tstats: TransportStats,
 ) -> SimReport {
+    server.persist_tables(tables);
     let cache = tables.stats();
     server.stats.set_cache(cache.hits, cache.misses);
     server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
@@ -413,6 +418,30 @@ mod tests {
         // the fitted shapes land inside the paper grid (they may not for
         // every synthetic draw, so only the counters' consistency is hard)
         assert!(warm.stats.prewarm_hits <= warm.stats.cache_hits);
+    }
+
+    #[test]
+    fn table_cache_persists_across_runs() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("m22-sim-tables-{}", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let mut cfg = ExperimentConfig::new(
+            "sim",
+            Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+            2,
+            2,
+        );
+        cfg.n_clients = 3;
+        cfg.server.table_cache_path = Some(path.to_string_lossy().into_owned());
+        let cold = simulate(&cfg, 1024).unwrap();
+        assert!(path.exists(), "no cache file persisted");
+        assert_eq!(cold.stats.preloaded_tables, 0);
+        let warm = simulate(&cfg, 1024).unwrap();
+        // the second run reloaded what the first one designed...
+        assert!(warm.stats.preloaded_tables > 0, "{:?}", warm.stats);
+        // ...and persistence is a cache warmup, never a numerics change
+        assert_eq!(cold.w, warm.w);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

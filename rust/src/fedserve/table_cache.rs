@@ -15,7 +15,11 @@
 //! request-path traffic the prewarm absorbed.
 
 use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
 use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
 
 use crate::quantizer::tables::design_for;
 use crate::quantizer::{Family, PrewarmPlan, Quantizer, TableKey, TableSource, SHAPE_STEP};
@@ -149,6 +153,128 @@ impl LruTableCache {
         }
         inserted
     }
+
+    /// Persist every cached design to `path`, least-recently-used first so
+    /// a later [`LruTableCache::load`] into a smaller cache evicts the
+    /// cold tail and keeps the hottest keys. Values are written as f64 bit
+    /// patterns — the roundtrip is bit-exact, which cross-process
+    /// encode/decode parity depends on. Returns how many entries were
+    /// written.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        let (text, n) = {
+            let inner = self.inner.lock().unwrap();
+            let mut entries: Vec<(&TableKey, &Entry)> = inner.map.iter().collect();
+            entries.sort_by_key(|(_, e)| e.last_used);
+            let mut text = String::from(PERSIST_HEADER);
+            text.push('\n');
+            for (k, e) in &entries {
+                write!(
+                    text,
+                    "{} {} {} {} {:016x}",
+                    k.family.label(),
+                    k.shape_q,
+                    k.m_q,
+                    k.levels,
+                    e.q.m.to_bits()
+                )
+                .expect("write to String");
+                for c in &e.q.centers {
+                    write!(text, " {:016x}", c.to_bits()).expect("write to String");
+                }
+                for t in &e.q.thresholds {
+                    write!(text, " {:016x}", t.to_bits()).expect("write to String");
+                }
+                text.push('\n');
+            }
+            let n = entries.len();
+            (text, n)
+        };
+        // temp + rename so a crash mid-write never leaves a torn cache
+        // file; ".tmp" is appended to the full name (not swapped for the
+        // extension) so cache paths sharing a stem keep distinct temps
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(n)
+    }
+
+    /// Reload designs persisted by [`LruTableCache::save`]. Entries count
+    /// as prewarmed (hits on them land in `prewarm_hits`) — persistence is
+    /// the cross-run half of the prewarm story. Keys already cached are
+    /// skipped; capacity and LRU order are honored. Returns how many
+    /// entries were inserted.
+    pub fn load(&self, path: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(h) if h == PERSIST_HEADER => {}
+            other => bail!("not a table-cache file (header {other:?})"),
+        }
+        let mut inserted = 0usize;
+        for (lineno, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let (key, q) = parse_entry(line)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 2))?;
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            if inner.map.contains_key(&key) {
+                continue;
+            }
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.make_room(&key, self.capacity);
+            inner.map.insert(key, Entry { q, last_used: tick, prewarmed: true });
+            inner.prewarmed += 1;
+            inserted += 1;
+        }
+        Ok(inserted)
+    }
+}
+
+/// On-disk format tag for [`LruTableCache::save`].
+const PERSIST_HEADER: &str = "m22-tables v1";
+
+/// One persisted design:
+/// `family shape_q m_q levels m_bits center_bits{levels} threshold_bits{levels-1}`
+/// (all f64 values as zero-padded hex bit patterns).
+fn parse_entry(line: &str) -> Result<(TableKey, Quantizer)> {
+    let mut tok = line.split_ascii_whitespace();
+    let mut next = |what: &str| tok.next().with_context(|| format!("missing {what}"));
+    let family = match next("family")? {
+        "G" => Family::GenNorm,
+        "W" => Family::Weibull,
+        other => bail!("unknown family {other:?}"),
+    };
+    let shape_q: i32 = next("shape_q")?.parse().context("shape_q")?;
+    let m_q: i32 = next("m_q")?.parse().context("m_q")?;
+    let levels: usize = next("levels")?.parse().context("levels")?;
+    if levels == 0 || levels > 1 << 16 {
+        bail!("implausible level count {levels}");
+    }
+    let f64_of = |s: &str, what: &str| -> Result<f64> {
+        let bits = u64::from_str_radix(s, 16).with_context(|| format!("{what} bits"))?;
+        Ok(f64::from_bits(bits))
+    };
+    let m = f64_of(next("m")?, "m")?;
+    let mut centers = Vec::with_capacity(levels);
+    for _ in 0..levels {
+        centers.push(f64_of(next("center")?, "center")?);
+    }
+    let mut thresholds = Vec::with_capacity(levels - 1);
+    for _ in 0..levels - 1 {
+        thresholds.push(f64_of(next("threshold")?, "threshold")?);
+    }
+    if tok.next().is_some() {
+        bail!("trailing tokens");
+    }
+    let key = TableKey { family, shape_q, m_q, levels };
+    Ok((key, Quantizer { centers, thresholds, m }))
 }
 
 impl TableSource for LruTableCache {
@@ -296,6 +422,74 @@ mod tests {
         // the warm cache served it without a miss
         assert_eq!(warm.stats().misses, 0);
         assert_eq!(cold.stats().misses, 1);
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("m22-tablecache-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn persistence_roundtrip_is_bit_exact() {
+        let a = LruTableCache::new(64);
+        let q0 = a.get(Family::GenNorm, 0.8, 2.0, 8);
+        let q1 = a.get(Family::Weibull, 1.2, 4.0, 4);
+        let path = tmp_path("roundtrip");
+        assert_eq!(a.save(&path).unwrap(), 2);
+        let b = LruTableCache::new(64);
+        assert_eq!(b.load(&path).unwrap(), 2);
+        // reloaded designs serve without a miss and compare bit-exactly
+        // (f64 equality here is exact: the file stores bit patterns)
+        assert_eq!(b.get(Family::GenNorm, 0.8, 2.0, 8), q0);
+        assert_eq!(b.get(Family::Weibull, 1.2, 4.0, 4), q1);
+        let s = b.stats();
+        assert_eq!((s.hits, s.misses), (2, 0));
+        // persistence counts as prewarm: cross-run hit attribution works
+        assert_eq!(s.prewarmed, 2);
+        assert_eq!(s.prewarm_hits, 2);
+        // reloading an already-warm cache inserts nothing
+        assert_eq!(b.load(&path).unwrap(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_respects_capacity_and_keeps_the_hottest_keys() {
+        let a = LruTableCache::new(8);
+        a.get(Family::GenNorm, 0.6, 2.0, 4); // coldest
+        a.get(Family::GenNorm, 0.9, 2.0, 4);
+        a.get(Family::GenNorm, 1.2, 2.0, 4); // hottest
+        let path = tmp_path("capacity");
+        a.save(&path).unwrap();
+        let b = LruTableCache::new(1);
+        // LRU order in the file: the last-inserted (hottest) key survives
+        assert_eq!(b.load(&path).unwrap(), 3);
+        b.get(Family::GenNorm, 1.2, 2.0, 4);
+        let s = b.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 0, 1));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage_with_context() {
+        let path = tmp_path("garbage");
+        std::fs::write(&path, "not a cache file\n").unwrap();
+        let err = LruTableCache::new(8).load(&path).unwrap_err();
+        assert!(format!("{err}").contains("not a table-cache file"), "{err}");
+
+        // a valid header with a torn entry names the offending line
+        std::fs::write(&path, "m22-tables v1\nG 16 8 4 deadbeef\n").unwrap();
+        let err = LruTableCache::new(8).load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains(":2"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_missing_file_is_an_error_not_a_panic() {
+        let err = LruTableCache::new(8)
+            .load(std::path::Path::new("/nonexistent/m22-tables"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("reading"), "{err:#}");
     }
 
     #[test]

@@ -7,11 +7,15 @@
 //!   downlink frames out and framed uplink [`Event`]s in on the server
 //!   side, blocking framed rounds on the client side;
 //! * [`ChannelTransport`] / [`ChannelClient`] — the original in-process
-//!   mpsc pair, refactored behind the trait with zero behavior change;
-//! * [`TcpServerTransport`] / [`TcpClientTransport`] — real sockets:
-//!   one `TcpStream` per client (identified by a `Hello` handshake frame),
-//!   nonblocking deadline-driven reads on the server, per-connection
-//!   [`FrameBuffer`] reassembly driven by the streaming `wire::scan_prefix`.
+//!   mpsc pair, its uplink now served through the shared
+//!   [`reactor::Reactor`] loop;
+//! * [`TcpServerTransport`] / [`TcpClientTransport`] — real sockets, one
+//!   `TcpStream` per client (identified by a `Hello` handshake frame),
+//!   multiplexed by the same reactor: `poll(2)` readiness instead of the
+//!   retired 1 ms sleep-spin, per-connection [`FrameBuffer`] reassembly on
+//!   read-readiness, per-connection outbound queues flushed by bounded
+//!   progress-looping writes on write-readiness, and write deadlines on
+//!   the reactor's timer wheel.
 //!
 //! Byte counters are measured where the bytes actually move (at the socket
 //! for TCP), so `ServerStats` reports framed-bit totals that were *observed*
@@ -21,6 +25,7 @@
 //! stalling the round; a corrupt TCP stream is closed because past a bad
 //! magic/length/CRC there is no trustworthy resynchronization point.
 
+use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -31,17 +36,27 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::metrics::server::TransportStats;
 
+use super::reactor::{fd_of, EventSource, Interest, PollEntry, Poller, Reactor, TimerWheel, Token};
 use super::wire::{self, FrameError, Message, Scan};
 
-/// How long the TCP poll loop sleeps between nonblocking read passes.
-const POLL_INTERVAL: Duration = Duration::from_millis(1);
-/// Socket read chunk size (uplinks and round broadcasts are usually KBs).
-const READ_CHUNK: usize = 64 * 1024;
-/// How long a downlink write may keep retrying a full send buffer before
-/// the client is declared gone. Broadcasts larger than the kernel buffer
-/// make progress only as fast as the peer reads; a peer that stops
-/// reading entirely must not stall the server forever.
+/// Socket read request while no frame header is visible — a small probe.
+/// As soon as the 8-byte header lands, requests are sized to the frame, so
+/// the probe pays only for a stream's first fragment. It is kept small
+/// because `Vec::resize` zero-fills every request before `read` overwrites
+/// it: the probe size bounds the wasted memset on connections that turn
+/// out to have little to say (256 idle-ish conns × probe per collect pass).
+const READ_CHUNK: usize = 4 * 1024;
+/// Largest single read request — bounds the per-call buffer grow (and the
+/// matching zero-fill) for jumbo frames; the reassembly loop issues as
+/// many as it needs.
+const READ_CHUNK_MAX: usize = 1 << 20;
+/// How long a connection's outbound queue may sit without write progress
+/// before the peer is declared gone. Broadcasts larger than the kernel
+/// buffer make progress only as fast as the peer reads; a peer that stops
+/// reading entirely must not hold queued downlinks forever.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long `close` keeps flushing queued frames + shutdown markers.
+const CLOSE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// One observation off the server's uplink path.
 #[derive(Debug)]
@@ -104,13 +119,48 @@ impl FrameBuffer {
         FrameBuffer::default()
     }
 
-    /// Append raw transport bytes.
-    pub fn extend(&mut self, bytes: &[u8]) {
+    fn maybe_compact(&mut self) {
         if self.start > 0 && (self.start == self.buf.len() || self.start >= COMPACT_THRESHOLD) {
             self.buf.drain(..self.start);
             self.start = 0;
         }
+    }
+
+    /// Append raw transport bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.maybe_compact();
         self.buf.extend_from_slice(bytes);
+    }
+
+    /// One `read` from `r` straight into the buffer tail — no intermediate
+    /// chunk copy. When a frame header is already visible, the request is
+    /// sized to complete that frame (`wire::frame_len`), so a large round
+    /// broadcast arrives in exact-sized reads instead of fixed chunks; a
+    /// corrupt header falls back to a default chunk and the corruption
+    /// surfaces as the next [`FrameBuffer::next_frame`]'s typed error.
+    pub fn read_from<R: Read>(&mut self, r: &mut R) -> std::io::Result<usize> {
+        self.maybe_compact();
+        let pending = self.pending();
+        let want = match wire::frame_len(&self.buf[self.start..]) {
+            // at least a probe (tiny remainders still share a read with
+            // whatever follows), at most the grow cap, exact in between
+            Ok(Some(total)) if total > pending => {
+                (total - pending).clamp(READ_CHUNK, READ_CHUNK_MAX)
+            }
+            _ => READ_CHUNK,
+        };
+        let len = self.buf.len();
+        self.buf.resize(len + want, 0);
+        match r.read(&mut self.buf[len..]) {
+            Ok(k) => {
+                self.buf.truncate(len + k);
+                Ok(k)
+            }
+            Err(e) => {
+                self.buf.truncate(len);
+                Err(e)
+            }
+        }
     }
 
     /// Bytes received but not yet consumed as frames.
@@ -133,18 +183,29 @@ impl FrameBuffer {
 }
 
 // ---------------------------------------------------------------------
-// in-process channel transport (the original plumbing, behind the trait)
+// in-process channel transport (the original plumbing, reactor-served)
 // ---------------------------------------------------------------------
 
 /// The in-process transport: one mpsc pair per client, downlink frames
 /// shared as `Arc` so a round broadcast is encoded once for all clients.
+/// The uplink side is served through the same [`Reactor`] loop as TCP —
+/// its readiness primitive is the mpsc queue instead of `poll(2)`.
 pub struct ChannelTransport {
     down: Vec<Sender<Arc<Vec<u8>>>>,
-    up: Receiver<Vec<u8>>,
-    bytes_in: u64,
+    reactor: Reactor,
+    src: ChannelSource,
     bytes_out: u64,
+}
+
+/// The channel transport's [`EventSource`]: raw uplink frames pulled off
+/// the shared receiver, decoded on [`EventSource::pop`].
+struct ChannelSource {
+    up: Receiver<Vec<u8>>,
+    inbox: VecDeque<Vec<u8>>,
+    bytes_in: u64,
     decode_errors: u64,
     per_client: Vec<(u64, u64)>,
+    wakeups: u64,
 }
 
 /// The client half of [`ChannelTransport::pair`].
@@ -168,42 +229,25 @@ impl ChannelTransport {
         drop(up_tx);
         let server = ChannelTransport {
             down,
-            up: up_rx,
-            bytes_in: 0,
+            reactor: Reactor::new(),
+            src: ChannelSource {
+                up: up_rx,
+                inbox: VecDeque::new(),
+                bytes_in: 0,
+                decode_errors: 0,
+                per_client: vec![(0, 0); n],
+                wakeups: 0,
+            },
             bytes_out: 0,
-            decode_errors: 0,
-            per_client: vec![(0, 0); n],
         };
         (server, clients)
     }
 }
 
-impl Transport for ChannelTransport {
-    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
-        let n = self.down.len();
-        let tx = self.down.get(client).with_context(|| format!("no client {client} (n = {n})"))?;
-        tx.send(frame.clone()).map_err(|_| anyhow!("client {client} is gone"))?;
-        self.bytes_out += frame.len() as u64;
-        self.per_client[client].1 += frame.len() as u64;
-        Ok(())
-    }
-
-    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
-        let frame = match timeout {
-            None => match self.up.recv() {
-                Ok(f) => f,
-                Err(_) => bail!("uplink channel closed"),
-            },
-            Some(t) if t.is_zero() => match self.up.try_recv() {
-                Ok(f) => f,
-                Err(TryRecvError::Empty) => return Ok(None),
-                Err(TryRecvError::Disconnected) => bail!("uplink channel closed"),
-            },
-            Some(t) => match self.up.recv_timeout(t) {
-                Ok(f) => f,
-                Err(RecvTimeoutError::Timeout) => return Ok(None),
-                Err(RecvTimeoutError::Disconnected) => bail!("uplink channel closed"),
-            },
+impl EventSource for ChannelSource {
+    fn pop(&mut self, _wheel: &mut TimerWheel) -> Result<Option<Event>> {
+        let Some(frame) = self.inbox.pop_front() else {
+            return Ok(None);
         };
         self.bytes_in += frame.len() as u64;
         match wire::decode(&frame) {
@@ -228,12 +272,64 @@ impl Transport for ChannelTransport {
         }
     }
 
+    fn service(&mut self, _wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
+        self.wakeups += 1;
+        match budget {
+            None => match self.up.recv() {
+                Ok(f) => self.inbox.push_back(f),
+                Err(_) => bail!("uplink channel closed"),
+            },
+            Some(t) if t.is_zero() => {}
+            Some(t) => match self.up.recv_timeout(t) {
+                Ok(f) => self.inbox.push_back(f),
+                Err(RecvTimeoutError::Timeout) => return Ok(()),
+                Err(RecvTimeoutError::Disconnected) => bail!("uplink channel closed"),
+            },
+        }
+        // opportunistic drain: frames already queued cost no further waits
+        loop {
+            match self.up.try_recv() {
+                Ok(f) => self.inbox.push_back(f),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if self.inbox.is_empty() {
+                        bail!("uplink channel closed");
+                    }
+                    break; // deliver what arrived before the hangup first
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _wheel: &mut TimerWheel, _token: Token) {}
+
+    fn exhausted(&self) -> bool {
+        // a closed uplink surfaces as a `service` error instead
+        false
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+        let n = self.down.len();
+        let tx = self.down.get(client).with_context(|| format!("no client {client} (n = {n})"))?;
+        tx.send(frame.clone()).map_err(|_| anyhow!("client {client} is gone"))?;
+        self.bytes_out += frame.len() as u64;
+        self.src.per_client[client].1 += frame.len() as u64;
+        Ok(())
+    }
+
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        self.reactor.poll_events(&mut self.src, timeout)
+    }
+
     fn close(&mut self) -> Result<()> {
         let f = Arc::new(wire::encode_shutdown());
         for (id, tx) in self.down.iter().enumerate() {
             if tx.send(f.clone()).is_ok() {
                 self.bytes_out += f.len() as u64;
-                self.per_client[id].1 += f.len() as u64;
+                self.src.per_client[id].1 += f.len() as u64;
             }
         }
         Ok(())
@@ -242,10 +338,12 @@ impl Transport for ChannelTransport {
     fn stats(&self) -> TransportStats {
         TransportStats {
             label: "channel",
-            bytes_in: self.bytes_in,
+            bytes_in: self.src.bytes_in,
             bytes_out: self.bytes_out,
-            decode_errors: self.decode_errors,
-            per_client: self.per_client.clone(),
+            decode_errors: self.src.decode_errors,
+            per_client: self.src.per_client.clone(),
+            disconnects: 0,
+            wakeups: self.src.wakeups,
         }
     }
 }
@@ -268,31 +366,235 @@ impl ClientTransport for ChannelClient {
 // TCP transport
 // ---------------------------------------------------------------------
 
+/// One frame queued for a connection, partially written up to `off`.
+#[derive(Debug)]
+struct OutFrame {
+    frame: Arc<Vec<u8>>,
+    off: usize,
+}
+
 #[derive(Debug)]
 struct TcpConn {
     stream: TcpStream,
+    fd: i32,
     rx: FrameBuffer,
+    outq: VecDeque<OutFrame>,
     open: bool,
     bytes_in: u64,
     bytes_out: u64,
 }
 
-/// The socket transport: one TCP connection per client, identified by a
-/// `Hello` handshake frame so downlinks can be routed by client id.
-/// Reads are nonblocking and deadline-driven; per-connection byte counters
-/// measure framed traffic at the socket.
+impl TcpConn {
+    fn new(stream: TcpStream) -> TcpConn {
+        let fd = fd_of(&stream);
+        TcpConn {
+            stream,
+            fd,
+            rx: FrameBuffer::new(),
+            outq: VecDeque::new(),
+            open: true,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// Tear the connection down; queued downlinks are unsendable now.
+    fn kill(&mut self) {
+        self.open = false;
+        self.outq.clear();
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Bounded progress-looping write: drain the front of `conn.outq` until
+/// the kernel buffer fills (`WouldBlock`), the queue empties, or a hard
+/// error. Byte accounting happens here so partial writes are counted.
+/// Returns whether any bytes moved.
+fn flush_outq(conn: &mut TcpConn) -> std::io::Result<bool> {
+    let mut progressed = false;
+    while let Some(front) = conn.outq.front_mut() {
+        match conn.stream.write(&front.frame[front.off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(ErrorKind::WriteZero, "connection closed"));
+            }
+            Ok(k) => {
+                front.off += k;
+                conn.bytes_out += k as u64;
+                progressed = true;
+                if front.off == front.frame.len() {
+                    conn.outq.pop_front();
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(progressed)
+}
+
+/// The TCP transport's [`EventSource`]: every client connection behind one
+/// `poll(2)` readiness set.
 #[derive(Debug)]
-pub struct TcpServerTransport {
+struct TcpSource {
     conns: Vec<TcpConn>,
     /// round-robin start so one chatty client cannot starve the rest
     cursor: usize,
+    poller: Poller,
     decode_errors: u64,
+    disconnects: u64,
 }
+
+impl TcpSource {
+    /// Read a ready connection until `WouldBlock`, feeding reassembly.
+    /// A kill here (EOF, socket error) also disarms the connection's
+    /// write deadline so the wheel never wakes the reactor for a corpse.
+    fn drain_reads(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let conn = &mut self.conns[c];
+        loop {
+            match conn.rx.read_from(&mut conn.stream) {
+                Ok(0) => {
+                    // peer closed; a partial frame left behind is simply
+                    // lost bytes, not a protocol error
+                    conn.kill();
+                    self.disconnects += 1;
+                    wheel.cancel(c);
+                    break;
+                }
+                Ok(k) => conn.bytes_in += k as u64,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.kill();
+                    self.disconnects += 1;
+                    wheel.cancel(c);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Flush a ready connection's outbound queue and keep its write
+    /// deadline honest: progress re-arms the timer, an emptied queue
+    /// cancels it, a hard error kills the connection.
+    fn drain_writes(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let conn = &mut self.conns[c];
+        if conn.outq.is_empty() {
+            wheel.cancel(c);
+            return;
+        }
+        match flush_outq(conn) {
+            Err(_) => {
+                conn.kill();
+                self.disconnects += 1;
+                wheel.cancel(c);
+            }
+            Ok(progressed) => {
+                if conn.outq.is_empty() {
+                    wheel.cancel(c);
+                } else if progressed {
+                    wheel.arm(c, Instant::now() + WRITE_TIMEOUT);
+                }
+            }
+        }
+    }
+}
+
+impl EventSource for TcpSource {
+    fn pop(&mut self, wheel: &mut TimerWheel) -> Result<Option<Event>> {
+        let n = self.conns.len();
+        for i in 0..n {
+            let c = (self.cursor + i) % n;
+            let conn = &mut self.conns[c];
+            match conn.rx.next_frame() {
+                Ok(None) => {}
+                Ok(Some((msg, used))) => {
+                    self.cursor = (c + 1) % n;
+                    return Ok(Some(Event::Frame { msg, wire_bytes: used }));
+                }
+                Err(e) => {
+                    // unrecoverable past a framing error: without a
+                    // trustworthy length prefix there is nothing to skip
+                    // by, so the connection is closed
+                    let dropped = conn.rx.pending();
+                    conn.rx = FrameBuffer::new();
+                    conn.kill();
+                    wheel.cancel(c);
+                    self.decode_errors += 1;
+                    self.cursor = (c + 1) % n;
+                    return Ok(Some(Event::Garbage {
+                        client: Some(c),
+                        error: e.to_string(),
+                        wire_bytes: dropped,
+                    }));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn service(&mut self, wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
+        let mut entries = Vec::with_capacity(self.conns.len());
+        for (i, conn) in self.conns.iter().enumerate() {
+            if conn.open {
+                entries.push(PollEntry {
+                    token: i,
+                    fd: conn.fd,
+                    interest: Interest { read: true, write: !conn.outq.is_empty() },
+                });
+            }
+        }
+        let ready = self.poller.wait(&entries, budget).context("poll")?;
+        for r in ready {
+            if !self.conns[r.token].open {
+                continue; // killed by an earlier entry this pass
+            }
+            if r.readable {
+                self.drain_reads(wheel, r.token);
+            }
+            if r.writable && self.conns[r.token].open {
+                self.drain_writes(wheel, r.token);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_timer(&mut self, wheel: &mut TimerWheel, token: Token) {
+        // a write deadline fired: if the queue is still backed up, the
+        // peer has stopped reading — declare it gone
+        let Some(conn) = self.conns.get_mut(token) else {
+            return;
+        };
+        if conn.open && !conn.outq.is_empty() {
+            conn.kill();
+            self.disconnects += 1;
+        }
+        wheel.cancel(token);
+    }
+
+    fn exhausted(&self) -> bool {
+        self.conns.iter().all(|c| !c.open)
+    }
+}
+
+/// The socket transport: one TCP connection per client, all multiplexed by
+/// a single reactor loop — no per-client server threads, no sleep-spin.
+/// Per-connection byte counters measure framed traffic at the socket.
+#[derive(Debug)]
+pub struct TcpServerTransport {
+    reactor: Reactor,
+    src: TcpSource,
+}
+
+/// The listener's token during the accept loop (never a connection index).
+const LISTENER_TOKEN: Token = usize::MAX;
 
 impl TcpServerTransport {
     /// Accept exactly `n` clients off `listener`; each must introduce
     /// itself with a `Hello` frame naming a unique id in `0..n` before
-    /// `timeout` elapses.
+    /// `timeout` elapses. Accepting and handshaking are multiplexed on the
+    /// same readiness loop the round path uses, so a byte-dribbling peer
+    /// delays nobody and the deadline is one hard bound for everything.
     pub fn accept(
         listener: &TcpListener,
         n: usize,
@@ -301,209 +603,169 @@ impl TcpServerTransport {
         ensure!(n > 0, "a server transport needs at least one client");
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("listener nonblocking")?;
+        let mut poller = Poller::new();
         let mut slots: Vec<Option<TcpConn>> = Vec::new();
         slots.resize_with(n, || None);
         let mut filled = 0usize;
+        let mut pending: Vec<(TcpConn, std::net::SocketAddr)> = Vec::new();
         while filled < n {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    let (id, conn) = handshake(stream, deadline)
-                        .with_context(|| format!("handshake with {peer}"))?;
-                    ensure!(id < n, "{peer} introduced itself as client {id}, but n = {n}");
-                    ensure!(
-                        slots[id].is_none(),
-                        "duplicate connection for client {id} from {peer}"
-                    );
-                    slots[id] = Some(conn);
-                    filled += 1;
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        bail!("only {filled} of {n} clients connected before the accept deadline");
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("only {filled} of {n} clients connected before the accept deadline");
+            }
+            let mut entries = vec![PollEntry {
+                token: LISTENER_TOKEN,
+                fd: fd_of(listener),
+                interest: Interest::READ,
+            }];
+            for (i, (conn, _)) in pending.iter().enumerate() {
+                entries.push(PollEntry { token: i, fd: conn.fd, interest: Interest::READ });
+            }
+            let ready = poller.wait(&entries, Some(deadline - now)).context("accept poll")?;
+            let mut readable: Vec<usize> = Vec::new();
+            for r in &ready {
+                if r.token == LISTENER_TOKEN {
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, peer)) => {
+                                stream.set_nodelay(true).ok();
+                                // accepted sockets do not reliably inherit
+                                // the listener's nonblocking flag across
+                                // platforms — set it explicitly
+                                stream
+                                    .set_nonblocking(true)
+                                    .with_context(|| format!("nonblocking mode for {peer}"))?;
+                                pending.push((TcpConn::new(stream), peer));
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e).context("accept"),
+                        }
                     }
-                    std::thread::sleep(POLL_INTERVAL);
+                } else {
+                    readable.push(r.token);
                 }
-                Err(e) => return Err(e).context("accept"),
+            }
+            // descending order so swap_remove never disturbs an index we
+            // have yet to visit
+            readable.sort_unstable();
+            for i in readable.into_iter().rev() {
+                let (conn, peer) = &mut pending[i];
+                let id = handshake_step(conn).with_context(|| format!("handshake with {peer}"))?;
+                let Some(id) = id else {
+                    continue; // hello not complete yet
+                };
+                let peer = *peer;
+                ensure!(id < n, "{peer} introduced itself as client {id}, but n = {n}");
+                ensure!(slots[id].is_none(), "duplicate connection for client {id} from {peer}");
+                slots[id] = Some(pending.swap_remove(i).0);
+                filled += 1;
             }
         }
         let conns = slots.into_iter().map(|s| s.expect("filled == n")).collect();
-        Ok(TcpServerTransport { conns, cursor: 0, decode_errors: 0 })
+        // the wakeup counter measures round traffic, not connection setup
+        poller.wakeups = 0;
+        Ok(TcpServerTransport {
+            reactor: Reactor::new(),
+            src: TcpSource { conns, cursor: 0, poller, decode_errors: 0, disconnects: 0 },
+        })
     }
 }
 
-/// Read the `Hello` frame off a freshly-accepted connection and switch the
-/// stream into the nonblocking mode the poll loop needs.
-fn handshake(stream: TcpStream, deadline: Instant) -> Result<(usize, TcpConn)> {
-    stream.set_nodelay(true).ok();
-    // accepted sockets do not reliably inherit the listener's nonblocking
-    // flag across platforms — pin the handshake to blocking + read timeout
-    stream.set_nonblocking(false).context("handshake blocking mode")?;
-    let mut conn =
-        TcpConn { stream, rx: FrameBuffer::new(), open: true, bytes_in: 0, bytes_out: 0 };
-    let mut chunk = [0u8; 4096];
-    let id = loop {
+/// Advance one handshaking connection as far as its buffered bytes allow:
+/// `Ok(Some(id))` once the `Hello` frame is complete, `Ok(None)` while
+/// more bytes are needed, an error on EOF, corruption, or a non-hello
+/// frame.
+fn handshake_step(conn: &mut TcpConn) -> Result<Option<usize>> {
+    loop {
         if let Some((msg, _)) = conn.rx.next_frame()? {
             match msg {
-                Message::Hello { client } => break client,
+                Message::Hello { client } => return Ok(Some(client)),
                 other => bail!("expected a hello frame, got {other:?}"),
             }
         }
-        // re-arm with the *current* remaining budget each read, so the
-        // accept deadline bounds the whole handshake — a byte-dribbling
-        // peer cannot re-grant itself the full window per byte (and stall
-        // everyone queued behind this serial accept loop)
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        if remaining.is_zero() {
-            bail!("handshake timed out");
-        }
-        conn.stream.set_read_timeout(Some(remaining)).context("handshake read timeout")?;
-        match conn.stream.read(&mut chunk) {
+        match conn.rx.read_from(&mut conn.stream) {
             Ok(0) => bail!("connection closed during handshake"),
-            Ok(k) => {
-                conn.bytes_in += k as u64;
-                conn.rx.extend(&chunk[..k]);
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                bail!("handshake timed out")
-            }
+            Ok(k) => conn.bytes_in += k as u64,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(None),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) => return Err(e).context("handshake read"),
         }
-    };
-    conn.stream.set_read_timeout(None).context("clearing read timeout")?;
-    conn.stream.set_nonblocking(true).context("poll nonblocking mode")?;
-    Ok((id, conn))
-}
-
-/// Write one whole frame to a nonblocking stream: loop on `WouldBlock`
-/// (the kernel send buffer fills whenever a broadcast outruns the peer's
-/// reading) with a hard deadline. `std::io::Write::write_all` would error
-/// out on the first `WouldBlock` after an unknown partial write.
-/// Byte accounting happens here so even failed partial writes are counted.
-fn write_frame(conn: &mut TcpConn, frame: &[u8], timeout: Duration) -> std::io::Result<()> {
-    let deadline = Instant::now() + timeout;
-    let mut off = 0;
-    while off < frame.len() {
-        match conn.stream.write(&frame[off..]) {
-            Ok(0) => {
-                return Err(std::io::Error::new(ErrorKind::WriteZero, "connection closed"));
-            }
-            Ok(k) => {
-                off += k;
-                conn.bytes_out += k as u64;
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
-                    return Err(std::io::Error::new(
-                        ErrorKind::TimedOut,
-                        "downlink write timed out",
-                    ));
-                }
-                std::thread::sleep(POLL_INTERVAL);
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
-        }
     }
-    Ok(())
 }
 
 impl Transport for TcpServerTransport {
     fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
-        let n = self.conns.len();
-        let conn =
-            self.conns.get_mut(client).with_context(|| format!("no client {client} (n = {n})"))?;
+        let n = self.src.conns.len();
+        let conn = self
+            .src
+            .conns
+            .get_mut(client)
+            .with_context(|| format!("no client {client} (n = {n})"))?;
         ensure!(conn.open, "client {client} disconnected");
-        if let Err(e) = write_frame(conn, frame, WRITE_TIMEOUT) {
-            // a partial downlink is unrecoverable for the peer's framing —
-            // close rather than risk appending the next frame mid-frame
-            conn.open = false;
-            let _ = conn.stream.shutdown(Shutdown::Both);
-            return Err(e).with_context(|| format!("downlink write to client {client}"));
+        conn.outq.push_back(OutFrame { frame: frame.clone(), off: 0 });
+        // opportunistic flush: most downlinks fit the kernel buffer and
+        // leave here immediately; the remainder drains on write-readiness
+        // inside `poll`, under a timer-wheel deadline
+        match flush_outq(conn) {
+            Err(e) => {
+                conn.kill();
+                self.src.disconnects += 1;
+                self.reactor.wheel.cancel(client);
+                Err(e).with_context(|| format!("downlink write to client {client}"))
+            }
+            Ok(progressed) => {
+                if conn.outq.is_empty() {
+                    self.reactor.wheel.cancel(client);
+                } else if progressed || !self.reactor.wheel.is_armed(client) {
+                    // the deadline means "30 s without write *progress*":
+                    // progress resets it, a fresh stall starts it, but a
+                    // zero-progress send onto an already-stalled queue must
+                    // NOT push the reaper back — otherwise a peer that
+                    // stopped reading survives forever on round cadence
+                    // while its queue grows unboundedly
+                    self.reactor.wheel.arm(client, Instant::now() + WRITE_TIMEOUT);
+                }
+                Ok(())
+            }
         }
-        Ok(())
     }
 
     fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
-        let deadline = timeout.map(|t| Instant::now() + t);
-        let n = self.conns.len();
-        let mut chunk = [0u8; READ_CHUNK];
-        loop {
-            // 1. pop a frame already reassembled in some connection buffer
-            for i in 0..n {
-                let c = (self.cursor + i) % n;
-                let conn = &mut self.conns[c];
-                match conn.rx.next_frame() {
-                    Ok(None) => {}
-                    Ok(Some((msg, used))) => {
-                        self.cursor = (c + 1) % n;
-                        return Ok(Some(Event::Frame { msg, wire_bytes: used }));
-                    }
-                    Err(e) => {
-                        // unrecoverable past a framing error: without a
-                        // trustworthy length prefix there is nothing to
-                        // skip by, so the connection is closed
-                        let dropped = conn.rx.pending();
-                        conn.rx = FrameBuffer::new();
-                        conn.open = false;
-                        let _ = conn.stream.shutdown(Shutdown::Both);
-                        self.decode_errors += 1;
-                        self.cursor = (c + 1) % n;
-                        return Ok(Some(Event::Garbage {
-                            client: Some(c),
-                            error: e.to_string(),
-                            wire_bytes: dropped,
-                        }));
-                    }
-                }
-            }
-            // 2. nonblocking read pass over every open connection
-            let mut progressed = false;
-            for conn in self.conns.iter_mut().filter(|c| c.open) {
-                loop {
-                    match conn.stream.read(&mut chunk) {
-                        Ok(0) => {
-                            // peer closed; a partial frame left behind is
-                            // simply lost bytes, not a protocol error
-                            conn.open = false;
-                            break;
-                        }
-                        Ok(k) => {
-                            conn.bytes_in += k as u64;
-                            conn.rx.extend(&chunk[..k]);
-                            progressed = true;
-                        }
-                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                        Err(_) => {
-                            conn.open = false;
-                            break;
-                        }
-                    }
-                }
-            }
-            if progressed {
-                continue; // the new bytes may complete a frame
-            }
-            // every connection closed and nothing decodable buffered: no
-            // event can ever arrive. With a deadline the caller's wait is
-            // bounded and a partial round can still complete; without one
-            // an unbounded sleep loop would hang forever — error out (the
-            // channel transport's "uplink channel closed" equivalent).
-            if deadline.is_none() && self.conns.iter().all(|c| !c.open) {
-                bail!("all client connections closed");
-            }
-            match deadline {
-                Some(dl) if Instant::now() >= dl => return Ok(None),
-                _ => std::thread::sleep(POLL_INTERVAL),
-            }
-        }
+        self.reactor.poll_events(&mut self.src, timeout)
     }
 
     fn close(&mut self) -> Result<()> {
-        let f = wire::encode_shutdown();
-        for conn in self.conns.iter_mut().filter(|c| c.open) {
-            let _ = write_frame(conn, &f, Duration::from_secs(1));
+        let f = Arc::new(wire::encode_shutdown());
+        for conn in self.src.conns.iter_mut().filter(|c| c.open) {
+            conn.outq.push_back(OutFrame { frame: f.clone(), off: 0 });
+        }
+        // multiplexed flush of every queue under one hard deadline
+        let deadline = Instant::now() + CLOSE_TIMEOUT;
+        loop {
+            let mut entries = Vec::new();
+            for (i, conn) in self.src.conns.iter().enumerate() {
+                if conn.open && !conn.outq.is_empty() {
+                    entries.push(PollEntry { token: i, fd: conn.fd, interest: Interest::WRITE });
+                }
+            }
+            if entries.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break; // unsendable peers lose their shutdown frame
+            }
+            let ready = self.src.poller.wait(&entries, Some(deadline - now)).context("poll")?;
+            for r in ready {
+                let conn = &mut self.src.conns[r.token];
+                if conn.open && flush_outq(conn).is_err() {
+                    conn.kill();
+                    self.reactor.wheel.cancel(r.token);
+                }
+            }
+        }
+        for conn in self.src.conns.iter_mut().filter(|c| c.open) {
             // half-close: the client drains the shutdown frame, sees EOF,
             // and closes its end — no RST on a socket with data in flight
             let _ = conn.stream.shutdown(Shutdown::Write);
@@ -513,12 +775,14 @@ impl Transport for TcpServerTransport {
 
     fn stats(&self) -> TransportStats {
         let mut t = TransportStats { label: "tcp", ..Default::default() };
-        for conn in &self.conns {
+        for conn in &self.src.conns {
             t.bytes_in += conn.bytes_in;
             t.bytes_out += conn.bytes_out;
             t.per_client.push((conn.bytes_in, conn.bytes_out));
         }
-        t.decode_errors = self.decode_errors;
+        t.decode_errors = self.src.decode_errors;
+        t.disconnects = self.src.disconnects;
+        t.wakeups = self.src.poller.wakeups;
         t
     }
 }
@@ -560,17 +824,13 @@ impl TcpClientTransport {
 
 impl ClientTransport for TcpClientTransport {
     fn recv(&mut self) -> Result<Option<Message>> {
-        let mut chunk = [0u8; READ_CHUNK];
         loop {
             if let Some((msg, _)) = self.rx.next_frame()? {
                 return Ok(Some(msg));
             }
-            match self.stream.read(&mut chunk) {
+            match self.rx.read_from(&mut self.stream) {
                 Ok(0) => return Ok(None), // server closed without shutdown
-                Ok(k) => {
-                    self.bytes_in += k as u64;
-                    self.rx.extend(&chunk[..k]);
-                }
+                Ok(k) => self.bytes_in += k as u64,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                 Err(e) => return Err(e).context("downlink read"),
             }
@@ -640,6 +900,37 @@ mod tests {
     }
 
     #[test]
+    fn frame_buffer_read_from_reassembles_across_reads() {
+        // a reader that serves one byte at a time: read_from must keep
+        // consuming until the frame completes, identically to extend()
+        struct OneByte<'a>(&'a [u8]);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() || out.is_empty() {
+                    return Ok(0);
+                }
+                out[0] = self.0[0];
+                self.0 = &self.0[1..];
+                Ok(1)
+            }
+        }
+        let f = wire::encode_round(9, &[0.5f32; 33]);
+        let mut src = OneByte(&f);
+        let mut fb = FrameBuffer::new();
+        let mut total = 0;
+        loop {
+            if let Some((msg, used)) = fb.next_frame().unwrap() {
+                assert_eq!(used, f.len());
+                assert!(matches!(msg, Message::Round { round: 9, .. }));
+                break;
+            }
+            total += fb.read_from(&mut src).unwrap();
+        }
+        assert_eq!(total, f.len());
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
     fn channel_pair_roundtrip_and_accounting() {
         let (mut server, mut clients) = ChannelTransport::pair(2);
         let down = Arc::new(wire::encode_round(0, &[1.0f32; 4]));
@@ -664,6 +955,7 @@ mod tests {
         assert_eq!(s.bytes_in, up.len() as u64);
         assert_eq!(s.per_client.len(), 2);
         assert_eq!(s.per_client[1].1, down.len() as u64);
+        assert!(s.wakeups > 0);
     }
 
     #[test]
@@ -738,10 +1030,49 @@ mod tests {
             assert_eq!(s.decode_errors, 1);
             assert!(s.bytes_in > 0 && s.bytes_out > 0);
             assert_eq!(s.per_client.len(), 2);
+            assert!(s.wakeups > 0);
             server.close().unwrap();
             for h in handles {
                 h.join().unwrap();
             }
+        });
+    }
+
+    #[test]
+    fn tcp_queued_downlink_flushes_on_write_readiness() {
+        // a broadcast far larger than any kernel send buffer: send() must
+        // queue the remainder and poll() must flush it as the peer reads —
+        // the client's eventual reply proves the whole frame arrived
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let d = 2_000_000usize; // ~8 MB round frame
+        std::thread::scope(|scope| {
+            let addr2 = addr.clone();
+            let h = scope.spawn(move || {
+                let mut t = connect(&addr2, 0);
+                match t.recv().unwrap().unwrap() {
+                    Message::Round { round: 3, weights } => {
+                        assert_eq!(weights.len(), d);
+                        assert!(weights.iter().all(|&w| w == 0.25));
+                    }
+                    other => panic!("wrong downlink: {other:?}"),
+                }
+                t.send(&wire::encode_hello(3)).unwrap();
+                assert!(matches!(t.recv().unwrap(), Some(Message::Shutdown) | None));
+            });
+
+            let mut server =
+                TcpServerTransport::accept(&listener, 1, Duration::from_secs(10)).unwrap();
+            let down = Arc::new(wire::encode_round(3, &vec![0.25f32; d]));
+            server.send(0, &down).unwrap();
+            match server.poll(Some(Duration::from_secs(30))).unwrap().unwrap() {
+                Event::Frame { msg: Message::Hello { client: 3 }, .. } => {}
+                other => panic!("unexpected event: {other:?}"),
+            }
+            let s = server.stats();
+            assert_eq!(s.bytes_out, down.len() as u64);
+            server.close().unwrap();
+            h.join().unwrap();
         });
     }
 

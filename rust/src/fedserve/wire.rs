@@ -337,11 +337,14 @@ fn parse_hello(payload: &[u8]) -> Result<Message> {
     Ok(Message::Hello { client })
 }
 
-/// Scan the front of a streaming receive buffer: either a whole validated
-/// frame, a request for more bytes, or a typed [`FrameError`]. Corruption
-/// is detected as early as the bytes allow (a wrong magic byte fails on
-/// the first read, not after a full bogus frame has been buffered).
-pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
+/// Header-only scan: the total framed size of the frame at the front of
+/// `buf`, or `None` while the header itself is incomplete. Validates
+/// exactly what the visible bytes allow (magic, version, length cap) and
+/// nothing more — this is how a streaming reader learns *how many bytes to
+/// ask the kernel for* before a single payload byte has arrived, so a
+/// large round broadcast is read in one exact-sized `read` instead of a
+/// chain of fixed chunks.
+pub fn frame_len(buf: &[u8]) -> Result<Option<usize>, FrameError> {
     if !buf.is_empty() && buf[0] != MAGIC[0] {
         return Err(FrameError::BadMagic { got: [buf[0], buf.get(1).copied().unwrap_or(0)] });
     }
@@ -352,17 +355,29 @@ pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
         return Err(FrameError::BadVersion { got: buf[2] });
     }
     if buf.len() < HEADER_BYTES {
-        return Ok(Scan::Incomplete { need: FRAME_OVERHEAD });
+        return Ok(None);
     }
-    let kind = buf[3];
     let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
     if len > MAX_PAYLOAD_BYTES {
         return Err(FrameError::Oversized { len });
     }
-    let total = FRAME_OVERHEAD + len;
+    Ok(Some(FRAME_OVERHEAD + len))
+}
+
+/// Scan the front of a streaming receive buffer: either a whole validated
+/// frame, a request for more bytes, or a typed [`FrameError`]. Corruption
+/// is detected as early as the bytes allow (a wrong magic byte fails on
+/// the first read, not after a full bogus frame has been buffered).
+pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
+    let total = match frame_len(buf)? {
+        None => return Ok(Scan::Incomplete { need: FRAME_OVERHEAD }),
+        Some(t) => t,
+    };
     if buf.len() < total {
         return Ok(Scan::Incomplete { need: total });
     }
+    let kind = buf[3];
+    let len = total - FRAME_OVERHEAD;
     let crc_got = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
     let crc_want = crc32(&buf[2..HEADER_BYTES + len]);
     if crc_got != crc_want {
@@ -590,6 +605,20 @@ mod tests {
         let mut bad = f;
         bad[2] = 99;
         assert!(matches!(scan_prefix(&bad[..3]), Err(FrameError::BadVersion { got: 99 })));
+    }
+
+    #[test]
+    fn frame_len_sees_the_total_as_soon_as_the_header_does() {
+        let f = encode_round(2, &[1.0f32; 100]);
+        for cut in 0..HEADER_BYTES {
+            assert_eq!(frame_len(&f[..cut]).unwrap(), None, "cut {cut}");
+        }
+        for cut in HEADER_BYTES..=f.len() {
+            assert_eq!(frame_len(&f[..cut]).unwrap(), Some(f.len()), "cut {cut}");
+        }
+        let mut bad = f;
+        bad[0] ^= 0xff;
+        assert!(matches!(frame_len(&bad[..1]), Err(FrameError::BadMagic { .. })));
     }
 
     #[test]

@@ -181,6 +181,9 @@ fn main() -> Result<()> {
             cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 30_000)? as u64;
             cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
             cfg.server.prewarm = !args.bool("no-prewarm");
+            // persist hot quantizer tables across runs (ROADMAP: the
+            // cross-run half of the prewarm item)
+            cfg.server.table_cache_path = args.str_opt("table-cache").map(String::from);
             let sample = args.usize_or("sample", 0)?;
             if sample > 0 {
                 cfg.server.sampled_clients = Some(sample);
@@ -252,7 +255,8 @@ fn main() -> Result<()> {
                  scheme strings: a name (m22-gennorm, tinyscript, fp8, sketch, none) or\n\
                  name:key=val,... (keys m, rq, k, min_fit, depth, seed), e.g. m22-gennorm:m=2,rq=3\n\
                  serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory --no-prewarm\n\
-                        --tcp-loopback (real sockets over 127.0.0.1 in one process)\n\
+                        --table-cache PATH (persist hot quantizer tables across runs)\n\
+                        --tcp-loopback (one reactor thread multiplexing real 127.0.0.1 sockets; scales to --clients 256+)\n\
                         --listen ADDR (be the PS) | --connect ADDR --id N (be one client)\n\
                  see DESIGN.md for the per-experiment index"
             );

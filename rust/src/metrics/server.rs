@@ -34,6 +34,12 @@ pub struct TransportStats {
     pub decode_errors: u64,
     /// per-client `(bytes_in, bytes_out)`, indexed by client id
     pub per_client: Vec<(u64, u64)>,
+    /// connections that went away mid-run (EOF, socket error, or a write
+    /// deadline firing on a peer that stopped reading)
+    pub disconnects: u64,
+    /// readiness wakeups the reactor served (one `poll(2)` call — or one
+    /// channel wait — per wakeup; the syscall-pressure observability knob)
+    pub wakeups: u64,
 }
 
 /// Accumulated server statistics for one run.
@@ -44,6 +50,9 @@ pub struct ServerStats {
     pub cache_misses: u64,
     /// quantizer tables designed at startup (ROADMAP: prewarm)
     pub prewarmed_tables: u64,
+    /// of those, tables reloaded from a persisted cache file instead of
+    /// designed fresh (ROADMAP: table-cache persistence)
+    pub preloaded_tables: u64,
     /// lookups served by a prewarmed table
     pub prewarm_hits: u64,
     /// transport-measured byte totals (socket truth for TCP runs)
@@ -65,6 +74,11 @@ impl ServerStats {
     pub fn set_prewarm(&mut self, tables: u64, hits: u64) {
         self.prewarmed_tables = tables;
         self.prewarm_hits = hits;
+    }
+
+    /// Record how many tables a persisted cache file contributed.
+    pub fn set_preloaded(&mut self, tables: u64) {
+        self.preloaded_tables = tables;
     }
 
     /// Record the transport byte counters (called once, at end of run).
@@ -155,6 +169,9 @@ impl ServerStats {
                 self.prewarmed_tables,
                 100.0 * self.prewarm_hit_rate()
             ));
+            if self.preloaded_tables > 0 {
+                s.push_str(&format!(" ({} reloaded from disk)", self.preloaded_tables));
+            }
         }
         if !self.transport.label.is_empty() {
             s.push_str(&format!(
@@ -164,6 +181,12 @@ impl ServerStats {
                 self.transport.bytes_out,
                 self.transport.decode_errors
             ));
+            if self.transport.disconnects > 0 {
+                s.push_str(&format!(", {} disconnects", self.transport.disconnects));
+            }
+            if self.transport.wakeups > 0 {
+                s.push_str(&format!(" ({} wakeups)", self.transport.wakeups));
+            }
         }
         s
     }
@@ -256,8 +279,22 @@ mod tests {
             bytes_out: 1024,
             decode_errors: 3,
             per_client: vec![(2048, 512), (2048, 512)],
+            disconnects: 2,
+            wakeups: 40,
         });
         let sum = s.summary();
         assert!(sum.contains("wire[tcp]: 4096 B in / 1024 B out, 3 decode errors"), "{sum}");
+        assert!(sum.contains("2 disconnects"), "{sum}");
+        assert!(sum.contains("(40 wakeups)"), "{sum}");
+    }
+
+    #[test]
+    fn preloaded_tables_reach_the_summary() {
+        let mut s = ServerStats::default();
+        s.set_prewarm(13, 0);
+        s.set_preloaded(9);
+        let sum = s.summary();
+        assert!(sum.contains("prewarm: 13 tables"), "{sum}");
+        assert!(sum.contains("(9 reloaded from disk)"), "{sum}");
     }
 }

@@ -75,6 +75,14 @@ fn human(x: f64) -> String {
     }
 }
 
+/// Whether the CI quick-sampling profile is active (`BENCH_QUICK` set in
+/// the environment). The single source of truth for the env contract —
+/// benches that need custom sampling (macro benches) branch on this
+/// instead of re-probing the variable themselves.
+pub fn quick_mode() -> bool {
+    std::env::var_os("BENCH_QUICK").is_some()
+}
+
 /// Benchmark runner with warmup + sampling configuration.
 pub struct Bencher {
     pub warmup_iters: usize,
@@ -92,6 +100,18 @@ impl Default for Bencher {
 impl Bencher {
     pub fn quick() -> Self {
         Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1, items_per_iter: None }
+    }
+
+    /// The CI-aware profile: [`quick_mode`] selects [`Bencher::quick`]
+    /// (the `bench-smoke` CI lane), anything else the default sampling.
+    /// Benches built on this run identically everywhere and just sample
+    /// less under CI wall-clock budgets.
+    pub fn from_env() -> Self {
+        if quick_mode() {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        }
     }
 
     pub fn throughput(mut self, items: f64) -> Self {
@@ -133,6 +153,76 @@ impl Bencher {
     }
 }
 
+/// Collects [`BenchStats`] rows and serializes them as machine-readable
+/// JSON — the `BENCH_ci.json` artifact the CI `bench-smoke` lane uploads
+/// (and `python/tools/fill_experiments.py` folds into EXPERIMENTS.md).
+#[derive(Debug, Default)]
+pub struct BenchLog {
+    rows: Vec<BenchStats>,
+}
+
+impl BenchLog {
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    pub fn push(&mut self, stats: BenchStats) {
+        self.rows.push(stats);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// One JSON array, one object per bench row. Names are escaped; all
+    /// timings are nanoseconds; `throughput` is items/second or null.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let name: String = r
+                .name
+                .chars()
+                .flat_map(|c| match c {
+                    '"' => vec!['\\', '"'],
+                    '\\' => vec!['\\', '\\'],
+                    c if (c as u32) < 0x20 => vec![' '],
+                    c => vec![c],
+                })
+                .collect();
+            s.push_str(&format!(
+                "  {{\"name\": \"{}\", \"samples\": {}, \"mean_ns\": {:.1}, \
+                 \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}, \
+                 \"throughput_per_s\": {}}}{}\n",
+                name,
+                r.samples,
+                r.mean_ns,
+                r.median_ns,
+                r.p10_ns,
+                r.p90_ns,
+                r.throughput.map(|t| format!("{t:.1}")).unwrap_or_else(|| "null".into()),
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        s.push(']');
+        s
+    }
+
+    /// Write the JSON to `$BENCH_JSON` if that env var names a path.
+    /// Returns the path written, if any.
+    pub fn write_env(&self) -> std::io::Result<Option<String>> {
+        let Some(path) = std::env::var_os("BENCH_JSON") else {
+            return Ok(None);
+        };
+        let path = path.to_string_lossy().into_owned();
+        std::fs::write(&path, self.to_json())?;
+        Ok(Some(path))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +250,38 @@ mod tests {
         // throughput = items / mean seconds
         let expect = 1_000.0 * 1e9 / s.mean_ns;
         assert!((tp - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn bench_log_emits_valid_json_shape() {
+        let mut log = BenchLog::new();
+        log.push(BenchStats {
+            name: "row \"one\"".into(),
+            samples: 5,
+            mean_ns: 1234.5,
+            median_ns: 1200.0,
+            p10_ns: 1000.0,
+            p90_ns: 1500.0,
+            throughput: Some(2.5e6),
+        });
+        log.push(BenchStats {
+            name: "row two".into(),
+            samples: 5,
+            mean_ns: 10.0,
+            median_ns: 10.0,
+            p10_ns: 9.0,
+            p90_ns: 11.0,
+            throughput: None,
+        });
+        let j = log.to_json();
+        assert!(j.starts_with("[\n"), "{j}");
+        assert!(j.ends_with(']'), "{j}");
+        assert!(j.contains("\"name\": \"row \\\"one\\\"\""), "{j}");
+        assert!(j.contains("\"mean_ns\": 1234.5"), "{j}");
+        assert!(j.contains("\"throughput_per_s\": null"), "{j}");
+        // exactly one separating comma between the two objects
+        assert_eq!(j.matches("},\n").count(), 1, "{j}");
+        assert_eq!(log.len(), 2);
     }
 
     #[test]

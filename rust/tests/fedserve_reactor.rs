@@ -1,0 +1,239 @@
+//! Integration: the fedserve reactor under load.
+//!
+//! PR 3 proved the TCP transport moves bytes without touching numerics;
+//! this suite proves the *reactor* rewrite (one `poll(2)` readiness loop
+//! multiplexing every connection, timer-wheel deadlines, per-connection
+//! outbound queues) keeps that contract while scaling to hundreds of
+//! connections on a single server thread:
+//!
+//! * bit parity vs the threaded channel path for every registry scheme —
+//!   the readiness loop reorders *waits*, never bytes;
+//! * straggler-deadline accuracy at 256 live connections: the round ends
+//!   within 10 ms of the configured deadline, and (on real `poll(2)`) in a
+//!   handful of wakeups, not a 1 ms-spin's hundreds;
+//! * a mid-round disconnect storm — a third of the fleet hangs up, a third
+//!   sends garbage — must degrade (drops + attributed decode errors),
+//!   never abort, and the next round must still complete on the healthy
+//!   remainder;
+//! * a 128-client loopback run through the full `simulate_with` path.
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use m22::compress::{encode_once, NoCompression};
+use m22::config::{ExperimentConfig, Scheme, ServerConfig};
+use m22::coordinator::Uplink;
+use m22::fedserve::sim::{sim_spec, simulate_with, TransportMode};
+use m22::fedserve::transport::{ClientTransport, TcpClientTransport, TcpServerTransport, Transport};
+use m22::fedserve::wire;
+use m22::fedserve::FedServer;
+use m22::quantizer::Family;
+
+const NET_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+#[test]
+fn reactor_bit_parity_with_the_threaded_channel_path_for_every_scheme() {
+    let d = 900;
+    for scheme in [
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ] {
+        let mut cfg = ExperimentConfig::new("sim", scheme, 2, 2);
+        cfg.n_clients = 4;
+        cfg.server.shards = 2;
+        cfg.server.straggler_timeout_ms = 30_000;
+        let chan = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+        let tcp = simulate_with(&cfg, d, TransportMode::TcpLoopback).unwrap();
+        assert_bitwise_eq(&chan.w, &tcp.w, &format!("{scheme:?}"));
+        assert!(chan.w.iter().any(|&x| x != 0.0), "{scheme:?}: run did nothing");
+        // both transports went through the reactor loop...
+        assert!(tcp.stats.transport.wakeups > 0, "{scheme:?}");
+        assert!(chan.stats.transport.wakeups > 0, "{scheme:?}");
+        // ...and a clean run loses nobody
+        assert_eq!(tcp.stats.transport.disconnects, 0, "{scheme:?}");
+        assert_eq!(tcp.stats.transport.decode_errors, 0, "{scheme:?}");
+        assert_eq!(tcp.stats.total_dropped(), 0, "{scheme:?}");
+    }
+}
+
+#[test]
+#[ignore = "timing-sensitive (10 ms budget): run serially — CI does \
+            `--include-ignored --test-threads=1` in the reactor lane"]
+fn straggler_deadline_is_accurate_at_256_connections() {
+    let n = 256usize;
+    let d = 64usize;
+    let deadline_ms = 250u64;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    std::thread::scope(|scope| {
+        // one helper holds all 256 client sockets open and silent — every
+        // sampled participant is a straggler, so the round must run the
+        // full deadline and not a poll-granularity more
+        scope.spawn(move || {
+            let mut held = Vec::with_capacity(n);
+            for id in 0..n {
+                held.push(TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap());
+            }
+            let _ = release_rx.recv();
+            drop(held);
+        });
+
+        let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
+        let cfg = ServerConfig { straggler_timeout_ms: deadline_ms, ..Default::default() };
+        let mut server = FedServer::new(cfg, n, 1, Box::new(NoCompression));
+        let participants: Vec<usize> = (0..n).collect();
+        let mut w = vec![0.0f32; d];
+        let lo = Duration::from_millis(deadline_ms);
+        // the real poll(2) path owes ISSUE-level precision; the spin
+        // fallback's 1 ms-tick granularity gets the old loop's slack
+        let budget = if cfg!(feature = "spin-poll") { 25 } else { 10 };
+        let hi = lo + Duration::from_millis(budget);
+        // ending EARLY is a correctness bug and fails immediately; ending
+        // late can be shared-runner scheduling noise, so one retry damps
+        // the flake without weakening the bound
+        let mut late = None;
+        for attempt in 0..2 {
+            let t0 = Instant::now();
+            let s = server
+                .run_round(attempt, &participants, &mut transport, &spec, &mut w)
+                .unwrap();
+            let elapsed = t0.elapsed();
+            assert_eq!(s.received, 0);
+            assert_eq!(s.dropped, n);
+            assert!(elapsed >= lo, "round ended {elapsed:?} before the {deadline_ms} ms deadline");
+            if elapsed <= hi {
+                late = None;
+                break;
+            }
+            late = Some(elapsed - lo);
+        }
+        if let Some(err) = late {
+            panic!("deadline error {err:?} exceeds {budget} ms at {n} connections (twice)");
+        }
+        // real poll(2) parks once until the deadline; a sleep-spin would
+        // have burned ~one wakeup per millisecond
+        #[cfg(not(feature = "spin-poll"))]
+        assert!(
+            transport.stats().wakeups < 32,
+            "reactor woke {} times for one idle round",
+            transport.stats().wakeups
+        );
+        release_tx.send(()).unwrap();
+        transport.close().unwrap();
+    });
+}
+
+#[test]
+fn disconnect_storm_degrades_and_never_aborts() {
+    // 64 clients: 22 healthy, 21 hang up after reading the broadcast,
+    // 21 answer with a corrupt frame. The round must complete on its
+    // deadline with every failure counted and attributed, and the *next*
+    // round must still work with the healthy remainder.
+    let n = 64usize;
+    let healthy = 22usize; // ids 0..22
+    let leavers = 21usize; // ids 22..43
+    let d = 128usize;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        for id in 0..n {
+            let addr = addr.clone();
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut t = TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap();
+                loop {
+                    match t.recv() {
+                        Ok(Some(wire::Message::Round { round, .. })) => {
+                            if id >= healthy && id < healthy + leavers {
+                                return; // storm: vanish mid-round
+                            }
+                            let g = vec![(id + 1) as f32; d];
+                            let (payload, _, report) =
+                                encode_once(&NoCompression, &g, spec).unwrap();
+                            let up = Uplink {
+                                client_id: id,
+                                round,
+                                payload,
+                                report,
+                                train_loss: 0.0,
+                                error: None,
+                            };
+                            let mut f = wire::encode_update(&up);
+                            if id >= healthy + leavers {
+                                let at = f.len() / 2;
+                                f[at] ^= 0x01; // storm: corrupt frame
+                            }
+                            if t.send(&f).is_err() {
+                                return; // server closed us (expected)
+                            }
+                        }
+                        _ => return, // shutdown or server-side close
+                    }
+                }
+            });
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
+        let cfg = ServerConfig { straggler_timeout_ms: 800, ..Default::default() };
+        let mut server = FedServer::new(cfg, n, 1, Box::new(NoCompression));
+        let participants: Vec<usize> = (0..n).collect();
+        let mut w = vec![0.0f32; d];
+        let s = server.run_round(0, &participants, &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s.received, healthy);
+        assert_eq!(s.decode_errors, n - healthy - leavers);
+        assert_eq!(s.dropped, n - healthy);
+        // per-client attribution: every corrupt sender has exactly one
+        // decode error, nobody else has any
+        for id in 0..n {
+            let expect = usize::from(id >= healthy + leavers);
+            assert_eq!(server.sessions[id].decode_errors, expect, "client {id}");
+        }
+        let ts = transport.stats();
+        assert_eq!(ts.decode_errors, (n - healthy - leavers) as u64);
+        assert!(
+            ts.disconnects >= leavers as u64,
+            "only {} disconnects observed for {leavers} leavers",
+            ts.disconnects
+        );
+        // the next round degrades to the healthy remainder — no abort
+        let s1 = server.run_round(1, &participants, &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s1.received, healthy);
+        assert_eq!(s1.dropped, n - healthy);
+        assert_eq!(s1.decode_errors, 0);
+        transport.close().unwrap();
+    });
+}
+
+#[test]
+fn reactor_runs_128_clients_through_the_sim_path() {
+    let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 2);
+    cfg.n_clients = 128;
+    cfg.server.shards = 4;
+    cfg.server.straggler_timeout_ms = 60_000;
+    let rep = simulate_with(&cfg, 512, TransportMode::TcpLoopback).unwrap();
+    assert_eq!(rep.stats.rounds.len(), 2);
+    assert_eq!(rep.stats.total_received(), 256);
+    assert_eq!(rep.stats.total_dropped(), 0);
+    assert_eq!(rep.stats.transport.per_client.len(), 128);
+    assert!(rep.stats.transport.per_client.iter().all(|&(i, o)| i > 0 && o > 0));
+    assert_eq!(rep.stats.transport.decode_errors, 0);
+    assert_eq!(rep.stats.transport.disconnects, 0);
+    assert!(rep.w_norm() > 0.0);
+}

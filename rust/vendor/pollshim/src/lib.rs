@@ -1,0 +1,169 @@
+//! Minimal `poll(2)` shim for the offline build (no `libc` on crates.io
+//! access, same situation as the in-tree `anyhow` substitute).
+//!
+//! The fedserve reactor needs exactly one syscall the Rust standard library
+//! does not expose: *wait until any of these file descriptors is readable /
+//! writable, or a timeout elapses*. `poll(2)` is the portable POSIX
+//! spelling of that (no `FD_SETSIZE` cliff like `select`, no per-platform
+//! registration object like epoll/kqueue), so this crate declares it
+//! directly against the C ABI and wraps it with errno handling.
+//!
+//! Scope is deliberately tiny: one function, the `pollfd` struct, and the
+//! event bits the reactor uses. The struct layout (`int fd; short events;
+//! short revents;`) and the `POLL*` constants below are identical across
+//! Linux, macOS, and the BSDs; the only per-OS difference is the width of
+//! `nfds_t`, handled by a `cfg` alias. Non-Unix targets compile a stub
+//! that reports `Unsupported` — the reactor falls back to its portable
+//! spin loop there (`m22` feature `spin-poll` forces the same fallback for
+//! testing).
+
+use std::io;
+
+/// There is data to read.
+pub const POLLIN: i16 = 0x001;
+/// Writing will not block (send-buffer space available).
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// Invalid descriptor (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// One descriptor's interest set and readiness result — C `struct pollfd`.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PollFd {
+    /// The file descriptor to watch (a negative fd is ignored by the
+    /// kernel — callers can mask entries without reshuffling the slice).
+    pub fd: i32,
+    /// Requested events (`POLLIN` / `POLLOUT`).
+    pub events: i16,
+    /// Returned events (kernel-written; also `POLLERR`/`POLLHUP`/`POLLNVAL`).
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR) != 0
+    }
+
+    pub fn invalid(&self) -> bool {
+        self.revents & POLLNVAL != 0
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    pub type Nfds = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    pub type Nfds = std::os::raw::c_ulong;
+
+    extern "C" {
+        pub fn poll(
+            fds: *mut super::PollFd,
+            nfds: Nfds,
+            timeout: std::os::raw::c_int,
+        ) -> std::os::raw::c_int;
+    }
+}
+
+/// Wait until at least one entry of `fds` is ready, or `timeout_ms`
+/// elapses (`-1` = block indefinitely, `0` = nonblocking check). Returns
+/// how many entries have nonzero `revents`. `EINTR` is retried with the
+/// full timeout — callers working against a deadline recompute the budget
+/// each turn, so a rare signal cannot extend a wait unboundedly.
+#[cfg(unix)]
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as sys::Nfds, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let e = io::Error::last_os_error();
+        if e.kind() != io::ErrorKind::Interrupted {
+            return Err(e);
+        }
+    }
+}
+
+/// Non-Unix stub: the reactor detects this at compile time (`cfg(unix)`)
+/// and uses its spin fallback instead; calling the stub is a programming
+/// error surfaced as `Unsupported`.
+#[cfg(not(unix))]
+pub fn poll(_fds: &mut [PollFd], _timeout_ms: i32) -> io::Result<usize> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "poll(2) is unavailable on this target"))
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::{Duration, Instant};
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn fresh_socket_is_writable_not_readable() {
+        let (a, _b) = pair();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN | POLLOUT)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+        assert!(!fds[0].readable());
+    }
+
+    #[test]
+    fn becomes_readable_after_peer_write() {
+        let (a, mut b) = pair();
+        b.write_all(b"x").unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 5000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn timeout_expires_without_events() {
+        let (a, _b) = pair();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        let n = poll(&mut fds, 50).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn zero_timeout_is_nonblocking() {
+        let (a, _b) = pair();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        poll(&mut fds, 0).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_fd_set_is_a_pure_sleep() {
+        let t0 = Instant::now();
+        let n = poll(&mut [], 30).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}
