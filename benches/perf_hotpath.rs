@@ -15,11 +15,13 @@ use m22::compress::bitpack::pack_indices;
 use m22::compress::m22::{M22, M22Config};
 use m22::compress::rle::{encode_positions, position_bits};
 use m22::compress::topk::topk;
-use m22::compress::{encode_once, BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder};
-use m22::config::{ExperimentConfig, Scheme};
+use m22::compress::{
+    encode_once, BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder, NoCompression,
+};
+use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, ServerConfig};
 use m22::fedserve::aggregate::{accumulate_sharded, aggregate_serial, aggregate_sharded};
 use m22::fedserve::sim::sim_spec;
-use m22::fedserve::{simulate_with, TransportMode};
+use m22::fedserve::{simulate_with, wire, ChannelTransport, FedServer, TransportMode};
 use m22::quantizer::{design, Family, QuantizerTables};
 use m22::stats::fitting::Moments;
 use m22::stats::{Distribution, GenNorm};
@@ -148,6 +150,80 @@ fn main() {
             log.push(mb.run(&format!("fedserve 2-round run (tcp reactor, n={n})"), || {
                 simulate_with(&cfg, d, TransportMode::TcpLoopback).unwrap().rounds
             }));
+        }
+    }
+
+    // --- the collect hot path: O(1) id→slot routing at growing k ---------
+    //
+    // Whole run_round calls over the channel transport with pre-encoded
+    // NoCompression uplinks at a tiny d, so the timing is dominated by the
+    // collect loop: poll, frame decode, and sender→slot routing. The old
+    // loop did a linear participants scan per uplink (O(k²) per round);
+    // the SlotMap makes it one table lookup per event — these rows are the
+    // EXPERIMENTS.md evidence that collect cost vs k is now linear.
+    println!("\n== fedserve collect path (id→slot routing, d = 256) ==");
+    {
+        let d = 256usize;
+        let spec = sim_spec(d);
+        for n in [64usize, 256, 1024] {
+            let (mut transport, mut clients) = ChannelTransport::pair(n);
+            let mut server = FedServer::new(
+                ServerConfig { straggler_timeout_ms: 60_000, ..Default::default() },
+                n,
+                1,
+                Box::new(NoCompression),
+            );
+            let participants: Vec<usize> = (0..n).collect();
+            // one pre-encoded round-0 uplink frame per client
+            let frames: Vec<Vec<u8>> = (0..n)
+                .map(|id| {
+                    let g = vec![0.5f32; d];
+                    let (payload, _, report) = encode_once(&NoCompression, &g, &spec).unwrap();
+                    wire::encode_update_parts(id, 0, &payload, &report, 0.0)
+                })
+                .collect();
+            let mut w = vec![0.0f32; d];
+            let b = Bencher::from_env().throughput(n as f64);
+            log.push(b.run(&format!("ps collect+route (n={n})"), || {
+                for (c, f) in clients.iter_mut().zip(&frames) {
+                    c.send(f).unwrap();
+                }
+                server.run_round(0, &participants, &mut transport, &spec, &mut w).unwrap().received
+            }));
+        }
+    }
+
+    // --- multi-PS cluster rounds: single PS vs n_ps ∈ {2, 4} -------------
+    //
+    // Whole simulate_with runs like the reactor section above (2 rounds,
+    // channel transport, n = 64 — the comparator row is
+    // `fedserve 2-round run (channel, n=64)`), with the round loop hosted
+    // by a PsCluster in both partitioning modes. Range mode pays n_ps
+    // slice broadcasts per client and a model-parallel reduce; replica
+    // mode pays per-subset aggregation plus the eq.-(7) sync.
+    println!("\n== fedserve cluster rounds (2 rounds/run, d = 4096, n = 64) ==");
+    {
+        let rounds = 2usize;
+        let d = 4096usize;
+        let macro_bench = || Bencher {
+            warmup_iters: 0,
+            samples: if quick_mode() { 2 } else { 5 },
+            iters_per_sample: 1,
+            items_per_iter: Some(rounds as f64),
+        };
+        for (label, mode) in [("range", PsMode::Range), ("replica", PsMode::Replica)] {
+            for n_ps in [2usize, 4] {
+                let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, rounds);
+                cfg.n_clients = 64;
+                cfg.server.shards = 4;
+                cfg.server.straggler_timeout_ms = 120_000;
+                cfg.server.cluster = Some(ClusterConfig { n_ps, mode, sync_every: 1 });
+                let mb = macro_bench();
+                log.push(mb.run(
+                    &format!("fedserve 2-round run (cluster {label}, n_ps={n_ps}, n=64)"),
+                    || simulate_with(&cfg, d, TransportMode::Channel).unwrap().rounds,
+                ));
+            }
         }
     }
 

@@ -33,6 +33,56 @@ pub struct SchemeTuning {
     pub seed: u64,
 }
 
+/// How a multi-PS cluster partitions the aggregation (ROADMAP: multi-PS
+/// sharding; DESIGN.md §cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PsMode {
+    /// Model-parallel: each PS owns a contiguous dimension range of one
+    /// global model, broadcasts only its slice, and aggregates only the
+    /// survivors in its range. Bit-exact against a single PS.
+    Range,
+    /// Client-partitioned replicas: each PS owns a client subset and
+    /// aggregates it on its own full-width replica, with periodic
+    /// eq.-(7) averaging across replicas every `sync_every` rounds.
+    Replica,
+}
+
+impl PsMode {
+    pub fn parse(s: &str) -> Result<PsMode> {
+        match s {
+            "range" => Ok(PsMode::Range),
+            "replica" => Ok(PsMode::Replica),
+            other => anyhow::bail!("unknown --ps-mode `{other}` (range | replica)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PsMode::Range => "range",
+            PsMode::Replica => "replica",
+        }
+    }
+}
+
+/// Multi-PS cluster shape: how many `FedServer` instances one process
+/// hosts behind a single reactor, and how they partition the work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// number of parameter-server instances
+    pub n_ps: usize,
+    pub mode: PsMode,
+    /// replica mode: eq.-(7) averaging cadence in rounds (1 = every
+    /// round, 0 = only at end of run). Ignored by range mode, whose
+    /// single global model never diverges.
+    pub sync_every: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig { n_ps: 2, mode: PsMode::Range, sync_every: 1 }
+    }
+}
+
 /// Parameter-server knobs for the `fedserve` subsystem (ROADMAP: scale the
 /// PS loop past a handful of clients).
 #[derive(Debug, Clone, PartialEq)]
@@ -57,6 +107,11 @@ pub struct ServerConfig {
     /// at server start (ROADMAP: the cross-run half of the prewarm item);
     /// `None` (the default) keeps the cache in-memory only
     pub table_cache_path: Option<String>,
+    /// host a multi-PS cluster instead of a single `FedServer` (ROADMAP:
+    /// multi-PS sharding). `None` (the default) is the single-server loop;
+    /// `Some` with `n_ps = 1` runs the cluster code path of one PS, which
+    /// is bit-exact against the single server (the parity anchor).
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +123,7 @@ impl Default for ServerConfig {
             table_cache_capacity: 256,
             prewarm: true,
             table_cache_path: None,
+            cluster: None,
         }
     }
 }
@@ -203,6 +259,11 @@ impl ExperimentConfig {
             ("participants_per_round", Json::from(self.participants_per_round())),
             ("table_cache_capacity", Json::from(self.server.table_cache_capacity)),
             ("prewarm", Json::from(self.server.prewarm)),
+            ("n_ps", Json::from(self.server.cluster.as_ref().map_or(0, |c| c.n_ps))),
+            (
+                "ps_mode",
+                Json::from(self.server.cluster.as_ref().map_or("single", |c| c.mode.label())),
+            ),
         ])
     }
 }
@@ -290,6 +351,19 @@ mod tests {
         assert_eq!(s.straggler_timeout_ms, 0); // wait forever, like the old driver
         assert!(s.table_cache_capacity > 0);
         assert!(s.prewarm); // startup cost, not a behavior change
+        assert_eq!(s.cluster, None); // single PS unless asked
+    }
+
+    #[test]
+    fn ps_mode_parses_and_labels() {
+        assert_eq!(PsMode::parse("range").unwrap(), PsMode::Range);
+        assert_eq!(PsMode::parse("replica").unwrap(), PsMode::Replica);
+        assert!(PsMode::parse("mesh").is_err());
+        assert_eq!(PsMode::Range.label(), "range");
+        assert_eq!(PsMode::Replica.label(), "replica");
+        let c = ClusterConfig::default();
+        assert_eq!(c.n_ps, 2);
+        assert_eq!(c.sync_every, 1);
     }
 
     #[test]

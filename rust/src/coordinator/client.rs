@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::compress::Encoder;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
-use crate::fedserve::session::ClientSession;
+use crate::fedserve::session::{ClientSession, RoundAssembler};
 use crate::fedserve::transport::ClientTransport;
 use crate::fedserve::wire;
 use crate::runtime::RuntimeHandle;
@@ -91,8 +91,11 @@ impl ClientWorker {
         Ok(self.session.frame_update(round, &report, train_loss))
     }
 
-    /// Thread body: serve framed rounds until shutdown.
+    /// Thread body: serve framed rounds until shutdown. Round broadcasts
+    /// may arrive whole or as per-PS model slices (a range-mode cluster) —
+    /// the assembler hands back the complete model either way.
     pub fn run(mut self, dataset: &Dataset) {
+        let mut asm = RoundAssembler::new();
         loop {
             let msg = match self.transport.recv() {
                 Ok(Some(m)) => m,
@@ -109,7 +112,14 @@ impl ClientWorker {
             };
             match msg {
                 wire::Message::Shutdown => break,
-                wire::Message::Round { round, weights } => {
+                msg @ (wire::Message::Round { .. } | wire::Message::RoundSlice { .. }) => {
+                    match asm.feed(msg) {
+                        Ok(true) => {}
+                        Ok(false) => continue, // more slices to come
+                        Err(_) => break,       // protocol violation
+                    }
+                    let round = asm.round();
+                    let weights = asm.take_weights();
                     let uplink_frame = match self.round(dataset, round, &weights) {
                         Ok(f) => f,
                         Err(e) => wire::encode_update(&Uplink::failure(

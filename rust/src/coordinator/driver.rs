@@ -14,13 +14,86 @@ use anyhow::{bail, Context, Result};
 use crate::compress::BlockCodec;
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
+use crate::fedserve::cluster::PsCluster;
 use crate::fedserve::table_cache::LruTableCache;
 use crate::fedserve::transport::{ChannelTransport, Transport};
-use crate::fedserve::FedServer;
-use crate::metrics::{Recorder, Row, ServerStats};
+use crate::fedserve::{FedServer, RoundSummary};
+use crate::metrics::{ClusterStats, Recorder, Row, ServerStats};
 use crate::runtime::RuntimeHandle;
+use crate::train::ModelSpec;
 
 use super::client::ClientWorker;
+
+/// The PS side of one experiment: a single server, or a `--ps N` cluster
+/// hosting several behind the same transport (range mode is bit-exact
+/// against the single server, so training results are unchanged by it).
+enum Ps {
+    Single(Box<FedServer>),
+    Cluster(Box<PsCluster>),
+}
+
+impl Ps {
+    fn run_round(
+        &mut self,
+        round: usize,
+        k: usize,
+        transport: &mut dyn Transport,
+        spec: &ModelSpec,
+        w: &mut [f32],
+    ) -> Result<RoundSummary> {
+        match self {
+            Ps::Single(s) => {
+                let participants = s.select(k);
+                s.run_round(round, &participants, transport, spec, w)
+            }
+            Ps::Cluster(c) => c.run_round(round, k, transport, spec, w),
+        }
+    }
+
+    fn finish(&mut self, w: &mut [f32]) {
+        if let Ps::Cluster(c) = self {
+            c.finish(w);
+        }
+    }
+
+    fn preload_tables(&mut self, tables: &LruTableCache) {
+        match self {
+            Ps::Single(s) => s.preload_tables(tables),
+            Ps::Cluster(c) => c.preload_tables(tables),
+        };
+    }
+
+    fn prewarm_for(&mut self, cfg: &ExperimentConfig, d: usize, tables: &LruTableCache) {
+        match self {
+            Ps::Single(s) => s.prewarm_for(cfg, d, tables),
+            Ps::Cluster(c) => c.prewarm_for(cfg, d, tables),
+        };
+    }
+
+    fn persist_tables(&self, tables: &LruTableCache) {
+        match self {
+            Ps::Single(s) => s.persist_tables(tables),
+            Ps::Cluster(c) => c.persist_tables(tables),
+        };
+    }
+
+    fn stats_mut(&mut self) -> &mut ServerStats {
+        match self {
+            Ps::Single(s) => &mut s.stats,
+            Ps::Cluster(c) => &mut c.stats,
+        }
+    }
+
+    fn into_stats(self) -> (ServerStats, Option<ClusterStats>) {
+        match self {
+            Ps::Single(s) => (s.stats, None),
+            Ps::Cluster(c) => {
+                let rollup = c.cluster_stats();
+                (c.stats, Some(rollup))
+            }
+        }
+    }
+}
 
 /// Summary of one experiment run.
 #[derive(Debug, Clone)]
@@ -34,6 +107,8 @@ pub struct RunOutput {
     pub rounds: usize,
     /// fedserve timings, straggler counts, and table-cache hit rate
     pub server_stats: ServerStats,
+    /// `--ps N` runs: the per-PS rollup (None for a single server)
+    pub cluster_stats: Option<ClusterStats>,
 }
 
 /// Evaluate the global model on `n` test batches.
@@ -76,12 +151,30 @@ pub fn run_experiment(
     let mut w = manifest.load_init(&dir, &cfg.arch)?;
 
     // one bounded LRU of standardized LBG designs, shared by the server
-    // decoder and every client encoder
+    // decoder(s) and every client encoder
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(runtime.clone());
     // the PS's decode half — same scheme registry as the clients' encoders
-    let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
-    let mut server = FedServer::new(cfg.server.clone(), cfg.n_clients, cfg.seed, decoder);
+    let mut server = match &cfg.server.cluster {
+        None => {
+            let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
+            let single = FedServer::new(cfg.server.clone(), cfg.n_clients, cfg.seed, decoder);
+            Ps::Single(Box::new(single))
+        }
+        Some(ccfg) => {
+            let decoders = (0..ccfg.n_ps)
+                .map(|_| cfg.build_decoder(d, codec.clone(), tables.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            Ps::Cluster(Box::new(PsCluster::new(
+                ccfg,
+                &cfg.server,
+                cfg.n_clients,
+                d,
+                cfg.seed,
+                decoders,
+            )?))
+        }
+    };
     // a persisted cache first (cheap reload), then design the rest fresh
     server.preload_tables(&tables);
     server.prewarm_for(cfg, d, &tables);
@@ -112,14 +205,13 @@ pub fn run_experiment(
         let mut bits_per_round = 0.0f64;
         let mut last = (f64::NAN, f64::NAN, f64::NAN); // train, test loss, acc
         for round in 0..cfg.rounds {
-            let participants = server.select(n_participants);
             let summary = server
-                .run_round(round, &participants, &mut transport, &spec, &mut w)
+                .run_round(round, n_participants, &mut transport, &spec, &mut w)
                 .with_context(|| format!("server round {round}"))?;
             if summary.received == 0 {
                 bail!(
                     "round {round}: all {} participants missed the {} ms deadline",
-                    participants.len(),
+                    summary.dropped,
                     cfg.server.straggler_timeout_ms
                 );
             }
@@ -136,15 +228,18 @@ pub fn run_experiment(
                 bits_up: bits_per_round,
             });
         }
+        server.finish(&mut w);
         transport.close()?;
         Ok::<_, anyhow::Error>((last, bits_per_round, transport.stats()))
     })?;
 
     server.persist_tables(&tables);
     let cache = tables.stats();
-    server.stats.set_cache(cache.hits, cache.misses);
-    server.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
-    server.stats.set_transport(tstats);
+    let stats = server.stats_mut();
+    stats.set_cache(cache.hits, cache.misses);
+    stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
+    stats.set_transport(tstats);
+    let (server_stats, cluster_stats) = server.into_stats();
     Ok(RunOutput {
         series: series.to_string(),
         final_train_loss: last.0,
@@ -152,6 +247,7 @@ pub fn run_experiment(
         final_test_acc: last.2,
         bits_per_round,
         rounds: cfg.rounds,
-        server_stats: server.stats,
+        server_stats,
+        cluster_stats,
     })
 }

@@ -48,6 +48,31 @@ pub fn accumulate_serial(
     Ok(())
 }
 
+/// Fused fold of every payload's survivors restricted to the contiguous
+/// global dimension range `offset .. offset + acc.len()`, in client order.
+/// This is the per-shard body of [`accumulate_sharded`], exposed for the
+/// range-mode PS cluster, where each `FedServer` owns one range of the
+/// global model. Bit-exactness argument: every global dimension is folded
+/// by exactly one range, and within a range the per-index addition order
+/// is the payload order — identical to the serial full-width fold.
+pub fn accumulate_range(
+    decoder: &dyn Decoder,
+    payloads: &[&[u8]],
+    spec: &ModelSpec,
+    offset: usize,
+    acc: &mut [f32],
+) -> Result<()> {
+    let end = offset + acc.len();
+    for p in payloads {
+        decoder.for_each_survivor(p, spec, &mut |i, v| {
+            if (offset..end).contains(&i) {
+                acc[i - offset] += v;
+            }
+        })?;
+    }
+    Ok(())
+}
+
 /// Fused decode+reduce over contiguous dimension shards, one scoped worker
 /// each. Bit-identical to [`accumulate_serial`] (each dimension is owned by
 /// exactly one shard, and every shard adds in client order). Decoders whose
@@ -72,18 +97,7 @@ pub fn accumulate_sharded(
             .chunks_mut(chunk)
             .enumerate()
             .map(|(si, slice)| {
-                s.spawn(move || -> Result<()> {
-                    let start = si * chunk;
-                    let end = start + slice.len();
-                    for p in payloads {
-                        decoder.for_each_survivor(p, spec, &mut |i, v| {
-                            if (start..end).contains(&i) {
-                                slice[i - start] += v;
-                            }
-                        })?;
-                    }
-                    Ok(())
-                })
+                s.spawn(move || accumulate_range(decoder, payloads, spec, si * chunk, slice))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -212,6 +226,36 @@ mod tests {
         let mut acc = vec![0.0f32; d];
         accumulate_serial(&NoCompression, &slices, &spec, &mut acc).unwrap();
         assert_eq!(acc, dense);
+    }
+
+    #[test]
+    fn range_folds_concatenate_to_the_serial_fold_bitwise() {
+        use crate::compress::testutil::tiny_spec;
+        use crate::compress::{encode_once, NoCompression};
+        let spec = tiny_spec(500, 12);
+        let d = spec.d();
+        let root = Rng::new(5);
+        let payloads: Vec<Vec<u8>> = (0..4)
+            .map(|c| {
+                let mut r = root.stream(9, c as u64);
+                let g: Vec<f32> = (0..d).map(|_| (r.normal() * 0.1) as f32).collect();
+                encode_once(&NoCompression, &g, &spec).unwrap().0
+            })
+            .collect();
+        let slices: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let mut serial = vec![0.0f32; d];
+        accumulate_serial(&NoCompression, &slices, &spec, &mut serial).unwrap();
+        // arbitrary disjoint covers concatenate back to the serial result
+        for n_ranges in [1usize, 2, 4, 7] {
+            let chunk = d.div_ceil(n_ranges);
+            let mut out = vec![0.0f32; d];
+            for (ri, slice) in out.chunks_mut(chunk).enumerate() {
+                accumulate_range(&NoCompression, &slices, &spec, ri * chunk, slice).unwrap();
+            }
+            for i in 0..d {
+                assert_eq!(serial[i].to_bits(), out[i].to_bits(), "ranges={n_ranges} dim={i}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,653 @@
+//! Multi-PS sharding: several [`FedServer`] instances behind one reactor.
+//!
+//! The last non-sharded layer of the subsystem was the single `FedServer`
+//! round loop (ROADMAP "Multi-PS sharding"). [`PsCluster`] hosts `n_ps`
+//! parameter servers in one process, all multiplexed by the *same*
+//! transport — and therefore the same reactor readiness loop: one
+//! `poll(2)` set services every client connection of every PS, one
+//! collect pass routes each uplink to its owner in O(1) through the
+//! shared [`SlotMap`]. Two partitioning modes:
+//!
+//! * **Model-parallel** ([`PsMode::Range`]) — each PS owns a contiguous
+//!   dimension range of one global model. Downlinks are
+//!   [`wire::encode_round_slice`] frames (each PS broadcasts only the
+//!   dimensions it owns; clients reassemble via
+//!   [`super::session::RoundAssembler`]); uplinks are ordinary full
+//!   payloads whose survivors each PS slices with
+//!   [`Decoder::for_each_survivor`] restricted to its range
+//!   (`accumulate_range`). Because every global dimension is folded by
+//!   exactly one PS and per-index additions stay in client order, the
+//!   concatenation of the averaged sub-steps is **bit-exact** against the
+//!   single-PS reference — asserted per scheme, per transport, at
+//!   `n_ps ∈ {1, 2, 4}` by `tests/fedserve_cluster.rs`.
+//! * **Client-partitioned replicas** ([`PsMode::Replica`]) — each PS owns
+//!   a deterministic client subset ([`partition_clients`]) and aggregates
+//!   its uplinks on its own full-width replica; every `sync_every` rounds
+//!   the replicas are averaged eq.-(7)-style into the global model and
+//!   reset. A cluster of one replica PS owns every client and reproduces
+//!   the single server bit-exactly (the subsets are sorted and
+//!   [`Scheduler::sample_of`] is the same shuffle-prefix as
+//!   [`Scheduler::sample`]).
+//!
+//! Per-PS reduces run on scoped worker threads (their model slices /
+//! replicas are disjoint), so the reduce wall-clock is the slowest PS,
+//! not the sum. Per-client [`SessionStats`] ledgers live on the cluster —
+//! a client is one peer no matter how many PSes consume its uplink — and
+//! are reconciled against the transport's socket-measured byte counters
+//! every round, exactly like the single-server path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::compress::Decoder;
+use crate::config::{ClusterConfig, PsMode, ServerConfig};
+use crate::coordinator::messages::Uplink;
+use crate::metrics::server::{ClusterStats, RoundTiming, ServerStats};
+use crate::train::ModelSpec;
+use crate::util::rng::Rng;
+
+use super::server::{
+    collect_uplinks, ledger_round, reconcile_bytes_down, Collect, FedServer, RoundSummary,
+    SlotMap,
+};
+use super::session::{Scheduler, SessionStats};
+use super::table_cache::LruTableCache;
+use super::transport::Transport;
+use super::wire;
+
+/// Deterministic client ownership for replica mode: shuffle `0..n` with a
+/// seed-derived stream, deal round-robin across the PSes, then sort each
+/// subset. Every client is owned by exactly one PS, the union is all of
+/// `0..n`, subset sizes differ by at most one, and a replay from the same
+/// seed reproduces the partition exactly (property-tested in
+/// `tests/fedserve_cluster.rs`). Sorting keeps the `n_ps = 1` subset equal
+/// to `0..n`, which is what makes a one-replica cluster reproduce the
+/// single-server schedule bit-exactly.
+pub fn partition_clients(n: usize, n_ps: usize, seed: u64) -> Vec<Vec<usize>> {
+    let n_ps = n_ps.max(1);
+    let mut order: Vec<usize> = (0..n).collect();
+    // domain-separate from the round scheduler's seed mix
+    Rng::new(seed ^ 0x5eed_c1a5).shuffle(&mut order);
+    let mut owned = vec![Vec::with_capacity(n.div_ceil(n_ps)); n_ps];
+    for (i, id) in order.into_iter().enumerate() {
+        owned[i % n_ps].push(id);
+    }
+    for subset in &mut owned {
+        subset.sort_unstable();
+    }
+    owned
+}
+
+/// A cluster of parameter servers sharing one transport (and therefore one
+/// reactor loop). See the module docs for the two partitioning modes.
+pub struct PsCluster {
+    pub mode: PsMode,
+    sync_every: usize,
+    /// the hosted PS instances; each owns its decoder, reduce scratch,
+    /// shard config, and per-PS [`ServerStats`]
+    pub servers: Vec<FedServer>,
+    /// range mode: contiguous `[lo, hi)` dimension ranges, one per PS
+    ranges: Vec<(usize, usize)>,
+    /// replica mode: sorted client ids owned per PS
+    owners: Vec<Vec<usize>>,
+    /// replica mode: per-PS full-width replicas (initialized lazily from
+    /// the caller's `w` on the first round)
+    replicas: Vec<Vec<f32>>,
+    /// range mode: the one global round scheduler (same construction as a
+    /// single server's, so schedules replay bit-exactly)
+    scheduler: Scheduler,
+    /// replica mode: one subset scheduler per PS (ps 0 keeps the global
+    /// seed — the one-replica parity anchor)
+    ps_schedulers: Vec<Scheduler>,
+    /// cluster-level per-client ledgers: a client is one peer no matter
+    /// how many PSes consume its uplink
+    pub sessions: Vec<SessionStats>,
+    /// cluster-level per-round stats (shared collect, whole-reduce wall
+    /// clock, cluster-level `framed_bytes`); per-PS reduce timings live in
+    /// each server's own stats
+    pub stats: ServerStats,
+    slotmap: SlotMap,
+    n_clients: usize,
+    d: usize,
+}
+
+impl PsCluster {
+    /// Build a cluster of `ccfg.n_ps` servers sharing `server_cfg`, one
+    /// decoder each (every PS decodes every scheme payload it is routed —
+    /// build them from the same registry spec and shared table cache).
+    pub fn new(
+        ccfg: &ClusterConfig,
+        server_cfg: &ServerConfig,
+        n_clients: usize,
+        d: usize,
+        seed: u64,
+        decoders: Vec<Box<dyn Decoder>>,
+    ) -> Result<PsCluster> {
+        let n_ps = ccfg.n_ps;
+        ensure!(n_ps >= 1, "a cluster needs at least one PS");
+        ensure!(decoders.len() == n_ps, "{} decoders for {n_ps} PS instances", decoders.len());
+        if ccfg.mode == PsMode::Range {
+            ensure!(d >= n_ps, "cannot split d = {d} dimensions across {n_ps} PS ranges");
+        }
+        let chunk = d.div_ceil(n_ps);
+        let ranges = (0..n_ps).map(|i| ((i * chunk).min(d), ((i + 1) * chunk).min(d))).collect();
+        let servers = decoders
+            .into_iter()
+            .map(|dec| {
+                // per-client ledgers live on the cluster, so each PS keeps
+                // an empty session table (its scheduler is unused too —
+                // the cluster routes and schedules)
+                FedServer::new(server_cfg.clone(), 0, seed, dec)
+            })
+            .collect();
+        Ok(PsCluster {
+            mode: ccfg.mode,
+            sync_every: ccfg.sync_every,
+            servers,
+            ranges,
+            owners: partition_clients(n_clients, n_ps, seed),
+            replicas: Vec::new(),
+            scheduler: Scheduler::new(seed),
+            ps_schedulers: (0..n_ps as u64)
+                .map(|i| Scheduler::new(seed.wrapping_add(i)))
+                .collect(),
+            sessions: vec![SessionStats::default(); n_clients],
+            stats: ServerStats::default(),
+            slotmap: SlotMap::default(),
+            n_clients,
+            d,
+        })
+    }
+
+    pub fn n_ps(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Serve one cluster round over the shared transport: per-mode
+    /// broadcast, ONE collect pass for every PS's participants, per-PS
+    /// parallel reduce, and (replica mode) the periodic eq.-(7) sync.
+    /// `k` is the global participants-per-round target.
+    pub fn run_round(
+        &mut self,
+        round: usize,
+        k: usize,
+        transport: &mut dyn Transport,
+        spec: &ModelSpec,
+        w: &mut [f32],
+    ) -> Result<RoundSummary> {
+        ensure!(w.len() == self.d, "model has {} dims, cluster built for {}", w.len(), self.d);
+        match self.mode {
+            PsMode::Range => self.run_round_range(round, k, transport, spec, w),
+            PsMode::Replica => self.run_round_replica(round, k, transport, spec, w),
+        }
+    }
+
+    fn run_round_range(
+        &mut self,
+        round: usize,
+        k: usize,
+        transport: &mut dyn Transport,
+        spec: &ModelSpec,
+        w: &mut [f32],
+    ) -> Result<RoundSummary> {
+        // same scheduler construction and call as a single server: the
+        // schedule replays bit-exactly against the single-PS reference
+        let participants = self.scheduler.sample(self.n_clients, k);
+        let t0 = Instant::now();
+        // the model-parallel downlink: PS_i broadcasts only its dimension
+        // range, as one slice frame shared Arc-style across participants
+        let frames: Vec<Arc<Vec<u8>>> = self
+            .ranges
+            .iter()
+            .map(|&(lo, hi)| Arc::new(wire::encode_round_slice(round, lo, self.d, &w[lo..hi])))
+            .collect();
+        let mut unreachable = vec![false; participants.len()];
+        for (i, &id) in participants.iter().enumerate() {
+            for f in &frames {
+                if transport.send(id, f).is_err() {
+                    unreachable[i] = true;
+                    break;
+                }
+                if let Some(s) = self.sessions.get_mut(id) {
+                    s.bytes_down += f.len() as u64;
+                }
+            }
+        }
+        let (slots, mut col) =
+            self.collect(round, &participants, transport, t0, &mut unreachable);
+        let received = slots.iter().filter(|s| s.is_some()).count();
+        if let Some(e) = col.abort.take() {
+            self.record_abort(round, &col, received, participants.len());
+            return Err(e);
+        }
+        let dropped = ledger_round(&mut self.sessions, round, &participants, &slots);
+
+        let (payloads, train_loss, bits) = gather(&slots);
+        let t1 = Instant::now();
+        let n_ps = self.servers.len();
+        let chunk = self.d.div_ceil(n_ps);
+        let mut reduce_ns = vec![0u64; n_ps];
+        if received > 0 {
+            let scale = 1.0 / received as f32;
+            let payloads_ref = &payloads;
+            // one scoped worker per PS: the dimension ranges are disjoint
+            // slices of w, so the reduces run model-parallel
+            let results: Vec<Result<u64>> = std::thread::scope(|sc| {
+                let handles: Vec<_> = self
+                    .servers
+                    .iter_mut()
+                    .zip(w.chunks_mut(chunk))
+                    .enumerate()
+                    .map(|(ps, (server, wslice))| {
+                        sc.spawn(move || {
+                            server.reduce_slice(payloads_ref, spec, ps * chunk, wslice, scale)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (ps, r) in results.into_iter().enumerate() {
+                match r {
+                    Ok(ns) => reduce_ns[ps] = ns,
+                    Err(e) => {
+                        // a reduce failure aborts the round like a collect
+                        // failure: the timing is still recorded everywhere
+                        self.record_abort(round, &col, received, participants.len());
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        let reduce_wall = t1.elapsed().as_nanos() as u64;
+
+        // range mode: every PS consumed the whole roster, so the shared
+        // counters repeat per PS; framed bytes are cluster-level only
+        for (ps, server) in self.servers.iter_mut().enumerate() {
+            server.stats.push(RoundTiming {
+                round,
+                collect_ns: col.collect_ns,
+                reduce_ns: reduce_ns[ps],
+                received,
+                dropped,
+                stale: col.stale,
+                decode_errors: col.decode_errors,
+                framed_bytes: 0,
+                aborted: false,
+            });
+        }
+        self.stats.push(RoundTiming {
+            round,
+            collect_ns: col.collect_ns,
+            reduce_ns: reduce_wall,
+            received,
+            dropped,
+            stale: col.stale,
+            decode_errors: col.decode_errors,
+            framed_bytes: col.framed_bytes,
+            aborted: false,
+        });
+        Ok(summary(round, received, dropped, &col, train_loss, bits))
+    }
+
+    fn run_round_replica(
+        &mut self,
+        round: usize,
+        k: usize,
+        transport: &mut dyn Transport,
+        spec: &ModelSpec,
+        w: &mut [f32],
+    ) -> Result<RoundSummary> {
+        if self.replicas.is_empty() {
+            self.replicas = vec![w.to_vec(); self.servers.len()];
+        }
+        // each PS samples its own subset; k splits proportionally to
+        // ownership (a one-PS cluster samples exactly k — parity anchor)
+        let mut roster: Vec<usize> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(self.servers.len());
+        for (i, sched) in self.ps_schedulers.iter_mut().enumerate() {
+            let owned = &self.owners[i];
+            if owned.is_empty() {
+                spans.push((roster.len(), 0));
+                continue;
+            }
+            let share = (k as f64 * owned.len() as f64 / self.n_clients.max(1) as f64).ceil();
+            let ki = (share as usize).clamp(1, owned.len());
+            let part = sched.sample_of(owned, ki);
+            spans.push((roster.len(), part.len()));
+            roster.extend(part);
+        }
+        let t0 = Instant::now();
+        let mut unreachable = vec![false; roster.len()];
+        for (i, &(start, len)) in spans.iter().enumerate() {
+            // each PS broadcasts its own replica to its own participants
+            let frame = Arc::new(wire::encode_round(round, &self.replicas[i]));
+            for s in start..start + len {
+                let id = roster[s];
+                if transport.send(id, &frame).is_err() {
+                    unreachable[s] = true;
+                } else if let Some(sess) = self.sessions.get_mut(id) {
+                    sess.bytes_down += frame.len() as u64;
+                }
+            }
+        }
+        let (slots, mut col) = self.collect(round, &roster, transport, t0, &mut unreachable);
+        let received = slots.iter().filter(|s| s.is_some()).count();
+        if let Some(e) = col.abort.take() {
+            self.record_abort(round, &col, received, roster.len());
+            return Err(e);
+        }
+        let dropped = ledger_round(&mut self.sessions, round, &roster, &slots);
+
+        let (_, train_loss, bits) = gather(&slots);
+        let t1 = Instant::now();
+        // one scoped worker per PS: replicas are disjoint full-width
+        // models, each reduced over its own span of the shared roster
+        let slots_ref = &slots;
+        let per_ps: Vec<Result<(usize, u64)>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = self
+                .servers
+                .iter_mut()
+                .zip(self.replicas.iter_mut())
+                .enumerate()
+                .map(|(i, (server, replica))| {
+                    let (start, len) = spans[i];
+                    sc.spawn(move || -> Result<(usize, u64)> {
+                        let payloads: Vec<&[u8]> = slots_ref[start..start + len]
+                            .iter()
+                            .flatten()
+                            .map(|u| u.payload.as_slice())
+                            .collect();
+                        if payloads.is_empty() {
+                            return Ok((0, 0)); // a fully-straggled PS skips
+                        }
+                        let scale = 1.0 / payloads.len() as f32;
+                        let ns = server.reduce_slice(&payloads, spec, 0, replica, scale)?;
+                        Ok((payloads.len(), ns))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut per_ps_ok = Vec::with_capacity(per_ps.len());
+        for r in per_ps {
+            match r {
+                Ok(v) => per_ps_ok.push(v),
+                Err(e) => {
+                    // a reduce failure aborts the round like a collect
+                    // failure: the timing is still recorded everywhere
+                    self.record_abort(round, &col, received, roster.len());
+                    return Err(e);
+                }
+            }
+        }
+        for (i, (rec_i, ns_i)) in per_ps_ok.into_iter().enumerate() {
+            let (_, len) = spans[i];
+            self.servers[i].stats.push(RoundTiming {
+                round,
+                collect_ns: col.collect_ns,
+                reduce_ns: ns_i,
+                received: rec_i,
+                dropped: len - rec_i,
+                stale: 0,
+                decode_errors: 0,
+                framed_bytes: 0,
+                aborted: false,
+            });
+        }
+        // `w` is ALWAYS the eq.-(7) average across replicas after a round
+        // — callers evaluate and record against the live state, never a
+        // stale snapshot. `sync_every` controls only when the replicas
+        // themselves are reset to that average (0 = never mid-run).
+        if self.sync_every > 0 && (round + 1) % self.sync_every == 0 {
+            self.sync_into(w);
+        } else {
+            self.mean_into(w);
+        }
+        let reduce_wall = t1.elapsed().as_nanos() as u64;
+        self.stats.push(RoundTiming {
+            round,
+            collect_ns: col.collect_ns,
+            reduce_ns: reduce_wall,
+            received,
+            dropped,
+            stale: col.stale,
+            decode_errors: col.decode_errors,
+            framed_bytes: col.framed_bytes,
+            aborted: false,
+        });
+        Ok(summary(round, received, dropped, &col, train_loss, bits))
+    }
+
+    /// The one shared collect pass: rebuild the O(1) roster routing, wait
+    /// on the shared transport until every reachable slot reports or the
+    /// straggler deadline passes, then reconcile the downlink ledger
+    /// against the transport's socket-measured counters.
+    fn collect(
+        &mut self,
+        round: usize,
+        roster: &[usize],
+        transport: &mut dyn Transport,
+        t0: Instant,
+        unreachable: &mut [bool],
+    ) -> (Vec<Option<Uplink>>, Collect) {
+        let mut slots: Vec<Option<Uplink>> = Vec::new();
+        slots.resize_with(roster.len(), || None);
+        self.slotmap.rebuild(self.n_clients, roster);
+        let col = collect_uplinks(
+            round,
+            transport,
+            self.servers[0].cfg.straggler_timeout_ms,
+            t0,
+            &mut self.sessions,
+            &self.slotmap,
+            unreachable,
+            &mut slots,
+        );
+        reconcile_bytes_down(&mut self.sessions, &transport.stats());
+        (slots, col)
+    }
+
+    /// The aborted-round timing lands on the cluster and on every PS, so
+    /// no ledger under-reports the rounds that went wrong. The counters
+    /// live on the cluster entry; the per-PS entries mark the abort with
+    /// zeroed counts — at abort time nothing was attributed per PS, and
+    /// copying the cluster-global numbers into each PS would inflate the
+    /// per-PS rollup (replica mode sums per-PS received across PSes).
+    fn record_abort(&mut self, round: usize, col: &Collect, received: usize, roster_len: usize) {
+        self.stats.push(RoundTiming {
+            round,
+            collect_ns: col.collect_ns,
+            reduce_ns: 0,
+            received,
+            dropped: roster_len - received,
+            stale: col.stale,
+            decode_errors: col.decode_errors,
+            framed_bytes: col.framed_bytes,
+            aborted: true,
+        });
+        for server in &mut self.servers {
+            server.stats.push(RoundTiming {
+                round,
+                collect_ns: col.collect_ns,
+                aborted: true,
+                ..RoundTiming::default()
+            });
+        }
+    }
+
+    /// eq. (7) across replicas into `w`: `w ← (1/n_ps) Σ_i w_i`. The PS
+    /// summation order is fixed, so replays are bit-exact; a one-replica
+    /// cluster's mean is `r[j] * 1.0`, exact for every finite value.
+    fn mean_into(&self, w: &mut [f32]) {
+        let scale = 1.0 / self.replicas.len() as f32;
+        for (j, wj) in w.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for r in &self.replicas {
+                s += r[j];
+            }
+            *wj = s * scale;
+        }
+    }
+
+    /// The periodic sync: average into `w`, then reset every replica to
+    /// the synced model.
+    fn sync_into(&mut self, w: &mut [f32]) {
+        self.mean_into(w);
+        for r in &mut self.replicas {
+            r.copy_from_slice(w);
+        }
+    }
+
+    /// End of run: replica mode re-asserts the eq.-(7) view in `w`
+    /// (idempotent — `run_round` keeps `w` current each round); range
+    /// mode's `w` is already the truth.
+    pub fn finish(&mut self, w: &mut [f32]) {
+        if self.mode == PsMode::Replica && !self.replicas.is_empty() {
+            self.mean_into(w);
+        }
+    }
+
+    /// Reload persisted quantizer tables (counted on the cluster stats).
+    pub fn preload_tables(&mut self, tables: &LruTableCache) -> usize {
+        let n = self.servers[0].preload_tables(tables);
+        self.stats.set_preloaded(n as u64);
+        n
+    }
+
+    /// Prewarm the shared table cache once for the whole cluster (every PS
+    /// decodes through the same cache).
+    pub fn prewarm_for(
+        &mut self,
+        cfg: &crate::config::ExperimentConfig,
+        d: usize,
+        tables: &LruTableCache,
+    ) -> usize {
+        let n = self.servers[0].prewarm_for(cfg, d, tables);
+        self.stats.prewarmed_tables = n as u64;
+        n
+    }
+
+    /// Persist the hot quantizer tables (one shared cache, one file).
+    pub fn persist_tables(&self, tables: &LruTableCache) -> usize {
+        self.servers[0].persist_tables(tables)
+    }
+
+    /// The per-PS stats rollup for reporting.
+    pub fn cluster_stats(&self) -> ClusterStats {
+        ClusterStats {
+            mode: self.mode.label(),
+            sync_every: self.sync_every,
+            per_ps: self.servers.iter().map(|s| s.stats.clone()).collect(),
+        }
+    }
+}
+
+/// Payload slices + diagnostic sums of the filled slots, in roster order.
+fn gather(slots: &[Option<Uplink>]) -> (Vec<&[u8]>, f64, f64) {
+    let mut payloads: Vec<&[u8]> = Vec::with_capacity(slots.len());
+    let mut train_loss = 0.0f64;
+    let mut bits = 0.0f64;
+    for up in slots.iter().flatten() {
+        payloads.push(&up.payload);
+        train_loss += up.train_loss;
+        bits += up.report.ideal_total_bits();
+    }
+    (payloads, train_loss, bits)
+}
+
+fn summary(
+    round: usize,
+    received: usize,
+    dropped: usize,
+    col: &Collect,
+    train_loss: f64,
+    bits: f64,
+) -> RoundSummary {
+    RoundSummary {
+        round,
+        received,
+        dropped,
+        stale: col.stale,
+        decode_errors: col.decode_errors,
+        train_loss_mean: if received > 0 { train_loss / received as f64 } else { f64::NAN },
+        bits_per_client: if received > 0 { bits / received as f64 } else { 0.0 },
+        framed_bytes: col.framed_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::NoCompression;
+    use crate::config::ClusterConfig;
+
+    fn decoders(n: usize) -> Vec<Box<dyn Decoder>> {
+        (0..n).map(|_| Box::new(NoCompression) as Box<dyn Decoder>).collect()
+    }
+
+    #[test]
+    fn partition_covers_exactly_once_and_is_balanced() {
+        for (n, n_ps) in [(10usize, 3usize), (7, 7), (16, 4), (3, 5), (1, 1)] {
+            let owned = partition_clients(n, n_ps, 33);
+            let mut all: Vec<usize> = owned.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n} n_ps={n_ps}");
+            let max = owned.iter().map(Vec::len).max().unwrap();
+            let min = owned.iter().map(Vec::len).min().unwrap();
+            assert!(max - min <= 1, "unbalanced: n={n} n_ps={n_ps} {owned:?}");
+            // subsets are sorted (the one-replica parity anchor)
+            for s in &owned {
+                assert!(s.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+        // deterministic replay, seed-sensitive
+        assert_eq!(partition_clients(20, 4, 9), partition_clients(20, 4, 9));
+        assert_ne!(partition_clients(64, 4, 9), partition_clients(64, 4, 10));
+        // one PS owns everything, in order
+        assert_eq!(partition_clients(5, 1, 42), vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn cluster_construction_validates_shape() {
+        let ccfg = ClusterConfig { n_ps: 3, mode: PsMode::Range, sync_every: 1 };
+        let scfg = ServerConfig::default();
+        // decoder count must match
+        assert!(PsCluster::new(&ccfg, &scfg, 4, 100, 1, decoders(2)).is_err());
+        // range mode cannot split fewer dimensions than PSes
+        assert!(PsCluster::new(&ccfg, &scfg, 4, 2, 1, decoders(3)).is_err());
+        let c = PsCluster::new(&ccfg, &scfg, 4, 100, 1, decoders(3)).unwrap();
+        assert_eq!(c.n_ps(), 3);
+        // contiguous ranges cover 0..d
+        assert_eq!(c.ranges, vec![(0, 34), (34, 68), (68, 100)]);
+        assert_eq!(c.sessions.len(), 4);
+        let cs = c.cluster_stats();
+        assert_eq!(cs.mode, "range");
+        assert_eq!(cs.n_ps(), 3);
+    }
+
+    #[test]
+    fn replica_sync_averages_and_resets() {
+        let ccfg = ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 1 };
+        let mut c =
+            PsCluster::new(&ccfg, &ServerConfig::default(), 4, 3, 1, decoders(2)).unwrap();
+        c.replicas = vec![vec![1.0, 2.0, 3.0], vec![3.0, 6.0, 5.0]];
+        let mut w = vec![0.0f32; 3];
+        // mean_into reports the view without touching the replicas
+        c.mean_into(&mut w);
+        assert_eq!(w, vec![2.0, 4.0, 4.0]);
+        assert_eq!(c.replicas[0], vec![1.0, 2.0, 3.0]);
+        // sync_into also resets every replica to the averaged model
+        c.sync_into(&mut w);
+        assert_eq!(w, vec![2.0, 4.0, 4.0]);
+        assert_eq!(c.replicas[0], w);
+        assert_eq!(c.replicas[1], w);
+        // finish re-asserts the current view (idempotent)
+        c.replicas[0] = vec![4.0, 4.0, 4.0];
+        c.finish(&mut w);
+        assert_eq!(w, vec![3.0, 4.0, 4.0]);
+        c.finish(&mut w);
+        assert_eq!(w, vec![3.0, 4.0, 4.0]);
+    }
+}

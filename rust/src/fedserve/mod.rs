@@ -34,15 +34,21 @@
 //!   against each other at any shard count;
 //! * [`table_cache`] — a bounded LRU of standardized LBG designs shared by
 //!   all sessions and the server decoder, with hit-rate metrics;
+//! * [`cluster`] — multi-PS sharding: [`cluster::PsCluster`] hosts several
+//!   [`server::FedServer`] instances behind ONE shared transport (and thus
+//!   one reactor loop), partitioned model-parallel (contiguous dimension
+//!   ranges, bit-exact vs a single PS) or by client subsets (full-width
+//!   replicas with periodic eq.-(7) averaging);
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
 //!   `repro serve` subcommand), over channels, a TCP loopback in one
 //!   process (`--tcp-loopback`), or split server/client processes
-//!   (`--listen` / `--connect`).
+//!   (`--listen` / `--connect`), single-PS or clustered (`--ps N`).
 //!
 //! `coordinator::driver::run_experiment` is now a thin client of this
 //! module: it contributes only training, evaluation, and row recording.
 
 pub mod aggregate;
+pub mod cluster;
 pub mod reactor;
 pub mod server;
 pub mod session;
@@ -51,10 +57,13 @@ pub mod table_cache;
 pub mod transport;
 pub mod wire;
 
-pub use aggregate::{accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded};
+pub use aggregate::{
+    accumulate_range, accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded,
+};
+pub use cluster::{partition_clients, PsCluster};
 pub use reactor::{Poller, Reactor, TimerWheel};
-pub use server::{FedServer, RoundSummary};
-pub use session::{ClientSession, Scheduler, SessionStats};
+pub use server::{FedServer, RoundSummary, SlotMap};
+pub use session::{ClientSession, RoundAssembler, Scheduler, SessionStats};
 pub use sim::{simulate, simulate_with, SimReport, TransportMode};
 pub use table_cache::{CacheStats, LruTableCache};
 pub use transport::{

@@ -317,6 +317,9 @@ pub trait EventSource {
 #[derive(Debug, Default)]
 pub struct Reactor {
     pub wheel: TimerWheel,
+    /// reusable expiry scratch: `poll_events` sweeps the wheel on every
+    /// loop pass, so the due-token list must not reallocate per pass
+    due: Vec<Token>,
 }
 
 impl Reactor {
@@ -334,16 +337,15 @@ impl Reactor {
         timeout: Option<Duration>,
     ) -> Result<Option<Event>> {
         let deadline = timeout.map(|t| Instant::now() + t);
-        let mut due: Vec<Token> = Vec::new();
         let mut drained = false;
         loop {
             if let Some(ev) = src.pop(&mut self.wheel)? {
                 return Ok(Some(ev));
             }
             let now = Instant::now();
-            due.clear();
-            self.wheel.expire(now, &mut due);
-            for &t in &due {
+            self.due.clear();
+            self.wheel.expire(now, &mut self.due);
+            for &t in &self.due {
                 src.on_timer(&mut self.wheel, t);
             }
             if let Some(ev) = src.pop(&mut self.wheel)? {

@@ -16,16 +16,16 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::compress::Decoder;
 use crate::config::ServerConfig;
 use crate::coordinator::messages::Uplink;
-use crate::metrics::server::{RoundTiming, ServerStats};
+use crate::metrics::server::{RoundTiming, ServerStats, TransportStats};
 use crate::quantizer::PrewarmPlan;
 use crate::train::ModelSpec;
 
-use super::aggregate::accumulate_sharded;
+use super::aggregate::{accumulate_range, accumulate_sharded};
 use super::session::{Scheduler, SessionStats};
 use super::table_cache::LruTableCache;
 use super::transport::{Event, Transport};
@@ -51,6 +51,221 @@ pub struct RoundSummary {
     pub framed_bytes: u64,
 }
 
+/// Per-round sender-id → collect-slot routing table. Built once per round
+/// in O(n_touched + k), then every uplink *and* every attributed garbage
+/// event resolves its sender in O(1) — the fix for the collect loop's
+/// per-event linear `participants.iter().position(...)` rescan, which was
+/// O(k²) per round and measurable at 256-client reactor scale (worse under
+/// a cluster, whose roster concatenates every PS's participants).
+///
+/// The table is reused across rounds: only the entries touched by the
+/// previous roster are cleared, so steady-state rebuild cost tracks k,
+/// not the total session count.
+#[derive(Debug, Default)]
+pub struct SlotMap {
+    /// id → slot, [`SlotMap::NONE`] when unsampled this round
+    slot_of: Vec<usize>,
+    /// ids written by the current roster (what the next rebuild clears)
+    touched: Vec<usize>,
+}
+
+impl SlotMap {
+    const NONE: usize = usize::MAX;
+
+    /// Point the table at this round's roster. `participants` must be
+    /// duplicate-free (the scheduler samples without replacement; a
+    /// cluster roster concatenates disjoint per-PS samples). The table is
+    /// sized to cover every roster id even past `n_ids`, so a caller-built
+    /// roster with out-of-table ids still collects (matching the old
+    /// linear scan) instead of waiting on a slot that can never route.
+    pub fn rebuild(&mut self, n_ids: usize, participants: &[usize]) {
+        let need = participants.iter().max().map_or(n_ids, |&m| n_ids.max(m + 1));
+        if self.slot_of.len() < need {
+            self.slot_of.resize(need, Self::NONE);
+        }
+        let mut touched = std::mem::take(&mut self.touched);
+        for id in touched.drain(..) {
+            self.slot_of[id] = Self::NONE;
+        }
+        for (slot, &id) in participants.iter().enumerate() {
+            debug_assert_eq!(self.slot_of[id], Self::NONE, "duplicate participant {id}");
+            self.slot_of[id] = slot;
+            touched.push(id);
+        }
+        self.touched = touched;
+    }
+
+    /// The roster slot of `id`, if it was sampled this round. Out-of-range
+    /// ids (a forged or corrupt wire frame) are simply unsampled.
+    pub fn slot(&self, id: usize) -> Option<usize> {
+        self.slot_of.get(id).copied().filter(|&s| s != Self::NONE)
+    }
+}
+
+/// Outcome of one collect pass. The counters survive an abort — a round
+/// that fails mid-collect still records what it saw, so `ServerStats`
+/// no longer under-reports exactly the rounds that went wrong.
+pub(crate) struct Collect {
+    pub stale: usize,
+    pub decode_errors: usize,
+    pub framed_bytes: u64,
+    pub collect_ns: u64,
+    /// a fatal mid-collect failure (current-round client error, poll
+    /// error, unattributed garbage with no deadline, non-uplink frame);
+    /// the counters above are as of the abort
+    pub abort: Option<anyhow::Error>,
+}
+
+/// The shared collect loop: wait on `transport` until every reachable
+/// roster slot reports, the straggler deadline passes, or a fatal error.
+/// Used verbatim by the single `FedServer` round and by the `PsCluster`
+/// (whose roster concatenates every PS's participants — one reactor wait
+/// services the whole cluster). `slots`/`unreachable` are roster-aligned;
+/// `slotmap` must have been rebuilt for this roster.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn collect_uplinks(
+    round: usize,
+    transport: &mut dyn Transport,
+    straggler_timeout_ms: u64,
+    t0: Instant,
+    sessions: &mut [SessionStats],
+    slotmap: &SlotMap,
+    unreachable: &mut [bool],
+    slots: &mut [Option<Uplink>],
+) -> Collect {
+    let mut out = Collect {
+        stale: 0,
+        decode_errors: 0,
+        framed_bytes: 0,
+        collect_ns: 0,
+        abort: None,
+    };
+    let mut pending = unreachable.iter().filter(|u| !**u).count();
+    // 0 = no deadline: block until every participant reports (the
+    // original driver semantics — results never depend on wall clock)
+    let deadline =
+        (straggler_timeout_ms > 0).then(|| t0 + Duration::from_millis(straggler_timeout_ms));
+    'collect: while pending > 0 {
+        // once the deadline passes, a zero wait still drains frames
+        // that already arrived — our own parse time must not
+        // reclassify timely clients as stragglers
+        let wait = deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
+        let event = match transport.poll(wait).context("uplink poll") {
+            Ok(Some(ev)) => ev,
+            Ok(None) => break 'collect, // deadline hit
+            Err(e) => {
+                out.abort = Some(e);
+                break 'collect;
+            }
+        };
+        let up = match event {
+            Event::Garbage { client, error, wire_bytes } => {
+                // a malformed uplink is counted, never silently waited
+                // out: when the transport can attribute it, that client
+                // sent its one frame for the round — stop expecting it
+                out.framed_bytes += wire_bytes as u64;
+                out.decode_errors += 1;
+                if let Some(c) = client {
+                    if let Some(s) = sessions.get_mut(c) {
+                        s.decode_errors += 1;
+                    }
+                    if let Some(i) = slotmap.slot(c) {
+                        if slots[i].is_none() && !unreachable[i] {
+                            unreachable[i] = true; // its one frame is spent
+                            pending -= 1;
+                        }
+                    }
+                } else if deadline.is_none() {
+                    // without attribution there is no sender to stop
+                    // expecting, and without a deadline the round would
+                    // wait forever — fail fast like the pre-transport
+                    // collect loop did
+                    out.abort =
+                        Some(anyhow!("malformed uplink frame on the shared channel: {error}"));
+                    break 'collect;
+                }
+                continue 'collect;
+            }
+            Event::Frame { msg, wire_bytes } => {
+                out.framed_bytes += wire_bytes as u64;
+                match msg {
+                    wire::Message::Update(u) => u,
+                    other => {
+                        out.abort =
+                            Some(anyhow!("unexpected frame on the uplink path: {other:?}"));
+                        break 'collect;
+                    }
+                }
+            }
+        };
+        if let Some(e) = &up.error {
+            // a late error from an *earlier* round belongs to a client
+            // this round already dropped — count it stale instead of
+            // aborting; current-round (or unknown-round) failures abort
+            if up.round == round || up.round == wire::ROUND_UNKNOWN {
+                out.abort = Some(anyhow!("client {} failed in round {round}: {e}", up.client_id));
+                break 'collect;
+            }
+            out.stale += 1;
+            continue 'collect;
+        }
+        match slotmap.slot(up.client_id) {
+            Some(i) if up.round == round && slots[i].is_none() && !unreachable[i] => {
+                slots[i] = Some(up);
+                pending -= 1;
+            }
+            _ => out.stale += 1,
+        }
+    }
+    out.collect_ns = t0.elapsed().as_nanos() as u64;
+    out
+}
+
+/// Per-session bookkeeping of a completed round (participation, drops,
+/// honest framed uplink bytes), shared by the single server and the
+/// cluster; returns the drop count.
+pub(crate) fn ledger_round(
+    sessions: &mut [SessionStats],
+    round: usize,
+    roster: &[usize],
+    slots: &[Option<Uplink>],
+) -> usize {
+    let mut dropped = 0usize;
+    for (i, &id) in roster.iter().enumerate() {
+        let s = &mut sessions[id];
+        match &slots[i] {
+            Some(up) => {
+                s.participated += 1;
+                s.last_round = Some(round);
+                s.bytes_up += (up.payload.len() + wire::UPDATE_OVERHEAD) as u64;
+            }
+            None => {
+                s.dropped += 1;
+                dropped += 1;
+            }
+        }
+    }
+    dropped
+}
+
+/// Overwrite the per-client `bytes_down` ledger with the transport's
+/// socket-measured counters (when it has them): `SessionStats` credits a
+/// frame when it is handed to the transport, which on TCP includes bytes
+/// still queued to a peer that later died — the comment that used to sit
+/// on `bytes_down` admitted the ledger lied. Called at the end of every
+/// round (aborts included) by the single server and the cluster alike;
+/// cheap: one counter copy per session.
+pub(crate) fn reconcile_bytes_down(sessions: &mut [SessionStats], t: &TransportStats) {
+    if !t.socket_measured {
+        return;
+    }
+    for (id, s) in sessions.iter_mut().enumerate() {
+        if let Some(&(_, out)) = t.per_client.get(id) {
+            s.bytes_down = out;
+        }
+    }
+}
+
 /// The parameter server: scheduler + per-client ledgers + decoder + stats.
 pub struct FedServer {
     pub cfg: ServerConfig,
@@ -60,6 +275,8 @@ pub struct FedServer {
     pub stats: ServerStats,
     /// reusable eq.-(7) accumulator (zeroed per round, never reallocated)
     acc: Vec<f32>,
+    /// reusable per-round id → slot routing (the O(k) collect fix)
+    slotmap: SlotMap,
 }
 
 impl FedServer {
@@ -76,6 +293,7 @@ impl FedServer {
             sessions: vec![SessionStats::default(); n_clients],
             stats: ServerStats::default(),
             acc: Vec::new(),
+            slotmap: SlotMap::default(),
         }
     }
 
@@ -157,7 +375,9 @@ impl FedServer {
 
     /// Serve one round: broadcast the model to `participants` over
     /// `transport`, collect their uplinks off it, decode, shard-aggregate,
-    /// and apply the eq.-(7) averaged step to `w`.
+    /// and apply the eq.-(7) averaged step to `w`. A round that aborts
+    /// mid-collect still records its [`RoundTiming`] (flagged `aborted`)
+    /// before the error propagates.
     pub fn run_round(
         &mut self,
         round: usize,
@@ -167,12 +387,6 @@ impl FedServer {
         w: &mut [f32],
     ) -> Result<RoundSummary> {
         let t0 = Instant::now();
-        let mut slots: Vec<Option<Uplink>> = Vec::new();
-        slots.resize_with(participants.len(), || None);
-        let mut pending = participants.len();
-        let mut stale = 0usize;
-        let mut decode_errors = 0usize;
-        let mut framed_bytes = 0u64;
         // the downlink: one encoded frame, shared across participants. A
         // client whose downlink cannot be delivered (dead thread, closed
         // socket — e.g. dropped for a malformed uplink last round) cannot
@@ -183,98 +397,47 @@ impl FedServer {
         for (i, &id) in participants.iter().enumerate() {
             if transport.send(id, &frame).is_err() {
                 unreachable[i] = true;
-                pending -= 1;
             } else if let Some(s) = self.sessions.get_mut(id) {
                 s.bytes_down += frame.len() as u64;
             }
         }
-        // 0 = no deadline: block until every participant reports (the
-        // original driver semantics — results never depend on wall clock)
-        let deadline = (self.cfg.straggler_timeout_ms > 0)
-            .then(|| t0 + Duration::from_millis(self.cfg.straggler_timeout_ms));
-        'collect: while pending > 0 {
-            // once the deadline passes, a zero wait still drains frames
-            // that already arrived — our own parse time must not
-            // reclassify timely clients as stragglers
-            let wait = deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
-            let event = match transport.poll(wait).context("uplink poll")? {
-                Some(ev) => ev,
-                None => break 'collect, // deadline hit
-            };
-            let up = match event {
-                Event::Garbage { client, error, wire_bytes } => {
-                    // a malformed uplink is counted, never silently waited
-                    // out: when the transport can attribute it, that client
-                    // sent its one frame for the round — stop expecting it
-                    framed_bytes += wire_bytes as u64;
-                    decode_errors += 1;
-                    if let Some(c) = client {
-                        if let Some(s) = self.sessions.get_mut(c) {
-                            s.decode_errors += 1;
-                        }
-                        if let Some(i) = participants.iter().position(|&p| p == c) {
-                            if slots[i].is_none() && !unreachable[i] {
-                                unreachable[i] = true; // its one frame is spent
-                                pending -= 1;
-                            }
-                        }
-                    } else if deadline.is_none() {
-                        // without attribution there is no sender to stop
-                        // expecting, and without a deadline the round would
-                        // wait forever — fail fast like the pre-transport
-                        // collect loop did
-                        bail!("malformed uplink frame on the shared channel: {error}");
-                    }
-                    continue 'collect;
-                }
-                Event::Frame { msg, wire_bytes } => {
-                    framed_bytes += wire_bytes as u64;
-                    match msg {
-                        wire::Message::Update(u) => u,
-                        other => bail!("unexpected frame on the uplink path: {other:?}"),
-                    }
-                }
-            };
-            if let Some(e) = &up.error {
-                // a late error from an *earlier* round belongs to a client
-                // this round already dropped — count it stale instead of
-                // aborting; current-round (or unknown-round) failures abort
-                if up.round == round || up.round == wire::ROUND_UNKNOWN {
-                    bail!("client {} failed in round {round}: {e}", up.client_id);
-                }
-                stale += 1;
-                continue 'collect;
-            }
-            let slot = participants.iter().position(|&p| p == up.client_id);
-            match slot {
-                Some(i) if up.round == round && slots[i].is_none() && !unreachable[i] => {
-                    slots[i] = Some(up);
-                    pending -= 1;
-                }
-                _ => stale += 1,
-            }
+        let mut slots: Vec<Option<Uplink>> = Vec::new();
+        slots.resize_with(participants.len(), || None);
+        self.slotmap.rebuild(self.sessions.len(), participants);
+        let col = collect_uplinks(
+            round,
+            transport,
+            self.cfg.straggler_timeout_ms,
+            t0,
+            &mut self.sessions,
+            &self.slotmap,
+            &mut unreachable,
+            &mut slots,
+        );
+        // the downlink ledger lied on TCP (bytes credited at send time may
+        // still be queued to a peer that died): reconcile per client
+        // against the socket-measured counters every round, abort or not
+        reconcile_bytes_down(&mut self.sessions, &transport.stats());
+        let received = slots.iter().filter(|s| s.is_some()).count();
+        if let Some(e) = col.abort {
+            self.stats.push(RoundTiming {
+                round,
+                collect_ns: col.collect_ns,
+                reduce_ns: 0,
+                received,
+                dropped: participants.len() - received,
+                stale: col.stale,
+                decode_errors: col.decode_errors,
+                framed_bytes: col.framed_bytes,
+                aborted: true,
+            });
+            return Err(e);
         }
-        let collect_ns = t0.elapsed().as_nanos() as u64;
 
-        let mut dropped = 0usize;
-        for (i, &id) in participants.iter().enumerate() {
-            let s = &mut self.sessions[id];
-            match &slots[i] {
-                Some(up) => {
-                    s.participated += 1;
-                    s.last_round = Some(round);
-                    s.bytes_up += (up.payload.len() + wire::UPDATE_OVERHEAD) as u64;
-                }
-                None => {
-                    s.dropped += 1;
-                    dropped += 1;
-                }
-            }
-        }
+        let dropped = ledger_round(&mut self.sessions, round, participants, &slots);
 
         // fused decode+reduce: stream every payload's survivors straight
         // into the sharded accumulator — no dense per-client ĝ, ever
-        let t1 = Instant::now();
         let mut payloads: Vec<&[u8]> = Vec::with_capacity(participants.len());
         let mut train_loss = 0.0f64;
         let mut bits = 0.0f64;
@@ -283,40 +446,84 @@ impl FedServer {
             train_loss += up.train_loss;
             bits += up.report.ideal_total_bits();
         }
-        let received = payloads.len();
-        if received > 0 {
-            self.acc.clear();
-            self.acc.resize(w.len(), 0.0);
-            accumulate_sharded(&*self.decoder, &payloads, spec, self.cfg.shards, &mut self.acc)?;
-            // eq. (7): average the accumulated updates, subtract
-            let scale = 1.0 / received as f32;
-            for (wi, a) in w.iter_mut().zip(&self.acc) {
-                *wi -= scale * a;
+        // a reduce failure (payload passed the wire CRC but its compressor
+        // body is invalid) is the other way a round dies mid-flight: it
+        // records its timing too, for the same no-under-reporting reason
+        let reduce_ns = if received > 0 {
+            match self.reduce_slice(&payloads, spec, 0, w, 1.0 / received as f32) {
+                Ok(ns) => ns,
+                Err(e) => {
+                    self.stats.push(RoundTiming {
+                        round,
+                        collect_ns: col.collect_ns,
+                        reduce_ns: 0,
+                        received,
+                        dropped,
+                        stale: col.stale,
+                        decode_errors: col.decode_errors,
+                        framed_bytes: col.framed_bytes,
+                        aborted: true,
+                    });
+                    return Err(e);
+                }
             }
-        }
-        let reduce_ns = t1.elapsed().as_nanos() as u64;
+        } else {
+            0
+        };
 
         self.stats.push(RoundTiming {
             round,
-            collect_ns,
+            collect_ns: col.collect_ns,
             reduce_ns,
             received,
             dropped,
-            stale,
-            decode_errors,
-            framed_bytes,
+            stale: col.stale,
+            decode_errors: col.decode_errors,
+            framed_bytes: col.framed_bytes,
+            aborted: false,
         });
         Ok(RoundSummary {
             round,
             received,
             dropped,
-            stale,
-            decode_errors,
+            stale: col.stale,
+            decode_errors: col.decode_errors,
             train_loss_mean: if received > 0 { train_loss / received as f64 } else { f64::NAN },
             bits_per_client: if received > 0 { bits / received as f64 } else { 0.0 },
-            framed_bytes,
+            framed_bytes: col.framed_bytes,
         })
     }
+
+    /// The fused eq.-(7) reduce of already-collected payloads over one
+    /// contiguous slice `w = global[offset .. offset + w.len()]` of the
+    /// model: fold every payload's survivors in the slice (client order)
+    /// into the reusable accumulator, then apply the averaged step. The
+    /// single-PS round is the `offset = 0`, full-width call (which keeps
+    /// the `cfg.shards` sharded fold); a range-mode cluster PS passes its
+    /// own dimension range. Returns the reduce wall time in nanoseconds.
+    pub fn reduce_slice(
+        &mut self,
+        payloads: &[&[u8]],
+        spec: &ModelSpec,
+        offset: usize,
+        w: &mut [f32],
+        scale: f32,
+    ) -> Result<u64> {
+        let t1 = Instant::now();
+        self.acc.clear();
+        self.acc.resize(w.len(), 0.0);
+        if offset == 0 && w.len() == spec.d() {
+            accumulate_sharded(&*self.decoder, payloads, spec, self.cfg.shards, &mut self.acc)?;
+        } else {
+            accumulate_range(&*self.decoder, payloads, spec, offset, &mut self.acc)?;
+        }
+        // eq. (7): average the accumulated updates, subtract
+        for (wi, a) in w.iter_mut().zip(&self.acc) {
+            *wi -= scale * a;
+        }
+        Ok(t1.elapsed().as_nanos() as u64)
+    }
+
 }
 
 #[cfg(test)]
@@ -479,6 +686,113 @@ mod tests {
         let mut w = vec![0.0f32; 8];
         let err = server.run_round(0, &[0], &mut t, &spec, &mut w).unwrap_err();
         assert!(format!("{err}").contains("local divergence"), "{err}");
+    }
+
+    #[test]
+    fn slotmap_routes_in_o1_and_survives_roster_churn() {
+        let mut m = SlotMap::default();
+        m.rebuild(6, &[4, 1, 5]);
+        assert_eq!(m.slot(4), Some(0));
+        assert_eq!(m.slot(1), Some(1));
+        assert_eq!(m.slot(5), Some(2));
+        assert_eq!(m.slot(0), None); // unsampled
+        assert_eq!(m.slot(99), None); // forged id past the session table
+        // the next roster clears only the touched entries
+        m.rebuild(6, &[0, 2]);
+        assert_eq!(m.slot(0), Some(0));
+        assert_eq!(m.slot(2), Some(1));
+        for stale in [4usize, 1, 5] {
+            assert_eq!(m.slot(stale), None, "stale id {stale} survived rebuild");
+        }
+        // a roster id past the session table still routes (the old linear
+        // scan matched it; the table must too, or its slot never fills)
+        m.rebuild(2, &[7, 1]);
+        assert_eq!(m.slot(7), Some(0));
+        assert_eq!(m.slot(1), Some(1));
+        assert_eq!(m.slot(0), None);
+    }
+
+    #[test]
+    fn duplicate_unsampled_and_forged_senders_count_stale() {
+        // the id→slot regression suite: with the O(1) roster lookup, a
+        // duplicate frame, an unsampled-but-real sender, and a forged
+        // out-of-range id must all be counted stale — and the round's real
+        // uplinks still land. Extras are sent *before* the second filler
+        // so the collect loop must classify them, not skip them.
+        let spec = tiny_spec(6, 2);
+        let (mut t, mut clients) = pair(3);
+        let mut server = FedServer::new(quick_cfg(5000, 1), 3, 1, Box::new(NoCompression));
+        let g = vec![1.0f32; 8];
+        clients[0].send(&uplink_for(0, 0, &g, &spec)).unwrap();
+        clients[0].send(&uplink_for(0, 0, &g, &spec)).unwrap(); // duplicate
+        clients[1].send(&uplink_for(1, 0, &g, &spec)).unwrap(); // unsampled
+        clients[1].send(&uplink_for(9, 0, &g, &spec)).unwrap(); // forged id
+        clients[2].send(&uplink_for(2, 0, &g, &spec)).unwrap();
+        let mut w = vec![0.0f32; 8];
+        // participants [2, 0]: slot order must not matter to routing
+        let s = server.run_round(0, &[2, 0], &mut t, &spec, &mut w).unwrap();
+        assert_eq!(s.received, 2);
+        assert_eq!(s.stale, 3);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(server.sessions[0].participated, 1);
+        assert_eq!(server.sessions[2].participated, 1);
+        assert_eq!(server.sessions[1].participated, 0);
+        assert_eq!(w, vec![-1.0f32; 8]); // (1 + 1) / 2 subtracted once
+    }
+
+    #[test]
+    fn aborted_round_still_records_its_timing() {
+        // a current-round client error aborts the round, but the timing —
+        // received / decode_errors / framed bytes as of the abort — must
+        // land in ServerStats instead of vanishing (the old collect only
+        // pushed on success, under-reporting exactly the broken rounds)
+        let spec = tiny_spec(6, 2);
+        let (mut t, mut clients) = pair(2);
+        let mut server = FedServer::new(quick_cfg(5000, 1), 2, 1, Box::new(NoCompression));
+        // the healthy uplink arrives first, then the fatal error
+        clients[1].send(&uplink_for(1, 0, &[2.0f32; 8], &spec)).unwrap();
+        clients[0]
+            .send(&wire::encode_update(&Uplink::failure(0, 0, "local divergence".into())))
+            .unwrap();
+        let mut w = vec![0.0f32; 8];
+        let err = server.run_round(0, &[0, 1], &mut t, &spec, &mut w).unwrap_err();
+        assert!(format!("{err}").contains("local divergence"), "{err}");
+        assert_eq!(server.stats.rounds.len(), 1, "aborted round lost its timing");
+        let tm = &server.stats.rounds[0];
+        assert!(tm.aborted);
+        assert_eq!(tm.received, 1);
+        assert_eq!(tm.dropped, 1);
+        assert_eq!(tm.reduce_ns, 0);
+        assert!(tm.framed_bytes > 0);
+        assert_eq!(server.stats.total_aborted(), 1);
+        // no step was applied
+        assert_eq!(w, vec![0.0f32; 8]);
+    }
+
+    #[test]
+    fn reduce_failure_also_records_aborted_timing() {
+        // a payload that passes the wire CRC but fails the compressor
+        // decode dies in the reduce, not the collect — that round must be
+        // recorded (aborted) too, not silently dropped from the stats
+        let spec = tiny_spec(6, 2);
+        let (mut t, mut clients) = pair(1);
+        let mut server = FedServer::new(quick_cfg(5000, 1), 1, 1, Box::new(NoCompression));
+        let up = Uplink {
+            client_id: 0,
+            round: 0,
+            payload: vec![0u8; 7], // not a multiple of 4: invalid body
+            report: Default::default(),
+            train_loss: 0.0,
+            error: None,
+        };
+        clients[0].send(&wire::encode_update(&up)).unwrap();
+        let mut w = vec![0.0f32; 8];
+        let err = server.run_round(0, &[0], &mut t, &spec, &mut w).unwrap_err();
+        assert!(format!("{err:#}").contains("multiple of 4"), "{err:#}");
+        assert_eq!(server.stats.rounds.len(), 1);
+        assert!(server.stats.rounds[0].aborted);
+        assert_eq!(server.stats.rounds[0].received, 1);
+        assert_eq!(w, vec![0.0f32; 8]);
     }
 
     #[test]

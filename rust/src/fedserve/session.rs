@@ -12,7 +12,7 @@
 //! server's per-client ledger (participation, straggler drops, honest
 //! uplink bytes).
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::compress::{EncodeCtx, Encoder, RateReport};
 use crate::coordinator::memory::Memory;
@@ -113,12 +113,13 @@ pub struct SessionStats {
     pub decode_errors: usize,
     /// honest uplink bytes received, including wire framing
     pub bytes_up: u64,
-    /// framed downlink bytes handed to the transport for this client
-    /// (round broadcasts the transport accepted — on TCP that may include
-    /// bytes still queued when a peer later dies; the socket-measured
-    /// truth is `TransportStats.per_client`). The per-client mirror of
-    /// `bytes_up`, so the ledger accounts both directions of the paper's
-    /// PS↔learner channel.
+    /// framed downlink bytes delivered to this client. Credited when a
+    /// frame is handed to the transport, then **reconciled against the
+    /// socket-measured truth** (`TransportStats.per_client`) at end of
+    /// every round on transports that measure at the socket — so bytes
+    /// still queued to a peer that died are never left credited as
+    /// delivered. The per-client mirror of `bytes_up`, so the ledger
+    /// accounts both directions of the paper's PS↔learner channel.
     pub bytes_down: u64,
     pub last_round: Option<usize>,
 }
@@ -138,10 +139,102 @@ impl Scheduler {
     /// the aggregation order (the parity-tested serial reference uses it
     /// verbatim).
     pub fn sample(&mut self, n: usize, k: usize) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..n).collect();
+        self.shuffled((0..n).collect(), k)
+    }
+
+    /// Sample `k` of an explicit client pool without replacement — the
+    /// cluster's client-partitioned mode, where each PS samples only the
+    /// clients it owns. Same shuffle-prefix construction as
+    /// [`Scheduler::sample`], so a PS whose (sorted) pool is `0..n`
+    /// reproduces the single-server schedule bit-exactly.
+    pub fn sample_of(&mut self, pool: &[usize], k: usize) -> Vec<usize> {
+        self.shuffled(pool.to_vec(), k)
+    }
+
+    fn shuffled(&mut self, mut order: Vec<usize>, k: usize) -> Vec<usize> {
         self.rng.shuffle(&mut order);
-        order.truncate(k.clamp(1, n.max(1)));
+        order.truncate(k.clamp(1, order.len().max(1)));
         order
+    }
+}
+
+/// Client-side reassembly of a round broadcast that arrives either as one
+/// full [`wire::Message::Round`] frame (single PS, replica-mode PS) or as
+/// several [`wire::Message::RoundSlice`] frames — one per model-parallel
+/// PS, each carrying the contiguous dimension range that PS owns. Slices
+/// from the cluster are disjoint and cover the model, so completion is
+/// tracked by filled-dimension count; a slice naming a new round (or a
+/// different model size) discards a stale partial.
+#[derive(Debug, Default)]
+pub struct RoundAssembler {
+    round: usize,
+    w: Vec<f32>,
+    filled: usize,
+    /// a partial slice assembly is in progress
+    partial: bool,
+}
+
+impl RoundAssembler {
+    pub fn new() -> RoundAssembler {
+        RoundAssembler::default()
+    }
+
+    /// Feed one downlink message. Returns `Ok(true)` when a round's model
+    /// is complete — read it with [`RoundAssembler::round`] /
+    /// [`RoundAssembler::weights`] / [`RoundAssembler::take_weights`] —
+    /// and `Ok(false)` while more slices are needed. Non-round messages
+    /// are a caller error.
+    pub fn feed(&mut self, msg: wire::Message) -> Result<bool> {
+        match msg {
+            wire::Message::Round { round, weights } => {
+                self.round = round;
+                self.w = weights;
+                self.filled = self.w.len();
+                self.partial = false;
+                Ok(true)
+            }
+            wire::Message::RoundSlice { round, offset, total, weights } => {
+                if !self.partial || round != self.round || self.w.len() != total {
+                    // first slice of a round (or a stale partial): restart
+                    self.w.clear();
+                    self.w.resize(total, 0.0);
+                    self.filled = 0;
+                    self.round = round;
+                    self.partial = true;
+                }
+                ensure!(
+                    offset + weights.len() <= total,
+                    "slice {offset}..{} past the model end {total}",
+                    offset + weights.len()
+                );
+                self.w[offset..offset + weights.len()].copy_from_slice(&weights);
+                self.filled += weights.len();
+                if self.filled >= total {
+                    self.partial = false;
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            }
+            other => bail!("not a round frame: {other:?}"),
+        }
+    }
+
+    /// The round of the last completed assembly.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// The assembled model of the last completed assembly.
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Take the assembled model by value (resets the buffer — callers that
+    /// need `w` while also borrowing the rest of their state use this).
+    pub fn take_weights(&mut self) -> Vec<f32> {
+        self.filled = 0;
+        std::mem::take(&mut self.w)
     }
 }
 
@@ -217,5 +310,88 @@ mod tests {
         let mut s = Scheduler::new(1);
         assert_eq!(s.sample(5, 99).len(), 5);
         assert_eq!(s.sample(5, 0).len(), 1);
+    }
+
+    #[test]
+    fn sample_of_the_full_sorted_pool_reproduces_sample() {
+        // the cluster-of-1 anchor: a replica PS owning every client (the
+        // partition sorts its subsets) replays the single-server schedule
+        let mut a = Scheduler::new(33);
+        let mut b = Scheduler::new(33);
+        let pool: Vec<usize> = (0..10).collect();
+        for _ in 0..6 {
+            assert_eq!(a.sample(10, 4), b.sample_of(&pool, 4));
+        }
+        // subset pools: samples stay inside the pool, distinct, clamped
+        let mut c = Scheduler::new(7);
+        let pool = vec![3usize, 5, 8, 9];
+        for _ in 0..20 {
+            let s = c.sample_of(&pool, 3);
+            assert_eq!(s.len(), 3);
+            assert!(s.iter().all(|x| pool.contains(x)));
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3);
+        }
+        assert_eq!(c.sample_of(&pool, 99).len(), 4);
+        assert!(c.sample_of(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn assembler_passes_full_rounds_through() {
+        let mut a = RoundAssembler::new();
+        let done = a.feed(wire::Message::Round { round: 4, weights: vec![1.0, 2.0] }).unwrap();
+        assert!(done);
+        assert_eq!(a.round(), 4);
+        assert_eq!(a.weights(), &[1.0, 2.0]);
+        assert_eq!(a.take_weights(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn assembler_reassembles_slices_bit_exactly_in_any_order() {
+        let w: Vec<f32> = vec![0.5, -0.0, f32::NAN, 3.0, 4.5];
+        for order in [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]] {
+            let ranges = [(0usize, 2usize), (2, 4), (4, 5)];
+            let mut a = RoundAssembler::new();
+            let mut complete = false;
+            for (n, &i) in order.iter().enumerate() {
+                let (lo, hi) = ranges[i];
+                complete = a
+                    .feed(wire::Message::RoundSlice {
+                        round: 7,
+                        offset: lo,
+                        total: w.len(),
+                        weights: w[lo..hi].to_vec(),
+                    })
+                    .unwrap();
+                assert_eq!(complete, n == order.len() - 1, "order {order:?} step {n}");
+            }
+            assert!(complete);
+            assert_eq!(a.round(), 7);
+            for (x, y) in a.weights().iter().zip(&w) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_discards_stale_partials_for_a_new_round() {
+        fn slice(round: usize, offset: usize, weights: Vec<f32>) -> wire::Message {
+            wire::Message::RoundSlice { round, offset, total: 4, weights }
+        }
+        let mut a = RoundAssembler::new();
+        // half of round 0 arrives, then round 1 starts from scratch
+        assert!(!a.feed(slice(0, 0, vec![9.0, 9.0])).unwrap());
+        assert!(!a.feed(slice(1, 0, vec![1.0, 2.0])).unwrap());
+        assert!(a.feed(slice(1, 2, vec![3.0, 4.0])).unwrap());
+        assert_eq!(a.round(), 1);
+        assert_eq!(a.weights(), &[1.0, 2.0, 3.0, 4.0]);
+        // a full Round frame always wins immediately
+        assert!(a.feed(wire::Message::Round { round: 2, weights: vec![8.0] }).unwrap());
+        assert_eq!(a.weights(), &[8.0]);
+        // non-round frames are a protocol error, out-of-bounds slices too
+        assert!(a.feed(wire::Message::Shutdown).is_err());
+        assert!(a.feed(slice(3, 3, vec![0.0; 2])).is_err());
     }
 }

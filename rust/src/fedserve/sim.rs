@@ -21,12 +21,13 @@ use crate::compress::{BlockCodec, CpuCodec};
 use crate::config::ExperimentConfig;
 use crate::coordinator::memory::Memory;
 use crate::coordinator::messages::Uplink;
-use crate::metrics::server::{ServerStats, TransportStats};
+use crate::metrics::server::{ClusterStats, ServerStats, TransportStats};
 use crate::train::{ModelSpec, TensorInfo, TensorKind};
 use crate::util::rng::Rng;
 
+use super::cluster::PsCluster;
 use super::server::FedServer;
-use super::session::ClientSession;
+use super::session::{ClientSession, RoundAssembler};
 use super::table_cache::LruTableCache;
 use super::transport::{
     ChannelTransport, ClientTransport, TcpClientTransport, TcpServerTransport, Transport,
@@ -105,6 +106,8 @@ pub struct SimReport {
     /// mean ideal uplink bits per received client in the last round
     pub bits_per_round: f64,
     pub stats: ServerStats,
+    /// multi-PS runs: the per-PS stats rollup (None for a single server)
+    pub cluster: Option<ClusterStats>,
 }
 
 impl SimReport {
@@ -124,9 +127,18 @@ pub fn sim_client_loop<T: ClientTransport>(
     d: usize,
     spec: &ModelSpec,
 ) {
+    // a range-mode cluster broadcasts per-PS model slices; the assembler
+    // also passes plain full-round frames straight through
+    let mut asm = RoundAssembler::new();
     loop {
         let round = match transport.recv() {
-            Ok(Some(wire::Message::Round { round, .. })) => round,
+            Ok(Some(msg @ (wire::Message::Round { .. } | wire::Message::RoundSlice { .. }))) => {
+                match asm.feed(msg) {
+                    Ok(true) => asm.round(),
+                    Ok(false) => continue, // more slices to come
+                    Err(_) => return,      // protocol violation: stop serving
+                }
+            }
             Ok(Some(wire::Message::Shutdown)) | Ok(None) => return,
             Ok(Some(_)) => return, // protocol violation: stop serving
             Err(e) => {
@@ -217,6 +229,33 @@ fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
     Ok(SimServer { spec, tables, codec, server })
 }
 
+/// Drive every cluster round through `transport` and close it gracefully;
+/// the multi-PS sibling of [`drive_rounds`].
+fn drive_cluster_rounds(
+    cluster: &mut PsCluster,
+    transport: &mut dyn Transport,
+    cfg: &ExperimentConfig,
+    spec: &ModelSpec,
+    w: &mut [f32],
+) -> Result<f64> {
+    let k = cfg.participants_per_round();
+    let mut bits = 0.0f64;
+    for round in 0..cfg.rounds {
+        let summary = cluster.run_round(round, k, transport, spec, w)?;
+        if summary.received == 0 {
+            bail!(
+                "round {round}: all {} participants missed the {} ms deadline",
+                summary.dropped,
+                cfg.server.straggler_timeout_ms
+            );
+        }
+        bits = summary.bits_per_client;
+    }
+    cluster.finish(w);
+    transport.close()?;
+    Ok(bits)
+}
+
 /// Fold the end-of-run counters into the stats, persist the hot quantizer
 /// tables when the config names a cache path, and assemble the report.
 fn finish_report(
@@ -240,6 +279,65 @@ fn finish_report(
         w,
         bits_per_round,
         stats: server.stats,
+        cluster: None,
+    }
+}
+
+/// Run the client fleet for one serve: spawn `sessions` as client threads
+/// on the chosen transport, hand the server endpoint to `run`, and return
+/// its result together with the transport's measured byte counters. The
+/// scaffolding (scoped threads, loopback bind/accept, listener teardown)
+/// is what the single-server and cluster drives share.
+fn with_transport<F>(
+    cfg: &ExperimentConfig,
+    d: usize,
+    mode: TransportMode,
+    sessions: Vec<ClientSession>,
+    spec: &ModelSpec,
+    run: F,
+) -> Result<(f64, TransportStats)>
+where
+    F: FnOnce(&mut dyn Transport) -> Result<f64>,
+{
+    match mode {
+        TransportMode::Channel => std::thread::scope(|scope| {
+            let (mut transport, clients) = ChannelTransport::pair(cfg.n_clients);
+            let seed = cfg.seed;
+            for (mut ct, mut session) in clients.into_iter().zip(sessions) {
+                scope.spawn(move || sim_client_loop(&mut ct, &mut session, seed, d, spec));
+            }
+            let bits = run(&mut transport)?;
+            Ok::<_, anyhow::Error>((bits, transport.stats()))
+        }),
+        TransportMode::TcpLoopback => {
+            let listener = TcpListener::bind("127.0.0.1:0").context("binding 127.0.0.1:0")?;
+            let addr = listener.local_addr().context("loopback address")?.to_string();
+            let mut listener = Some(listener);
+            std::thread::scope(|scope| {
+                let seed = cfg.seed;
+                for (id, mut session) in sessions.into_iter().enumerate() {
+                    let addr = addr.clone();
+                    scope.spawn(move || {
+                        // a connect failure means the server never came up;
+                        // there is nothing to serve and nothing to report
+                        if let Ok(mut ct) =
+                            TcpClientTransport::connect(&addr, id, LOOPBACK_CONNECT_TIMEOUT)
+                        {
+                            sim_client_loop(&mut ct, &mut session, seed, d, spec);
+                        }
+                    });
+                }
+                let l = listener.take().expect("listener moved in");
+                let accepted =
+                    TcpServerTransport::accept(&l, cfg.n_clients, LOOPBACK_ACCEPT_TIMEOUT);
+                // drop the listener either way: an accept failure must not
+                // strand a backlogged-but-unaccepted client thread
+                drop(l);
+                let mut transport = accepted?;
+                let bits = run(&mut transport)?;
+                Ok::<_, anyhow::Error>((bits, transport.stats()))
+            })
+        }
     }
 }
 
@@ -251,63 +349,96 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
 
 /// [`simulate`] with an explicit transport: the per-scheme aggregate
 /// results are bit-exact across modes (see `tests/fedserve_tcp.rs`) — the
-/// transport moves bytes, it never touches numerics.
+/// transport moves bytes, it never touches numerics. A config with
+/// `server.cluster` set runs the multi-PS cluster instead of one server
+/// (a range-mode cluster is bit-exact against the single server,
+/// `tests/fedserve_cluster.rs`).
 pub fn simulate_with(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
+    if cfg.server.cluster.is_some() {
+        return simulate_cluster(cfg, d, mode);
+    }
     let SimServer { spec, tables, codec, mut server } = build_server(cfg, d)?;
     let sessions = build_sessions(cfg, d, &codec, &tables)?;
     let mut w = vec![0.0f32; d];
-
-    let (bits_per_round, tstats) = match mode {
-        TransportMode::Channel => std::thread::scope(|scope| {
-            let (mut transport, clients) = ChannelTransport::pair(cfg.n_clients);
-            let spec_ref = &spec;
-            let seed = cfg.seed;
-            for (mut ct, mut session) in clients.into_iter().zip(sessions) {
-                scope.spawn(move || sim_client_loop(&mut ct, &mut session, seed, d, spec_ref));
-            }
-            let bits = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
-            Ok::<_, anyhow::Error>((bits, transport.stats()))
-        })?,
-        TransportMode::TcpLoopback => {
-            let listener = TcpListener::bind("127.0.0.1:0").context("binding 127.0.0.1:0")?;
-            let addr = listener.local_addr().context("loopback address")?.to_string();
-            let mut listener = Some(listener);
-            std::thread::scope(|scope| {
-                let spec_ref = &spec;
-                let seed = cfg.seed;
-                for (id, mut session) in sessions.into_iter().enumerate() {
-                    let addr = addr.clone();
-                    scope.spawn(move || {
-                        // a connect failure means the server never came up;
-                        // there is nothing to serve and nothing to report
-                        if let Ok(mut ct) =
-                            TcpClientTransport::connect(&addr, id, LOOPBACK_CONNECT_TIMEOUT)
-                        {
-                            sim_client_loop(&mut ct, &mut session, seed, d, spec_ref);
-                        }
-                    });
-                }
-                let l = listener.take().expect("listener moved in");
-                let accepted =
-                    TcpServerTransport::accept(&l, cfg.n_clients, LOOPBACK_ACCEPT_TIMEOUT);
-                // drop the listener either way: an accept failure must not
-                // strand a backlogged-but-unaccepted client thread
-                drop(l);
-                let mut transport = accepted?;
-                let bits = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
-                Ok::<_, anyhow::Error>((bits, transport.stats()))
-            })?
-        }
-    };
-
+    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, |t| {
+        drive_rounds(&mut server, t, cfg, &spec, &mut w)
+    })?;
     Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
+}
+
+/// The cluster-hosting pieces every clustered serve constructs the same
+/// way (the multi-PS sibling of [`SimServer`]): one shared table cache,
+/// one decoder per PS off the same registry spec.
+struct SimCluster {
+    spec: ModelSpec,
+    tables: Arc<LruTableCache>,
+    codec: Arc<dyn BlockCodec>,
+    cluster: PsCluster,
+}
+
+fn build_cluster(cfg: &ExperimentConfig, d: usize) -> Result<SimCluster> {
+    let ccfg = cfg.server.cluster.clone().context("no cluster configured")?;
+    let spec = sim_spec(d);
+    let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let decoders = (0..ccfg.n_ps)
+        .map(|_| cfg.build_decoder(d, codec.clone(), tables.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    let mut cluster = PsCluster::new(&ccfg, &cfg.server, cfg.n_clients, d, cfg.seed, decoders)?;
+    cluster.preload_tables(&tables);
+    cluster.prewarm_for(cfg, d, &tables);
+    Ok(SimCluster { spec, tables, codec, cluster })
+}
+
+/// [`finish_report`]'s multi-PS sibling: fold the end-of-run counters
+/// into the cluster stats and attach the per-PS rollup.
+fn finish_cluster_report(
+    cfg: &ExperimentConfig,
+    d: usize,
+    w: Vec<f32>,
+    bits_per_round: f64,
+    mut cluster: PsCluster,
+    tables: &LruTableCache,
+    tstats: TransportStats,
+) -> SimReport {
+    cluster.persist_tables(tables);
+    let cache = tables.stats();
+    cluster.stats.set_cache(cache.hits, cache.misses);
+    cluster.stats.set_prewarm(cache.prewarmed, cache.prewarm_hits);
+    cluster.stats.set_transport(tstats);
+    SimReport {
+        rounds: cfg.rounds,
+        clients: cfg.n_clients,
+        d,
+        w,
+        bits_per_round,
+        stats: cluster.stats.clone(),
+        cluster: Some(cluster.cluster_stats()),
+    }
+}
+
+fn simulate_cluster(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
+    let SimCluster { spec, tables, codec, mut cluster } = build_cluster(cfg, d)?;
+    let sessions = build_sessions(cfg, d, &codec, &tables)?;
+    let mut w = vec![0.0f32; d];
+    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, |t| {
+        drive_cluster_rounds(&mut cluster, t, cfg, &spec, &mut w)
+    })?;
+    Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats))
 }
 
 /// `repro serve --listen`: bind `addr`, accept `cfg.n_clients` remote
 /// clients (each `repro serve --connect` processes, or anything speaking
-/// the wire protocol), run the rounds, report.
+/// the wire protocol), run the rounds (single PS or a `--ps N` cluster),
+/// report.
 pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimReport> {
-    let SimServer { spec, tables, codec: _, mut server } = build_server(cfg, d)?;
+    // build (and prewarm) before listening, so connected clients never
+    // wait out an LBG design between accept and the first round
+    let cluster = cfg.server.cluster.as_ref().map(|_| build_cluster(cfg, d)).transpose()?;
+    let single = match cluster {
+        Some(_) => None,
+        None => Some(build_server(cfg, d)?),
+    };
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "fedserve: listening on {} for {} clients",
@@ -318,6 +449,14 @@ pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimR
     drop(listener);
     let mut transport = accepted?;
     let mut w = vec![0.0f32; d];
+    if let Some(SimCluster { spec, tables, codec: _, mut cluster }) = cluster {
+        let bits_per_round =
+            drive_cluster_rounds(&mut cluster, &mut transport, cfg, &spec, &mut w)?;
+        let tstats = transport.stats();
+        return Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats));
+    }
+    let SimServer { spec, tables, codec: _, mut server } =
+        single.expect("either a cluster or a single server was built");
     let bits_per_round = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
     let tstats = transport.stats();
     Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
@@ -458,6 +597,40 @@ mod tests {
         }
         let total: usize = rep.stats.rounds.iter().map(|t| t.received).sum();
         assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn cluster_sim_runs_both_modes_and_reports_per_ps() {
+        use crate::config::{ClusterConfig, PsMode};
+        let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 3);
+        cfg.n_clients = 6;
+        cfg.server.prewarm = false;
+        for mode in [PsMode::Range, PsMode::Replica] {
+            cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode, sync_every: 2 });
+            let rep = simulate(&cfg, 512).unwrap();
+            assert_eq!(rep.stats.rounds.len(), 3, "{mode:?}");
+            assert!(rep.w_norm() > 0.0, "{mode:?}");
+            let cs = rep.cluster.as_ref().expect("cluster rollup");
+            assert_eq!(cs.n_ps(), 2, "{mode:?}");
+            assert_eq!(cs.mode, mode.label());
+            for ps in &cs.per_ps {
+                assert_eq!(ps.rounds.len(), 3, "{mode:?}");
+            }
+            match mode {
+                PsMode::Range => {
+                    // every PS consumed the whole roster
+                    for ps in &cs.per_ps {
+                        assert_eq!(ps.total_received(), 18, "{:?}", ps.rounds);
+                    }
+                }
+                PsMode::Replica => {
+                    // the client partition splits the roster across PSes
+                    let total: usize = cs.per_ps.iter().map(|p| p.total_received()).sum();
+                    assert_eq!(total, rep.stats.total_received());
+                    assert!(cs.per_ps.iter().all(|p| p.total_received() > 0));
+                }
+            }
+        }
     }
 
     #[test]

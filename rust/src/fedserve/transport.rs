@@ -344,6 +344,8 @@ impl Transport for ChannelTransport {
             per_client: self.src.per_client.clone(),
             disconnects: 0,
             wakeups: self.src.wakeups,
+            // mpsc delivery is the send itself: the ledger never lies here
+            socket_measured: false,
         }
     }
 }
@@ -443,6 +445,11 @@ struct TcpSource {
     poller: Poller,
     decode_errors: u64,
     disconnects: u64,
+    /// reusable readiness-set scratch: the poll entries are rebuilt every
+    /// service pass (interest depends on each queue), but the backing
+    /// allocation is hot-path state — at 256 connections a per-pass
+    /// `Vec::with_capacity` was one avoidable heap round-trip per wakeup
+    entries: Vec<PollEntry>,
 }
 
 impl TcpSource {
@@ -534,17 +541,17 @@ impl EventSource for TcpSource {
     }
 
     fn service(&mut self, wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
-        let mut entries = Vec::with_capacity(self.conns.len());
+        self.entries.clear();
         for (i, conn) in self.conns.iter().enumerate() {
             if conn.open {
-                entries.push(PollEntry {
+                self.entries.push(PollEntry {
                     token: i,
                     fd: conn.fd,
                     interest: Interest { read: true, write: !conn.outq.is_empty() },
                 });
             }
         }
-        let ready = self.poller.wait(&entries, budget).context("poll")?;
+        let ready = self.poller.wait(&self.entries, budget).context("poll")?;
         for r in ready {
             if !self.conns[r.token].open {
                 continue; // killed by an earlier entry this pass
@@ -667,7 +674,14 @@ impl TcpServerTransport {
         poller.wakeups = 0;
         Ok(TcpServerTransport {
             reactor: Reactor::new(),
-            src: TcpSource { conns, cursor: 0, poller, decode_errors: 0, disconnects: 0 },
+            src: TcpSource {
+                conns,
+                cursor: 0,
+                poller,
+                decode_errors: 0,
+                disconnects: 0,
+                entries: Vec::with_capacity(n),
+            },
         })
     }
 }
@@ -774,7 +788,9 @@ impl Transport for TcpServerTransport {
     }
 
     fn stats(&self) -> TransportStats {
-        let mut t = TransportStats { label: "tcp", ..Default::default() };
+        // byte counts are incremented at read/write: socket truth, so the
+        // server reconciles its per-client downlink ledger against them
+        let mut t = TransportStats { label: "tcp", socket_measured: true, ..Default::default() };
         for conn in &self.src.conns {
             t.bytes_in += conn.bytes_in;
             t.bytes_out += conn.bytes_out;

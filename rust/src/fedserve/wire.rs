@@ -15,14 +15,19 @@
 //! length damage fail structurally, everything else fails the CRC.
 //!
 //! Message payloads (all little-endian):
-//! * `Round`    — round u64 | n u32 | n × f32 weights (bit-exact roundtrip,
-//!                NaN included)
-//! * `Shutdown` — empty
-//! * `Update`   — client u32 | round u64 | train_loss f64 | flags u8
-//!                | [err_len u32 | err utf-8] | RateReport (7 × u64/f64)
-//!                | body_len u32 | encoded compressor payload
-//! * `Hello`    — client u32 (the socket handshake: a connecting client
-//!                introduces itself so the server can route downlinks)
+//! * `Round`      — round u64 | n u32 | n × f32 weights (bit-exact
+//!                  roundtrip, NaN included)
+//! * `Shutdown`   — empty
+//! * `Update`     — client u32 | round u64 | train_loss f64 | flags u8
+//!                  | [err_len u32 | err utf-8] | RateReport (7 × u64/f64)
+//!                  | body_len u32 | encoded compressor payload
+//! * `Hello`      — client u32 (the socket handshake: a connecting client
+//!                  introduces itself so the server can route downlinks)
+//! * `RoundSlice` — round u64 | offset u32 | total u32 | n u32 | n × f32
+//!                  (the multi-PS shard-routing frame: one model-parallel
+//!                  PS broadcasts only the contiguous dimension range it
+//!                  owns; a client reassembles the full model from the
+//!                  slices via `session::RoundAssembler`)
 
 use std::fmt;
 
@@ -59,6 +64,7 @@ const KIND_ROUND: u8 = 1;
 const KIND_SHUTDOWN: u8 = 2;
 const KIND_UPDATE: u8 = 3;
 const KIND_HELLO: u8 = 4;
+const KIND_ROUND_SLICE: u8 = 5;
 
 /// One decoded wire message.
 #[derive(Debug)]
@@ -71,6 +77,12 @@ pub enum Message {
     Update(Uplink),
     /// Client → PS: connection handshake naming the sender.
     Hello { client: usize },
+    /// PS → client: one PS's contiguous slice of the round's global model
+    /// (the model-parallel downlink — a range-mode cluster PS broadcasts
+    /// only the dimensions it owns). `offset` is the slice's start
+    /// dimension, `total` the full model dimension; slices from the
+    /// cluster are disjoint and cover `0..total`.
+    RoundSlice { round: usize, offset: usize, total: usize, weights: Vec<f32> },
 }
 
 /// Typed frame-validation failure at the transport boundary. A streaming
@@ -181,6 +193,22 @@ pub fn encode_round(round: usize, weights: &[f32]) -> Vec<u8> {
 /// Encode a PS → client shutdown.
 pub fn encode_shutdown() -> Vec<u8> {
     frame(KIND_SHUTDOWN, &[])
+}
+
+/// Encode one model-parallel PS's slice of a round broadcast: `weights`
+/// covers global dimensions `offset .. offset + weights.len()` of a
+/// `total`-dimensional model.
+pub fn encode_round_slice(round: usize, offset: usize, total: usize, weights: &[f32]) -> Vec<u8> {
+    debug_assert!(offset + weights.len() <= total, "slice past the model end");
+    let mut p = Vec::with_capacity(20 + 4 * weights.len());
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    p.extend_from_slice(&(offset as u32).to_le_bytes());
+    p.extend_from_slice(&(total as u32).to_le_bytes());
+    p.extend_from_slice(&(weights.len() as u32).to_le_bytes());
+    for &w in weights {
+        p.extend_from_slice(&w.to_le_bytes());
+    }
+    frame(KIND_ROUND_SLICE, &p)
 }
 
 /// Encode a client → PS connection handshake.
@@ -330,6 +358,24 @@ fn parse_update(payload: &[u8]) -> Result<Message> {
     Ok(Message::Update(Uplink { client_id, round, payload: body, report, train_loss, error }))
 }
 
+fn parse_round_slice(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let round = r.u64()? as usize;
+    let offset = r.u32()? as usize;
+    let total = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if offset.checked_add(n).context("slice bounds overflow")? > total {
+        bail!("slice {offset}..{} past the model end {total}", offset + n);
+    }
+    let raw = r.take(n.checked_mul(4).context("weight count overflow")?)?;
+    let weights = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    r.done()?;
+    Ok(Message::RoundSlice { round, offset, total, weights })
+}
+
 fn parse_hello(payload: &[u8]) -> Result<Message> {
     let mut r = Reader { buf: payload, off: 0 };
     let client = r.u32()? as usize;
@@ -395,6 +441,7 @@ pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
         }
         KIND_UPDATE => parse_update(payload),
         KIND_HELLO => parse_hello(payload),
+        KIND_ROUND_SLICE => parse_round_slice(payload),
         k => return Err(FrameError::UnknownKind { kind: k }),
     };
     match parsed {
@@ -532,6 +579,43 @@ mod tests {
             }
             other => panic!("wrong message: {other:?}"),
         }
+    }
+
+    #[test]
+    fn round_slice_roundtrips_bit_exactly() {
+        let weights = vec![1.5f32, f32::NAN, -0.0, 7.25e-12];
+        let f = encode_round_slice(9, 100, 200, &weights);
+        match decode(&f).unwrap() {
+            Message::RoundSlice { round, offset, total, weights: w } => {
+                assert_eq!((round, offset, total), (9, 100, 200));
+                for (a, b) in w.iter().zip(&weights) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        // a full-width slice is legal (the cluster-of-1 downlink)
+        let f = encode_round_slice(0, 0, 4, &weights);
+        assert!(matches!(decode(&f).unwrap(), Message::RoundSlice { offset: 0, total: 4, .. }));
+    }
+
+    #[test]
+    fn round_slice_past_the_end_is_rejected() {
+        // hand-build a slice frame whose offset + n exceeds total
+        let mut p = Vec::new();
+        p.extend_from_slice(&3u64.to_le_bytes());
+        p.extend_from_slice(&8u32.to_le_bytes()); // offset 8
+        p.extend_from_slice(&9u32.to_le_bytes()); // total 9
+        p.extend_from_slice(&2u32.to_le_bytes()); // n 2 → 8..10 > 9
+        p.extend_from_slice(&1.0f32.to_le_bytes());
+        p.extend_from_slice(&2.0f32.to_le_bytes());
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND_SLICE];
+        f.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        f.extend_from_slice(&p);
+        let crc = crc32(&f[2..]);
+        f.extend_from_slice(&crc.to_le_bytes());
+        let err = decode(&f).unwrap_err();
+        assert!(format!("{err:#}").contains("past the model end"), "{err:#}");
     }
 
     #[test]

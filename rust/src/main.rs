@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use m22::config::{ExperimentConfig, Scheme, SchemeSpec, SchemeTuning};
+use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, SchemeSpec, SchemeTuning};
 use m22::coordinator::run_experiment;
 use m22::data::Dataset;
 use m22::figures::{self, FigScale};
@@ -188,6 +188,17 @@ fn main() -> Result<()> {
             if sample > 0 {
                 cfg.server.sampled_clients = Some(sample);
             }
+            // multi-PS cluster: N FedServer instances behind one reactor,
+            // partitioned by dimension range (bit-exact vs --ps 0) or by
+            // client subsets with periodic eq.-(7) averaging
+            let n_ps = args.usize_or("ps", 0)?;
+            if n_ps > 0 {
+                cfg.server.cluster = Some(ClusterConfig {
+                    n_ps,
+                    mode: PsMode::parse(&args.str_or("ps-mode", "range"))?,
+                    sync_every: args.usize_or("sync-every", 1)?,
+                });
+            }
             let listen = args.str_opt("listen").map(String::from);
             let connect = args.str_opt("connect").map(String::from);
             let tcp_loopback = args.bool("tcp-loopback");
@@ -216,6 +227,9 @@ fn main() -> Result<()> {
                 m22::fedserve::simulate_with(&cfg, d, mode)?
             };
             eprintln!("{}", report.stats.summary());
+            if let Some(cs) = &report.cluster {
+                eprintln!("{}", cs.summary());
+            }
             eprintln!(
                 "final |w| = {:.6}  bits/round/client = {:.0}  \
                  ({} clients, d = {}, {} rounds)",
@@ -258,6 +272,9 @@ fn main() -> Result<()> {
                         --table-cache PATH (persist hot quantizer tables across runs)\n\
                         --tcp-loopback (one reactor thread multiplexing real 127.0.0.1 sockets; scales to --clients 256+)\n\
                         --listen ADDR (be the PS) | --connect ADDR --id N (be one client)\n\
+                        --ps N --ps-mode range|replica --sync-every S (multi-PS cluster on one reactor:\n\
+                        range = model-parallel dimension slices, bit-exact vs a single PS;\n\
+                        replica = client-partitioned full-width replicas, eq.-(7) averaged every S rounds)\n\
                  see DESIGN.md for the per-experiment index"
             );
             return Ok(());

@@ -7,4 +7,4 @@ pub mod server;
 
 pub use perbit::{per_bit_accuracy, PerBitInput};
 pub use recorder::{Recorder, Row};
-pub use server::{RoundTiming, ServerStats, TransportStats};
+pub use server::{ClusterStats, RoundTiming, ServerStats, TransportStats};

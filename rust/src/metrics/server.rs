@@ -18,6 +18,11 @@ pub struct RoundTiming {
     pub decode_errors: usize,
     /// wire bytes received this round, framing included
     pub framed_bytes: u64,
+    /// the round aborted mid-collect (current-round client error, poll
+    /// failure, unattributed garbage); the counters above are as of the
+    /// abort and no reduce ran — recorded so `ServerStats` does not
+    /// under-report exactly the rounds that went wrong
+    pub aborted: bool,
 }
 
 /// Byte counters measured at the transport: per-connection at the socket
@@ -40,6 +45,13 @@ pub struct TransportStats {
     /// readiness wakeups the reactor served (one `poll(2)` call — or one
     /// channel wait — per wakeup; the syscall-pressure observability knob)
     pub wakeups: u64,
+    /// whether `per_client` byte counts are measured where the bytes
+    /// actually move (at the socket for TCP). When set, the per-client
+    /// `SessionStats.bytes_down` ledger is reconciled against
+    /// `per_client.1` at end of round, so bytes queued to a peer that died
+    /// are never credited as delivered. The in-process channel counts at
+    /// `send`, which for mpsc *is* delivery, so it leaves this unset.
+    pub socket_measured: bool,
 }
 
 /// Accumulated server statistics for one run.
@@ -122,14 +134,19 @@ impl ServerStats {
         self.rounds.iter().map(|t| t.decode_errors).sum()
     }
 
+    /// Rounds that aborted mid-collect (still recorded, never dropped).
+    pub fn total_aborted(&self) -> usize {
+        self.rounds.iter().filter(|t| t.aborted).count()
+    }
+
     /// Per-round CSV (milliseconds for the phase timings).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors\n",
+            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors,aborted\n",
         );
         for t in &self.rounds {
             s.push_str(&format!(
-                "{},{:.3},{:.3},{},{},{},{},{}\n",
+                "{},{:.3},{:.3},{},{},{},{},{},{}\n",
                 t.round,
                 t.collect_ns as f64 / 1e6,
                 t.reduce_ns as f64 / 1e6,
@@ -137,7 +154,8 @@ impl ServerStats {
                 t.dropped,
                 t.stale,
                 t.framed_bytes,
-                t.decode_errors
+                t.decode_errors,
+                u8::from(t.aborted)
             ));
         }
         s
@@ -163,6 +181,10 @@ impl ServerStats {
             self.cache_hits,
             self.cache_hits + self.cache_misses
         );
+        let aborted = self.total_aborted();
+        if aborted > 0 {
+            s.push_str(&format!(" | {aborted} aborted"));
+        }
         if self.prewarmed_tables > 0 {
             s.push_str(&format!(
                 " | prewarm: {} tables, {:.1}% of lookups",
@@ -192,6 +214,47 @@ impl ServerStats {
     }
 }
 
+/// Per-PS rollup for a multi-PS cluster run. The cluster's own
+/// [`ServerStats`] carries the shared counters (one collect pass, one
+/// transport, cluster-level `framed_bytes`); each PS's [`ServerStats`]
+/// carries what is private to it — its reduce timings and, in
+/// client-partitioned mode, the received/dropped counts of its own client
+/// subset.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStats {
+    /// partitioning mode label ("range" | "replica")
+    pub mode: &'static str,
+    /// replica mode: eq.-(7) averaging cadence in rounds (0 = end of run)
+    pub sync_every: usize,
+    pub per_ps: Vec<ServerStats>,
+}
+
+impl ClusterStats {
+    pub fn n_ps(&self) -> usize {
+        self.per_ps.len()
+    }
+
+    /// One line per PS: mean reduce time + uplink counts.
+    pub fn summary(&self) -> String {
+        let mut s = format!("cluster[{}]: {} PS", self.mode, self.per_ps.len());
+        if self.mode == "replica" {
+            s.push_str(&format!(", sync every {} round(s)", self.sync_every));
+        }
+        for (i, ps) in self.per_ps.iter().enumerate() {
+            let n = ps.rounds.len().max(1) as f64;
+            let reduce_ms = ps.rounds.iter().map(|t| t.reduce_ns).sum::<u64>() as f64 / n / 1e6;
+            s.push_str(&format!(
+                "\n  ps{i}: {} rounds | mean reduce {:.3} ms | {} received, {} dropped",
+                ps.rounds.len(),
+                reduce_ms,
+                ps.total_received(),
+                ps.total_dropped()
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +269,7 @@ mod tests {
             stale: 0,
             decode_errors: 0,
             framed_bytes: 1000,
+            aborted: false,
         }
     }
 
@@ -251,8 +315,39 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,collect_ms,reduce_ms"));
-        assert!(lines[0].ends_with("framed_bytes,decode_errors"));
-        assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000,0"));
+        assert!(lines[0].ends_with("framed_bytes,decode_errors,aborted"));
+        assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000,0,0"));
+    }
+
+    #[test]
+    fn aborted_rounds_are_counted_and_surfaced() {
+        let mut s = ServerStats::default();
+        s.push(timing(0, 2, 0));
+        let mut t = timing(1, 1, 1);
+        t.aborted = true;
+        s.push(t);
+        assert_eq!(s.total_aborted(), 1);
+        // aborted rounds still contribute their counters to the totals
+        assert_eq!(s.total_received(), 3);
+        assert!(s.summary().contains("1 aborted"), "{}", s.summary());
+        let csv = s.to_csv();
+        assert!(csv.lines().nth(2).unwrap().ends_with(",1"), "{csv}");
+    }
+
+    #[test]
+    fn cluster_rollup_summarizes_per_ps() {
+        let mut a = ServerStats::default();
+        a.push(timing(0, 3, 1));
+        let mut b = ServerStats::default();
+        b.push(timing(0, 2, 0));
+        let c = ClusterStats { mode: "replica", sync_every: 4, per_ps: vec![a, b] };
+        assert_eq!(c.n_ps(), 2);
+        let sum = c.summary();
+        assert!(sum.contains("cluster[replica]: 2 PS"), "{sum}");
+        assert!(sum.contains("sync every 4 round(s)"), "{sum}");
+        assert!(sum.contains("ps0: 1 rounds"), "{sum}");
+        assert!(sum.contains("3 received, 1 dropped"), "{sum}");
+        assert!(sum.contains("ps1: 1 rounds"), "{sum}");
     }
 
     #[test]
@@ -281,6 +376,7 @@ mod tests {
             per_client: vec![(2048, 512), (2048, 512)],
             disconnects: 2,
             wakeups: 40,
+            socket_measured: true,
         });
         let sum = s.summary();
         assert!(sum.contains("wire[tcp]: 4096 B in / 1024 B out, 3 decode errors"), "{sum}");

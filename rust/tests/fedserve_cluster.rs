@@ -1,0 +1,366 @@
+//! Integration: multi-PS sharding (`fedserve::cluster`).
+//!
+//! The acceptance oracle for the PR: a model-parallel (range) cluster at
+//! n_ps ∈ {1, 2, 4} must be **bit-exact** against the single-PS reference
+//! for every registered scheme, over both the channel and TCP-loopback
+//! transports — partitioning the aggregation across PS instances reorders
+//! *ownership*, never arithmetic. On top of that:
+//!
+//! * a one-replica client-partitioned cluster reproduces the single
+//!   server bit-exactly (the partition sorts its subsets and
+//!   `Scheduler::sample_of` is the same shuffle-prefix as `sample`);
+//! * the client partition is a true partition — every client owned by
+//!   exactly one PS, union = all, deterministic across replays from one
+//!   seed (property-swept);
+//! * a replica cluster under a straggler + disconnect storm degrades
+//!   (drops + attributed decode errors), never aborts, keeps serving the
+//!   healthy remainder, and its per-client `bytes_down` ledger matches
+//!   the socket-measured transport truth (ISSUE 5);
+//! * queued-but-undelivered downlink bytes to a dead peer are reconciled
+//!   out of the ledger (the `bytes_down` "ledger lies" fix).
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use m22::compress::{encode_once, NoCompression};
+use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, ServerConfig};
+use m22::coordinator::Uplink;
+use m22::fedserve::sim::{sim_spec, simulate_with, TransportMode};
+use m22::fedserve::transport::{TcpClientTransport, TcpServerTransport, Transport};
+use m22::fedserve::{partition_clients, wire, FedServer, PsCluster, Scheduler};
+use m22::quantizer::Family;
+
+const NET_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+fn base_cfg(scheme: Scheme) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new("sim", scheme, 2, 2);
+    cfg.n_clients = 4;
+    cfg.server.shards = 2;
+    cfg.server.straggler_timeout_ms = 30_000;
+    cfg.server.prewarm = false; // grid design is not what this suite times
+    cfg
+}
+
+fn all_schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ]
+}
+
+#[test]
+fn range_cluster_is_bit_exact_against_the_single_ps_for_every_scheme() {
+    let d = 512;
+    for scheme in all_schemes() {
+        let cfg = base_cfg(scheme);
+        let single = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+        assert!(single.w.iter().any(|&x| x != 0.0), "{scheme:?}: reference did nothing");
+        assert!(single.cluster.is_none());
+        for transport in [TransportMode::Channel, TransportMode::TcpLoopback] {
+            for n_ps in [1usize, 2, 4] {
+                let mut c = cfg.clone();
+                c.server.cluster =
+                    Some(ClusterConfig { n_ps, mode: PsMode::Range, sync_every: 1 });
+                let rep = simulate_with(&c, d, transport).unwrap();
+                assert_bitwise_eq(
+                    &single.w,
+                    &rep.w,
+                    &format!("{scheme:?} n_ps={n_ps} {transport:?}"),
+                );
+                let cs = rep.cluster.expect("cluster rollup missing");
+                assert_eq!(cs.n_ps(), n_ps, "{scheme:?}");
+                assert_eq!(cs.mode, "range");
+                // every PS recorded every round, nobody dropped anything
+                for ps in &cs.per_ps {
+                    assert_eq!(ps.rounds.len(), cfg.rounds, "{scheme:?} n_ps={n_ps}");
+                    assert_eq!(ps.total_dropped(), 0, "{scheme:?} n_ps={n_ps}");
+                }
+                assert_eq!(rep.stats.total_dropped(), 0);
+                assert!(rep.stats.total_framed_bytes() > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn one_replica_cluster_reproduces_the_single_server_bitwise() {
+    // client-partitioned mode with one PS owns every client: schedule,
+    // reduce, and sync must collapse to the single-server loop exactly —
+    // at every sync cadence (1 = each round, 2 = mid-run, 0 = end only)
+    let d = 640;
+    for scheme in [
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::TopKUniform,
+        Scheme::None,
+    ] {
+        let mut cfg = base_cfg(scheme);
+        cfg.rounds = 3;
+        let single = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+        for sync_every in [1usize, 2, 0] {
+            let mut c = cfg.clone();
+            c.server.cluster = Some(ClusterConfig { n_ps: 1, mode: PsMode::Replica, sync_every });
+            let rep = simulate_with(&c, d, TransportMode::Channel).unwrap();
+            assert_bitwise_eq(
+                &single.w,
+                &rep.w,
+                &format!("{scheme:?} replica-of-1 sync_every={sync_every}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn replica_cluster_converges_on_the_sim_workload() {
+    // multi-replica mode is not bit-equal to a single PS (that is the
+    // point: each PS averages only its own client subset between syncs),
+    // but it must run to completion, sync deterministically, and produce
+    // the same model when replayed from the same seed
+    let d = 768;
+    let mut cfg = base_cfg(Scheme::M22 { family: Family::GenNorm, m: 2.0 });
+    cfg.n_clients = 8;
+    cfg.rounds = 4;
+    cfg.memory = true;
+    cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 });
+    let a = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+    let b = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
+    assert_bitwise_eq(&a.w, &b.w, "replica replay");
+    assert!(a.w_norm() > 0.0 && a.w_norm().is_finite());
+    let cs = a.cluster.expect("rollup");
+    assert_eq!(cs.n_ps(), 2);
+    assert_eq!(cs.sync_every, 2);
+    // the partition routed every uplink to exactly one PS
+    let per_ps: usize = cs.per_ps.iter().map(|p| p.total_received()).sum();
+    assert_eq!(per_ps, a.stats.total_received());
+    assert!(cs.per_ps.iter().all(|p| p.total_received() > 0));
+}
+
+#[test]
+fn client_partition_property_sweep() {
+    // every client owned by exactly one PS, union = all, balanced within
+    // one, deterministic across replays from one seed — and per-PS
+    // sampling stays inside the owned subset
+    for n in [1usize, 2, 5, 16, 33, 64] {
+        for n_ps in [1usize, 2, 3, 4, 7] {
+            for seed in [1u64, 33, 4242] {
+                let owned = partition_clients(n, n_ps, seed);
+                assert_eq!(owned.len(), n_ps);
+                let mut all: Vec<usize> = owned.iter().flatten().copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n} n_ps={n_ps} seed={seed}");
+                let max = owned.iter().map(Vec::len).max().unwrap();
+                let min = owned.iter().map(Vec::len).min().unwrap();
+                assert!(max - min <= 1, "n={n} n_ps={n_ps}: unbalanced");
+                assert_eq!(owned, partition_clients(n, n_ps, seed), "replay differs");
+                // per-PS schedulers sample within their subset, and the
+                // same seed replays the same schedule
+                for (i, pool) in owned.iter().enumerate() {
+                    if pool.is_empty() {
+                        continue;
+                    }
+                    let mut s1 = Scheduler::new(seed.wrapping_add(i as u64));
+                    let mut s2 = Scheduler::new(seed.wrapping_add(i as u64));
+                    for _ in 0..3 {
+                        let k = (pool.len() / 2).max(1);
+                        let sample = s1.sample_of(pool, k);
+                        assert_eq!(sample, s2.sample_of(pool, k));
+                        assert_eq!(sample.len(), k);
+                        assert!(sample.iter().all(|id| pool.contains(id)));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn replica_storm_degrades_attributes_and_reconciles_the_ledger() {
+    // 12 clients on a 2-PS replica cluster over real sockets: 8 healthy,
+    // 2 leave after round 0, 1 answers every round with a corrupt frame,
+    // 1 connects and never responds. Rounds must complete on the
+    // deadline, failures must be attributed per client, the next round
+    // must serve the healthy remainder — and the per-client downlink
+    // ledger must equal the socket-measured transport truth.
+    let n = 12usize;
+    let healthy = 8usize; // ids 0..8
+    let leavers = 2usize; // ids 8..10
+    let corrupt_id = 10usize;
+    let straggler_id = 11usize;
+    let d = 128usize;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        for id in 0..n {
+            let addr = addr.clone();
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut t = TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap();
+                loop {
+                    match t.recv() {
+                        Ok(Some(wire::Message::Round { round, .. })) => {
+                            if id == straggler_id {
+                                continue; // reads rounds, never replies
+                            }
+                            let g = vec![(id + 1) as f32; d];
+                            let (payload, _, report) =
+                                encode_once(&NoCompression, &g, spec).unwrap();
+                            let up = Uplink {
+                                client_id: id,
+                                round,
+                                payload,
+                                report,
+                                train_loss: 0.0,
+                                error: None,
+                            };
+                            let mut f = wire::encode_update(&up);
+                            if id == corrupt_id {
+                                let at = f.len() / 2;
+                                f[at] ^= 0x01;
+                            }
+                            if t.send(&f).is_err() {
+                                return; // server closed us (expected)
+                            }
+                            if id >= healthy && id < healthy + leavers {
+                                return; // storm: vanish after round 0
+                            }
+                        }
+                        _ => return, // shutdown or server-side close
+                    }
+                }
+            });
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
+        let scfg = ServerConfig { straggler_timeout_ms: 800, ..Default::default() };
+        let ccfg = ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 };
+        let decoders = (0..2)
+            .map(|_| Box::new(NoCompression) as Box<dyn m22::compress::Decoder>)
+            .collect();
+        let mut cluster = PsCluster::new(&ccfg, &scfg, n, d, 1, decoders).unwrap();
+        let mut w = vec![0.0f32; d];
+        let s0 = cluster.run_round(0, n, &mut transport, &spec, &mut w).unwrap();
+        // round 0: everyone but the corrupt frame and the silent straggler
+        assert_eq!(s0.received, n - 2);
+        assert_eq!(s0.decode_errors, 1);
+        assert_eq!(s0.dropped, 2);
+        assert_eq!(cluster.sessions[corrupt_id].decode_errors, 1);
+        for id in 0..n {
+            if id != corrupt_id {
+                assert_eq!(cluster.sessions[id].decode_errors, 0, "client {id}");
+            }
+        }
+        // round 1: the leavers and the corrupt client are gone too
+        let s1 = cluster.run_round(1, n, &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s1.received, healthy);
+        assert_eq!(s1.decode_errors, 0);
+        assert_eq!(s1.dropped, n - healthy);
+        cluster.finish(&mut w);
+        assert!(w.iter().any(|&x| x != 0.0), "storm starved the aggregate");
+
+        // ISSUE 5: the downlink ledger equals the socket truth, per client
+        // (snapshot before close so shutdown frames don't skew the diff)
+        let ts = transport.stats();
+        assert!(ts.socket_measured);
+        // the leavers' EOFs are observed disconnects (the corrupt stream's
+        // kill is counted under decode_errors instead)
+        assert!(ts.disconnects >= leavers as u64, "{} disconnects", ts.disconnects);
+        assert_eq!(ts.decode_errors, 1);
+        for id in 0..n {
+            assert_eq!(
+                cluster.sessions[id].bytes_down,
+                ts.per_client[id].1,
+                "client {id}: ledger vs socket"
+            );
+        }
+        // per-PS rollup recorded both rounds
+        let cs = cluster.cluster_stats();
+        assert_eq!(cs.n_ps(), 2);
+        for ps in &cs.per_ps {
+            assert_eq!(ps.rounds.len(), 2);
+        }
+        transport.close().unwrap();
+    });
+}
+
+#[test]
+fn queued_bytes_to_a_dead_peer_are_reconciled_out_of_the_ledger() {
+    // a broadcast far larger than the kernel buffers to a peer that never
+    // reads: send-time crediting would claim the whole frame was
+    // delivered; the reconciled ledger must report the socket truth
+    // ~16 MB round frame: comfortably past anything the kernel will
+    // buffer for a peer that never reads, so part of the broadcast is
+    // still queued (and then discarded) when the round ends
+    let d = 4_000_000usize;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    std::thread::scope(|scope| {
+        {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                // client 0 serves the round honestly
+                let mut t = TcpClientTransport::connect(&addr, 0, NET_TIMEOUT).unwrap();
+                if let Ok(Some(wire::Message::Round { round, .. })) = t.recv() {
+                    let g = vec![1.0f32; d];
+                    let (payload, _, report) = encode_once(&NoCompression, &g, &spec).unwrap();
+                    let up = Uplink {
+                        client_id: 0,
+                        round,
+                        payload,
+                        report,
+                        train_loss: 0.0,
+                        error: None,
+                    };
+                    let _ = t.send(&wire::encode_update(&up));
+                }
+                let _ = t.recv(); // shutdown / close
+            });
+        }
+        scope.spawn(move || {
+            // client 1 connects, then stops reading entirely
+            let t = TcpClientTransport::connect(&addr, 1, NET_TIMEOUT).unwrap();
+            let _ = release_rx.recv();
+            drop(t);
+        });
+
+        let mut transport = TcpServerTransport::accept(&listener, 2, NET_TIMEOUT).unwrap();
+        let cfg = ServerConfig { straggler_timeout_ms: 2_000, ..Default::default() };
+        let mut server = FedServer::new(cfg, 2, 1, Box::new(NoCompression));
+        let mut w = vec![0.0f32; d];
+        let frame_len = wire::encode_round(0, &w).len() as u64;
+        let s = server.run_round(0, &[0, 1], &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s.received, 1);
+        assert_eq!(s.dropped, 1);
+        let ts = transport.stats();
+        // client 0 drained the whole broadcast
+        assert_eq!(server.sessions[0].bytes_down, ts.per_client[0].1);
+        assert_eq!(server.sessions[0].bytes_down, frame_len);
+        // client 1 took only what the kernel buffered: the ledger was
+        // reconciled down from the full frame to the socket truth
+        assert_eq!(server.sessions[1].bytes_down, ts.per_client[1].1);
+        assert!(
+            server.sessions[1].bytes_down < frame_len,
+            "ledger still credits undelivered bytes: {} vs frame {}",
+            server.sessions[1].bytes_down,
+            frame_len
+        );
+        assert!(server.sessions[1].bytes_down > 0, "nothing at all reached client 1");
+        release_tx.send(()).unwrap();
+        transport.close().unwrap();
+    });
+}
