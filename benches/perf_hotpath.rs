@@ -18,10 +18,12 @@ use m22::compress::topk::topk;
 use m22::compress::{
     encode_once, BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder, NoCompression,
 };
-use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, ServerConfig};
+use m22::config::{ClusterConfig, ExperimentConfig, PsMode, ScenarioSpec, Scheme, ServerConfig};
 use m22::fedserve::aggregate::{accumulate_sharded, aggregate_serial, aggregate_sharded};
 use m22::fedserve::sim::sim_spec;
-use m22::fedserve::{simulate_with, wire, ChannelTransport, FedServer, TransportMode};
+use m22::fedserve::{
+    simulate_fleet, simulate_with, wire, ChannelTransport, FedServer, TransportMode,
+};
 use m22::quantizer::{design, Family, QuantizerTables};
 use m22::stats::fitting::Moments;
 use m22::stats::{Distribution, GenNorm};
@@ -224,6 +226,38 @@ fn main() {
                     || simulate_with(&cfg, d, TransportMode::Channel).unwrap().rounds,
                 ));
             }
+        }
+    }
+
+    // --- fleet event dispatch: n modeled clients, k = 64 sampled ---------
+    //
+    // Whole simulate_fleet runs: the cost of holding a modeled population
+    // of n clients when only k = 64 materialize per round. What scales
+    // with n is the scheduler shuffle and the churn-liveness probes; the
+    // event heap, sessions, and the reduce are all O(k) — the three rows
+    // should be close to flat apart from the O(n) shuffle.
+    println!("\n== fleet event dispatch (3 rounds/run, d = 1024, k = 64) ==");
+    {
+        let rounds = 3usize;
+        let d = 1024usize;
+        let macro_bench = || Bencher {
+            warmup_iters: 0,
+            samples: if quick_mode() { 2 } else { 5 },
+            iters_per_sample: 1,
+            items_per_iter: Some(rounds as f64),
+        };
+        for n in [10_000usize, 100_000, 1_000_000] {
+            let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, rounds);
+            cfg.n_clients = n;
+            cfg.server.shards = 4;
+            cfg.server.sampled_clients = Some(64);
+            let scn =
+                ScenarioSpec::parse(&format!("fleet:n={n},churn=0.01,lat=lognorm,jitter=0.8"))
+                    .unwrap();
+            let mb = macro_bench();
+            log.push(mb.run(&format!("fleet event dispatch (n={n}, k=64)"), || {
+                simulate_fleet(&cfg, &scn, d).unwrap().sim.rounds
+            }));
         }
     }
 

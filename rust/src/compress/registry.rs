@@ -69,6 +69,22 @@ impl Scheme {
     }
 }
 
+/// Every registered scheme at its paper operating point — the sweep axis
+/// for parity suites and scenario matrices (each fleet scenario is run
+/// against all of these).
+pub fn all_schemes() -> [Scheme; 8] {
+    [
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ]
+}
+
 /// A scheme plus its construction parameters. Zero-valued numeric fields
 /// mean "derive from the budget" — fill them with [`SchemeSpec::resolve`]
 /// before building.
@@ -289,19 +305,6 @@ mod tests {
     use super::*;
     use crate::compress::CpuCodec;
     use crate::quantizer::QuantizerTables;
-
-    fn all_schemes() -> Vec<Scheme> {
-        vec![
-            Scheme::M22 { family: Family::GenNorm, m: 2.0 },
-            Scheme::M22 { family: Family::Weibull, m: 4.0 },
-            Scheme::TinyScript,
-            Scheme::TopKUniform,
-            Scheme::TopKFp { bits: 8 },
-            Scheme::TopKFp { bits: 4 },
-            Scheme::CountSketch,
-            Scheme::None,
-        ]
-    }
 
     #[test]
     fn scheme_parsing() {

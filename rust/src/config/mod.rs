@@ -4,6 +4,7 @@
 //! [`SchemeSpec`] from the experiment budget and delegates.
 
 pub mod presets;
+pub mod scenario;
 
 use std::sync::Arc;
 
@@ -16,7 +17,8 @@ use crate::quantizer::TableSource;
 use crate::train::OptimizerKind;
 use crate::util::json::Json;
 
-pub use crate::compress::registry::{Scheme, SchemeSpec};
+pub use crate::compress::registry::{all_schemes, Scheme, SchemeSpec};
+pub use scenario::{LatencyModel, ScenarioSpec};
 
 /// Explicit scheme-construction overrides (from a `--scheme name:key=val`
 /// spec string). Zero-valued fields mean "derive from the budget /

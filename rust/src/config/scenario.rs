@@ -1,0 +1,285 @@
+//! Fleet scenario specs: the one-line strings behind `repro fleet`.
+//!
+//! A [`ScenarioSpec`] describes a modeled client population — size,
+//! Dirichlet-α label skew, join/leave churn, and the heavy-tailed
+//! latency/bandwidth link model — in the same `name:key=val,...` grammar
+//! as scheme specs, e.g. `fleet:n=1000000,alpha=0.1,churn=0.02,lat=lognorm`.
+//! The spec is pure data: the fleet simulator (`fedserve::fleet`) derives
+//! every per-client draw from `(seed, client)` RNG streams, so a scenario
+//! string plus a seed replays bit-exactly.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Per-client latency model of a scenario's links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyModel {
+    /// every client at exactly `lat_ms` (the parity scenario)
+    Fixed,
+    /// heavy-tailed: `lat_ms · exp(jitter · N(0,1))` per client
+    LogNormal,
+}
+
+impl LatencyModel {
+    pub fn parse(s: &str) -> Result<LatencyModel> {
+        match s {
+            "fixed" => Ok(LatencyModel::Fixed),
+            "lognorm" | "lognormal" => Ok(LatencyModel::LogNormal),
+            other => bail!("unknown latency model `{other}` (fixed | lognorm)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LatencyModel::Fixed => "fixed",
+            LatencyModel::LogNormal => "lognorm",
+        }
+    }
+}
+
+/// One fleet scenario: the modeled population and its heterogeneity knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// modeled population size (only sampled participants materialize)
+    pub n: usize,
+    /// Dirichlet-α label skew; `None` = IID data
+    pub alpha: Option<f64>,
+    /// per-round join/leave flip probability in [0, 1)
+    pub churn: f64,
+    pub lat: LatencyModel,
+    /// median (lognorm) or exact (fixed) one-way latency in ms
+    pub lat_ms: f64,
+    /// lognormal σ for latency and bandwidth draws (0 = no jitter)
+    pub jitter: f64,
+    /// median uplink bandwidth in Mbit/s; 0 = infinite (latency only)
+    pub bw_mbps: f64,
+    /// label classes for the Dirichlet skew
+    pub classes: usize,
+    /// fleet seed; 0 = derive from the experiment seed
+    pub seed: u64,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> ScenarioSpec {
+        ScenarioSpec {
+            n: 1000,
+            alpha: None,
+            churn: 0.0,
+            lat: LatencyModel::LogNormal,
+            lat_ms: 50.0,
+            jitter: 0.5,
+            bw_mbps: 0.0,
+            classes: 10,
+            seed: 0,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a one-line scenario string: `fleet[:key=val,...]`.
+    ///
+    /// Keys: `n`, `alpha`, `churn`, `lat` (fixed | lognorm), `lat_ms`,
+    /// `jitter`, `bw`/`bandwidth` (Mbit/s, 0 = infinite), `classes`,
+    /// `seed`. Example: `fleet:n=1000000,alpha=0.1,churn=0.02,lat=lognorm`.
+    pub fn parse(s: &str) -> Result<ScenarioSpec> {
+        let (name, opts) = match s.split_once(':') {
+            Some((n, o)) => (n, Some(o)),
+            None => (s, None),
+        };
+        ensure!(name == "fleet", "unknown scenario `{name}` (expected `fleet:...`)");
+        let mut spec = ScenarioSpec::default();
+        let mut seen: Vec<&str> = Vec::new();
+        if let Some(opts) = opts {
+            for kv in opts.split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (key, val) =
+                    kv.split_once('=').with_context(|| format!("expected key=value in `{kv}`"))?;
+                let val = val.trim();
+                // a repeated key is a typo in a sweep script, not a
+                // preference order — refuse instead of last-one-wins
+                let canon = match key.trim() {
+                    "bandwidth" => "bw",
+                    other => other,
+                };
+                if seen.contains(&canon) {
+                    bail!("duplicate scenario option `{}` in `{s}`", key.trim());
+                }
+                seen.push(canon);
+                match key.trim() {
+                    "n" => spec.n = val.parse().with_context(|| format!("bad n `{val}`"))?,
+                    "alpha" => {
+                        spec.alpha =
+                            Some(val.parse().with_context(|| format!("bad alpha `{val}`"))?)
+                    }
+                    "churn" => {
+                        spec.churn = val.parse().with_context(|| format!("bad churn `{val}`"))?
+                    }
+                    "lat" => spec.lat = LatencyModel::parse(val)?,
+                    "lat_ms" => {
+                        spec.lat_ms = val.parse().with_context(|| format!("bad lat_ms `{val}`"))?
+                    }
+                    "jitter" => {
+                        spec.jitter = val.parse().with_context(|| format!("bad jitter `{val}`"))?
+                    }
+                    "bw" | "bandwidth" => {
+                        spec.bw_mbps = val.parse().with_context(|| format!("bad bw `{val}`"))?
+                    }
+                    "classes" => {
+                        spec.classes =
+                            val.parse().with_context(|| format!("bad classes `{val}`"))?
+                    }
+                    "seed" => {
+                        spec.seed = val.parse().with_context(|| format!("bad seed `{val}`"))?
+                    }
+                    other => bail!("unknown scenario option `{other}`"),
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n > 0, "scenario n = 0");
+        if let Some(a) = self.alpha {
+            ensure!(a > 0.0 && a.is_finite(), "scenario alpha = {a} (must be finite and > 0)");
+        }
+        ensure!(
+            (0.0..1.0).contains(&self.churn),
+            "scenario churn = {} out of [0, 1)",
+            self.churn
+        );
+        ensure!(
+            self.lat_ms >= 0.0 && self.lat_ms.is_finite(),
+            "scenario lat_ms = {} (must be finite and >= 0)",
+            self.lat_ms
+        );
+        ensure!(
+            self.jitter >= 0.0 && self.jitter.is_finite(),
+            "scenario jitter = {} (must be finite and >= 0)",
+            self.jitter
+        );
+        ensure!(
+            self.bw_mbps >= 0.0 && self.bw_mbps.is_finite(),
+            "scenario bw = {} (must be finite and >= 0)",
+            self.bw_mbps
+        );
+        ensure!(self.classes > 0, "scenario classes = 0");
+        Ok(())
+    }
+
+    /// The canonical one-line form: `parse(label())` round-trips (f64
+    /// `Display` is shortest-roundtrip in Rust). Defaults that carry no
+    /// information (`alpha` unset, infinite bandwidth, derived seed) are
+    /// omitted.
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "fleet:n={},churn={},lat={},lat_ms={},jitter={}",
+            self.n,
+            self.churn,
+            self.lat.label(),
+            self.lat_ms,
+            self.jitter
+        );
+        if let Some(a) = self.alpha {
+            s.push_str(&format!(",alpha={a}"));
+        }
+        if self.bw_mbps > 0.0 {
+            s.push_str(&format!(",bw={}", self.bw_mbps));
+        }
+        if self.classes != 10 {
+            s.push_str(&format!(",classes={}", self.classes));
+        }
+        if self.seed != 0 {
+            s.push_str(&format!(",seed={}", self.seed));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_fleet_is_the_default_scenario() {
+        let s = ScenarioSpec::parse("fleet").unwrap();
+        assert_eq!(s, ScenarioSpec::default());
+        assert_eq!(s.n, 1000);
+        assert_eq!(s.alpha, None);
+        assert_eq!(s.lat, LatencyModel::LogNormal);
+        assert_eq!(s.bw_mbps, 0.0);
+    }
+
+    #[test]
+    fn full_spec_string_parses_every_key() {
+        let s = ScenarioSpec::parse(
+            "fleet:n=1000000,alpha=0.1,churn=0.02,lat=lognorm,lat_ms=80,jitter=1.5,\
+             bw=5,classes=100,seed=7",
+        )
+        .unwrap();
+        assert_eq!(s.n, 1_000_000);
+        assert_eq!(s.alpha, Some(0.1));
+        assert_eq!(s.churn, 0.02);
+        assert_eq!(s.lat, LatencyModel::LogNormal);
+        assert_eq!(s.lat_ms, 80.0);
+        assert_eq!(s.jitter, 1.5);
+        assert_eq!(s.bw_mbps, 5.0);
+        assert_eq!(s.classes, 100);
+        assert_eq!(s.seed, 7);
+        // alias + fixed model
+        let s = ScenarioSpec::parse("fleet:lat=fixed,bandwidth=2").unwrap();
+        assert_eq!(s.lat, LatencyModel::Fixed);
+        assert_eq!(s.bw_mbps, 2.0);
+    }
+
+    #[test]
+    fn spec_string_errors_name_the_offending_token() {
+        let e = ScenarioSpec::parse("armada:n=5").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown scenario `armada`"), "{e:#}");
+        let e = ScenarioSpec::parse("fleet:n=many").unwrap_err();
+        assert!(format!("{e:#}").contains("bad n `many`"), "{e:#}");
+        let e = ScenarioSpec::parse("fleet:n=5,n=6").unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate scenario option `n`"), "{e:#}");
+        // `bandwidth` is an alias of `bw`: repeating across spellings dups
+        let e = ScenarioSpec::parse("fleet:bw=1,bandwidth=2").unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate scenario option `bandwidth`"), "{e:#}");
+        let e = ScenarioSpec::parse("fleet:warp=9").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown scenario option `warp`"), "{e:#}");
+        let e = ScenarioSpec::parse("fleet:lat=quantum").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown latency model `quantum`"), "{e:#}");
+        let e = ScenarioSpec::parse("fleet:n").unwrap_err();
+        assert!(format!("{e:#}").contains("expected key=value"), "{e:#}");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_knobs() {
+        assert!(ScenarioSpec::parse("fleet:n=0").is_err());
+        assert!(ScenarioSpec::parse("fleet:alpha=0").is_err());
+        assert!(ScenarioSpec::parse("fleet:alpha=-1").is_err());
+        assert!(ScenarioSpec::parse("fleet:churn=1").is_err());
+        assert!(ScenarioSpec::parse("fleet:churn=-0.5").is_err());
+        assert!(ScenarioSpec::parse("fleet:lat_ms=-3").is_err());
+        assert!(ScenarioSpec::parse("fleet:jitter=-1").is_err());
+        assert!(ScenarioSpec::parse("fleet:bw=-2").is_err());
+        assert!(ScenarioSpec::parse("fleet:classes=0").is_err());
+        // boundary values that are legal
+        assert!(ScenarioSpec::parse("fleet:churn=0,jitter=0,lat_ms=0,bw=0").is_ok());
+    }
+
+    #[test]
+    fn label_round_trips_through_parse() {
+        for s in [
+            "fleet",
+            "fleet:n=1000000,alpha=0.1,churn=0.02,lat=lognorm",
+            "fleet:n=12,churn=0,lat=fixed,jitter=0",
+            "fleet:n=400,lat=lognorm,jitter=1.5,lat_ms=80,bw=3.5,classes=17,seed=9",
+        ] {
+            let spec = ScenarioSpec::parse(s).unwrap();
+            let back = ScenarioSpec::parse(&spec.label()).unwrap();
+            assert_eq!(spec, back, "label `{}` of `{s}` did not round-trip", spec.label());
+        }
+    }
+}

@@ -6,5 +6,7 @@
 //! gradients — verified in the Fig. 1 reproduction).
 
 pub mod cifar_like;
+pub mod partition;
 
 pub use cifar_like::{Batch, Dataset, DatasetConfig};
+pub use partition::{client_class_weights, dirichlet_split, iid_split, Partition};

@@ -1,0 +1,278 @@
+//! Seeded dataset partitioning: the IID baseline and Dirichlet-α per-label
+//! non-IID splits (the FedDM-style `PerLabelDatasetNonIID` construction).
+//!
+//! Every split is a pure function of `(seed, shape)` through
+//! [`crate::util::rng::Rng::stream`], so a fleet scenario replays
+//! bit-exactly, and every example lands in exactly one client's shard
+//! (property-tested below: exact coverage, determinism, α-sensitivity).
+//! The fleet simulator never materializes a million shards — it uses the
+//! lazy per-client view [`client_class_weights`], which draws one client's
+//! normalized Dirichlet proportions in O(classes) without touching the
+//! rest of the population.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Stream domain for the per-class proportion draws of [`dirichlet_split`].
+const PARTITION_DOMAIN: u64 = 0x9a57_11;
+/// Stream domain for the fleet's lazy per-client skew view.
+const PROPORTION_DOMAIN: u64 = 0x9a57_12;
+/// Stream domain for the IID shuffle.
+const IID_DOMAIN: u64 = 0x9a57_13;
+
+/// A dataset partition: for each client, the example indices it owns.
+#[derive(Debug, Clone, Default)]
+pub struct Partition {
+    pub of_client: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn n_clients(&self) -> usize {
+        self.of_client.len()
+    }
+
+    /// Total examples assigned across all clients.
+    pub fn len(&self) -> usize {
+        self.of_client.iter().map(|c| c.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-client shard sizes.
+    pub fn counts(&self) -> Vec<usize> {
+        self.of_client.iter().map(|c| c.len()).collect()
+    }
+}
+
+/// Largest-remainder apportionment of `total` items over nonnegative
+/// `weights` (sum > 0): floor shares first, then the leftover items go to
+/// the largest fractional remainders (ties to the lower index, so the
+/// result is deterministic). The counts always sum to exactly `total`.
+fn apportion(weights: &[f64], total: usize) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    let shares: Vec<f64> = weights.iter().map(|w| w / sum * total as f64).collect();
+    let mut counts: Vec<usize> = shares.iter().map(|s| s.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut rem: Vec<(f64, usize)> =
+        shares.iter().enumerate().map(|(i, s)| (s - s.floor(), i)).collect();
+    rem.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    for &(_, i) in rem.iter().take(total - assigned) {
+        counts[i] += 1;
+    }
+    counts
+}
+
+/// The IID baseline: shuffle all example indices once, then deal them out
+/// in near-equal contiguous chunks (sizes differ by at most one).
+pub fn iid_split(n_examples: usize, n_clients: usize, seed: u64) -> Result<Partition> {
+    ensure!(n_clients > 0, "iid_split: n_clients = 0");
+    let mut idx: Vec<usize> = (0..n_examples).collect();
+    Rng::new(seed).stream(IID_DOMAIN, 0).shuffle(&mut idx);
+    let counts = apportion(&vec![1.0; n_clients], n_examples);
+    let mut of_client = Vec::with_capacity(n_clients);
+    let mut off = 0;
+    for c in counts {
+        of_client.push(idx[off..off + c].to_vec());
+        off += c;
+    }
+    Ok(Partition { of_client })
+}
+
+/// Dirichlet-α per-label split: for every class, draw client proportions
+/// p ~ Dir(α, ..., α) (as normalized Gamma(α) variates) from a stream keyed
+/// by the class, shuffle that class's examples, and deal them out by
+/// largest-remainder apportionment of the proportions. Small α
+/// concentrates each class on few clients (strong label skew); large α
+/// approaches the IID per-class balance.
+pub fn dirichlet_split(
+    labels: &[usize],
+    n_classes: usize,
+    n_clients: usize,
+    alpha: f64,
+    seed: u64,
+) -> Result<Partition> {
+    ensure!(n_clients > 0, "dirichlet_split: n_clients = 0");
+    ensure!(n_classes > 0, "dirichlet_split: n_classes = 0");
+    ensure!(
+        alpha > 0.0 && alpha.is_finite(),
+        "dirichlet_split: alpha = {alpha} (must be finite and > 0)"
+    );
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        ensure!(l < n_classes, "label {l} at example {i} out of range (classes = {n_classes})");
+        by_class[l].push(i);
+    }
+    let root = Rng::new(seed);
+    let mut of_client: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for (class, mut idx) in by_class.into_iter().enumerate() {
+        if idx.is_empty() {
+            continue;
+        }
+        let mut r = root.stream(PARTITION_DOMAIN, class as u64);
+        r.shuffle(&mut idx);
+        let mut wts: Vec<f64> = (0..n_clients).map(|_| r.gamma(alpha)).collect();
+        if wts.iter().sum::<f64>() <= 0.0 {
+            // a pathologically small α can underflow every gamma draw;
+            // fall back to uniform rather than divide by zero
+            wts = vec![1.0; n_clients];
+        }
+        let counts = apportion(&wts, idx.len());
+        let mut off = 0;
+        for (client, &c) in counts.iter().enumerate() {
+            of_client[client].extend_from_slice(&idx[off..off + c]);
+            off += c;
+        }
+    }
+    Ok(Partition { of_client })
+}
+
+/// One client's normalized Dirichlet-α class proportions — the lazy view
+/// the fleet simulator reports label skew from without materializing a
+/// million-shard [`Partition`]. Deterministic in `(seed, client)`.
+pub fn client_class_weights(seed: u64, client: usize, n_classes: usize, alpha: f64) -> Vec<f64> {
+    let mut r = Rng::new(seed).stream(PROPORTION_DOMAIN, client as u64);
+    let mut w: Vec<f64> = (0..n_classes).map(|_| r.gamma(alpha)).collect();
+    let s: f64 = w.iter().sum();
+    if s > 0.0 {
+        for x in &mut w {
+            *x /= s;
+        }
+    } else {
+        w.iter_mut().for_each(|x| *x = 1.0 / n_classes as f64);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    /// Every example assigned exactly once ⇔ the flattened, sorted
+    /// partition is exactly 0..n.
+    fn assert_exact_coverage(p: &Partition, n: usize) {
+        let mut all: Vec<usize> = p.of_client.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "not a partition of 0..{n}");
+    }
+
+    #[test]
+    fn apportion_sums_to_total_and_is_deterministic() {
+        prop_check("apportion exact", 200, |g| {
+            let n = g.usize_in(1, 20);
+            let total = g.usize_in(0, 500);
+            let wts: Vec<f64> = (0..n).map(|_| g.f64_in(0.001, 10.0)).collect();
+            let counts = apportion(&wts, total);
+            assert_eq!(counts.iter().sum::<usize>(), total, "{wts:?}");
+            assert_eq!(counts, apportion(&wts, total));
+        });
+    }
+
+    #[test]
+    fn iid_split_covers_exactly_with_near_equal_shards() {
+        prop_check("iid coverage", 100, |g| {
+            let n = g.usize_in(0, 400);
+            let clients = g.usize_in(1, 17);
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let p = iid_split(n, clients, seed).unwrap();
+            assert_eq!(p.n_clients(), clients);
+            assert_eq!(p.len(), n);
+            assert_exact_coverage(&p, n);
+            let counts = p.counts();
+            let (lo, hi) =
+                (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(hi - lo <= 1, "uneven IID shards: {counts:?}");
+            // determinism across runs
+            assert_eq!(p.of_client, iid_split(n, clients, seed).unwrap().of_client);
+        });
+        assert!(iid_split(10, 0, 1).is_err());
+    }
+
+    #[test]
+    fn dirichlet_split_covers_exactly_and_replays() {
+        prop_check("dirichlet coverage", 60, |g| {
+            let n = g.usize_in(1, 400);
+            let classes = g.usize_in(1, 11);
+            let clients = g.usize_in(1, 13);
+            let alpha = *g.pick(&[0.05, 0.1, 0.5, 1.0, 10.0]);
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let labels: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let p = dirichlet_split(&labels, classes, clients, alpha, seed).unwrap();
+            assert_eq!(p.n_clients(), clients);
+            assert_eq!(p.len(), n);
+            assert_exact_coverage(&p, n);
+            // determinism across runs: same seed, same shards, exactly
+            let q = dirichlet_split(&labels, classes, clients, alpha, seed).unwrap();
+            assert_eq!(p.of_client, q.of_client);
+        });
+    }
+
+    #[test]
+    fn dirichlet_split_rejects_bad_inputs() {
+        assert!(dirichlet_split(&[0, 1], 2, 0, 0.5, 1).is_err());
+        assert!(dirichlet_split(&[0, 1], 0, 2, 0.5, 1).is_err());
+        assert!(dirichlet_split(&[0, 1], 2, 2, 0.0, 1).is_err());
+        assert!(dirichlet_split(&[0, 1], 2, 2, -1.0, 1).is_err());
+        assert!(dirichlet_split(&[0, 2], 2, 2, 0.5, 1).is_err()); // label ≥ classes
+    }
+
+    /// Mean over clients of the max class share of that client's shard —
+    /// 1/classes for a perfectly balanced split, →1 for one-class shards.
+    fn label_skew(p: &Partition, labels: &[usize], classes: usize) -> f64 {
+        let mut acc = 0.0;
+        let mut m = 0usize;
+        for shard in &p.of_client {
+            if shard.is_empty() {
+                continue;
+            }
+            let mut hist = vec![0usize; classes];
+            for &i in shard {
+                hist[labels[i]] += 1;
+            }
+            acc += *hist.iter().max().unwrap() as f64 / shard.len() as f64;
+            m += 1;
+        }
+        acc / m as f64
+    }
+
+    #[test]
+    fn small_alpha_concentrates_labels_harder_than_large_alpha() {
+        // fixed seeds: a deterministic check of the α direction, not a
+        // statistical one — 2000 examples over 10 classes is far past the
+        // regime where Dir(0.05) and Dir(100) could plausibly cross
+        let classes = 10;
+        let clients = 10;
+        let labels: Vec<usize> = (0..2000).map(|i| i % classes).collect();
+        let skewed = dirichlet_split(&labels, classes, clients, 0.05, 7).unwrap();
+        let flat = dirichlet_split(&labels, classes, clients, 100.0, 7).unwrap();
+        let (s, f) = (label_skew(&skewed, &labels, classes), label_skew(&flat, &labels, classes));
+        assert!(s > f, "α=0.05 skew {s} not above α=100 skew {f}");
+        assert!(f < 0.25, "α=100 should be near-balanced, got {f}");
+        assert!(s > 0.4, "α=0.05 should concentrate labels, got {s}");
+    }
+
+    #[test]
+    fn client_class_weights_are_normalized_and_deterministic() {
+        prop_check("client weights", 100, |g| {
+            let classes = g.usize_in(1, 12);
+            let alpha = *g.pick(&[0.05, 0.1, 0.5, 1.0, 10.0]);
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let client = g.usize_in(0, 1 << 20);
+            let w = client_class_weights(seed, client, classes, alpha);
+            assert_eq!(w.len(), classes);
+            assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x)), "{w:?}");
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{w:?}");
+            assert_eq!(w, client_class_weights(seed, client, classes, alpha));
+        });
+        // distinct clients draw distinct skews (astronomically likely)
+        assert_ne!(
+            client_class_weights(1, 0, 10, 0.1),
+            client_class_weights(1, 1, 10, 0.1)
+        );
+    }
+}

@@ -1,0 +1,266 @@
+//! Discrete-event fleet simulator: millions of *modeled* clients driving
+//! the **real** [`FedServer`]/[`PsCluster`] through the ordinary
+//! [`Transport`] trait.
+//!
+//! The population exists only as RNG streams — per-client heavy-tailed
+//! latency/bandwidth draws, a two-state join/leave churn process, and
+//! Dirichlet-α label-skew weights are all pure functions of
+//! `(fleet_seed, client)`. Per round, only the k sampled participants are
+//! materialized as virtual connections inside [`FleetTransport`]; events
+//! are released in simulated-time order off an event heap, with the
+//! server's straggler deadline mapped onto the virtual clock. No threads,
+//! no sockets, no wall-clock dependence: a scenario string plus a seed
+//! replays bit-exactly, and with zero jitter, no churn, and IID data the
+//! run is bit-exact against the channel simulation (DESIGN.md §fleet).
+//!
+//! [`FedServer`]: super::server::FedServer
+//! [`PsCluster`]: super::cluster::PsCluster
+//! [`Transport`]: super::transport::Transport
+
+mod transport;
+
+pub use transport::FleetTransport;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{ExperimentConfig, ScenarioSpec};
+use crate::data::partition::client_class_weights;
+use crate::metrics::perbit::metric_per_bit;
+use crate::metrics::scenario::ScenarioSummary;
+use crate::util::rng::Rng;
+
+use super::sim::{self, SimReport};
+use super::transport::Transport;
+
+/// Stream domain for the per-client churn renewal process.
+const CHURN_DOMAIN: u64 = 0x46c3_38;
+
+/// Two-state join/leave renewal process: every round each client flips
+/// presence with probability `rate`, independently per client, starting
+/// live at round 0's draw. Liveness is computed on demand by folding the
+/// client's flip stream up to the queried round — O(round) per query, no
+/// per-client state for the unmaterialized millions.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnProcess {
+    seed: u64,
+    rate: f64,
+}
+
+impl ChurnProcess {
+    pub fn new(seed: u64, rate: f64) -> ChurnProcess {
+        ChurnProcess { seed, rate }
+    }
+
+    /// Is `client` present for `round`? Deterministic in
+    /// `(seed, client, round)` and consistent across queries: the same
+    /// client replays the same join/leave history in any order.
+    pub fn is_live(&self, client: usize, round: usize) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let mut r = Rng::new(self.seed).stream(CHURN_DOMAIN, client as u64);
+        let mut live = true;
+        for _ in 0..=round {
+            if r.f64() < self.rate {
+                live = !live;
+            }
+        }
+        live
+    }
+}
+
+/// A fleet run's full result: the ordinary sim report (final model, server
+/// stats, transport counters) plus the per-scenario summary row.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub sim: SimReport,
+    pub scenario: ScenarioSummary,
+}
+
+impl FleetReport {
+    /// Scenario row first, then the per-round server stats CSV.
+    pub fn to_csv(&self) -> String {
+        format!("{}\n{}", self.scenario.to_csv(), self.sim.stats.to_csv())
+    }
+}
+
+/// Run `base` (scheme, rate, rounds, server knobs) over the modeled
+/// population described by `scn`, feeding the real server through a
+/// [`FleetTransport`]. The scenario's `n` overrides `base.n_clients` and
+/// its `alpha` overrides `base.dirichlet_alpha`; a nonzero scenario seed
+/// decouples the fleet draws (links, churn) from the experiment seed that
+/// drives updates and sampling.
+pub fn simulate_fleet(
+    base: &ExperimentConfig,
+    scn: &ScenarioSpec,
+    d: usize,
+) -> Result<FleetReport> {
+    scn.validate()?;
+    let mut cfg = base.clone();
+    cfg.n_clients = scn.n;
+    cfg.dirichlet_alpha = scn.alpha;
+    let fleet_seed = if scn.seed != 0 { scn.seed } else { cfg.seed };
+    if cfg.server.cluster.is_some() {
+        return simulate_fleet_cluster(&cfg, scn, fleet_seed, d);
+    }
+    let k = cfg.participants_per_round();
+    let sim::SimServer { spec, tables, codec, mut server } = sim::build_server(&cfg, d)?;
+    let mut transport = FleetTransport::new(&cfg, scn, fleet_seed, d, &spec, codec, tables.clone());
+    let churn = transport.churn();
+    let mut w = vec![0.0f32; d];
+    let mut bits = 0.0f64;
+    let (mut received, mut dropped) = (0usize, 0usize);
+    for round in 0..cfg.rounds {
+        let participants = server.select_live(k, |id| churn.is_live(id, round));
+        ensure!(
+            !participants.is_empty(),
+            "fleet round {round}: every sampled client had churned out"
+        );
+        let summary = server.run_round(round, &participants, &mut transport, &spec, &mut w)?;
+        ensure!(
+            summary.received > 0,
+            "fleet round {round}: all {} participants missed the {} ms virtual deadline",
+            participants.len(),
+            cfg.server.straggler_timeout_ms
+        );
+        bits = summary.bits_per_client;
+        received += summary.received;
+        dropped += summary.dropped;
+    }
+    transport.close()?;
+    let tstats = transport.stats();
+    let report = sim::finish_report(&cfg, d, w, bits, server, &tables, tstats);
+    let scenario = scenario_summary(&cfg, scn, fleet_seed, &report, received, dropped);
+    Ok(FleetReport { sim: report, scenario })
+}
+
+/// Fleet over a [`PsCluster`]: same virtual transport, rounds run by the
+/// sharded parameter servers. Churn is refused here because the cluster's
+/// per-PS schedulers sample internally — there is no hook to veto departed
+/// ids without perturbing their shuffle streams.
+///
+/// [`PsCluster`]: super::cluster::PsCluster
+fn simulate_fleet_cluster(
+    cfg: &ExperimentConfig,
+    scn: &ScenarioSpec,
+    fleet_seed: u64,
+    d: usize,
+) -> Result<FleetReport> {
+    ensure!(
+        scn.churn == 0.0,
+        "fleet: churn is not supported with a PS cluster (per-PS schedulers sample internally)"
+    );
+    let k = cfg.participants_per_round();
+    let sim::SimCluster { spec, tables, codec, mut cluster } = sim::build_cluster(cfg, d)?;
+    let mut transport = FleetTransport::new(cfg, scn, fleet_seed, d, &spec, codec, tables.clone());
+    let mut w = vec![0.0f32; d];
+    let mut bits = 0.0f64;
+    let (mut received, mut dropped) = (0usize, 0usize);
+    for round in 0..cfg.rounds {
+        let summary = cluster.run_round(round, k, &mut transport, &spec, &mut w)?;
+        ensure!(
+            summary.received > 0,
+            "fleet round {round}: all {k} participants missed the {} ms virtual deadline",
+            cfg.server.straggler_timeout_ms
+        );
+        bits = summary.bits_per_client;
+        received += summary.received;
+        dropped += summary.dropped;
+    }
+    cluster.finish(&mut w);
+    transport.close()?;
+    let tstats = transport.stats();
+    let report = sim::finish_cluster_report(cfg, d, w, bits, cluster, &tables, tstats);
+    let scenario = scenario_summary(cfg, scn, fleet_seed, &report, received, dropped);
+    Ok(FleetReport { sim: report, scenario })
+}
+
+/// Build the scenario summary row. Label skew is the mean max-class share
+/// over a bounded probe of clients (exactly `1/classes` for IID data);
+/// probing instead of enumerating keeps a million-client summary O(1).
+fn scenario_summary(
+    cfg: &ExperimentConfig,
+    scn: &ScenarioSpec,
+    fleet_seed: u64,
+    sim: &SimReport,
+    received: usize,
+    dropped: usize,
+) -> ScenarioSummary {
+    let label_skew = match scn.alpha {
+        Some(a) => {
+            let probes = scn.n.min(256);
+            let mut acc = 0.0f64;
+            for c in 0..probes {
+                let wts = client_class_weights(fleet_seed, c, scn.classes, a);
+                acc += wts.iter().cloned().fold(0.0f64, f64::max);
+            }
+            acc / probes as f64
+        }
+        None => 1.0 / scn.classes as f64,
+    };
+    ScenarioSummary {
+        scenario: scn.label(),
+        scheme: cfg.scheme.label(cfg.rq),
+        clients: scn.n,
+        sampled: cfg.participants_per_round(),
+        rounds: cfg.rounds,
+        bits_per_round: sim.bits_per_round,
+        final_metric: sim.w_norm(),
+        per_bit: metric_per_bit(sim.w_norm(), sim.bits_per_round, cfg.rounds),
+        label_skew,
+        received,
+        dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(c: &ChurnProcess) -> Vec<bool> {
+        let mut out = Vec::new();
+        for cl in 0..50 {
+            for r in 0..6 {
+                out.push(c.is_live(cl, r));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn churn_process_replays_bit_exactly() {
+        let c = ChurnProcess::new(42, 0.3);
+        assert_eq!(trace(&c), trace(&ChurnProcess::new(42, 0.3)));
+        // out-of-order queries see the same history
+        assert_eq!(c.is_live(7, 3), ChurnProcess::new(42, 0.3).is_live(7, 3));
+    }
+
+    #[test]
+    fn zero_rate_means_everyone_is_always_live() {
+        let c = ChurnProcess::new(9, 0.0);
+        assert!((0..200).all(|cl| (0..8).all(|r| c.is_live(cl, r))));
+    }
+
+    #[test]
+    fn high_churn_actually_flips_presence() {
+        let c = ChurnProcess::new(5, 0.5);
+        let mut flips = 0;
+        for cl in 0..200 {
+            for r in 0..5 {
+                if c.is_live(cl, r) != c.is_live(cl, r + 1) {
+                    flips += 1;
+                }
+            }
+        }
+        assert!(flips > 0, "rate-0.5 churn never flipped anyone");
+        // and at rate 0.5 a decent fraction of client-rounds flip
+        assert!(flips > 200, "only {flips} flips across 1000 client-round steps");
+    }
+
+    #[test]
+    fn churn_process_is_copy() {
+        let c = ChurnProcess::new(1, 0.1);
+        let d = c; // Copy: the closure handed to select_live can capture it
+        assert_eq!(c.is_live(0, 0), d.is_live(0, 0));
+    }
+}

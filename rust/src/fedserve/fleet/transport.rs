@@ -1,0 +1,467 @@
+//! [`FleetTransport`]: the discrete-event transport behind the fleet
+//! simulator. The real `FedServer`/`PsCluster` talks to it through the
+//! ordinary [`Transport`] trait, but nothing crosses a socket or a thread:
+//! a downlink `send` *synthesizes* the client's whole reply (the same
+//! deterministic update → session encode → wire frame path the channel sim
+//! runs in client threads) and schedules it on an event heap at its
+//! virtual arrival time — broadcast instant + the client's RNG-drawn
+//! latency + payload ÷ its RNG-drawn bandwidth. `poll` releases events in
+//! simulated-time order and maps the server's straggler deadline onto the
+//! virtual clock, so deadline drops are a property of the scenario, never
+//! of the host's wall clock (DESIGN.md §fleet).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::BlockCodec;
+use crate::config::{ExperimentConfig, LatencyModel, ScenarioSpec};
+use crate::coordinator::memory::Memory;
+use crate::coordinator::messages::Uplink;
+use crate::fedserve::reactor::{EventSource, TimerWheel, Token};
+use crate::fedserve::session::{ClientSession, RoundAssembler};
+use crate::fedserve::sim::sim_update;
+use crate::fedserve::table_cache::LruTableCache;
+use crate::fedserve::transport::{Event, Transport};
+use crate::fedserve::wire;
+use crate::metrics::server::TransportStats;
+use crate::train::ModelSpec;
+use crate::util::rng::Rng;
+
+use super::ChurnProcess;
+
+/// Stream domain for per-client link draws (latency, bandwidth).
+const LINK_DOMAIN: u64 = 0x46c3_37;
+
+/// One scheduled uplink on the event heap, ordered by virtual arrival
+/// time; `seq` breaks ties in send order so the heap is a total order and
+/// replays are bit-exact.
+#[derive(Debug)]
+struct PendingUplink {
+    at_ns: u64,
+    seq: u64,
+    client: usize,
+    frame: Vec<u8>,
+}
+
+impl PartialEq for PendingUplink {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at_ns, self.seq) == (other.at_ns, other.seq)
+    }
+}
+
+impl Eq for PendingUplink {}
+
+impl PartialOrd for PendingUplink {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PendingUplink {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ns, self.seq).cmp(&(other.at_ns, other.seq))
+    }
+}
+
+/// A materialized participant: the real client-side session (encoder,
+/// error-feedback memory, wire framing) plus its drawn link parameters.
+struct VirtualClient {
+    session: ClientSession,
+    asm: RoundAssembler,
+    /// one-way latency in virtual ns
+    lat_ns: u64,
+    /// serialization cost per uplink byte (0 = infinite bandwidth)
+    ns_per_byte: f64,
+}
+
+/// The fleet's server-side transport: millions of *modeled* clients, only
+/// the sampled ones ever materialized as [`VirtualClient`]s (lazily, on
+/// first downlink — and kept across rounds so error-feedback memory
+/// carries exactly like the channel sim's persistent client threads).
+pub struct FleetTransport {
+    cfg: ExperimentConfig,
+    scn: ScenarioSpec,
+    fleet_seed: u64,
+    d: usize,
+    spec: ModelSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<LruTableCache>,
+    clients: HashMap<usize, VirtualClient>,
+    heap: BinaryHeap<Reverse<PendingUplink>>,
+    seq: u64,
+    /// the virtual clock, in ns since run start; only moves forward
+    vnow_ns: u64,
+    /// virtual instant of the current round's first broadcast — the anchor
+    /// the straggler deadline is measured from
+    round_vstart_ns: u64,
+    cur_round: Option<usize>,
+    bytes_in: u64,
+    bytes_out: u64,
+    decode_errors: u64,
+    wakeups: u64,
+}
+
+impl FleetTransport {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        scn: &ScenarioSpec,
+        fleet_seed: u64,
+        d: usize,
+        spec: &ModelSpec,
+        codec: Arc<dyn BlockCodec>,
+        tables: Arc<LruTableCache>,
+    ) -> FleetTransport {
+        FleetTransport {
+            cfg: cfg.clone(),
+            scn: scn.clone(),
+            fleet_seed,
+            d,
+            spec: spec.clone(),
+            codec,
+            tables,
+            clients: HashMap::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            vnow_ns: 0,
+            round_vstart_ns: 0,
+            cur_round: None,
+            bytes_in: 0,
+            bytes_out: 0,
+            decode_errors: 0,
+            wakeups: 0,
+        }
+    }
+
+    /// The scenario's join/leave process, seeded like everything else off
+    /// the fleet seed.
+    pub fn churn(&self) -> ChurnProcess {
+        ChurnProcess::new(self.fleet_seed, self.scn.churn)
+    }
+
+    /// Current virtual time in ns (test hook).
+    pub fn virtual_now_ns(&self) -> u64 {
+        self.vnow_ns
+    }
+
+    /// How many virtual connections are materialized — the "zero live
+    /// sockets" acceptance hook (and the union of sampled participants
+    /// before [`Transport::close`] tears them down).
+    pub fn live_connections(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// This client's link draw: deterministic in `(fleet_seed, client)`.
+    /// With `jitter = 0` the lognormal model degenerates to the fixed one
+    /// (`exp(0) = 1`), which is what makes the zero-jitter parity scenario
+    /// exactly latency-uniform.
+    fn link_of(&self, client: usize) -> (u64, f64) {
+        let mut r = Rng::new(self.fleet_seed).stream(LINK_DOMAIN, client as u64);
+        let lat_ms = match self.scn.lat {
+            LatencyModel::Fixed => self.scn.lat_ms,
+            LatencyModel::LogNormal => self.scn.lat_ms * (self.scn.jitter * r.normal()).exp(),
+        };
+        let ns_per_byte = if self.scn.bw_mbps > 0.0 {
+            // Mbit/s → ns per byte, with the same lognormal spread
+            8000.0 / (self.scn.bw_mbps * (self.scn.jitter * r.normal()).exp())
+        } else {
+            0.0
+        };
+        ((lat_ms.max(0.0) * 1e6) as u64, ns_per_byte)
+    }
+
+    /// Materialize `client` as a virtual connection on first contact. The
+    /// session is built exactly like `sim::build_sessions` builds one —
+    /// same encoder factory, same memory gate — so a fleet client is
+    /// bit-identical to its channel-sim counterpart.
+    fn materialize(&mut self, client: usize) -> Result<()> {
+        if self.clients.contains_key(&client) {
+            return Ok(());
+        }
+        let (lat_ns, ns_per_byte) = self.link_of(client);
+        let memory = self.cfg.memory.then(|| Memory::new(self.d, self.cfg.memory_decay));
+        let encoder = self
+            .cfg
+            .build_encoder(self.d, self.codec.clone(), self.tables.clone())
+            .with_context(|| format!("fleet: building encoder for client {client}"))?;
+        self.clients.insert(
+            client,
+            VirtualClient {
+                session: ClientSession::new(client, encoder, memory),
+                asm: RoundAssembler::new(),
+                lat_ns,
+                ns_per_byte,
+            },
+        );
+        Ok(())
+    }
+
+    /// Where the straggler deadline lands on the virtual clock.
+    ///
+    /// When the server has a deadline configured, the virtual deadline is
+    /// read from the *config*, anchored at the round's broadcast instant —
+    /// NOT from `poll`'s timeout argument. The argument is a real-clock
+    /// residual (the collect loop re-derives it from wall-time elapsed on
+    /// every iteration, so it shrinks by however long our own bookkeeping
+    /// took); its faithful virtual image is the full deadline measured
+    /// from round start. This is what keeps fleet results bit-exact across
+    /// hosts and runs: no wall clock ever enters the release decision.
+    /// Without a configured deadline (callers draining with an explicit
+    /// budget), the budget is taken literally against the current clock.
+    fn virtual_deadline(&self, t: Duration) -> u64 {
+        let ms = self.cfg.server.straggler_timeout_ms;
+        if ms > 0 {
+            self.round_vstart_ns.saturating_add(ms.saturating_mul(1_000_000))
+        } else {
+            self.vnow_ns.saturating_add(t.as_nanos().min(u64::MAX as u128) as u64)
+        }
+    }
+
+    /// Pop the earliest pending uplink, advance the virtual clock to its
+    /// arrival, and decode it into an [`Event`].
+    fn release_next(&mut self) -> Result<Option<Event>> {
+        let Some(Reverse(p)) = self.heap.pop() else {
+            return Ok(None);
+        };
+        self.vnow_ns = self.vnow_ns.max(p.at_ns);
+        self.bytes_in += p.frame.len() as u64;
+        match wire::decode(&p.frame) {
+            Ok(msg) => Ok(Some(Event::Frame { msg, wire_bytes: p.frame.len() })),
+            Err(e) => {
+                self.decode_errors += 1;
+                Ok(Some(Event::Garbage {
+                    client: Some(p.client),
+                    error: format!("{e:#}"),
+                    wire_bytes: p.frame.len(),
+                }))
+            }
+        }
+    }
+}
+
+impl Transport for FleetTransport {
+    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+        let msg = wire::decode(frame).context("fleet: bad downlink frame")?;
+        self.bytes_out += frame.len() as u64;
+        let round = match &msg {
+            wire::Message::Round { round, .. } | wire::Message::RoundSlice { round, .. } => *round,
+            wire::Message::Shutdown => return Ok(()),
+            other => bail!("fleet: unexpected downlink frame: {other:?}"),
+        };
+        if self.cur_round != Some(round) {
+            // first broadcast of a new round: re-anchor the deadline
+            self.cur_round = Some(round);
+            self.round_vstart_ns = self.vnow_ns;
+        }
+        self.materialize(client)?;
+        let vc = self.clients.get_mut(&client).expect("just materialized");
+        if !vc.asm.feed(msg).context("fleet: downlink reassembly")? {
+            return Ok(()); // more cluster slices to come
+        }
+        // the client's whole reply, synthesized through the same session
+        // path the channel sim's client threads run (sim_client_loop)
+        let update = sim_update(self.cfg.seed, client, round, self.d);
+        let frame_up = match vc.session.encode_update(round, &update, &self.spec) {
+            Ok(report) => vc.session.frame_update(round, &report, 0.0),
+            Err(e) => wire::encode_update(&Uplink::failure(client, round, format!("{e:#}"))),
+        };
+        let at_ns = self
+            .vnow_ns
+            .saturating_add(vc.lat_ns)
+            .saturating_add((frame_up.len() as f64 * vc.ns_per_byte) as u64);
+        self.seq += 1;
+        self.heap.push(Reverse(PendingUplink { at_ns, seq: self.seq, client, frame: frame_up }));
+        Ok(())
+    }
+
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        self.wakeups += 1;
+        match timeout {
+            None => {
+                // a blocking poll with nothing scheduled can never return:
+                // in virtual time that is a deadlock, not a wait
+                if self.heap.is_empty() {
+                    bail!("fleet: blocking poll with no pending uplinks (virtual deadlock)");
+                }
+                self.release_next()
+            }
+            Some(t) => {
+                let Some(top_at) = self.heap.peek().map(|Reverse(p)| p.at_ns) else {
+                    return Ok(None);
+                };
+                let vdl = self.virtual_deadline(t);
+                if top_at > vdl {
+                    // deadline hit in virtual time: the round moves on and
+                    // the still-queued uplinks become stragglers
+                    self.vnow_ns = self.vnow_ns.max(vdl);
+                    return Ok(None);
+                }
+                self.release_next()
+            }
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        // account the shutdown broadcast, then tear down every virtual
+        // connection — after close, zero live connections by construction
+        let f = wire::encode_shutdown();
+        self.bytes_out += (f.len() * self.clients.len()) as u64;
+        self.clients.clear();
+        self.heap.clear();
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            label: "fleet",
+            bytes_in: self.bytes_in,
+            bytes_out: self.bytes_out,
+            decode_errors: self.decode_errors,
+            // deliberately empty: `stats()` is cloned every round by the
+            // server's bytes-down reconcile, and a million-entry ledger
+            // would dominate the round. `socket_measured = false` already
+            // tells the reconcile there is nothing to read here.
+            per_client: Vec::new(),
+            disconnects: 0,
+            wakeups: self.wakeups,
+            socket_measured: false,
+        }
+    }
+}
+
+/// The reactor-facing half: the fleet heap as an [`EventSource`], releasing
+/// whatever virtual time has already reached in `pop` and advancing the
+/// virtual clock in `service` (which never blocks — sleeping on a wall
+/// clock would be meaningless here).
+impl EventSource for FleetTransport {
+    fn pop(&mut self, _wheel: &mut TimerWheel) -> Result<Option<Event>> {
+        match self.heap.peek().map(|Reverse(p)| p.at_ns) {
+            Some(at) if at <= self.vnow_ns => self.release_next(),
+            _ => Ok(None),
+        }
+    }
+
+    fn service(&mut self, _wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
+        if let Some(at) = self.heap.peek().map(|Reverse(p)| p.at_ns) {
+            let target = match budget {
+                Some(t) => at.min(self.virtual_deadline(t)),
+                None => at,
+            };
+            self.vnow_ns = self.vnow_ns.max(target);
+        }
+        Ok(())
+    }
+
+    fn on_timer(&mut self, _wheel: &mut TimerWheel, _token: Token) {}
+
+    fn exhausted(&self) -> bool {
+        self.heap.is_empty() && self.clients.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CpuCodec;
+    use crate::config::Scheme;
+    use crate::fedserve::sim::sim_spec;
+
+    fn fixture(scn_s: &str, n: usize) -> FleetTransport {
+        let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 3);
+        cfg.n_clients = n;
+        cfg.server.prewarm = false;
+        let scn = ScenarioSpec::parse(scn_s).unwrap();
+        let d = 64;
+        let spec = sim_spec(d);
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let tables = Arc::new(LruTableCache::new(16));
+        FleetTransport::new(&cfg, &scn, 77, d, &spec, codec, tables)
+    }
+
+    #[test]
+    fn pending_uplinks_order_by_arrival_then_seq() {
+        let mk = |at_ns, seq| PendingUplink { at_ns, seq, client: 0, frame: Vec::new() };
+        let mut heap = BinaryHeap::new();
+        for (at, seq) in [(30u64, 1u64), (10, 2), (30, 0), (20, 3)] {
+            heap.push(Reverse(mk(at, seq)));
+        }
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|Reverse(p)| (p.at_ns, p.seq))
+            .collect();
+        assert_eq!(order, vec![(10, 2), (20, 3), (30, 0), (30, 1)]);
+    }
+
+    #[test]
+    fn sends_materialize_lazily_and_polls_release_in_virtual_order() {
+        let mut t = fixture("fleet:n=8,lat=lognorm,jitter=0.8", 8);
+        let frame = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        for c in [3usize, 1, 5] {
+            t.send(c, &frame).unwrap();
+        }
+        // only the contacted clients materialized
+        assert_eq!(t.live_connections(), 3);
+        // a zero-budget poll drains nothing before virtual time advances
+        assert!(t.poll(Some(Duration::ZERO)).unwrap().is_none());
+        // blocking polls release all three, clock monotone
+        let mut last = 0u64;
+        for i in 0..3 {
+            let ev = t.poll(None).unwrap().unwrap();
+            assert!(matches!(ev, Event::Frame { .. }), "release {i}");
+            assert!(t.virtual_now_ns() >= last, "clock went backwards at {i}");
+            last = t.virtual_now_ns();
+        }
+        assert!(last > 0, "no virtual time passed");
+        // nothing left; a blocking poll now would deadlock and says so
+        assert!(t.poll(Some(Duration::ZERO)).unwrap().is_none());
+        let e = t.poll(None).unwrap_err();
+        assert!(format!("{e:#}").contains("virtual deadlock"), "{e:#}");
+        assert_eq!(t.stats().label, "fleet");
+        assert!(t.stats().bytes_in > 0);
+        assert!(!t.stats().socket_measured);
+        t.close().unwrap();
+        assert_eq!(t.live_connections(), 0);
+    }
+
+    #[test]
+    fn link_draws_are_deterministic_and_jitter_free_when_asked() {
+        let t = fixture("fleet:n=8,lat=fixed,jitter=0,lat_ms=50", 8);
+        for c in 0..8 {
+            assert_eq!(t.link_of(c), (50_000_000, 0.0), "client {c}");
+        }
+        // zero-jitter lognorm degenerates to fixed (the parity scenario)
+        let t0 = fixture("fleet:n=8,lat=lognorm,jitter=0,lat_ms=50", 8);
+        for c in 0..8 {
+            assert_eq!(t0.link_of(c), (50_000_000, 0.0), "client {c}");
+        }
+        // with jitter, draws differ per client but replay exactly
+        let tj = fixture("fleet:n=8,lat=lognorm,jitter=0.8", 8);
+        let draws: Vec<_> = (0..8).map(|c| tj.link_of(c)).collect();
+        assert_eq!(draws, (0..8).map(|c| tj.link_of(c)).collect::<Vec<_>>());
+        assert!(draws.iter().any(|d| *d != draws[0]), "{draws:?}");
+        // bandwidth draws engage when bw is finite
+        let tb = fixture("fleet:n=8,lat=fixed,jitter=0,bw=8", 8);
+        assert_eq!(tb.link_of(0).1, 1000.0); // 8 Mbit/s = 1000 ns/byte
+    }
+
+    #[test]
+    fn event_source_half_releases_only_what_virtual_time_reached() {
+        let mut t = fixture("fleet:n=4,lat=fixed,jitter=0,lat_ms=10", 4);
+        let frame = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        t.send(0, &frame).unwrap();
+        t.send(1, &frame).unwrap();
+        let mut wheel = TimerWheel::default();
+        // nothing released before the clock advances...
+        assert!(EventSource::pop(&mut t, &mut wheel).unwrap().is_none());
+        assert!(!t.exhausted());
+        // ...service advances to the next arrival, then pop releases
+        EventSource::service(&mut t, &mut wheel, None).unwrap();
+        assert!(EventSource::pop(&mut t, &mut wheel).unwrap().is_some());
+        assert!(EventSource::pop(&mut t, &mut wheel).unwrap().is_some());
+        assert!(EventSource::pop(&mut t, &mut wheel).unwrap().is_none());
+        t.close().unwrap();
+        assert!(t.exhausted());
+    }
+}

@@ -39,6 +39,13 @@
 //!   one reactor loop), partitioned model-parallel (contiguous dimension
 //!   ranges, bit-exact vs a single PS) or by client subsets (full-width
 //!   replicas with periodic eq.-(7) averaging);
+//! * [`fleet`] — a discrete-event fleet simulator: millions of *modeled*
+//!   clients (RNG-derived heavy-tailed links, join/leave churn, Dirichlet
+//!   label skew) driving the real [`server::FedServer`]/[`cluster::PsCluster`]
+//!   through a virtual-time [`fleet::FleetTransport`] — only the k sampled
+//!   participants per round materialize, straggler deadlines live on the
+//!   virtual clock, and zero-jitter IID scenarios are bit-exact against
+//!   the channel sim (the `repro fleet` subcommand);
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
 //!   `repro serve` subcommand), over channels, a TCP loopback in one
 //!   process (`--tcp-loopback`), or split server/client processes
@@ -49,6 +56,7 @@
 
 pub mod aggregate;
 pub mod cluster;
+pub mod fleet;
 pub mod reactor;
 pub mod server;
 pub mod session;
@@ -61,6 +69,7 @@ pub use aggregate::{
     accumulate_range, accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded,
 };
 pub use cluster::{partition_clients, PsCluster};
+pub use fleet::{simulate_fleet, ChurnProcess, FleetReport, FleetTransport};
 pub use reactor::{Poller, Reactor, TimerWheel};
 pub use server::{FedServer, RoundSummary, SlotMap};
 pub use session::{ClientSession, RoundAssembler, Scheduler, SessionStats};

@@ -373,6 +373,15 @@ impl FedServer {
         self.scheduler.sample(self.sessions.len(), k)
     }
 
+    /// [`FedServer::select`] with churn awareness: sample up to `k` among
+    /// the clients `is_live` admits, skipping departed ids without
+    /// perturbing the shuffle prefix for the remaining ones (the fleet
+    /// simulator's join/leave path — DESIGN.md §fleet). May return fewer
+    /// than `k` ids when too few clients are live.
+    pub fn select_live(&mut self, k: usize, is_live: impl Fn(usize) -> bool) -> Vec<usize> {
+        self.scheduler.sample_live(self.sessions.len(), k, is_live)
+    }
+
     /// Serve one round: broadcast the model to `participants` over
     /// `transport`, collect their uplinks off it, decode, shard-aggregate,
     /// and apply the eq.-(7) averaged step to `w`. A round that aborts

@@ -151,6 +151,34 @@ impl Scheduler {
         self.shuffled(pool.to_vec(), k)
     }
 
+    /// [`Scheduler::sample`] with churn awareness: take the first `k` *live*
+    /// ids of the same full shuffle. One shuffle is consumed either way, so
+    /// the RNG advances identically to `sample(n, k)` — and the first-k-live
+    /// prefix of the permutation is exactly what strike-out-then-truncate
+    /// would produce, i.e. departed clients are skipped without perturbing
+    /// the shuffle prefix for the remaining ids (DESIGN.md §fleet). May
+    /// return fewer than `k` ids when too few clients are live.
+    pub fn sample_live(
+        &mut self,
+        n: usize,
+        k: usize,
+        is_live: impl Fn(usize) -> bool,
+    ) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let k = k.clamp(1, order.len().max(1));
+        let mut out = Vec::with_capacity(k);
+        for id in order {
+            if out.len() == k {
+                break;
+            }
+            if is_live(id) {
+                out.push(id);
+            }
+        }
+        out
+    }
+
     fn shuffled(&mut self, mut order: Vec<usize>, k: usize) -> Vec<usize> {
         self.rng.shuffle(&mut order);
         order.truncate(k.clamp(1, order.len().max(1)));
@@ -336,6 +364,51 @@ mod tests {
         }
         assert_eq!(c.sample_of(&pool, 99).len(), 4);
         assert!(c.sample_of(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn sample_live_with_everyone_live_reproduces_sample() {
+        let mut a = Scheduler::new(33);
+        let mut b = Scheduler::new(33);
+        for _ in 0..5 {
+            assert_eq!(a.sample(10, 4), b.sample_live(10, 4, |_| true));
+        }
+    }
+
+    #[test]
+    fn sample_live_skips_departed_without_perturbing_the_prefix() {
+        // the regression pinned here: the live sample equals the full
+        // permutation with departed ids struck out, truncated to k — i.e.
+        // churn never reshuffles the surviving ids' relative order
+        for seed in [1u64, 7, 33, 1234] {
+            let departed = [2usize, 5, 6];
+            let perm = Scheduler::new(seed).sample(10, 10); // k = n: whole permutation
+            let expect: Vec<usize> =
+                perm.iter().copied().filter(|id| !departed.contains(id)).take(4).collect();
+            let got = Scheduler::new(seed).sample_live(10, 4, |id| !departed.contains(&id));
+            assert_eq!(got, expect, "seed {seed}");
+            assert!(got.iter().all(|id| !departed.contains(id)));
+        }
+    }
+
+    #[test]
+    fn sample_live_consumes_the_same_rng_as_sample() {
+        // one shuffle per call either way, so schedules stay aligned when
+        // churn turns on mid-run: the *next* round's sample is unaffected
+        let mut a = Scheduler::new(17);
+        let mut b = Scheduler::new(17);
+        a.sample(12, 5);
+        b.sample_live(12, 5, |id| id % 3 != 0);
+        for _ in 0..4 {
+            assert_eq!(a.sample(12, 5), b.sample(12, 5));
+        }
+    }
+
+    #[test]
+    fn sample_live_returns_short_when_too_few_live() {
+        let mut s = Scheduler::new(9);
+        assert_eq!(s.sample_live(6, 4, |id| id == 3), vec![3]);
+        assert!(s.sample_live(6, 4, |_| false).is_empty());
     }
 
     #[test]

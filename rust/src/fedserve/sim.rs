@@ -208,15 +208,17 @@ fn build_sessions(
         .collect()
 }
 
-/// The server-side pieces every serve mode constructs the same way.
-struct SimServer {
-    spec: ModelSpec,
-    tables: Arc<LruTableCache>,
-    codec: Arc<dyn BlockCodec>,
-    server: FedServer,
+/// The server-side pieces every serve mode constructs the same way (shared
+/// with the fleet simulator, which drives the same real server off a
+/// virtual-time transport).
+pub(crate) struct SimServer {
+    pub(crate) spec: ModelSpec,
+    pub(crate) tables: Arc<LruTableCache>,
+    pub(crate) codec: Arc<dyn BlockCodec>,
+    pub(crate) server: FedServer,
 }
 
-fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
+pub(crate) fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
@@ -258,7 +260,7 @@ fn drive_cluster_rounds(
 
 /// Fold the end-of-run counters into the stats, persist the hot quantizer
 /// tables when the config names a cache path, and assemble the report.
-fn finish_report(
+pub(crate) fn finish_report(
     cfg: &ExperimentConfig,
     d: usize,
     w: Vec<f32>,
@@ -369,14 +371,14 @@ pub fn simulate_with(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> R
 /// The cluster-hosting pieces every clustered serve constructs the same
 /// way (the multi-PS sibling of [`SimServer`]): one shared table cache,
 /// one decoder per PS off the same registry spec.
-struct SimCluster {
-    spec: ModelSpec,
-    tables: Arc<LruTableCache>,
-    codec: Arc<dyn BlockCodec>,
-    cluster: PsCluster,
+pub(crate) struct SimCluster {
+    pub(crate) spec: ModelSpec,
+    pub(crate) tables: Arc<LruTableCache>,
+    pub(crate) codec: Arc<dyn BlockCodec>,
+    pub(crate) cluster: PsCluster,
 }
 
-fn build_cluster(cfg: &ExperimentConfig, d: usize) -> Result<SimCluster> {
+pub(crate) fn build_cluster(cfg: &ExperimentConfig, d: usize) -> Result<SimCluster> {
     let ccfg = cfg.server.cluster.clone().context("no cluster configured")?;
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
@@ -392,7 +394,7 @@ fn build_cluster(cfg: &ExperimentConfig, d: usize) -> Result<SimCluster> {
 
 /// [`finish_report`]'s multi-PS sibling: fold the end-of-run counters
 /// into the cluster stats and attach the per-PS rollup.
-fn finish_cluster_report(
+pub(crate) fn finish_cluster_report(
     cfg: &ExperimentConfig,
     d: usize,
     w: Vec<f32>,

@@ -8,6 +8,10 @@
 //!                                      the wire format (no PJRT needed), over
 //!                                      channels, --tcp-loopback sockets, or
 //!                                      split --listen / --connect processes
+//!   fleet                              fedserve: a discrete-event modeled
+//!                                      fleet (millions of clients, churn,
+//!                                      heavy-tailed links) through the real
+//!                                      server in virtual time
 //!   quantizer-table                    dump LBG designs for a shape grid
 //!   smoke                              runtime sanity (PJRT + artifacts)
 //!
@@ -241,6 +245,71 @@ fn main() -> Result<()> {
             );
             write_out(&args, &report.stats.to_csv())?;
         }
+        "fleet" => {
+            // discrete-event fleet: n modeled clients exist only as RNG
+            // streams; per round the k sampled participants materialize as
+            // virtual connections feeding the real FedServer/PsCluster in
+            // simulated time (no threads, no sockets, bit-exact replays)
+            let scn = m22::config::ScenarioSpec::parse(
+                &args.str_or("scenario", "fleet:n=100000,lat=lognorm,jitter=0.5"),
+            )?;
+            let rounds = args.usize_or("rounds", 3)?;
+            let d = args.usize_or("dim", 4096)?;
+            anyhow::ensure!(rounds > 0, "--rounds must be at least 1");
+            anyhow::ensure!(d > 0, "--dim must be at least 1");
+            let sspec = scheme_from_args(&args)?;
+            let rq = args.usize_or("rate", 2)? as u32;
+            let mut cfg = ExperimentConfig::new("sim", sspec.scheme, rq, rounds);
+            apply_scheme(&mut cfg, &sspec);
+            cfg.n_clients = scn.n;
+            cfg.keep_frac = args.f64_or("keep", 0.6)?;
+            cfg.seed = args.usize_or("seed", 33)? as u64;
+            cfg.memory = args.bool("memory");
+            cfg.server.shards = args.usize_or("shards", 4)?;
+            cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 0)? as u64;
+            cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
+            cfg.server.prewarm = !args.bool("no-prewarm");
+            cfg.server.sampled_clients = Some(args.usize_or("sample", 64)?);
+            let n_ps = args.usize_or("ps", 0)?;
+            if n_ps > 0 {
+                cfg.server.cluster = Some(ClusterConfig {
+                    n_ps,
+                    mode: PsMode::parse(&args.str_or("ps-mode", "range"))?,
+                    sync_every: args.usize_or("sync-every", 1)?,
+                });
+            }
+            eprintln!("config: {}", cfg.to_json());
+            eprintln!("scenario: {}", scn.label());
+            let report = m22::fedserve::simulate_fleet(&cfg, &scn, d)?;
+            // CI smoke hooks: every round completed, through the virtual
+            // (socket-free) transport
+            anyhow::ensure!(
+                report.sim.stats.rounds.len() == rounds,
+                "fleet run recorded {} of {rounds} rounds",
+                report.sim.stats.rounds.len()
+            );
+            anyhow::ensure!(
+                report.sim.stats.transport.label == "fleet",
+                "expected the virtual fleet transport, got `{}`",
+                report.sim.stats.transport.label
+            );
+            eprintln!("{}", report.sim.stats.summary());
+            if let Some(cs) = &report.sim.cluster {
+                eprintln!("{}", cs.summary());
+            }
+            eprintln!("{}", report.scenario.summary());
+            eprintln!(
+                "final |w| = {:.6}  bits/round/client = {:.0}  \
+                 (n = {} modeled, k = {}, d = {}, {} rounds)",
+                report.sim.w_norm(),
+                report.sim.bits_per_round,
+                report.scenario.clients,
+                report.scenario.sampled,
+                report.sim.d,
+                report.sim.rounds
+            );
+            write_out(&args, &report.to_csv())?;
+        }
         "quantizer-table" => {
             let levels = args.usize_or("levels", 8)?;
             let m = args.f64_or("m", 2.0)?;
@@ -264,7 +333,7 @@ fn main() -> Result<()> {
         "" | "help" => {
             println!(
                 "repro — M22 reproduction launcher\n\
-                 usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|serve|quantizer-table|smoke> [flags]\n\
+                 usage: repro <table1|table2|fig1|fig2|fig3|fig4|fig5a|fig5b|train|serve|fleet|quantizer-table|smoke> [flags]\n\
                  flags: --out FILE  --full  --rounds N  --seeds N  --rate R  --arch A --scheme S --m M\n\
                  scheme strings: a name (m22-gennorm, tinyscript, fp8, sketch, none) or\n\
                  name:key=val,... (keys m, rq, k, min_fit, depth, seed), e.g. m22-gennorm:m=2,rq=3\n\
@@ -275,6 +344,10 @@ fn main() -> Result<()> {
                         --ps N --ps-mode range|replica --sync-every S (multi-PS cluster on one reactor:\n\
                         range = model-parallel dimension slices, bit-exact vs a single PS;\n\
                         replica = client-partitioned full-width replicas, eq.-(7) averaged every S rounds)\n\
+                 fleet: --scenario fleet:n=N,alpha=A,churn=C,lat=fixed|lognorm,lat_ms=L,jitter=J,bw=B,classes=K,seed=S\n\
+                        --rounds N --dim D --sample K --deadline-ms T (virtual-clock straggler deadline)\n\
+                        --shards S --memory --no-prewarm --ps N --ps-mode --sync-every (as in serve)\n\
+                        n modeled clients as RNG streams; only sampled participants materialize; bit-exact replays\n\
                  see DESIGN.md for the per-experiment index"
             );
             return Ok(());

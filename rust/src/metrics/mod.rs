@@ -3,8 +3,10 @@
 
 pub mod perbit;
 pub mod recorder;
+pub mod scenario;
 pub mod server;
 
 pub use perbit::{per_bit_accuracy, PerBitInput};
 pub use recorder::{Recorder, Row};
+pub use scenario::ScenarioSummary;
 pub use server::{ClusterStats, RoundTiming, ServerStats, TransportStats};

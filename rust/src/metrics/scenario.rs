@@ -1,0 +1,127 @@
+//! Per-scenario reporting for fleet runs: one row tying a scenario string
+//! and a scheme to its per-bit outcome (paper eq. 9 framing) plus the
+//! population-level counters a million-client run can still afford to
+//! keep (received/dropped totals, the mean label skew of a probe sample).
+
+/// One fleet scenario's end-of-run summary row.
+#[derive(Debug, Clone)]
+pub struct ScenarioSummary {
+    /// canonical scenario string (`ScenarioSpec::label`)
+    pub scenario: String,
+    /// scheme legend label (`Scheme::label`)
+    pub scheme: String,
+    /// modeled population size n
+    pub clients: usize,
+    /// sampled participants per round k
+    pub sampled: usize,
+    pub rounds: usize,
+    /// mean ideal uplink bits per received client in the last round
+    pub bits_per_round: f64,
+    /// final |w| — the convergence proxy of the synthetic-update sim
+    pub final_metric: f64,
+    /// final_metric per total uplink gigabit (eq. 9 shape)
+    pub per_bit: f64,
+    /// mean max-class share over a probe of clients (1/classes = IID)
+    pub label_skew: f64,
+    /// uplinks accepted across all rounds
+    pub received: usize,
+    /// sampled participants that missed the virtual deadline or churned
+    pub dropped: usize,
+}
+
+impl ScenarioSummary {
+    pub fn csv_header() -> &'static str {
+        "scenario,scheme,clients,sampled,rounds,bits_per_round,final_metric,\
+         per_bit,label_skew,received,dropped"
+    }
+
+    /// One CSV row under [`ScenarioSummary::csv_header`]. Scenario and
+    /// scheme labels contain commas, so both are double-quoted.
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{}\n\"{}\",\"{}\",{},{},{},{},{},{},{},{},{}",
+            Self::csv_header(),
+            self.scenario,
+            self.scheme,
+            self.clients,
+            self.sampled,
+            self.rounds,
+            self.bits_per_round,
+            self.final_metric,
+            self.per_bit,
+            self.label_skew,
+            self.received,
+            self.dropped
+        )
+    }
+
+    /// One-line human summary for stderr.
+    pub fn summary(&self) -> String {
+        format!(
+            "scenario {} · {}: {} rounds of k={} over n={} modeled clients \
+             (virtual time, no sockets) — {} received / {} dropped, \
+             {:.0} bits/client, |w| = {:.6}, per-bit = {:.3e}, skew = {:.3}",
+            self.scenario,
+            self.scheme,
+            self.rounds,
+            self.sampled,
+            self.clients,
+            self.received,
+            self.dropped,
+            self.bits_per_round,
+            self.final_metric,
+            self.per_bit,
+            self.label_skew
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> ScenarioSummary {
+        ScenarioSummary {
+            scenario: "fleet:n=100,churn=0.1,lat=lognorm,lat_ms=50,jitter=0.5".into(),
+            scheme: "G 2 (R=2)".into(),
+            clients: 100,
+            sampled: 8,
+            rounds: 3,
+            bits_per_round: 1234.5,
+            final_metric: 0.25,
+            per_bit: 6.7e-5,
+            label_skew: 0.1,
+            received: 24,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn csv_row_matches_header_arity() {
+        let r = row();
+        let csv = r.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        let body = lines.next().unwrap();
+        assert!(lines.next().is_none());
+        // quoted fields hold the commas; strip them before counting
+        let mut stripped = String::new();
+        let mut quoted = false;
+        for c in body.chars() {
+            match c {
+                '"' => quoted = !quoted,
+                ',' if quoted => {}
+                c => stripped.push(c),
+            }
+        }
+        assert_eq!(header.split(',').count(), stripped.split(',').count(), "{csv}");
+    }
+
+    #[test]
+    fn labels_with_commas_are_quoted() {
+        let csv = row().to_csv();
+        assert!(csv.contains("\"fleet:n=100,churn=0.1"), "{csv}");
+        assert!(csv.contains("\"G 2 (R=2)\""), "{csv}");
+        assert!(row().summary().contains("no sockets"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the discrete-event fleet simulator drives the REAL
+//! `FedServer`/`PsCluster` through the virtual-time `FleetTransport`.
+//!
+//! The acceptance oracle is the channel simulation: with zero latency
+//! jitter, no churn, and IID data, a fleet run must be **bit-exact**
+//! against `simulate_with(.., TransportMode::Channel)` for every
+//! registered scheme at the same seed — same k-of-n sample, same wire
+//! frames, same fused reduce. On top of that, heterogeneous scenarios
+//! (lognormal stragglers dropped at a virtual deadline, join/leave churn
+//! over 50k modeled clients, a sharded PS cluster) must complete and
+//! replay bit-exactly, because every draw is a pure function of
+//! `(seed, client)` and the straggler deadline lives on the virtual clock.
+
+use m22::config::{all_schemes, ClusterConfig, ExperimentConfig, PsMode, Scheme, ScenarioSpec};
+use m22::fedserve::{simulate_fleet, simulate_with, FleetReport, TransportMode};
+
+fn fleet_cfg(scheme: Scheme, n: usize, k: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new("sim", scheme, 2, rounds);
+    cfg.n_clients = n;
+    cfg.server.sampled_clients = Some(k);
+    cfg
+}
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+fn run(cfg: &ExperimentConfig, scn: &ScenarioSpec, d: usize) -> FleetReport {
+    simulate_fleet(cfg, scn, d).expect("fleet run")
+}
+
+/// Satellite 4 (ISSUE acceptance): a fleet scenario with zero latency
+/// jitter, no churn, and IID data is bit-exact against the channel sim
+/// for every registered scheme — same seed, same k-of-n sample.
+#[test]
+fn zero_jitter_iid_fleet_is_bit_exact_vs_channel_for_every_scheme() {
+    let d = 1024;
+    let scn = ScenarioSpec::parse("fleet:n=12,churn=0,lat=fixed,jitter=0").unwrap();
+    for scheme in all_schemes() {
+        let cfg = fleet_cfg(scheme, 12, 5, 3);
+        let fleet = run(&cfg, &scn, d);
+        let channel = simulate_with(&cfg, d, TransportMode::Channel).expect("channel sim");
+        let label = cfg.scheme.label(cfg.rq);
+        assert_bitwise_eq(&fleet.sim.w, &channel.w, &label);
+        assert_eq!(fleet.sim.stats.transport.label, "fleet", "{label}");
+        assert_eq!(fleet.sim.stats.rounds.len(), 3, "{label}");
+        assert_eq!(fleet.scenario.scheme, label);
+    }
+}
+
+/// The parity also holds with client-side error-feedback memory: fleet
+/// sessions persist across rounds exactly like channel client threads do.
+#[test]
+fn fleet_parity_holds_with_error_feedback_memory() {
+    let d = 1024;
+    let scn = ScenarioSpec::parse("fleet:n=10,churn=0,lat=fixed,jitter=0").unwrap();
+    let mut cfg = fleet_cfg(Scheme::parse("m22-gennorm", 2.0).unwrap(), 10, 4, 4);
+    cfg.memory = true;
+    cfg.memory_decay = 0.5;
+    let fleet = run(&cfg, &scn, d);
+    let channel = simulate_with(&cfg, d, TransportMode::Channel).expect("channel sim");
+    assert_bitwise_eq(&fleet.sim.w, &channel.w, "memory parity");
+}
+
+/// Heavy-tailed stragglers against a virtual deadline: drops happen, are
+/// attributed per round, and the whole run replays bit-exactly — the
+/// deadline is mapped onto the virtual clock, so no host timing leaks in.
+#[test]
+fn virtual_deadline_drops_stragglers_deterministically() {
+    let d = 512;
+    let scn = ScenarioSpec::parse("fleet:n=400,lat=lognorm,jitter=1.5,lat_ms=80").unwrap();
+    let mut cfg = fleet_cfg(Scheme::TopKUniform, 400, 32, 3);
+    cfg.server.straggler_timeout_ms = 160;
+    let a = run(&cfg, &scn, d);
+    let b = run(&cfg, &scn, d);
+    assert_bitwise_eq(&a.sim.w, &b.sim.w, "straggler replay");
+    assert_eq!(a.scenario.received, b.scenario.received);
+    assert_eq!(a.scenario.dropped, b.scenario.dropped);
+    let mut dropped = 0;
+    for t in &a.sim.stats.rounds {
+        assert_eq!(t.received + t.dropped, 32, "round {}: accounting", t.round);
+        assert!(t.received > 0, "round {}: everyone dropped", t.round);
+        dropped += t.dropped;
+    }
+    assert!(dropped > 0, "jitter=1.5 around an 80 ms median never missed a 160 ms deadline");
+    assert_eq!(a.scenario.received + a.scenario.dropped, 3 * 32);
+}
+
+/// 50k modeled clients with churn and Dirichlet skew: completes without
+/// materializing the population, skips departed clients, replays exactly.
+#[test]
+fn churn_scenarios_complete_and_replay_bit_exactly() {
+    let d = 256;
+    let scn =
+        ScenarioSpec::parse("fleet:n=50000,alpha=0.1,churn=0.05,lat=lognorm,jitter=0.5").unwrap();
+    let cfg = fleet_cfg(Scheme::TopKUniform, 50_000, 64, 3);
+    let a = run(&cfg, &scn, d);
+    let b = run(&cfg, &scn, d);
+    assert_bitwise_eq(&a.sim.w, &b.sim.w, "churn replay");
+    for t in &a.sim.stats.rounds {
+        // no deadline configured: every live sampled participant reports
+        assert_eq!(t.received, 64, "round {}", t.round);
+        assert_eq!(t.dropped, 0, "round {}", t.round);
+    }
+    assert!(a.sim.stats.transport.wakeups > 0);
+    // α = 0.1 over 10 classes is strongly skewed: max-class share well
+    // above the 0.1 IID level
+    assert!(a.scenario.label_skew > 0.15, "skew = {}", a.scenario.label_skew);
+    assert!(a.scenario.per_bit.is_finite());
+    assert!(a.scenario.scenario.contains("alpha=0.1"));
+}
+
+/// The fleet feeds a sharded PS cluster through the same virtual
+/// transport: range mode stays bit-exact vs the single-server fleet, and
+/// churn is refused (per-PS schedulers sample internally).
+#[test]
+fn cluster_fleet_runs_with_per_ps_rollup() {
+    let d = 512;
+    let scn = ScenarioSpec::parse("fleet:n=40,churn=0,lat=fixed,jitter=0").unwrap();
+    let single = fleet_cfg(Scheme::TopKUniform, 40, 8, 3);
+    let mut clustered = single.clone();
+    clustered.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Range, sync_every: 1 });
+    let a = run(&single, &scn, d);
+    let b = run(&clustered, &scn, d);
+    let rollup = b.sim.cluster.as_ref().expect("cluster rollup");
+    assert_eq!(rollup.n_ps(), 2);
+    // range sharding is model-parallel over dimension slices: bit-exact
+    assert_bitwise_eq(&a.sim.w, &b.sim.w, "range cluster vs single PS");
+    // churn + cluster is a config error, not a silent wrong answer
+    let churny = ScenarioSpec::parse("fleet:n=40,churn=0.1,lat=fixed,jitter=0").unwrap();
+    let e = simulate_fleet(&clustered, &churny, d).unwrap_err();
+    assert!(format!("{e:#}").contains("churn is not supported"), "{e:#}");
+}
