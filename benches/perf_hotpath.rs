@@ -22,7 +22,8 @@ use m22::config::{ClusterConfig, ExperimentConfig, PsMode, ScenarioSpec, Scheme,
 use m22::fedserve::aggregate::{accumulate_sharded, aggregate_serial, aggregate_sharded};
 use m22::fedserve::sim::sim_spec;
 use m22::fedserve::{
-    simulate_fleet, simulate_with, wire, ChannelTransport, FedServer, TransportMode,
+    simulate_fleet, simulate_with, wire, AdaptiveController, ChannelTransport, FedServer,
+    LruTableCache, TransportMode,
 };
 use m22::quantizer::{design, Family, QuantizerTables};
 use m22::stats::fitting::Moments;
@@ -257,6 +258,34 @@ fn main() {
             let mb = macro_bench();
             log.push(mb.run(&format!("fleet event dispatch (n={n}, k=64)"), || {
                 simulate_fleet(&cfg, &scn, d).unwrap().sim.rounds
+            }));
+        }
+    }
+
+    // --- adaptive fit + re-design: the per-round controller cost ---------
+    //
+    // One full `observe` per iteration: strided residual sampling (capped
+    // at 64k draws, so the cost should be near-flat from 1e5 to 1e6),
+    // gennorm + Weibull moment fits, and the (family, m, rq) grid scan
+    // with every quantizer table served by the warm LRU cache. This is
+    // exactly what `--adaptive` adds to a PS round — the EXPERIMENTS.md
+    // adaptive table quotes these rows as the controller overhead.
+    println!("\n== adaptive fit+redesign (controller re-selection) ==");
+    {
+        for d in [100_000usize, 1_000_000] {
+            let cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 1);
+            let tables = Arc::new(LruTableCache::new(256));
+            let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+            let mut ctrl =
+                AdaptiveController::new(d, cfg.scheme_spec(d), &cfg.budget(d), codec, tables);
+            let w0 = vec![0.0f32; d];
+            let w1 = grad(d, 7);
+            ctrl.begin_round(&w0);
+            // warm the candidate-grid tables so steady-state rounds are timed
+            assert!(ctrl.observe(&w1), "fit never landed");
+            let b = Bencher::from_env().throughput(d as f64);
+            log.push(b.run(&format!("adaptive fit+redesign (d={d})"), || {
+                ctrl.observe(&w1) as usize
             }));
         }
     }

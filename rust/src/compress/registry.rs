@@ -67,6 +67,49 @@ impl Scheme {
             Scheme::None => "no quantization".into(),
         }
     }
+
+    /// Compact wire identity for `fedserve::wire` scheme frames:
+    /// `(tag, family, m, fp_bits)`. Fields a variant does not carry are
+    /// zero. Inverse of [`Scheme::from_wire`].
+    pub fn wire_tag(&self) -> (u8, u8, f64, u32) {
+        match *self {
+            Scheme::M22 { family, m } => (1, family_tag(family), m, 0),
+            Scheme::TinyScript => (2, 0, 0.0, 0),
+            Scheme::TopKUniform => (3, 0, 0.0, 0),
+            Scheme::TopKFp { bits } => (4, 0, 0.0, bits),
+            Scheme::CountSketch => (5, 0, 0.0, 0),
+            Scheme::None => (6, 0, 0.0, 0),
+        }
+    }
+
+    /// Rebuild a scheme from its wire identity; rejects unknown tags so a
+    /// corrupt-but-CRC-valid frame cannot materialize a nonsense scheme.
+    pub fn from_wire(tag: u8, family: u8, m: f64, bits: u32) -> Result<Scheme> {
+        Ok(match tag {
+            1 => Scheme::M22 { family: family_from_tag(family)?, m },
+            2 => Scheme::TinyScript,
+            3 => Scheme::TopKUniform,
+            4 => Scheme::TopKFp { bits },
+            5 => Scheme::CountSketch,
+            6 => Scheme::None,
+            t => bail!("unknown scheme tag {t}"),
+        })
+    }
+}
+
+fn family_tag(f: Family) -> u8 {
+    match f {
+        Family::GenNorm => 0,
+        Family::Weibull => 1,
+    }
+}
+
+fn family_from_tag(t: u8) -> Result<Family> {
+    match t {
+        0 => Ok(Family::GenNorm),
+        1 => Ok(Family::Weibull),
+        t => bail!("unknown family tag {t}"),
+    }
 }
 
 /// Every registered scheme at its paper operating point — the sweep axis

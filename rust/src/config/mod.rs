@@ -114,6 +114,12 @@ pub struct ServerConfig {
     /// `Some` with `n_ps = 1` runs the cluster code path of one PS, which
     /// is bit-exact against the single server (the parity anchor).
     pub cluster: Option<ClusterConfig>,
+    /// close the rate-adaptation loop at the PS (ROADMAP: online rate
+    /// adaptation): fit the decoded-residual distribution each round,
+    /// re-select the (family, m, rq) triple, and allocate per-client bit
+    /// budgets from measured link rates. Off by default — a fixed scheme
+    /// for the whole run, the original semantics.
+    pub adaptive: bool,
 }
 
 impl Default for ServerConfig {
@@ -126,6 +132,7 @@ impl Default for ServerConfig {
             prewarm: true,
             table_cache_path: None,
             cluster: None,
+            adaptive: false,
         }
     }
 }
@@ -266,6 +273,7 @@ impl ExperimentConfig {
                 "ps_mode",
                 Json::from(self.server.cluster.as_ref().map_or("single", |c| c.mode.label())),
             ),
+            ("adaptive", Json::from(self.server.adaptive)),
         ])
     }
 }
@@ -354,6 +362,7 @@ mod tests {
         assert!(s.table_cache_capacity > 0);
         assert!(s.prewarm); // startup cost, not a behavior change
         assert_eq!(s.cluster, None); // single PS unless asked
+        assert!(!s.adaptive); // fixed scheme unless asked
     }
 
     #[test]

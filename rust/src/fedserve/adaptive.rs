@@ -1,0 +1,445 @@
+//! Online rate adaptation at the PS — the closed loop the paper fits "as a
+//! function of the iteration number" (ROADMAP "Online rate adaptation").
+//!
+//! A fixed `SchemeSpec` resolves the gradient-distribution family, the
+//! distortion weight m, and the quantizer rate rq once, up front. The
+//! [`AdaptiveController`] closes the loop instead:
+//!
+//! 1. **Fit** — each round it samples the decoded mean update (the residual
+//!    the PS just applied to `w`) into [`Moments`] and fits both candidate
+//!    families via `stats::fitting` ([`fit_gennorm`], [`fit_weibull2`]).
+//! 2. **Select** — over the candidate grid (fitted GenNorm β, fitted
+//!    Weibull c) × m ∈ {0, 2, 4} × rq ∈ 1..=4 it scores every triple by the
+//!    expected M-weighted L2 loss under the round's bit budget: the energy
+//!    of the coordinates top-K drops plus the kept energy times the
+//!    quantizer's relative M-weighted distortion
+//!    ([`expected_distortion_weighted`] against the standardized fit,
+//!    normalized by `E[|x|^M x²]`). Tables resolve through the shared
+//!    prewarmed [`TableSource`] (the LRU cache), so a mid-run re-design is
+//!    a lookup, not an LBG descent.
+//! 3. **Allocate** — per-client bit budgets come from measured link rates:
+//!    the lognormal link draws of the fleet transport
+//!    ([`super::fleet`]) or the socket-measured per-client byte counters on
+//!    TCP ([`caps_from_measured`]). [`AdaptiveController::cohort`] lowers
+//!    each capped client's sparsity K to fit its link, keeping (family, m,
+//!    rq) uniform across the cohort — the M22 and top-K decoders read K
+//!    from the payload header, so one PS decoder serves every cohort
+//!    member.
+//!
+//! The driver (`sim::drive_rounds`, `fleet::simulate_fleet`) broadcasts the
+//! re-designed spec as [`super::wire::Message::Scheme`] frames before the
+//! round downlink and swaps the PS decoder via [`FedServer::set_decoder`];
+//! the (family, m, rq, spread) trajectory of every round lands in the stats
+//! CSV ([`crate::metrics::server::RoundTiming`]).
+//!
+//! [`FedServer::set_decoder`]: super::server::FedServer::set_decoder
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::compress::registry::{build_decoder, Scheme, SchemeSpec};
+use crate::compress::{BlockCodec, Budget, Decoder};
+use crate::metrics::server::TransportStats;
+use crate::quantizer::{expected_distortion_weighted, Family, TableSource};
+use crate::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
+use crate::stats::{Distribution, GenNorm, Weibull2};
+
+/// Upper bound on the residual sample the per-round fit reads (strided
+/// deterministically over the model) — keeps fit+re-design cost flat in d.
+pub const SAMPLE_CAP: usize = 65_536;
+
+/// Candidate distortion weights (the paper's m grid: unweighted, the
+/// magnitude-weighted default, and the strongly-weighted tail).
+const M_GRID: [f64; 3] = [0.0, 2.0, 4.0];
+
+/// No client budget drops below this many bits — a link too slow to carry
+/// even a header-sized update still participates at K = 1-ish.
+const MIN_CLIENT_BITS: f64 = 64.0;
+
+/// Solve K for a bit budget at quantizer rate `rq`: each survivor costs
+/// `rq` value bits plus ~`log2(d/K) + 1.5` positional bits (the γ-gap /
+/// `log2 C(d, K) / K` entropy at small K). The fixed point converges in a
+/// few iterations because the positional term varies slowly in K.
+pub fn k_for_bits(d: usize, bits: f64, rq: u32) -> usize {
+    let df = d as f64;
+    let mut k = (bits / (rq as f64 + 2.0)).max(1.0);
+    for _ in 0..3 {
+        let per = rq as f64 + ((df / k).log2() + 1.5).max(0.0);
+        k = (bits / per).max(1.0);
+    }
+    (k.round() as usize).clamp(1, d)
+}
+
+/// Per-participant bit caps from a transport's measured per-client byte
+/// counters (socket truth on TCP, the mpsc ledger on channels): a client's
+/// budget scales the base by its uplink-byte share of the fastest observed
+/// peer. A zero counter (no traffic yet, or no per-client attribution)
+/// means uncapped — `0.0` is the "no cap" sentinel [`Cohort`] understands.
+pub fn caps_from_measured(
+    tstats: &TransportStats,
+    participants: &[usize],
+    base_bits: f64,
+) -> Vec<f64> {
+    let max_up = participants
+        .iter()
+        .filter_map(|&c| tstats.per_client.get(c))
+        .map(|&(b_in, _)| b_in)
+        .max()
+        .unwrap_or(0);
+    participants
+        .iter()
+        .map(|&c| {
+            let up = tstats.per_client.get(c).map(|&(b_in, _)| b_in).unwrap_or(0);
+            if max_up == 0 || up == 0 {
+                0.0
+            } else {
+                base_bits * up as f64 / max_up as f64
+            }
+        })
+        .collect()
+}
+
+/// One round's per-client allocation: the cohort's downlink specs (equal in
+/// (family, m, rq), lowered in K per link cap) and the max/min K spread.
+#[derive(Debug, Clone)]
+pub struct Cohort {
+    pub specs: Vec<SchemeSpec>,
+    /// `max K / min K` across the cohort (1.0 = uniform budgets)
+    pub spread: f64,
+}
+
+/// The closed-loop controller: fit → select → allocate, once per round.
+pub struct AdaptiveController {
+    d: usize,
+    base: SchemeSpec,
+    /// full per-client bit budget of the base operating point (value bits
+    /// plus the ideal positional entropy at K_ref)
+    base_bits: f64,
+    /// the fixed distortion-evaluation weight M every candidate is scored
+    /// under (the base M22 spec's m, or 2.0 for non-M22 bases)
+    eval_m: f64,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<dyn TableSource>,
+    /// model snapshot at round start — `observe` reads the applied residual
+    prev_w: Vec<f32>,
+    /// the currently selected uniform spec (the cohort K ceiling)
+    spec: SchemeSpec,
+    /// fitted shape parameter backing `spec` (0 until the first fit lands)
+    shape: f64,
+    adapted: bool,
+}
+
+impl AdaptiveController {
+    /// `base` must be a resolved spec (`SchemeSpec::resolve`d against
+    /// `budget`); until the first fit the controller serves it unchanged.
+    pub fn new(
+        d: usize,
+        base: SchemeSpec,
+        budget: &Budget,
+        codec: Arc<dyn BlockCodec>,
+        tables: Arc<dyn TableSource>,
+    ) -> AdaptiveController {
+        let base_bits = budget.budget_bits as f64 + budget.position_bits(budget.k_ref);
+        let eval_m = match base.scheme {
+            Scheme::M22 { m, .. } => m,
+            _ => 2.0,
+        };
+        AdaptiveController {
+            d,
+            base,
+            base_bits,
+            eval_m,
+            codec,
+            tables,
+            prev_w: Vec::new(),
+            spec: base,
+            shape: 0.0,
+            adapted: false,
+        }
+    }
+
+    /// Whether a fit has landed yet (the spec may differ from the base).
+    pub fn adapted(&self) -> bool {
+        self.adapted
+    }
+
+    /// The currently selected uniform spec.
+    pub fn spec(&self) -> SchemeSpec {
+        self.spec
+    }
+
+    /// The uncapped per-client bit budget (the base operating point).
+    pub fn base_bits(&self) -> f64 {
+        self.base_bits
+    }
+
+    /// The (family label, m, rq) trace of the spec serving the next round —
+    /// `"-"` family while the base (non-M22) spec is still in force.
+    pub fn trace(&self) -> (&'static str, f64, u32) {
+        match self.spec.scheme {
+            Scheme::M22 { family, m } => (family.label(), m, self.spec.rq),
+            _ => ("-", 0.0, self.spec.rq),
+        }
+    }
+
+    /// A PS decoder for the current spec (tables resolve via the shared
+    /// cache, so the swap costs a lookup).
+    pub fn build_decoder(&self) -> Result<Box<dyn Decoder>> {
+        build_decoder(&self.spec, self.codec.clone(), self.tables.clone())
+    }
+
+    /// Snapshot the model at round start; `observe` diffs against it.
+    pub fn begin_round(&mut self, w: &[f32]) {
+        self.prev_w.clear();
+        self.prev_w.extend_from_slice(w);
+    }
+
+    /// Feed the post-round model: the applied residual `w - w_prev` is the
+    /// decoded mean update — exactly the signal the next round's quantizer
+    /// should be designed for. Returns whether a (re)design landed.
+    pub fn observe(&mut self, w: &[f32]) -> bool {
+        if self.prev_w.len() != w.len() {
+            return false;
+        }
+        let stride = (self.d / SAMPLE_CAP).max(1);
+        let mut sample = Vec::with_capacity(w.len().div_ceil(stride));
+        let mut i = 0usize;
+        while i < w.len() {
+            sample.push(w[i] - self.prev_w[i]);
+            i += stride;
+        }
+        self.fit_redesign(&sample)
+    }
+
+    /// The fit + re-design step on an explicit residual sample (the
+    /// bench-facing entry: `observe` delegates here). Degenerate samples
+    /// (fewer than two nonzeros, zero energy, non-finite sums) leave the
+    /// current spec untouched and return `false`.
+    pub fn fit_redesign(&mut self, residual: &[f32]) -> bool {
+        let Ok(moments) = Moments::from_nonzeros(residual) else {
+            return false;
+        };
+        // descending |residual| prefix energies: the kept/tail split of a
+        // top-K candidate is a prefix-sum lookup
+        let mut abs: Vec<f64> =
+            residual.iter().map(|&x| (x as f64).abs()).filter(|a| *a > 0.0).collect();
+        abs.sort_by(|a, b| b.partial_cmp(a).expect("finite by from_nonzeros"));
+        let n = abs.len();
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0.0f64);
+        for a in &abs {
+            prefix.push(prefix.last().unwrap() + a * a);
+        }
+        let total = *prefix.last().unwrap();
+        if !(total > 0.0) || !total.is_finite() {
+            return false;
+        }
+        let gn = fit_gennorm(&moments);
+        let wb = fit_weibull2(&moments);
+        let mut best: Option<(f64, Family, f64, f64, u32, usize)> = None;
+        for (family, shape) in [(Family::GenNorm, gn.beta), (Family::Weibull, wb.c)] {
+            let dist: Box<dyn Distribution> = match family {
+                Family::GenNorm => Box::new(GenNorm::standardized(shape)),
+                Family::Weibull => Box::new(Weibull2::standardized(shape)),
+            };
+            // E[|x|^M x²] — the M-weighted energy the quantizer loss is a
+            // fraction of; scoring stays scale-free
+            let norm = dist.abs_moment(self.eval_m + 2.0);
+            if !(norm > 0.0) || !norm.is_finite() {
+                continue;
+            }
+            for m in M_GRID {
+                for rq in 1..=4u32 {
+                    let k = k_for_bits(self.d, self.base_bits, rq);
+                    let kept =
+                        ((n as f64 * k as f64 / self.d as f64).round() as usize).clamp(1, n);
+                    let kept_energy = prefix[kept];
+                    let tail_energy = total - kept_energy;
+                    let q = self.tables.get(family, shape, m, 1usize << rq);
+                    let dq_rel = expected_distortion_weighted(&*dist, &q, self.eval_m) / norm;
+                    if !dq_rel.is_finite() {
+                        continue;
+                    }
+                    let score = tail_energy + kept_energy * dq_rel;
+                    // strict < keeps the first candidate on ties: the scan
+                    // order is fixed, so selection replays bit-exactly
+                    let better = match best {
+                        None => true,
+                        Some((s, ..)) => score < s,
+                    };
+                    if better {
+                        best = Some((score, family, shape, m, rq, k));
+                    }
+                }
+            }
+        }
+        let Some((_, family, shape, m, rq, k)) = best else {
+            return false;
+        };
+        self.shape = shape;
+        self.spec = SchemeSpec {
+            scheme: Scheme::M22 { family, m },
+            rq,
+            k,
+            min_fit: self.base.min_fit,
+            sketch_depth: self.base.sketch_depth,
+            seed: self.base.seed,
+        };
+        self.adapted = true;
+        true
+    }
+
+    /// Allocate the cohort: one spec per participant, K lowered to fit its
+    /// link cap (`caps_bits[i]` in bits; `<= 0` or non-finite = uncapped).
+    /// Only K varies — (family, m, rq) stay uniform so the PS decoder and
+    /// the quantizer tables are shared by the whole cohort.
+    pub fn cohort(&self, caps_bits: &[f64]) -> Cohort {
+        let mut specs = Vec::with_capacity(caps_bits.len());
+        let (mut k_min, mut k_max) = (usize::MAX, 0usize);
+        for &cap in caps_bits {
+            let bits = if cap.is_finite() && cap > 0.0 {
+                cap.min(self.base_bits).max(MIN_CLIENT_BITS)
+            } else {
+                self.base_bits
+            };
+            let k = k_for_bits(self.d, bits, self.spec.rq).min(self.spec.k).max(1);
+            k_min = k_min.min(k);
+            k_max = k_max.max(k);
+            let mut s = self.spec;
+            s.k = k;
+            specs.push(s);
+        }
+        let spread =
+            if k_min == usize::MAX || k_min == 0 { 1.0 } else { k_max as f64 / k_min as f64 };
+        Cohort { specs, spread }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fedserve::table_cache::LruTableCache;
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed).stream(1, 1);
+        (0..n).map(|_| (r.normal() * 0.01) as f32).collect()
+    }
+
+    fn controller(d: usize) -> AdaptiveController {
+        let budget = Budget::paper_point(d, 2);
+        let base = SchemeSpec::new(Scheme::TopKUniform, 0, 0).resolve(&budget, 33);
+        let codec: Arc<dyn BlockCodec> = Arc::new(crate::compress::CpuCodec);
+        let tables: Arc<dyn TableSource> = Arc::new(LruTableCache::new(128));
+        AdaptiveController::new(d, base, &budget, codec, tables)
+    }
+
+    #[test]
+    fn k_for_bits_is_monotone_and_clamped() {
+        let d = 4096;
+        let mut prev = 0usize;
+        for bits in [10.0, 100.0, 1000.0, 10_000.0, 100_000.0] {
+            let k = k_for_bits(d, bits, 2);
+            assert!(k >= prev, "bits {bits}: k {k} < {prev}");
+            assert!((1..=d).contains(&k));
+            prev = k;
+        }
+        // a higher rate buys fewer survivors at the same budget
+        assert!(k_for_bits(d, 1000.0, 4) < k_for_bits(d, 1000.0, 1));
+        // degenerate budgets stay in range
+        assert_eq!(k_for_bits(d, 0.0, 2), 1);
+        assert_eq!(k_for_bits(8, 1e12, 2), 8);
+    }
+
+    #[test]
+    fn fit_redesign_selects_an_m22_scheme_deterministically() {
+        let d = 4096;
+        let mut a = controller(d);
+        let mut b = controller(d);
+        let residual = gaussian(d, 9);
+        assert!(!a.adapted());
+        assert!(a.fit_redesign(&residual));
+        assert!(b.fit_redesign(&residual));
+        assert!(a.adapted());
+        assert_eq!(a.spec(), b.spec(), "same residual, same selection");
+        let spec = a.spec();
+        assert!(matches!(spec.scheme, Scheme::M22 { .. }));
+        assert!((1..=4).contains(&spec.rq));
+        assert!(spec.k >= 1 && spec.k <= d);
+        let (family, m, rq) = a.trace();
+        assert!(family == "G" || family == "W");
+        assert!(M_GRID.contains(&m));
+        assert_eq!(rq, spec.rq);
+        // the selected decoder builds against the shared cache
+        assert!(a.build_decoder().is_ok());
+    }
+
+    #[test]
+    fn degenerate_residuals_leave_the_spec_alone() {
+        let mut c = controller(1024);
+        let base = c.spec();
+        assert!(!c.fit_redesign(&[]), "empty");
+        assert!(!c.fit_redesign(&[0.0; 512]), "all zero");
+        assert!(!c.fit_redesign(&[0.25]), "single nonzero");
+        assert!(!c.adapted());
+        assert_eq!(c.spec(), base);
+        // observe with a mismatched snapshot is a no-op too
+        assert!(!c.observe(&vec![0.0f32; 1024]));
+    }
+
+    #[test]
+    fn observe_diffs_the_snapshot() {
+        let d = 2048;
+        let mut c = controller(d);
+        let w0 = vec![0.0f32; d];
+        c.begin_round(&w0);
+        let w1 = gaussian(d, 4);
+        assert!(c.observe(&w1));
+        assert!(c.adapted());
+    }
+
+    #[test]
+    fn cohort_lowers_k_per_cap_and_reports_spread() {
+        let d = 4096;
+        let mut c = controller(d);
+        assert!(c.fit_redesign(&gaussian(d, 11)));
+        let k_full = c.spec().k;
+
+        // uncapped everywhere: uniform at the selected K
+        let uniform = c.cohort(&[0.0, f64::INFINITY, -1.0]);
+        assert_eq!(uniform.spread, 1.0);
+        assert!(uniform.specs.iter().all(|s| s.k == k_full));
+
+        // heterogeneous caps: K varies, never exceeds the ceiling, and a
+        // sub-minimum cap still yields a valid K >= 1
+        let caps = [0.0, 500.0, 2.0];
+        let cohort = c.cohort(&caps);
+        assert_eq!(cohort.specs[0].k, k_full);
+        assert!(cohort.specs[1].k < k_full, "{:?}", cohort.specs[1]);
+        assert!(cohort.specs[2].k >= 1);
+        assert!(cohort.specs[2].k <= cohort.specs[1].k);
+        assert!(cohort.spread > 1.0);
+        // (family, m, rq) stay uniform across the cohort
+        for s in &cohort.specs {
+            assert_eq!(s.scheme, c.spec().scheme);
+            assert_eq!(s.rq, c.spec().rq);
+        }
+        // deterministic replay
+        let again = c.cohort(&caps);
+        assert_eq!(again.specs, cohort.specs);
+        assert_eq!(again.spread, cohort.spread);
+    }
+
+    #[test]
+    fn measured_caps_scale_with_uplink_share() {
+        let mut t = TransportStats::default();
+        // nothing measured yet: everyone uncapped
+        assert_eq!(caps_from_measured(&t, &[0, 1], 1000.0), vec![0.0, 0.0]);
+        t.per_client = vec![(400, 0), (100, 0), (0, 0)];
+        let caps = caps_from_measured(&t, &[0, 1, 2], 1000.0);
+        assert_eq!(caps[0], 1000.0);
+        assert_eq!(caps[1], 250.0);
+        assert_eq!(caps[2], 0.0, "no traffic yet: uncapped");
+    }
+}

@@ -165,6 +165,47 @@ impl PsCluster {
         self.servers.len()
     }
 
+    /// Swap every member PS's decoder (the adaptive controller re-resolves
+    /// the scheme mid-run; every PS must decode next round's payloads with
+    /// the same tables — a cluster round is uniform in (family, m, rq)).
+    pub fn set_decoders(&mut self, decoders: Vec<Box<dyn Decoder>>) -> Result<()> {
+        ensure!(
+            decoders.len() == self.servers.len(),
+            "{} decoders for {} PS instances",
+            decoders.len(),
+            self.servers.len()
+        );
+        for (server, dec) in self.servers.iter_mut().zip(decoders) {
+            server.set_decoder(dec);
+        }
+        Ok(())
+    }
+
+    /// Annotate the most recent cluster-level round timing with the
+    /// adaptive trajectory (mirrors [`FedServer::annotate_adaptive`]).
+    pub fn annotate_adaptive(&mut self, family: &'static str, m: f64, rq: u32, spread: f64) {
+        if let Some(t) = self.stats.rounds.last_mut() {
+            t.ad_family = family;
+            t.ad_m = m;
+            t.ad_rq = rq;
+            t.ad_spread = spread;
+        }
+    }
+
+    /// Replica-mode eq.-(7) barrier cadence (0 = end of run only). The
+    /// adaptive controller re-fits only at these barriers, so every
+    /// replica's decoder stays in lockstep with the synced model.
+    pub fn sync_every(&self) -> usize {
+        self.sync_every
+    }
+
+    /// Whether `round` ends on the replica sync barrier (always true in
+    /// range mode, where every round is globally consistent).
+    pub fn at_sync_barrier(&self, round: usize) -> bool {
+        self.mode != PsMode::Replica
+            || (self.sync_every > 0 && (round + 1) % self.sync_every == 0)
+    }
+
     /// Serve one cluster round over the shared transport: per-mode
     /// broadcast, ONE collect pass for every PS's participants, per-PS
     /// parallel reduce, and (replica mode) the periodic eq.-(7) sync.
@@ -275,6 +316,7 @@ impl PsCluster {
                 decode_errors: col.decode_errors,
                 framed_bytes: 0,
                 aborted: false,
+                ..RoundTiming::default()
             });
         }
         self.stats.push(RoundTiming {
@@ -287,6 +329,7 @@ impl PsCluster {
             decode_errors: col.decode_errors,
             framed_bytes: col.framed_bytes,
             aborted: false,
+            ..RoundTiming::default()
         });
         Ok(summary(round, received, dropped, &col, train_loss, bits))
     }
@@ -394,6 +437,7 @@ impl PsCluster {
                 decode_errors: 0,
                 framed_bytes: 0,
                 aborted: false,
+                ..RoundTiming::default()
             });
         }
         // `w` is ALWAYS the eq.-(7) average across replicas after a round
@@ -416,6 +460,7 @@ impl PsCluster {
             decode_errors: col.decode_errors,
             framed_bytes: col.framed_bytes,
             aborted: false,
+            ..RoundTiming::default()
         });
         Ok(summary(round, received, dropped, &col, train_loss, bits))
     }
@@ -466,6 +511,7 @@ impl PsCluster {
             decode_errors: col.decode_errors,
             framed_bytes: col.framed_bytes,
             aborted: true,
+            ..RoundTiming::default()
         });
         for server in &mut self.servers {
             server.stats.push(RoundTiming {

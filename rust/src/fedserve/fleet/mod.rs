@@ -21,16 +21,20 @@ mod transport;
 
 pub use transport::FleetTransport;
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::config::{ExperimentConfig, ScenarioSpec};
 use crate::data::partition::client_class_weights;
-use crate::metrics::perbit::metric_per_bit;
+use crate::metrics::perbit::metric_per_total_bits;
 use crate::metrics::scenario::ScenarioSummary;
+use crate::metrics::server::RoundTiming;
 use crate::util::rng::Rng;
 
 use super::sim::{self, SimReport};
 use super::transport::Transport;
+use super::wire;
 
 /// Stream domain for the per-client churn renewal process.
 const CHURN_DOMAIN: u64 = 0x46c3_38;
@@ -105,10 +109,20 @@ pub fn simulate_fleet(
     }
     let k = cfg.participants_per_round();
     let sim::SimServer { spec, tables, codec, mut server } = sim::build_server(&cfg, d)?;
-    let mut transport = FleetTransport::new(&cfg, scn, fleet_seed, d, &spec, codec, tables.clone());
+    let mut transport =
+        FleetTransport::new(&cfg, scn, fleet_seed, d, &spec, codec.clone(), tables.clone());
+    let mut ctrl = sim::build_controller(&cfg, d, &codec, &tables);
+    // the virtual window the per-client allocator budgets uplinks against:
+    // the straggler deadline when one is configured, else a few RTTs
+    let window_ms = if cfg.server.straggler_timeout_ms > 0 {
+        cfg.server.straggler_timeout_ms as f64
+    } else {
+        scn.lat_ms.max(1.0) * 4.0
+    };
     let churn = transport.churn();
     let mut w = vec![0.0f32; d];
     let mut bits = 0.0f64;
+    let mut per_round_bits = Vec::with_capacity(cfg.rounds);
     let (mut received, mut dropped) = (0usize, 0usize);
     for round in 0..cfg.rounds {
         let participants = server.select_live(k, |id| churn.is_live(id, round));
@@ -116,6 +130,22 @@ pub fn simulate_fleet(
             !participants.is_empty(),
             "fleet round {round}: every sampled client had churned out"
         );
+        let mut spread = 1.0f64;
+        if let Some(c) = ctrl.as_mut() {
+            c.begin_round(&w);
+            if c.adapted() {
+                // measured links: each participant's cap is its drawn
+                // link's bit capacity inside the round window
+                let caps: Vec<f64> =
+                    participants.iter().map(|&p| transport.cap_bits(p, window_ms)).collect();
+                let cohort = c.cohort(&caps);
+                for (s, &client) in cohort.specs.iter().zip(&participants) {
+                    transport.send(client, &Arc::new(wire::encode_scheme(s)))?;
+                }
+                server.set_decoder(c.build_decoder()?);
+                spread = cohort.spread;
+            }
+        }
         let summary = server.run_round(round, &participants, &mut transport, &spec, &mut w)?;
         ensure!(
             summary.received > 0,
@@ -124,13 +154,20 @@ pub fn simulate_fleet(
             cfg.server.straggler_timeout_ms
         );
         bits = summary.bits_per_client;
+        per_round_bits.push(summary.bits_per_client);
         received += summary.received;
         dropped += summary.dropped;
+        if let Some(c) = ctrl.as_mut() {
+            let (family, m, rq) = c.trace();
+            server.annotate_adaptive(family, m, rq, spread);
+            c.observe(&w);
+        }
     }
     transport.close()?;
     let tstats = transport.stats();
     let report = sim::finish_report(&cfg, d, w, bits, server, &tables, tstats);
-    let scenario = scenario_summary(&cfg, scn, fleet_seed, &report, received, dropped);
+    let scenario =
+        scenario_summary(&cfg, scn, fleet_seed, &report, received, dropped, &per_round_bits);
     Ok(FleetReport { sim: report, scenario })
 }
 
@@ -150,11 +187,17 @@ fn simulate_fleet_cluster(
         scn.churn == 0.0,
         "fleet: churn is not supported with a PS cluster (per-PS schedulers sample internally)"
     );
+    ensure!(
+        !cfg.server.adaptive,
+        "fleet: --adaptive is not supported with a PS cluster (per-PS schedulers sample \
+         internally, so there is no pre-round hook to address the sampled cohort)"
+    );
     let k = cfg.participants_per_round();
     let sim::SimCluster { spec, tables, codec, mut cluster } = sim::build_cluster(cfg, d)?;
     let mut transport = FleetTransport::new(cfg, scn, fleet_seed, d, &spec, codec, tables.clone());
     let mut w = vec![0.0f32; d];
     let mut bits = 0.0f64;
+    let mut per_round_bits = Vec::with_capacity(cfg.rounds);
     let (mut received, mut dropped) = (0usize, 0usize);
     for round in 0..cfg.rounds {
         let summary = cluster.run_round(round, k, &mut transport, &spec, &mut w)?;
@@ -164,6 +207,7 @@ fn simulate_fleet_cluster(
             cfg.server.straggler_timeout_ms
         );
         bits = summary.bits_per_client;
+        per_round_bits.push(summary.bits_per_client);
         received += summary.received;
         dropped += summary.dropped;
     }
@@ -171,13 +215,31 @@ fn simulate_fleet_cluster(
     transport.close()?;
     let tstats = transport.stats();
     let report = sim::finish_cluster_report(cfg, d, w, bits, cluster, &tables, tstats);
-    let scenario = scenario_summary(cfg, scn, fleet_seed, &report, received, dropped);
+    let scenario =
+        scenario_summary(cfg, scn, fleet_seed, &report, received, dropped, &per_round_bits);
     Ok(FleetReport { sim: report, scenario })
+}
+
+/// Distinct (family, m, rq) operating points over the round trajectory —
+/// 1 for any fixed-scheme run, > 1 once the adaptive controller has
+/// re-designed mid-run.
+fn distinct_schemes(rounds: &[RoundTiming]) -> usize {
+    let mut seen: Vec<(&str, u64, u32)> = Vec::new();
+    for t in rounds {
+        let key = (t.ad_family, t.ad_m.to_bits(), t.ad_rq);
+        if !seen.contains(&key) {
+            seen.push(key);
+        }
+    }
+    seen.len().max(1)
 }
 
 /// Build the scenario summary row. Label skew is the mean max-class share
 /// over a bounded probe of clients (exactly `1/classes` for IID data);
 /// probing instead of enumerating keeps a million-client summary O(1).
+/// `per_round_bits` is the real per-round spend trajectory: for fixed
+/// schemes it is flat and the per-bit reading reduces to bits × T, for
+/// adaptive runs it normalizes by the actual total.
 fn scenario_summary(
     cfg: &ExperimentConfig,
     scn: &ScenarioSpec,
@@ -185,6 +247,7 @@ fn scenario_summary(
     sim: &SimReport,
     received: usize,
     dropped: usize,
+    per_round_bits: &[f64],
 ) -> ScenarioSummary {
     let label_skew = match scn.alpha {
         Some(a) => {
@@ -206,10 +269,11 @@ fn scenario_summary(
         rounds: cfg.rounds,
         bits_per_round: sim.bits_per_round,
         final_metric: sim.w_norm(),
-        per_bit: metric_per_bit(sim.w_norm(), sim.bits_per_round, cfg.rounds),
+        per_bit: metric_per_total_bits(sim.w_norm(), per_round_bits),
         label_skew,
         received,
         dropped,
+        schemes: distinct_schemes(&sim.stats.rounds),
     }
 }
 

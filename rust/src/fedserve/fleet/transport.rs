@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::compress::BlockCodec;
+use crate::compress::{registry, BlockCodec};
 use crate::config::{ExperimentConfig, LatencyModel, ScenarioSpec};
 use crate::coordinator::memory::Memory;
 use crate::coordinator::messages::Uplink;
@@ -173,6 +173,21 @@ impl FleetTransport {
         ((lat_ms.max(0.0) * 1e6) as u64, ns_per_byte)
     }
 
+    /// The link's bit capacity inside `window_ms` of virtual time — what
+    /// the adaptive allocator budgets a client's uplink against: the
+    /// window minus the one-way latency, serialized at the drawn
+    /// bandwidth. Infinite-bandwidth links (`bw = 0`) return `0.0`, the
+    /// "no cap" sentinel the cohort allocator understands; a window the
+    /// latency already exceeds floors at one bit (the client participates,
+    /// its K just bottoms out).
+    pub fn cap_bits(&self, client: usize, window_ms: f64) -> f64 {
+        let (lat_ns, ns_per_byte) = self.link_of(client);
+        if ns_per_byte <= 0.0 {
+            return 0.0;
+        }
+        ((window_ms * 1e6 - lat_ns as f64) / ns_per_byte * 8.0).max(1.0)
+    }
+
     /// Materialize `client` as a virtual connection on first contact. The
     /// session is built exactly like `sim::build_sessions` builds one —
     /// same encoder factory, same memory gate — so a fleet client is
@@ -249,6 +264,15 @@ impl Transport for FleetTransport {
         let round = match &msg {
             wire::Message::Round { round, .. } | wire::Message::RoundSlice { round, .. } => *round,
             wire::Message::Shutdown => return Ok(()),
+            wire::Message::Scheme { spec } => {
+                // adaptive re-design: swap this client's encoder exactly
+                // like sim_client_loop does on the channel path
+                self.materialize(client)?;
+                let enc = registry::build_encoder(spec, self.codec.clone(), self.tables.clone())
+                    .context("fleet: building adaptive encoder")?;
+                self.clients.get_mut(&client).expect("just materialized").session.encoder = enc;
+                return Ok(());
+            }
             other => bail!("fleet: unexpected downlink frame: {other:?}"),
         };
         if self.cur_round != Some(round) {
@@ -444,6 +468,39 @@ mod tests {
         // bandwidth draws engage when bw is finite
         let tb = fixture("fleet:n=8,lat=fixed,jitter=0,bw=8", 8);
         assert_eq!(tb.link_of(0).1, 1000.0); // 8 Mbit/s = 1000 ns/byte
+    }
+
+    #[test]
+    fn cap_bits_budgets_the_window_minus_latency() {
+        // 8 Mbit/s = 1000 ns/byte, 10 ms one-way: a 20 ms window leaves
+        // 10 ms of serialization = 10k bytes = 80k bits
+        let t = fixture("fleet:n=4,lat=fixed,jitter=0,lat_ms=10,bw=8", 4);
+        assert_eq!(t.cap_bits(0, 20.0), 80_000.0);
+        // a window the latency swallows floors at one bit, not zero
+        assert_eq!(t.cap_bits(0, 5.0), 1.0);
+        // infinite bandwidth is the no-cap sentinel
+        let t0 = fixture("fleet:n=4,lat=fixed,jitter=0,lat_ms=10", 4);
+        assert_eq!(t0.cap_bits(0, 20.0), 0.0);
+    }
+
+    #[test]
+    fn scheme_frames_swap_the_virtual_encoder() {
+        let mut t = fixture("fleet:n=4,lat=fixed,jitter=0", 4);
+        let spec = crate::compress::registry::SchemeSpec::new(
+            Scheme::M22 { family: crate::quantizer::Family::GenNorm, m: 2.0 },
+            2,
+            8,
+        );
+        let frame = Arc::new(wire::encode_scheme(&spec));
+        t.send(0, &frame).unwrap();
+        // the swap materializes the client but schedules no uplink
+        assert_eq!(t.live_connections(), 1);
+        assert!(t.poll(Some(Duration::ZERO)).unwrap().is_none());
+        // the next round's reply is encoded under the announced spec
+        let round = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        t.send(0, &round).unwrap();
+        let ev = t.poll(None).unwrap().unwrap();
+        assert!(matches!(ev, Event::Frame { .. }));
     }
 
     #[test]

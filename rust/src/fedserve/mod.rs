@@ -46,6 +46,12 @@
 //!   participants per round materialize, straggler deadlines live on the
 //!   virtual clock, and zero-jitter IID scenarios are bit-exact against
 //!   the channel sim (the `repro fleet` subcommand);
+//! * [`adaptive`] — the closed rate-adaptation loop at the PS: per-round
+//!   gennorm/Weibull re-fits of the decoded residual, (family, m, rq)
+//!   re-selection by expected M-weighted distortion under the bit budget,
+//!   and per-client K allocation from measured link rates, announced to
+//!   the cohort as [`wire::Message::Scheme`] frames (`--adaptive` on both
+//!   `repro serve` and `repro fleet`);
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
 //!   `repro serve` subcommand), over channels, a TCP loopback in one
 //!   process (`--tcp-loopback`), or split server/client processes
@@ -54,6 +60,7 @@
 //! `coordinator::driver::run_experiment` is now a thin client of this
 //! module: it contributes only training, evaluation, and row recording.
 
+pub mod adaptive;
 pub mod aggregate;
 pub mod cluster;
 pub mod fleet;
@@ -65,6 +72,7 @@ pub mod table_cache;
 pub mod transport;
 pub mod wire;
 
+pub use adaptive::AdaptiveController;
 pub use aggregate::{
     accumulate_range, accumulate_serial, accumulate_sharded, aggregate_serial, aggregate_sharded,
 };

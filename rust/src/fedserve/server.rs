@@ -439,6 +439,7 @@ impl FedServer {
                 decode_errors: col.decode_errors,
                 framed_bytes: col.framed_bytes,
                 aborted: true,
+                ..RoundTiming::default()
             });
             return Err(e);
         }
@@ -472,6 +473,7 @@ impl FedServer {
                         decode_errors: col.decode_errors,
                         framed_bytes: col.framed_bytes,
                         aborted: true,
+                        ..RoundTiming::default()
                     });
                     return Err(e);
                 }
@@ -490,6 +492,7 @@ impl FedServer {
             decode_errors: col.decode_errors,
             framed_bytes: col.framed_bytes,
             aborted: false,
+            ..RoundTiming::default()
         });
         Ok(RoundSummary {
             round,
@@ -533,6 +536,25 @@ impl FedServer {
         Ok(t1.elapsed().as_nanos() as u64)
     }
 
+    /// Swap the round decoder. The adaptive controller re-resolves the
+    /// compression scheme mid-run; the next `run_round` decodes uplinks
+    /// with the new tables. (k stays a payload-header field, so a cohort
+    /// of per-client k values decodes through this one decoder.)
+    pub fn set_decoder(&mut self, decoder: Box<dyn Decoder>) {
+        self.decoder = decoder;
+    }
+
+    /// Annotate the most recent round's timing with the adaptive
+    /// controller's trajectory: the (family, m, rq) triple in production
+    /// and the per-client budget spread (max k / min k over the cohort).
+    pub fn annotate_adaptive(&mut self, family: &'static str, m: f64, rq: u32, spread: f64) {
+        if let Some(t) = self.stats.rounds.last_mut() {
+            t.ad_family = family;
+            t.ad_m = m;
+            t.ad_rq = rq;
+            t.ad_spread = spread;
+        }
+    }
 }
 
 #[cfg(test)]

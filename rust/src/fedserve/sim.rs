@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::compress::{BlockCodec, CpuCodec};
+use crate::compress::{registry, BlockCodec, CpuCodec};
 use crate::config::ExperimentConfig;
 use crate::coordinator::memory::Memory;
 use crate::coordinator::messages::Uplink;
@@ -25,6 +25,7 @@ use crate::metrics::server::{ClusterStats, ServerStats, TransportStats};
 use crate::train::{ModelSpec, TensorInfo, TensorKind};
 use crate::util::rng::Rng;
 
+use super::adaptive::{caps_from_measured, AdaptiveController};
 use super::cluster::PsCluster;
 use super::server::FedServer;
 use super::session::{ClientSession, RoundAssembler};
@@ -119,13 +120,16 @@ impl SimReport {
 /// Client endpoint body shared by every transport (loopback threads and
 /// the `repro serve --connect` process): serve framed rounds with
 /// deterministic synthetic updates until shutdown, a protocol violation,
-/// or the server going away.
+/// or the server going away. `codec`/`tables` rebuild the session encoder
+/// when an adaptive PS announces a re-designed scheme mid-run.
 pub fn sim_client_loop<T: ClientTransport>(
     transport: &mut T,
     session: &mut ClientSession,
     seed: u64,
     d: usize,
     spec: &ModelSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<LruTableCache>,
 ) {
     // a range-mode cluster broadcasts per-PS model slices; the assembler
     // also passes plain full-round frames straight through
@@ -138,6 +142,16 @@ pub fn sim_client_loop<T: ClientTransport>(
                     Ok(false) => continue, // more slices to come
                     Err(_) => return,      // protocol violation: stop serving
                 }
+            }
+            Ok(Some(wire::Message::Scheme { spec })) => {
+                // adaptive PS: swap the uplink encoder for the announced
+                // spec (tables resolve locally — LBG is deterministic, so
+                // encode and decode stay bit-exact across the swap)
+                match registry::build_encoder(&spec, codec.clone(), tables.clone()) {
+                    Ok(enc) => session.encoder = enc,
+                    Err(_) => return, // unservable spec: stop serving
+                }
+                continue;
             }
             Ok(Some(wire::Message::Shutdown)) | Ok(None) => return,
             Ok(Some(_)) => return, // protocol violation: stop serving
@@ -164,18 +178,36 @@ pub fn sim_client_loop<T: ClientTransport>(
 }
 
 /// Drive every round through `transport` and close it gracefully. Returns
-/// the last round's mean ideal uplink bits per client.
+/// the last round's mean ideal uplink bits per client. With a controller,
+/// each round re-fits the decoded residual, re-designs the (family, m, rq)
+/// point, and allocates per-client budgets off the measured link shares.
 fn drive_rounds(
     server: &mut FedServer,
     transport: &mut dyn Transport,
     cfg: &ExperimentConfig,
     spec: &ModelSpec,
     w: &mut [f32],
+    mut ctrl: Option<&mut AdaptiveController>,
 ) -> Result<f64> {
     let k = cfg.participants_per_round();
     let mut bits = 0.0f64;
     for round in 0..cfg.rounds {
         let participants = server.select(k);
+        let mut spread = 1.0f64;
+        if let Some(c) = ctrl.as_deref_mut() {
+            c.begin_round(w);
+            if c.adapted() {
+                // cohort frames precede the round downlink: every
+                // participant re-encodes under its allocated budget
+                let caps = caps_from_measured(&transport.stats(), &participants, c.base_bits());
+                let cohort = c.cohort(&caps);
+                for (s, &client) in cohort.specs.iter().zip(&participants) {
+                    transport.send(client, &Arc::new(wire::encode_scheme(s)))?;
+                }
+                server.set_decoder(c.build_decoder()?);
+                spread = cohort.spread;
+            }
+        }
         let summary = server.run_round(round, &participants, transport, spec, w)?;
         if summary.received == 0 {
             bail!(
@@ -185,6 +217,11 @@ fn drive_rounds(
             );
         }
         bits = summary.bits_per_client;
+        if let Some(c) = ctrl.as_deref_mut() {
+            let (family, m, rq) = c.trace();
+            server.annotate_adaptive(family, m, rq, spread);
+            c.observe(w);
+        }
     }
     transport.close()?;
     Ok(bits)
@@ -206,6 +243,21 @@ fn build_sessions(
             ))
         })
         .collect()
+}
+
+/// The rate-adaptation controller when the config asks for one: seeded
+/// with the run's resolved spec as its pre-fit operating point, sharing
+/// the server's codec and prewarmed table cache (shared with the fleet
+/// simulator, which closes the same loop over virtual links).
+pub(crate) fn build_controller(
+    cfg: &ExperimentConfig,
+    d: usize,
+    codec: &Arc<dyn BlockCodec>,
+    tables: &Arc<LruTableCache>,
+) -> Option<AdaptiveController> {
+    cfg.server.adaptive.then(|| {
+        AdaptiveController::new(d, cfg.scheme_spec(d), &cfg.budget(d), codec.clone(), tables.clone())
+    })
 }
 
 /// The server-side pieces every serve mode constructs the same way (shared
@@ -232,17 +284,33 @@ pub(crate) fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer
 }
 
 /// Drive every cluster round through `transport` and close it gracefully;
-/// the multi-PS sibling of [`drive_rounds`].
+/// the multi-PS sibling of [`drive_rounds`]. The cluster samples its
+/// participants inside the round, so the adaptive spec is broadcast
+/// uniformly to the whole roster; replica members only re-fit at the
+/// eq.-(7) sync barrier, where every PS agrees on `w` again.
 fn drive_cluster_rounds(
     cluster: &mut PsCluster,
     transport: &mut dyn Transport,
     cfg: &ExperimentConfig,
     spec: &ModelSpec,
     w: &mut [f32],
+    mut ctrl: Option<&mut AdaptiveController>,
 ) -> Result<f64> {
     let k = cfg.participants_per_round();
     let mut bits = 0.0f64;
     for round in 0..cfg.rounds {
+        if let Some(c) = ctrl.as_deref_mut() {
+            c.begin_round(w);
+            if c.adapted() {
+                let frame = Arc::new(wire::encode_scheme(&c.spec()));
+                for client in 0..cfg.n_clients {
+                    transport.send(client, &frame)?;
+                }
+                let decoders =
+                    (0..cluster.n_ps()).map(|_| c.build_decoder()).collect::<Result<Vec<_>>>()?;
+                cluster.set_decoders(decoders)?;
+            }
+        }
         let summary = cluster.run_round(round, k, transport, spec, w)?;
         if summary.received == 0 {
             bail!(
@@ -252,6 +320,13 @@ fn drive_cluster_rounds(
             );
         }
         bits = summary.bits_per_client;
+        if let Some(c) = ctrl.as_deref_mut() {
+            let (family, m, rq) = c.trace();
+            cluster.annotate_adaptive(family, m, rq, 1.0);
+            if cluster.at_sync_barrier(round) {
+                c.observe(w);
+            }
+        }
     }
     cluster.finish(w);
     transport.close()?;
@@ -296,6 +371,8 @@ fn with_transport<F>(
     mode: TransportMode,
     sessions: Vec<ClientSession>,
     spec: &ModelSpec,
+    codec: &Arc<dyn BlockCodec>,
+    tables: &Arc<LruTableCache>,
     run: F,
 ) -> Result<(f64, TransportStats)>
 where
@@ -306,7 +383,10 @@ where
             let (mut transport, clients) = ChannelTransport::pair(cfg.n_clients);
             let seed = cfg.seed;
             for (mut ct, mut session) in clients.into_iter().zip(sessions) {
-                scope.spawn(move || sim_client_loop(&mut ct, &mut session, seed, d, spec));
+                let (codec, tables) = (codec.clone(), tables.clone());
+                scope.spawn(move || {
+                    sim_client_loop(&mut ct, &mut session, seed, d, spec, codec, tables)
+                });
             }
             let bits = run(&mut transport)?;
             Ok::<_, anyhow::Error>((bits, transport.stats()))
@@ -319,13 +399,14 @@ where
                 let seed = cfg.seed;
                 for (id, mut session) in sessions.into_iter().enumerate() {
                     let addr = addr.clone();
+                    let (codec, tables) = (codec.clone(), tables.clone());
                     scope.spawn(move || {
                         // a connect failure means the server never came up;
                         // there is nothing to serve and nothing to report
                         if let Ok(mut ct) =
                             TcpClientTransport::connect(&addr, id, LOOPBACK_CONNECT_TIMEOUT)
                         {
-                            sim_client_loop(&mut ct, &mut session, seed, d, spec);
+                            sim_client_loop(&mut ct, &mut session, seed, d, spec, codec, tables);
                         }
                     });
                 }
@@ -361,9 +442,10 @@ pub fn simulate_with(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> R
     }
     let SimServer { spec, tables, codec, mut server } = build_server(cfg, d)?;
     let sessions = build_sessions(cfg, d, &codec, &tables)?;
+    let mut ctrl = build_controller(cfg, d, &codec, &tables);
     let mut w = vec![0.0f32; d];
-    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, |t| {
-        drive_rounds(&mut server, t, cfg, &spec, &mut w)
+    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, &codec, &tables, |t| {
+        drive_rounds(&mut server, t, cfg, &spec, &mut w, ctrl.as_mut())
     })?;
     Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
 }
@@ -422,9 +504,10 @@ pub(crate) fn finish_cluster_report(
 fn simulate_cluster(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
     let SimCluster { spec, tables, codec, mut cluster } = build_cluster(cfg, d)?;
     let sessions = build_sessions(cfg, d, &codec, &tables)?;
+    let mut ctrl = build_controller(cfg, d, &codec, &tables);
     let mut w = vec![0.0f32; d];
-    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, |t| {
-        drive_cluster_rounds(&mut cluster, t, cfg, &spec, &mut w)
+    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, &codec, &tables, |t| {
+        drive_cluster_rounds(&mut cluster, t, cfg, &spec, &mut w, ctrl.as_mut())
     })?;
     Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats))
 }
@@ -451,15 +534,17 @@ pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimR
     drop(listener);
     let mut transport = accepted?;
     let mut w = vec![0.0f32; d];
-    if let Some(SimCluster { spec, tables, codec: _, mut cluster }) = cluster {
+    if let Some(SimCluster { spec, tables, codec, mut cluster }) = cluster {
+        let mut ctrl = build_controller(cfg, d, &codec, &tables);
         let bits_per_round =
-            drive_cluster_rounds(&mut cluster, &mut transport, cfg, &spec, &mut w)?;
+            drive_cluster_rounds(&mut cluster, &mut transport, cfg, &spec, &mut w, ctrl.as_mut())?;
         let tstats = transport.stats();
         return Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats));
     }
-    let SimServer { spec, tables, codec: _, mut server } =
+    let SimServer { spec, tables, codec, mut server } =
         single.expect("either a cluster or a single server was built");
-    let bits_per_round = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w)?;
+    let mut ctrl = build_controller(cfg, d, &codec, &tables);
+    let bits_per_round = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w, ctrl.as_mut())?;
     let tstats = transport.stats();
     Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
 }
@@ -473,9 +558,10 @@ pub fn serve_connect(cfg: &ExperimentConfig, d: usize, addr: &str, id: usize) ->
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
     let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
     let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
-    let mut session = ClientSession::new(id, cfg.build_encoder(d, codec, tables)?, memory);
+    let mut session =
+        ClientSession::new(id, cfg.build_encoder(d, codec.clone(), tables.clone())?, memory);
     let mut transport = TcpClientTransport::connect(addr, id, Duration::from_secs(60))?;
-    sim_client_loop(&mut transport, &mut session, cfg.seed, d, &spec);
+    sim_client_loop(&mut transport, &mut session, cfg.seed, d, &spec, codec, tables);
     eprintln!(
         "client {id}: served {} rounds, {} B up / {} B down",
         session.rounds_participated, transport.bytes_out, transport.bytes_in
@@ -583,6 +669,49 @@ mod tests {
         // ...and persistence is a cache warmup, never a numerics change
         assert_eq!(cold.w, warm.w);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn adaptive_serve_closes_the_loop_and_records_the_trajectory() {
+        let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 3);
+        cfg.n_clients = 4;
+        cfg.server.adaptive = true;
+        let rep = simulate(&cfg, 2048).unwrap();
+        assert_eq!(rep.stats.rounds.len(), 3);
+        // round 0 serves the base spec; the first fit lands before round 1
+        assert_eq!(rep.stats.rounds[0].ad_family, "-");
+        for t in &rep.stats.rounds[1..] {
+            assert!(t.ad_family == "G" || t.ad_family == "W", "{t:?}");
+            assert!((1..=4).contains(&t.ad_rq));
+            assert!(t.ad_spread >= 1.0, "{t:?}");
+        }
+        // the re-design is a real numerics change against the fixed base...
+        cfg.server.adaptive = false;
+        let fixed = simulate(&cfg, 2048).unwrap();
+        assert_ne!(rep.w, fixed.w);
+        // ...and a deterministic one
+        cfg.server.adaptive = true;
+        let again = simulate(&cfg, 2048).unwrap();
+        assert_eq!(rep.w, again.w);
+    }
+
+    #[test]
+    fn adaptive_cluster_replica_refits_only_at_the_sync_barrier() {
+        use crate::config::{ClusterConfig, PsMode};
+        let mut cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 4);
+        cfg.n_clients = 6;
+        cfg.server.adaptive = true;
+        cfg.server.prewarm = false;
+        cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 });
+        let rep = simulate(&cfg, 512).unwrap();
+        assert_eq!(rep.stats.rounds.len(), 4);
+        // fits land only after barrier rounds (1 and 3): rounds 0 and 1
+        // still serve the base, rounds 2 and 3 serve the first re-design
+        assert_eq!(rep.stats.rounds[0].ad_family, "-");
+        assert_eq!(rep.stats.rounds[1].ad_family, "-");
+        for t in &rep.stats.rounds[2..] {
+            assert!(t.ad_family == "G" || t.ad_family == "W", "{t:?}");
+        }
     }
 
     #[test]

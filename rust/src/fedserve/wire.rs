@@ -28,11 +28,17 @@
 //!                  PS broadcasts only the contiguous dimension range it
 //!                  owns; a client reassembles the full model from the
 //!                  slices via `session::RoundAssembler`)
+//! * `Scheme`     — tag u8 | family u8 | m f64 | fp_bits u32 | rq u32
+//!                  | k u64 | min_fit u64 | depth u32 | seed u64
+//!                  (the adaptive-control downlink: the PS re-resolves a
+//!                  client's compression scheme mid-run and the client
+//!                  swaps its encoder before the next round broadcast)
 
 use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::registry::{Scheme, SchemeSpec};
 use crate::compress::RateReport;
 use crate::coordinator::messages::Uplink;
 
@@ -65,6 +71,7 @@ const KIND_SHUTDOWN: u8 = 2;
 const KIND_UPDATE: u8 = 3;
 const KIND_HELLO: u8 = 4;
 const KIND_ROUND_SLICE: u8 = 5;
+const KIND_SCHEME: u8 = 6;
 
 /// One decoded wire message.
 #[derive(Debug)]
@@ -83,6 +90,10 @@ pub enum Message {
     /// dimension, `total` the full model dimension; slices from the
     /// cluster are disjoint and cover `0..total`.
     RoundSlice { round: usize, offset: usize, total: usize, weights: Vec<f32> },
+    /// PS → client: swap the client's encoder to a re-resolved scheme (the
+    /// adaptive controller's per-cohort downlink). Takes effect for the
+    /// next update the client encodes.
+    Scheme { spec: SchemeSpec },
 }
 
 /// Typed frame-validation failure at the transport boundary. A streaming
@@ -214,6 +225,22 @@ pub fn encode_round_slice(round: usize, offset: usize, total: usize, weights: &[
 /// Encode a client → PS connection handshake.
 pub fn encode_hello(client: usize) -> Vec<u8> {
     frame(KIND_HELLO, &(client as u32).to_le_bytes())
+}
+
+/// Encode a PS → client scheme swap (the adaptive controller's downlink).
+pub fn encode_scheme(spec: &SchemeSpec) -> Vec<u8> {
+    let (tag, family, m, fp_bits) = spec.scheme.wire_tag();
+    let mut p = Vec::with_capacity(42);
+    p.push(tag);
+    p.push(family);
+    p.extend_from_slice(&m.to_le_bytes());
+    p.extend_from_slice(&fp_bits.to_le_bytes());
+    p.extend_from_slice(&spec.rq.to_le_bytes());
+    p.extend_from_slice(&(spec.k as u64).to_le_bytes());
+    p.extend_from_slice(&(spec.min_fit as u64).to_le_bytes());
+    p.extend_from_slice(&(spec.sketch_depth as u32).to_le_bytes());
+    p.extend_from_slice(&spec.seed.to_le_bytes());
+    frame(KIND_SCHEME, &p)
 }
 
 /// Encode a client → PS update from its parts. `payload` is borrowed —
@@ -383,6 +410,25 @@ fn parse_hello(payload: &[u8]) -> Result<Message> {
     Ok(Message::Hello { client })
 }
 
+fn parse_scheme(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let tag = r.u8()?;
+    let family = r.u8()?;
+    let m = r.f64()?;
+    let fp_bits = r.u32()?;
+    let scheme = Scheme::from_wire(tag, family, m, fp_bits)?;
+    let spec = SchemeSpec {
+        scheme,
+        rq: r.u32()?,
+        k: r.u64()? as usize,
+        min_fit: r.u64()? as usize,
+        sketch_depth: r.u32()? as usize,
+        seed: r.u64()?,
+    };
+    r.done()?;
+    Ok(Message::Scheme { spec })
+}
+
 /// Header-only scan: the total framed size of the frame at the front of
 /// `buf`, or `None` while the header itself is incomplete. Validates
 /// exactly what the visible bytes allow (magic, version, length cap) and
@@ -442,6 +488,7 @@ pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
         KIND_UPDATE => parse_update(payload),
         KIND_HELLO => parse_hello(payload),
         KIND_ROUND_SLICE => parse_round_slice(payload),
+        KIND_SCHEME => parse_scheme(payload),
         k => return Err(FrameError::UnknownKind { kind: k }),
     };
     match parsed {
@@ -658,6 +705,52 @@ mod tests {
             Message::Hello { client } => assert_eq!(client, 42),
             other => panic!("wrong message: {other:?}"),
         }
+    }
+
+    #[test]
+    fn scheme_roundtrips_for_every_registered_scheme() {
+        use crate::compress::registry::all_schemes;
+        for (i, scheme) in all_schemes().into_iter().enumerate() {
+            let spec = SchemeSpec {
+                scheme,
+                rq: 1 + i as u32,
+                k: 100 + 17 * i,
+                min_fit: 256 + i,
+                sketch_depth: 3 + i,
+                seed: 0xdead_beef + i as u64,
+            };
+            let f = encode_scheme(&spec);
+            match decode(&f).unwrap() {
+                Message::Scheme { spec: got } => {
+                    assert_eq!(format!("{got:?}"), format!("{spec:?}"), "scheme {i}");
+                }
+                other => panic!("wrong message: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_frame_rejects_unknown_tag_and_corruption() {
+        let spec = SchemeSpec::new(Scheme::TopKUniform, 2, 600);
+        let f = encode_scheme(&spec);
+        // every single-byte corruption is caught by the CRC
+        for i in 0..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x41;
+            assert!(decode(&bad).is_err(), "corruption at byte {i} accepted");
+        }
+        // a structurally valid frame with an unknown scheme tag is a
+        // typed payload error, not a panic
+        let mut p = vec![0u8; f.len() - FRAME_OVERHEAD];
+        p.copy_from_slice(&f[HEADER_BYTES..f.len() - 4]);
+        p[0] = 0xee;
+        let mut bad = vec![MAGIC[0], MAGIC[1], VERSION, KIND_SCHEME];
+        bad.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&p);
+        let crc = crc32(&bad[2..]);
+        bad.extend_from_slice(&crc.to_le_bytes());
+        let err = decode(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown scheme tag"), "{err:#}");
     }
 
     #[test]

@@ -188,6 +188,9 @@ fn main() -> Result<()> {
             // persist hot quantizer tables across runs (ROADMAP: the
             // cross-run half of the prewarm item)
             cfg.server.table_cache_path = args.str_opt("table-cache").map(String::from);
+            // close the rate-adaptation loop at the PS (ROADMAP: online
+            // rate adaptation)
+            cfg.server.adaptive = args.bool("adaptive");
             let sample = args.usize_or("sample", 0)?;
             if sample > 0 {
                 cfg.server.sampled_clients = Some(sample);
@@ -269,6 +272,10 @@ fn main() -> Result<()> {
             cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 0)? as u64;
             cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
             cfg.server.prewarm = !args.bool("no-prewarm");
+            // the same cross-run table persistence serve has: prewarm once,
+            // reload on every later fleet sweep
+            cfg.server.table_cache_path = args.str_opt("table-cache").map(String::from);
+            cfg.server.adaptive = args.bool("adaptive");
             cfg.server.sampled_clients = Some(args.usize_or("sample", 64)?);
             let n_ps = args.usize_or("ps", 0)?;
             if n_ps > 0 {
@@ -339,6 +346,8 @@ fn main() -> Result<()> {
                  name:key=val,... (keys m, rq, k, min_fit, depth, seed), e.g. m22-gennorm:m=2,rq=3\n\
                  serve: --clients N --dim D --shards S --sample K --deadline-ms T --cache-cap C --memory --no-prewarm\n\
                         --table-cache PATH (persist hot quantizer tables across runs)\n\
+                        --adaptive (closed-loop rate adaptation: per-round gennorm/Weibull re-fits of the\n\
+                        decoded residual, (family, m, rq) re-selection, per-client K off measured links)\n\
                         --tcp-loopback (one reactor thread multiplexing real 127.0.0.1 sockets; scales to --clients 256+)\n\
                         --listen ADDR (be the PS) | --connect ADDR --id N (be one client)\n\
                         --ps N --ps-mode range|replica --sync-every S (multi-PS cluster on one reactor:\n\
@@ -347,6 +356,8 @@ fn main() -> Result<()> {
                  fleet: --scenario fleet:n=N,alpha=A,churn=C,lat=fixed|lognorm,lat_ms=L,jitter=J,bw=B,classes=K,seed=S\n\
                         --rounds N --dim D --sample K --deadline-ms T (virtual-clock straggler deadline)\n\
                         --shards S --memory --no-prewarm --ps N --ps-mode --sync-every (as in serve)\n\
+                        --table-cache PATH --adaptive (as in serve; adaptive budgets each sampled\n\
+                        client's K against its drawn link's bit capacity inside the round window)\n\
                         n modeled clients as RNG streams; only sampled participants materialize; bit-exact replays\n\
                  see DESIGN.md for the per-experiment index"
             );

@@ -6,7 +6,7 @@ pub mod recorder;
 pub mod scenario;
 pub mod server;
 
-pub use perbit::{per_bit_accuracy, PerBitInput};
+pub use perbit::{metric_per_bit, metric_per_total_bits, per_bit_accuracy, PerBitInput};
 pub use recorder::{Recorder, Row};
 pub use scenario::ScenarioSummary;
 pub use server::{ClusterStats, RoundTiming, ServerStats, TransportStats};

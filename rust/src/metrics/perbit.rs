@@ -45,6 +45,20 @@ pub fn metric_per_bit(final_metric: f64, bits_per_round: f64, rounds: usize) -> 
     }
 }
 
+/// [`metric_per_bit`] for runs whose bit budget varies per round (the
+/// adaptive controller re-allocates every round, so `bits × T` is no
+/// longer the spend): normalize by the actual Σ bits over the trajectory.
+/// NaN when nothing was spent (an all-dropped or zero-rate run has no
+/// per-bit reading, rather than ∞).
+pub fn metric_per_total_bits(final_metric: f64, per_round_bits: &[f64]) -> f64 {
+    let total: f64 = per_round_bits.iter().sum();
+    if !(total > 0.0) {
+        f64::NAN
+    } else {
+        final_metric / total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +106,31 @@ mod tests {
         let a = metric_per_bit(0.7, 1000.0, 10);
         let b = metric_per_bit(0.7, 2000.0, 10);
         assert!((a - 2.0 * b).abs() < 1e-15);
+    }
+
+    #[test]
+    fn varying_budgets_reduce_to_the_constant_case() {
+        // a flat trajectory must agree exactly with bits × T
+        let flat = metric_per_total_bits(0.7, &[500.0; 4]);
+        assert!((flat - metric_per_bit(0.7, 500.0, 4)).abs() < 1e-18);
+        // an adaptive trajectory normalizes by the true spend, not mean×T
+        // of some assumed-constant budget
+        let traj = [800.0, 400.0, 200.0, 100.0];
+        let v = metric_per_total_bits(0.7, &traj);
+        assert!((v - 0.7 / 1500.0).abs() < 1e-15);
+        // spending less for the same metric scores strictly higher
+        assert!(v > metric_per_bit(0.7, 800.0, 4));
+    }
+
+    #[test]
+    fn zero_and_degenerate_trajectories_are_nan() {
+        // the NaN edge at zero bits survives the varying-budget path
+        assert!(metric_per_total_bits(1.0, &[]).is_nan());
+        assert!(metric_per_total_bits(1.0, &[0.0, 0.0, 0.0]).is_nan());
+        // a poisoned round (NaN bits) cannot launder into a finite score
+        assert!(metric_per_total_bits(1.0, &[500.0, f64::NAN]).is_nan());
+        // ...and partial spend still counts: one zero round among real ones
+        let v = metric_per_total_bits(1.0, &[0.0, 250.0, 250.0]);
+        assert!((v - 1.0 / 500.0).abs() < 1e-15);
     }
 }

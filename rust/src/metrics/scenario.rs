@@ -27,19 +27,23 @@ pub struct ScenarioSummary {
     pub received: usize,
     /// sampled participants that missed the virtual deadline or churned
     pub dropped: usize,
+    /// distinct (family, m, rq) triples seen across the round trajectory
+    /// (1 for a fixed-scheme run; > 1 when the adaptive controller
+    /// re-designed mid-run)
+    pub schemes: usize,
 }
 
 impl ScenarioSummary {
     pub fn csv_header() -> &'static str {
         "scenario,scheme,clients,sampled,rounds,bits_per_round,final_metric,\
-         per_bit,label_skew,received,dropped"
+         per_bit,label_skew,received,dropped,schemes"
     }
 
     /// One CSV row under [`ScenarioSummary::csv_header`]. Scenario and
     /// scheme labels contain commas, so both are double-quoted.
     pub fn to_csv(&self) -> String {
         format!(
-            "{}\n\"{}\",\"{}\",{},{},{},{},{},{},{},{},{}",
+            "{}\n\"{}\",\"{}\",{},{},{},{},{},{},{},{},{},{}",
             Self::csv_header(),
             self.scenario,
             self.scheme,
@@ -51,13 +55,14 @@ impl ScenarioSummary {
             self.per_bit,
             self.label_skew,
             self.received,
-            self.dropped
+            self.dropped,
+            self.schemes
         )
     }
 
     /// One-line human summary for stderr.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "scenario {} · {}: {} rounds of k={} over n={} modeled clients \
              (virtual time, no sockets) — {} received / {} dropped, \
              {:.0} bits/client, |w| = {:.6}, per-bit = {:.3e}, skew = {:.3}",
@@ -72,7 +77,11 @@ impl ScenarioSummary {
             self.final_metric,
             self.per_bit,
             self.label_skew
-        )
+        );
+        if self.schemes > 1 {
+            s.push_str(&format!(", {} schemes over the trajectory", self.schemes));
+        }
+        s
     }
 }
 
@@ -93,6 +102,7 @@ mod tests {
             label_skew: 0.1,
             received: 24,
             dropped: 0,
+            schemes: 1,
         }
     }
 
@@ -123,5 +133,15 @@ mod tests {
         assert!(csv.contains("\"fleet:n=100,churn=0.1"), "{csv}");
         assert!(csv.contains("\"G 2 (R=2)\""), "{csv}");
         assert!(row().summary().contains("no sockets"));
+    }
+
+    #[test]
+    fn scheme_trajectory_count_reaches_csv_and_summary() {
+        let mut r = row();
+        assert!(!r.summary().contains("schemes over"), "fixed runs stay quiet");
+        assert!(r.to_csv().ends_with(",1"), "{}", r.to_csv());
+        r.schemes = 3;
+        assert!(r.to_csv().ends_with(",3"), "{}", r.to_csv());
+        assert!(r.summary().contains("3 schemes over the trajectory"), "{}", r.summary());
     }
 }

@@ -3,7 +3,7 @@
 //! quantizer-table cache hit/prewarm rates.
 
 /// Timings + counters of one server round.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct RoundTiming {
     pub round: usize,
     /// waiting on + validating framed uplinks
@@ -23,6 +23,37 @@ pub struct RoundTiming {
     /// abort and no reduce ran — recorded so `ServerStats` does not
     /// under-report exactly the rounds that went wrong
     pub aborted: bool,
+    /// adaptive trajectory: quantizer family in production this round
+    /// ("G" / "W" for an adaptive M22 round, "-" otherwise)
+    pub ad_family: &'static str,
+    /// adaptive trajectory: distortion exponent M of the round's scheme
+    pub ad_m: f64,
+    /// adaptive trajectory: per-survivor rate of the round's scheme
+    /// (0 when the run is not adaptive)
+    pub ad_rq: u32,
+    /// adaptive trajectory: per-client budget spread (max k / min k over
+    /// the cohort; 1.0 when every client got the same budget)
+    pub ad_spread: f64,
+}
+
+impl Default for RoundTiming {
+    fn default() -> RoundTiming {
+        RoundTiming {
+            round: 0,
+            collect_ns: 0,
+            reduce_ns: 0,
+            received: 0,
+            dropped: 0,
+            stale: 0,
+            decode_errors: 0,
+            framed_bytes: 0,
+            aborted: false,
+            ad_family: "-",
+            ad_m: 0.0,
+            ad_rq: 0,
+            ad_spread: 1.0,
+        }
+    }
 }
 
 /// Byte counters measured at the transport: per-connection at the socket
@@ -142,11 +173,11 @@ impl ServerStats {
     /// Per-round CSV (milliseconds for the phase timings).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors,aborted\n",
+            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors,aborted,family,m,rq,spread\n",
         );
         for t in &self.rounds {
             s.push_str(&format!(
-                "{},{:.3},{:.3},{},{},{},{},{},{}\n",
+                "{},{:.3},{:.3},{},{},{},{},{},{},{},{},{},{:.3}\n",
                 t.round,
                 t.collect_ns as f64 / 1e6,
                 t.reduce_ns as f64 / 1e6,
@@ -155,7 +186,11 @@ impl ServerStats {
                 t.stale,
                 t.framed_bytes,
                 t.decode_errors,
-                u8::from(t.aborted)
+                u8::from(t.aborted),
+                t.ad_family,
+                t.ad_m,
+                t.ad_rq,
+                t.ad_spread
             ));
         }
         s
@@ -270,6 +305,7 @@ mod tests {
             decode_errors: 0,
             framed_bytes: 1000,
             aborted: false,
+            ..RoundTiming::default()
         }
     }
 
@@ -315,8 +351,10 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,collect_ms,reduce_ms"));
-        assert!(lines[0].ends_with("framed_bytes,decode_errors,aborted"));
+        assert!(lines[0].ends_with("aborted,family,m,rq,spread"));
         assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000,0,0"));
+        // non-adaptive rounds carry the placeholder trajectory columns
+        assert!(lines[1].ends_with(",-,0,0,1.000"), "{}", lines[1]);
     }
 
     #[test]
@@ -331,7 +369,22 @@ mod tests {
         assert_eq!(s.total_received(), 3);
         assert!(s.summary().contains("1 aborted"), "{}", s.summary());
         let csv = s.to_csv();
-        assert!(csv.lines().nth(2).unwrap().ends_with(",1"), "{csv}");
+        // the aborted flag sits just before the trajectory columns
+        assert!(csv.lines().nth(2).unwrap().contains(",1,-,0,0,"), "{csv}");
+    }
+
+    #[test]
+    fn adaptive_trajectory_columns_reach_the_csv() {
+        let mut s = ServerStats::default();
+        let mut t = timing(0, 2, 0);
+        t.ad_family = "G";
+        t.ad_m = 2.0;
+        t.ad_rq = 3;
+        t.ad_spread = 4.5;
+        s.push(t);
+        let csv = s.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",G,2,3,4.500"), "{row}");
     }
 
     #[test]

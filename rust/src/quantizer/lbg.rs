@@ -150,10 +150,53 @@ pub fn expected_distortion(dist: &dyn Distribution, q: &Quantizer) -> f64 {
     2.0 * d
 }
 
+/// Expected distortion of `q` evaluated under a *caller-chosen* weight
+/// exponent `eval_m` instead of the exponent the quantizer was designed
+/// for. The adaptive controller scores candidate (family, m, rq) designs
+/// on one common scale — the distortion weight of the scheme actually in
+/// production — so designs with different training exponents stay
+/// comparable.
+pub fn expected_distortion_weighted(dist: &dyn Distribution, q: &Quantizer, eval_m: f64) -> f64 {
+    let half = q.centers.len() / 2;
+    let mut d = 0.0;
+    for i in 0..half {
+        let c = q.centers[half + i];
+        let a = if i == 0 { 0.0 } else { q.thresholds[half + i - 1] };
+        let b = if half + i < q.thresholds.len() {
+            q.thresholds[half + i]
+        } else {
+            f64::INFINITY
+        };
+        d += dist.partial_abs_moment(eval_m + 2.0, a, b)
+            - 2.0 * c * dist.partial_abs_moment(eval_m + 1.0, a, b)
+            + c * c * dist.partial_abs_moment(eval_m, a, b);
+    }
+    2.0 * d
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::stats::{Gaussian, GenNorm, Weibull2};
+
+    #[test]
+    fn weighted_distortion_matches_native_exponent() {
+        let dist = Gaussian::new(1.0);
+        for m in [0.0, 2.0, 4.0] {
+            let q = design(&dist, m, 8);
+            let native = expected_distortion(&dist, &q);
+            let reweighed = expected_distortion_weighted(&dist, &q, m);
+            assert!((native - reweighed).abs() < 1e-12, "m={m}: {native} vs {reweighed}");
+        }
+        // cross-exponent evaluation is finite, positive, and penalizes the
+        // mismatched design: the m=0 table scored at m=4 loses to the m=4 one
+        let q0 = design(&dist, 0.0, 8);
+        let q4 = design(&dist, 4.0, 8);
+        let d0 = expected_distortion_weighted(&dist, &q0, 4.0);
+        let d4 = expected_distortion_weighted(&dist, &q4, 4.0);
+        assert!(d0.is_finite() && d0 > 0.0);
+        assert!(d4 < d0, "native m=4 design {d4} should beat the m=0 design {d0} at eval_m=4");
+    }
 
     #[test]
     fn gaussian_lloyd_max_two_levels() {

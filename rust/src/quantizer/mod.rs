@@ -5,7 +5,7 @@
 pub mod lbg;
 pub mod tables;
 
-pub use lbg::{design, expected_distortion, Quantizer};
+pub use lbg::{design, expected_distortion, expected_distortion_weighted, Quantizer};
 pub use tables::{
     design_for, Family, PrewarmPlan, QuantizerTables, TableKey, TableSource, SHAPE_STEP,
 };

@@ -38,6 +38,12 @@ impl Moments {
         if n < 2.0 {
             bail!("need >= 2 nonzero entries to fit, got {n}");
         }
+        if s.iter().any(|x| !x.is_finite()) {
+            bail!("non-finite moment sums (overflow or NaN input): {s:?}");
+        }
+        if s[2] <= 0.0 {
+            bail!("zero second moment over {n} nonzero entries");
+        }
         Ok(Moments {
             n,
             mean_abs: s[1] / n,
@@ -114,6 +120,11 @@ pub const WEIBULL_C_RANGE: (f64, f64) = (0.12, 20.0);
 pub fn fit_gennorm(m: &Moments) -> GenNorm {
     let rho = m.rho();
     let (lo, hi) = GENNORM_BETA_RANGE;
+    // a degenerate ratio (NaN/∞ from overflowed sums) must not reach the
+    // bisection — fall back to the Gaussian member of the family
+    if !rho.is_finite() {
+        return GenNorm::new(m.mean_abs.max(1e-30), 2.0);
+    }
     let beta = if rho <= gennorm_rho(lo) {
         lo
     } else if rho >= gennorm_rho(hi) {
@@ -130,6 +141,11 @@ pub fn fit_gennorm(m: &Moments) -> GenNorm {
 pub fn fit_weibull2(m: &Moments) -> Weibull2 {
     let rho = m.rho();
     let (lo, hi) = WEIBULL_C_RANGE;
+    // same degenerate-ratio guard as fit_gennorm: fall back to the
+    // Laplace member (c = 1) instead of bisecting on NaN
+    if !rho.is_finite() {
+        return Weibull2::new(m.mean_abs.max(1e-30), 1.0);
+    }
     let c = if rho <= weibull_rho(lo) {
         lo
     } else if rho >= weibull_rho(hi) {
@@ -281,6 +297,67 @@ mod tests {
     fn fit_requires_samples() {
         assert!(Moments::from_nonzeros(&[0.0, 0.0]).is_err());
         assert!(Moments::from_nonzeros(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn all_zero_input_is_an_explicit_error() {
+        let e = Moments::from_nonzeros(&[0.0; 64]).unwrap_err();
+        assert!(format!("{e:#}").contains(">= 2 nonzero"), "{e:#}");
+    }
+
+    #[test]
+    fn single_nonzero_is_an_explicit_error() {
+        let mut xs = vec![0.0f32; 64];
+        xs[17] = 3.5;
+        let e = Moments::from_nonzeros(&xs).unwrap_err();
+        assert!(format!("{e:#}").contains(">= 2 nonzero"), "{e:#}");
+    }
+
+    #[test]
+    fn non_finite_sums_are_rejected() {
+        // an overflowed Σg⁴ (the first sum to blow up on large f32 inputs)
+        let s = [4.0, 8.0, 32.0, 4.0, 200.0, 3.0, f64::INFINITY, 2.0];
+        assert!(Moments::from_sums(&s).is_err());
+        let s = [4.0, f64::NAN, 32.0, 4.0, 200.0, 3.0, 900.0, 2.0];
+        assert!(Moments::from_sums(&s).is_err());
+    }
+
+    #[test]
+    fn zero_variance_input_clamps_instead_of_nan() {
+        // every nonzero entry identical: ρ = 1, outside both families'
+        // representable range — the fit must clamp to the range edge, not
+        // bisect into NaN
+        let xs = vec![0.25f32; 32];
+        let m = Moments::from_nonzeros(&xs).unwrap();
+        let gn = fit_gennorm(&m);
+        assert_eq!(gn.beta, GENNORM_BETA_RANGE.1);
+        assert!(gn.s.is_finite() && gn.s > 0.0);
+        let w = fit_weibull2(&m);
+        assert_eq!(w.c, WEIBULL_C_RANGE.1);
+        assert!(w.s.is_finite() && w.s > 0.0);
+    }
+
+    #[test]
+    fn degenerate_moment_ratio_falls_back_to_fixed_shapes() {
+        // a hand-built Moments with a NaN ratio (inf/inf) must not reach
+        // the bisection: GenNorm falls back to β = 2, Weibull to c = 1
+        let m = Moments {
+            n: 8.0,
+            mean_abs: f64::INFINITY,
+            mean_sq: f64::INFINITY,
+            mean_sqrt: 1.0,
+            mean_cube: 1.0,
+            max_abs: 1.0,
+            mean_quad: 1.0,
+            mean_log: 0.0,
+        };
+        assert!(m.rho().is_nan());
+        let gn = fit_gennorm(&m);
+        assert_eq!(gn.beta, 2.0);
+        assert!(gn.s.is_finite() && gn.s > 0.0);
+        let w = fit_weibull2(&m);
+        assert_eq!(w.c, 1.0);
+        assert!(w.s.is_finite() && w.s > 0.0);
     }
 
     #[test]
