@@ -156,6 +156,64 @@ fn main() {
         }
     }
 
+    // --- reactor wakeup cost vs idle connections: poll vs epoll ----------
+    //
+    // The C100K claim, isolated: one `Poller` holding n idle registered
+    // sockets with exactly ONE ready, timed per wakeup (write a byte,
+    // wait, drain it). `poll(2)` rebuilds and scans the whole interest
+    // set every wait — O(registered) — so its rows grow with n;
+    // edge-triggered epoll reports just the ready descriptor — O(ready)
+    // — so its rows stay flat. EXPERIMENTS.md §reactor quotes these rows
+    // as the wakeup-cost-vs-idle-connections table.
+    #[cfg(unix)]
+    {
+        use std::io::{Read as _, Write as _};
+        use std::net::{TcpListener, TcpStream};
+        use std::time::Duration;
+
+        use m22::fedserve::reactor::{fd_of, Interest, Poller, Ready};
+
+        println!("\n== reactor wakeup cost (1 ready among n idle connections) ==");
+        let soft = pollshim::raise_nofile(2 * 10_000 + 512).unwrap_or(0);
+        for n in [256usize, 1_000, 10_000] {
+            if (2 * n + 64) as u64 > soft {
+                eprintln!("reactor wakeup n={n} skipped (RLIMIT_NOFILE {soft})");
+                continue;
+            }
+            // n loopback pairs; every right end is registered, and only
+            // the left end of pair 0 ever speaks
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut left = Vec::with_capacity(n);
+            let mut right = Vec::with_capacity(n);
+            for _ in 0..n {
+                left.push(TcpStream::connect(addr).unwrap());
+                right.push(listener.accept().unwrap().0);
+            }
+            for backend in ["poll", "epoll"] {
+                std::env::set_var("M22_POLLER", backend);
+                let mut poller = Poller::new();
+                std::env::remove_var("M22_POLLER");
+                if poller.backend_name() != backend {
+                    eprintln!("reactor wakeup ({backend}, n={n}) skipped: backend unavailable");
+                    continue;
+                }
+                for (tok, s) in right.iter().enumerate() {
+                    poller.register(tok, fd_of(s), Interest::READ).unwrap();
+                }
+                let mut ready: Vec<Ready> = Vec::new();
+                let mut buf = [0u8; 1];
+                let b = Bencher::from_env();
+                log.push(b.run(&format!("reactor wakeup ({backend}, n={n} idle)"), || {
+                    left[0].write_all(&[1]).unwrap();
+                    poller.wait(Some(Duration::from_secs(5)), &mut ready).unwrap();
+                    right[0].read_exact(&mut buf).unwrap();
+                    ready.len()
+                }));
+            }
+        }
+    }
+
     // --- the collect hot path: O(1) id→slot routing at growing k ---------
     //
     // Whole run_round calls over the channel transport with pre-encoded

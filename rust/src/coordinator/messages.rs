@@ -2,7 +2,8 @@
 //!
 //! These are the *decoded* forms; on the transport they travel as framed
 //! bytes produced/parsed by `fedserve::wire` (round broadcasts are encoded
-//! once and shared as `Arc<Vec<u8>>` across participants, uplinks are one
+//! once and shared as `Arc<[u8]>` across participants — one copy into the
+//! `Arc`, then every outbound queue holds the same bytes; uplinks are one
 //! owned frame each). The old in-memory `Downlink` enum is gone — the
 //! server's downlink *is* the encoded frame.
 
@@ -61,7 +62,7 @@ mod tests {
         // the Arc-shared downlink frame replaces the old Downlink enum:
         // every participant clones the same encoded bytes
         use std::sync::Arc;
-        let frame = Arc::new(crate::fedserve::wire::encode_round(3, &[0.0f32; 1024]));
+        let frame: Arc<[u8]> = crate::fedserve::wire::encode_round(3, &[0.0f32; 1024]).into();
         let f2 = frame.clone();
         assert!(Arc::ptr_eq(&frame, &f2));
         assert_eq!(Arc::strong_count(&frame), 2);

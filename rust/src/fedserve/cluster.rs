@@ -239,10 +239,10 @@ impl PsCluster {
         let t0 = Instant::now();
         // the model-parallel downlink: PS_i broadcasts only its dimension
         // range, as one slice frame shared Arc-style across participants
-        let frames: Vec<Arc<Vec<u8>>> = self
+        let frames: Vec<Arc<[u8]>> = self
             .ranges
             .iter()
-            .map(|&(lo, hi)| Arc::new(wire::encode_round_slice(round, lo, self.d, &w[lo..hi])))
+            .map(|&(lo, hi)| wire::encode_round_slice(round, lo, self.d, &w[lo..hi]).into())
             .collect();
         let mut unreachable = vec![false; participants.len()];
         for (i, &id) in participants.iter().enumerate() {
@@ -365,7 +365,7 @@ impl PsCluster {
         let mut unreachable = vec![false; roster.len()];
         for (i, &(start, len)) in spans.iter().enumerate() {
             // each PS broadcasts its own replica to its own participants
-            let frame = Arc::new(wire::encode_round(round, &self.replicas[i]));
+            let frame: Arc<[u8]> = wire::encode_round(round, &self.replicas[i]).into();
             for s in start..start + len {
                 let id = roster[s];
                 if transport.send(id, &frame).is_err() {

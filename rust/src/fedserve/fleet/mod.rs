@@ -140,7 +140,7 @@ pub fn simulate_fleet(
                     participants.iter().map(|&p| transport.cap_bits(p, window_ms)).collect();
                 let cohort = c.cohort(&caps);
                 for (s, &client) in cohort.specs.iter().zip(&participants) {
-                    transport.send(client, &Arc::new(wire::encode_scheme(s)))?;
+                    transport.send(client, &wire::encode_scheme(s).into())?;
                 }
                 server.set_decoder(c.build_decoder()?);
                 spread = cohort.spread;

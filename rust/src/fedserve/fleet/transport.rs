@@ -258,7 +258,7 @@ impl FleetTransport {
 }
 
 impl Transport for FleetTransport {
-    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+    fn send(&mut self, client: usize, frame: &Arc<[u8]>) -> Result<()> {
         let msg = wire::decode(frame).context("fleet: bad downlink frame")?;
         self.bytes_out += frame.len() as u64;
         let round = match &msg {
@@ -341,6 +341,7 @@ impl Transport for FleetTransport {
     fn stats(&self) -> TransportStats {
         TransportStats {
             label: "fleet",
+            backend: "virtual",
             bytes_in: self.bytes_in,
             bytes_out: self.bytes_out,
             decode_errors: self.decode_errors,
@@ -352,6 +353,7 @@ impl Transport for FleetTransport {
             disconnects: 0,
             wakeups: self.wakeups,
             socket_measured: false,
+            ..Default::default()
         }
     }
 }
@@ -421,7 +423,7 @@ mod tests {
     #[test]
     fn sends_materialize_lazily_and_polls_release_in_virtual_order() {
         let mut t = fixture("fleet:n=8,lat=lognorm,jitter=0.8", 8);
-        let frame = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        let frame: Arc<[u8]> = wire::encode_round(0, &[0.0f32; 64]).into();
         for c in [3usize, 1, 5] {
             t.send(c, &frame).unwrap();
         }
@@ -491,13 +493,13 @@ mod tests {
             2,
             8,
         );
-        let frame = Arc::new(wire::encode_scheme(&spec));
+        let frame: Arc<[u8]> = wire::encode_scheme(&spec).into();
         t.send(0, &frame).unwrap();
         // the swap materializes the client but schedules no uplink
         assert_eq!(t.live_connections(), 1);
         assert!(t.poll(Some(Duration::ZERO)).unwrap().is_none());
         // the next round's reply is encoded under the announced spec
-        let round = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        let round: Arc<[u8]> = wire::encode_round(0, &[0.0f32; 64]).into();
         t.send(0, &round).unwrap();
         let ev = t.poll(None).unwrap().unwrap();
         assert!(matches!(ev, Event::Frame { .. }));
@@ -506,7 +508,7 @@ mod tests {
     #[test]
     fn event_source_half_releases_only_what_virtual_time_reached() {
         let mut t = fixture("fleet:n=4,lat=fixed,jitter=0,lat_ms=10", 4);
-        let frame = Arc::new(wire::encode_round(0, &[0.0f32; 64]));
+        let frame: Arc<[u8]> = wire::encode_round(0, &[0.0f32; 64]).into();
         t.send(0, &frame).unwrap();
         t.send(1, &frame).unwrap();
         let mut wheel = TimerWheel::default();

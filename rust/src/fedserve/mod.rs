@@ -8,20 +8,26 @@
 //! * [`wire`] — a framed binary protocol (version header, length prefix,
 //!   CRC-32) so *only bytes* cross the transport; `scan_prefix` streams
 //!   frames out of arbitrary read fragments with typed corruption errors;
-//! * [`reactor`] — the readiness engine: a `poll(2)`-backed
-//!   [`reactor::Poller`] (vendored syscall shim; portable spin fallback
-//!   behind the `spin-poll` feature), a slotted [`reactor::TimerWheel`]
-//!   for straggler and write deadlines, and the [`reactor::Reactor`] loop
-//!   both transports route their uplink waits through — one server thread
-//!   multiplexes every client connection, no per-client threads, no
-//!   sleep-spin;
+//! * [`reactor`] — the readiness engine: a [`reactor::Poller`] over three
+//!   backends (edge-triggered `epoll` on Linux, `poll(2)` elsewhere or via
+//!   `M22_POLLER=poll` / the `force-poll` feature, a portable spin
+//!   fallback behind `spin-poll`; all through the vendored syscall shim),
+//!   a slotted [`reactor::TimerWheel`] for straggler and write deadlines,
+//!   and the [`reactor::Reactor`] loop both transports route their uplink
+//!   waits through — one server thread multiplexes every client
+//!   connection, no per-client threads, no sleep-spin, wakeup cost
+//!   O(ready) instead of O(registered);
+//! * [`pool`] — the shared size-class buffer pool ([`pool::BufPool`]):
+//!   exclusive page loans, alloc reuse, periodic idle-class trim, so
+//!   steady-state rounds run allocation-flat at 10k+ connections;
 //! * [`transport`] — the pluggable byte mover: a [`transport::Transport`] /
 //!   [`transport::ClientTransport`] trait pair with the original in-process
 //!   channel implementation and a real TCP one (per-connection
-//!   `FrameBuffer` reassembly on read-readiness, per-connection outbound
-//!   queues flushed by bounded progress-looping writes on
-//!   write-readiness, socket-measured byte counters, graceful shutdown
-//!   frames);
+//!   `FrameBuffer` reassembly on read-readiness backed by the shared
+//!   pool, per-connection outbound queues sharing one `Arc<[u8]>` per
+//!   broadcast and flushed by bounded progress-looping writes on
+//!   write-readiness, incremental interest registration, socket-measured
+//!   byte counters, graceful shutdown frames);
 //! * [`session`] — per-client sessions owning error-feedback memory and
 //!   round bookkeeping, plus the deterministic k-of-n participant
 //!   [`session::Scheduler`] (partial participation);
@@ -64,6 +70,7 @@ pub mod adaptive;
 pub mod aggregate;
 pub mod cluster;
 pub mod fleet;
+pub mod pool;
 pub mod reactor;
 pub mod server;
 pub mod session;
@@ -78,6 +85,7 @@ pub use aggregate::{
 };
 pub use cluster::{partition_clients, PsCluster};
 pub use fleet::{simulate_fleet, ChurnProcess, FleetReport, FleetTransport};
+pub use pool::{BufPool, PoolBuf, PoolStats};
 pub use reactor::{Poller, Reactor, TimerWheel};
 pub use server::{FedServer, RoundSummary, SlotMap};
 pub use session::{ClientSession, RoundAssembler, Scheduler, SessionStats};

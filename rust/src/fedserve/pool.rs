@@ -1,0 +1,336 @@
+//! Size-class slab pool for the reactor's hot-path byte buffers.
+//!
+//! At 10k+ live connections the frame path used to churn the allocator:
+//! every reassembly buffer, handshake scratch, and ready-list grew and
+//! died with its connection or pass. This module applies the
+//! exclusive-pool idiom — *exclusive pages* (a buffer loaned out is owned
+//! by exactly one user, no sharing, no refcounts), *alloc reuse* (a
+//! returned page parks on a size-class free list and serves the next
+//! take), and *periodic trim* (classes idle since the previous sweep give
+//! pages back to the allocator, so a burst — one jumbo broadcast, a churn
+//! spike — does not pin its high-water mark forever).
+//!
+//! Pages are power-of-two size classes from [`CLASS_MIN`] to
+//! [`CLASS_MAX`]. A take larger than the top class is served exactly and
+//! still returns to the top class (its capacity keeps it useful there); a
+//! returned buffer smaller than the bottom class is simply dropped.
+//! [`PoolBuf`] is the loan: it derefs to the underlying `Vec<u8>` and
+//! returns the allocation on drop. `BufPool` is `Clone` + `Send` + `Sync`
+//! (one mutexed free-list shared by every handle), so a transport hands
+//! the same pool to each connection.
+//!
+//! Steady-state rounds should take every buffer off a free list:
+//! [`PoolStats::allocs`] going flat after warmup is the
+//! "allocation-flat" acceptance signal the 10k-connection smoke pins.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Smallest pooled page: one reassembly probe (`READ_CHUNK`-sized reads
+/// land here).
+const CLASS_MIN_SHIFT: u32 = 12; // 4 KiB
+/// Number of power-of-two classes: 4 KiB, 8 KiB, …, 8 MiB.
+const NUM_CLASSES: usize = 12;
+/// Largest class size.
+const CLASS_MAX: usize = 1 << (CLASS_MIN_SHIFT + NUM_CLASSES as u32 - 1);
+/// Free pages a class holds before returns fall through to the allocator.
+const MAX_FREE_PER_CLASS: usize = 64;
+/// How often [`BufPool::maintain`] actually sweeps (calls in between are a
+/// clock check under the lock and nothing else).
+const TRIM_INTERVAL: Duration = Duration::from_secs(1);
+
+/// Smallest class index whose page size is ≥ `want` (clamped to the top
+/// class — oversize takes are served exactly).
+fn class_up(want: usize) -> usize {
+    let shift = usize::BITS - want.saturating_sub(1).leading_zeros();
+    (shift.saturating_sub(CLASS_MIN_SHIFT) as usize).min(NUM_CLASSES - 1)
+}
+
+/// Largest class index whose page size is ≤ `cap` (`None` below the
+/// bottom class — not worth pooling).
+fn class_down(cap: usize) -> Option<usize> {
+    if cap < (1 << CLASS_MIN_SHIFT) {
+        return None;
+    }
+    let shift = usize::BITS - 1 - cap.leading_zeros();
+    Some(((shift - CLASS_MIN_SHIFT) as usize).min(NUM_CLASSES - 1))
+}
+
+/// Pool counters, all monotone except the held gauges. `allocs` is the
+/// growth signal: it increments only when a take misses every free list
+/// and pays the allocator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// takes that allocated a fresh page (pool growth)
+    pub allocs: u64,
+    /// takes served off a free list
+    pub reuses: u64,
+    /// pages given back to the allocator (idle-class sweep + overflow)
+    pub trims: u64,
+    /// pages currently parked on free lists
+    pub held_pages: u64,
+    /// bytes currently parked on free lists
+    pub held_bytes: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    free: Vec<Vec<Vec<u8>>>,
+    /// class touched by a take since the last sweep (trim skips it)
+    touched: [bool; NUM_CLASSES],
+    stats: PoolStats,
+    last_sweep: Instant,
+}
+
+/// Shared size-class buffer pool. Cloning yields another handle to the
+/// same free lists.
+#[derive(Debug, Clone)]
+pub struct BufPool {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Default for BufPool {
+    fn default() -> BufPool {
+        BufPool::new()
+    }
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool {
+            inner: Arc::new(Mutex::new(Inner {
+                free: (0..NUM_CLASSES).map(|_| Vec::new()).collect(),
+                touched: [false; NUM_CLASSES],
+                stats: PoolStats::default(),
+                last_sweep: Instant::now(),
+            })),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // a panic while holding the lock leaves plain Vecs — still valid
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Loan out an empty buffer with capacity ≥ `want` where a page is
+    /// available, exactly `want` otherwise. The loan returns its
+    /// allocation to the pool on drop.
+    pub fn take(&self, want: usize) -> PoolBuf {
+        let want = want.max(1);
+        let mut inner = self.lock();
+        let start = class_up(want);
+        for idx in start..NUM_CLASSES {
+            // a parked page of a larger class serves a smaller take; the
+            // scan is bounded by NUM_CLASSES and in steady state hits at
+            // `start` directly. The capacity check only matters in the top
+            // class, where a take larger than the class size may exceed a
+            // parked page.
+            let fits = inner.free[idx].last().is_some_and(|b| b.capacity() >= want);
+            if fits {
+                let buf = inner.free[idx].pop().expect("checked non-empty");
+                inner.stats.reuses += 1;
+                inner.stats.held_pages -= 1;
+                inner.stats.held_bytes -= buf.capacity() as u64;
+                inner.touched[idx] = true;
+                return PoolBuf { buf, home: Some(self.clone()) };
+            }
+        }
+        inner.stats.allocs += 1;
+        inner.touched[start] = true;
+        let cap = want.max(1 << (CLASS_MIN_SHIFT + start as u32));
+        drop(inner);
+        PoolBuf { buf: Vec::with_capacity(cap), home: Some(self.clone()) }
+    }
+
+    /// Return an allocation (called by [`PoolBuf::drop`]).
+    fn put(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        let cap = buf.capacity();
+        let Some(idx) = class_down(cap) else {
+            return; // below the bottom class: not worth keeping
+        };
+        let mut inner = self.lock();
+        if inner.free[idx].len() >= MAX_FREE_PER_CLASS {
+            inner.stats.trims += 1;
+            return; // class is full: fall through to the allocator
+        }
+        inner.stats.held_pages += 1;
+        inner.stats.held_bytes += cap as u64;
+        inner.free[idx].push(buf);
+    }
+
+    /// Periodic trim: at most once per [`TRIM_INTERVAL`], classes with no
+    /// take since the previous sweep drop half their parked pages (so an
+    /// idle class decays geometrically instead of pinning its burst
+    /// high-water mark). Cheap enough to call every service pass.
+    pub fn maintain(&self) {
+        let mut inner = self.lock();
+        if inner.last_sweep.elapsed() < TRIM_INTERVAL {
+            return;
+        }
+        inner.last_sweep = Instant::now();
+        inner.sweep();
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.lock().stats
+    }
+}
+
+impl Inner {
+    /// One unthrottled idle-class sweep (see [`BufPool::maintain`]).
+    fn sweep(&mut self) {
+        for idx in 0..NUM_CLASSES {
+            if self.touched[idx] {
+                self.touched[idx] = false;
+                continue;
+            }
+            let keep = self.free[idx].len() / 2;
+            while self.free[idx].len() > keep {
+                let dropped = self.free[idx].pop().expect("len > keep >= 0");
+                self.stats.trims += 1;
+                self.stats.held_pages -= 1;
+                self.stats.held_bytes -= dropped.capacity() as u64;
+            }
+        }
+    }
+}
+
+/// An exclusive loan from a [`BufPool`]: derefs to the `Vec<u8>`, returns
+/// the allocation on drop. [`PoolBuf::detached`] is the pool-less spelling
+/// (a plain `Vec` in the same clothes) for endpoints that do not share a
+/// pool, e.g. the client-side transport.
+#[derive(Debug, Default)]
+pub struct PoolBuf {
+    buf: Vec<u8>,
+    home: Option<BufPool>,
+}
+
+impl PoolBuf {
+    /// A buffer that belongs to no pool (drops like a plain `Vec`).
+    pub fn detached() -> PoolBuf {
+        PoolBuf::default()
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = Vec<u8>;
+
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            home.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding() {
+        assert_eq!(class_up(1), 0);
+        assert_eq!(class_up(4096), 0);
+        assert_eq!(class_up(4097), 1);
+        assert_eq!(class_up(usize::MAX / 2), NUM_CLASSES - 1);
+        assert_eq!(class_down(100), None);
+        assert_eq!(class_down(4096), Some(0));
+        assert_eq!(class_down(8191), Some(0));
+        assert_eq!(class_down(8192), Some(1));
+        assert_eq!(class_down(CLASS_MAX * 4), Some(NUM_CLASSES - 1));
+    }
+
+    #[test]
+    fn take_put_take_reuses_the_allocation() {
+        let pool = BufPool::new();
+        let mut a = pool.take(10_000);
+        assert!(a.capacity() >= 10_000);
+        a.extend_from_slice(&[7u8; 64]);
+        let ptr = a.as_ptr();
+        drop(a);
+        assert_eq!(pool.stats().held_pages, 1);
+        let b = pool.take(9_000);
+        assert_eq!(b.as_ptr(), ptr, "second take must reuse the page");
+        assert!(b.is_empty(), "reused pages come back cleared");
+        let s = pool.stats();
+        assert_eq!((s.allocs, s.reuses, s.held_pages), (1, 1, 0));
+    }
+
+    #[test]
+    fn oversize_takes_are_served_exactly_and_still_pool() {
+        let pool = BufPool::new();
+        let big = CLASS_MAX * 2;
+        let a = pool.take(big);
+        assert!(a.capacity() >= big);
+        drop(a);
+        // parked in the top class, reused by the next oversize take
+        let b = pool.take(big);
+        assert_eq!(pool.stats().reuses, 1);
+        drop(b);
+        // a smaller take may also ride the big page (larger-class scan)
+        let c = pool.take(64);
+        assert!(c.capacity() >= big);
+        assert_eq!(pool.stats().reuses, 2);
+    }
+
+    #[test]
+    fn detached_is_a_plain_vec() {
+        let mut d = PoolBuf::detached();
+        d.extend_from_slice(b"hello");
+        assert_eq!(&d[..], b"hello");
+        drop(d); // no pool to return to — must not panic
+    }
+
+    #[test]
+    fn idle_classes_decay_under_sweep_and_active_ones_survive() {
+        let pool = BufPool::new();
+        for _ in 0..8 {
+            let b = pool.take(4096);
+            drop(b);
+        }
+        // takes since the (implicit) last sweep mark the class hot: the
+        // first sweep only clears the flag
+        {
+            let mut inner = pool.lock();
+            inner.sweep();
+        }
+        assert_eq!(pool.stats().held_pages, 1, "hot class keeps its page");
+        // two idle sweeps: 1 → 0 pages (keep = len / 2)
+        {
+            let mut inner = pool.lock();
+            inner.sweep();
+        }
+        assert_eq!(pool.stats().held_pages, 0);
+        assert!(pool.stats().trims >= 1);
+    }
+
+    #[test]
+    fn class_overflow_falls_through_to_the_allocator() {
+        let pool = BufPool::new();
+        let loans: Vec<PoolBuf> = (0..MAX_FREE_PER_CLASS + 5).map(|_| pool.take(4096)).collect();
+        drop(loans);
+        let s = pool.stats();
+        assert_eq!(s.held_pages as usize, MAX_FREE_PER_CLASS);
+        assert_eq!(s.trims as usize, 5);
+    }
+
+    #[test]
+    fn tiny_returns_are_dropped_not_pooled() {
+        let pool = BufPool::new();
+        pool.put(Vec::with_capacity(16));
+        assert_eq!(pool.stats().held_pages, 0);
+    }
+}

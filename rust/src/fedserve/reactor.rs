@@ -6,23 +6,43 @@
 //! (ROADMAP: async-runtime migration). This module replaces both wait
 //! primitives with a shared readiness abstraction:
 //!
-//! * [`Poller`] — *which endpoints are ready?* Backed by `poll(2)` through
-//!   the tiny vendored [`pollshim`] syscall shim (the same offline-build
-//!   idiom as the in-tree `anyhow`); non-Unix targets and the `spin-poll`
-//!   feature fall back to the portable 1 ms spin the old transport used,
-//!   behind the identical API.
+//! * [`Poller`] — *which endpoints are ready?* A registration object:
+//!   endpoints are [`Poller::register`]ed once and amended incrementally on
+//!   interest change ([`Poller::reregister`]) or close
+//!   ([`Poller::deregister`]), instead of handing the kernel the full
+//!   interest set on every wakeup. Three backends sit behind the same API,
+//!   picked at [`Poller::new`]:
+//!   - **epoll** (Linux default): edge-triggered `epoll(7)` through the
+//!     vendored [`pollshim`] shim — wakeup cost is O(ready), flat in the
+//!     number of idle connections. Edge-triggering is safe because every
+//!     consumer drains to `WouldBlock` (`drain_reads` / `drain_writes` /
+//!     `flush_outq`), and an interest-raising `reregister` re-arms a
+//!     condition that already holds (`EPOLL_CTL_MOD` reports the edge).
+//!   - **poll** (portable Unix fallback, also `--features force-poll` and
+//!     `M22_POLLER=poll`): one level-triggered `poll(2)` per wakeup built
+//!     from the registration table — O(registered), the pre-epoll
+//!     behavior.
+//!   - **spin** (non-Unix targets, `--features spin-poll`,
+//!     `M22_POLLER=spin`): the portable 1 ms sleep-spin that reports every
+//!     registration ready — a level-triggered over-approximation; a
+//!     not-actually-ready endpoint just observes `WouldBlock` and moves
+//!     on.
 //! * [`TimerWheel`] — *when is the next deadline?* A slotted timer wheel
 //!   holding straggler deadlines and per-connection write deadlines, so
-//!   timeouts are enforced by the readiness wait itself (`poll`'s timeout
-//!   argument is the wheel's next expiry) instead of sleep granularity.
+//!   timeouts are enforced by the readiness wait itself (the wait timeout
+//!   is the wheel's next expiry) instead of sleep granularity. The
+//!   earliest deadline is cached and repaired on arm/cancel/expire, so the
+//!   per-wakeup budget computation is O(1) instead of a scan over every
+//!   slot and armed timer.
 //! * [`Reactor`] + [`EventSource`] — the loop: pop completed events, fire
 //!   due timers, compute the wait budget (caller deadline ∧ next timer),
 //!   and let the source service whatever became ready. Both
 //!   `TcpServerTransport` and `ChannelTransport` implement [`EventSource`],
 //!   so `FedServer::run_round` stays transport-agnostic and a single
-//!   reactor thread drives hundreds of client sockets with zero per-client
-//!   server threads.
+//!   reactor thread drives tens of thousands of client sockets with zero
+//!   per-client server threads.
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -45,15 +65,6 @@ impl Interest {
     pub const READ_WRITE: Interest = Interest { read: true, write: true };
 }
 
-/// One endpoint registration for a [`Poller::wait`] pass.
-#[derive(Debug, Clone, Copy)]
-pub struct PollEntry {
-    pub token: Token,
-    /// Raw descriptor on Unix; ignored by the spin fallback.
-    pub fd: i32,
-    pub interest: Interest,
-}
-
 /// One endpoint's readiness result.
 #[derive(Debug, Clone, Copy)]
 pub struct Ready {
@@ -62,7 +73,7 @@ pub struct Ready {
     pub writable: bool,
 }
 
-/// The raw descriptor of a socket, for [`PollEntry::fd`].
+/// The raw descriptor of a socket, for [`Poller::register`].
 #[cfg(unix)]
 pub fn fd_of<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
     t.as_raw_fd()
@@ -74,101 +85,284 @@ pub fn fd_of<T>(_t: &T) -> i32 {
     -1
 }
 
-/// How long one spin-fallback tick sleeps (the old transport's
-/// `POLL_INTERVAL`, now confined to targets without `poll(2)`).
-#[cfg(any(not(unix), feature = "spin-poll"))]
+/// How long one spin-backend tick sleeps (the old transport's
+/// `POLL_INTERVAL`, now confined to the spin fallback).
 const SPIN_INTERVAL: Duration = Duration::from_millis(1);
 
-/// Readiness waiter over a set of endpoints. On Unix this is one `poll(2)`
-/// call per wakeup; the fallback sleeps one [`SPIN_INTERVAL`] tick and
-/// reports every entry ready (level-triggered over-approximation — a
-/// not-actually-ready endpoint just observes `WouldBlock` and moves on,
-/// which is exactly the retired spin loop's behavior).
+/// Starting size of the epoll ready-event batch; the buffer is reused
+/// across wakeups and grown only when a wait saturates it (events beyond
+/// the batch are not lost — the kernel reports them on the next wait).
+#[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+const EPOLL_EVENT_BATCH: usize = 64;
+
+#[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+const EEXIST: i32 = 17;
+
+#[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+#[derive(Debug)]
+struct EpollState {
+    ep: pollshim::Epoll,
+    /// reused kernel-event scratch (see [`EPOLL_EVENT_BATCH`])
+    buf: Vec<pollshim::EpollEvent>,
+}
+
+#[cfg(all(unix, not(feature = "spin-poll")))]
 #[derive(Debug, Default)]
-pub struct Poller {
-    #[cfg(all(unix, not(feature = "spin-poll")))]
+struct PollState {
+    /// reused `poll(2)` interest-set scratch, rebuilt from the
+    /// registration table each wakeup (the syscall itself is O(registered)
+    /// — the rebuild does not change the complexity class)
     fds: Vec<pollshim::PollFd>,
+    tokens: Vec<Token>,
+}
+
+#[derive(Debug)]
+enum Backend {
+    #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+    Epoll(EpollState),
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    Poll(PollState),
+    Spin,
+}
+
+impl Backend {
+    /// Pick the backend: `spin-poll` feature / non-Unix → spin, else the
+    /// `M22_POLLER` env var (`epoll` / `poll` / `spin`), else the
+    /// `force-poll` feature, else epoll where available with `poll(2)` as
+    /// the fallback.
+    #[cfg(any(not(unix), feature = "spin-poll"))]
+    fn pick(_choice: Option<&str>) -> Backend {
+        Backend::Spin
+    }
+
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    fn pick(choice: Option<&str>) -> Backend {
+        match choice {
+            Some("spin") => return Backend::Spin,
+            Some("poll") => return Backend::poll(),
+            Some("epoll") => {
+                if let Some(b) = Backend::epoll() {
+                    return b;
+                }
+            }
+            _ => {}
+        }
+        if cfg!(feature = "force-poll") {
+            return Backend::poll();
+        }
+        Backend::epoll().unwrap_or_else(Backend::poll)
+    }
+
+    #[cfg(all(unix, not(feature = "spin-poll")))]
+    fn poll() -> Backend {
+        Backend::Poll(PollState::default())
+    }
+
+    #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+    fn epoll() -> Option<Backend> {
+        let ep = pollshim::Epoll::new().ok()?;
+        Some(Backend::Epoll(EpollState { ep, buf: Vec::new() }))
+    }
+
+    #[cfg(all(unix, not(target_os = "linux"), not(feature = "spin-poll")))]
+    fn epoll() -> Option<Backend> {
+        None
+    }
+}
+
+/// Interest bits for an edge-triggered epoll registration. `EPOLLRDHUP`
+/// rides along so a peer half-close is a wakeup-worthy transition even for
+/// a connection that is mid-stream idle.
+#[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+fn epoll_bits(interest: Interest) -> u32 {
+    let mut ev = pollshim::EPOLLET | pollshim::EPOLLRDHUP;
+    if interest.read {
+        ev |= pollshim::EPOLLIN;
+    }
+    if interest.write {
+        ev |= pollshim::EPOLLOUT;
+    }
+    ev
+}
+
+#[cfg(all(unix, not(feature = "spin-poll")))]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1i32,
+        Some(t) if t.is_zero() => 0, // drain-only: strictly nonblocking
+        // ceil so a 100 µs budget is not rounded into a busy loop
+        Some(t) => t.as_nanos().div_ceil(1_000_000).min(i32::MAX as u128) as i32,
+    }
+}
+
+/// Readiness waiter over a registered set of endpoints. Registrations are
+/// installed once and amended incrementally; [`Poller::wait`] fills a
+/// caller-reused buffer with the ready subset. See the module docs for the
+/// three backends and how one is selected.
+#[derive(Debug)]
+pub struct Poller {
+    /// token → (fd, interest): the source of truth the kernel-side state
+    /// mirrors (and the whole state for the poll/spin backends)
+    registry: HashMap<Token, (i32, Interest)>,
+    backend: Backend,
     /// readiness wakeups served (reactor observability, flows into
     /// `TransportStats.wakeups`)
     pub wakeups: u64,
 }
 
+impl Default for Poller {
+    fn default() -> Poller {
+        Poller::new()
+    }
+}
+
 impl Poller {
     pub fn new() -> Poller {
-        Poller::default()
+        let choice = std::env::var("M22_POLLER").ok();
+        Poller {
+            registry: HashMap::new(),
+            backend: Backend::pick(choice.as_deref()),
+            wakeups: 0,
+        }
     }
 
-    /// Wait until an entry is ready or `timeout` elapses (`None` blocks).
-    /// Returns the ready subset; an empty result is a timeout.
-    pub fn wait(
-        &mut self,
-        entries: &[PollEntry],
-        timeout: Option<Duration>,
-    ) -> Result<Vec<Ready>> {
+    /// Which backend this poller runs on: `"epoll"`, `"poll"`, or
+    /// `"spin"`.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+            Backend::Epoll(_) => "epoll",
+            #[cfg(all(unix, not(feature = "spin-poll")))]
+            Backend::Poll(_) => "poll",
+            Backend::Spin => "spin",
+        }
+    }
+
+    /// How many endpoints are currently registered.
+    pub fn registered(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Install interest for a new endpoint. Registering a token that is
+    /// already present replaces its registration.
+    pub fn register(&mut self, token: Token, fd: i32, interest: Interest) -> Result<()> {
+        #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+        if let Backend::Epoll(st) = &mut self.backend {
+            let bits = epoll_bits(interest);
+            if let Err(e) = st.ep.add(fd, bits, token as u64) {
+                // the fd can survive a previous owner that skipped
+                // deregistration (dup'd descriptors): converge via MOD
+                if e.raw_os_error() != Some(EEXIST) {
+                    return Err(e.into());
+                }
+                st.ep.modify(fd, bits, token as u64)?;
+            }
+        }
+        self.registry.insert(token, (fd, interest));
+        Ok(())
+    }
+
+    /// Change an existing registration's interest. On the epoll backend
+    /// this re-arms the edge: raising write interest while the socket is
+    /// already writable reports a fresh wakeup.
+    pub fn reregister(&mut self, token: Token, fd: i32, interest: Interest) -> Result<()> {
+        #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+        if let Backend::Epoll(st) = &mut self.backend {
+            st.ep.modify(fd, epoll_bits(interest), token as u64)?;
+        }
+        self.registry.insert(token, (fd, interest));
+        Ok(())
+    }
+
+    /// Remove an endpoint. Best-effort on the kernel side: the caller may
+    /// already have closed `fd` (which drops the epoll registration
+    /// implicitly), so kernel-side errors are ignored — the registration
+    /// table is the source of truth.
+    pub fn deregister(&mut self, token: Token, fd: i32) {
+        self.registry.remove(&token);
+        #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+        if let Backend::Epoll(st) = &mut self.backend {
+            let _ = st.ep.delete(fd);
+        }
+        #[cfg(any(not(target_os = "linux"), feature = "spin-poll"))]
+        let _ = fd;
+    }
+
+    /// Wait until a registered endpoint is ready or `timeout` elapses
+    /// (`None` blocks), filling `ready` (cleared first, capacity reused)
+    /// with the ready subset; an empty result is a timeout. With nothing
+    /// registered this is a pure sleep for the budget.
+    pub fn wait(&mut self, timeout: Option<Duration>, ready: &mut Vec<Ready>) -> Result<()> {
         self.wakeups += 1;
-        self.wait_impl(entries, timeout)
-    }
-
-    #[cfg(all(unix, not(feature = "spin-poll")))]
-    fn wait_impl(
-        &mut self,
-        entries: &[PollEntry],
-        timeout: Option<Duration>,
-    ) -> Result<Vec<Ready>> {
-        self.fds.clear();
-        for e in entries {
-            let mut events = 0i16;
-            if e.interest.read {
-                events |= pollshim::POLLIN;
+        ready.clear();
+        match &mut self.backend {
+            #[cfg(all(target_os = "linux", not(feature = "spin-poll")))]
+            Backend::Epoll(st) => {
+                if st.buf.len() < EPOLL_EVENT_BATCH {
+                    st.buf.resize(EPOLL_EVENT_BATCH, pollshim::EpollEvent::default());
+                }
+                let n = st.ep.wait(&mut st.buf, timeout_ms(timeout))?;
+                for ev in &st.buf[..n] {
+                    ready.push(Ready {
+                        token: ev.cookie() as Token,
+                        // HUP/ERR surface as readable so the owner observes
+                        // the EOF / socket error on its next read and
+                        // closes cleanly
+                        readable: ev.readable(),
+                        writable: ev.writable(),
+                    });
+                }
+                if n == st.buf.len() {
+                    let grown = st.buf.len() * 2;
+                    st.buf.resize(grown, pollshim::EpollEvent::default());
+                }
             }
-            if e.interest.write {
-                events |= pollshim::POLLOUT;
+            #[cfg(all(unix, not(feature = "spin-poll")))]
+            Backend::Poll(st) => {
+                st.fds.clear();
+                st.tokens.clear();
+                for (&token, &(fd, interest)) in &self.registry {
+                    let mut events = 0i16;
+                    if interest.read {
+                        events |= pollshim::POLLIN;
+                    }
+                    if interest.write {
+                        events |= pollshim::POLLOUT;
+                    }
+                    st.fds.push(pollshim::PollFd::new(fd, events));
+                    st.tokens.push(token);
+                }
+                let n = pollshim::poll(&mut st.fds, timeout_ms(timeout))?;
+                if n > 0 {
+                    for (fd, &token) in st.fds.iter().zip(&st.tokens) {
+                        if fd.revents != 0 {
+                            ready.push(Ready {
+                                token,
+                                readable: fd.readable() || fd.invalid(),
+                                writable: fd.writable(),
+                            });
+                        }
+                    }
+                }
             }
-            self.fds.push(pollshim::PollFd::new(e.fd, events));
-        }
-        let ms = match timeout {
-            None => -1i32,
-            Some(t) if t.is_zero() => 0, // drain-only: strictly nonblocking
-            // ceil so a 100 µs budget is not rounded into a busy loop
-            Some(t) => t.as_nanos().div_ceil(1_000_000).min(i32::MAX as u128) as i32,
-        };
-        let n = pollshim::poll(&mut self.fds, ms)?;
-        let mut ready = Vec::with_capacity(n);
-        for (e, fd) in entries.iter().zip(&self.fds) {
-            if fd.revents != 0 {
-                ready.push(Ready {
-                    token: e.token,
-                    // HUP/ERR surface as readable so the owner observes the
-                    // EOF / socket error on its next read and closes cleanly
-                    readable: fd.readable() || fd.invalid(),
-                    writable: fd.writable(),
-                });
+            Backend::Spin => {
+                let nap = match timeout {
+                    None => SPIN_INTERVAL,
+                    Some(t) => t.min(SPIN_INTERVAL),
+                };
+                if !nap.is_zero() {
+                    std::thread::sleep(nap);
+                }
+                for (&token, &(_fd, interest)) in &self.registry {
+                    ready.push(Ready {
+                        token,
+                        readable: interest.read,
+                        writable: interest.write,
+                    });
+                }
             }
         }
-        Ok(ready)
-    }
-
-    #[cfg(any(not(unix), feature = "spin-poll"))]
-    fn wait_impl(
-        &mut self,
-        entries: &[PollEntry],
-        timeout: Option<Duration>,
-    ) -> Result<Vec<Ready>> {
-        let nap = match timeout {
-            None => SPIN_INTERVAL,
-            Some(t) => t.min(SPIN_INTERVAL),
-        };
-        if !nap.is_zero() {
-            std::thread::sleep(nap);
-        }
-        Ok(entries
-            .iter()
-            .map(|e| Ready {
-                token: e.token,
-                readable: e.interest.read,
-                writable: e.interest.write,
-            })
-            .collect())
+        Ok(())
     }
 }
 
@@ -192,18 +386,26 @@ struct Timer {
 /// Slotted timer wheel for straggler and write deadlines. A token → slot
 /// index makes arm/cancel/is_armed O(1) map operations (plus a retain over
 /// the one slot holding the token); the expiry sweep visits only the slots
-/// whose ticks elapsed since the last sweep; `next_deadline` is
-/// O(slots + armed). Entries beyond one wheel revolution simply stay in
-/// their slot until their revolution comes around — standard wheel
-/// semantics, no allocation per tick.
+/// whose ticks elapsed since the last sweep; `next_deadline` returns a
+/// cached minimum that is repaired on arm/cancel/expire, recomputing with
+/// a full scan only after the cached minimum itself was removed — so the
+/// reactor's per-wakeup budget computation is O(1), not O(slots + armed).
+/// Entries beyond one wheel revolution simply stay in their slot until
+/// their revolution comes around — standard wheel semantics, no allocation
+/// per tick.
 #[derive(Debug)]
 pub struct TimerWheel {
     slots: Vec<Vec<Timer>>,
     /// which slot each armed token lives in
-    index: std::collections::HashMap<Token, usize>,
+    index: HashMap<Token, usize>,
     origin: Instant,
     /// tick of the last expiry sweep
     cursor: u64,
+    /// cached earliest armed deadline (valid iff `!dirty`)
+    next: Option<Instant>,
+    /// the cached minimum may have been removed — recompute lazily on the
+    /// next `next_deadline` call
+    dirty: bool,
 }
 
 impl Default for TimerWheel {
@@ -216,9 +418,11 @@ impl TimerWheel {
     pub fn new() -> TimerWheel {
         TimerWheel {
             slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
-            index: std::collections::HashMap::new(),
+            index: HashMap::new(),
             origin: Instant::now(),
             cursor: 0,
+            next: None,
+            dirty: false,
         }
     }
 
@@ -233,12 +437,31 @@ impl TimerWheel {
         let slot = (self.tick_of(deadline) as usize) % WHEEL_SLOTS;
         self.slots[slot].push(Timer { token, deadline });
         self.index.insert(token, slot);
+        if !self.dirty {
+            self.next = Some(self.next.map_or(deadline, |n| n.min(deadline)));
+        }
     }
 
     /// Disarm `token`. A no-op if it is not armed.
     pub fn cancel(&mut self, token: Token) {
         if let Some(slot) = self.index.remove(&token) {
-            self.slots[slot].retain(|t| t.token != token);
+            let mut removed = None;
+            self.slots[slot].retain(|t| {
+                if t.token == token {
+                    removed = Some(t.deadline);
+                    false
+                } else {
+                    true
+                }
+            });
+            if self.index.is_empty() {
+                self.next = None;
+                self.dirty = false;
+            } else if !self.dirty && removed == self.next {
+                // the cached minimum left the wheel (another timer may
+                // share the instant — a recompute settles it either way)
+                self.dirty = true;
+            }
         }
     }
 
@@ -251,9 +474,14 @@ impl TimerWheel {
         self.index.contains_key(&token)
     }
 
-    /// The earliest armed deadline, if any.
-    pub fn next_deadline(&self) -> Option<Instant> {
-        self.slots.iter().flatten().map(|t| t.deadline).min()
+    /// The earliest armed deadline, if any. O(1) unless the cached minimum
+    /// was invalidated by a cancel/expire since the last call.
+    pub fn next_deadline(&mut self) -> Option<Instant> {
+        if self.dirty {
+            self.next = self.slots.iter().flatten().map(|t| t.deadline).min();
+            self.dirty = false;
+        }
+        self.next
     }
 
     /// Collect every timer due at `now` into `due`, sweeping only the
@@ -262,6 +490,8 @@ impl TimerWheel {
     pub fn expire(&mut self, now: Instant, due: &mut Vec<Token>) {
         if self.index.is_empty() {
             self.cursor = self.tick_of(now);
+            self.next = None;
+            self.dirty = false;
             return;
         }
         let fired_from = due.len();
@@ -282,6 +512,13 @@ impl TimerWheel {
             self.index.remove(t);
         }
         self.cursor = end;
+        if self.index.is_empty() {
+            self.next = None;
+            self.dirty = false;
+        } else if due.len() > fired_from {
+            // the fired timers included the earliest deadline
+            self.dirty = true;
+        }
     }
 }
 
@@ -400,6 +637,7 @@ mod tests {
         assert!(expired(&mut w, now).is_empty());
         assert_eq!(expired(&mut w, now + Duration::from_millis(15)), vec![1]);
         assert_eq!(w.armed(), 1);
+        assert_eq!(w.next_deadline(), Some(now + Duration::from_millis(30)));
         assert_eq!(expired(&mut w, now + Duration::from_millis(40)), vec![2]);
         assert_eq!(w.armed(), 0);
         assert_eq!(w.next_deadline(), None);
@@ -415,11 +653,13 @@ mod tests {
         w.cancel(7);
         assert!(!w.is_armed(7));
         assert_eq!(w.armed(), 0);
+        assert_eq!(w.next_deadline(), None);
         assert!(expired(&mut w, now + Duration::from_millis(50)).is_empty());
         // re-arming replaces the old deadline instead of duplicating it
         w.arm(9, now + Duration::from_millis(5));
         w.arm(9, now + Duration::from_millis(500));
         assert_eq!(w.armed(), 1);
+        assert_eq!(w.next_deadline(), Some(now + Duration::from_millis(500)));
         assert!(expired(&mut w, now + Duration::from_millis(100)).is_empty());
         assert_eq!(expired(&mut w, now + Duration::from_millis(600)), vec![9]);
     }
@@ -454,8 +694,60 @@ mod tests {
         assert_eq!(w.armed(), 0);
     }
 
-    // readiness assertions only hold for real poll(2): the spin fallback
-    // deliberately over-approximates
+    /// The pinned regression for the O(1) `next_deadline` cache: drive the
+    /// wheel through a deterministic arm/cancel/expire storm and check it
+    /// against a naive shadow map (the old full-scan semantics) after
+    /// every single operation — both the expiry sets and the reported
+    /// minimum must be identical throughout.
+    #[test]
+    fn cached_next_deadline_matches_reference_scan() {
+        let mut w = TimerWheel::new();
+        let t0 = Instant::now();
+        let mut shadow: HashMap<Token, Instant> = HashMap::new();
+        let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut next_r = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let mut clock = t0;
+        let mut due = Vec::new();
+        for _ in 0..4000 {
+            let r = next_r();
+            match r % 4 {
+                0 | 1 => {
+                    let token = ((r >> 8) % 64) as Token;
+                    let deadline = clock + Duration::from_millis((r >> 16) % 2048);
+                    w.arm(token, deadline);
+                    shadow.insert(token, deadline);
+                }
+                2 => {
+                    let token = ((r >> 8) % 64) as Token;
+                    w.cancel(token);
+                    shadow.remove(&token);
+                }
+                _ => {
+                    clock += Duration::from_millis((r >> 16) % 64);
+                    due.clear();
+                    w.expire(clock, &mut due);
+                    let mut expect: Vec<Token> =
+                        shadow.iter().filter(|&(_, &d)| d <= clock).map(|(&t, _)| t).collect();
+                    for t in &expect {
+                        shadow.remove(t);
+                    }
+                    due.sort_unstable();
+                    expect.sort_unstable();
+                    assert_eq!(due, expect);
+                }
+            }
+            assert_eq!(w.next_deadline(), shadow.values().min().copied());
+            assert_eq!(w.armed(), shadow.len());
+        }
+    }
+
+    // readiness assertions only hold for the real kernel backends: the
+    // spin fallback deliberately over-approximates
     #[cfg(all(unix, not(feature = "spin-poll")))]
     mod poller {
         use super::super::*;
@@ -471,16 +763,31 @@ mod tests {
         }
 
         #[test]
+        fn default_backend_matches_platform() {
+            if std::env::var("M22_POLLER").is_ok() {
+                return; // an explicit override wins — nothing to pin
+            }
+            let p = Poller::new();
+            if cfg!(feature = "force-poll") {
+                assert_eq!(p.backend_name(), "poll");
+            } else if cfg!(target_os = "linux") {
+                assert_eq!(p.backend_name(), "epoll");
+            } else {
+                assert_eq!(p.backend_name(), "poll");
+            }
+        }
+
+        #[test]
         fn reports_readability_per_token() {
             let (a, mut b) = pair();
             let (c, _d) = pair();
             b.write_all(b"ping").unwrap();
             let mut p = Poller::new();
-            let entries = [
-                PollEntry { token: 10, fd: fd_of(&a), interest: Interest::READ },
-                PollEntry { token: 20, fd: fd_of(&c), interest: Interest::READ },
-            ];
-            let ready = p.wait(&entries, Some(Duration::from_secs(5))).unwrap();
+            p.register(10, fd_of(&a), Interest::READ).unwrap();
+            p.register(20, fd_of(&c), Interest::READ).unwrap();
+            assert_eq!(p.registered(), 2);
+            let mut ready = Vec::new();
+            p.wait(Some(Duration::from_secs(5)), &mut ready).unwrap();
             assert!(ready.iter().any(|r| r.token == 10 && r.readable));
             assert!(ready.iter().all(|r| r.token != 20));
             assert_eq!(p.wakeups, 1);
@@ -490,9 +797,10 @@ mod tests {
         fn timeout_returns_empty() {
             let (a, _b) = pair();
             let mut p = Poller::new();
-            let entries = [PollEntry { token: 0, fd: fd_of(&a), interest: Interest::READ }];
+            p.register(0, fd_of(&a), Interest::READ).unwrap();
+            let mut ready = Vec::new();
             let t0 = Instant::now();
-            let ready = p.wait(&entries, Some(Duration::from_millis(40))).unwrap();
+            p.wait(Some(Duration::from_millis(40)), &mut ready).unwrap();
             assert!(ready.is_empty());
             assert!(t0.elapsed() >= Duration::from_millis(35));
         }
@@ -501,9 +809,73 @@ mod tests {
         fn write_interest_on_a_fresh_socket_is_immediate() {
             let (a, _b) = pair();
             let mut p = Poller::new();
-            let entries = [PollEntry { token: 3, fd: fd_of(&a), interest: Interest::READ_WRITE }];
-            let ready = p.wait(&entries, Some(Duration::from_secs(5))).unwrap();
+            p.register(3, fd_of(&a), Interest::READ_WRITE).unwrap();
+            let mut ready = Vec::new();
+            p.wait(Some(Duration::from_secs(5)), &mut ready).unwrap();
             assert!(ready.iter().any(|r| r.token == 3 && r.writable && !r.readable));
+        }
+
+        #[test]
+        fn reregister_toggles_write_interest() {
+            let (a, _b) = pair();
+            let mut p = Poller::new();
+            p.register(5, fd_of(&a), Interest::READ).unwrap();
+            let mut ready = Vec::new();
+            p.wait(Some(Duration::from_millis(30)), &mut ready).unwrap();
+            assert!(ready.is_empty());
+            // raising write interest while the socket is already writable
+            // must report a wakeup even on the edge-triggered backend
+            // (EPOLL_CTL_MOD re-arms the held condition)
+            p.reregister(5, fd_of(&a), Interest::READ_WRITE).unwrap();
+            p.wait(Some(Duration::from_secs(5)), &mut ready).unwrap();
+            assert!(ready.iter().any(|r| r.token == 5 && r.writable));
+            p.reregister(5, fd_of(&a), Interest::READ).unwrap();
+            p.wait(Some(Duration::from_millis(30)), &mut ready).unwrap();
+            assert!(ready.is_empty());
+        }
+
+        #[test]
+        fn deregister_silences_an_endpoint() {
+            let (a, mut b) = pair();
+            let mut p = Poller::new();
+            p.register(1, fd_of(&a), Interest::READ).unwrap();
+            p.deregister(1, fd_of(&a));
+            assert_eq!(p.registered(), 0);
+            b.write_all(b"x").unwrap();
+            let mut ready = Vec::new();
+            p.wait(Some(Duration::from_millis(30)), &mut ready).unwrap();
+            assert!(ready.is_empty());
+        }
+
+        #[test]
+        fn empty_registration_set_is_a_pure_sleep() {
+            let mut p = Poller::new();
+            let mut ready = Vec::new();
+            let t0 = Instant::now();
+            p.wait(Some(Duration::from_millis(30)), &mut ready).unwrap();
+            assert!(ready.is_empty());
+            assert!(t0.elapsed() >= Duration::from_millis(25));
+        }
+    }
+
+    #[cfg(feature = "spin-poll")]
+    mod spin_poller {
+        use super::super::*;
+
+        #[test]
+        fn spin_reports_every_registration_ready() {
+            let mut p = Poller::new();
+            assert_eq!(p.backend_name(), "spin");
+            p.register(1, -1, Interest::READ).unwrap();
+            p.register(2, -1, Interest::READ_WRITE).unwrap();
+            let mut ready = Vec::new();
+            p.wait(Some(Duration::from_millis(5)), &mut ready).unwrap();
+            assert_eq!(ready.len(), 2);
+            let two = ready.iter().find(|r| r.token == 2).unwrap();
+            assert!(two.readable && two.writable);
+            p.deregister(2, -1);
+            p.wait(Some(Duration::from_millis(5)), &mut ready).unwrap();
+            assert_eq!(ready.len(), 1);
         }
     }
 }

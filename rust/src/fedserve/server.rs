@@ -401,7 +401,7 @@ impl FedServer {
         // socket — e.g. dropped for a malformed uplink last round) cannot
         // serve this round: count it dropped instead of killing the run;
         // callers still fail when a round ends with zero uplinks.
-        let frame = Arc::new(wire::encode_round(round, w));
+        let frame: Arc<[u8]> = wire::encode_round(round, w).into();
         let mut unreachable = vec![false; participants.len()];
         for (i, &id) in participants.iter().enumerate() {
             if transport.send(id, &frame).is_err() {

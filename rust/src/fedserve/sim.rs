@@ -202,7 +202,7 @@ fn drive_rounds(
                 let caps = caps_from_measured(&transport.stats(), &participants, c.base_bits());
                 let cohort = c.cohort(&caps);
                 for (s, &client) in cohort.specs.iter().zip(&participants) {
-                    transport.send(client, &Arc::new(wire::encode_scheme(s)))?;
+                    transport.send(client, &wire::encode_scheme(s).into())?;
                 }
                 server.set_decoder(c.build_decoder()?);
                 spread = cohort.spread;
@@ -302,7 +302,7 @@ fn drive_cluster_rounds(
         if let Some(c) = ctrl.as_deref_mut() {
             c.begin_round(w);
             if c.adapted() {
-                let frame = Arc::new(wire::encode_scheme(&c.spec()));
+                let frame: Arc<[u8]> = wire::encode_scheme(&c.spec()).into();
                 for client in 0..cfg.n_clients {
                     transport.send(client, &frame)?;
                 }

@@ -11,11 +11,18 @@
 //!   [`reactor::Reactor`] loop;
 //! * [`TcpServerTransport`] / [`TcpClientTransport`] — real sockets, one
 //!   `TcpStream` per client (identified by a `Hello` handshake frame),
-//!   multiplexed by the same reactor: `poll(2)` readiness instead of the
-//!   retired 1 ms sleep-spin, per-connection [`FrameBuffer`] reassembly on
-//!   read-readiness, per-connection outbound queues flushed by bounded
-//!   progress-looping writes on write-readiness, and write deadlines on
-//!   the reactor's timer wheel.
+//!   multiplexed by the same reactor: edge-triggered `epoll` readiness on
+//!   Linux (`poll(2)` and spin fallbacks — see `reactor`), interest
+//!   registered incrementally on connection open / queue transition /
+//!   close instead of rebuilt every wakeup, per-connection
+//!   [`FrameBuffer`] reassembly on read-readiness backed by a shared
+//!   size-class [`BufPool`], per-connection outbound queues flushed by
+//!   bounded progress-looping writes on write-readiness, and write
+//!   deadlines on the reactor's timer wheel.
+//!
+//! Downlink frames cross [`Transport::send`] as `Arc<[u8]>`: a round
+//! broadcast is encoded once and every connection's outbound queue holds
+//! the same allocation, so broadcast cost is O(d + k), not O(d·k).
 //!
 //! Byte counters are measured where the bytes actually move (at the socket
 //! for TCP), so `ServerStats` reports framed-bit totals that were *observed*
@@ -25,7 +32,7 @@
 //! stalling the round; a corrupt TCP stream is closed because past a bad
 //! magic/length/CRC there is no trustworthy resynchronization point.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -36,7 +43,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::metrics::server::TransportStats;
 
-use super::reactor::{fd_of, EventSource, Interest, PollEntry, Poller, Reactor, TimerWheel, Token};
+use super::pool::{BufPool, PoolBuf};
+use super::reactor::{fd_of, EventSource, Interest, Poller, Ready, Reactor, TimerWheel, Token};
 use super::wire::{self, FrameError, Message, Scan};
 
 /// Socket read request while no frame header is visible — a small probe.
@@ -44,11 +52,12 @@ use super::wire::{self, FrameError, Message, Scan};
 /// the probe pays only for a stream's first fragment. It is kept small
 /// because `Vec::resize` zero-fills every request before `read` overwrites
 /// it: the probe size bounds the wasted memset on connections that turn
-/// out to have little to say (256 idle-ish conns × probe per collect pass).
+/// out to have little to say (10k idle-ish conns × probe per collect pass).
 const READ_CHUNK: usize = 4 * 1024;
 /// Largest single read request — bounds the per-call buffer grow (and the
 /// matching zero-fill) for jumbo frames; the reassembly loop issues as
-/// many as it needs.
+/// many as it needs. Frames themselves may be as large as
+/// `wire::MAX_PAYLOAD_BYTES` — this caps the *request size*, not the frame.
 const READ_CHUNK_MAX: usize = 1 << 20;
 /// How long a connection's outbound queue may sit without write progress
 /// before the peer is declared gone. Broadcasts larger than the kernel
@@ -71,9 +80,10 @@ pub enum Event {
 /// The server half of a transport: routed downlink frames out, framed
 /// uplink events in, graceful shutdown on close.
 pub trait Transport: Send {
-    /// Deliver `frame` to client `id`. Errors when the client is gone —
-    /// a round cannot proceed if its downlink never left.
-    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()>;
+    /// Deliver `frame` to client `id`. The frame is shared, not copied —
+    /// a broadcast clones the `Arc`, never the bytes. Errors when the
+    /// client is gone — a round cannot proceed if its downlink never left.
+    fn send(&mut self, client: usize, frame: &Arc<[u8]>) -> Result<()>;
 
     /// Wait up to `timeout` for the next uplink event. `None` blocks until
     /// an event arrives; `Some(ZERO)` only drains bytes that already
@@ -103,10 +113,13 @@ pub trait ClientTransport: Send {
 
 /// Reassembles wire frames from arbitrary read fragments: raw bytes in,
 /// whole validated frames out. Consumed prefixes are compacted lazily so
-/// steady-state rounds do not reallocate.
+/// steady-state rounds do not reallocate. The backing storage is a
+/// [`PoolBuf`]: server-side buffers borrow pages from the transport's
+/// shared [`BufPool`] (returned on connection drop), while
+/// [`FrameBuffer::new`] stays detached for pool-less endpoints.
 #[derive(Debug, Default)]
 pub struct FrameBuffer {
-    buf: Vec<u8>,
+    buf: PoolBuf,
     start: usize,
 }
 
@@ -115,8 +128,21 @@ pub struct FrameBuffer {
 const COMPACT_THRESHOLD: usize = 1 << 16;
 
 impl FrameBuffer {
+    /// A detached buffer that owns its allocation outright.
     pub fn new() -> FrameBuffer {
         FrameBuffer::default()
+    }
+
+    /// A buffer whose backing page is borrowed from `pool` and returned
+    /// to it when the `FrameBuffer` drops.
+    pub fn with_pool(pool: &BufPool) -> FrameBuffer {
+        FrameBuffer { buf: pool.take(READ_CHUNK), start: 0 }
+    }
+
+    /// Drop all buffered bytes; the backing page is kept.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.start = 0;
     }
 
     fn maybe_compact(&mut self) {
@@ -191,7 +217,7 @@ impl FrameBuffer {
 /// The uplink side is served through the same [`Reactor`] loop as TCP —
 /// its readiness primitive is the mpsc queue instead of `poll(2)`.
 pub struct ChannelTransport {
-    down: Vec<Sender<Arc<Vec<u8>>>>,
+    down: Vec<Sender<Arc<[u8]>>>,
     reactor: Reactor,
     src: ChannelSource,
     bytes_out: u64,
@@ -210,7 +236,7 @@ struct ChannelSource {
 
 /// The client half of [`ChannelTransport::pair`].
 pub struct ChannelClient {
-    rx: Receiver<Arc<Vec<u8>>>,
+    rx: Receiver<Arc<[u8]>>,
     tx: Sender<Vec<u8>>,
 }
 
@@ -311,7 +337,7 @@ impl EventSource for ChannelSource {
 }
 
 impl Transport for ChannelTransport {
-    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+    fn send(&mut self, client: usize, frame: &Arc<[u8]>) -> Result<()> {
         let n = self.down.len();
         let tx = self.down.get(client).with_context(|| format!("no client {client} (n = {n})"))?;
         tx.send(frame.clone()).map_err(|_| anyhow!("client {client} is gone"))?;
@@ -325,7 +351,7 @@ impl Transport for ChannelTransport {
     }
 
     fn close(&mut self) -> Result<()> {
-        let f = Arc::new(wire::encode_shutdown());
+        let f: Arc<[u8]> = wire::encode_shutdown().into();
         for (id, tx) in self.down.iter().enumerate() {
             if tx.send(f.clone()).is_ok() {
                 self.bytes_out += f.len() as u64;
@@ -338,14 +364,15 @@ impl Transport for ChannelTransport {
     fn stats(&self) -> TransportStats {
         TransportStats {
             label: "channel",
+            backend: "mpsc",
             bytes_in: self.src.bytes_in,
             bytes_out: self.bytes_out,
             decode_errors: self.src.decode_errors,
             per_client: self.src.per_client.clone(),
-            disconnects: 0,
             wakeups: self.src.wakeups,
             // mpsc delivery is the send itself: the ledger never lies here
             socket_measured: false,
+            ..Default::default()
         }
     }
 }
@@ -368,10 +395,11 @@ impl ClientTransport for ChannelClient {
 // TCP transport
 // ---------------------------------------------------------------------
 
-/// One frame queued for a connection, partially written up to `off`.
+/// One frame queued for a connection, partially written up to `off`. The
+/// frame bytes are shared across every queue holding the same broadcast.
 #[derive(Debug)]
 struct OutFrame {
-    frame: Arc<Vec<u8>>,
+    frame: Arc<[u8]>,
     off: usize,
 }
 
@@ -382,19 +410,23 @@ struct TcpConn {
     rx: FrameBuffer,
     outq: VecDeque<OutFrame>,
     open: bool,
+    /// mirror of the kernel-side write interest (true while `outq` backs
+    /// up) — interest changes are pushed incrementally, never rebuilt
+    want_write: bool,
     bytes_in: u64,
     bytes_out: u64,
 }
 
 impl TcpConn {
-    fn new(stream: TcpStream) -> TcpConn {
+    fn new(stream: TcpStream, rx: FrameBuffer) -> TcpConn {
         let fd = fd_of(&stream);
         TcpConn {
             stream,
             fd,
-            rx: FrameBuffer::new(),
+            rx,
             outq: VecDeque::new(),
             open: true,
+            want_write: false,
             bytes_in: 0,
             bytes_out: 0,
         }
@@ -412,6 +444,11 @@ impl TcpConn {
 /// the kernel buffer fills (`WouldBlock`), the queue empties, or a hard
 /// error. Byte accounting happens here so partial writes are counted.
 /// Returns whether any bytes moved.
+///
+/// Draining to `WouldBlock` (never stopping early) is also what keeps the
+/// edge-triggered backend sound: after every flush the socket is either
+/// drained or was observed unwritable, so a future writability edge is
+/// guaranteed whenever the queue is non-empty.
 fn flush_outq(conn: &mut TcpConn) -> std::io::Result<bool> {
     let mut progressed = false;
     while let Some(front) = conn.outq.front_mut() {
@@ -436,7 +473,9 @@ fn flush_outq(conn: &mut TcpConn) -> std::io::Result<bool> {
 }
 
 /// The TCP transport's [`EventSource`]: every client connection behind one
-/// `poll(2)` readiness set.
+/// readiness set, registered with the [`Poller`] once at accept time and
+/// amended incrementally — a wakeup visits only the connections the kernel
+/// reports ready, so its cost is O(ready), not O(connections).
 #[derive(Debug)]
 struct TcpSource {
     conns: Vec<TcpConn>,
@@ -445,63 +484,97 @@ struct TcpSource {
     poller: Poller,
     decode_errors: u64,
     disconnects: u64,
-    /// reusable readiness-set scratch: the poll entries are rebuilt every
-    /// service pass (interest depends on each queue), but the backing
-    /// allocation is hot-path state — at 256 connections a per-pass
-    /// `Vec::with_capacity` was one avoidable heap round-trip per wakeup
-    entries: Vec<PollEntry>,
+    /// shared page pool: every connection's `FrameBuffer` borrows from it,
+    /// so steady-state rounds recycle read buffers instead of allocating
+    pool: BufPool,
+    /// reusable readiness-set scratch for [`Poller::wait`]
+    ready: Vec<Ready>,
 }
 
 impl TcpSource {
+    /// Declare a connection dead: shut the socket down, drop its poller
+    /// registration, count the disconnect, and disarm its write deadline
+    /// so the wheel never wakes the reactor for a corpse.
+    fn kill(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let conn = &mut self.conns[c];
+        conn.kill();
+        let fd = conn.fd;
+        self.poller.deregister(c, fd);
+        self.disconnects += 1;
+        wheel.cancel(c);
+    }
+
+    /// Push the kernel-side write interest into sync with the outbound
+    /// queue: raised when a queue backs up, dropped when it empties. On
+    /// epoll the MOD re-arms the edge (raising interest on an
+    /// already-writable socket still wakes the next wait); on poll,
+    /// dropping interest is what stops an idle-but-writable socket from
+    /// busy-waking every pass.
+    fn sync_write_interest(&mut self, c: usize) -> Result<()> {
+        let conn = &mut self.conns[c];
+        if !conn.open {
+            return Ok(());
+        }
+        let want = !conn.outq.is_empty();
+        if want != conn.want_write {
+            conn.want_write = want;
+            let fd = conn.fd;
+            let interest = if want { Interest::READ_WRITE } else { Interest::READ };
+            self.poller.reregister(c, fd, interest).context("reregister")?;
+        }
+        Ok(())
+    }
+
     /// Read a ready connection until `WouldBlock`, feeding reassembly.
-    /// A kill here (EOF, socket error) also disarms the connection's
-    /// write deadline so the wheel never wakes the reactor for a corpse.
+    /// Looping to `WouldBlock` is mandatory under edge-triggering: the
+    /// kernel reports the *transition* to readable, so bytes left behind
+    /// would wait silently for the peer's next send.
     fn drain_reads(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let mut dead = false;
         let conn = &mut self.conns[c];
         loop {
             match conn.rx.read_from(&mut conn.stream) {
                 Ok(0) => {
                     // peer closed; a partial frame left behind is simply
                     // lost bytes, not a protocol error
-                    conn.kill();
-                    self.disconnects += 1;
-                    wheel.cancel(c);
+                    dead = true;
                     break;
                 }
                 Ok(k) => conn.bytes_in += k as u64,
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(_) => {
-                    conn.kill();
-                    self.disconnects += 1;
-                    wheel.cancel(c);
+                    dead = true;
                     break;
                 }
             }
+        }
+        if dead {
+            self.kill(wheel, c);
         }
     }
 
     /// Flush a ready connection's outbound queue and keep its write
     /// deadline honest: progress re-arms the timer, an emptied queue
-    /// cancels it, a hard error kills the connection.
-    fn drain_writes(&mut self, wheel: &mut TimerWheel, c: usize) {
-        let conn = &mut self.conns[c];
-        if conn.outq.is_empty() {
+    /// cancels it, a hard error kills the connection. Ends by re-syncing
+    /// write interest (an emptied queue drops it).
+    fn drain_writes(&mut self, wheel: &mut TimerWheel, c: usize) -> Result<()> {
+        if self.conns[c].outq.is_empty() {
             wheel.cancel(c);
-            return;
+            return self.sync_write_interest(c);
         }
-        match flush_outq(conn) {
+        match flush_outq(&mut self.conns[c]) {
             Err(_) => {
-                conn.kill();
-                self.disconnects += 1;
-                wheel.cancel(c);
+                self.kill(wheel, c);
+                Ok(())
             }
             Ok(progressed) => {
-                if conn.outq.is_empty() {
+                if self.conns[c].outq.is_empty() {
                     wheel.cancel(c);
                 } else if progressed {
                     wheel.arm(c, Instant::now() + WRITE_TIMEOUT);
                 }
+                self.sync_write_interest(c)
             }
         }
     }
@@ -524,8 +597,10 @@ impl EventSource for TcpSource {
                     // trustworthy length prefix there is nothing to skip
                     // by, so the connection is closed
                     let dropped = conn.rx.pending();
-                    conn.rx = FrameBuffer::new();
+                    conn.rx.clear();
                     conn.kill();
+                    let fd = conn.fd;
+                    self.poller.deregister(c, fd);
                     wheel.cancel(c);
                     self.decode_errors += 1;
                     self.cursor = (c + 1) % n;
@@ -541,28 +616,26 @@ impl EventSource for TcpSource {
     }
 
     fn service(&mut self, wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
-        self.entries.clear();
-        for (i, conn) in self.conns.iter().enumerate() {
-            if conn.open {
-                self.entries.push(PollEntry {
-                    token: i,
-                    fd: conn.fd,
-                    interest: Interest { read: true, write: !conn.outq.is_empty() },
-                });
-            }
-        }
-        let ready = self.poller.wait(&self.entries, budget).context("poll")?;
-        for r in ready {
-            if !self.conns[r.token].open {
-                continue; // killed by an earlier entry this pass
+        // the ready set is owned scratch, moved out so the poller and the
+        // connections can be borrowed while iterating it
+        let mut ready = std::mem::take(&mut self.ready);
+        self.poller.wait(budget, &mut ready).context("poll")?;
+        for &r in &ready {
+            let Some(conn) = self.conns.get(r.token) else {
+                continue; // not a connection token (stale kernel event)
+            };
+            if !conn.open {
+                continue; // killed by an earlier event this pass
             }
             if r.readable {
                 self.drain_reads(wheel, r.token);
             }
             if r.writable && self.conns[r.token].open {
-                self.drain_writes(wheel, r.token);
+                self.drain_writes(wheel, r.token)?;
             }
         }
+        self.ready = ready;
+        self.pool.maintain();
         Ok(())
     }
 
@@ -574,6 +647,8 @@ impl EventSource for TcpSource {
         };
         if conn.open && !conn.outq.is_empty() {
             conn.kill();
+            let fd = conn.fd;
+            self.poller.deregister(token, fd);
             self.disconnects += 1;
         }
         wheel.cancel(token);
@@ -596,12 +671,32 @@ pub struct TcpServerTransport {
 /// The listener's token during the accept loop (never a connection index).
 const LISTENER_TOKEN: Token = usize::MAX;
 
+/// Seat a handshaken connection in its roster slot, refusing out-of-range
+/// and duplicate ids.
+fn place(
+    slots: &mut [Option<TcpConn>],
+    filled: &mut usize,
+    conn: TcpConn,
+    id: usize,
+    peer: std::net::SocketAddr,
+) -> Result<()> {
+    let n = slots.len();
+    ensure!(id < n, "{peer} introduced itself as client {id}, but n = {n}");
+    ensure!(slots[id].is_none(), "duplicate connection for client {id} from {peer}");
+    slots[id] = Some(conn);
+    *filled += 1;
+    Ok(())
+}
+
 impl TcpServerTransport {
     /// Accept exactly `n` clients off `listener`; each must introduce
     /// itself with a `Hello` frame naming a unique id in `0..n` before
     /// `timeout` elapses. Accepting and handshaking are multiplexed on the
     /// same readiness loop the round path uses, so a byte-dribbling peer
     /// delays nobody and the deadline is one hard bound for everything.
+    /// Half-connected sockets are polled under their fd as a token
+    /// (disjoint from both `LISTENER_TOKEN` and the final `0..n` ids,
+    /// which are registered only after every handshake token is gone).
     pub fn accept(
         listener: &TcpListener,
         n: usize,
@@ -611,26 +706,20 @@ impl TcpServerTransport {
         let deadline = Instant::now() + timeout;
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let mut poller = Poller::new();
+        let pool = BufPool::new();
+        poller.register(LISTENER_TOKEN, fd_of(listener), Interest::READ).context("listener")?;
         let mut slots: Vec<Option<TcpConn>> = Vec::new();
         slots.resize_with(n, || None);
         let mut filled = 0usize;
-        let mut pending: Vec<(TcpConn, std::net::SocketAddr)> = Vec::new();
+        let mut pending: HashMap<Token, (TcpConn, std::net::SocketAddr)> = HashMap::new();
+        let mut ready: Vec<Ready> = Vec::new();
         while filled < n {
             let now = Instant::now();
             if now >= deadline {
                 bail!("only {filled} of {n} clients connected before the accept deadline");
             }
-            let mut entries = vec![PollEntry {
-                token: LISTENER_TOKEN,
-                fd: fd_of(listener),
-                interest: Interest::READ,
-            }];
-            for (i, (conn, _)) in pending.iter().enumerate() {
-                entries.push(PollEntry { token: i, fd: conn.fd, interest: Interest::READ });
-            }
-            let ready = poller.wait(&entries, Some(deadline - now)).context("accept poll")?;
-            let mut readable: Vec<usize> = Vec::new();
-            for r in &ready {
+            poller.wait(Some(deadline - now), &mut ready).context("accept poll")?;
+            for &r in &ready {
                 if r.token == LISTENER_TOKEN {
                     loop {
                         match listener.accept() {
@@ -642,34 +731,51 @@ impl TcpServerTransport {
                                 stream
                                     .set_nonblocking(true)
                                     .with_context(|| format!("nonblocking mode for {peer}"))?;
-                                pending.push((TcpConn::new(stream), peer));
+                                let mut conn =
+                                    TcpConn::new(stream, FrameBuffer::with_pool(&pool));
+                                // the hello often rides in right behind the
+                                // connection: try it now, register the
+                                // socket only if it is still incomplete
+                                match handshake_step(&mut conn)
+                                    .with_context(|| format!("handshake with {peer}"))?
+                                {
+                                    Some(id) => place(&mut slots, &mut filled, conn, id, peer)?,
+                                    None => {
+                                        let tok = conn.fd as Token;
+                                        poller.register(tok, conn.fd, Interest::READ)?;
+                                        pending.insert(tok, (conn, peer));
+                                    }
+                                }
                             }
                             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                             Err(e) if e.kind() == ErrorKind::Interrupted => {}
                             Err(e) => return Err(e).context("accept"),
                         }
                     }
-                } else {
-                    readable.push(r.token);
+                } else if let Some((conn, peer)) = pending.get_mut(&r.token) {
+                    let peer = *peer;
+                    let id = handshake_step(conn)
+                        .with_context(|| format!("handshake with {peer}"))?;
+                    if let Some(id) = id {
+                        let (conn, _) = pending.remove(&r.token).expect("present");
+                        poller.deregister(r.token, conn.fd);
+                        place(&mut slots, &mut filled, conn, id, peer)?;
+                    }
                 }
             }
-            // descending order so swap_remove never disturbs an index we
-            // have yet to visit
-            readable.sort_unstable();
-            for i in readable.into_iter().rev() {
-                let (conn, peer) = &mut pending[i];
-                let id = handshake_step(conn).with_context(|| format!("handshake with {peer}"))?;
-                let Some(id) = id else {
-                    continue; // hello not complete yet
-                };
-                let peer = *peer;
-                ensure!(id < n, "{peer} introduced itself as client {id}, but n = {n}");
-                ensure!(slots[id].is_none(), "duplicate connection for client {id} from {peer}");
-                slots[id] = Some(pending.swap_remove(i).0);
-                filled += 1;
-            }
         }
-        let conns = slots.into_iter().map(|s| s.expect("filled == n")).collect();
+        poller.deregister(LISTENER_TOKEN, fd_of(listener));
+        // sockets beyond the n the roster needed must leave the registry
+        // too — the poll backend would spin on their dead fds otherwise
+        for (tok, (conn, _)) in pending.drain() {
+            poller.deregister(tok, conn.fd);
+        }
+        let conns: Vec<TcpConn> = slots.into_iter().map(|s| s.expect("filled == n")).collect();
+        for (i, conn) in conns.iter().enumerate() {
+            poller
+                .register(i, conn.fd, Interest::READ)
+                .with_context(|| format!("register client {i}"))?;
+        }
         // the wakeup counter measures round traffic, not connection setup
         poller.wakeups = 0;
         Ok(TcpServerTransport {
@@ -680,7 +786,8 @@ impl TcpServerTransport {
                 poller,
                 decode_errors: 0,
                 disconnects: 0,
-                entries: Vec::with_capacity(n),
+                pool,
+                ready: Vec::new(),
             },
         })
     }
@@ -709,7 +816,7 @@ fn handshake_step(conn: &mut TcpConn) -> Result<Option<usize>> {
 }
 
 impl Transport for TcpServerTransport {
-    fn send(&mut self, client: usize, frame: &Arc<Vec<u8>>) -> Result<()> {
+    fn send(&mut self, client: usize, frame: &Arc<[u8]>) -> Result<()> {
         let n = self.src.conns.len();
         let conn = self
             .src
@@ -723,9 +830,7 @@ impl Transport for TcpServerTransport {
         // inside `poll`, under a timer-wheel deadline
         match flush_outq(conn) {
             Err(e) => {
-                conn.kill();
-                self.src.disconnects += 1;
-                self.reactor.wheel.cancel(client);
+                self.src.kill(&mut self.reactor.wheel, client);
                 Err(e).with_context(|| format!("downlink write to client {client}"))
             }
             Ok(progressed) => {
@@ -740,7 +845,7 @@ impl Transport for TcpServerTransport {
                     // while its queue grows unboundedly
                     self.reactor.wheel.arm(client, Instant::now() + WRITE_TIMEOUT);
                 }
-                Ok(())
+                self.src.sync_write_interest(client)
             }
         }
     }
@@ -750,32 +855,36 @@ impl Transport for TcpServerTransport {
     }
 
     fn close(&mut self) -> Result<()> {
-        let f = Arc::new(wire::encode_shutdown());
-        for conn in self.src.conns.iter_mut().filter(|c| c.open) {
-            conn.outq.push_back(OutFrame { frame: f.clone(), off: 0 });
+        let f: Arc<[u8]> = wire::encode_shutdown().into();
+        for c in 0..self.src.conns.len() {
+            if self.src.conns[c].open {
+                self.src.conns[c].outq.push_back(OutFrame { frame: f.clone(), off: 0 });
+                self.src.sync_write_interest(c)?;
+            }
         }
         // multiplexed flush of every queue under one hard deadline
         let deadline = Instant::now() + CLOSE_TIMEOUT;
-        loop {
-            let mut entries = Vec::new();
-            for (i, conn) in self.src.conns.iter().enumerate() {
-                if conn.open && !conn.outq.is_empty() {
-                    entries.push(PollEntry { token: i, fd: conn.fd, interest: Interest::WRITE });
-                }
-            }
-            if entries.is_empty() {
-                break;
-            }
+        let mut ready: Vec<Ready> = Vec::new();
+        while self.src.conns.iter().any(|c| c.open && !c.outq.is_empty()) {
             let now = Instant::now();
             if now >= deadline {
                 break; // unsendable peers lose their shutdown frame
             }
-            let ready = self.src.poller.wait(&entries, Some(deadline - now)).context("poll")?;
-            for r in ready {
-                let conn = &mut self.src.conns[r.token];
-                if conn.open && flush_outq(conn).is_err() {
+            self.src.poller.wait(Some(deadline - now), &mut ready).context("poll")?;
+            for &r in &ready {
+                let Some(conn) = self.src.conns.get_mut(r.token) else {
+                    continue;
+                };
+                if !conn.open || !r.writable || conn.outq.is_empty() {
+                    continue; // reads are the round loop's business
+                }
+                if flush_outq(conn).is_err() {
                     conn.kill();
+                    let fd = conn.fd;
+                    self.src.poller.deregister(r.token, fd);
                     self.reactor.wheel.cancel(r.token);
+                } else {
+                    self.src.sync_write_interest(r.token)?;
                 }
             }
         }
@@ -790,7 +899,12 @@ impl Transport for TcpServerTransport {
     fn stats(&self) -> TransportStats {
         // byte counts are incremented at read/write: socket truth, so the
         // server reconciles its per-client downlink ledger against them
-        let mut t = TransportStats { label: "tcp", socket_measured: true, ..Default::default() };
+        let mut t = TransportStats {
+            label: "tcp",
+            backend: self.src.poller.backend_name(),
+            socket_measured: true,
+            ..Default::default()
+        };
         for conn in &self.src.conns {
             t.bytes_in += conn.bytes_in;
             t.bytes_out += conn.bytes_out;
@@ -799,6 +913,11 @@ impl Transport for TcpServerTransport {
         t.decode_errors = self.src.decode_errors;
         t.disconnects = self.src.disconnects;
         t.wakeups = self.src.poller.wakeups;
+        let p = self.src.pool.stats();
+        t.pool_allocs = p.allocs;
+        t.pool_reuses = p.reuses;
+        t.pool_trims = p.trims;
+        t.pool_held_bytes = p.held_bytes;
         t
     }
 }
@@ -947,9 +1066,25 @@ mod tests {
     }
 
     #[test]
+    fn frame_buffer_pooled_page_returns_on_drop() {
+        let pool = BufPool::new();
+        {
+            let mut fb = FrameBuffer::with_pool(&pool);
+            fb.extend(&wire::encode_hello(1));
+            assert!(fb.next_frame().unwrap().is_some());
+        }
+        let s = pool.stats();
+        assert_eq!(s.allocs, 1);
+        assert_eq!(s.held_pages, 1, "page must come home on drop");
+        let fb2 = FrameBuffer::with_pool(&pool);
+        assert_eq!(pool.stats().reuses, 1, "second buffer reuses the page");
+        drop(fb2);
+    }
+
+    #[test]
     fn channel_pair_roundtrip_and_accounting() {
         let (mut server, mut clients) = ChannelTransport::pair(2);
-        let down = Arc::new(wire::encode_round(0, &[1.0f32; 4]));
+        let down: Arc<[u8]> = wire::encode_round(0, &[1.0f32; 4]).into();
         server.send(1, &down).unwrap();
         match clients[1].recv().unwrap().unwrap() {
             Message::Round { round: 0, weights } => assert_eq!(weights.len(), 4),
@@ -972,6 +1107,20 @@ mod tests {
         assert_eq!(s.per_client.len(), 2);
         assert_eq!(s.per_client[1].1, down.len() as u64);
         assert!(s.wakeups > 0);
+    }
+
+    #[test]
+    fn channel_broadcast_shares_one_allocation() {
+        // a k-client broadcast must be the same Arc in every queue: k + 1
+        // strong counts, zero byte copies
+        let k = 64;
+        let (mut server, clients) = ChannelTransport::pair(k);
+        let down: Arc<[u8]> = wire::encode_round(1, &[0.5f32; 1024]).into();
+        for c in 0..k {
+            server.send(c, &down).unwrap();
+        }
+        assert_eq!(Arc::strong_count(&down), k + 1);
+        drop(clients);
     }
 
     #[test]
@@ -1028,7 +1177,7 @@ mod tests {
 
             let mut server =
                 TcpServerTransport::accept(&listener, 2, Duration::from_secs(10)).unwrap();
-            let down = Arc::new(wire::encode_round(7, &[0.5f32; 3]));
+            let down: Arc<[u8]> = wire::encode_round(7, &[0.5f32; 3]).into();
             server.send(0, &down).unwrap();
             server.send(1, &down).unwrap();
             let mut ok = 0;
@@ -1043,6 +1192,7 @@ mod tests {
             assert_eq!((ok, bad), (1, 1));
             let s = server.stats();
             assert_eq!(s.label, "tcp");
+            assert!(s.backend == "epoll" || s.backend == "poll" || s.backend == "spin");
             assert_eq!(s.decode_errors, 1);
             assert!(s.bytes_in > 0 && s.bytes_out > 0);
             assert_eq!(s.per_client.len(), 2);
@@ -1079,7 +1229,7 @@ mod tests {
 
             let mut server =
                 TcpServerTransport::accept(&listener, 1, Duration::from_secs(10)).unwrap();
-            let down = Arc::new(wire::encode_round(3, &vec![0.25f32; d]));
+            let down: Arc<[u8]> = wire::encode_round(3, &vec![0.25f32; d]).into();
             server.send(0, &down).unwrap();
             match server.poll(Some(Duration::from_secs(30))).unwrap().unwrap() {
                 Event::Frame { msg: Message::Hello { client: 3 }, .. } => {}

@@ -60,11 +60,28 @@ pub const UPDATE_OVERHEAD: usize = FRAME_OVERHEAD + 4 + 8 + 8 + 1 + 56 + 4;
 /// The server treats error uplinks carrying it as current, never stale.
 pub const ROUND_UNKNOWN: usize = usize::MAX;
 
-/// Largest payload a frame may declare. The CRC only validates a length
-/// prefix once the whole frame has arrived, so a streaming transport must
-/// bound how many bytes it is willing to buffer on the strength of an
-/// unverified header (256 MiB ≈ a 67M-parameter round broadcast).
+/// Largest payload a frame may declare — the ONE cap governing the whole
+/// frame path: encode ([`payload_fits`], enforced by the frame builder),
+/// header-only sizing ([`frame_len`]), and streaming reassembly
+/// ([`scan_prefix`]). Both directions reject the same length with the
+/// same [`FrameError::Oversized`]. The CRC only validates a length prefix
+/// once the whole frame has arrived, so a streaming transport must bound
+/// how many bytes it is willing to buffer on the strength of an
+/// unverified header (256 MiB ≈ a 67M-parameter round broadcast). The
+/// transport's read-request size (`READ_CHUNK_MAX`) bounds single `read`
+/// calls, not frames — frames up to this cap stream in across calls.
 pub const MAX_PAYLOAD_BYTES: usize = 1 << 28;
+
+/// Check a payload length against [`MAX_PAYLOAD_BYTES`]: the encode-side
+/// spelling of the exact check the read path applies to a header's
+/// declared length, so an encoder can never emit a frame every reader
+/// would reject.
+pub fn payload_fits(len: usize) -> Result<(), FrameError> {
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(FrameError::Oversized { len });
+    }
+    Ok(())
+}
 
 const KIND_ROUND: u8 = 1;
 const KIND_SHUTDOWN: u8 = 2;
@@ -179,6 +196,12 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 }
 
 fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    // an oversized payload is a programming error at the encode call site:
+    // no reader would accept the frame, and past u32::MAX the length
+    // prefix would silently truncate — fail here, where the mistake is
+    if let Err(e) = payload_fits(payload.len()) {
+        panic!("refusing to encode: {e}");
+    }
     let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
@@ -805,6 +828,28 @@ mod tests {
         let mut f = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND];
         f.extend_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(scan_prefix(&f), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn payload_cap_boundary_is_identical_on_both_sides() {
+        // encode side: exactly at the cap passes, one past it is refused
+        assert!(payload_fits(MAX_PAYLOAD_BYTES).is_ok());
+        assert_eq!(
+            payload_fits(MAX_PAYLOAD_BYTES + 1),
+            Err(FrameError::Oversized { len: MAX_PAYLOAD_BYTES + 1 })
+        );
+        // decode side, header-only (no 256 MiB allocation needed): a
+        // header declaring exactly the cap sizes the frame, cap + 1 is
+        // rejected with the same typed error the encode side raises
+        let mut hdr = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND];
+        hdr.extend_from_slice(&(MAX_PAYLOAD_BYTES as u32).to_le_bytes());
+        assert_eq!(frame_len(&hdr), Ok(Some(FRAME_OVERHEAD + MAX_PAYLOAD_BYTES)));
+        let mut over = hdr.clone();
+        over[4..8].copy_from_slice(&((MAX_PAYLOAD_BYTES + 1) as u32).to_le_bytes());
+        let want = FrameError::Oversized { len: MAX_PAYLOAD_BYTES + 1 };
+        assert_eq!(frame_len(&over), Err(want.clone()));
+        // and the streaming scanner agrees byte-for-byte
+        assert_eq!(scan_prefix(&over).map(|_| ()).unwrap_err(), want);
     }
 
     #[test]

@@ -64,6 +64,10 @@ impl Default for RoundTiming {
 pub struct TransportStats {
     /// transport implementation ("channel", "tcp"; "" when unset)
     pub label: &'static str,
+    /// readiness backend serving the transport's wakeups ("epoll",
+    /// "poll", "spin" for TCP; "mpsc" for the channel pair; "" when the
+    /// transport has no readiness primitive)
+    pub backend: &'static str,
     pub bytes_in: u64,
     pub bytes_out: u64,
     /// frames the transport rejected at decode
@@ -83,6 +87,15 @@ pub struct TransportStats {
     /// are never credited as delivered. The in-process channel counts at
     /// `send`, which for mpsc *is* delivery, so it leaves this unset.
     pub socket_measured: bool,
+    /// buffer-pool takes that paid the allocator (the pool-growth signal:
+    /// flat across steady-state rounds means allocation-flat operation)
+    pub pool_allocs: u64,
+    /// buffer-pool takes served off a parked page
+    pub pool_reuses: u64,
+    /// pages the pool returned to the allocator (idle trim + overflow)
+    pub pool_trims: u64,
+    /// bytes currently parked on the pool's free lists
+    pub pool_held_bytes: u64,
 }
 
 /// Accumulated server statistics for one run.
@@ -423,6 +436,7 @@ mod tests {
         assert_eq!(s.total_decode_errors(), 3);
         s.set_transport(TransportStats {
             label: "tcp",
+            backend: "epoll",
             bytes_in: 4096,
             bytes_out: 1024,
             decode_errors: 3,
@@ -430,6 +444,7 @@ mod tests {
             disconnects: 2,
             wakeups: 40,
             socket_measured: true,
+            ..Default::default()
         });
         let sum = s.summary();
         assert!(sum.contains("wire[tcp]: 4096 B in / 1024 B out, 3 decode errors"), "{sum}");

@@ -1,0 +1,69 @@
+//! Byte accounting for round broadcasts (C100K regression).
+//!
+//! Queueing one broadcast to k clients used to copy the encoded frame k
+//! times; now every outbound queue holds the same `Arc<[u8]>`. This test
+//! pins that with a counting global allocator: fanning a multi-megabyte
+//! frame out to 256 clients must allocate a small fraction of ONE frame
+//! (queue nodes), nowhere near 256 frames.
+//!
+//! The counting allocator is process-global, so this file holds exactly
+//! one test — no parallel neighbors polluting the measurement window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use m22::fedserve::transport::{ChannelTransport, Transport};
+use m22::fedserve::wire;
+
+/// Counts bytes *requested* (allocations and realloc growth); frees are
+/// deliberately not subtracted — the test bounds allocation traffic, not
+/// the high-water mark.
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add((new_size as u64).saturating_sub(layout.size() as u64), Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn broadcast_allocations_do_not_scale_with_fleet_size() {
+    let k = 256usize;
+    let d = 1usize << 20; // 4 MiB of weights
+    let (mut transport, clients) = ChannelTransport::pair(k);
+    let w = vec![1.0f32; d];
+    let frame: Arc<[u8]> = wire::encode_round(7, &w).into();
+    let frame_len = frame.len() as u64;
+    assert!(frame_len > 4_000_000);
+
+    let before = BYTES.load(Ordering::Relaxed);
+    for c in 0..k {
+        transport.send(c, &frame).unwrap();
+    }
+    let fanout = BYTES.load(Ordering::Relaxed) - before;
+
+    // the old copy-per-client path cost k × frame_len ≈ 1 GiB here; the
+    // Arc fan-out costs queue nodes only — well under one frame's worth
+    assert!(
+        fanout < frame_len / 8,
+        "broadcast to {k} clients allocated {fanout} bytes (one frame is {frame_len})"
+    );
+    // and every queue really holds the same bytes: one Arc per queued
+    // downlink plus the caller's handle
+    assert_eq!(Arc::strong_count(&frame), k + 1);
+    drop(clients);
+}

@@ -1,0 +1,182 @@
+//! Integration: the reactor at C10K scale.
+//!
+//! The C100K issue's headline claim is that one server thread can hold ten
+//! thousand mostly-idle connections without the event loop charging per
+//! *registered* socket. This suite drives the real `TcpServerTransport`
+//! (edge-triggered epoll by default, level-triggered `poll(2)` under
+//! `--features force-poll`) with 10k loopback clients of which only 64
+//! ever speak, and pins the three scaling properties:
+//!
+//! * the straggler deadline still lands within 10 ms — timer accuracy
+//!   does not degrade with fan-in;
+//! * `TransportStats.wakeups` stays a small constant per round — cost is
+//!   O(ready), not O(registered);
+//! * the buffer pool performs **zero** new allocations in steady-state
+//!   rounds — every uplink lands in a page taken at accept time.
+//!
+//! The spin fallback naps once per millisecond by design (its wakeups ARE
+//! O(deadline)), so this file is compiled out under `spin-poll`; the spin
+//! CI lane runs the ordinary reactor suite instead.
+#![cfg(all(unix, not(feature = "spin-poll")))]
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use m22::compress::{encode_once, NoCompression};
+use m22::config::ServerConfig;
+use m22::coordinator::Uplink;
+use m22::fedserve::sim::sim_spec;
+use m22::fedserve::transport::{ClientTransport, TcpClientTransport, TcpServerTransport, Transport};
+use m22::fedserve::wire;
+use m22::fedserve::FedServer;
+
+/// Dialing 10k sockets sequentially takes a while on a loaded runner.
+const NET_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[test]
+#[ignore = "10k sockets + a 10 ms timing budget: run serially — CI does \
+            `--include-ignored --test-threads=1` in the c100k lane"]
+fn ten_thousand_idle_connections_cost_nothing_per_round() {
+    let want = 10_000u64;
+    // one server end + one client end per connection, plus listener /
+    // epoll fd / stdio slack — size off the limit we actually got, and
+    // skip (don't fail) on boxes too constrained to say anything useful
+    let soft = match pollshim::raise_nofile(2 * want + 512) {
+        Ok(soft) => soft,
+        Err(e) => {
+            eprintln!("c10k smoke skipped: cannot query RLIMIT_NOFILE: {e}");
+            return;
+        }
+    };
+    let n = (want.min(soft.saturating_sub(512) / 2)) as usize;
+    if n < 1_024 {
+        eprintln!("c10k smoke skipped: RLIMIT_NOFILE {soft} leaves only {n} connections");
+        return;
+    }
+    let responders = 64usize;
+    let d = 32usize;
+    let deadline_ms = 250u64;
+    let spec = sim_spec(d);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Vec<TcpClientTransport>>();
+    std::thread::scope(|scope| {
+        // one helper dials every socket; ids 0..responders are handed to
+        // the responder thread, the rest stay open and silent until released
+        {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut resp = Vec::with_capacity(responders);
+                let mut held = Vec::with_capacity(n - responders);
+                for id in 0..n {
+                    let t = TcpClientTransport::connect(&addr, id, NET_TIMEOUT).unwrap();
+                    if id < responders {
+                        resp.push(t);
+                    } else {
+                        held.push(t);
+                    }
+                }
+                let _ = resp_tx.send(resp);
+                let _ = release_rx.recv();
+                drop(held);
+            });
+        }
+        // the speakers: answer every round until the server says shutdown
+        {
+            let spec = &spec;
+            scope.spawn(move || {
+                let Ok(mut resp) = resp_rx.recv() else { return };
+                'rounds: loop {
+                    for (id, t) in resp.iter_mut().enumerate() {
+                        match t.recv() {
+                            Ok(Some(wire::Message::Round { round, .. })) => {
+                                let g = vec![(id + 1) as f32; d];
+                                let (payload, _, report) =
+                                    encode_once(&NoCompression, &g, spec).unwrap();
+                                let up = Uplink {
+                                    client_id: id,
+                                    round,
+                                    payload,
+                                    report,
+                                    train_loss: 0.0,
+                                    error: None,
+                                };
+                                let f = wire::encode_update(&up);
+                                if t.send(&f).is_err() {
+                                    break 'rounds;
+                                }
+                            }
+                            _ => break 'rounds, // shutdown or server-side close
+                        }
+                    }
+                }
+            });
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
+        let backend = transport.stats().backend;
+        assert!(
+            backend == "epoll" || backend == "poll",
+            "unexpected backend {backend:?} (spin is compiled out of this file)"
+        );
+        let cfg = ServerConfig { straggler_timeout_ms: deadline_ms, ..Default::default() };
+        let mut server = FedServer::new(cfg, n, 1, Box::new(NoCompression));
+        let participants: Vec<usize> = (0..n).collect();
+        let mut w = vec![0.0f32; d];
+        let lo = Duration::from_millis(deadline_ms);
+
+        // warmup round: faults in every per-connection read page and the
+        // lazy bits (outbound queues, session state) so the measured
+        // rounds below see the steady state
+        let s0 = server.run_round(0, &participants, &mut transport, &spec, &mut w).unwrap();
+        assert_eq!(s0.received, responders);
+        assert_eq!(s0.dropped, n - responders);
+
+        let mut best_late: Option<Duration> = None;
+        for round in 1..=3usize {
+            let before = transport.stats();
+            let t0 = Instant::now();
+            let s = server.run_round(round, &participants, &mut transport, &spec, &mut w).unwrap();
+            let elapsed = t0.elapsed();
+            let after = transport.stats();
+            assert_eq!(s.received, responders, "round {round}");
+            assert_eq!(s.dropped, n - responders, "round {round}");
+            // ending EARLY is a correctness bug, full stop
+            assert!(
+                elapsed >= lo,
+                "round {round} ended {elapsed:?} before the {deadline_ms} ms deadline"
+            );
+            let late = elapsed - lo;
+            best_late = Some(best_late.map_or(late, |b| b.min(late)));
+            // O(ready), not O(registered): 64 speakers plus one deadline
+            // park must not cost anywhere near one wakeup per idle socket
+            let wakeups = after.wakeups - before.wakeups;
+            assert!(
+                wakeups < 512,
+                "round {round}: {wakeups} wakeups for {responders} speakers among {n} connections"
+            );
+            // steady state: every uplink lands in a page pooled at accept
+            // time; growth here means the hot path allocates per round
+            assert_eq!(
+                after.pool_allocs, before.pool_allocs,
+                "round {round}: buffer pool grew in steady state"
+            );
+        }
+        // lateness on a shared runner is scheduling noise: requiring the
+        // BEST of three measured rounds inside the budget damps the flake
+        // without weakening the bound (same idea as the one-retry in the
+        // 256-connection deadline test)
+        let best = best_late.unwrap();
+        assert!(
+            best < Duration::from_millis(10),
+            "deadline error {best:?} ≥ 10 ms in all three measured rounds at {n} connections"
+        );
+        let ts = transport.stats();
+        assert_eq!(ts.disconnects, 0, "nobody hung up during the measured rounds");
+        assert_eq!(ts.decode_errors, 0);
+        release_tx.send(()).unwrap();
+        transport.close().unwrap();
+    });
+}

@@ -1,21 +1,33 @@
-//! Minimal `poll(2)` shim for the offline build (no `libc` on crates.io
-//! access, same situation as the in-tree `anyhow` substitute).
+//! Minimal readiness-syscall shim for the offline build (no `libc` on
+//! crates.io access, same situation as the in-tree `anyhow` substitute).
 //!
-//! The fedserve reactor needs exactly one syscall the Rust standard library
-//! does not expose: *wait until any of these file descriptors is readable /
-//! writable, or a timeout elapses*. `poll(2)` is the portable POSIX
-//! spelling of that (no `FD_SETSIZE` cliff like `select`, no per-platform
-//! registration object like epoll/kqueue), so this crate declares it
-//! directly against the C ABI and wraps it with errno handling.
+//! The fedserve reactor needs the syscalls the Rust standard library does
+//! not expose: *wait until any of these file descriptors is readable /
+//! writable, or a timeout elapses*. Two spellings are provided:
 //!
-//! Scope is deliberately tiny: one function, the `pollfd` struct, and the
-//! event bits the reactor uses. The struct layout (`int fd; short events;
-//! short revents;`) and the `POLL*` constants below are identical across
+//! * [`poll`] — the portable POSIX one-shot wait (no `FD_SETSIZE` cliff
+//!   like `select`), where the caller hands the kernel the whole interest
+//!   set on every call. Wakeup cost is O(registered descriptors).
+//! * [`Epoll`] (Linux only) — the registration-object spelling: interest
+//!   is installed once with `epoll_ctl` and each `epoll_wait` returns only
+//!   the *ready* descriptors, so wakeup cost is O(ready) no matter how
+//!   many idle connections are registered. Exposed edge-triggered
+//!   (`EPOLLET`) because the reactor's drain loops already run to
+//!   `WouldBlock`.
+//!
+//! Scope stays deliberately tiny: the raw structs, the event bits the
+//! reactor uses, and errno handling. The `pollfd` layout (`int fd; short
+//! events; short revents;`) and the `POLL*` constants are identical across
 //! Linux, macOS, and the BSDs; the only per-OS difference is the width of
-//! `nfds_t`, handled by a `cfg` alias. Non-Unix targets compile a stub
-//! that reports `Unsupported` — the reactor falls back to its portable
-//! spin loop there (`m22` feature `spin-poll` forces the same fallback for
-//! testing).
+//! `nfds_t`, handled by a `cfg` alias. `epoll_event` is packed on
+//! x86/x86_64 (kernel ABI) and naturally aligned elsewhere, handled by a
+//! `cfg_attr`. Non-Unix targets compile stubs that report `Unsupported` —
+//! the reactor falls back to its portable spin loop there (`m22` feature
+//! `spin-poll` forces the same fallback for testing).
+//!
+//! A small [`raise_nofile`] helper wraps `getrlimit`/`setrlimit` for
+//! `RLIMIT_NOFILE` so the 10k-connection tests and benches can lift the
+//! soft descriptor limit toward the hard one before opening sockets.
 
 use std::io;
 
@@ -104,6 +116,243 @@ pub fn poll(_fds: &mut [PollFd], _timeout_ms: i32) -> io::Result<usize> {
     Err(io::Error::new(io::ErrorKind::Unsupported, "poll(2) is unavailable on this target"))
 }
 
+// ---------------------------------------------------------------------
+// epoll (Linux)
+// ---------------------------------------------------------------------
+
+/// There is data to read (`epoll` spelling of [`POLLIN`]).
+pub const EPOLLIN: u32 = 0x001;
+/// Writing will not block.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported, never needs registering).
+pub const EPOLLERR: u32 = 0x008;
+/// Peer hung up (always reported, never needs registering).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer shut down its writing half (registered explicitly so a half-close
+/// wakes an edge-triggered reader).
+pub const EPOLLRDHUP: u32 = 0x2000;
+/// Edge-triggered delivery: one wakeup per readiness *transition*. The
+/// consumer must drain to `WouldBlock` or it will never be woken again.
+pub const EPOLLET: u32 = 1 << 31;
+
+/// One `epoll` readiness record — C `struct epoll_event`. The kernel ABI
+/// packs this on x86/x86_64 and aligns it naturally everywhere else.
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpollEvent {
+    /// Ready event bits (`EPOLL*`).
+    pub events: u32,
+    /// Caller-chosen cookie, returned verbatim (the reactor stores its
+    /// token here).
+    pub data: u64,
+}
+
+impl EpollEvent {
+    /// Copy out the event bits (field access on a possibly-packed struct
+    /// must go through a by-value read, never a reference).
+    pub fn bits(&self) -> u32 {
+        self.events
+    }
+
+    /// Copy out the caller cookie.
+    pub fn cookie(&self) -> u64 {
+        self.data
+    }
+
+    pub fn readable(&self) -> bool {
+        self.bits() & (EPOLLIN | EPOLLHUP | EPOLLERR | EPOLLRDHUP) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.bits() & (EPOLLOUT | EPOLLERR) != 0
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod epoll_sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut super::EpollEvent,
+        ) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut super::EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// An `epoll` instance: a kernel-side interest set registered once and
+/// amended incrementally, whose waits return only ready descriptors.
+/// Closes its descriptor on drop.
+#[cfg(target_os = "linux")]
+#[derive(Debug)]
+pub struct Epoll {
+    epfd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    /// Create a new epoll instance (`EPOLL_CLOEXEC`).
+    pub fn new() -> io::Result<Epoll> {
+        let epfd = unsafe { epoll_sys::epoll_create1(epoll_sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { epfd })
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: i32, events: u32, cookie: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: cookie };
+        let rc = unsafe { epoll_sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` with interest bits `events`; `cookie` comes back on
+    /// every readiness record for it.
+    pub fn add(&self, fd: i32, events: u32, cookie: u64) -> io::Result<()> {
+        self.ctl(epoll_sys::EPOLL_CTL_ADD, fd, events, cookie)
+    }
+
+    /// Change an existing registration's interest bits (also re-arms an
+    /// edge-triggered registration whose condition currently holds).
+    pub fn modify(&self, fd: i32, events: u32, cookie: u64) -> io::Result<()> {
+        self.ctl(epoll_sys::EPOLL_CTL_MOD, fd, events, cookie)
+    }
+
+    /// Drop a registration. (The kernel also drops it automatically when
+    /// the last descriptor for the open file is closed.)
+    pub fn delete(&self, fd: i32) -> io::Result<()> {
+        self.ctl(epoll_sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait until registered readiness or `timeout_ms` (`-1` blocks, `0`
+    /// is a nonblocking check), filling the front of `events`. Returns how
+    /// many records were written. `EINTR` retries with the full timeout —
+    /// same contract as [`poll`].
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        if events.is_empty() {
+            return Ok(0);
+        }
+        loop {
+            let rc = unsafe {
+                epoll_sys::epoll_wait(
+                    self.epfd,
+                    events.as_mut_ptr(),
+                    events.len() as std::os::raw::c_int,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            epoll_sys::close(self.epfd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RLIMIT_NOFILE helpers
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod rlimit_sys {
+    use std::os::raw::c_int;
+
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    pub const RLIMIT_NOFILE: c_int = 8;
+
+    #[repr(C)]
+    pub struct Rlimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    extern "C" {
+        pub fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+        pub fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    }
+}
+
+/// Current `(soft, hard)` `RLIMIT_NOFILE` — how many descriptors this
+/// process may hold open.
+#[cfg(unix)]
+pub fn nofile_limit() -> io::Result<(u64, u64)> {
+    let mut r = rlimit_sys::Rlimit { cur: 0, max: 0 };
+    let rc = unsafe { rlimit_sys::getrlimit(rlimit_sys::RLIMIT_NOFILE, &mut r) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok((r.cur, r.max))
+}
+
+/// Best-effort raise of the soft `RLIMIT_NOFILE` toward `want`: first try
+/// lifting both limits to `want` (works with `CAP_SYS_RESOURCE` / root),
+/// then fall back to soft = min(want, hard). Returns the resulting soft
+/// limit — callers size their descriptor-hungry tests off it instead of
+/// assuming the raise succeeded.
+#[cfg(unix)]
+pub fn raise_nofile(want: u64) -> io::Result<u64> {
+    let (soft, hard) = nofile_limit()?;
+    if soft >= want {
+        return Ok(soft);
+    }
+    if want > hard {
+        let r = rlimit_sys::Rlimit { cur: want, max: want };
+        if unsafe { rlimit_sys::setrlimit(rlimit_sys::RLIMIT_NOFILE, &r) } == 0 {
+            return Ok(want);
+        }
+    }
+    let capped = want.min(hard);
+    let r = rlimit_sys::Rlimit { cur: capped, max: hard };
+    if unsafe { rlimit_sys::setrlimit(rlimit_sys::RLIMIT_NOFILE, &r) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(capped)
+}
+
+/// Non-Unix stubs: descriptor limits are a Unix concept here.
+#[cfg(not(unix))]
+pub fn nofile_limit() -> io::Result<(u64, u64)> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "rlimit is unavailable on this target"))
+}
+
+#[cfg(not(unix))]
+pub fn raise_nofile(_want: u64) -> io::Result<u64> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "rlimit is unavailable on this target"))
+}
+
 #[cfg(all(test, unix))]
 mod tests {
     use super::*;
@@ -165,5 +414,76 @@ mod tests {
         let n = poll(&mut [], 30).unwrap();
         assert_eq!(n, 0);
         assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn nofile_limit_is_sane_and_raise_is_idempotent() {
+        let (soft, hard) = nofile_limit().unwrap();
+        assert!(soft > 0 && soft <= hard);
+        // want <= current soft: a no-op that reports the standing limit
+        assert_eq!(raise_nofile(soft).unwrap(), soft);
+        let (soft2, hard2) = nofile_limit().unwrap();
+        assert_eq!((soft, hard), (soft2, hard2));
+    }
+
+    #[cfg(target_os = "linux")]
+    mod epoll {
+        use super::*;
+        use std::io::Read;
+
+        #[test]
+        fn edge_fires_once_per_transition_and_mod_rearms() {
+            let (mut a, mut b) = pair();
+            let ep = Epoll::new().unwrap();
+            ep.add(a.as_raw_fd(), EPOLLIN | EPOLLRDHUP | EPOLLET, 42).unwrap();
+
+            b.write_all(b"x").unwrap();
+            let mut evs = vec![EpollEvent::default(); 8];
+            let n = ep.wait(&mut evs, 5000).unwrap();
+            assert_eq!(n, 1);
+            assert_eq!(evs[0].cookie(), 42);
+            assert!(evs[0].readable());
+
+            // edge consumed: no new wakeup until the state *changes* again
+            assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+
+            // MOD re-arms a held condition — the unread byte fires again
+            ep.modify(a.as_raw_fd(), EPOLLIN | EPOLLRDHUP | EPOLLET, 43).unwrap();
+            let n = ep.wait(&mut evs, 5000).unwrap();
+            assert_eq!(n, 1);
+            assert_eq!(evs[0].cookie(), 43);
+
+            // drain, then a fresh peer write is a fresh transition
+            let mut buf = [0u8; 8];
+            let _ = a.read(&mut buf).unwrap();
+            assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+            b.write_all(b"y").unwrap();
+            assert_eq!(ep.wait(&mut evs, 5000).unwrap(), 1);
+        }
+
+        #[test]
+        fn write_interest_on_a_fresh_socket_is_immediate() {
+            let (a, _b) = pair();
+            let ep = Epoll::new().unwrap();
+            ep.add(a.as_raw_fd(), EPOLLIN | EPOLLOUT | EPOLLET, 7).unwrap();
+            let mut evs = vec![EpollEvent::default(); 4];
+            let n = ep.wait(&mut evs, 5000).unwrap();
+            assert_eq!(n, 1);
+            assert!(evs[0].writable());
+            assert!(!evs[0].readable());
+        }
+
+        #[test]
+        fn delete_stops_reports_and_timeout_is_honored() {
+            let (a, mut b) = pair();
+            let ep = Epoll::new().unwrap();
+            ep.add(a.as_raw_fd(), EPOLLIN | EPOLLET, 1).unwrap();
+            ep.delete(a.as_raw_fd()).unwrap();
+            b.write_all(b"x").unwrap();
+            let mut evs = vec![EpollEvent::default(); 4];
+            let t0 = Instant::now();
+            assert_eq!(ep.wait(&mut evs, 50).unwrap(), 0);
+            assert!(t0.elapsed() >= Duration::from_millis(45));
+        }
     }
 }
