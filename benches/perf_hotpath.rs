@@ -229,7 +229,7 @@ fn main() {
         for n in [64usize, 256, 1024] {
             let (mut transport, mut clients) = ChannelTransport::pair(n);
             let mut server = FedServer::new(
-                ServerConfig { straggler_timeout_ms: 60_000, ..Default::default() },
+                ServerConfig::builder().straggler_timeout_ms(60_000).build(),
                 n,
                 1,
                 Box::new(NoCompression),
@@ -278,7 +278,8 @@ fn main() {
                 cfg.n_clients = 64;
                 cfg.server.shards = 4;
                 cfg.server.straggler_timeout_ms = 120_000;
-                cfg.server.cluster = Some(ClusterConfig { n_ps, mode, sync_every: 1 });
+                cfg.server.cluster =
+                    Some(ClusterConfig::builder().n_ps(n_ps).mode(mode).sync_every(1).build());
                 let mb = macro_bench();
                 log.push(mb.run(
                     &format!("fedserve 2-round run (cluster {label}, n_ps={n_ps}, n=64)"),
@@ -286,6 +287,51 @@ fn main() {
                 ));
             }
         }
+    }
+
+    // --- peer sub-step wire trip: the per-round cost peering adds --------
+    //
+    // What `--peers` adds to a lead's round over the in-process cluster is
+    // exactly one encode→decode trip per remote member: a range sub-step
+    // ships the member's d/n_ps slice plus the round's survivor payloads
+    // out and a PeerSlice back; replica mode ships the full-width replica
+    // both ways. These rows time that wire trip in isolation (no sockets —
+    // the syscall side is already covered by the reactor rows above), so
+    // the EXPERIMENTS.md peering table can divide a round's budget into
+    // "reduce" vs "membership plumbing". Payload bytes are opaque to the
+    // framer, so synthetic survivor payloads time the same copies.
+    println!("\n== peer sub-step wire trip (d = 65536, 16 survivor payloads) ==");
+    {
+        let d = 65_536usize;
+        let half = grad(d / 2, 11);
+        let full = grad(d, 12);
+        let payloads: Vec<Vec<u8>> = (0..16u8).map(|i| vec![i; 8_192]).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let weights_of = |m: wire::Message| match m {
+            wire::Message::PeerRangeStep { weights, .. }
+            | wire::Message::PeerSlice { weights, .. }
+            | wire::Message::PeerReplicaStep { weights, .. }
+            | wire::Message::PeerReplicaSync { weights, .. } => weights.len(),
+            _ => panic!("wrong frame kind"),
+        };
+        let b = Bencher::from_env().throughput((d / 2) as f64);
+        log.push(b.run("peer wire range step (d=65536, n_ps=2)", || {
+            let f = wire::encode_peer_range_step(3, 0, d, &half, &refs);
+            weights_of(wire::decode(&f).unwrap())
+        }));
+        log.push(b.run("peer wire slice reply (d=65536, n_ps=2)", || {
+            let f = wire::encode_peer_slice(3, 0, d, &half);
+            weights_of(wire::decode(&f).unwrap())
+        }));
+        let b = Bencher::from_env().throughput(d as f64);
+        log.push(b.run("peer wire replica step (d=65536)", || {
+            let f = wire::encode_peer_replica_step(3, &full, &refs);
+            weights_of(wire::decode(&f).unwrap())
+        }));
+        log.push(b.run("peer wire replica sync (d=65536)", || {
+            let f = wire::encode_peer_replica_sync(3, &full);
+            weights_of(wire::decode(&f).unwrap())
+        }));
     }
 
     // --- fleet event dispatch: n modeled clients, k = 64 sampled ---------

@@ -64,6 +64,24 @@ impl PsMode {
             PsMode::Replica => "replica",
         }
     }
+
+    /// The mode's byte on the wire (the peer-membership frame announces the
+    /// cluster mode to joining peers — DESIGN.md §peering).
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            PsMode::Range => 0,
+            PsMode::Replica => 1,
+        }
+    }
+
+    /// Inverse of [`PsMode::wire_code`].
+    pub fn from_wire(code: u8) -> Result<PsMode> {
+        match code {
+            0 => Ok(PsMode::Range),
+            1 => Ok(PsMode::Replica),
+            other => anyhow::bail!("unknown ps-mode wire code {other}"),
+        }
+    }
 }
 
 /// Multi-PS cluster shape: how many `FedServer` instances one process
@@ -77,11 +95,75 @@ pub struct ClusterConfig {
     /// round, 0 = only at end of run). Ignored by range mode, whose
     /// single global model never diverges.
     pub sync_every: usize,
+    /// cross-process peering (DESIGN.md §peering): how many of the `n_ps`
+    /// members live in *other processes* (`repro serve --peer ADDR`),
+    /// joining over the wire protocol. The lead process hosts the
+    /// remaining `n_ps - peers` members locally. 0 (the default) keeps
+    /// the whole cluster in-process — the original PR-5 semantics.
+    pub peers: usize,
+    /// peering: the per-round sync-barrier deadline in milliseconds. A
+    /// peer whose sub-step reply misses it is dropped from membership
+    /// (its member's reduce runs locally, bit-exact) and counted in
+    /// `ClusterStats`. 0 (the default) waits indefinitely, like the
+    /// straggler deadline it reuses.
+    pub barrier_timeout_ms: u64,
 }
 
 impl Default for ClusterConfig {
     fn default() -> ClusterConfig {
-        ClusterConfig { n_ps: 2, mode: PsMode::Range, sync_every: 1 }
+        ClusterConfig {
+            n_ps: 2,
+            mode: PsMode::Range,
+            sync_every: 1,
+            peers: 0,
+            barrier_timeout_ms: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Fluent construction over [`Default`], so call sites name only the
+    /// knobs they change and new fields stop forcing struct-literal churn
+    /// across sim/driver/fleet/tests.
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+}
+
+/// Builder for [`ClusterConfig`] — see [`ClusterConfig::builder`].
+#[derive(Debug, Clone, Default)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    pub fn n_ps(mut self, n: usize) -> Self {
+        self.cfg.n_ps = n;
+        self
+    }
+
+    pub fn mode(mut self, mode: PsMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    pub fn sync_every(mut self, rounds: usize) -> Self {
+        self.cfg.sync_every = rounds;
+        self
+    }
+
+    pub fn peers(mut self, peers: usize) -> Self {
+        self.cfg.peers = peers;
+        self
+    }
+
+    pub fn barrier_timeout_ms(mut self, ms: u64) -> Self {
+        self.cfg.barrier_timeout_ms = ms;
+        self
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
     }
 }
 
@@ -134,6 +216,72 @@ impl Default for ServerConfig {
             cluster: None,
             adaptive: false,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Fluent construction over [`Default`]:
+    /// `ServerConfig::builder().shards(8).cluster(...).build()`. Call
+    /// sites name only the knobs they change; plain field access on the
+    /// built struct keeps working, so migration is incremental.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+}
+
+/// Builder for [`ServerConfig`] — see [`ServerConfig::builder`].
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    /// Explicit k-of-n sample per round (`None` derives from
+    /// `participation`, the default).
+    pub fn sampled_clients(mut self, k: Option<usize>) -> Self {
+        self.cfg.sampled_clients = k;
+        self
+    }
+
+    pub fn straggler_timeout_ms(mut self, ms: u64) -> Self {
+        self.cfg.straggler_timeout_ms = ms;
+        self
+    }
+
+    pub fn table_cache_capacity(mut self, cap: usize) -> Self {
+        self.cfg.table_cache_capacity = cap;
+        self
+    }
+
+    pub fn prewarm(mut self, on: bool) -> Self {
+        self.cfg.prewarm = on;
+        self
+    }
+
+    pub fn table_cache_path(mut self, path: impl Into<String>) -> Self {
+        self.cfg.table_cache_path = Some(path.into());
+        self
+    }
+
+    /// Host a multi-PS cluster (takes the built [`ClusterConfig`], so the
+    /// two builders chain: `.cluster(ClusterConfig::builder()...build())`).
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cfg.cluster = Some(cluster);
+        self
+    }
+
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.cfg.adaptive = on;
+        self
+    }
+
+    pub fn build(self) -> ServerConfig {
+        self.cfg
     }
 }
 
@@ -375,6 +523,63 @@ mod tests {
         let c = ClusterConfig::default();
         assert_eq!(c.n_ps, 2);
         assert_eq!(c.sync_every, 1);
+        // peering is opt-in: an in-process cluster by default
+        assert_eq!(c.peers, 0);
+        assert_eq!(c.barrier_timeout_ms, 0);
+    }
+
+    #[test]
+    fn ps_mode_wire_codes_roundtrip() {
+        for mode in [PsMode::Range, PsMode::Replica] {
+            assert_eq!(PsMode::from_wire(mode.wire_code()).unwrap(), mode);
+        }
+        assert!(PsMode::from_wire(7).is_err());
+    }
+
+    #[test]
+    fn builders_match_struct_literals() {
+        // the builder must produce exactly what the equivalent struct
+        // literal produces — it is sugar, not a second config semantics
+        let built = ClusterConfig::builder()
+            .n_ps(3)
+            .mode(PsMode::Replica)
+            .sync_every(4)
+            .peers(2)
+            .barrier_timeout_ms(1500)
+            .build();
+        let literal = ClusterConfig {
+            n_ps: 3,
+            mode: PsMode::Replica,
+            sync_every: 4,
+            peers: 2,
+            barrier_timeout_ms: 1500,
+        };
+        assert_eq!(built, literal);
+
+        let built = ServerConfig::builder()
+            .shards(8)
+            .sampled_clients(Some(16))
+            .straggler_timeout_ms(250)
+            .table_cache_capacity(99)
+            .prewarm(false)
+            .table_cache_path("/tmp/tables.bin")
+            .cluster(literal.clone())
+            .adaptive(true)
+            .build();
+        let literal = ServerConfig {
+            shards: 8,
+            sampled_clients: Some(16),
+            straggler_timeout_ms: 250,
+            table_cache_capacity: 99,
+            prewarm: false,
+            table_cache_path: Some("/tmp/tables.bin".to_string()),
+            cluster: Some(literal),
+            adaptive: true,
+        };
+        assert_eq!(built, literal);
+        // untouched knobs stay at their Default
+        assert_eq!(ServerConfig::builder().build(), ServerConfig::default());
+        assert_eq!(ClusterConfig::builder().build(), ClusterConfig::default());
     }
 
     #[test]

@@ -35,6 +35,14 @@
 //! a client is one peer no matter how many PSes consume its uplink — and
 //! are reconciled against the transport's socket-measured byte counters
 //! every round, exactly like the single-server path.
+//!
+//! With an attached [`PeerSet`] (DESIGN.md §peering), some members live in
+//! *other processes*: their sub-steps ship over the wire before the local
+//! scoped reduces start (so followers compute in parallel with the lead),
+//! and their replies are awaited at the sync barrier afterwards. A member
+//! that misses the barrier is dropped from the membership and its reduce
+//! runs right here on the identical local code path — peering never
+//! changes the math, only where it executes.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -48,6 +56,7 @@ use crate::metrics::server::{ClusterStats, RoundTiming, ServerStats};
 use crate::train::ModelSpec;
 use crate::util::rng::Rng;
 
+use super::peer::PeerSet;
 use super::server::{
     collect_uplinks, ledger_round, reconcile_bytes_down, Collect, FedServer, RoundSummary,
     SlotMap,
@@ -111,6 +120,10 @@ pub struct PsCluster {
     slotmap: SlotMap,
     n_clients: usize,
     d: usize,
+    /// cross-process members (DESIGN.md §peering): `None` keeps the whole
+    /// cluster in-process. When attached, member `i` with
+    /// `peers.is_remote(i)` reduces in a follower process each round.
+    peers: Option<PeerSet>,
 }
 
 impl PsCluster {
@@ -158,11 +171,28 @@ impl PsCluster {
             slotmap: SlotMap::default(),
             n_clients,
             d,
+            peers: None,
         })
     }
 
     pub fn n_ps(&self) -> usize {
         self.servers.len()
+    }
+
+    /// Attach a remote peer set: members `1..=peers.n_remote()` reduce in
+    /// follower processes from now on. Range mode ships slice sub-steps,
+    /// replica mode ships replica sub-steps; a member dropped at the sync
+    /// barrier reduces locally (the identical code path) forever after.
+    pub fn attach_peers(&mut self, peers: PeerSet) -> Result<()> {
+        ensure!(
+            peers.n_remote() < self.servers.len(),
+            "{} remote peer(s) need a cluster of at least {} members \
+             (the lead is always member 0)",
+            peers.n_remote(),
+            peers.n_remote() + 1
+        );
+        self.peers = Some(peers);
+        Ok(())
     }
 
     /// Swap every member PS's decoder (the adaptive controller re-resolves
@@ -273,23 +303,41 @@ impl PsCluster {
         if received > 0 {
             let scale = 1.0 / received as f32;
             let payloads_ref = &payloads;
-            // one scoped worker per PS: the dimension ranges are disjoint
-            // slices of w, so the reduces run model-parallel
-            let results: Vec<Result<u64>> = std::thread::scope(|sc| {
+            // remote sub-steps ship first, so follower processes reduce
+            // their slices in parallel with the lead's scoped workers; a
+            // member whose send fails drops out here and reduces locally
+            let mut remote: Vec<usize> = Vec::new();
+            if let Some(peers) = self.peers.as_mut() {
+                for ps in 0..n_ps {
+                    let (lo, hi) = self.ranges[ps];
+                    if lo >= hi || !peers.is_remote(ps) {
+                        continue;
+                    }
+                    let f =
+                        wire::encode_peer_range_step(round, lo, self.d, &w[lo..hi], payloads_ref);
+                    if peers.send_step(ps, f) {
+                        remote.push(ps);
+                    }
+                }
+            }
+            // one scoped worker per local PS: the dimension ranges are
+            // disjoint slices of w, so the reduces run model-parallel
+            let results: Vec<(usize, Result<u64>)> = std::thread::scope(|sc| {
                 let handles: Vec<_> = self
                     .servers
                     .iter_mut()
                     .zip(w.chunks_mut(chunk))
                     .enumerate()
+                    .filter(|(ps, _)| !remote.contains(ps))
                     .map(|(ps, (server, wslice))| {
                         sc.spawn(move || {
-                            server.reduce_slice(payloads_ref, spec, ps * chunk, wslice, scale)
+                            (ps, server.reduce_slice(payloads_ref, spec, ps * chunk, wslice, scale))
                         })
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
             });
-            for (ps, r) in results.into_iter().enumerate() {
+            for (ps, r) in results {
                 match r {
                     Ok(ns) => reduce_ns[ps] = ns,
                     Err(e) => {
@@ -297,6 +345,45 @@ impl PsCluster {
                         // failure: the timing is still recorded everywhere
                         self.record_abort(round, &col, received, participants.len());
                         return Err(e);
+                    }
+                }
+            }
+            // the sync barrier: every remote slice lands in w, or its
+            // member misses the deadline, leaves the membership, and its
+            // reduce runs right here — the identical local path, bit-exact
+            if !remote.is_empty() {
+                let expect: Vec<(usize, usize, usize)> = remote
+                    .iter()
+                    .map(|&ps| {
+                        let (lo, hi) = self.ranges[ps];
+                        (ps, lo, hi - lo)
+                    })
+                    .collect();
+                let peers = self.peers.as_mut().expect("remote steps imply an attached peer set");
+                let mut got = match peers.collect_step(round, &expect) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        self.record_abort(round, &col, received, participants.len());
+                        return Err(e);
+                    }
+                };
+                for &ps in &remote {
+                    let (lo, hi) = self.ranges[ps];
+                    match got.remove(&ps) {
+                        Some(slice) => w[lo..hi].copy_from_slice(&slice),
+                        None => match self.servers[ps].reduce_slice(
+                            payloads_ref,
+                            spec,
+                            lo,
+                            &mut w[lo..hi],
+                            scale,
+                        ) {
+                            Ok(ns) => reduce_ns[ps] = ns,
+                            Err(e) => {
+                                self.record_abort(round, &col, received, participants.len());
+                                return Err(e);
+                            }
+                        },
                     }
                 }
             }
@@ -385,38 +472,64 @@ impl PsCluster {
 
         let (_, train_loss, bits) = gather(&slots);
         let t1 = Instant::now();
-        // one scoped worker per PS: replicas are disjoint full-width
+        // each PS's survivor payloads, computed once: the remote dispatch,
+        // the scoped local reduces, and the barrier-miss fallback all fold
+        // the same slices in the same order
+        let span_payloads: Vec<Vec<&[u8]>> = spans
+            .iter()
+            .map(|&(start, len)| {
+                slots[start..start + len].iter().flatten().map(|u| u.payload.as_slice()).collect()
+            })
+            .collect();
+        // remote sub-steps ship first (follower processes reduce their
+        // replicas in parallel with the lead); a fully-straggled span is
+        // skipped exactly like the in-process path skips it
+        let mut remote: Vec<usize> = Vec::new();
+        if let Some(peers) = self.peers.as_mut() {
+            for (i, sp) in span_payloads.iter().enumerate() {
+                if sp.is_empty() || !peers.is_remote(i) {
+                    continue;
+                }
+                let f = wire::encode_peer_replica_step(round, &self.replicas[i], sp);
+                if peers.send_step(i, f) {
+                    remote.push(i);
+                }
+            }
+        }
+        // one scoped worker per local PS: replicas are disjoint full-width
         // models, each reduced over its own span of the shared roster
-        let slots_ref = &slots;
-        let per_ps: Vec<Result<(usize, u64)>> = std::thread::scope(|sc| {
+        let sp_ref = &span_payloads;
+        let per_ps: Vec<(usize, Result<(usize, u64)>)> = std::thread::scope(|sc| {
             let handles: Vec<_> = self
                 .servers
                 .iter_mut()
                 .zip(self.replicas.iter_mut())
                 .enumerate()
+                .filter(|(i, _)| !remote.contains(i))
                 .map(|(i, (server, replica))| {
-                    let (start, len) = spans[i];
-                    sc.spawn(move || -> Result<(usize, u64)> {
-                        let payloads: Vec<&[u8]> = slots_ref[start..start + len]
-                            .iter()
-                            .flatten()
-                            .map(|u| u.payload.as_slice())
-                            .collect();
+                    sc.spawn(move || -> (usize, Result<(usize, u64)>) {
+                        let payloads = &sp_ref[i];
                         if payloads.is_empty() {
-                            return Ok((0, 0)); // a fully-straggled PS skips
+                            return (i, Ok((0, 0))); // a fully-straggled PS skips
                         }
                         let scale = 1.0 / payloads.len() as f32;
-                        let ns = server.reduce_slice(&payloads, spec, 0, replica, scale)?;
-                        Ok((payloads.len(), ns))
+                        let r = server
+                            .reduce_slice(payloads, spec, 0, replica, scale)
+                            .map(|ns| (payloads.len(), ns));
+                        (i, r)
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
-        let mut per_ps_ok = Vec::with_capacity(per_ps.len());
-        for r in per_ps {
+        let mut rec = vec![0usize; self.servers.len()];
+        let mut red_ns = vec![0u64; self.servers.len()];
+        for (i, r) in per_ps {
             match r {
-                Ok(v) => per_ps_ok.push(v),
+                Ok((rec_i, ns_i)) => {
+                    rec[i] = rec_i;
+                    red_ns[i] = ns_i;
+                }
                 Err(e) => {
                     // a reduce failure aborts the round like a collect
                     // failure: the timing is still recorded everywhere
@@ -425,14 +538,57 @@ impl PsCluster {
                 }
             }
         }
-        for (i, (rec_i, ns_i)) in per_ps_ok.into_iter().enumerate() {
+        // the sync barrier: every remote replica lands, or its member
+        // misses the deadline, leaves the membership, and its reduce runs
+        // right here — the identical local path, bit-exact
+        if !remote.is_empty() {
+            let expect: Vec<(usize, usize, usize)> =
+                remote.iter().map(|&i| (i, 0, self.d)).collect();
+            let peers = self.peers.as_mut().expect("remote steps imply an attached peer set");
+            let mut got = match peers.collect_step(round, &expect) {
+                Ok(g) => g,
+                Err(e) => {
+                    self.record_abort(round, &col, received, roster.len());
+                    return Err(e);
+                }
+            };
+            for &i in &remote {
+                match got.remove(&i) {
+                    Some(wr) => {
+                        self.replicas[i].copy_from_slice(&wr);
+                        rec[i] = span_payloads[i].len();
+                    }
+                    None => {
+                        let payloads = &span_payloads[i];
+                        let scale = 1.0 / payloads.len() as f32;
+                        match self.servers[i].reduce_slice(
+                            payloads,
+                            spec,
+                            0,
+                            &mut self.replicas[i],
+                            scale,
+                        ) {
+                            Ok(ns) => {
+                                rec[i] = payloads.len();
+                                red_ns[i] = ns;
+                            }
+                            Err(e) => {
+                                self.record_abort(round, &col, received, roster.len());
+                                return Err(e);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for i in 0..self.servers.len() {
             let (_, len) = spans[i];
             self.servers[i].stats.push(RoundTiming {
                 round,
                 collect_ns: col.collect_ns,
-                reduce_ns: ns_i,
-                received: rec_i,
-                dropped: len - rec_i,
+                reduce_ns: red_ns[i],
+                received: rec[i],
+                dropped: len - rec[i],
                 stale: 0,
                 decode_errors: 0,
                 framed_bytes: 0,
@@ -548,10 +704,14 @@ impl PsCluster {
 
     /// End of run: replica mode re-asserts the eq.-(7) view in `w`
     /// (idempotent — `run_round` keeps `w` current each round); range
-    /// mode's `w` is already the truth.
+    /// mode's `w` is already the truth. Live followers get a shutdown
+    /// frame so they exit cleanly instead of reading EOF.
     pub fn finish(&mut self, w: &mut [f32]) {
         if self.mode == PsMode::Replica && !self.replicas.is_empty() {
             self.mean_into(w);
+        }
+        if let Some(p) = self.peers.as_mut() {
+            p.finish();
         }
     }
 
@@ -585,6 +745,8 @@ impl PsCluster {
         ClusterStats {
             mode: self.mode.label(),
             sync_every: self.sync_every,
+            peers: self.peers.as_ref().map_or(0, |p| p.n_remote()),
+            peer_drops: self.peers.as_ref().map_or(0, |p| p.drops()),
             per_ps: self.servers.iter().map(|s| s.stats.clone()).collect(),
         }
     }
@@ -657,7 +819,7 @@ mod tests {
 
     #[test]
     fn cluster_construction_validates_shape() {
-        let ccfg = ClusterConfig { n_ps: 3, mode: PsMode::Range, sync_every: 1 };
+        let ccfg = ClusterConfig::builder().n_ps(3).mode(PsMode::Range).sync_every(1).build();
         let scfg = ServerConfig::default();
         // decoder count must match
         assert!(PsCluster::new(&ccfg, &scfg, 4, 100, 1, decoders(2)).is_err());
@@ -675,7 +837,7 @@ mod tests {
 
     #[test]
     fn replica_sync_averages_and_resets() {
-        let ccfg = ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 1 };
+        let ccfg = ClusterConfig::builder().n_ps(2).mode(PsMode::Replica).sync_every(1).build();
         let mut c =
             PsCluster::new(&ccfg, &ServerConfig::default(), 4, 3, 1, decoders(2)).unwrap();
         c.replicas = vec![vec![1.0, 2.0, 3.0], vec![3.0, 6.0, 5.0]];

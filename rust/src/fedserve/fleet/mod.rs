@@ -192,6 +192,11 @@ fn simulate_fleet_cluster(
         "fleet: --adaptive is not supported with a PS cluster (per-PS schedulers sample \
          internally, so there is no pre-round hook to address the sampled cohort)"
     );
+    ensure!(
+        cfg.server.cluster.as_ref().is_none_or(|c| c.peers == 0),
+        "fleet: remote peers are not supported (the fleet's virtual clock cannot extend into \
+         another process)"
+    );
     let k = cfg.participants_per_round();
     let sim::SimCluster { spec, tables, codec, mut cluster } = sim::build_cluster(cfg, d)?;
     let mut transport = FleetTransport::new(cfg, scn, fleet_seed, d, &spec, codec, tables.clone());

@@ -58,10 +58,17 @@
 //!   and per-client K allocation from measured link rates, announced to
 //!   the cohort as [`wire::Message::Scheme`] frames (`--adaptive` on both
 //!   `repro serve` and `repro fleet`);
+//! * [`peer`] — cross-process PS peering: cluster members in *other
+//!   processes* (`repro serve --peer ADDR`) joining the lead over the wire
+//!   protocol — membership handshake, per-round sub-step shipping, a sync
+//!   barrier on the straggler-deadline machinery, and drop-don't-hang
+//!   failure semantics with the lead falling back to the bit-exact local
+//!   reduce (DESIGN.md §peering);
 //! * [`sim`] — a runtime-free N-client exercise of all of the above (the
 //!   `repro serve` subcommand), over channels, a TCP loopback in one
 //!   process (`--tcp-loopback`), or split server/client processes
-//!   (`--listen` / `--connect`), single-PS or clustered (`--ps N`).
+//!   (`--listen` / `--connect`), single-PS or clustered (`--ps N`);
+//!   every role is one [`sim::RunPlan`] over a [`sim::Endpoint`].
 //!
 //! `coordinator::driver::run_experiment` is now a thin client of this
 //! module: it contributes only training, evaluation, and row recording.
@@ -70,6 +77,7 @@ pub mod adaptive;
 pub mod aggregate;
 pub mod cluster;
 pub mod fleet;
+pub mod peer;
 pub mod pool;
 pub mod reactor;
 pub mod server;
@@ -85,11 +93,12 @@ pub use aggregate::{
 };
 pub use cluster::{partition_clients, PsCluster};
 pub use fleet::{simulate_fleet, ChurnProcess, FleetReport, FleetTransport};
+pub use peer::{serve_peer, PeerReport, PeerSet};
 pub use pool::{BufPool, PoolBuf, PoolStats};
 pub use reactor::{Poller, Reactor, TimerWheel};
 pub use server::{FedServer, RoundSummary, SlotMap};
 pub use session::{ClientSession, RoundAssembler, Scheduler, SessionStats};
-pub use sim::{simulate, simulate_with, SimReport, TransportMode};
+pub use sim::{simulate, simulate_with, Endpoint, RunOutcome, RunPlan, SimReport, TransportMode};
 pub use table_cache::{CacheStats, LruTableCache};
 pub use transport::{
     ChannelClient, ChannelTransport, ClientTransport, Event, FrameBuffer, TcpClientTransport,

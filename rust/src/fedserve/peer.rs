@@ -1,0 +1,696 @@
+//! Cross-process PS peering: cluster members in separate processes, over
+//! the framed wire protocol.
+//!
+//! The multi-PS cluster (`fedserve::cluster`) multiplexes every member
+//! behind one process's reactor — capacity stops at one host. Peering
+//! promotes members to **remote reduce executors**: a follower process
+//! (`repro serve --peer ADDR`) connects to the lead, introduces itself
+//! with a [`Message::PeerHello`], and receives a
+//! [`Message::PeerMembership`] grant carrying everything a stateless
+//! member needs (cluster shape, model dimension, shard count, the
+//! resolved compression scheme). Each round the lead ships the member's
+//! sub-step — its current model slice (range mode) or replica (replica
+//! mode) plus the survivor payloads — and the follower runs the *same*
+//! [`FedServer::reduce_slice`] the in-process member would, replying with
+//! the updated weights. Same code, same inputs, same f32 fold order:
+//! bit-exactness against the in-process cluster is structural, not
+//! incidental (`tests/fedserve_peer.rs`).
+//!
+//! The lead keeps all client traffic: followers never see clients, so the
+//! client-facing transport, sessions, and straggler accounting are
+//! unchanged. Follower sockets are first-class reactor sources on the
+//! lead — [`PeerSet`] registers them with the same [`Poller`], reassembles
+//! frames with the same [`FrameBuffer`], flushes outbound queues under the
+//! same [`TimerWheel`] write deadlines as client connections.
+//!
+//! **Sync barrier.** After dispatching the remote sub-steps the lead
+//! reduces its local members, then waits for the replies under
+//! `cluster.barrier_timeout_ms`, mapped onto the reactor deadline exactly
+//! like the straggler deadline in `collect_uplinks`: one slow peer
+//! degrades the barrier instead of hanging it. A peer that misses the
+//! barrier (timeout, EOF, write stall, corrupt frame, stale reply) is
+//! dropped from the membership and counted in
+//! [`ClusterStats::peer_drops`]; the lead executes the dropped member's
+//! reduce locally — the in-process code path, so the model stays
+//! bit-exact — and the survivors keep serving (the kill-a-peer chaos
+//! test).
+//!
+//! [`FedServer::reduce_slice`]: super::server::FedServer::reduce_slice
+//! [`Message::PeerHello`]: super::wire::Message::PeerHello
+//! [`Message::PeerMembership`]: super::wire::Message::PeerMembership
+//! [`ClusterStats::peer_drops`]: crate::metrics::server::ClusterStats
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::{registry, BlockCodec, CpuCodec};
+use crate::config::ServerConfig;
+
+use super::pool::BufPool;
+use super::reactor::{EventSource, Interest, Poller, Ready, Reactor, TimerWheel, Token};
+use super::server::FedServer;
+use super::sim::sim_spec;
+use super::table_cache::LruTableCache;
+use super::transport::{flush_outq, Event, FrameBuffer, OutFrame, TcpConn};
+use super::wire::{self, Message, PeerMembership};
+
+/// How long a follower's outbound queue may stall before the member is
+/// declared gone (same contract as the client-transport write deadline).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long `finish` keeps flushing shutdown frames to live followers.
+const CLOSE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Barrier waits poll in bounded slices so a follower that died without a
+/// wire event (or a run with no barrier deadline at all) is still reaped
+/// promptly instead of blocking an unbounded `poll(2)`.
+const BARRIER_POLL_SLICE: Duration = Duration::from_millis(50);
+
+/// The remote-member readiness source on the lead: every follower socket
+/// behind one [`Poller`], frame reassembly per connection, outbound queues
+/// flushed on write readiness — the peer-facing sibling of the client
+/// transport's `TcpSource`.
+#[derive(Debug)]
+struct PeerSource {
+    conns: Vec<TcpConn>,
+    /// connection slot → cluster member index (assigned at accept)
+    members: Vec<usize>,
+    /// round-robin start so one chatty follower cannot starve the rest
+    cursor: usize,
+    poller: Poller,
+    /// reusable readiness-set scratch for [`Poller::wait`]
+    ready: Vec<Ready>,
+    pool: BufPool,
+    /// connection slot of the most recent frame returned by `pop` — the
+    /// barrier's reply attribution (peer replies carry no member field;
+    /// the socket they arrive on is the identity)
+    from: Option<usize>,
+}
+
+impl PeerSource {
+    fn kill(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let conn = &mut self.conns[c];
+        conn.kill();
+        let fd = conn.fd;
+        self.poller.deregister(c, fd);
+        wheel.cancel(c);
+    }
+
+    fn sync_write_interest(&mut self, c: usize) -> Result<()> {
+        let conn = &mut self.conns[c];
+        if !conn.open {
+            return Ok(());
+        }
+        let want = !conn.outq.is_empty();
+        if want != conn.want_write {
+            conn.want_write = want;
+            let fd = conn.fd;
+            let interest = if want { Interest::READ_WRITE } else { Interest::READ };
+            self.poller.reregister(c, fd, interest).context("peer reregister")?;
+        }
+        Ok(())
+    }
+
+    /// Read a ready follower to `WouldBlock` (mandatory under the
+    /// edge-triggered backend), feeding frame reassembly.
+    fn drain_reads(&mut self, wheel: &mut TimerWheel, c: usize) {
+        let mut dead = false;
+        let conn = &mut self.conns[c];
+        loop {
+            match conn.rx.read_from(&mut conn.stream) {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(k) => conn.bytes_in += k as u64,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if dead {
+            self.kill(wheel, c);
+        }
+    }
+
+    /// Flush a ready follower's queue and keep its write deadline honest:
+    /// progress re-arms, an emptied queue disarms, a hard error kills.
+    fn drain_writes(&mut self, wheel: &mut TimerWheel, c: usize) -> Result<()> {
+        if self.conns[c].outq.is_empty() {
+            wheel.cancel(c);
+            return self.sync_write_interest(c);
+        }
+        match flush_outq(&mut self.conns[c]) {
+            Err(_) => {
+                self.kill(wheel, c);
+                Ok(())
+            }
+            Ok(progressed) => {
+                if self.conns[c].outq.is_empty() {
+                    wheel.cancel(c);
+                } else if progressed {
+                    wheel.arm(c, Instant::now() + WRITE_TIMEOUT);
+                }
+                self.sync_write_interest(c)
+            }
+        }
+    }
+}
+
+impl EventSource for PeerSource {
+    fn pop(&mut self, wheel: &mut TimerWheel) -> Result<Option<Event>> {
+        let n = self.conns.len();
+        for i in 0..n {
+            let c = (self.cursor + i) % n;
+            let conn = &mut self.conns[c];
+            match conn.rx.next_frame() {
+                Ok(None) => {}
+                Ok(Some((msg, used))) => {
+                    self.cursor = (c + 1) % n;
+                    self.from = Some(c);
+                    return Ok(Some(Event::Frame { msg, wire_bytes: used }));
+                }
+                Err(e) => {
+                    // corruption past the CRC: no resynchronization point
+                    // exists, so the follower's stream is closed
+                    let dropped = conn.rx.pending();
+                    conn.rx.clear();
+                    self.kill(wheel, c);
+                    self.cursor = (c + 1) % n;
+                    return Ok(Some(Event::Garbage {
+                        client: Some(c),
+                        error: e.to_string(),
+                        wire_bytes: dropped,
+                    }));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn service(&mut self, wheel: &mut TimerWheel, budget: Option<Duration>) -> Result<()> {
+        let mut ready = std::mem::take(&mut self.ready);
+        self.poller.wait(budget, &mut ready).context("peer poll")?;
+        for &r in &ready {
+            let Some(conn) = self.conns.get(r.token) else {
+                continue;
+            };
+            if !conn.open {
+                continue;
+            }
+            if r.readable {
+                self.drain_reads(wheel, r.token);
+            }
+            if r.writable && self.conns[r.token].open {
+                self.drain_writes(wheel, r.token)?;
+            }
+        }
+        self.ready = ready;
+        self.pool.maintain();
+        Ok(())
+    }
+
+    fn on_timer(&mut self, wheel: &mut TimerWheel, token: Token) {
+        // a write deadline fired with the queue still backed up: the
+        // follower stopped reading — declare it gone
+        let Some(conn) = self.conns.get_mut(token) else {
+            return;
+        };
+        if conn.open && !conn.outq.is_empty() {
+            conn.kill();
+            let fd = conn.fd;
+            self.poller.deregister(token, fd);
+        }
+        wheel.cancel(token);
+    }
+
+    fn exhausted(&self) -> bool {
+        self.conns.iter().all(|c| !c.open)
+    }
+}
+
+/// The lead's handle on its remote members: accepted follower connections,
+/// per-round sub-step dispatch, and the sync barrier. Owned by
+/// [`PsCluster`] (via `attach_peers`), which consults [`PeerSet::is_remote`]
+/// to route each member's reduce locally or over the wire.
+///
+/// [`PsCluster`]: super::cluster::PsCluster
+#[derive(Debug)]
+pub struct PeerSet {
+    reactor: Reactor,
+    src: PeerSource,
+    /// live membership: cluster member index → connection slot. A dropped
+    /// member leaves the map permanently — its reduces run on the lead
+    /// from then on.
+    slot_of: HashMap<usize, usize>,
+    peers_total: usize,
+    drops: usize,
+    /// 0 = no deadline: the barrier waits (in bounded poll slices) until
+    /// every live follower replies or its connection dies
+    barrier_timeout: Duration,
+}
+
+impl PeerSet {
+    /// Accept exactly `n_peers` followers off `listener`, each introducing
+    /// itself with a [`Message::PeerHello`]. Member indices are assigned
+    /// in accept order starting at 1 — the lead is always member 0 — and
+    /// granted back via [`Message::PeerMembership`] built from `template`
+    /// (its `member` field is overwritten per grant).
+    pub fn accept(
+        listener: &TcpListener,
+        n_peers: usize,
+        timeout: Duration,
+        barrier_timeout_ms: u64,
+        template: &PeerMembership,
+    ) -> Result<PeerSet> {
+        ensure!(n_peers >= 1, "a peer set needs at least one remote member");
+        ensure!(
+            n_peers < template.n_ps,
+            "{n_peers} remote peer(s) need a cluster of at least {} members \
+             (the lead is always member 0)",
+            n_peers + 1
+        );
+        let deadline = Instant::now() + timeout;
+        listener.set_nonblocking(true).context("peer listener nonblocking")?;
+        let pool = BufPool::new();
+        let mut poller = Poller::new();
+        let mut conns: Vec<TcpConn> = Vec::with_capacity(n_peers);
+        let mut members: Vec<usize> = Vec::with_capacity(n_peers);
+        let mut slot_of = HashMap::new();
+        while conns.len() < n_peers {
+            ensure!(
+                Instant::now() < deadline,
+                "only {} of {n_peers} peer(s) joined before the accept deadline",
+                conns.len()
+            );
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let member = conns.len() + 1;
+                    let conn = admit(stream, member, template, deadline, &pool)
+                        .with_context(|| format!("admitting peer {peer}"))?;
+                    let slot = conns.len();
+                    poller
+                        .register(slot, conn.fd, Interest::READ)
+                        .with_context(|| format!("registering peer member {member}"))?;
+                    slot_of.insert(member, slot);
+                    members.push(member);
+                    conns.push(conn);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("peer accept"),
+            }
+        }
+        Ok(PeerSet {
+            reactor: Reactor::new(),
+            src: PeerSource {
+                conns,
+                members,
+                cursor: 0,
+                poller,
+                ready: Vec::new(),
+                pool,
+                from: None,
+            },
+            slot_of,
+            peers_total: n_peers,
+            drops: 0,
+            barrier_timeout: Duration::from_millis(barrier_timeout_ms),
+        })
+    }
+
+    /// Remote members ever admitted (live and dropped alike).
+    pub fn n_remote(&self) -> usize {
+        self.peers_total
+    }
+
+    /// Members dropped from the membership (barrier misses, dead sockets).
+    pub fn drops(&self) -> usize {
+        self.drops
+    }
+
+    /// Whether cluster member `member` currently reduces remotely. False
+    /// once dropped: the lead owns the member's reduces from then on.
+    pub fn is_remote(&self, member: usize) -> bool {
+        self.slot_of.contains_key(&member)
+    }
+
+    fn drop_member(&mut self, member: usize) {
+        if let Some(slot) = self.slot_of.remove(&member) {
+            self.drops += 1;
+            let conn = &mut self.src.conns[slot];
+            if conn.open {
+                conn.kill();
+                let fd = conn.fd;
+                self.src.poller.deregister(slot, fd);
+            }
+            self.reactor.wheel.cancel(slot);
+        }
+    }
+
+    /// Ship one encoded sub-step frame to `member`. Returns whether the
+    /// step is in flight; a send failure drops the member on the spot (the
+    /// caller then reduces it locally — nothing was half-applied, the
+    /// follower only replies with complete frames).
+    pub fn send_step(&mut self, member: usize, frame: Vec<u8>) -> bool {
+        let Some(&slot) = self.slot_of.get(&member) else {
+            return false;
+        };
+        if !self.src.conns[slot].open {
+            self.drop_member(member);
+            return false;
+        }
+        let conn = &mut self.src.conns[slot];
+        conn.outq.push_back(OutFrame { frame: frame.into(), off: 0 });
+        match flush_outq(conn) {
+            Err(_) => {
+                self.drop_member(member);
+                false
+            }
+            Ok(progressed) => {
+                if conn.outq.is_empty() {
+                    self.reactor.wheel.cancel(slot);
+                } else if progressed || !self.reactor.wheel.is_armed(slot) {
+                    // same stall contract as the client transport: progress
+                    // resets the deadline, a fresh stall starts it, a
+                    // zero-progress send must not push the reaper back
+                    self.reactor.wheel.arm(slot, Instant::now() + WRITE_TIMEOUT);
+                }
+                let _ = self.src.sync_write_interest(slot);
+                true
+            }
+        }
+    }
+
+    /// The sync barrier: wait for every member in `expect` (entries
+    /// `(member, offset, len)`) to reply to round `round` with a
+    /// [`Message::PeerSlice`] / [`Message::PeerReplicaSync`] of exactly
+    /// `len` weights at `offset`. Misses — deadline expiry, a dead socket,
+    /// a corrupt or out-of-step reply — drop the member from the
+    /// membership. Returns the replies that made it, keyed by member; the
+    /// caller reduces every missing member locally.
+    pub fn collect_step(
+        &mut self,
+        round: usize,
+        expect: &[(usize, usize, usize)],
+    ) -> Result<HashMap<usize, Vec<f32>>> {
+        let mut pending: Vec<(usize, usize, usize)> =
+            expect.iter().filter(|(m, _, _)| self.slot_of.contains_key(m)).copied().collect();
+        let deadline = (self.barrier_timeout > Duration::ZERO)
+            .then(|| Instant::now() + self.barrier_timeout);
+        let mut got: HashMap<usize, Vec<f32>> = HashMap::new();
+        while !pending.is_empty() {
+            // reap members whose sockets died without a wire event (EOF
+            // seen by a read drain, write-stall reaping): the deadline
+            // cannot revive them, so they leave the barrier immediately
+            let dead: Vec<usize> = pending
+                .iter()
+                .map(|&(m, _, _)| m)
+                .filter(|m| self.slot_of.get(m).is_none_or(|&s| !self.src.conns[s].open))
+                .collect();
+            for m in dead {
+                self.drop_member(m);
+            }
+            pending.retain(|&(m, _, _)| self.slot_of.contains_key(&m));
+            if pending.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            let slice = match deadline {
+                Some(dl) if now >= dl => break,
+                Some(dl) => (dl - now).min(BARRIER_POLL_SLICE),
+                None => BARRIER_POLL_SLICE,
+            };
+            match self.reactor.poll_events(&mut self.src, Some(slice))? {
+                None => continue, // slice elapsed: re-check deadline + deaths
+                Some(Event::Garbage { client, .. }) => {
+                    if let Some(slot) = client {
+                        let member = self.src.members[slot];
+                        self.drop_member(member);
+                    }
+                }
+                Some(Event::Frame { msg, .. }) => {
+                    let Some(slot) = self.src.from.take() else {
+                        continue;
+                    };
+                    let member = self.src.members[slot];
+                    let Some(pos) = pending.iter().position(|&(m, _, _)| m == member) else {
+                        // a reply nobody waits on: the stream is out of
+                        // step with the round cadence — drop the member
+                        self.drop_member(member);
+                        continue;
+                    };
+                    let (_, offset, len) = pending[pos];
+                    let weights = match msg {
+                        Message::PeerSlice { round: r, offset: o, weights, .. }
+                            if r == round && o == offset && weights.len() == len =>
+                        {
+                            Some(weights)
+                        }
+                        Message::PeerReplicaSync { round: r, weights }
+                            if r == round && offset == 0 && weights.len() == len =>
+                        {
+                            Some(weights)
+                        }
+                        _ => None,
+                    };
+                    pending.swap_remove(pos);
+                    match weights {
+                        Some(w) => {
+                            got.insert(member, w);
+                        }
+                        None => self.drop_member(member),
+                    }
+                }
+            }
+        }
+        // whoever is still pending missed the barrier: out of the cluster
+        for &(m, _, _) in &pending {
+            self.drop_member(m);
+        }
+        Ok(got)
+    }
+
+    /// Graceful end of run: ship a shutdown frame to every live follower,
+    /// flush under one hard deadline, half-close.
+    pub fn finish(&mut self) {
+        let f: Arc<[u8]> = wire::encode_shutdown().into();
+        for c in 0..self.src.conns.len() {
+            if !self.src.conns[c].open {
+                continue;
+            }
+            self.src.conns[c].outq.push_back(OutFrame { frame: f.clone(), off: 0 });
+            if flush_outq(&mut self.src.conns[c]).is_err() {
+                self.src.kill(&mut self.reactor.wheel, c);
+                continue;
+            }
+            let _ = self.src.sync_write_interest(c);
+        }
+        let deadline = Instant::now() + CLOSE_TIMEOUT;
+        let mut ready: Vec<Ready> = Vec::new();
+        while self.src.conns.iter().any(|c| c.open && !c.outq.is_empty()) {
+            let now = Instant::now();
+            if now >= deadline {
+                break; // unsendable followers lose their shutdown frame
+            }
+            if self.src.poller.wait(Some(deadline - now), &mut ready).is_err() {
+                break;
+            }
+            for &r in &ready {
+                let Some(conn) = self.src.conns.get_mut(r.token) else {
+                    continue;
+                };
+                if !conn.open || !r.writable || conn.outq.is_empty() {
+                    continue;
+                }
+                if flush_outq(conn).is_err() {
+                    self.src.kill(&mut self.reactor.wheel, r.token);
+                } else {
+                    let _ = self.src.sync_write_interest(r.token);
+                }
+            }
+        }
+        for conn in self.src.conns.iter_mut().filter(|c| c.open) {
+            let _ = conn.stream.shutdown(Shutdown::Write);
+        }
+    }
+}
+
+/// Blocking handshake with one joining follower: read its hello, grant
+/// membership `member`, switch the socket onto nonblocking reactor duty.
+fn admit(
+    stream: TcpStream,
+    member: usize,
+    template: &PeerMembership,
+    deadline: Instant,
+    pool: &BufPool,
+) -> Result<TcpConn> {
+    let mut stream = stream;
+    stream.set_nodelay(true).ok();
+    // accepted sockets do not reliably inherit the listener's nonblocking
+    // flag — the handshake wants blocking reads under a read timeout
+    stream.set_nonblocking(false).context("handshake blocking mode")?;
+    let mut rx = FrameBuffer::with_pool(pool);
+    let mut bytes_in = 0u64;
+    loop {
+        if let Some((msg, _)) = rx.next_frame()? {
+            match msg {
+                Message::PeerHello { .. } => break,
+                other => bail!("expected a peer hello, got {other:?}"),
+            }
+        }
+        let now = Instant::now();
+        ensure!(now < deadline, "peer handshake timed out");
+        stream.set_read_timeout(Some(deadline - now)).context("handshake read timeout")?;
+        match rx.read_from(&mut stream) {
+            Ok(0) => bail!("connection closed during the peer handshake"),
+            Ok(k) => bytes_in += k as u64,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                bail!("peer handshake timed out")
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("peer handshake read"),
+        }
+    }
+    let grant = PeerMembership { member, ..template.clone() };
+    let frame = wire::encode_peer_membership(&grant);
+    stream.write_all(&frame).context("membership grant write")?;
+    stream.set_read_timeout(None).ok();
+    stream.set_nonblocking(true).context("peer socket nonblocking")?;
+    let mut conn = TcpConn::new(stream, rx);
+    conn.bytes_in = bytes_in;
+    conn.bytes_out = frame.len() as u64;
+    Ok(conn)
+}
+
+/// What a follower run produced (for logging and the chaos tests).
+#[derive(Debug, Clone)]
+pub struct PeerReport {
+    /// the member index the lead granted
+    pub member: usize,
+    /// sub-steps served (one per cluster round this member participated in)
+    pub rounds_served: usize,
+}
+
+/// The follower body: connect to the lead at `addr` (retrying refusals
+/// until `timeout`, so followers may start before the lead listens),
+/// introduce, receive membership, then serve reduce sub-steps until the
+/// lead's shutdown frame or EOF. `die_after_rounds` is chaos tooling: the
+/// follower vanishes without a goodbye after that many served sub-steps,
+/// and the lead's next barrier must drop it and keep serving.
+pub fn serve_peer(
+    addr: &str,
+    timeout: Duration,
+    die_after_rounds: Option<usize>,
+    table_cache_capacity: usize,
+) -> Result<PeerReport> {
+    let deadline = Instant::now() + timeout;
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to the lead at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    stream.write_all(&wire::encode_peer_hello(0)).context("peer hello")?;
+    let mut rx = FrameBuffer::new();
+    let m = match next_message(&mut stream, &mut rx)? {
+        Some(Message::PeerMembership(m)) => m,
+        Some(other) => bail!("expected a membership grant, got {other:?}"),
+        None => bail!("the lead closed the connection before granting membership"),
+    };
+    // the stateless member's working set, all derived from the grant: the
+    // same synthetic model layout, a decoder off the same resolved scheme
+    // (LBG designs are deterministic, so decode parity holds across
+    // processes), and a FedServer configured to shard reduces identically
+    let spec = sim_spec(m.d);
+    let tables = Arc::new(LruTableCache::new(table_cache_capacity));
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let decoder = registry::build_decoder(&m.spec, codec, tables)
+        .with_context(|| format!("building the decoder for member {}", m.member))?;
+    let cfg = ServerConfig::builder().shards(m.shards).build();
+    let mut server = FedServer::new(cfg, 0, m.spec.seed, decoder);
+    eprintln!(
+        "peer: joined as member {} of {} ({} mode, d = {})",
+        m.member,
+        m.n_ps,
+        m.mode.label(),
+        m.d
+    );
+    let mut rounds_served = 0usize;
+    loop {
+        let msg = match next_message(&mut stream, &mut rx)? {
+            Some(msg) => msg,
+            None => break, // lead gone without shutdown (its run failed)
+        };
+        let reply = match msg {
+            Message::PeerRangeStep { round, offset, total, weights, payloads } => {
+                ensure!(
+                    total == m.d,
+                    "range step for a {total}-dim model on a d = {} member",
+                    m.d
+                );
+                let mut w = weights;
+                let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                if !refs.is_empty() {
+                    let scale = 1.0 / refs.len() as f32;
+                    server.reduce_slice(&refs, &spec, offset, &mut w, scale)?;
+                }
+                wire::encode_peer_slice(round, offset, total, &w)
+            }
+            Message::PeerReplicaStep { round, weights, payloads } => {
+                ensure!(
+                    weights.len() == m.d,
+                    "replica step of {} dims on a d = {} member",
+                    weights.len(),
+                    m.d
+                );
+                let mut w = weights;
+                let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                if !refs.is_empty() {
+                    let scale = 1.0 / refs.len() as f32;
+                    server.reduce_slice(&refs, &spec, 0, &mut w, scale)?;
+                }
+                wire::encode_peer_replica_sync(round, &w)
+            }
+            Message::Shutdown => break,
+            other => bail!("peer member {}: unexpected frame {other:?}", m.member),
+        };
+        stream.write_all(&reply).context("sub-step reply write")?;
+        rounds_served += 1;
+        if die_after_rounds.is_some_and(|n| rounds_served >= n) {
+            // chaos exit: no shutdown, no half-close — just gone
+            break;
+        }
+    }
+    Ok(PeerReport { member: m.member, rounds_served })
+}
+
+/// Blocking framed read — the follower's receive primitive. `Ok(None)` is
+/// the lead going away without a shutdown frame.
+fn next_message(stream: &mut TcpStream, rx: &mut FrameBuffer) -> Result<Option<Message>> {
+    loop {
+        if let Some((msg, _)) = rx.next_frame()? {
+            return Ok(Some(msg));
+        }
+        match rx.read_from(stream) {
+            Ok(0) => return Ok(None),
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("peer downlink read"),
+        }
+    }
+}

@@ -10,12 +10,21 @@
 //! split `serve_listen` / `serve_connect` pair) those frames cross a real
 //! socket, so the encode → wire → fused decode+reduce loop is the
 //! subsystem end-to-end minus the learning itself.
+//!
+//! Every entry point is one [`RunPlan`]: a config, a dimension, and an
+//! [`Endpoint`] saying which role this process plays — in-process host
+//! ([`Endpoint::Local`]), accepting host ([`Endpoint::Listen`]), remote
+//! client ([`Endpoint::Connect`]), or remote cluster member
+//! ([`Endpoint::Peer`], DESIGN.md §peering). `simulate`, `serve_listen`,
+//! and `serve_connect` are thin wrappers over it; a peered lead sets
+//! `peer_bind` and the plan admits the followers before any client
+//! traffic starts.
 
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::{registry, BlockCodec, CpuCodec};
 use crate::config::ExperimentConfig;
@@ -27,6 +36,7 @@ use crate::util::rng::Rng;
 
 use super::adaptive::{caps_from_measured, AdaptiveController};
 use super::cluster::PsCluster;
+use super::peer::{self, PeerReport, PeerSet};
 use super::server::FedServer;
 use super::session::{ClientSession, RoundAssembler};
 use super::table_cache::LruTableCache;
@@ -39,6 +49,12 @@ use super::wire;
 const LOOPBACK_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
 /// How long a loopback client retries its connect.
 const LOOPBACK_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a `--listen` host waits for its remote clients.
+const CLIENT_ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a peered lead waits for every follower to join.
+const PEER_ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a follower retries its connect to the lead.
+const PEER_JOIN_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Which transport a simulated run exchanges frames over.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -424,6 +440,250 @@ where
     }
 }
 
+/// Which role this process plays in a run — the one axis every serve
+/// entry point used to encode in its own function signature.
+#[derive(Debug, Clone)]
+pub enum Endpoint {
+    /// Host the rounds with in-process simulated clients on `mode`.
+    Local(TransportMode),
+    /// Host the rounds, accepting `cfg.n_clients` remote clients on `addr`
+    /// (`repro serve --listen`).
+    Listen { addr: String },
+    /// Be one remote client against the host at `addr`
+    /// (`repro serve --connect`).
+    Connect { addr: String, id: usize },
+    /// Be one remote cluster member against the lead at `addr`
+    /// (`repro serve --peer`, DESIGN.md §peering). `die_after_rounds` is
+    /// chaos tooling: vanish without a goodbye after that many sub-steps.
+    Peer { addr: String, die_after_rounds: Option<usize> },
+}
+
+/// One serve run, fully described: the experiment, the model dimension,
+/// this process's [`Endpoint`] role, and — on a peered lead — the address
+/// the follower listener binds.
+#[derive(Debug)]
+pub struct RunPlan<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub d: usize,
+    pub endpoint: Endpoint,
+    /// required iff `cfg.server.cluster.peers > 0` on a hosting endpoint
+    pub peer_bind: Option<String>,
+}
+
+/// What a [`RunPlan`] produced, per role.
+#[derive(Debug)]
+pub enum RunOutcome {
+    /// A hosting endpoint ran the rounds to completion.
+    Report(SimReport),
+    /// A [`Endpoint::Connect`] client served until the host shut it down.
+    ClientDone,
+    /// A [`Endpoint::Peer`] follower served until shutdown (or its
+    /// scheduled chaos death).
+    PeerDone(PeerReport),
+}
+
+impl RunPlan<'_> {
+    /// Validate the plan and play the role. Hosting endpoints build the
+    /// server (or cluster) first, admit remote peers second, and accept
+    /// client traffic last, so followers are in the membership before the
+    /// first round can possibly start.
+    pub fn execute(self) -> Result<RunOutcome> {
+        let peers_wanted = self.cfg.server.cluster.as_ref().map_or(0, |c| c.peers);
+        match self.endpoint {
+            Endpoint::Connect { addr, id } => {
+                ensure!(self.peer_bind.is_none(), "--connect does not host peers");
+                serve_connect(self.cfg, self.d, &addr, id)?;
+                Ok(RunOutcome::ClientDone)
+            }
+            Endpoint::Peer { addr, die_after_rounds } => {
+                ensure!(self.peer_bind.is_none(), "--peer does not host peers");
+                let report = peer::serve_peer(
+                    &addr,
+                    PEER_JOIN_TIMEOUT,
+                    die_after_rounds,
+                    self.cfg.server.table_cache_capacity,
+                )?;
+                Ok(RunOutcome::PeerDone(report))
+            }
+            endpoint @ (Endpoint::Local(_) | Endpoint::Listen { .. }) => {
+                ensure!(
+                    self.peer_bind.is_none() || peers_wanted > 0,
+                    "--peer-bind needs a cluster with remote members (--ps N --peers K)"
+                );
+                let report = run_host(self.cfg, self.d, endpoint, self.peer_bind)?;
+                Ok(RunOutcome::Report(report))
+            }
+        }
+    }
+}
+
+/// The host-side state a run drives, single-PS or clustered — what
+/// `simulate_with` and `serve_listen` used to assemble separately.
+pub(crate) enum SimHost {
+    Single(SimServer),
+    Cluster(SimCluster),
+}
+
+impl SimHost {
+    /// Build (and prewarm) per the config — before any socket is bound, so
+    /// connected endpoints never wait out an LBG design.
+    pub(crate) fn build(cfg: &ExperimentConfig, d: usize) -> Result<SimHost> {
+        Ok(match cfg.server.cluster {
+            Some(_) => SimHost::Cluster(build_cluster(cfg, d)?),
+            None => SimHost::Single(build_server(cfg, d)?),
+        })
+    }
+
+    pub(crate) fn spec(&self) -> &ModelSpec {
+        match self {
+            SimHost::Single(s) => &s.spec,
+            SimHost::Cluster(c) => &c.spec,
+        }
+    }
+
+    pub(crate) fn codec(&self) -> Arc<dyn BlockCodec> {
+        match self {
+            SimHost::Single(s) => s.codec.clone(),
+            SimHost::Cluster(c) => c.codec.clone(),
+        }
+    }
+
+    pub(crate) fn tables(&self) -> Arc<LruTableCache> {
+        match self {
+            SimHost::Single(s) => s.tables.clone(),
+            SimHost::Cluster(c) => c.tables.clone(),
+        }
+    }
+
+    /// Hand the admitted followers to the cluster (a single server has no
+    /// members to delegate).
+    pub(crate) fn attach_peers(&mut self, peers: PeerSet) -> Result<()> {
+        match self {
+            SimHost::Cluster(c) => c.cluster.attach_peers(peers),
+            SimHost::Single(_) => bail!("peering requires a cluster (--ps N with N ≥ 2)"),
+        }
+    }
+
+    /// Drive every round through `transport` and close it gracefully.
+    pub(crate) fn drive(
+        &mut self,
+        transport: &mut dyn Transport,
+        cfg: &ExperimentConfig,
+        w: &mut [f32],
+        ctrl: Option<&mut AdaptiveController>,
+    ) -> Result<f64> {
+        match self {
+            SimHost::Single(s) => drive_rounds(&mut s.server, transport, cfg, &s.spec, w, ctrl),
+            SimHost::Cluster(c) => {
+                drive_cluster_rounds(&mut c.cluster, transport, cfg, &c.spec, w, ctrl)
+            }
+        }
+    }
+
+    /// Fold the end-of-run counters into the report.
+    pub(crate) fn finish(
+        self,
+        cfg: &ExperimentConfig,
+        d: usize,
+        w: Vec<f32>,
+        bits_per_round: f64,
+        tstats: TransportStats,
+    ) -> SimReport {
+        match self {
+            SimHost::Single(s) => {
+                finish_report(cfg, d, w, bits_per_round, s.server, &s.tables, tstats)
+            }
+            SimHost::Cluster(c) => {
+                finish_cluster_report(cfg, d, w, bits_per_round, c.cluster, &c.tables, tstats)
+            }
+        }
+    }
+}
+
+/// The hosting body behind [`RunPlan::execute`]: build, admit peers,
+/// accept clients, drive, report.
+fn run_host(
+    cfg: &ExperimentConfig,
+    d: usize,
+    endpoint: Endpoint,
+    peer_bind: Option<String>,
+) -> Result<SimReport> {
+    let mut host = SimHost::build(cfg, d)?;
+    if let Some(ccfg) = cfg.server.cluster.as_ref().filter(|c| c.peers > 0) {
+        let bind = peer_bind
+            .context("cluster.peers > 0 needs a peer listener address (--peer-bind)")?;
+        // a follower's decoder is pinned by its membership grant; the
+        // adaptive controller re-designs mid-run, which would desynchronize
+        // the remote members' tables from the lead's
+        ensure!(
+            !cfg.server.adaptive,
+            "peered clusters do not support --adaptive (followers pin their scheme at the \
+             membership grant)"
+        );
+        let template = wire::PeerMembership {
+            member: 0, // overwritten per grant
+            n_ps: ccfg.n_ps,
+            mode: ccfg.mode,
+            sync_every: ccfg.sync_every,
+            d,
+            shards: cfg.server.shards,
+            spec: cfg.scheme_spec(d),
+        };
+        let listener =
+            TcpListener::bind(&bind).with_context(|| format!("binding peer listener {bind}"))?;
+        eprintln!(
+            "fedserve: waiting for {} peer(s) on {}",
+            ccfg.peers,
+            listener.local_addr().context("peer listener address")?
+        );
+        let set = PeerSet::accept(
+            &listener,
+            ccfg.peers,
+            PEER_ACCEPT_TIMEOUT,
+            ccfg.barrier_timeout_ms,
+            &template,
+        )?;
+        drop(listener);
+        host.attach_peers(set)?;
+    }
+    let spec = host.spec().clone();
+    let codec = host.codec();
+    let tables = host.tables();
+    let mut ctrl = build_controller(cfg, d, &codec, &tables);
+    let mut w = vec![0.0f32; d];
+    match endpoint {
+        Endpoint::Local(mode) => {
+            let sessions = build_sessions(cfg, d, &codec, &tables)?;
+            let (bits, tstats) =
+                with_transport(cfg, d, mode, sessions, &spec, &codec, &tables, |t| {
+                    host.drive(t, cfg, &mut w, ctrl.as_mut())
+                })?;
+            Ok(host.finish(cfg, d, w, bits, tstats))
+        }
+        Endpoint::Listen { addr } => {
+            let listener =
+                TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+            eprintln!(
+                "fedserve: listening on {} for {} clients",
+                listener.local_addr().context("listen address")?,
+                cfg.n_clients
+            );
+            let accepted =
+                TcpServerTransport::accept(&listener, cfg.n_clients, CLIENT_ACCEPT_TIMEOUT);
+            // drop the listener either way: an accept failure must not
+            // strand a backlogged-but-unaccepted client
+            drop(listener);
+            let mut transport = accepted?;
+            let bits = host.drive(&mut transport, cfg, &mut w, ctrl.as_mut())?;
+            let tstats = transport.stats();
+            Ok(host.finish(cfg, d, w, bits, tstats))
+        }
+        Endpoint::Connect { .. } | Endpoint::Peer { .. } => {
+            unreachable!("non-hosting endpoints are handled by RunPlan::execute")
+        }
+    }
+}
+
 /// Drive `cfg.rounds` federated rounds of `cfg.n_clients` simulated clients
 /// at model dimension `d` over the in-process channel transport.
 pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
@@ -437,17 +697,11 @@ pub fn simulate(cfg: &ExperimentConfig, d: usize) -> Result<SimReport> {
 /// (a range-mode cluster is bit-exact against the single server,
 /// `tests/fedserve_cluster.rs`).
 pub fn simulate_with(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
-    if cfg.server.cluster.is_some() {
-        return simulate_cluster(cfg, d, mode);
+    let plan = RunPlan { cfg, d, endpoint: Endpoint::Local(mode), peer_bind: None };
+    match plan.execute()? {
+        RunOutcome::Report(r) => Ok(r),
+        _ => unreachable!("a local run always yields a report"),
     }
-    let SimServer { spec, tables, codec, mut server } = build_server(cfg, d)?;
-    let sessions = build_sessions(cfg, d, &codec, &tables)?;
-    let mut ctrl = build_controller(cfg, d, &codec, &tables);
-    let mut w = vec![0.0f32; d];
-    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, &codec, &tables, |t| {
-        drive_rounds(&mut server, t, cfg, &spec, &mut w, ctrl.as_mut())
-    })?;
-    Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
 }
 
 /// The cluster-hosting pieces every clustered serve constructs the same
@@ -501,52 +755,22 @@ pub(crate) fn finish_cluster_report(
     }
 }
 
-fn simulate_cluster(cfg: &ExperimentConfig, d: usize, mode: TransportMode) -> Result<SimReport> {
-    let SimCluster { spec, tables, codec, mut cluster } = build_cluster(cfg, d)?;
-    let sessions = build_sessions(cfg, d, &codec, &tables)?;
-    let mut ctrl = build_controller(cfg, d, &codec, &tables);
-    let mut w = vec![0.0f32; d];
-    let (bits_per_round, tstats) = with_transport(cfg, d, mode, sessions, &spec, &codec, &tables, |t| {
-        drive_cluster_rounds(&mut cluster, t, cfg, &spec, &mut w, ctrl.as_mut())
-    })?;
-    Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats))
-}
-
 /// `repro serve --listen`: bind `addr`, accept `cfg.n_clients` remote
 /// clients (each `repro serve --connect` processes, or anything speaking
 /// the wire protocol), run the rounds (single PS or a `--ps N` cluster),
-/// report.
+/// report. A thin wrapper over [`RunPlan`] with [`Endpoint::Listen`];
+/// pass `peer_bind` through the plan to host remote cluster members too.
 pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimReport> {
-    // build (and prewarm) before listening, so connected clients never
-    // wait out an LBG design between accept and the first round
-    let cluster = cfg.server.cluster.as_ref().map(|_| build_cluster(cfg, d)).transpose()?;
-    let single = match cluster {
-        Some(_) => None,
-        None => Some(build_server(cfg, d)?),
+    let plan = RunPlan {
+        cfg,
+        d,
+        endpoint: Endpoint::Listen { addr: addr.to_string() },
+        peer_bind: None,
     };
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!(
-        "fedserve: listening on {} for {} clients",
-        listener.local_addr().context("listen address")?,
-        cfg.n_clients
-    );
-    let accepted = TcpServerTransport::accept(&listener, cfg.n_clients, Duration::from_secs(120));
-    drop(listener);
-    let mut transport = accepted?;
-    let mut w = vec![0.0f32; d];
-    if let Some(SimCluster { spec, tables, codec, mut cluster }) = cluster {
-        let mut ctrl = build_controller(cfg, d, &codec, &tables);
-        let bits_per_round =
-            drive_cluster_rounds(&mut cluster, &mut transport, cfg, &spec, &mut w, ctrl.as_mut())?;
-        let tstats = transport.stats();
-        return Ok(finish_cluster_report(cfg, d, w, bits_per_round, cluster, &tables, tstats));
+    match plan.execute()? {
+        RunOutcome::Report(r) => Ok(r),
+        _ => unreachable!("a listening run always yields a report"),
     }
-    let SimServer { spec, tables, codec, mut server } =
-        single.expect("either a cluster or a single server was built");
-    let mut ctrl = build_controller(cfg, d, &codec, &tables);
-    let bits_per_round = drive_rounds(&mut server, &mut transport, cfg, &spec, &mut w, ctrl.as_mut())?;
-    let tstats = transport.stats();
-    Ok(finish_report(cfg, d, w, bits_per_round, server, &tables, tstats))
 }
 
 /// `repro serve --connect`: one simulated client serving rounds against a
@@ -702,7 +926,8 @@ mod tests {
         cfg.n_clients = 6;
         cfg.server.adaptive = true;
         cfg.server.prewarm = false;
-        cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 });
+        cfg.server.cluster =
+            Some(ClusterConfig::builder().n_ps(2).mode(PsMode::Replica).sync_every(2).build());
         let rep = simulate(&cfg, 512).unwrap();
         assert_eq!(rep.stats.rounds.len(), 4);
         // fits land only after barrier rounds (1 and 3): rounds 0 and 1
@@ -737,7 +962,8 @@ mod tests {
         cfg.n_clients = 6;
         cfg.server.prewarm = false;
         for mode in [PsMode::Range, PsMode::Replica] {
-            cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode, sync_every: 2 });
+            cfg.server.cluster =
+                Some(ClusterConfig::builder().n_ps(2).mode(mode).sync_every(2).build());
             let rep = simulate(&cfg, 512).unwrap();
             assert_eq!(rep.stats.rounds.len(), 3, "{mode:?}");
             assert!(rep.w_norm() > 0.0, "{mode:?}");

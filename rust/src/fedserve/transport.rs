@@ -397,28 +397,32 @@ impl ClientTransport for ChannelClient {
 
 /// One frame queued for a connection, partially written up to `off`. The
 /// frame bytes are shared across every queue holding the same broadcast.
+/// `pub(crate)` because `fedserve::peer` queues peer frames the same way.
 #[derive(Debug)]
-struct OutFrame {
-    frame: Arc<[u8]>,
-    off: usize,
+pub(crate) struct OutFrame {
+    pub(crate) frame: Arc<[u8]>,
+    pub(crate) off: usize,
 }
 
+/// One live socket with its reassembly buffer and outbound queue.
+/// `pub(crate)` so `fedserve::peer` can drive peer connections through the
+/// same nonblocking read/write machinery client connections use.
 #[derive(Debug)]
-struct TcpConn {
-    stream: TcpStream,
-    fd: i32,
-    rx: FrameBuffer,
-    outq: VecDeque<OutFrame>,
-    open: bool,
+pub(crate) struct TcpConn {
+    pub(crate) stream: TcpStream,
+    pub(crate) fd: i32,
+    pub(crate) rx: FrameBuffer,
+    pub(crate) outq: VecDeque<OutFrame>,
+    pub(crate) open: bool,
     /// mirror of the kernel-side write interest (true while `outq` backs
     /// up) — interest changes are pushed incrementally, never rebuilt
-    want_write: bool,
-    bytes_in: u64,
-    bytes_out: u64,
+    pub(crate) want_write: bool,
+    pub(crate) bytes_in: u64,
+    pub(crate) bytes_out: u64,
 }
 
 impl TcpConn {
-    fn new(stream: TcpStream, rx: FrameBuffer) -> TcpConn {
+    pub(crate) fn new(stream: TcpStream, rx: FrameBuffer) -> TcpConn {
         let fd = fd_of(&stream);
         TcpConn {
             stream,
@@ -433,7 +437,7 @@ impl TcpConn {
     }
 
     /// Tear the connection down; queued downlinks are unsendable now.
-    fn kill(&mut self) {
+    pub(crate) fn kill(&mut self) {
         self.open = false;
         self.outq.clear();
         let _ = self.stream.shutdown(Shutdown::Both);
@@ -449,7 +453,7 @@ impl TcpConn {
 /// edge-triggered backend sound: after every flush the socket is either
 /// drained or was observed unwritable, so a future writability edge is
 /// guaranteed whenever the queue is non-empty.
-fn flush_outq(conn: &mut TcpConn) -> std::io::Result<bool> {
+pub(crate) fn flush_outq(conn: &mut TcpConn) -> std::io::Result<bool> {
     let mut progressed = false;
     while let Some(front) = conn.outq.front_mut() {
         match conn.stream.write(&front.frame[front.off..]) {

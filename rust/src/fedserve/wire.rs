@@ -33,6 +33,30 @@
 //!                  (the adaptive-control downlink: the PS re-resolves a
 //!                  client's compression scheme mid-run and the client
 //!                  swaps its encoder before the next round broadcast)
+//!
+//! Peer frames (DESIGN.md §peering — the lead ↔ remote-member link of a
+//! cross-process `PsCluster`; all reuse the same frame envelope and the
+//! weight/payload encodings above):
+//! * `PeerHello`       — member u32 (a joining peer's introduction; 0 =
+//!                       unassigned, the lead replies with the
+//!                       authoritative index)
+//! * `PeerMembership`  — member u32 | n_ps u32 | mode u8 | sync_every u32
+//!                       | d u32 | shards u32 | scheme-spec (the same 42
+//!                       bytes as `Scheme`): everything a stateless peer
+//!                       needs to run its member's reduce bit-exactly
+//! * `PeerRangeStep`   — round u64 | offset u32 | total u32 | weights
+//!                       | payload batch (lead → peer: one range member's
+//!                       sub-step — current slice + survivor payloads)
+//! * `PeerSlice`       — round u64 | offset u32 | total u32 | weights
+//!                       (peer → lead: the updated slice)
+//! * `PeerReplicaStep` — round u64 | weights | payload batch (lead → peer:
+//!                       one replica member's sub-step — its full-width
+//!                       replica + its client span's payloads)
+//! * `PeerReplicaSync` — round u64 | weights (peer → lead: the updated
+//!                       replica, feeding the eq.-(7) cross-replica mean)
+//!
+//! where `weights := n u32 | n × f32` and
+//! `payload batch := np u32 | np × (len u32 | bytes)`.
 
 use std::fmt;
 
@@ -40,6 +64,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::compress::registry::{Scheme, SchemeSpec};
 use crate::compress::RateReport;
+use crate::config::PsMode;
 use crate::coordinator::messages::Uplink;
 
 /// Frame magic: "M2".
@@ -83,12 +108,108 @@ pub fn payload_fits(len: usize) -> Result<(), FrameError> {
     Ok(())
 }
 
-const KIND_ROUND: u8 = 1;
-const KIND_SHUTDOWN: u8 = 2;
-const KIND_UPDATE: u8 = 3;
-const KIND_HELLO: u8 = 4;
-const KIND_ROUND_SLICE: u8 = 5;
-const KIND_SCHEME: u8 = 6;
+/// Every frame kind the protocol defines — the single authority for the
+/// `kind` byte of the frame header. Encoders take it, the streaming
+/// scanner dispatches on it, and an unassigned byte is a typed
+/// [`FrameError::UnknownKind`] carrying the offending value; raw `u8`
+/// kind literals exist nowhere outside this enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// PS → client round broadcast.
+    Round = 1,
+    /// PS → client stop-serving.
+    Shutdown = 2,
+    /// Client → PS compressed update.
+    Update = 3,
+    /// Client → PS connection handshake.
+    Hello = 4,
+    /// PS → client model-parallel slice broadcast.
+    RoundSlice = 5,
+    /// PS → client adaptive scheme swap.
+    Scheme = 6,
+    /// Peer → lead membership introduction (DESIGN.md §peering).
+    PeerHello = 7,
+    /// Lead → peer membership grant + cluster shape.
+    PeerMembership = 8,
+    /// Lead → peer range-mode sub-step (slice + survivor payloads).
+    PeerRangeStep = 9,
+    /// Peer → lead updated slice partial.
+    PeerSlice = 10,
+    /// Lead → peer replica-mode sub-step (replica + its span's payloads).
+    PeerReplicaStep = 11,
+    /// Peer → lead updated replica (the eq.-(7) sync uplink).
+    PeerReplicaSync = 12,
+}
+
+impl FrameKind {
+    /// Every kind, in wire order — the boundary property tests sweep it.
+    pub const ALL: [FrameKind; 12] = [
+        FrameKind::Round,
+        FrameKind::Shutdown,
+        FrameKind::Update,
+        FrameKind::Hello,
+        FrameKind::RoundSlice,
+        FrameKind::Scheme,
+        FrameKind::PeerHello,
+        FrameKind::PeerMembership,
+        FrameKind::PeerRangeStep,
+        FrameKind::PeerSlice,
+        FrameKind::PeerReplicaStep,
+        FrameKind::PeerReplicaSync,
+    ];
+
+    /// The kind's byte on the wire.
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+impl TryFrom<u8> for FrameKind {
+    type Error = FrameError;
+
+    fn try_from(kind: u8) -> Result<FrameKind, FrameError> {
+        Ok(match kind {
+            1 => FrameKind::Round,
+            2 => FrameKind::Shutdown,
+            3 => FrameKind::Update,
+            4 => FrameKind::Hello,
+            5 => FrameKind::RoundSlice,
+            6 => FrameKind::Scheme,
+            7 => FrameKind::PeerHello,
+            8 => FrameKind::PeerMembership,
+            9 => FrameKind::PeerRangeStep,
+            10 => FrameKind::PeerSlice,
+            11 => FrameKind::PeerReplicaStep,
+            12 => FrameKind::PeerReplicaSync,
+            _ => return Err(FrameError::UnknownKind { kind }),
+        })
+    }
+}
+
+/// The lead's reply to a [`Message::PeerHello`]: the joining process's
+/// member index plus everything a stateless remote member needs to run
+/// its reduces bit-exactly — cluster shape, model dimension, the reduce
+/// shard count, and the fully-resolved compression scheme to build its
+/// decoder from (DESIGN.md §peering).
+#[derive(Debug, Clone)]
+pub struct PeerMembership {
+    /// this peer's member index within the cluster (1-based; the lead is
+    /// always member 0)
+    pub member: usize,
+    /// total cluster members, local and remote
+    pub n_ps: usize,
+    pub mode: PsMode,
+    /// replica mode: the eq.-(7) averaging cadence
+    pub sync_every: usize,
+    /// full model dimension
+    pub d: usize,
+    /// reduce shard count (full-width replica reduces must shard
+    /// identically to stay bit-exact with the lead's local members)
+    pub shards: usize,
+    /// the resolved scheme whose decoder the peer builds
+    pub spec: SchemeSpec,
+}
 
 /// One decoded wire message.
 #[derive(Debug)]
@@ -111,6 +232,32 @@ pub enum Message {
     /// adaptive controller's per-cohort downlink). Takes effect for the
     /// next update the client encodes.
     Scheme { spec: SchemeSpec },
+    /// Peer → lead: a joining cluster member's introduction. `member` is
+    /// the index the peer believes it holds (0 = unassigned on first
+    /// contact); the lead's [`Message::PeerMembership`] reply is
+    /// authoritative.
+    PeerHello { member: usize },
+    /// Lead → peer: membership grant + everything needed to serve.
+    PeerMembership(PeerMembership),
+    /// Lead → peer: one range member's sub-step — the member's current
+    /// model slice (`offset .. offset + weights.len()` of a `total`-dim
+    /// model) plus every survivor payload of the round. The peer runs the
+    /// identical fused reduce and replies with [`Message::PeerSlice`].
+    PeerRangeStep {
+        round: usize,
+        offset: usize,
+        total: usize,
+        weights: Vec<f32>,
+        payloads: Vec<Vec<u8>>,
+    },
+    /// Peer → lead: the updated slice after the member's eq.-(7) step.
+    PeerSlice { round: usize, offset: usize, total: usize, weights: Vec<f32> },
+    /// Lead → peer: one replica member's sub-step — its full-width
+    /// replica plus the payloads of its own client span. The peer reduces
+    /// (scale 1/len) and replies with [`Message::PeerReplicaSync`].
+    PeerReplicaStep { round: usize, weights: Vec<f32>, payloads: Vec<Vec<u8>> },
+    /// Peer → lead: the updated replica, feeding the cross-replica mean.
+    PeerReplicaSync { round: usize, weights: Vec<f32> },
 }
 
 /// Typed frame-validation failure at the transport boundary. A streaming
@@ -195,7 +342,7 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     c ^ 0xffff_ffff
 }
 
-fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+fn frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
     // an oversized payload is a programming error at the encode call site:
     // no reader would accept the frame, and past u32::MAX the length
     // prefix would silently truncate — fail here, where the mistake is
@@ -205,7 +352,7 @@ fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
     out.extend_from_slice(&MAGIC);
     out.push(VERSION);
-    out.push(kind);
+    out.push(kind.as_u8());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(payload);
     let crc = crc32(&out[2..]);
@@ -213,20 +360,49 @@ fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Encode a PS → client round broadcast.
-pub fn encode_round(round: usize, weights: &[f32]) -> Vec<u8> {
-    let mut p = Vec::with_capacity(12 + 4 * weights.len());
-    p.extend_from_slice(&(round as u64).to_le_bytes());
+/// Append the shared weight-vector encoding: `n u32 | n × f32 LE`.
+fn put_weights(p: &mut Vec<u8>, weights: &[f32]) {
     p.extend_from_slice(&(weights.len() as u32).to_le_bytes());
     for &w in weights {
         p.extend_from_slice(&w.to_le_bytes());
     }
-    frame(KIND_ROUND, &p)
+}
+
+/// Append the shared payload-batch encoding: `np u32 | np × (len u32 | bytes)`.
+fn put_payloads(p: &mut Vec<u8>, payloads: &[&[u8]]) {
+    p.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    for b in payloads {
+        p.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        p.extend_from_slice(b);
+    }
+}
+
+/// Append the 42-byte scheme-spec encoding shared by the `Scheme` and
+/// `PeerMembership` frames.
+fn put_scheme_spec(p: &mut Vec<u8>, spec: &SchemeSpec) {
+    let (tag, family, m, fp_bits) = spec.scheme.wire_tag();
+    p.push(tag);
+    p.push(family);
+    p.extend_from_slice(&m.to_le_bytes());
+    p.extend_from_slice(&fp_bits.to_le_bytes());
+    p.extend_from_slice(&spec.rq.to_le_bytes());
+    p.extend_from_slice(&(spec.k as u64).to_le_bytes());
+    p.extend_from_slice(&(spec.min_fit as u64).to_le_bytes());
+    p.extend_from_slice(&(spec.sketch_depth as u32).to_le_bytes());
+    p.extend_from_slice(&spec.seed.to_le_bytes());
+}
+
+/// Encode a PS → client round broadcast.
+pub fn encode_round(round: usize, weights: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + 4 * weights.len());
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    put_weights(&mut p, weights);
+    frame(FrameKind::Round, &p)
 }
 
 /// Encode a PS → client shutdown.
 pub fn encode_shutdown() -> Vec<u8> {
-    frame(KIND_SHUTDOWN, &[])
+    frame(FrameKind::Shutdown, &[])
 }
 
 /// Encode one model-parallel PS's slice of a round broadcast: `weights`
@@ -238,32 +414,89 @@ pub fn encode_round_slice(round: usize, offset: usize, total: usize, weights: &[
     p.extend_from_slice(&(round as u64).to_le_bytes());
     p.extend_from_slice(&(offset as u32).to_le_bytes());
     p.extend_from_slice(&(total as u32).to_le_bytes());
-    p.extend_from_slice(&(weights.len() as u32).to_le_bytes());
-    for &w in weights {
-        p.extend_from_slice(&w.to_le_bytes());
-    }
-    frame(KIND_ROUND_SLICE, &p)
+    put_weights(&mut p, weights);
+    frame(FrameKind::RoundSlice, &p)
 }
 
 /// Encode a client → PS connection handshake.
 pub fn encode_hello(client: usize) -> Vec<u8> {
-    frame(KIND_HELLO, &(client as u32).to_le_bytes())
+    frame(FrameKind::Hello, &(client as u32).to_le_bytes())
 }
 
 /// Encode a PS → client scheme swap (the adaptive controller's downlink).
 pub fn encode_scheme(spec: &SchemeSpec) -> Vec<u8> {
-    let (tag, family, m, fp_bits) = spec.scheme.wire_tag();
     let mut p = Vec::with_capacity(42);
-    p.push(tag);
-    p.push(family);
-    p.extend_from_slice(&m.to_le_bytes());
-    p.extend_from_slice(&fp_bits.to_le_bytes());
-    p.extend_from_slice(&spec.rq.to_le_bytes());
-    p.extend_from_slice(&(spec.k as u64).to_le_bytes());
-    p.extend_from_slice(&(spec.min_fit as u64).to_le_bytes());
-    p.extend_from_slice(&(spec.sketch_depth as u32).to_le_bytes());
-    p.extend_from_slice(&spec.seed.to_le_bytes());
-    frame(KIND_SCHEME, &p)
+    put_scheme_spec(&mut p, spec);
+    frame(FrameKind::Scheme, &p)
+}
+
+/// Encode a peer → lead membership introduction (DESIGN.md §peering).
+pub fn encode_peer_hello(member: usize) -> Vec<u8> {
+    frame(FrameKind::PeerHello, &(member as u32).to_le_bytes())
+}
+
+/// Encode the lead → peer membership grant.
+pub fn encode_peer_membership(m: &PeerMembership) -> Vec<u8> {
+    let mut p = Vec::with_capacity(21 + 42);
+    p.extend_from_slice(&(m.member as u32).to_le_bytes());
+    p.extend_from_slice(&(m.n_ps as u32).to_le_bytes());
+    p.push(m.mode.wire_code());
+    p.extend_from_slice(&(m.sync_every as u32).to_le_bytes());
+    p.extend_from_slice(&(m.d as u32).to_le_bytes());
+    p.extend_from_slice(&(m.shards as u32).to_le_bytes());
+    put_scheme_spec(&mut p, &m.spec);
+    frame(FrameKind::PeerMembership, &p)
+}
+
+/// Encode a lead → peer range sub-step: the member's current slice
+/// (`offset .. offset + weights.len()` of a `total`-dim model) plus every
+/// survivor payload of the round.
+pub fn encode_peer_range_step(
+    round: usize,
+    offset: usize,
+    total: usize,
+    weights: &[f32],
+    payloads: &[&[u8]],
+) -> Vec<u8> {
+    debug_assert!(offset + weights.len() <= total, "slice past the model end");
+    let body: usize = payloads.iter().map(|b| 4 + b.len()).sum();
+    let mut p = Vec::with_capacity(24 + 4 * weights.len() + body);
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    p.extend_from_slice(&(offset as u32).to_le_bytes());
+    p.extend_from_slice(&(total as u32).to_le_bytes());
+    put_weights(&mut p, weights);
+    put_payloads(&mut p, payloads);
+    frame(FrameKind::PeerRangeStep, &p)
+}
+
+/// Encode a peer → lead updated-slice reply.
+pub fn encode_peer_slice(round: usize, offset: usize, total: usize, weights: &[f32]) -> Vec<u8> {
+    debug_assert!(offset + weights.len() <= total, "slice past the model end");
+    let mut p = Vec::with_capacity(20 + 4 * weights.len());
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    p.extend_from_slice(&(offset as u32).to_le_bytes());
+    p.extend_from_slice(&(total as u32).to_le_bytes());
+    put_weights(&mut p, weights);
+    frame(FrameKind::PeerSlice, &p)
+}
+
+/// Encode a lead → peer replica sub-step: the member's full-width replica
+/// plus its own client span's payloads.
+pub fn encode_peer_replica_step(round: usize, weights: &[f32], payloads: &[&[u8]]) -> Vec<u8> {
+    let body: usize = payloads.iter().map(|b| 4 + b.len()).sum();
+    let mut p = Vec::with_capacity(16 + 4 * weights.len() + body);
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    put_weights(&mut p, weights);
+    put_payloads(&mut p, payloads);
+    frame(FrameKind::PeerReplicaStep, &p)
+}
+
+/// Encode a peer → lead updated-replica reply (the eq.-(7) sync uplink).
+pub fn encode_peer_replica_sync(round: usize, weights: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12 + 4 * weights.len());
+    p.extend_from_slice(&(round as u64).to_le_bytes());
+    put_weights(&mut p, weights);
+    frame(FrameKind::PeerReplicaSync, &p)
 }
 
 /// Encode a client → PS update from its parts. `payload` is borrowed —
@@ -324,7 +557,7 @@ fn encode_update_raw(
     p.extend_from_slice(&(report.payload_bytes as u64).to_le_bytes());
     p.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     p.extend_from_slice(payload);
-    frame(KIND_UPDATE, &p)
+    frame(FrameKind::Update, &p)
 }
 
 /// Little-endian cursor over a frame payload.
@@ -365,15 +598,47 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Read the shared weight-vector encoding ([`put_weights`]'s inverse).
+fn read_weights(r: &mut Reader) -> Result<Vec<f32>> {
+    let n = r.u32()? as usize;
+    let raw = r.take(n.checked_mul(4).context("weight count overflow")?)?;
+    Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Read the shared payload-batch encoding ([`put_payloads`]'s inverse).
+fn read_payloads(r: &mut Reader) -> Result<Vec<Vec<u8>>> {
+    let np = r.u32()? as usize;
+    // capacity from the bytes actually present, not the declared count —
+    // a corrupt count must not drive a huge speculative allocation
+    let mut out = Vec::with_capacity(np.min(r.buf.len().saturating_sub(r.off) / 4));
+    for _ in 0..np {
+        let n = r.u32()? as usize;
+        out.push(r.take(n)?.to_vec());
+    }
+    Ok(out)
+}
+
+/// Read the 42-byte scheme-spec encoding ([`put_scheme_spec`]'s inverse).
+fn read_scheme_spec(r: &mut Reader) -> Result<SchemeSpec> {
+    let tag = r.u8()?;
+    let family = r.u8()?;
+    let m = r.f64()?;
+    let fp_bits = r.u32()?;
+    let scheme = Scheme::from_wire(tag, family, m, fp_bits)?;
+    Ok(SchemeSpec {
+        scheme,
+        rq: r.u32()?,
+        k: r.u64()? as usize,
+        min_fit: r.u64()? as usize,
+        sketch_depth: r.u32()? as usize,
+        seed: r.u64()?,
+    })
+}
+
 fn parse_round(payload: &[u8]) -> Result<Message> {
     let mut r = Reader { buf: payload, off: 0 };
     let round = r.u64()? as usize;
-    let n = r.u32()? as usize;
-    let raw = r.take(n.checked_mul(4).context("weight count overflow")?)?;
-    let weights = raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    let weights = read_weights(&mut r)?;
     r.done()?;
     Ok(Message::Round { round, weights })
 }
@@ -408,20 +673,23 @@ fn parse_update(payload: &[u8]) -> Result<Message> {
     Ok(Message::Update(Uplink { client_id, round, payload: body, report, train_loss, error }))
 }
 
-fn parse_round_slice(payload: &[u8]) -> Result<Message> {
-    let mut r = Reader { buf: payload, off: 0 };
+/// Read and bounds-check a `round | offset | total | weights` prefix (the
+/// shape shared by `RoundSlice`, `PeerRangeStep`, and `PeerSlice`).
+fn read_slice_header(r: &mut Reader) -> Result<(usize, usize, usize, Vec<f32>)> {
     let round = r.u64()? as usize;
     let offset = r.u32()? as usize;
     let total = r.u32()? as usize;
-    let n = r.u32()? as usize;
+    let weights = read_weights(r)?;
+    let n = weights.len();
     if offset.checked_add(n).context("slice bounds overflow")? > total {
         bail!("slice {offset}..{} past the model end {total}", offset + n);
     }
-    let raw = r.take(n.checked_mul(4).context("weight count overflow")?)?;
-    let weights = raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    Ok((round, offset, total, weights))
+}
+
+fn parse_round_slice(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let (round, offset, total, weights) = read_slice_header(&mut r)?;
     r.done()?;
     Ok(Message::RoundSlice { round, offset, total, weights })
 }
@@ -435,21 +703,64 @@ fn parse_hello(payload: &[u8]) -> Result<Message> {
 
 fn parse_scheme(payload: &[u8]) -> Result<Message> {
     let mut r = Reader { buf: payload, off: 0 };
-    let tag = r.u8()?;
-    let family = r.u8()?;
-    let m = r.f64()?;
-    let fp_bits = r.u32()?;
-    let scheme = Scheme::from_wire(tag, family, m, fp_bits)?;
-    let spec = SchemeSpec {
-        scheme,
-        rq: r.u32()?,
-        k: r.u64()? as usize,
-        min_fit: r.u64()? as usize,
-        sketch_depth: r.u32()? as usize,
-        seed: r.u64()?,
-    };
+    let spec = read_scheme_spec(&mut r)?;
     r.done()?;
     Ok(Message::Scheme { spec })
+}
+
+fn parse_peer_hello(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let member = r.u32()? as usize;
+    r.done()?;
+    Ok(Message::PeerHello { member })
+}
+
+fn parse_peer_membership(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let member = r.u32()? as usize;
+    let n_ps = r.u32()? as usize;
+    let mode = PsMode::from_wire(r.u8()?)?;
+    let sync_every = r.u32()? as usize;
+    let d = r.u32()? as usize;
+    let shards = r.u32()? as usize;
+    let spec = read_scheme_spec(&mut r)?;
+    r.done()?;
+    if member == 0 || member >= n_ps {
+        bail!("peer member index {member} outside 1..{n_ps}");
+    }
+    Ok(Message::PeerMembership(PeerMembership { member, n_ps, mode, sync_every, d, shards, spec }))
+}
+
+fn parse_peer_range_step(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let (round, offset, total, weights) = read_slice_header(&mut r)?;
+    let payloads = read_payloads(&mut r)?;
+    r.done()?;
+    Ok(Message::PeerRangeStep { round, offset, total, weights, payloads })
+}
+
+fn parse_peer_slice(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let (round, offset, total, weights) = read_slice_header(&mut r)?;
+    r.done()?;
+    Ok(Message::PeerSlice { round, offset, total, weights })
+}
+
+fn parse_peer_replica_step(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let round = r.u64()? as usize;
+    let weights = read_weights(&mut r)?;
+    let payloads = read_payloads(&mut r)?;
+    r.done()?;
+    Ok(Message::PeerReplicaStep { round, weights, payloads })
+}
+
+fn parse_peer_replica_sync(payload: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf: payload, off: 0 };
+    let round = r.u64()? as usize;
+    let weights = read_weights(&mut r)?;
+    r.done()?;
+    Ok(Message::PeerReplicaSync { round, weights })
 }
 
 /// Header-only scan: the total framed size of the frame at the front of
@@ -491,32 +802,37 @@ pub fn scan_prefix(buf: &[u8]) -> Result<Scan, FrameError> {
     if buf.len() < total {
         return Ok(Scan::Incomplete { need: total });
     }
-    let kind = buf[3];
     let len = total - FRAME_OVERHEAD;
     let crc_got = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
     let crc_want = crc32(&buf[2..HEADER_BYTES + len]);
     if crc_got != crc_want {
         return Err(FrameError::BadCrc { got: crc_got, want: crc_want });
     }
+    let kind = FrameKind::try_from(buf[3])?;
     let payload = &buf[HEADER_BYTES..HEADER_BYTES + len];
     let parsed = match kind {
-        KIND_ROUND => parse_round(payload),
-        KIND_SHUTDOWN => {
+        FrameKind::Round => parse_round(payload),
+        FrameKind::Shutdown => {
             if payload.is_empty() {
                 Ok(Message::Shutdown)
             } else {
                 Err(anyhow::anyhow!("shutdown frame with {} payload bytes", payload.len()))
             }
         }
-        KIND_UPDATE => parse_update(payload),
-        KIND_HELLO => parse_hello(payload),
-        KIND_ROUND_SLICE => parse_round_slice(payload),
-        KIND_SCHEME => parse_scheme(payload),
-        k => return Err(FrameError::UnknownKind { kind: k }),
+        FrameKind::Update => parse_update(payload),
+        FrameKind::Hello => parse_hello(payload),
+        FrameKind::RoundSlice => parse_round_slice(payload),
+        FrameKind::Scheme => parse_scheme(payload),
+        FrameKind::PeerHello => parse_peer_hello(payload),
+        FrameKind::PeerMembership => parse_peer_membership(payload),
+        FrameKind::PeerRangeStep => parse_peer_range_step(payload),
+        FrameKind::PeerSlice => parse_peer_slice(payload),
+        FrameKind::PeerReplicaStep => parse_peer_replica_step(payload),
+        FrameKind::PeerReplicaSync => parse_peer_replica_sync(payload),
     };
     match parsed {
         Ok(msg) => Ok(Scan::Frame { msg, used: total }),
-        Err(e) => Err(FrameError::BadPayload { kind, reason: format!("{e:#}") }),
+        Err(e) => Err(FrameError::BadPayload { kind: kind.as_u8(), reason: format!("{e:#}") }),
     }
 }
 
@@ -679,7 +995,7 @@ mod tests {
         p.extend_from_slice(&2u32.to_le_bytes()); // n 2 → 8..10 > 9
         p.extend_from_slice(&1.0f32.to_le_bytes());
         p.extend_from_slice(&2.0f32.to_le_bytes());
-        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND_SLICE];
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, FrameKind::RoundSlice.as_u8()];
         f.extend_from_slice(&(p.len() as u32).to_le_bytes());
         f.extend_from_slice(&p);
         let crc = crc32(&f[2..]);
@@ -708,17 +1024,38 @@ mod tests {
 
     #[test]
     fn unknown_kind_and_version_rejected() {
-        // hand-build structurally valid frames with bad kind / version
-        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, 9, 0, 0, 0, 0];
+        // hand-build structurally valid frames with bad kind / version —
+        // 0xee is deliberately outside FrameKind's assigned range
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, 0xee, 0, 0, 0, 0];
         let crc = crc32(&f[2..]);
         f.extend_from_slice(&crc.to_le_bytes());
         let err = decode(&f).unwrap_err();
         assert!(format!("{err}").contains("unknown frame kind"), "{err}");
 
-        let mut f = vec![MAGIC[0], MAGIC[1], 99, KIND_SHUTDOWN, 0, 0, 0, 0];
+        let mut f = vec![MAGIC[0], MAGIC[1], 99, FrameKind::Shutdown.as_u8(), 0, 0, 0, 0];
         let crc = crc32(&f[2..]);
         f.extend_from_slice(&crc.to_le_bytes());
         assert!(decode(&f).is_err());
+    }
+
+    #[test]
+    fn frame_kind_covers_every_byte() {
+        // exhaustive boundary sweep: the 12 assigned bytes round-trip
+        // through as_u8 ∘ try_from; all 244 others carry the offending
+        // byte in a typed UnknownKind
+        for b in 0..=u8::MAX {
+            match FrameKind::try_from(b) {
+                Ok(k) => {
+                    assert_eq!(k.as_u8(), b);
+                    assert!(FrameKind::ALL.contains(&k), "kind {b} missing from ALL");
+                }
+                Err(e) => {
+                    assert_eq!(e, FrameError::UnknownKind { kind: b });
+                    assert!(!FrameKind::ALL.iter().any(|k| k.as_u8() == b));
+                }
+            }
+        }
+        assert_eq!(FrameKind::ALL.len(), 12);
     }
 
     #[test]
@@ -767,7 +1104,7 @@ mod tests {
         let mut p = vec![0u8; f.len() - FRAME_OVERHEAD];
         p.copy_from_slice(&f[HEADER_BYTES..f.len() - 4]);
         p[0] = 0xee;
-        let mut bad = vec![MAGIC[0], MAGIC[1], VERSION, KIND_SCHEME];
+        let mut bad = vec![MAGIC[0], MAGIC[1], VERSION, FrameKind::Scheme.as_u8()];
         bad.extend_from_slice(&(p.len() as u32).to_le_bytes());
         bad.extend_from_slice(&p);
         let crc = crc32(&bad[2..]);
@@ -825,7 +1162,7 @@ mod tests {
     fn scan_prefix_caps_the_declared_length() {
         // a corrupt length prefix must not convince a streaming reader to
         // buffer gigabytes before the CRC can reject the frame
-        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND];
+        let mut f = vec![MAGIC[0], MAGIC[1], VERSION, FrameKind::Round.as_u8()];
         f.extend_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(scan_prefix(&f), Err(FrameError::Oversized { .. })));
     }
@@ -841,7 +1178,7 @@ mod tests {
         // decode side, header-only (no 256 MiB allocation needed): a
         // header declaring exactly the cap sizes the frame, cap + 1 is
         // rejected with the same typed error the encode side raises
-        let mut hdr = vec![MAGIC[0], MAGIC[1], VERSION, KIND_ROUND];
+        let mut hdr = vec![MAGIC[0], MAGIC[1], VERSION, FrameKind::Round.as_u8()];
         hdr.extend_from_slice(&(MAX_PAYLOAD_BYTES as u32).to_le_bytes());
         assert_eq!(frame_len(&hdr), Ok(Some(FRAME_OVERHEAD + MAX_PAYLOAD_BYTES)));
         let mut over = hdr.clone();
@@ -850,6 +1187,85 @@ mod tests {
         assert_eq!(frame_len(&over), Err(want.clone()));
         // and the streaming scanner agrees byte-for-byte
         assert_eq!(scan_prefix(&over).map(|_| ()).unwrap_err(), want);
+    }
+
+    #[test]
+    fn peer_frames_roundtrip() {
+        let f = encode_peer_hello(0);
+        assert!(matches!(decode(&f).unwrap(), Message::PeerHello { member: 0 }));
+
+        let spec = SchemeSpec::new(Scheme::TopKUniform, 2, 600);
+        let m = PeerMembership {
+            member: 1,
+            n_ps: 3,
+            mode: PsMode::Replica,
+            sync_every: 2,
+            d: 4096,
+            shards: 4,
+            spec,
+        };
+        match decode(&encode_peer_membership(&m)).unwrap() {
+            Message::PeerMembership(got) => {
+                assert_eq!(got.member, 1);
+                assert_eq!(got.n_ps, 3);
+                assert_eq!(got.mode, PsMode::Replica);
+                assert_eq!(got.sync_every, 2);
+                assert_eq!(got.d, 4096);
+                assert_eq!(got.shards, 4);
+                assert_eq!(format!("{:?}", got.spec), format!("{spec:?}"));
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+
+        let w = vec![1.5f32, f32::NAN, -0.0];
+        let pay: Vec<&[u8]> = vec![&[1, 2, 3], &[], &[9]];
+        match decode(&encode_peer_range_step(4, 8, 16, &w, &pay)).unwrap() {
+            Message::PeerRangeStep { round, offset, total, weights, payloads } => {
+                assert_eq!((round, offset, total), (4, 8, 16));
+                for (a, b) in weights.iter().zip(&w) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(payloads, vec![vec![1, 2, 3], vec![], vec![9]]);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match decode(&encode_peer_slice(4, 8, 16, &w)).unwrap() {
+            Message::PeerSlice { round: 4, offset: 8, total: 16, weights } => {
+                assert_eq!(weights.len(), 3);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match decode(&encode_peer_replica_step(7, &w, &pay)).unwrap() {
+            Message::PeerReplicaStep { round: 7, weights, payloads } => {
+                assert_eq!(weights.len(), 3);
+                assert_eq!(payloads.len(), 3);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match decode(&encode_peer_replica_sync(9, &w)).unwrap() {
+            Message::PeerReplicaSync { round: 9, weights } => assert_eq!(weights.len(), 3),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn peer_membership_rejects_out_of_range_member() {
+        // member 0 is the lead itself; a grant naming it (or any index
+        // past n_ps) is a payload error, not a silently-wrong cluster
+        let spec = SchemeSpec::new(Scheme::TopKUniform, 2, 600);
+        for (member, n_ps) in [(0usize, 2usize), (2, 2), (5, 3)] {
+            let m = PeerMembership {
+                member,
+                n_ps,
+                mode: PsMode::Range,
+                sync_every: 1,
+                d: 64,
+                shards: 1,
+                spec,
+            };
+            let err = decode(&encode_peer_membership(&m)).unwrap_err();
+            assert!(format!("{err:#}").contains("member index"), "{err:#}");
+        }
     }
 
     #[test]

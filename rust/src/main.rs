@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, SchemeSpec, SchemeTuning};
 use m22::coordinator::run_experiment;
+use m22::fedserve::{Endpoint, RunOutcome, RunPlan, TransportMode};
 use m22::data::Dataset;
 use m22::figures::{self, FigScale};
 use m22::metrics::Recorder;
@@ -162,11 +163,12 @@ fn main() -> Result<()> {
         }
         "serve" => {
             // fedserve end-to-end without PJRT: simulated clients, real wire
-            // frames, sharded aggregation, LRU table cache. Transport modes:
+            // frames, sharded aggregation, LRU table cache. Endpoint roles:
             //   (default)       in-process channels
             //   --tcp-loopback  k client threads against 127.0.0.1:0
             //   --listen ADDR   this process is the PS, clients are remote
             //   --connect ADDR  this process is one client (--id N)
+            //   --peer ADDR     this process is one remote cluster member
             let clients = args.usize_or("clients", 8)?;
             let rounds = args.usize_or("rounds", 5)?;
             let d = args.usize_or("dim", 8192)?;
@@ -181,57 +183,85 @@ fn main() -> Result<()> {
             cfg.keep_frac = args.f64_or("keep", 0.6)?;
             cfg.seed = args.usize_or("seed", 33)? as u64;
             cfg.memory = args.bool("memory");
-            cfg.server.shards = args.usize_or("shards", 4)?;
-            cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 30_000)? as u64;
-            cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
-            cfg.server.prewarm = !args.bool("no-prewarm");
+            // the server config is built, not mutated field-by-field: the
+            // builder owns the defaults, the flags override
+            let mut sb = m22::config::ServerConfig::builder()
+                .shards(args.usize_or("shards", 4)?)
+                .straggler_timeout_ms(args.usize_or("deadline-ms", 30_000)? as u64)
+                .table_cache_capacity(args.usize_or("cache-cap", 256)?)
+                .prewarm(!args.bool("no-prewarm"))
+                // close the rate-adaptation loop at the PS (ROADMAP: online
+                // rate adaptation)
+                .adaptive(args.bool("adaptive"));
             // persist hot quantizer tables across runs (ROADMAP: the
             // cross-run half of the prewarm item)
-            cfg.server.table_cache_path = args.str_opt("table-cache").map(String::from);
-            // close the rate-adaptation loop at the PS (ROADMAP: online
-            // rate adaptation)
-            cfg.server.adaptive = args.bool("adaptive");
+            if let Some(path) = args.str_opt("table-cache") {
+                sb = sb.table_cache_path(path);
+            }
             let sample = args.usize_or("sample", 0)?;
             if sample > 0 {
-                cfg.server.sampled_clients = Some(sample);
+                sb = sb.sampled_clients(Some(sample));
             }
             // multi-PS cluster: N FedServer instances behind one reactor,
             // partitioned by dimension range (bit-exact vs --ps 0) or by
-            // client subsets with periodic eq.-(7) averaging
+            // client subsets with periodic eq.-(7) averaging. --peers K
+            // moves the last K members into follower processes (each a
+            // `repro serve --peer ADDR` against --peer-bind here).
             let n_ps = args.usize_or("ps", 0)?;
+            let peers = args.usize_or("peers", 0)?;
             if n_ps > 0 {
-                cfg.server.cluster = Some(ClusterConfig {
-                    n_ps,
-                    mode: PsMode::parse(&args.str_or("ps-mode", "range"))?,
-                    sync_every: args.usize_or("sync-every", 1)?,
-                });
+                sb = sb.cluster(
+                    ClusterConfig::builder()
+                        .n_ps(n_ps)
+                        .mode(PsMode::parse(&args.str_or("ps-mode", "range"))?)
+                        .sync_every(args.usize_or("sync-every", 1)?)
+                        .peers(peers)
+                        .barrier_timeout_ms(args.usize_or("barrier-timeout-ms", 0)? as u64)
+                        .build(),
+                );
+            } else {
+                anyhow::ensure!(peers == 0, "--peers needs a cluster (--ps N with N > K)");
             }
+            cfg.server = sb.build();
             let listen = args.str_opt("listen").map(String::from);
             let connect = args.str_opt("connect").map(String::from);
+            let peer = args.str_opt("peer").map(String::from);
+            let peer_bind = args.str_opt("peer-bind").map(String::from);
             let tcp_loopback = args.bool("tcp-loopback");
             let client_id = args.usize_or("id", 0)?;
+            let die_after = args.usize_or("die-after-rounds", 0)?;
             anyhow::ensure!(
                 usize::from(listen.is_some())
                     + usize::from(connect.is_some())
+                    + usize::from(peer.is_some())
                     + usize::from(tcp_loopback)
                     <= 1,
-                "--listen, --connect, and --tcp-loopback are mutually exclusive"
+                "--listen, --connect, --peer, and --tcp-loopback are mutually exclusive"
+            );
+            anyhow::ensure!(
+                die_after == 0 || peer.is_some(),
+                "--die-after-rounds is peer chaos tooling (needs --peer ADDR)"
             );
             eprintln!("config: {}", cfg.to_json());
-            if let Some(addr) = connect {
+            let endpoint = if let Some(addr) = connect {
                 anyhow::ensure!(client_id < clients, "--id {client_id} needs --clients > it");
-                m22::fedserve::sim::serve_connect(&cfg, d, &addr, client_id)?;
-                return args.finish();
-            }
-            let report = if let Some(addr) = listen {
-                m22::fedserve::sim::serve_listen(&cfg, d, &addr)?
+                Endpoint::Connect { addr, id: client_id }
+            } else if let Some(addr) = peer {
+                Endpoint::Peer { addr, die_after_rounds: (die_after > 0).then_some(die_after) }
+            } else if let Some(addr) = listen {
+                Endpoint::Listen { addr }
+            } else if tcp_loopback {
+                Endpoint::Local(TransportMode::TcpLoopback)
             } else {
-                let mode = if tcp_loopback {
-                    m22::fedserve::TransportMode::TcpLoopback
-                } else {
-                    m22::fedserve::TransportMode::Channel
-                };
-                m22::fedserve::simulate_with(&cfg, d, mode)?
+                Endpoint::Local(TransportMode::Channel)
+            };
+            let report = match (RunPlan { cfg: &cfg, d, endpoint, peer_bind }).execute()? {
+                RunOutcome::ClientDone => return args.finish(),
+                RunOutcome::PeerDone(p) => {
+                    eprintln!("peer: member {} served {} sub-step(s)", p.member, p.rounds_served);
+                    return args.finish();
+                }
+                RunOutcome::Report(report) => report,
             };
             eprintln!("{}", report.stats.summary());
             if let Some(cs) = &report.cluster {
@@ -268,23 +298,31 @@ fn main() -> Result<()> {
             cfg.keep_frac = args.f64_or("keep", 0.6)?;
             cfg.seed = args.usize_or("seed", 33)? as u64;
             cfg.memory = args.bool("memory");
-            cfg.server.shards = args.usize_or("shards", 4)?;
-            cfg.server.straggler_timeout_ms = args.usize_or("deadline-ms", 0)? as u64;
-            cfg.server.table_cache_capacity = args.usize_or("cache-cap", 256)?;
-            cfg.server.prewarm = !args.bool("no-prewarm");
+            let mut sb = m22::config::ServerConfig::builder()
+                .shards(args.usize_or("shards", 4)?)
+                .straggler_timeout_ms(args.usize_or("deadline-ms", 0)? as u64)
+                .table_cache_capacity(args.usize_or("cache-cap", 256)?)
+                .prewarm(!args.bool("no-prewarm"))
+                .adaptive(args.bool("adaptive"))
+                .sampled_clients(Some(args.usize_or("sample", 64)?));
             // the same cross-run table persistence serve has: prewarm once,
             // reload on every later fleet sweep
-            cfg.server.table_cache_path = args.str_opt("table-cache").map(String::from);
-            cfg.server.adaptive = args.bool("adaptive");
-            cfg.server.sampled_clients = Some(args.usize_or("sample", 64)?);
+            if let Some(path) = args.str_opt("table-cache") {
+                sb = sb.table_cache_path(path);
+            }
             let n_ps = args.usize_or("ps", 0)?;
             if n_ps > 0 {
-                cfg.server.cluster = Some(ClusterConfig {
-                    n_ps,
-                    mode: PsMode::parse(&args.str_or("ps-mode", "range"))?,
-                    sync_every: args.usize_or("sync-every", 1)?,
-                });
+                // no --peers here: the fleet's virtual clock cannot extend
+                // into another process (simulate_fleet refuses peers > 0)
+                sb = sb.cluster(
+                    ClusterConfig::builder()
+                        .n_ps(n_ps)
+                        .mode(PsMode::parse(&args.str_or("ps-mode", "range"))?)
+                        .sync_every(args.usize_or("sync-every", 1)?)
+                        .build(),
+                );
             }
+            cfg.server = sb.build();
             eprintln!("config: {}", cfg.to_json());
             eprintln!("scenario: {}", scn.label());
             let report = m22::fedserve::simulate_fleet(&cfg, &scn, d)?;
@@ -353,6 +391,9 @@ fn main() -> Result<()> {
                         --ps N --ps-mode range|replica --sync-every S (multi-PS cluster on one reactor:\n\
                         range = model-parallel dimension slices, bit-exact vs a single PS;\n\
                         replica = client-partitioned full-width replicas, eq.-(7) averaged every S rounds)\n\
+                        --peers K --peer-bind ADDR (lead: host the first N-K members, accept K remote ones)\n\
+                        --peer ADDR (be one remote cluster member) --die-after-rounds R (chaos: vanish mid-run)\n\
+                        --barrier-timeout-ms T (drop a peer that misses the sync barrier; 0 = wait)\n\
                  fleet: --scenario fleet:n=N,alpha=A,churn=C,lat=fixed|lognorm,lat_ms=L,jitter=J,bw=B,classes=K,seed=S\n\
                         --rounds N --dim D --sample K --deadline-ms T (virtual-clock straggler deadline)\n\
                         --shards S --memory --no-prewarm --ps N --ps-mode --sync-every (as in serve)\n\

@@ -274,6 +274,12 @@ pub struct ClusterStats {
     pub mode: &'static str,
     /// replica mode: eq.-(7) averaging cadence in rounds (0 = end of run)
     pub sync_every: usize,
+    /// cross-process peering: remote peer members at cluster start
+    /// (0 = the whole cluster lives in-process)
+    pub peers: usize,
+    /// peers dropped from membership after missing the sync barrier —
+    /// their members' reduces ran locally and the survivors kept serving
+    pub peer_drops: usize,
     pub per_ps: Vec<ServerStats>,
 }
 
@@ -287,6 +293,10 @@ impl ClusterStats {
         let mut s = format!("cluster[{}]: {} PS", self.mode, self.per_ps.len());
         if self.mode == "replica" {
             s.push_str(&format!(", sync every {} round(s)", self.sync_every));
+        }
+        if self.peers > 0 {
+            s.push_str(&format!(", {} remote peer(s)", self.peers));
+            s.push_str(&format!(", {} peer(s) dropped at the barrier", self.peer_drops));
         }
         for (i, ps) in self.per_ps.iter().enumerate() {
             let n = ps.rounds.len().max(1) as f64;
@@ -406,7 +416,12 @@ mod tests {
         a.push(timing(0, 3, 1));
         let mut b = ServerStats::default();
         b.push(timing(0, 2, 0));
-        let c = ClusterStats { mode: "replica", sync_every: 4, per_ps: vec![a, b] };
+        let c = ClusterStats {
+            mode: "replica",
+            sync_every: 4,
+            per_ps: vec![a, b],
+            ..Default::default()
+        };
         assert_eq!(c.n_ps(), 2);
         let sum = c.summary();
         assert!(sum.contains("cluster[replica]: 2 PS"), "{sum}");
@@ -414,6 +429,24 @@ mod tests {
         assert!(sum.contains("ps0: 1 rounds"), "{sum}");
         assert!(sum.contains("3 received, 1 dropped"), "{sum}");
         assert!(sum.contains("ps1: 1 rounds"), "{sum}");
+        // no peering: the summary stays exactly the in-process rollup
+        assert!(!sum.contains("peer"), "{sum}");
+    }
+
+    #[test]
+    fn peer_drops_are_attributed_in_the_rollup() {
+        let mut a = ServerStats::default();
+        a.push(timing(0, 3, 1));
+        let c = ClusterStats {
+            mode: "range",
+            sync_every: 1,
+            peers: 2,
+            peer_drops: 1,
+            per_ps: vec![a],
+        };
+        let sum = c.summary();
+        assert!(sum.contains("2 remote peer(s)"), "{sum}");
+        assert!(sum.contains("1 peer(s) dropped at the barrier"), "{sum}");
     }
 
     #[test]

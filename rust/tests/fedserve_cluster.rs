@@ -74,7 +74,7 @@ fn range_cluster_is_bit_exact_against_the_single_ps_for_every_scheme() {
             for n_ps in [1usize, 2, 4] {
                 let mut c = cfg.clone();
                 c.server.cluster =
-                    Some(ClusterConfig { n_ps, mode: PsMode::Range, sync_every: 1 });
+                    Some(ClusterConfig::builder().n_ps(n_ps).mode(PsMode::Range).build());
                 let rep = simulate_with(&c, d, transport).unwrap();
                 assert_bitwise_eq(
                     &single.w,
@@ -112,7 +112,9 @@ fn one_replica_cluster_reproduces_the_single_server_bitwise() {
         let single = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
         for sync_every in [1usize, 2, 0] {
             let mut c = cfg.clone();
-            c.server.cluster = Some(ClusterConfig { n_ps: 1, mode: PsMode::Replica, sync_every });
+            c.server.cluster = Some(
+                ClusterConfig::builder().n_ps(1).mode(PsMode::Replica).sync_every(sync_every).build(),
+            );
             let rep = simulate_with(&c, d, TransportMode::Channel).unwrap();
             assert_bitwise_eq(
                 &single.w,
@@ -134,7 +136,8 @@ fn replica_cluster_converges_on_the_sim_workload() {
     cfg.n_clients = 8;
     cfg.rounds = 4;
     cfg.memory = true;
-    cfg.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 });
+    cfg.server.cluster =
+        Some(ClusterConfig::builder().n_ps(2).mode(PsMode::Replica).sync_every(2).build());
     let a = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
     let b = simulate_with(&cfg, d, TransportMode::Channel).unwrap();
     assert_bitwise_eq(&a.w, &b.w, "replica replay");
@@ -246,7 +249,7 @@ fn replica_storm_degrades_attributes_and_reconciles_the_ledger() {
 
         let mut transport = TcpServerTransport::accept(&listener, n, NET_TIMEOUT).unwrap();
         let scfg = ServerConfig { straggler_timeout_ms: 800, ..Default::default() };
-        let ccfg = ClusterConfig { n_ps: 2, mode: PsMode::Replica, sync_every: 2 };
+        let ccfg = ClusterConfig::builder().n_ps(2).mode(PsMode::Replica).sync_every(2).build();
         let decoders = (0..2)
             .map(|_| Box::new(NoCompression) as Box<dyn m22::compress::Decoder>)
             .collect();

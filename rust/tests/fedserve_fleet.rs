@@ -202,7 +202,8 @@ fn cluster_fleet_runs_with_per_ps_rollup() {
     let scn = ScenarioSpec::parse("fleet:n=40,churn=0,lat=fixed,jitter=0").unwrap();
     let single = fleet_cfg(Scheme::TopKUniform, 40, 8, 3);
     let mut clustered = single.clone();
-    clustered.server.cluster = Some(ClusterConfig { n_ps: 2, mode: PsMode::Range, sync_every: 1 });
+    clustered.server.cluster =
+        Some(ClusterConfig::builder().n_ps(2).mode(PsMode::Range).build());
     let a = run(&single, &scn, d);
     let b = run(&clustered, &scn, d);
     let rollup = b.sim.cluster.as_ref().expect("cluster rollup");

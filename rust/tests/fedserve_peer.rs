@@ -1,0 +1,254 @@
+//! Integration: cross-process PS peering (`fedserve::peer`).
+//!
+//! The acceptance oracle for the PR: a range cluster whose non-lead
+//! members live in *other processes* (here: follower threads running the
+//! same `serve_peer` body the `repro serve --peer` process runs, over real
+//! TCP loopback sockets) must be **bit-exact** against the identically
+//! shaped in-process `PsCluster` for every registered scheme — the
+//! follower runs the same fused reduce over the same survivor payloads in
+//! the same f32 fold order, so shipping the sub-step over the wire must
+//! not move a single bit. On top of that:
+//!
+//! * replica mode holds the same parity through its eq.-(7) sync barrier;
+//! * a follower killed mid-run (the `die_after_rounds` chaos hook) misses
+//!   the sync barrier, is dropped from the membership and attributed in
+//!   `ClusterStats::peer_drops`, the lead reduces the dropped member's
+//!   sub-step locally (the identical code path — the final model stays
+//!   bit-exact), and the survivors keep serving every remaining round.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use m22::compress::{encode_once, registry, SchemeSpec};
+use m22::config::{ClusterConfig, ExperimentConfig, PsMode, Scheme, ServerConfig};
+use m22::coordinator::Uplink;
+use m22::fedserve::sim::sim_spec;
+use m22::fedserve::transport::{TcpClientTransport, TcpServerTransport, Transport};
+use m22::fedserve::wire::{self, PeerMembership};
+use m22::fedserve::{serve_peer, LruTableCache, PeerSet, PsCluster, RoundAssembler};
+use m22::metrics::ClusterStats;
+use m22::quantizer::Family;
+
+const NET_TIMEOUT: Duration = Duration::from_secs(30);
+const N_CLIENTS: usize = 4;
+const K: usize = 3;
+const D: usize = 256;
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), b[i].to_bits(), "{what}: dim {i}");
+    }
+}
+
+fn all_schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::M22 { family: Family::GenNorm, m: 2.0 },
+        Scheme::M22 { family: Family::Weibull, m: 4.0 },
+        Scheme::TinyScript,
+        Scheme::TopKUniform,
+        Scheme::TopKFp { bits: 8 },
+        Scheme::TopKFp { bits: 4 },
+        Scheme::CountSketch,
+        Scheme::None,
+    ]
+}
+
+/// A deterministic per-(client, round) gradient: both the peered and the
+/// in-process run feed the cluster byte-identical uplinks.
+fn grad(id: usize, round: usize, d: usize) -> Vec<f32> {
+    (0..d)
+        .map(|j| {
+            let x = (id.wrapping_mul(7919))
+                .wrapping_add(round.wrapping_mul(104_729))
+                .wrapping_add(j.wrapping_mul(31))
+                % 997;
+            x as f32 / 498.5 - 1.0
+        })
+        .collect()
+}
+
+/// A well-behaved sim client: assemble each round broadcast (full frame or
+/// model-parallel slices), answer with the scheme-encoded gradient, leave
+/// on shutdown.
+fn client_loop(addr: &str, id: usize, sspec: SchemeSpec) {
+    let spec = sim_spec(D);
+    let enc = registry::build_encoder(
+        &sspec,
+        Arc::new(m22::compress::CpuCodec),
+        Arc::new(LruTableCache::new(64)),
+    )
+    .unwrap();
+    let mut t = TcpClientTransport::connect(addr, id, NET_TIMEOUT).unwrap();
+    let mut asm = RoundAssembler::new();
+    loop {
+        let msg = match t.recv() {
+            Ok(Some(m)) => m,
+            _ => return, // server-side close
+        };
+        if !matches!(msg, wire::Message::Round { .. } | wire::Message::RoundSlice { .. }) {
+            return; // shutdown
+        }
+        if asm.feed(msg).unwrap() {
+            let round = asm.round();
+            let g = grad(id, round, D);
+            let (payload, _, report) = encode_once(enc.as_ref(), &g, &spec).unwrap();
+            let up = Uplink { client_id: id, round, payload, report, train_loss: 0.0, error: None };
+            if t.send(&wire::encode_update(&up)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Drive one cluster run over real sockets. `remote` > 0 promotes members
+/// `1..=remote` to follower threads running [`serve_peer`] — the same body
+/// a `repro serve --peer ADDR` process runs; `remote` = 0 is the fully
+/// in-process reference. `die_after` kills the FIRST follower after that
+/// many served sub-steps (chaos).
+fn run_cluster(
+    scheme: Scheme,
+    mode: PsMode,
+    n_ps: usize,
+    remote: usize,
+    die_after: Option<usize>,
+    barrier_timeout_ms: u64,
+    rounds: usize,
+) -> (Vec<f32>, ClusterStats) {
+    let cfg = ExperimentConfig::new("sim", scheme, 2, rounds);
+    let sspec = cfg.scheme_spec(D);
+    let spec = sim_spec(D);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let peer_listener = (remote > 0).then(|| TcpListener::bind("127.0.0.1:0").unwrap());
+    let peer_addr = peer_listener.as_ref().map(|l| l.local_addr().unwrap().to_string());
+    std::thread::scope(|scope| {
+        for i in 0..remote {
+            let pa = peer_addr.clone().unwrap();
+            let die = if i == 0 { die_after } else { None };
+            scope.spawn(move || {
+                // a chaos follower vanishes mid-run by design: no unwrap
+                let _ = serve_peer(&pa, NET_TIMEOUT, die, 64);
+            });
+        }
+        for id in 0..N_CLIENTS {
+            let addr = addr.clone();
+            scope.spawn(move || client_loop(&addr, id, sspec));
+        }
+
+        let mut transport = TcpServerTransport::accept(&listener, N_CLIENTS, NET_TIMEOUT).unwrap();
+        let scfg = ServerConfig::builder()
+            .shards(2)
+            .straggler_timeout_ms(30_000)
+            .prewarm(false)
+            .build();
+        let ccfg = ClusterConfig::builder()
+            .n_ps(n_ps)
+            .mode(mode)
+            .sync_every(1)
+            .peers(remote)
+            .barrier_timeout_ms(barrier_timeout_ms)
+            .build();
+        let decoders: Vec<_> = (0..n_ps)
+            .map(|_| {
+                registry::build_decoder(
+                    &sspec,
+                    Arc::new(m22::compress::CpuCodec),
+                    Arc::new(LruTableCache::new(64)),
+                )
+                .unwrap()
+            })
+            .collect();
+        let mut cluster =
+            PsCluster::new(&ccfg, &scfg, N_CLIENTS, D, cfg.seed, decoders).unwrap();
+        if let Some(pl) = &peer_listener {
+            // the same grant the serve arm's RunPlan builds from the config
+            let template = PeerMembership {
+                member: 0,
+                n_ps,
+                mode,
+                sync_every: ccfg.sync_every,
+                d: D,
+                shards: scfg.shards,
+                spec: sspec,
+            };
+            let set =
+                PeerSet::accept(pl, remote, NET_TIMEOUT, barrier_timeout_ms, &template).unwrap();
+            cluster.attach_peers(set).unwrap();
+        }
+        let mut w = vec![0.0f32; D];
+        for r in 0..rounds {
+            cluster.run_round(r, K, &mut transport, &spec, &mut w).unwrap();
+        }
+        cluster.finish(&mut w);
+        let stats = cluster.cluster_stats();
+        transport.close().unwrap();
+        (w, stats)
+    })
+}
+
+/// ISSUE 9 acceptance: a range cluster whose second member reduces in a
+/// follower process is bit-exact against the in-process cluster for every
+/// registered scheme — the sub-step wire trip moves ownership, never
+/// arithmetic.
+#[test]
+fn peered_range_cluster_is_bit_exact_for_every_scheme() {
+    for scheme in all_schemes() {
+        let (w_ref, cs_ref) = run_cluster(scheme, PsMode::Range, 2, 0, None, 0, 2);
+        assert!(w_ref.iter().any(|&x| x != 0.0), "{scheme:?}: reference did nothing");
+        assert_eq!(cs_ref.peers, 0, "{scheme:?}");
+        let (w, cs) = run_cluster(scheme, PsMode::Range, 2, 1, None, 0, 2);
+        assert_bitwise_eq(&w_ref, &w, &format!("{scheme:?} peered range"));
+        assert_eq!(cs.peers, 1, "{scheme:?}");
+        assert_eq!(cs.peer_drops, 0, "{scheme:?}: a healthy follower was dropped");
+        assert!(cs.summary().contains("1 remote peer(s)"), "{scheme:?}: {}", cs.summary());
+    }
+}
+
+/// Two remote members behind one lead (a 3-member cluster with only the
+/// lead in-process) hold the same range-mode parity over more rounds.
+#[test]
+fn two_remote_peers_match_the_in_process_cluster() {
+    let scheme = Scheme::M22 { family: Family::GenNorm, m: 2.0 };
+    let (w_ref, _) = run_cluster(scheme, PsMode::Range, 3, 0, None, 0, 3);
+    let (w, cs) = run_cluster(scheme, PsMode::Range, 3, 2, None, 0, 3);
+    assert_bitwise_eq(&w_ref, &w, "2 remote peers");
+    assert_eq!(cs.peers, 2);
+    assert_eq!(cs.peer_drops, 0);
+}
+
+/// Replica mode ships full-width replicas and span payloads instead of
+/// slices; the eq.-(7) sync barrier folds the remote replica exactly like
+/// the in-process one.
+#[test]
+fn peered_replica_cluster_matches_the_in_process_sync() {
+    let scheme = Scheme::TopKUniform;
+    let (w_ref, _) = run_cluster(scheme, PsMode::Replica, 2, 0, None, 0, 2);
+    let (w, cs) = run_cluster(scheme, PsMode::Replica, 2, 1, None, 0, 2);
+    assert_bitwise_eq(&w_ref, &w, "peered replica");
+    assert_eq!(cs.peers, 1);
+    assert_eq!(cs.peer_drops, 0);
+}
+
+/// The kill-a-peer chaos test: the follower serves one sub-step and
+/// vanishes without a goodbye. The lead's next barrier must drop it (not
+/// hang), run the member's reduce locally — bit-exact against the fully
+/// in-process run — attribute the drop in `ClusterStats`, and keep the
+/// survivors serving every remaining round.
+#[test]
+fn killed_peer_is_dropped_attributed_and_survivors_finish_bit_exact() {
+    let scheme = Scheme::TopKUniform;
+    let rounds = 3;
+    let (w_ref, _) = run_cluster(scheme, PsMode::Range, 2, 0, None, 0, rounds);
+    let (w, cs) = run_cluster(scheme, PsMode::Range, 2, 1, Some(1), 5_000, rounds);
+    assert_bitwise_eq(&w_ref, &w, "kill-a-peer fallback");
+    assert_eq!(cs.peers, 1);
+    assert_eq!(cs.peer_drops, 1, "the dead follower was never attributed");
+    let sum = cs.summary();
+    assert!(sum.contains("1 peer(s) dropped at the barrier"), "{sum}");
+    // the survivors (the lead and its local members) recorded every round
+    for ps in &cs.per_ps {
+        assert_eq!(ps.rounds.len(), rounds, "a survivor stopped serving: {sum}");
+    }
+}

@@ -1,11 +1,14 @@
 //! Integration: the fedserve wire protocol round-trips arbitrary payloads
 //! bit-exactly and rejects every corruption we can throw at it.
 
-use m22::compress::RateReport;
+use m22::compress::{RateReport, Scheme, SchemeSpec};
+use m22::config::PsMode;
 use m22::coordinator::Uplink;
 use m22::fedserve::wire::{
-    self, decode, decode_prefix, encode_round, encode_shutdown, encode_update,
+    self, decode, decode_prefix, encode_round, encode_shutdown, encode_update, FrameError,
+    FrameKind, PeerMembership,
 };
+use m22::quantizer::Family;
 use m22::util::prop::prop_check;
 
 #[test]
@@ -142,6 +145,187 @@ fn streaming_reader_walks_mixed_frames() {
     assert!(matches!(seen[0], wire::Message::Round { .. }));
     assert!(matches!(seen[1], wire::Message::Update(_)));
     assert!(matches!(seen[2], wire::Message::Shutdown));
+}
+
+fn arbitrary_spec(g: &mut m22::util::prop::Gen) -> SchemeSpec {
+    let scheme = match g.usize_in(0, 6) {
+        0 => Scheme::M22 {
+            family: if g.bool() { Family::GenNorm } else { Family::Weibull },
+            m: g.f64_in(0.5, 8.0),
+        },
+        1 => Scheme::TinyScript,
+        2 => Scheme::TopKUniform,
+        3 => Scheme::TopKFp { bits: if g.bool() { 4 } else { 8 } },
+        4 => Scheme::CountSketch,
+        _ => Scheme::None,
+    };
+    SchemeSpec {
+        scheme,
+        rq: g.usize_in(1, 17) as u32,
+        k: g.usize_in(0, 1 << 20),
+        min_fit: g.usize_in(0, 4096),
+        sketch_depth: g.usize_in(1, 17),
+        seed: g.rng.next_u64(),
+    }
+}
+
+fn arbitrary_payloads(g: &mut m22::util::prop::Gen) -> Vec<Vec<u8>> {
+    let np = g.usize_in(0, 6);
+    (0..np)
+        .map(|_| {
+            let n = g.usize_in(0, 512);
+            (0..n).map(|_| (g.rng.next_u64() & 0xff) as u8).collect()
+        })
+        .collect()
+}
+
+/// A weight vector carrying raw-bit landmines (NaN, -0.0) so a roundtrip
+/// that survives proves bit-exact transport, not value-equal transport.
+fn arbitrary_weights(g: &mut m22::util::prop::Gen, len: usize) -> Vec<f32> {
+    let mut w = g.vec_f32(len..len + 1, -1e6, 1e6);
+    if !w.is_empty() {
+        w[0] = f32::NAN;
+        let n = w.len();
+        w[n - 1] = -0.0;
+    }
+    w
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// ISSUE 9 satellite: every peer frame (hello, membership grant, range
+/// sub-step, slice reply, replica sub-step, replica sync) round-trips
+/// arbitrary contents bit-exactly.
+#[test]
+fn peer_frames_roundtrip_property() {
+    prop_check("wire peer roundtrip", 60, |g| {
+        let member = g.usize_in(0, 10_000);
+        match decode(&wire::encode_peer_hello(member)).unwrap() {
+            wire::Message::PeerHello { member: m } => assert_eq!(m, member),
+            other => panic!("wrong message {other:?}"),
+        }
+
+        let m = PeerMembership {
+            member: g.usize_in(1, 64),
+            n_ps: g.usize_in(1, 64),
+            mode: if g.bool() { PsMode::Range } else { PsMode::Replica },
+            sync_every: g.usize_in(0, 100),
+            d: g.usize_in(1, 1 << 20),
+            shards: g.usize_in(1, 64),
+            spec: arbitrary_spec(g),
+        };
+        match decode(&wire::encode_peer_membership(&m)).unwrap() {
+            wire::Message::PeerMembership(got) => {
+                assert_eq!(got.member, m.member);
+                assert_eq!(got.n_ps, m.n_ps);
+                assert_eq!(got.mode, m.mode);
+                assert_eq!(got.sync_every, m.sync_every);
+                assert_eq!(got.d, m.d);
+                assert_eq!(got.shards, m.shards);
+                assert_eq!(got.spec, m.spec);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+
+        let round = g.usize_in(0, 1 << 20);
+        let total = g.usize_in(1, 4096);
+        let offset = g.usize_in(0, total);
+        let wlen = g.usize_in(0, total - offset + 1);
+        let weights = arbitrary_weights(g, wlen);
+        let payloads = arbitrary_payloads(g);
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let f = wire::encode_peer_range_step(round, offset, total, &weights, &refs);
+        match decode(&f).unwrap() {
+            wire::Message::PeerRangeStep { round: r, offset: o, total: t, weights: w, payloads: p } => {
+                assert_eq!(r, round);
+                assert_eq!(o, offset);
+                assert_eq!(t, total);
+                assert_bits_eq(&w, &weights);
+                assert_eq!(p, payloads);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+
+        match decode(&wire::encode_peer_slice(round, offset, total, &weights)).unwrap() {
+            wire::Message::PeerSlice { round: r, offset: o, total: t, weights: w } => {
+                assert_eq!(r, round);
+                assert_eq!(o, offset);
+                assert_eq!(t, total);
+                assert_bits_eq(&w, &weights);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+
+        let rlen = g.usize_in(0, 2048);
+        let replica = arbitrary_weights(g, rlen);
+        match decode(&wire::encode_peer_replica_step(round, &replica, &refs)).unwrap() {
+            wire::Message::PeerReplicaStep { round: r, weights: w, payloads: p } => {
+                assert_eq!(r, round);
+                assert_bits_eq(&w, &replica);
+                assert_eq!(p, payloads);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+
+        match decode(&wire::encode_peer_replica_sync(round, &replica)).unwrap() {
+            wire::Message::PeerReplicaSync { round: r, weights: w } => {
+                assert_eq!(r, round);
+                assert_bits_eq(&w, &replica);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    });
+}
+
+/// Corruption coverage for the peer frames: any flipped byte is a decode
+/// error, exactly like the client-facing frames.
+#[test]
+fn corrupted_peer_frames_rejected_property() {
+    prop_check("wire peer corruption rejected", 60, |g| {
+        let weights = g.vec_f32(1..256, -2.0, 2.0);
+        let payloads = arbitrary_payloads(g);
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let frame = match g.usize_in(0, 4) {
+            0 => wire::encode_peer_range_step(3, 0, weights.len(), &weights, &refs),
+            1 => wire::encode_peer_slice(3, 0, weights.len(), &weights),
+            2 => wire::encode_peer_replica_step(3, &weights, &refs),
+            _ => wire::encode_peer_membership(&PeerMembership {
+                member: 1,
+                n_ps: 2,
+                mode: PsMode::Range,
+                sync_every: 1,
+                d: 128,
+                shards: 2,
+                spec: arbitrary_spec(g),
+            }),
+        };
+        let mut bad = frame.clone();
+        let at = g.usize_in(0, bad.len());
+        let flip = 1 + (g.rng.next_u64() % 255) as u8;
+        bad[at] ^= flip;
+        assert!(decode(&bad).is_err(), "byte {at} xor {flip:#x} accepted");
+    });
+}
+
+/// The `FrameKind` boundary: every assigned byte round-trips through the
+/// enum, the assigned range is contiguous from 1, and every unassigned
+/// byte is a typed [`FrameError::UnknownKind`] carrying the offender —
+/// the cap moves ONLY by adding a variant to the enum.
+#[test]
+fn frame_kind_bytes_roundtrip_and_unassigned_bytes_are_typed_errors() {
+    let max = FrameKind::ALL.iter().map(|k| k.as_u8()).max().unwrap();
+    assert_eq!(FrameKind::ALL.len() as u8, max, "kind bytes are not contiguous from 1");
+    for k in FrameKind::ALL {
+        assert_eq!(FrameKind::try_from(k.as_u8()).unwrap(), k);
+    }
+    for b in (0..=255u8).filter(|&b| b == 0 || b > max) {
+        assert_eq!(FrameKind::try_from(b), Err(FrameError::UnknownKind { kind: b }));
+    }
 }
 
 #[test]
