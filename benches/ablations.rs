@@ -59,7 +59,7 @@ fn table_snap_resolution() {
     let mse_of = |q: &m22::quantizer::Quantizer| {
         let qs = q.scaled(std);
         let (t, c) = qs.padded_f32(16);
-        let (_, ghat) = CpuCodec.quantize(&g, &t, &c).unwrap();
+        let (_, ghat) = CpuCodec::new().quantize(&g, &t, &c).unwrap();
         g.iter().zip(&ghat).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / g.len() as f64
     };
     let exact = mse_of(&design(&GenNorm::standardized(0.83), 2.0, 8));

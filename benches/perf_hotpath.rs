@@ -12,6 +12,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use m22::compress::bitpack::pack_indices;
+use m22::compress::kernels::{self, Kernels};
 use m22::compress::m22::{M22, M22Config};
 use m22::compress::rle::{encode_positions, position_bits};
 use m22::compress::topk::topk;
@@ -62,9 +63,9 @@ fn main() {
 
     let q = design(&GenNorm::standardized(0.8), 2.0, 8);
     let (t, c) = q.padded_f32(16);
-    log.push(
-        b1.run("cpu quantize full grad", || CpuCodec.quantize(&sparse, &t, &c).unwrap().0.len()),
-    );
+    log.push(b1.run("cpu quantize full grad", || {
+        CpuCodec::new().quantize(&sparse, &t, &c).unwrap().0.len()
+    }));
 
     // --- the PS hot loop: decode + eq.-(7) reduce, before vs after --------
     //
@@ -81,7 +82,7 @@ fn main() {
         let tables = Arc::new(QuantizerTables::new());
         let comp = M22::new(
             M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: budget.k_ref, min_fit: 512 },
-            Arc::new(CpuCodec),
+            Arc::new(CpuCodec::new()),
             tables,
         );
         for n_clients in [4usize, 16, 64] {
@@ -120,6 +121,72 @@ fn main() {
             acc.resize(d, 0.0);
             accumulate_sharded(&comp, &slices, &spec, 4, &mut acc).unwrap();
             assert!(dense.iter().zip(&acc).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    // --- kernel backends: scalar vs SIMD on the four codec hot loops -----
+    //
+    // The `compress::kernels` dispatch isolated: one quantizer block at
+    // the 8-level / 3-bit paper geometry, identical inputs per backend.
+    // Rows exist per available backend (`scalar` always; `avx2` on
+    // x86-64 hosts with AVX2), so the EXPERIMENTS.md §kernels table can
+    // quote the speedup directly. The fused-reduce rows time
+    // `scatter_add` over a 0.6d topK survivor stream — the per-client
+    // inner loop of the eq.-(7) reduce.
+    println!("\n== codec kernels (scalar vs SIMD) ==");
+    {
+        let mut backends: Vec<&'static dyn Kernels> = vec![kernels::scalar_kernels()];
+        match kernels::simd_kernels() {
+            Some(ks) => backends.push(ks),
+            None => eprintln!("kernel SIMD rows skipped (no SIMD backend on this host)"),
+        }
+        let q = design(&GenNorm::standardized(0.8), 2.0, 8);
+        let blk = q.padded_block(1.0);
+        let bits = 3u32; // 8 levels -> 3-bit codes
+        for d in [65_536usize, 1_000_000] {
+            let g = grad(d, 21);
+            let (survivors, positions) = topk(&g, (0.6 * d as f64) as usize);
+            let values: Vec<f32> = positions.iter().map(|&p| survivors[p as usize]).collect();
+            let mut idx = vec![0u32; d];
+            let mut ghat = vec![0.0f32; d];
+            let mut bytes: Vec<u8> = Vec::new();
+            let mut codes = vec![0u32; d];
+            let mut acc = vec![0.0f32; d];
+            for &ks in &backends {
+                let name = ks.name();
+                let b = Bencher::from_env().throughput(d as f64);
+                log.push(b.run(&format!("kernel quantize ({name}, d={d})"), || {
+                    ks.quantize_block(&g, &blk.thresholds, &blk.centers, &mut idx, &mut ghat);
+                    idx.len()
+                }));
+                log.push(b.run(&format!("kernel pack ({name}, d={d})"), || {
+                    bytes.clear();
+                    ks.pack(&idx, bits, &mut bytes);
+                    bytes.len()
+                }));
+                log.push(b.run(&format!("kernel unpack ({name}, d={d})"), || {
+                    assert!(ks.unpack(&bytes, 0, bits, &mut codes));
+                    codes.len()
+                }));
+                let bk = Bencher::from_env().throughput(positions.len() as f64);
+                log.push(bk.run(&format!("kernel fused reduce ({name}, d={d})"), || {
+                    ks.scatter_add(&positions, &values, 0.5, &mut acc);
+                    acc.len()
+                }));
+            }
+            // sanity (untimed): both backends agree on these exact inputs
+            if let [sc, sd] = backends[..] {
+                let mut idx2 = vec![0u32; d];
+                let mut ghat2 = vec![0.0f32; d];
+                sc.quantize_block(&g, &blk.thresholds, &blk.centers, &mut idx, &mut ghat);
+                sd.quantize_block(&g, &blk.thresholds, &blk.centers, &mut idx2, &mut ghat2);
+                assert_eq!(idx, idx2, "kernel bench: quantize parity broke at d={d}");
+                let mut b1 = Vec::new();
+                let mut b2 = Vec::new();
+                sc.pack(&idx, bits, &mut b1);
+                sd.pack(&idx, bits, &mut b2);
+                assert_eq!(b1, b2, "kernel bench: pack parity broke at d={d}");
+            }
         }
     }
 
@@ -379,7 +446,7 @@ fn main() {
         for d in [100_000usize, 1_000_000] {
             let cfg = ExperimentConfig::new("sim", Scheme::TopKUniform, 2, 1);
             let tables = Arc::new(LruTableCache::new(256));
-            let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+            let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
             let mut ctrl =
                 AdaptiveController::new(d, cfg.scheme_spec(d), &cfg.budget(d), codec, tables);
             let w0 = vec![0.0f32; d];
@@ -406,7 +473,7 @@ fn main() {
         let gg = grad(spec.d(), 2);
         let comp = M22::new(
             M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: budget.k_ref, min_fit: 512 },
-            Arc::new(CpuCodec),
+            Arc::new(CpuCodec::new()),
             tables,
         );
         // persistent scratch: the steady-state (allocation-free) encode path
@@ -453,10 +520,10 @@ fn main() {
         let b4 = Bencher::from_env().throughput(65_536.0);
         log.push(b4.run("hlo quantize 64k block", || rt.quantize(&blk, &t, &c).unwrap().0.len()));
         log.push(b4.run("cpu quantize 64k block", || {
-            CpuCodec.quantize(&blk, &t, &c).unwrap().0.len()
+            CpuCodec::new().quantize(&blk, &t, &c).unwrap().0.len()
         }));
         log.push(b4.run("hlo moments 64k block", || rt.moments(&blk).unwrap()[0]));
-        log.push(b4.run("cpu moments 64k block", || CpuCodec.moments(&blk).unwrap()[0]));
+        log.push(b4.run("cpu moments 64k block", || CpuCodec::new().moments(&blk).unwrap()[0]));
     } else {
         eprintln!("pjrt benches skipped (artifacts not built)");
     }

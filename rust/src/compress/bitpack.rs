@@ -66,6 +66,13 @@ impl<'a> BitReader<'a> {
         BitReader { buf, pos: 0 }
     }
 
+    /// Start reading at an arbitrary bit position — how the kernel
+    /// backends resume a fixed-width code stream mid-payload without
+    /// re-reading the prefix.
+    pub fn at(buf: &'a [u8], bit_pos: u64) -> Self {
+        BitReader { buf, pos: bit_pos }
+    }
+
     pub fn read(&mut self, bits: u32) -> Option<u32> {
         debug_assert!(bits <= 32);
         if self.pos + bits as u64 > self.buf.len() as u64 * 8 {
@@ -93,13 +100,12 @@ impl<'a> BitReader<'a> {
 
 /// Pack a slice of indices at fixed width into a reused buffer (cleared
 /// first; capacity is kept, so the steady state allocates nothing).
+/// Dispatches to the process-wide kernel backend; `BitWriter` remains the
+/// layout reference (and the writer for mixed-width streams like the
+/// γ-gap position codes).
 pub fn pack_indices_into(idx: &[u32], bits: u32, out: &mut Vec<u8>) {
     out.clear();
-    let mut w = BitWriter::from_vec(std::mem::take(out));
-    for &i in idx {
-        w.push(i, bits);
-    }
-    *out = w.into_bytes();
+    super::kernels::active().pack(idx, bits, out);
 }
 
 /// Pack a slice of indices at fixed width.
@@ -109,14 +115,15 @@ pub fn pack_indices(idx: &[u32], bits: u32) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` indices at fixed width.
+/// Unpack `n` indices at fixed width (kernel-dispatched, see
+/// [`pack_indices_into`]).
 pub fn unpack_indices(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
-    let mut r = BitReader::new(bytes);
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(r.read(bits)?);
+    let mut out = vec![0u32; n];
+    if super::kernels::active().unpack(bytes, 0, bits, &mut out) {
+        Some(out)
+    } else {
+        None
     }
-    Some(out)
 }
 
 #[cfg(test)]

@@ -221,25 +221,99 @@ use anyhow::{bail, Context, Result};
 
 use crate::train::ModelSpec;
 
-use super::bitpack::{pack_indices_into, BitReader};
+use super::kernels::{self, Kernels};
 use super::rate::RateReport;
 use super::rle::{encode_positions_into, position_bits, PositionReader};
 use super::topk::topk_inplace_into;
 use super::{Decoder, EncodeCtx, Encoder};
 
+/// Survivors per kernel batch on the decode path (see `m22::DECODE_BATCH`).
+const DECODE_BATCH: usize = 256;
+
 /// topK + p-bit minifloat representation: K_fp survivors, p bits each.
 pub struct TopKFp {
     pub fmt: MiniFloat,
     pub k: usize,
+    /// kernel backend for code (un)packing and the decode folds
+    ks: &'static dyn Kernels,
 }
 
 impl TopKFp {
     pub fn fp8(k: usize) -> Self {
-        TopKFp { fmt: FP8, k }
+        TopKFp { fmt: FP8, k, ks: kernels::active() }
     }
 
     pub fn fp4(k: usize) -> Self {
-        TopKFp { fmt: FP4, k }
+        TopKFp { fmt: FP4, k, ks: kernels::active() }
+    }
+
+    /// Pin to an explicit kernel backend (parity tests / benches).
+    pub fn with_kernels(mut self, ks: &'static dyn Kernels) -> Self {
+        self.ks = ks;
+        self
+    }
+
+    /// Batched survivor walk shared by every decode surface — same shape
+    /// as the M22/uniform walks: γ-gap positions into a stack batch, codes
+    /// through the kernel unpack, minifloat decode + per-tensor rescale
+    /// into the value batch (the monotone tensor cursor survives across
+    /// batches because positions are ascending).
+    fn walk_batches(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        sink: &mut dyn FnMut(&[u32], &[f32]),
+    ) -> Result<()> {
+        let d = spec.d();
+        let bits = self.fmt.total_bits();
+        let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
+            as usize;
+        let npos =
+            u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
+        let mut off = 8;
+        let pos_bytes = payload.get(off..off + npos).context("short pos")?;
+        off += npos;
+        let mut scales = Vec::with_capacity(spec.tensors.len());
+        for _ in 0..spec.tensors.len() {
+            scales.push(f32::from_le_bytes(
+                payload.get(off..off + 4).context("short scales")?.try_into().unwrap(),
+            ));
+            off += 4;
+        }
+        let code_bytes = &payload[off..];
+        let mut positions = PositionReader::new(pos_bytes);
+        let mut pos_buf = [0u32; DECODE_BATCH];
+        let mut code_buf = [0u32; DECODE_BATCH];
+        let mut val_buf = [0f32; DECODE_BATCH];
+        let mut done = 0usize;
+        let mut bit_off = 0u64;
+        let mut ti = 0usize;
+        while done < k {
+            let n = DECODE_BATCH.min(k - done);
+            for slot in pos_buf[..n].iter_mut() {
+                *slot = positions.next_position().context("positions decode")?;
+            }
+            if !self.ks.unpack(code_bytes, bit_off, bits, &mut code_buf[..n]) {
+                bail!("codes decode: code stream ends early");
+            }
+            bit_off += n as u64 * bits as u64;
+            for ((&p, &c), val) in
+                pos_buf[..n].iter().zip(&code_buf[..n]).zip(val_buf[..n].iter_mut())
+            {
+                let p = p as usize;
+                if p >= d {
+                    bail!("survivor position {p} out of range (d = {d})");
+                }
+                while p >= spec.range(ti).end {
+                    ti += 1;
+                }
+                let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
+                *val = self.fmt.decode(c) / self.fmt.max_value() * s;
+            }
+            sink(&pos_buf[..n], &val_buf[..n]);
+            done += n;
+        }
+        Ok(())
     }
 }
 
@@ -282,7 +356,8 @@ impl Encoder for TopKFp {
         }
 
         encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
-        pack_indices_into(&ctx.codes, bits, &mut ctx.code_bytes);
+        ctx.code_bytes.clear();
+        self.ks.pack(&ctx.codes, bits, &mut ctx.code_bytes);
         ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
         ctx.payload.extend_from_slice(&(ctx.pos_bytes.len() as u32).to_le_bytes());
         ctx.payload.extend_from_slice(&ctx.pos_bytes);
@@ -317,37 +392,43 @@ impl Decoder for TopKFp {
         spec: &ModelSpec,
         visit: &mut dyn FnMut(usize, f32),
     ) -> Result<()> {
-        let d = spec.d();
-        let k = u32::from_le_bytes(payload.get(0..4).context("short")?.try_into().unwrap())
-            as usize;
-        let npos =
-            u32::from_le_bytes(payload.get(4..8).context("short")?.try_into().unwrap()) as usize;
-        let mut off = 8;
-        let pos_bytes = payload.get(off..off + npos).context("short pos")?;
-        off += npos;
-        let mut scales = Vec::with_capacity(spec.tensors.len());
-        for _ in 0..spec.tensors.len() {
-            scales.push(f32::from_le_bytes(
-                payload.get(off..off + 4).context("short scales")?.try_into().unwrap(),
-            ));
-            off += 4;
-        }
-        let mut positions = PositionReader::new(pos_bytes);
-        let mut codes = BitReader::new(&payload[off..]);
-        let mut ti = 0usize;
-        for _ in 0..k {
-            let p = positions.next_position().context("positions decode")? as usize;
-            let c = codes.read(self.fmt.total_bits()).context("codes decode")?;
-            if p >= d {
-                bail!("survivor position {p} out of range (d = {d})");
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            for (&p, &v) in ps.iter().zip(vs) {
+                visit(p as usize, v);
             }
-            while p >= spec.range(ti).end {
-                ti += 1;
-            }
-            let s = if scales[ti] > 0.0 { scales[ti] } else { 1.0 };
-            visit(p, self.fmt.decode(c) / self.fmt.max_value() * s);
+        })
+    }
+
+    fn decode_accumulate(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if acc.len() != spec.d() {
+            bail!("accumulator has {} entries, model d = {}", acc.len(), spec.d());
         }
-        Ok(())
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| ks.scatter_add(ps, vs, weight, acc))
+    }
+
+    fn decode_accumulate_range(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let end = offset + acc.len();
+        if end > spec.d() {
+            bail!("window {}..{} exceeds model d = {}", offset, end, spec.d());
+        }
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            ks.scatter_add_range(ps, vs, weight, offset, acc)
+        })
     }
 }
 

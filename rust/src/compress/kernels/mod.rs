@@ -1,0 +1,235 @@
+//! Kernel backends for the codec compute hot loops.
+//!
+//! Every cycle the PS spends in the codec is a cycle the paper's per-bit
+//! accuracy says should buy communication savings instead, so the four
+//! loops that dominate encode/decode are factored out of the call sites
+//! and behind one [`Kernels`] trait:
+//!
+//! 1. **nearest-center search** — the searchsorted quantize loop that was
+//!    open-coded in `CpuCodec::quantize_into`,
+//! 2. **bitpack / unpack** — the fixed-width code (de)serialization from
+//!    `compress::bitpack`,
+//! 3. **the w·ĝ fold** — `Decoder::decode_accumulate`'s scatter-add,
+//! 4. **the eq.-(7) range reduce** — the windowed variant extracted from
+//!    `fedserve::aggregate::accumulate_range`.
+//!
+//! Two backends exist: [`scalar`] (the original loops, extracted verbatim
+//! — the reference every other backend must match) and an x86-64 AVX2
+//! implementation in [`x86`] built on `core::arch` intrinsics behind
+//! `is_x86_feature_detected!`. The structure mirrors kubecl's matmul
+//! components: fixed-width lanes (8 × f32), blocked loops with a scalar
+//! tail, and one reference implementation that every specialized kernel
+//! is pinned against.
+//!
+//! # Parity contract
+//!
+//! * `quantize_block`, `pack`, `unpack`: **bit-exact** vs the scalar
+//!   reference for every input. The SIMD quantizer counts
+//!   `x >= threshold` compares (`_CMP_GE_OQ`), which is exactly the
+//!   scalar `partition_point` rule, including ties, ±0.0, and NaN.
+//! * `scatter_add` / `scatter_add_range` (the reductions): **0 ULP** —
+//!   i.e. also bitwise. Both backends perform the per-index additions
+//!   serially in survivor order (a scatter with possibly-repeated target
+//!   indices cannot be reordered without changing IEEE results); the SIMD
+//!   backend vectorizes only the element-wise `weight · v` multiply,
+//!   which rounds identically to the scalar multiply (no FMA). The
+//!   fedserve parity suites rely on this: fused-vs-dense and
+//!   sharded-vs-serial aggregation stay bitwise under either backend.
+//!
+//! `tests/kernel_parity.rs` enforces both halves of the contract per
+//! registered scheme and per kernel, across lengths that straddle the
+//! lane width.
+//!
+//! # Backend selection
+//!
+//! Selected once at startup through the `M22_KERNELS` env var (`scalar` /
+//! `simd`), mirroring the reactor's `M22_POLLER` idiom: explicit choice
+//! wins where available, otherwise SIMD-if-detected with scalar as the
+//! universal fallback. [`active`] caches the decision process-wide;
+//! tests and benches that need both backends in one process bypass it by
+//! constructing codec/encoder/decoder values over an explicit backend
+//! (`CpuCodec::with_kernels`, `registry::build_encoder_with`, ...).
+
+use std::sync::OnceLock;
+
+use super::MAX_LEVELS;
+
+pub mod scalar;
+pub mod x86;
+
+/// The four codec hot loops, implemented per backend.
+///
+/// Object-safe on purpose: call sites hold a `&'static dyn Kernels`
+/// picked once, so the dispatch cost is one indirect call per *block*,
+/// never per element.
+pub trait Kernels: Send + Sync + std::fmt::Debug {
+    /// Backend label for stats/summaries (`"scalar"`, `"avx2"`).
+    fn name(&self) -> &'static str;
+
+    /// Nearest-center search over one quantizer block (loop 1).
+    ///
+    /// For each `g[j]`: exact zeros pass through as `(0, 0.0)`; otherwise
+    /// `idx[j] = #thresholds <= g[j]` (searchsorted, side=right — the
+    /// [`nearest_center`] rule) and `ghat[j] = centers[idx[j]]`.
+    ///
+    /// `thresholds` must be nondecreasing with exactly `MAX_LEVELS - 1`
+    /// entries (+∞-padded) and `centers` exactly `MAX_LEVELS` — the
+    /// blocked [`QuantBlock`] layout. `idx`/`ghat` must match `g` in
+    /// length.
+    fn quantize_block(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+        idx: &mut [u32],
+        ghat: &mut [f32],
+    );
+
+    /// Append `codes` to `out` at `bits` bits each, LSB-first (loop 2a).
+    ///
+    /// `out` is treated as byte-aligned at entry; the byte stream
+    /// produced is identical to `bitpack::BitWriter` pushes. `bits` must
+    /// be in `1..=32` and every code must fit in `bits` bits (the scalar
+    /// reference inherits `BitWriter`'s debug assertion on this).
+    fn pack(&self, codes: &[u32], bits: u32, out: &mut Vec<u8>);
+
+    /// Read `out.len()` fixed-width codes from `bytes` starting at
+    /// `bit_offset` (loop 2b). Returns `false` — without touching `out`'s
+    /// prior meaning — when the stream is too short, exactly when a
+    /// `bitpack::BitReader` at that position would return `None`.
+    fn unpack(&self, bytes: &[u8], bit_offset: u64, bits: u32, out: &mut [u32]) -> bool;
+
+    /// The w·ĝ fold (loop 3): `acc[positions[j]] += weight * values[j]`
+    /// for each j in order, with `weight == 1.0` adding `values[j]`
+    /// directly (no multiply — bitwise-identical to the pre-kernel
+    /// decode_accumulate special case).
+    ///
+    /// Every position must be `< acc.len()`; callers validate against
+    /// the model dimension before handing batches over.
+    fn scatter_add(&self, positions: &[u32], values: &[f32], weight: f32, acc: &mut [f32]);
+
+    /// The eq.-(7) range reduce (loop 4): as [`Kernels::scatter_add`] but
+    /// restricted to the window `offset .. offset + acc.len()`, folding
+    /// into `acc[p - offset]` and skipping survivors outside the window.
+    fn scatter_add_range(
+        &self,
+        positions: &[u32],
+        values: &[f32],
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    );
+}
+
+/// The one nearest-center tie-breaking rule, shared by table design
+/// (`Quantizer::index_of`) and both quantize kernels: searchsorted with
+/// side=right, i.e. the count of thresholds `<= x`.
+///
+/// `thresholds` must be nondecreasing. NaN compares false against every
+/// threshold and lands in bin 0, matching the AVX2 `_CMP_GE_OQ` compare.
+pub fn nearest_center(thresholds: &[f64], x: f64) -> usize {
+    thresholds.partition_point(|&t| x >= t)
+}
+
+/// [`nearest_center`] over the blocked f32 table layout.
+pub fn nearest_center_f32(thresholds: &[f32], x: f32) -> usize {
+    thresholds.partition_point(|&t| x >= t)
+}
+
+/// A quantizer table in the blocked, lane-friendly layout the kernels
+/// consume: fixed [`MAX_LEVELS`] geometry (thresholds +∞-padded, centers
+/// repeating the last entry), contiguous f32 — the 15 thresholds and 16
+/// centers each fit one cache line and load whole into two 8-lane
+/// vectors. Produced by `Quantizer::padded_block` /
+/// `TableSource::get_block`; replaces the per-call
+/// `scaled().padded_f32()` pair of heap vectors on the encode/decode hot
+/// path.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantBlock {
+    pub thresholds: [f32; MAX_LEVELS - 1],
+    pub centers: [f32; MAX_LEVELS],
+}
+
+/// The scalar reference backend (always available).
+pub fn scalar_kernels() -> &'static dyn Kernels {
+    &scalar::ScalarKernels
+}
+
+/// The SIMD backend, when the CPU supports it (x86-64 with AVX2).
+pub fn simd_kernels() -> Option<&'static dyn Kernels> {
+    x86::simd_kernels()
+}
+
+/// Pick the backend: explicit `choice` (`"scalar"` / `"simd"`) wins where
+/// available, else SIMD-if-detected, else scalar — the same shape as the
+/// reactor's `M22_POLLER` pick.
+pub fn pick(choice: Option<&str>) -> &'static dyn Kernels {
+    match choice {
+        Some("scalar") => return scalar_kernels(),
+        Some("simd") | Some("avx2") => {
+            if let Some(k) = simd_kernels() {
+                return k;
+            }
+        }
+        _ => {}
+    }
+    simd_kernels().unwrap_or_else(scalar_kernels)
+}
+
+static ACTIVE: OnceLock<&'static dyn Kernels> = OnceLock::new();
+
+/// The process-wide backend: `M22_KERNELS` env override resolved through
+/// [`pick`] once, then cached (reading the env per call would let a
+/// mid-run change split encode and decode across backends).
+pub fn active() -> &'static dyn Kernels {
+    *ACTIVE.get_or_init(|| {
+        let choice = std::env::var("M22_KERNELS").ok();
+        pick(choice.as_deref())
+    })
+}
+
+/// Label of the process-wide backend, for `ServerStats`/summaries.
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_center_is_searchsorted_right() {
+        let t = [-1.0, 0.0, 1.0, f64::INFINITY];
+        assert_eq!(nearest_center(&t, -2.0), 0);
+        assert_eq!(nearest_center(&t, -1.0), 1, "tie goes right");
+        assert_eq!(nearest_center(&t, 0.0), 2);
+        assert_eq!(nearest_center(&t, 0.5), 2);
+        assert_eq!(nearest_center(&t, 1.0), 3);
+        assert_eq!(nearest_center(&t, f64::INFINITY), 4, "+inf ties the pad");
+        assert_eq!(nearest_center(&t, f64::NAN), 0, "NaN compares false");
+    }
+
+    #[test]
+    fn pick_honors_explicit_scalar() {
+        assert_eq!(pick(Some("scalar")).name(), "scalar");
+        // Unknown names fall through to the default rule rather than
+        // panicking — same forgiveness as M22_POLLER.
+        let default = pick(None).name();
+        assert_eq!(pick(Some("bogus")).name(), default);
+    }
+
+    #[test]
+    fn simd_pick_falls_back_cleanly() {
+        let k = pick(Some("simd"));
+        match simd_kernels() {
+            Some(s) => assert_eq!(k.name(), s.name()),
+            None => assert_eq!(k.name(), "scalar"),
+        }
+    }
+
+    #[test]
+    fn active_is_stable_across_calls() {
+        assert_eq!(active().name(), active_name());
+        assert!(std::ptr::eq(active(), active()));
+    }
+}

@@ -1,0 +1,146 @@
+//! The scalar reference backend: the original hot loops, extracted
+//! verbatim from their former call sites (`CpuCodec::quantize_into`,
+//! `bitpack::{pack_indices_into, unpack_indices}`,
+//! `Decoder::decode_accumulate`, `aggregate::accumulate_range`). Every
+//! other backend is pinned bit-exact against this one — keep it boring.
+
+use super::Kernels;
+use crate::compress::bitpack::{BitReader, BitWriter};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarKernels;
+
+impl Kernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn quantize_block(
+        &self,
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+        idx: &mut [u32],
+        ghat: &mut [f32],
+    ) {
+        debug_assert_eq!(idx.len(), g.len());
+        debug_assert_eq!(ghat.len(), g.len());
+        for (j, &x) in g.iter().enumerate() {
+            if x == 0.0 {
+                idx[j] = 0;
+                ghat[j] = 0.0;
+                continue;
+            }
+            // searchsorted(side=right): #thresholds <= x.
+            let i = thresholds.partition_point(|&t| x >= t);
+            idx[j] = i as u32;
+            ghat[j] = centers[i];
+        }
+    }
+
+    fn pack(&self, codes: &[u32], bits: u32, out: &mut Vec<u8>) {
+        let mut w = BitWriter::from_vec(std::mem::take(out));
+        for &c in codes {
+            w.push(c, bits);
+        }
+        *out = w.into_bytes();
+    }
+
+    fn unpack(&self, bytes: &[u8], bit_offset: u64, bits: u32, out: &mut [u32]) -> bool {
+        let mut r = BitReader::at(bytes, bit_offset);
+        for slot in out.iter_mut() {
+            match r.read(bits) {
+                Some(v) => *slot = v,
+                None => return false,
+            }
+        }
+        true
+    }
+
+    fn scatter_add(&self, positions: &[u32], values: &[f32], weight: f32, acc: &mut [f32]) {
+        debug_assert_eq!(positions.len(), values.len());
+        if weight == 1.0 {
+            for (&p, &v) in positions.iter().zip(values) {
+                acc[p as usize] += v;
+            }
+        } else {
+            for (&p, &v) in positions.iter().zip(values) {
+                acc[p as usize] += weight * v;
+            }
+        }
+    }
+
+    fn scatter_add_range(
+        &self,
+        positions: &[u32],
+        values: &[f32],
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(positions.len(), values.len());
+        let end = offset + acc.len();
+        if weight == 1.0 {
+            for (&p, &v) in positions.iter().zip(values) {
+                let i = p as usize;
+                if (offset..end).contains(&i) {
+                    acc[i - offset] += v;
+                }
+            }
+        } else {
+            for (&p, &v) in positions.iter().zip(values) {
+                let i = p as usize;
+                if (offset..end).contains(&i) {
+                    acc[i - offset] += weight * v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bitpack::{pack_indices, unpack_indices};
+
+    #[test]
+    fn pack_matches_bitwriter_stream() {
+        let codes: Vec<u32> = (0..100).map(|i| (i * 7) % 32).collect();
+        let mut out = Vec::new();
+        ScalarKernels.pack(&codes, 5, &mut out);
+        assert_eq!(out, pack_indices(&codes, 5));
+    }
+
+    #[test]
+    fn unpack_matches_bitreader_and_bounds() {
+        let codes: Vec<u32> = (0..33).map(|i| i % 8).collect();
+        let bytes = pack_indices(&codes, 3);
+        let mut got = vec![0u32; 33];
+        assert!(ScalarKernels.unpack(&bytes, 0, 3, &mut got));
+        assert_eq!(got, codes);
+        assert_eq!(unpack_indices(&bytes, 3, 33).unwrap(), codes);
+        // one code past the end fails exactly like BitReader -> None
+        let mut over = vec![0u32; 34];
+        assert!(!ScalarKernels.unpack(&bytes, 0, 3, &mut over));
+        // nonzero bit offsets resume mid-stream
+        let mut tail = vec![0u32; 30];
+        assert!(ScalarKernels.unpack(&bytes, 9, 3, &mut tail));
+        assert_eq!(tail, codes[3..]);
+    }
+
+    #[test]
+    fn scatter_add_weight_one_adds_directly() {
+        let mut acc = vec![1.0f32; 4];
+        ScalarKernels.scatter_add(&[0, 2, 2], &[0.5, 1.0, 1.0], 1.0, &mut acc);
+        assert_eq!(acc, vec![1.5, 1.0, 3.0, 1.0]);
+        ScalarKernels.scatter_add(&[1], &[2.0], -0.5, &mut acc);
+        assert_eq!(acc[1], 0.0);
+    }
+
+    #[test]
+    fn scatter_add_range_filters_the_window() {
+        let mut acc = vec![0.0f32; 3];
+        ScalarKernels.scatter_add_range(&[1, 4, 6, 7], &[1.0, 2.0, 3.0, 4.0], 1.0, 4, &mut acc);
+        assert_eq!(acc, vec![2.0, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,360 @@
+//! x86-64 AVX2 backend: 8-lane f32 blocks with scalar tails, pinned
+//! bit-exact against [`super::scalar`] by `tests/kernel_parity.rs`.
+//!
+//! Lane discipline (the kubecl fixed-width-lane idiom): every loop
+//! processes whole 8-wide blocks with `core::arch` intrinsics and hands
+//! the ragged tail to the scalar rule, so the result never depends on
+//! which side of the block boundary an element lands.
+//!
+//! Why each kernel matches the reference exactly:
+//!
+//! * **quantize** — the scalar rule is searchsorted: `idx = #thresholds
+//!   <= x`. With the padded 15-threshold block this is a popcount of
+//!   `x >= t_i` compares, and `_CMP_GE_OQ` is IEEE `>=` (ties included,
+//!   NaN false) — so counting compare masks reproduces the binary-search
+//!   answer bit for bit, zeros/NaN/±∞ included. Centers are then two
+//!   in-register permutes (16 f32 = exactly two lanes), not a gather.
+//! * **pack/unpack** — same LSB-first byte stream as
+//!   `bitpack::BitWriter`/`BitReader`, produced from 64-bit accumulator
+//!   blocks (pack) and 8-lane gathered 32-bit windows with per-lane
+//!   variable shifts (unpack, code widths <= 25 bits — every registered
+//!   scheme uses <= 16) with a word-at-a-time fallback elsewhere.
+//! * **reductions** — additions into `acc` stay serial in survivor order
+//!   (a scatter with duplicate targets cannot be reordered under IEEE
+//!   arithmetic); only the element-wise `weight * v` multiply is
+//!   vectorized, and `_mm256_mul_ps` rounds identically to the scalar
+//!   multiply (no FMA contraction), so the documented ULP bound for both
+//!   folds is **0** and the parity suite asserts bitwise equality.
+
+#[cfg(target_arch = "x86_64")]
+pub use imp::simd_kernels;
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_kernels() -> Option<&'static dyn super::Kernels> {
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use core::arch::x86_64::{
+        __m256i, _mm256_add_epi32, _mm256_and_si256, _mm256_andnot_ps, _mm256_andnot_si256,
+        _mm256_blendv_ps, _mm256_castps_si256, _mm256_castsi256_ps, _mm256_cmp_ps,
+        _mm256_cmpgt_epi32, _mm256_i32gather_epi32, _mm256_loadu_ps, _mm256_mul_ps,
+        _mm256_permutevar8x32_ps, _mm256_set1_epi32, _mm256_set1_ps, _mm256_setr_epi32,
+        _mm256_setzero_ps, _mm256_setzero_si256, _mm256_srli_epi32, _mm256_srlv_epi32,
+        _mm256_storeu_ps, _mm256_storeu_si256, _mm256_sub_epi32, _CMP_EQ_OQ, _CMP_GE_OQ,
+    };
+    use std::sync::OnceLock;
+
+    use crate::compress::kernels::Kernels;
+    use crate::compress::MAX_LEVELS;
+
+    const LANES: usize = 8;
+
+    /// AVX2 implementation, only ever handed out after
+    /// `is_x86_feature_detected!("avx2")` passed (see [`simd_kernels`]),
+    /// which is what makes the `unsafe` intrinsic calls sound.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct Avx2Kernels;
+
+    /// The AVX2 backend if this CPU has it; detection runs once.
+    pub fn simd_kernels() -> Option<&'static dyn Kernels> {
+        static AVAILABLE: OnceLock<bool> = OnceLock::new();
+        let ok = *AVAILABLE.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"));
+        if ok {
+            Some(&Avx2Kernels)
+        } else {
+            None
+        }
+    }
+
+    fn lane_mask(bits: u32) -> u32 {
+        if bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << bits) - 1
+        }
+    }
+
+    impl Kernels for Avx2Kernels {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn quantize_block(
+            &self,
+            g: &[f32],
+            thresholds: &[f32],
+            centers: &[f32],
+            idx: &mut [u32],
+            ghat: &mut [f32],
+        ) {
+            // The vector body loads the table whole: the blocked layout
+            // is a hard requirement here, not a debug assert.
+            assert_eq!(thresholds.len(), MAX_LEVELS - 1);
+            assert_eq!(centers.len(), MAX_LEVELS);
+            assert_eq!(idx.len(), g.len());
+            assert_eq!(ghat.len(), g.len());
+            unsafe { quantize_avx2(g, thresholds, centers, idx, ghat) }
+        }
+
+        fn pack(&self, codes: &[u32], bits: u32, out: &mut Vec<u8>) {
+            debug_assert!((1..=32).contains(&bits));
+            out.reserve((codes.len() * bits as usize).div_ceil(8));
+            let mask = lane_mask(bits) as u64;
+            // 64-bit accumulator: bits fill LSB-first and flush as whole
+            // little-endian words — the exact BitWriter byte stream,
+            // eight bytes at a time.
+            let mut acc: u64 = 0;
+            let mut filled: u32 = 0;
+            for &c in codes {
+                let v = c as u64 & mask;
+                acc |= v << filled;
+                filled += bits;
+                if filled >= 64 {
+                    out.extend_from_slice(&acc.to_le_bytes());
+                    filled -= 64;
+                    // the part of `v` that overflowed the flushed word
+                    acc = v >> (bits - filled);
+                }
+            }
+            while filled >= 8 {
+                out.push((acc & 0xff) as u8);
+                acc >>= 8;
+                filled -= 8;
+            }
+            if filled > 0 {
+                out.push((acc & 0xff) as u8);
+            }
+        }
+
+        fn unpack(&self, bytes: &[u8], bit_offset: u64, bits: u32, out: &mut [u32]) -> bool {
+            debug_assert!((1..=32).contains(&bits));
+            let total = bit_offset + out.len() as u64 * bits as u64;
+            if total > bytes.len() as u64 * 8 {
+                return false;
+            }
+            // Per-lane 32-bit windows need shift(<=7) + bits <= 32; the
+            // gather path also wants every lane bit position in i32 range
+            // (the first block's positions are formed even when the
+            // vector loop never runs, hence the 7-lane headroom).
+            if bits <= 25 && total + 7 * bits as u64 <= i32::MAX as u64 {
+                unsafe { unpack_avx2(bytes, bit_offset, bits, out) }
+            } else {
+                unpack_words(bytes, bit_offset, bits, out);
+            }
+            true
+        }
+
+        fn scatter_add(&self, positions: &[u32], values: &[f32], weight: f32, acc: &mut [f32]) {
+            debug_assert_eq!(positions.len(), values.len());
+            if weight == 1.0 {
+                // Pure scatter: serial by contract (duplicate targets),
+                // nothing to vectorize without changing the sum order.
+                for (&p, &v) in positions.iter().zip(values) {
+                    acc[p as usize] += v;
+                }
+            } else {
+                unsafe { scatter_add_weighted(positions, values, weight, acc) }
+            }
+        }
+
+        fn scatter_add_range(
+            &self,
+            positions: &[u32],
+            values: &[f32],
+            weight: f32,
+            offset: usize,
+            acc: &mut [f32],
+        ) {
+            debug_assert_eq!(positions.len(), values.len());
+            let end = offset + acc.len();
+            if weight == 1.0 {
+                for (&p, &v) in positions.iter().zip(values) {
+                    let i = p as usize;
+                    if (offset..end).contains(&i) {
+                        acc[i - offset] += v;
+                    }
+                }
+            } else {
+                unsafe { scatter_add_range_weighted(positions, values, weight, offset, acc) }
+            }
+        }
+    }
+
+    /// 8 elements per iteration: `idx` = popcount of `x >= t_i` over the
+    /// 15 padded thresholds (== searchsorted side=right), `ghat` = two
+    /// 8-lane permutes over the 16 centers blended on `idx > 7`, zeros
+    /// masked back to `(0, +0.0)`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_avx2(
+        g: &[f32],
+        thresholds: &[f32],
+        centers: &[f32],
+        idx: &mut [u32],
+        ghat: &mut [f32],
+    ) {
+        let n = g.len();
+        let c_lo = _mm256_loadu_ps(centers.as_ptr());
+        let c_hi = _mm256_loadu_ps(centers.as_ptr().add(LANES));
+        let mut tv = [_mm256_setzero_ps(); MAX_LEVELS - 1];
+        for (slot, &t) in tv.iter_mut().zip(thresholds) {
+            *slot = _mm256_set1_ps(t);
+        }
+        let zero = _mm256_setzero_ps();
+        let seven = _mm256_set1_epi32(7);
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let x = _mm256_loadu_ps(g.as_ptr().add(j));
+            let mut count = _mm256_setzero_si256();
+            for &t in &tv {
+                // mask lanes are 0 / -1; subtracting adds 1 per true
+                let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(x, t);
+                count = _mm256_sub_epi32(count, _mm256_castps_si256(ge));
+            }
+            let z = _mm256_cmp_ps::<_CMP_EQ_OQ>(x, zero);
+            let bin = _mm256_andnot_si256(_mm256_castps_si256(z), count);
+            let lo = _mm256_permutevar8x32_ps(c_lo, bin);
+            let hi = _mm256_permutevar8x32_ps(c_hi, bin);
+            let use_hi = _mm256_cmpgt_epi32(bin, seven);
+            let sel = _mm256_blendv_ps(lo, hi, _mm256_castsi256_ps(use_hi));
+            let out = _mm256_andnot_ps(z, sel);
+            _mm256_storeu_si256(idx.as_mut_ptr().add(j) as *mut __m256i, bin);
+            _mm256_storeu_ps(ghat.as_mut_ptr().add(j), out);
+            j += LANES;
+        }
+        // ragged tail: the scalar rule verbatim
+        for ((&x, i), gh) in g[j..].iter().zip(&mut idx[j..]).zip(&mut ghat[j..]) {
+            if x == 0.0 {
+                *i = 0;
+                *gh = 0.0;
+                continue;
+            }
+            let k = thresholds.partition_point(|&t| x >= t);
+            *i = k as u32;
+            *gh = centers[k];
+        }
+    }
+
+    /// 8 codes per iteration: gather each lane's 32-bit window at byte
+    /// `bitpos / 8`, variable-shift by `bitpos % 8`, mask. Falls back to
+    /// [`unpack_words`] once a lane's 4-byte window would run off the
+    /// buffer (bounds were validated by the caller bit-wise, not
+    /// window-wise).
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack_avx2(bytes: &[u8], bit_offset: u64, bits: u32, out: &mut [u32]) {
+        let n = out.len();
+        let mask = _mm256_set1_epi32(lane_mask(bits) as i32);
+        let seven_i = _mm256_set1_epi32(7);
+        let step = _mm256_set1_epi32((LANES as u32 * bits) as i32);
+        let b = bits as i32;
+        let mut bitpos_v = _mm256_setr_epi32(
+            bit_offset as i32,
+            bit_offset as i32 + b,
+            bit_offset as i32 + 2 * b,
+            bit_offset as i32 + 3 * b,
+            bit_offset as i32 + 4 * b,
+            bit_offset as i32 + 5 * b,
+            bit_offset as i32 + 6 * b,
+            bit_offset as i32 + 7 * b,
+        );
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let last_bit = bit_offset + (j + LANES - 1) as u64 * bits as u64;
+            if (last_bit / 8) as usize + 4 > bytes.len() {
+                break;
+            }
+            let byte_idx = _mm256_srli_epi32::<3>(bitpos_v);
+            let shift = _mm256_and_si256(bitpos_v, seven_i);
+            let w = _mm256_i32gather_epi32::<1>(bytes.as_ptr() as *const i32, byte_idx);
+            let vals = _mm256_and_si256(_mm256_srlv_epi32(w, shift), mask);
+            _mm256_storeu_si256(out.as_mut_ptr().add(j) as *mut __m256i, vals);
+            bitpos_v = _mm256_add_epi32(bitpos_v, step);
+            j += LANES;
+        }
+        unpack_words(bytes, bit_offset + j as u64 * bits as u64, bits, &mut out[j..]);
+    }
+
+    /// Word-at-a-time decode: one unaligned little-endian u64 window per
+    /// code (shift <= 7 plus bits <= 32 always fits), zero-padded copy
+    /// for the last few bytes. Bounds are the caller's problem — every
+    /// requested bit must exist.
+    fn unpack_words(bytes: &[u8], mut bitpos: u64, bits: u32, out: &mut [u32]) {
+        let mask = lane_mask(bits) as u64;
+        let n = bytes.len();
+        for slot in out.iter_mut() {
+            let byte = (bitpos >> 3) as usize;
+            let shift = (bitpos & 7) as u32;
+            let w = if byte + 8 <= n {
+                u64::from_le_bytes(bytes[byte..byte + 8].try_into().unwrap())
+            } else {
+                let mut tmp = [0u8; 8];
+                tmp[..n - byte].copy_from_slice(&bytes[byte..]);
+                u64::from_le_bytes(tmp)
+            };
+            *slot = ((w >> shift) & mask) as u32;
+            bitpos += bits as u64;
+        }
+    }
+
+    /// `weight != 1.0` fold: vectorize the multiply (identical IEEE
+    /// rounding to the scalar product — no FMA), keep the adds serial in
+    /// survivor order.
+    #[target_feature(enable = "avx2")]
+    unsafe fn scatter_add_weighted(
+        positions: &[u32],
+        values: &[f32],
+        weight: f32,
+        acc: &mut [f32],
+    ) {
+        let n = values.len();
+        let w = _mm256_set1_ps(weight);
+        let mut tmp = [0f32; LANES];
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let v = _mm256_loadu_ps(values.as_ptr().add(j));
+            _mm256_storeu_ps(tmp.as_mut_ptr(), _mm256_mul_ps(w, v));
+            for (k, &t) in tmp.iter().enumerate() {
+                acc[positions[j + k] as usize] += t;
+            }
+            j += LANES;
+        }
+        for (&p, &v) in positions[j..].iter().zip(&values[j..]) {
+            acc[p as usize] += weight * v;
+        }
+    }
+
+    /// Range variant of [`scatter_add_weighted`]: same vector multiply,
+    /// window filter on the serial scatter.
+    #[target_feature(enable = "avx2")]
+    unsafe fn scatter_add_range_weighted(
+        positions: &[u32],
+        values: &[f32],
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) {
+        let n = values.len();
+        let end = offset + acc.len();
+        let w = _mm256_set1_ps(weight);
+        let mut tmp = [0f32; LANES];
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let v = _mm256_loadu_ps(values.as_ptr().add(j));
+            _mm256_storeu_ps(tmp.as_mut_ptr(), _mm256_mul_ps(w, v));
+            for (k, &t) in tmp.iter().enumerate() {
+                let i = positions[j + k] as usize;
+                if (offset..end).contains(&i) {
+                    acc[i - offset] += t;
+                }
+            }
+            j += LANES;
+        }
+        for (&p, &v) in positions[j..].iter().zip(&values[j..]) {
+            let i = p as usize;
+            if (offset..end).contains(&i) {
+                acc[i - offset] += weight * v;
+            }
+        }
+    }
+}

@@ -33,11 +33,18 @@ use crate::quantizer::{Family, TableSource};
 use crate::stats::fitting::{fit_gennorm, fit_weibull2, Moments};
 use crate::train::ModelSpec;
 
-use super::bitpack::{BitReader, BitWriter};
+use super::kernels::{self, Kernels, QuantBlock};
 use super::rate::RateReport;
 use super::rle::{encode_positions_into, position_bits, PositionReader};
 use super::topk::topk_inplace_into;
 use super::{BlockCodec, Decoder, EncodeCtx, Encoder, MAX_LEVELS};
+
+/// Survivors processed per kernel call on the decode path: positions
+/// stream through the sequential γ-gap reader into a stack batch, codes
+/// unpack through `Kernels::unpack`, and the w·ĝ fold scatters through
+/// `Kernels::scatter_add{,_range}` — one indirect call per batch, zero
+/// heap allocation, identical visit order to the old per-survivor walk.
+const DECODE_BATCH: usize = 256;
 
 /// Tensors below this size pool into the global fallback group.
 pub const DEFAULT_MIN_FIT: usize = 512;
@@ -68,6 +75,9 @@ pub struct M22 {
     /// Shared standardized-design provider — the unbounded
     /// `QuantizerTables` or the fedserve LRU cache.
     tables: Arc<dyn TableSource>,
+    /// Kernel backend for code (un)packing and the decode folds; the
+    /// quantize loops go through `codec`, which carries its own pick.
+    ks: &'static dyn Kernels,
 }
 
 /// Per-group side info carried in the payload.
@@ -81,7 +91,15 @@ impl M22 {
     pub fn new(cfg: M22Config, codec: Arc<dyn BlockCodec>, tables: Arc<dyn TableSource>) -> M22 {
         assert!((1..=4).contains(&cfg.rq), "rq={} out of [1,4]", cfg.rq);
         assert!(cfg.levels() <= MAX_LEVELS);
-        M22 { cfg, codec, tables }
+        M22 { cfg, codec, tables, ks: kernels::active() }
+    }
+
+    /// Pin this scheme to an explicit kernel backend (parity tests and
+    /// benches that hold both backends in one process; production callers
+    /// use the process-wide pick via [`M22::new`]).
+    pub fn with_kernels(mut self, ks: &'static dyn Kernels) -> M22 {
+        self.ks = ks;
+        self
     }
 
     /// TINYSCRIPT: M = 0 + d-Weibull fit (paper Sec. V-A).
@@ -136,14 +154,16 @@ impl M22 {
         Ok(GroupParams { std: std as f32, shape: shape as f32 })
     }
 
-    /// (thresholds, centers) f32 arrays for one group — used identically by
-    /// encoder and decoder so reconstructions agree bit-exactly.
-    fn quantizer_arrays(&self, p: GroupParams) -> (Vec<f32>, Vec<f32>) {
-        let q = self
-            .tables
-            .get(self.cfg.family, p.shape as f64, self.cfg.m, self.cfg.levels())
-            .scaled(p.std.max(1e-30) as f64);
-        q.padded_f32(MAX_LEVELS)
+    /// Blocked (thresholds, centers) table for one group — used identically
+    /// by encoder and decoder so reconstructions agree bit-exactly.
+    fn quantizer_block(&self, p: GroupParams) -> QuantBlock {
+        self.tables.get_block(
+            self.cfg.family,
+            p.shape as f64,
+            self.cfg.m,
+            self.cfg.levels(),
+            p.std.max(1e-30) as f64,
+        )
     }
 
     /// Parse the payload header shared by both decode surfaces: returns
@@ -175,6 +195,57 @@ impl M22 {
             off += 8;
         }
         Ok((k, pos_bytes, params, &payload[off..]))
+    }
+
+    /// Batched survivor walk shared by every decode surface: positions
+    /// stream through the sequential γ-gap reader into a stack batch, the
+    /// matching codes unpack through the kernel backend, values map through
+    /// the per-group center tables, and `sink` receives parallel
+    /// (positions, values) slices in ascending-position order after
+    /// d-bounds validation.
+    fn walk_batches(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        sink: &mut dyn FnMut(&[u32], &[f32]),
+    ) -> Result<()> {
+        let cfg = self.cfg;
+        let d = spec.d();
+        let groups = self.fit_groups(spec);
+        let (k, pos_bytes, params, code_bytes) = self.parse_payload(payload, groups.len() + 1)?;
+
+        // rebuild per-group center tables (same snap path as the encoder)
+        let blocks: Vec<QuantBlock> = params.iter().map(|&p| self.quantizer_block(p)).collect();
+
+        let mut positions = PositionReader::new(pos_bytes);
+        let mut pos_buf = [0u32; DECODE_BATCH];
+        let mut code_buf = [0u32; DECODE_BATCH];
+        let mut val_buf = [0f32; DECODE_BATCH];
+        let mut done = 0usize;
+        let mut bit_off = 0u64;
+        while done < k {
+            let n = DECODE_BATCH.min(k - done);
+            for slot in pos_buf[..n].iter_mut() {
+                *slot = positions.next_position().context("positions decode")?;
+            }
+            if !self.ks.unpack(code_bytes, bit_off, cfg.rq, &mut code_buf[..n]) {
+                bail!("indices decode: code stream ends early");
+            }
+            bit_off += n as u64 * cfg.rq as u64;
+            for ((&p, &code), val) in
+                pos_buf[..n].iter().zip(&code_buf[..n]).zip(val_buf[..n].iter_mut())
+            {
+                let pos = p as usize;
+                if pos >= d {
+                    bail!("survivor position {pos} out of range (d = {d})");
+                }
+                let gid = Self::group_of(&groups, pos);
+                *val = blocks[gid].centers[code as usize];
+            }
+            sink(&pos_buf[..n], &val_buf[..n]);
+            done += n;
+        }
+        Ok(())
     }
 }
 
@@ -220,11 +291,11 @@ impl Encoder for M22 {
         // --- quantize group-wise into the dense idx/ghat scratch ------------
         ctx.idx.resize(grad.len(), 0);
         for (gi, r) in groups.iter().enumerate() {
-            let (t, c) = self.quantizer_arrays(params[gi]);
+            let blk = self.quantizer_block(params[gi]);
             self.codec.quantize_into(
                 &ctx.sparse[r.clone()],
-                &t,
-                &c,
+                &blk.thresholds,
+                &blk.centers,
                 &mut ctx.idx[r.clone()],
                 &mut ctx.ghat[r.clone()],
             )?;
@@ -233,10 +304,16 @@ impl Encoder for M22 {
             // global group: quantize only the pooled leftover values (§Perf
             // opt L3-1 — quantizing the full vector again cost ~25% of the
             // whole compress path), then scatter back into the gaps.
-            let (t, c) = self.quantizer_arrays(*params.last().unwrap());
+            let blk = self.quantizer_block(*params.last().unwrap());
             ctx.codes.resize(ctx.vals.len(), 0);
             ctx.vals2.resize(ctx.vals.len(), 0.0);
-            self.codec.quantize_into(&ctx.vals, &t, &c, &mut ctx.codes, &mut ctx.vals2)?;
+            self.codec.quantize_into(
+                &ctx.vals,
+                &blk.thresholds,
+                &blk.centers,
+                &mut ctx.codes,
+                &mut ctx.vals2,
+            )?;
             let mut j = 0usize; // cursor into the pooled values
             let mut cursor = 0usize;
             for r in &groups {
@@ -257,12 +334,13 @@ impl Encoder for M22 {
 
         // --- serialize -------------------------------------------------------
         encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
+        // gather the survivor codes into the codes scratch (its global-group
+        // use above is finished), then kernel-pack them in one pass
+        ctx.codes.clear();
+        let idx = &ctx.idx;
+        ctx.codes.extend(ctx.positions.iter().map(|&p| idx[p as usize]));
         ctx.code_bytes.clear();
-        let mut w = BitWriter::from_vec(std::mem::take(&mut ctx.code_bytes));
-        for &p in &ctx.positions {
-            w.push(ctx.idx[p as usize], cfg.rq);
-        }
-        ctx.code_bytes = w.into_bytes();
+        self.ks.pack(&ctx.codes, cfg.rq, &mut ctx.code_bytes);
 
         ctx.payload.reserve(12 + ctx.pos_bytes.len() + 8 * params.len() + ctx.code_bytes.len());
         ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
@@ -300,29 +378,43 @@ impl Decoder for M22 {
         spec: &ModelSpec,
         visit: &mut dyn FnMut(usize, f32),
     ) -> Result<()> {
-        let cfg = self.cfg;
-        let d = spec.d();
-        let groups = self.fit_groups(spec);
-        let (k, pos_bytes, params, code_bytes) = self.parse_payload(payload, groups.len() + 1)?;
-
-        // rebuild per-group center tables (same snap path as the encoder)
-        let centers: Vec<Vec<f32>> =
-            params.iter().map(|&p| self.quantizer_arrays(p).1).collect();
-
-        // walk positions and packed codes in lockstep — no dense ĝ, no
-        // intermediate position/index vectors
-        let mut positions = PositionReader::new(pos_bytes);
-        let mut codes = BitReader::new(code_bytes);
-        for _ in 0..k {
-            let pos = positions.next_position().context("positions decode")? as usize;
-            let code = codes.read(cfg.rq).context("indices decode")? as usize;
-            if pos >= d {
-                bail!("survivor position {pos} out of range (d = {d})");
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            for (&p, &v) in ps.iter().zip(vs) {
+                visit(p as usize, v);
             }
-            let gid = Self::group_of(&groups, pos);
-            visit(pos, centers[gid][code]);
+        })
+    }
+
+    fn decode_accumulate(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if acc.len() != spec.d() {
+            bail!("accumulator has {} entries, model d = {}", acc.len(), spec.d());
         }
-        Ok(())
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| ks.scatter_add(ps, vs, weight, acc))
+    }
+
+    fn decode_accumulate_range(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let end = offset + acc.len();
+        if end > spec.d() {
+            bail!("window {}..{} exceeds model d = {}", offset, end, spec.d());
+        }
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            ks.scatter_add_range(ps, vs, weight, offset, acc)
+        })
     }
 }
 
@@ -338,7 +430,7 @@ mod tests {
     fn mk(family: Family, m: f64, rq: u32, k: usize, min_fit: usize) -> M22 {
         M22::new(
             M22Config { family, m, rq, k, min_fit },
-            Arc::new(CpuCodec),
+            Arc::new(CpuCodec::new()),
             Arc::new(QuantizerTables::new()),
         )
     }
@@ -429,7 +521,8 @@ mod tests {
 
     #[test]
     fn tinyscript_is_m0_weibull() {
-        let t = M22::tinyscript(2, 100, Arc::new(CpuCodec), Arc::new(QuantizerTables::new()));
+        let t =
+            M22::tinyscript(2, 100, Arc::new(CpuCodec::new()), Arc::new(QuantizerTables::new()));
         assert_eq!(t.cfg.m, 0.0);
         assert_eq!(t.cfg.family, Family::Weibull);
         assert!(Encoder::name(&t).starts_with("tinyscript"));

@@ -33,6 +33,7 @@ pub mod bitpack;
 pub mod count_sketch;
 pub mod entropy;
 pub mod fp;
+pub mod kernels;
 pub mod m22;
 pub mod rate;
 pub mod registry;
@@ -83,9 +84,33 @@ pub trait BlockCodec: Send + Sync {
 }
 
 /// Pure-Rust reference codec — semantics mirror the L1 Pallas kernels
-/// exactly (same searchsorted convention, same zero handling).
-#[derive(Debug, Default, Clone, Copy)]
-pub struct CpuCodec;
+/// exactly (same searchsorted convention, same zero handling). The
+/// nearest-center loop itself lives in [`kernels`]; which backend runs it
+/// is fixed at construction ([`CpuCodec::new`] takes the process-wide
+/// pick, [`CpuCodec::with_kernels`] an explicit one for parity tests and
+/// scalar-vs-SIMD benches).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuCodec {
+    ks: &'static dyn kernels::Kernels,
+}
+
+impl CpuCodec {
+    /// Codec over the process-wide kernel backend (`M22_KERNELS`).
+    pub fn new() -> CpuCodec {
+        CpuCodec { ks: kernels::active() }
+    }
+
+    /// Codec over an explicit kernel backend.
+    pub fn with_kernels(ks: &'static dyn kernels::Kernels) -> CpuCodec {
+        CpuCodec { ks }
+    }
+}
+
+impl Default for CpuCodec {
+    fn default() -> CpuCodec {
+        CpuCodec::new()
+    }
+}
 
 impl BlockCodec for CpuCodec {
     fn quantize(
@@ -112,19 +137,7 @@ impl BlockCodec for CpuCodec {
         debug_assert_eq!(centers.len(), MAX_LEVELS);
         debug_assert_eq!(idx.len(), g.len());
         debug_assert_eq!(ghat.len(), g.len());
-        for (j, &x) in g.iter().enumerate() {
-            if x == 0.0 {
-                idx[j] = 0;
-                ghat[j] = 0.0;
-                continue;
-            }
-            // searchsorted(side=right): #thresholds <= x.
-            // partition_point = binary search (4 compares for 15 thresholds
-            // vs ~8 for a linear scan — §Perf opt L3-2).
-            let i = thresholds.partition_point(|&t| x >= t);
-            idx[j] = i as u32;
-            ghat[j] = centers[i];
-        }
+        self.ks.quantize_block(g, thresholds, centers, idx, ghat);
         Ok(())
     }
 
@@ -273,6 +286,43 @@ pub trait Decoder: Send + Sync {
         }
     }
 
+    /// Fold `weight · ĝ` restricted to the contiguous window
+    /// `offset .. offset + acc.len()`, adding into `acc[i - offset]` —
+    /// the eq.-(7) range reduce that `fedserve::aggregate` runs once per
+    /// shard (and `range`-mode cluster members run per model slice).
+    ///
+    /// Same bitwise contract as [`Decoder::decode_accumulate`]: per-index
+    /// additions happen in survivor order, and `weight == 1.0` adds the
+    /// decoded value directly. The default is the streaming filter over
+    /// [`Decoder::for_each_survivor`]; the positional schemes override it
+    /// with a batched kernel fold (`Kernels::scatter_add_range`).
+    fn decode_accumulate_range(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let end = offset + acc.len();
+        if end > spec.d() {
+            bail!("window {}..{} exceeds model d = {}", offset, end, spec.d());
+        }
+        if weight == 1.0 {
+            self.for_each_survivor(payload, spec, &mut |i, v| {
+                if (offset..end).contains(&i) {
+                    acc[i - offset] += v;
+                }
+            })
+        } else {
+            self.for_each_survivor(payload, spec, &mut |i, v| {
+                if (offset..end).contains(&i) {
+                    acc[i - offset] += weight * v;
+                }
+            })
+        }
+    }
+
     /// Dense ĝ — the reference decode path (tests, parity checks, old-style
     /// consumers). Default: scatter the survivors over zeros.
     fn decode_dense(&self, payload: &[u8], spec: &ModelSpec) -> Result<Vec<f32>> {
@@ -416,13 +466,13 @@ mod tests {
             *x = 2.0;
         }
         let g = vec![-5.0f32, -1.0, -0.3, 0.0, 0.3, 1.0, 42.0];
-        let (idx, ghat) = CpuCodec.quantize(&g, &t, &c).unwrap();
+        let (idx, ghat) = CpuCodec::new().quantize(&g, &t, &c).unwrap();
         assert_eq!(idx, vec![0, 1, 1, 0, 2, 3, 3]);
         assert_eq!(ghat, vec![-2.0, -0.5, -0.5, 0.0, 0.5, 2.0, 2.0]);
         // the in-place variant writes identical results
         let mut idx2 = vec![9u32; g.len()];
         let mut ghat2 = vec![9.0f32; g.len()];
-        CpuCodec.quantize_into(&g, &t, &c, &mut idx2, &mut ghat2).unwrap();
+        CpuCodec::new().quantize_into(&g, &t, &c, &mut idx2, &mut ghat2).unwrap();
         assert_eq!(idx2, idx);
         assert_eq!(ghat2, ghat);
     }
@@ -430,7 +480,7 @@ mod tests {
     #[test]
     fn cpu_codec_moments_match_fitting_path() {
         let g = grad_like(5000, 3);
-        let s = CpuCodec.moments(&g).unwrap();
+        let s = CpuCodec::new().moments(&g).unwrap();
         let m = crate::stats::fitting::Moments::from_sums(&s).unwrap();
         let m2 = crate::stats::fitting::Moments::from_nonzeros(&g).unwrap();
         assert!((m.mean_abs - m2.mean_abs).abs() < 1e-12);

@@ -18,6 +18,7 @@ use crate::quantizer::{Family, PrewarmPlan, TableSource};
 
 use super::count_sketch::CountSketch;
 use super::fp::TopKFp;
+use super::kernels;
 use super::m22::{M22, M22Config, DEFAULT_MIN_FIT};
 use super::rate::Budget;
 use super::uniform::TopKUniform;
@@ -299,45 +300,72 @@ fn sketch(spec: &SchemeSpec) -> CountSketch {
     )
 }
 
-/// Build the client (encode) half of a scheme.
+/// Build the client (encode) half of a scheme over the process-wide kernel
+/// backend ([`crate::compress::kernels::active`]).
 pub fn build_encoder(
     spec: &SchemeSpec,
     codec: Arc<dyn BlockCodec>,
     tables: Arc<dyn TableSource>,
 ) -> Result<Box<dyn Encoder>> {
+    build_encoder_with(spec, codec, tables, kernels::active())
+}
+
+/// [`build_encoder`] pinned to an explicit kernel backend — for parity
+/// tests and benches that hold both backends in one process.
+pub fn build_encoder_with(
+    spec: &SchemeSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<dyn TableSource>,
+    ks: &'static dyn kernels::Kernels,
+) -> Result<Box<dyn Encoder>> {
     spec.check()?;
     Ok(match spec.scheme {
         Scheme::M22 { family, m } => {
-            Box::new(M22::new(m22_config(spec, family, m), codec, tables))
+            Box::new(M22::new(m22_config(spec, family, m), codec, tables).with_kernels(ks))
         }
-        Scheme::TinyScript => Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables)),
-        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k)),
-        Scheme::TopKFp { bits } => {
-            Box::new(if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) })
+        Scheme::TinyScript => {
+            Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables).with_kernels(ks))
         }
+        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k).with_kernels(ks)),
+        Scheme::TopKFp { bits } => Box::new(
+            if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) }.with_kernels(ks),
+        ),
         Scheme::CountSketch => Box::new(sketch(spec)),
         Scheme::None => Box::new(NoCompression),
     })
 }
 
-/// Build the server (decode) half of a scheme. The two halves share no
-/// state beyond the deterministic table snap, so constructing them
-/// independently is sound — tests assert the byte-level roundtrip.
+/// Build the server (decode) half of a scheme over the process-wide kernel
+/// backend. The two halves share no state beyond the deterministic table
+/// snap, so constructing them independently is sound — tests assert the
+/// byte-level roundtrip.
 pub fn build_decoder(
     spec: &SchemeSpec,
     codec: Arc<dyn BlockCodec>,
     tables: Arc<dyn TableSource>,
 ) -> Result<Box<dyn Decoder>> {
+    build_decoder_with(spec, codec, tables, kernels::active())
+}
+
+/// [`build_decoder`] pinned to an explicit kernel backend.
+pub fn build_decoder_with(
+    spec: &SchemeSpec,
+    codec: Arc<dyn BlockCodec>,
+    tables: Arc<dyn TableSource>,
+    ks: &'static dyn kernels::Kernels,
+) -> Result<Box<dyn Decoder>> {
     spec.check()?;
     Ok(match spec.scheme {
         Scheme::M22 { family, m } => {
-            Box::new(M22::new(m22_config(spec, family, m), codec, tables))
+            Box::new(M22::new(m22_config(spec, family, m), codec, tables).with_kernels(ks))
         }
-        Scheme::TinyScript => Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables)),
-        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k)),
-        Scheme::TopKFp { bits } => {
-            Box::new(if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) })
+        Scheme::TinyScript => {
+            Box::new(M22::tinyscript(spec.rq, spec.k, codec, tables).with_kernels(ks))
         }
+        Scheme::TopKUniform => Box::new(TopKUniform::new(spec.rq, spec.k).with_kernels(ks)),
+        Scheme::TopKFp { bits } => Box::new(
+            if bits == 8 { TopKFp::fp8(spec.k) } else { TopKFp::fp4(spec.k) }.with_kernels(ks),
+        ),
         Scheme::CountSketch => Box::new(sketch(spec)),
         Scheme::None => Box::new(NoCompression),
     })
@@ -421,7 +449,7 @@ mod tests {
 
     #[test]
     fn builds_every_scheme_both_halves() {
-        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
         let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
         let b = Budget::paper_point(10_000, 2);
         for scheme in all_schemes() {
@@ -435,7 +463,7 @@ mod tests {
 
     #[test]
     fn unresolved_spec_is_rejected() {
-        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
         let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
         let spec = SchemeSpec::new(Scheme::TopKUniform, 2, 0); // k unset
         assert!(build_encoder(&spec, codec.clone(), tables.clone()).is_err());

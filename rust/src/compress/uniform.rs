@@ -8,11 +8,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::train::ModelSpec;
 
-use super::bitpack::{pack_indices_into, BitReader};
+use super::kernels::{self, Kernels};
 use super::rate::RateReport;
 use super::rle::{encode_positions_into, position_bits, PositionReader};
 use super::topk::topk_inplace_into;
 use super::{Decoder, EncodeCtx, Encoder};
+
+/// Survivors per kernel batch on the decode path (see `m22::DECODE_BATCH`).
+const DECODE_BATCH: usize = 256;
 
 /// topK + uniform quantizer.
 pub struct TopKUniform {
@@ -20,12 +23,20 @@ pub struct TopKUniform {
     pub rq: u32,
     /// sparsification level K
     pub k: usize,
+    /// kernel backend for code (un)packing and the decode folds
+    ks: &'static dyn Kernels,
 }
 
 impl TopKUniform {
     pub fn new(rq: u32, k: usize) -> Self {
         assert!((1..=16).contains(&rq));
-        TopKUniform { rq, k }
+        TopKUniform { rq, k, ks: kernels::active() }
+    }
+
+    /// Pin to an explicit kernel backend (parity tests / benches).
+    pub fn with_kernels(mut self, ks: &'static dyn Kernels) -> Self {
+        self.ks = ks;
+        self
     }
 
     fn levels(&self) -> u32 {
@@ -94,7 +105,8 @@ impl Encoder for TopKUniform {
         }
 
         encode_positions_into(&ctx.positions, &mut ctx.pos_bytes);
-        pack_indices_into(&ctx.codes, self.rq, &mut ctx.code_bytes);
+        ctx.code_bytes.clear();
+        self.ks.pack(&ctx.codes, self.rq, &mut ctx.code_bytes);
         ctx.payload.extend_from_slice(&(ctx.positions.len() as u32).to_le_bytes());
         ctx.payload.extend_from_slice(&(ctx.pos_bytes.len() as u32).to_le_bytes());
         ctx.payload.extend_from_slice(&ctx.pos_bytes);
@@ -119,16 +131,17 @@ impl Encoder for TopKUniform {
     }
 }
 
-impl Decoder for TopKUniform {
-    fn name(&self) -> String {
-        format!("topk+uniform(R={})", self.rq)
-    }
-
-    fn for_each_survivor(
+impl TopKUniform {
+    /// Batched survivor walk shared by every decode surface: positions
+    /// stream through the γ-gap reader into a stack batch, codes unpack
+    /// through the kernel backend, values map through the per-tensor
+    /// (min, max) ranges — the monotone tensor cursor survives across
+    /// batches because positions are ascending.
+    fn walk_batches(
         &self,
         payload: &[u8],
         spec: &ModelSpec,
-        visit: &mut dyn FnMut(usize, f32),
+        sink: &mut dyn FnMut(&[u32], &[f32]),
     ) -> Result<()> {
         let levels = self.levels();
         let d = spec.d();
@@ -150,22 +163,91 @@ impl Decoder for TopKUniform {
             ranges.push((lo, hi));
             off += 8;
         }
+        let code_bytes = &payload[off..];
         let mut positions = PositionReader::new(pos_bytes);
-        let mut codes = BitReader::new(&payload[off..]);
+        let mut pos_buf = [0u32; DECODE_BATCH];
+        let mut code_buf = [0u32; DECODE_BATCH];
+        let mut val_buf = [0f32; DECODE_BATCH];
+        let mut done = 0usize;
+        let mut bit_off = 0u64;
         let mut ti = 0usize;
-        for _ in 0..k {
-            let p = positions.next_position().context("positions decode")? as usize;
-            let c = codes.read(self.rq).context("indices decode")?;
-            if p >= d {
-                bail!("survivor position {p} out of range (d = {d})");
+        while done < k {
+            let n = DECODE_BATCH.min(k - done);
+            for slot in pos_buf[..n].iter_mut() {
+                *slot = positions.next_position().context("positions decode")?;
             }
-            while p >= spec.range(ti).end {
-                ti += 1;
+            if !self.ks.unpack(code_bytes, bit_off, self.rq, &mut code_buf[..n]) {
+                bail!("indices decode: code stream ends early");
             }
-            let (lo, hi) = ranges[ti];
-            visit(p, Self::center(lo, hi, levels, c));
+            bit_off += n as u64 * self.rq as u64;
+            for ((&p, &c), val) in
+                pos_buf[..n].iter().zip(&code_buf[..n]).zip(val_buf[..n].iter_mut())
+            {
+                let p = p as usize;
+                if p >= d {
+                    bail!("survivor position {p} out of range (d = {d})");
+                }
+                while p >= spec.range(ti).end {
+                    ti += 1;
+                }
+                let (lo, hi) = ranges[ti];
+                *val = Self::center(lo, hi, levels, c);
+            }
+            sink(&pos_buf[..n], &val_buf[..n]);
+            done += n;
         }
         Ok(())
+    }
+}
+
+impl Decoder for TopKUniform {
+    fn name(&self) -> String {
+        format!("topk+uniform(R={})", self.rq)
+    }
+
+    fn for_each_survivor(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        visit: &mut dyn FnMut(usize, f32),
+    ) -> Result<()> {
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            for (&p, &v) in ps.iter().zip(vs) {
+                visit(p as usize, v);
+            }
+        })
+    }
+
+    fn decode_accumulate(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        if acc.len() != spec.d() {
+            bail!("accumulator has {} entries, model d = {}", acc.len(), spec.d());
+        }
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| ks.scatter_add(ps, vs, weight, acc))
+    }
+
+    fn decode_accumulate_range(
+        &self,
+        payload: &[u8],
+        spec: &ModelSpec,
+        weight: f32,
+        offset: usize,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let end = offset + acc.len();
+        if end > spec.d() {
+            bail!("window {}..{} exceeds model d = {}", offset, end, spec.d());
+        }
+        let ks = self.ks;
+        self.walk_batches(payload, spec, &mut |ps, vs| {
+            ks.scatter_add_range(ps, vs, weight, offset, acc)
+        })
     }
 }
 

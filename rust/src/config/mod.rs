@@ -442,7 +442,7 @@ mod tests {
 
     #[test]
     fn factory_builds_every_scheme() {
-        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
         let tables = Arc::new(QuantizerTables::new());
         for scheme in [
             Scheme::M22 { family: Family::GenNorm, m: 2.0 },

@@ -330,7 +330,7 @@ mod tests {
     fn controller(d: usize) -> AdaptiveController {
         let budget = Budget::paper_point(d, 2);
         let base = SchemeSpec::new(Scheme::TopKUniform, 0, 0).resolve(&budget, 33);
-        let codec: Arc<dyn BlockCodec> = Arc::new(crate::compress::CpuCodec);
+        let codec: Arc<dyn BlockCodec> = Arc::new(crate::compress::CpuCodec::new());
         let tables: Arc<dyn TableSource> = Arc::new(LruTableCache::new(128));
         AdaptiveController::new(d, base, &budget, codec, tables)
     }

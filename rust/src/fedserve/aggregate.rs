@@ -4,11 +4,13 @@
 //!
 //! * **Fused decode+reduce** ([`accumulate_serial`] / [`accumulate_sharded`])
 //!   — the production path. Each client's payload is decoded *sparsely*
-//!   through [`Decoder::for_each_survivor`] and its survivors fold straight
-//!   into the accumulator, so a round never materializes a dense per-client
-//!   ĝ: memory traffic is O(d + Σ payload bytes) instead of
-//!   O(n_clients × d), and per-round allocations stop scaling with client
-//!   count.
+//!   through [`Decoder::decode_accumulate`] /
+//!   [`Decoder::decode_accumulate_range`] and its survivors fold straight
+//!   into the accumulator (the positional schemes batch the fold through
+//!   the `compress::kernels` backend), so a round never materializes a
+//!   dense per-client ĝ: memory traffic is O(d + Σ payload bytes) instead
+//!   of O(n_clients × d), and per-round allocations stop scaling with
+//!   client count.
 //! * **Dense reference** ([`aggregate_serial`] / [`aggregate_sharded`]) —
 //!   the pre-split API's decode-then-reduce path, kept as the parity oracle
 //!   and for benches.
@@ -55,6 +57,11 @@ pub fn accumulate_serial(
 /// global model. Bit-exactness argument: every global dimension is folded
 /// by exactly one range, and within a range the per-index addition order
 /// is the payload order — identical to the serial full-width fold.
+///
+/// The window filter + fold itself is the eq.-(7) range-reduce kernel
+/// (`compress::kernels::Kernels::scatter_add_range`), reached through
+/// [`Decoder::decode_accumulate_range`] so the positional schemes run it
+/// batched over the selected backend.
 pub fn accumulate_range(
     decoder: &dyn Decoder,
     payloads: &[&[u8]],
@@ -62,13 +69,8 @@ pub fn accumulate_range(
     offset: usize,
     acc: &mut [f32],
 ) -> Result<()> {
-    let end = offset + acc.len();
     for p in payloads {
-        decoder.for_each_survivor(p, spec, &mut |i, v| {
-            if (offset..end).contains(&i) {
-                acc[i - offset] += v;
-            }
-        })?;
+        decoder.decode_accumulate_range(p, spec, 1.0, offset, acc)?;
     }
     Ok(())
 }

@@ -155,6 +155,10 @@ impl PsCluster {
                 FedServer::new(server_cfg.clone(), 0, seed, dec)
             })
             .collect();
+        let stats = ServerStats {
+            kernel_backend: crate::compress::kernels::active_name(),
+            ..ServerStats::default()
+        };
         Ok(PsCluster {
             mode: ccfg.mode,
             sync_every: ccfg.sync_every,
@@ -167,7 +171,7 @@ impl PsCluster {
                 .map(|i| Scheduler::new(seed.wrapping_add(i)))
                 .collect(),
             sessions: vec![SessionStats::default(); n_clients],
-            stats: ServerStats::default(),
+            stats,
             slotmap: SlotMap::default(),
             n_clients,
             d,

@@ -402,7 +402,7 @@ mod tests {
         let scn = ScenarioSpec::parse(scn_s).unwrap();
         let d = 64;
         let spec = sim_spec(d);
-        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+        let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
         let tables = Arc::new(LruTableCache::new(16));
         FleetTransport::new(&cfg, &scn, 77, d, &spec, codec, tables)
     }

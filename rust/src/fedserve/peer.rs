@@ -618,7 +618,7 @@ pub fn serve_peer(
     // processes), and a FedServer configured to shard reduces identically
     let spec = sim_spec(m.d);
     let tables = Arc::new(LruTableCache::new(table_cache_capacity));
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let decoder = registry::build_decoder(&m.spec, codec, tables)
         .with_context(|| format!("building the decoder for member {}", m.member))?;
     let cfg = ServerConfig::builder().shards(m.shards).build();

@@ -286,12 +286,16 @@ impl FedServer {
         seed: u64,
         decoder: Box<dyn Decoder>,
     ) -> FedServer {
+        let stats = ServerStats {
+            kernel_backend: crate::compress::kernels::active_name(),
+            ..ServerStats::default()
+        };
         FedServer {
             cfg,
             decoder,
             scheduler: Scheduler::new(seed),
             sessions: vec![SessionStats::default(); n_clients],
-            stats: ServerStats::default(),
+            stats,
             acc: Vec::new(),
             slotmap: SlotMap::default(),
         }

@@ -289,7 +289,7 @@ pub(crate) struct SimServer {
 pub(crate) fn build_server(cfg: &ExperimentConfig, d: usize) -> Result<SimServer> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let decoder = cfg.build_decoder(d, codec.clone(), tables.clone())?;
     let mut server = FedServer::new(cfg.server.clone(), cfg.n_clients, cfg.seed, decoder);
     // a persisted cache first (cheap reload), then design whatever of the
@@ -718,7 +718,7 @@ pub(crate) fn build_cluster(cfg: &ExperimentConfig, d: usize) -> Result<SimClust
     let ccfg = cfg.server.cluster.clone().context("no cluster configured")?;
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let decoders = (0..ccfg.n_ps)
         .map(|_| cfg.build_decoder(d, codec.clone(), tables.clone()))
         .collect::<Result<Vec<_>>>()?;
@@ -780,7 +780,7 @@ pub fn serve_listen(cfg: &ExperimentConfig, d: usize, addr: &str) -> Result<SimR
 pub fn serve_connect(cfg: &ExperimentConfig, d: usize, addr: &str, id: usize) -> Result<()> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let memory = cfg.memory.then(|| Memory::new(d, cfg.memory_decay));
     let mut session =
         ClientSession::new(id, cfg.build_encoder(d, codec.clone(), tables.clone())?, memory);

@@ -111,6 +111,11 @@ pub struct ServerStats {
     pub preloaded_tables: u64,
     /// lookups served by a prewarmed table
     pub prewarm_hits: u64,
+    /// codec kernel backend the run decoded with ("scalar", "avx2"; ""
+    /// when unset) — recorded so CI smokes and fleet CSVs pin which
+    /// backend produced the numbers (the `TransportStats::backend`
+    /// pattern, applied to compute)
+    pub kernel_backend: &'static str,
     /// transport-measured byte totals (socket truth for TCP runs)
     pub transport: TransportStats,
 }
@@ -183,14 +188,17 @@ impl ServerStats {
         self.rounds.iter().filter(|t| t.aborted).count()
     }
 
-    /// Per-round CSV (milliseconds for the phase timings).
+    /// Per-round CSV (milliseconds for the phase timings). The trailing
+    /// `kernels` column repeats the run-wide backend label on every row —
+    /// consumers index columns by header name, so the append is
+    /// parse-compatible with pre-kernel CSVs.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors,aborted,family,m,rq,spread\n",
+            "round,collect_ms,reduce_ms,received,dropped,stale,framed_bytes,decode_errors,aborted,family,m,rq,spread,kernels\n",
         );
         for t in &self.rounds {
             s.push_str(&format!(
-                "{},{:.3},{:.3},{},{},{},{},{},{},{},{},{},{:.3}\n",
+                "{},{:.3},{:.3},{},{},{},{},{},{},{},{},{},{:.3},{}\n",
                 t.round,
                 t.collect_ns as f64 / 1e6,
                 t.reduce_ns as f64 / 1e6,
@@ -203,7 +211,8 @@ impl ServerStats {
                 t.ad_family,
                 t.ad_m,
                 t.ad_rq,
-                t.ad_spread
+                t.ad_spread,
+                self.kernel_backend
             ));
         }
         s
@@ -242,6 +251,9 @@ impl ServerStats {
             if self.preloaded_tables > 0 {
                 s.push_str(&format!(" ({} reloaded from disk)", self.preloaded_tables));
             }
+        }
+        if !self.kernel_backend.is_empty() {
+            s.push_str(&format!(" | kernels: {}", self.kernel_backend));
         }
         if !self.transport.label.is_empty() {
             s.push_str(&format!(
@@ -368,16 +380,17 @@ mod tests {
 
     #[test]
     fn csv_shape() {
-        let mut s = ServerStats::default();
+        let mut s = ServerStats { kernel_backend: "scalar", ..ServerStats::default() };
         s.push(timing(0, 2, 0));
         let csv = s.to_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,collect_ms,reduce_ms"));
-        assert!(lines[0].ends_with("aborted,family,m,rq,spread"));
+        assert!(lines[0].ends_with("aborted,family,m,rq,spread,kernels"));
         assert!(lines[1].starts_with("0,2.000,1.500,2,0,0,1000,0,0"));
-        // non-adaptive rounds carry the placeholder trajectory columns
-        assert!(lines[1].ends_with(",-,0,0,1.000"), "{}", lines[1]);
+        // non-adaptive rounds carry the placeholder trajectory columns,
+        // then the run-wide kernel backend
+        assert!(lines[1].ends_with(",-,0,0,1.000,scalar"), "{}", lines[1]);
     }
 
     #[test]
@@ -407,7 +420,20 @@ mod tests {
         s.push(t);
         let csv = s.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",G,2,3,4.500"), "{row}");
+        // trajectory columns sit just before the trailing kernels column
+        // (empty here: the backend was never recorded)
+        assert!(row.ends_with(",G,2,3,4.500,"), "{row}");
+    }
+
+    #[test]
+    fn kernel_backend_reaches_summary_and_csv() {
+        let mut s = ServerStats::default();
+        s.push(timing(0, 1, 0));
+        assert!(!s.summary().contains("kernels:"), "{}", s.summary());
+        s.kernel_backend = "avx2";
+        assert!(s.summary().contains("| kernels: avx2"), "{}", s.summary());
+        let csv = s.to_csv();
+        assert!(csv.lines().nth(1).unwrap().ends_with(",avx2"), "{csv}");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! even-level quantizer is symmetric with a threshold at 0. We design L/2
 //! positive levels on [0, ∞) and mirror.
 
+use crate::compress::kernels::QuantBlock;
 use crate::stats::Distribution;
 
 /// A designed scalar quantizer: `centers.len() == levels`,
@@ -28,9 +29,13 @@ pub struct Quantizer {
 }
 
 impl Quantizer {
-    /// Bin index of `x` (searchsorted semantics — matches the L1 kernel).
+    /// Bin index of `x` — routed through the one
+    /// `compress::kernels::nearest_center` entry point (searchsorted,
+    /// side=right), so table design and the encode kernels can never
+    /// disagree on tie-breaking. Thresholds are strictly increasing, so
+    /// the binary search equals the old linear `take_while` count.
     pub fn index_of(&self, x: f64) -> usize {
-        self.thresholds.iter().take_while(|&&t| x >= t).count()
+        crate::compress::kernels::nearest_center(&self.thresholds, x)
     }
 
     /// Dequantized value of `x`.
@@ -57,6 +62,25 @@ impl Quantizer {
         let last = *c.last().expect("at least one center");
         c.resize(max_levels, last);
         (t, c)
+    }
+
+    /// Scale + pad fused into the kernels' blocked table layout
+    /// ([`QuantBlock`]): fixed `MAX_LEVELS` geometry, no intermediate
+    /// vectors. Each entry is `(x * scale) as f32` — the same f64
+    /// multiply-then-narrow as `scaled(scale).padded_f32(MAX_LEVELS)`,
+    /// so the block is bit-identical to the old two-step path.
+    pub fn padded_block(&self, scale: f64) -> QuantBlock {
+        assert!(self.centers.len() <= crate::compress::MAX_LEVELS);
+        let mut t = [f32::INFINITY; crate::compress::MAX_LEVELS - 1];
+        for (slot, &x) in t.iter_mut().zip(&self.thresholds) {
+            *slot = (x * scale) as f32;
+        }
+        let last = *self.centers.last().expect("at least one center");
+        let mut c = [(last * scale) as f32; crate::compress::MAX_LEVELS];
+        for (slot, &x) in c.iter_mut().zip(&self.centers) {
+            *slot = (x * scale) as f32;
+        }
+        QuantBlock { thresholds: t, centers: c }
     }
 }
 
@@ -332,6 +356,24 @@ mod tests {
         assert_eq!(c.len(), 16);
         assert!(t[3..].iter().all(|x| x.is_infinite()));
         assert!(c[4..].iter().all(|&x| x == c[3]));
+    }
+
+    #[test]
+    fn padded_block_matches_scaled_padded_f32_bitwise() {
+        let d = GenNorm::standardized(1.3);
+        for levels in [2usize, 8, 16] {
+            let q = design(&d, 2.0, levels);
+            for scale in [1.0, 0.037, 123.5, 1e-30] {
+                let blk = q.padded_block(scale);
+                let (t, c) = q.scaled(scale).padded_f32(crate::compress::MAX_LEVELS);
+                for (a, b) in blk.thresholds.iter().zip(&t) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in blk.centers.iter().zip(&c) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

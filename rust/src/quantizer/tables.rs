@@ -119,6 +119,23 @@ pub trait TableSource: Send + Sync {
     /// Standardized (unit-variance) quantizer for the snapped
     /// (family, shape, M, levels) key.
     fn get(&self, family: Family, shape: f64, m: f64, levels: usize) -> Quantizer;
+
+    /// The same design scaled by `scale` and delivered in the kernels'
+    /// blocked f32 layout (`compress::kernels::QuantBlock`) — what the
+    /// encode/decode hot path consumes per tensor group. Provided in
+    /// terms of [`TableSource::get`], so every caching implementation
+    /// (shared map, LRU) inherits it; the fused scale+pad is bit-identical
+    /// to the old `scaled(k).padded_f32(MAX_LEVELS)` vector pair.
+    fn get_block(
+        &self,
+        family: Family,
+        shape: f64,
+        m: f64,
+        levels: usize,
+        scale: f64,
+    ) -> crate::compress::kernels::QuantBlock {
+        self.get(family, shape, m, levels).padded_block(scale)
+    }
 }
 
 /// Design the standardized quantizer for a snapped key — the single LBG

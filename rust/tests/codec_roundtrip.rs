@@ -33,7 +33,7 @@ fn all_schemes() -> Vec<Scheme> {
 }
 
 fn build_pair(scheme: Scheme, b: &Budget, seed: u64) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
     let spec = SchemeSpec::new(scheme, 0, 0).resolve(b, seed);
     let enc = registry::build_encoder(&spec, codec.clone(), tables.clone()).unwrap();

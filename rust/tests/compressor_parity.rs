@@ -77,7 +77,7 @@ fn value_bits_match_across_quantizer_schemes() {
     let g = realistic_grad(&spec, 1);
     let b = Budget::paper_point(spec.d(), 2);
     let tables = Arc::new(QuantizerTables::new());
-    let codec = Arc::new(CpuCodec);
+    let codec = Arc::new(CpuCodec::new());
     let uniform = TopKUniform::new(2, b.k_ref);
     let m22 = M22::new(
         M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k: b.k_ref, min_fit: 512 },
@@ -110,7 +110,7 @@ fn m22_beats_uniform_on_long_tailed_gradients() {
                 encode_once(&TopKUniform::new(rq, b.k_ref), &g, &spec).unwrap();
             let m22 = M22::new(
                 M22Config { family: Family::GenNorm, m: 0.0, rq, k: b.k_ref, min_fit: 512 },
-                Arc::new(CpuCodec),
+                Arc::new(CpuCodec::new()),
                 tables.clone(),
             );
             let (_, rec_m, _) = encode_once(&m22, &g, &spec).unwrap();
@@ -132,7 +132,7 @@ fn matched_m_minimizes_its_own_distortion() {
     let compress_with = |m: f64| {
         let c = M22::new(
             M22Config { family: Family::GenNorm, m, rq: 3, k: b.k_ref, min_fit: 512 },
-            Arc::new(CpuCodec),
+            Arc::new(CpuCodec::new()),
             tables.clone(),
         );
         encode_once(&c, &g, &spec).unwrap().1
@@ -155,7 +155,7 @@ fn per_layer_fit_beats_global_fit() {
     let rec = |min_fit: usize| {
         let c = M22::new(
             M22Config { family: Family::GenNorm, m: 0.0, rq: 2, k: b.k_ref, min_fit },
-            Arc::new(CpuCodec),
+            Arc::new(CpuCodec::new()),
             tables.clone(),
         );
         encode_once(&c, &g, &spec).unwrap().1
@@ -172,7 +172,7 @@ fn weibull_family_also_roundtrips_on_realistic_grads() {
     let b = Budget::paper_point(spec.d(), 1);
     let c = M22::new(
         M22Config { family: Family::Weibull, m: 4.0, rq: 1, k: b.k_ref, min_fit: 512 },
-        Arc::new(CpuCodec),
+        Arc::new(CpuCodec::new()),
         Arc::new(QuantizerTables::new()),
     );
     let (payload, reconstructed, _) = encode_once(&c, &g, &spec).unwrap();

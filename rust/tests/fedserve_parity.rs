@@ -35,7 +35,7 @@ fn base_cfg(scheme: Scheme, clients: usize, rounds: usize) -> ExperimentConfig {
 fn serial_reference(cfg: &ExperimentConfig, d: usize) -> Vec<f32> {
     let spec = sim_spec(d);
     let tables = Arc::new(LruTableCache::new(cfg.server.table_cache_capacity));
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     let decoder = cfg.build_decoder(d, codec.clone(), tables.clone()).unwrap();
     let comps: Vec<_> = (0..cfg.n_clients)
         .map(|_| cfg.build_encoder(d, codec.clone(), tables.clone()).unwrap())
@@ -104,7 +104,7 @@ fn fused_sparse_reduce_matches_dense_reduce_for_every_scheme() {
     // bit-exact at every shard count, for every scheme's real payloads
     let d = 3000;
     let spec = sim_spec(d);
-    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec);
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::new());
     for scheme in [
         Scheme::M22 { family: Family::GenNorm, m: 2.0 },
         Scheme::TinyScript,

@@ -76,7 +76,7 @@ fn client_loop(addr: &str, id: usize, sspec: SchemeSpec) {
     let spec = sim_spec(D);
     let enc = registry::build_encoder(
         &sspec,
-        Arc::new(m22::compress::CpuCodec),
+        Arc::new(m22::compress::CpuCodec::new()),
         Arc::new(LruTableCache::new(64)),
     )
     .unwrap();
@@ -154,7 +154,7 @@ fn run_cluster(
             .map(|_| {
                 registry::build_decoder(
                     &sspec,
-                    Arc::new(m22::compress::CpuCodec),
+                    Arc::new(m22::compress::CpuCodec::new()),
                     Arc::new(LruTableCache::new(64)),
                 )
                 .unwrap()

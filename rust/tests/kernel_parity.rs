@@ -1,0 +1,351 @@
+//! Parity suite for the kernel backends (`compress::kernels`): the SIMD
+//! backend is pinned against the scalar reference, first at the raw
+//! kernel surface (fuzzed inputs, lengths straddling the 8-lane width)
+//! and then end-to-end through every registered scheme.
+//!
+//! Contract under test (see the `compress::kernels` module docs):
+//!
+//! * `quantize_block`, `pack`, `unpack` — **bit-exact** for every input,
+//!   zeros / −0.0 / threshold ties / ±∞ / NaN included.
+//! * `scatter_add`, `scatter_add_range` — documented ULP bound is **0**
+//!   (serial adds, vectorized multiply with identical rounding), so the
+//!   reductions are asserted bitwise as well.
+//!
+//! On hosts without a SIMD backend the cross-backend assertions are
+//! vacuous: each test prints a note and returns, and the scalar
+//! reference — the only backend there — is covered by the rest of the
+//! test suite (plus the forced-scalar CI lane on hosts that *do* have
+//! SIMD).
+
+use std::sync::Arc;
+
+use m22::compress::kernels::{self, Kernels, QuantBlock};
+use m22::compress::registry::{self, Scheme, SchemeSpec};
+use m22::compress::{BlockCodec, Budget, CpuCodec, Decoder, EncodeCtx, Encoder, MAX_LEVELS};
+use m22::fedserve::sim::sim_spec;
+use m22::quantizer::{QuantizerTables, TableSource};
+use m22::util::prop::{prop_check, Gen};
+
+/// Lengths that straddle the 8-lane width from every side: empty, below
+/// one lane, exactly one lane, one off either boundary, several blocks
+/// plus ragged tails.
+const LENGTHS: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 257];
+
+/// False (with a visible note) when this host has no SIMD backend to
+/// compare against.
+fn simd_or_skip(test: &str) -> bool {
+    if kernels::simd_kernels().is_none() {
+        eprintln!("{test}: no SIMD backend on this host — cross-backend parity is vacuous");
+        return false;
+    }
+    true
+}
+
+/// Both backends, fetched inside prop closures (capturing the trait
+/// objects would break `prop_check`'s `RefUnwindSafe` bound).
+fn both() -> (&'static dyn Kernels, &'static dyn Kernels) {
+    (kernels::scalar_kernels(), kernels::simd_kernels().unwrap())
+}
+
+fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: dim {j}: {a} vs {b}");
+    }
+}
+
+/// A random quantizer table in the blocked layout: `levels` live entries
+/// (thresholds sorted, +∞-padded to 15; centers padded by repeating the
+/// last), exactly what `TableSource::get_block` hands the kernels.
+fn random_block(g: &mut Gen) -> QuantBlock {
+    let levels = *g.pick(&[2usize, 4, 8, 16]);
+    let mut cuts: Vec<f32> = (0..levels - 1).map(|_| g.f32_in(-3.0, 3.0)).collect();
+    cuts.sort_by(f32::total_cmp);
+    let mut thresholds = [f32::INFINITY; MAX_LEVELS - 1];
+    thresholds[..levels - 1].copy_from_slice(&cuts);
+    let mut centers = [0.0f32; MAX_LEVELS];
+    for c in centers.iter_mut().take(levels) {
+        *c = g.f32_in(-4.0, 4.0);
+    }
+    let last = centers[levels - 1];
+    for c in centers.iter_mut().skip(levels) {
+        *c = last;
+    }
+    QuantBlock { thresholds, centers }
+}
+
+/// Gradient values with the awkward cases injected: exact zeros, −0.0,
+/// ±∞, NaN, and exact threshold ties (where searchsorted side=right is
+/// the one tie-break both backends must share).
+fn awkward_values(g: &mut Gen, n: usize, blk: &QuantBlock) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if g.rng.below(5) == 0 {
+                match g.rng.below(6) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f32::INFINITY,
+                    3 => f32::NEG_INFINITY,
+                    4 => f32::NAN,
+                    _ => blk.thresholds[g.rng.below(MAX_LEVELS - 1)],
+                }
+            } else {
+                g.f32_in(-4.0, 4.0)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn quantize_block_scalar_vs_simd_bitwise() {
+    if !simd_or_skip("quantize_block parity") {
+        return;
+    }
+    prop_check("quantize_block scalar ≡ simd", 30, |g| {
+        let (sc, sd) = both();
+        let blk = random_block(g);
+        for &n in LENGTHS {
+            let v = awkward_values(g, n, &blk);
+            let mut idx_a = vec![0u32; n];
+            let mut ghat_a = vec![0.0f32; n];
+            let mut idx_b = vec![u32::MAX; n];
+            let mut ghat_b = vec![-9.0f32; n];
+            sc.quantize_block(&v, &blk.thresholds, &blk.centers, &mut idx_a, &mut ghat_a);
+            sd.quantize_block(&v, &blk.thresholds, &blk.centers, &mut idx_b, &mut ghat_b);
+            assert_eq!(idx_a, idx_b, "idx diverges at n={n}");
+            assert_bitwise(&ghat_b, &ghat_a, &format!("ghat at n={n}"));
+            // ... and both agree with the one searchsorted rule
+            for (j, (&x, &i)) in v.iter().zip(&idx_a).enumerate() {
+                let want = if x == 0.0 {
+                    0
+                } else {
+                    kernels::nearest_center_f32(&blk.thresholds, x)
+                };
+                assert_eq!(i as usize, want, "searchsorted rule at n={n} j={j} x={x}");
+            }
+        }
+    });
+}
+
+#[test]
+fn pack_scalar_vs_simd_byte_identical() {
+    if !simd_or_skip("pack parity") {
+        return;
+    }
+    prop_check("pack scalar ≡ simd", 30, |g| {
+        let (sc, sd) = both();
+        let bits = g.usize_in(1, 33) as u32;
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        for &n in LENGTHS {
+            let codes: Vec<u32> = (0..n).map(|_| g.rng.next_u64() as u32 & mask).collect();
+            // both backends append after an existing byte-aligned prefix
+            let prefix = vec![0x5au8; g.rng.below(4)];
+            let mut a = prefix.clone();
+            let mut b = prefix.clone();
+            sc.pack(&codes, bits, &mut a);
+            sd.pack(&codes, bits, &mut b);
+            assert_eq!(a, b, "pack bytes diverge at bits={bits} n={n}");
+            let want_len = prefix.len() + (n * bits as usize).div_ceil(8);
+            assert_eq!(a.len(), want_len, "pack length at bits={bits} n={n}");
+        }
+    });
+}
+
+#[test]
+fn unpack_scalar_vs_simd_including_offsets_and_truncation() {
+    if !simd_or_skip("unpack parity") {
+        return;
+    }
+    prop_check("unpack scalar ≡ simd", 30, |g| {
+        let (sc, sd) = both();
+        let bits = g.usize_in(1, 33) as u32;
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        for &n in LENGTHS {
+            let codes: Vec<u32> = (0..n).map(|_| g.rng.next_u64() as u32 & mask).collect();
+            let mut bytes = Vec::new();
+            sc.pack(&codes, bits, &mut bytes);
+            // resume mid-stream at a random code boundary, like the
+            // batched decode walk does
+            let j = g.rng.below(n + 1);
+            let off = j as u64 * bits as u64;
+            let mut got_a = vec![0u32; n - j];
+            let mut got_b = vec![u32::MAX; n - j];
+            assert!(sc.unpack(&bytes, off, bits, &mut got_a), "scalar bits={bits} n={n} j={j}");
+            assert!(sd.unpack(&bytes, off, bits, &mut got_b), "simd bits={bits} n={n} j={j}");
+            assert_eq!(&got_a[..], &codes[j..], "scalar codes at bits={bits} n={n} j={j}");
+            assert_eq!(&got_b[..], &codes[j..], "simd codes at bits={bits} n={n} j={j}");
+            // a truncated stream starves both backends identically
+            if j < n {
+                let cut = &bytes[..bytes.len() - 1];
+                let mut sink = vec![0u32; n - j];
+                assert!(!sc.unpack(cut, off, bits, &mut sink), "scalar truncation n={n}");
+                assert!(!sd.unpack(cut, off, bits, &mut sink), "simd truncation n={n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn scatter_folds_scalar_vs_simd_bitwise() {
+    if !simd_or_skip("scatter parity") {
+        return;
+    }
+    prop_check("scatter_add(_range) scalar ≡ simd", 30, |g| {
+        let (sc, sd) = both();
+        let d = g.usize_in(1, 400);
+        for &n in LENGTHS {
+            // duplicate targets are likely (and intended): the fold order
+            // over a repeated index is part of the contract
+            let positions: Vec<u32> = (0..n).map(|_| g.rng.below(d) as u32).collect();
+            let values = g.vec_f32(n..n + 1, -2.0, 2.0);
+            for &w in &[1.0f32, 0.0, -1.5, 0.37] {
+                let base = g.vec_f32(d..d + 1, -1.0, 1.0);
+                let mut a = base.clone();
+                let mut b = base.clone();
+                sc.scatter_add(&positions, &values, w, &mut a);
+                sd.scatter_add(&positions, &values, w, &mut b);
+                assert_bitwise(&b, &a, &format!("scatter_add w={w} n={n} d={d}"));
+
+                let offset = g.rng.below(d);
+                let wlen = g.usize_in(1, d - offset + 1);
+                let wbase = g.vec_f32(wlen..wlen + 1, -1.0, 1.0);
+                let mut wa = wbase.clone();
+                let mut wb = wbase.clone();
+                sc.scatter_add_range(&positions, &values, w, offset, &mut wa);
+                sd.scatter_add_range(&positions, &values, w, offset, &mut wb);
+                assert_bitwise(&wb, &wa, &format!("scatter_add_range w={w} n={n} off={offset}"));
+            }
+        }
+    });
+}
+
+fn build_pair_with(
+    scheme: Scheme,
+    b: &Budget,
+    seed: u64,
+    ks: &'static dyn Kernels,
+) -> (Box<dyn Encoder>, Box<dyn Decoder>) {
+    let codec: Arc<dyn BlockCodec> = Arc::new(CpuCodec::with_kernels(ks));
+    let tables: Arc<dyn TableSource> = Arc::new(QuantizerTables::new());
+    let spec = SchemeSpec::new(scheme, 0, 0).resolve(b, seed);
+    let enc = registry::build_encoder_with(&spec, codec.clone(), tables.clone(), ks).unwrap();
+    let dec = registry::build_decoder_with(&spec, codec, tables, ks).unwrap();
+    (enc, dec)
+}
+
+/// End-to-end invariance per registered scheme: same gradient through a
+/// scalar-pinned and a SIMD-pinned stack must produce byte-identical
+/// payloads, bitwise-identical reconstructions and dense decodes, and
+/// bitwise-identical fused / windowed folds (windows concatenating to
+/// the serial fold on either backend).
+#[test]
+fn every_scheme_is_backend_invariant_end_to_end() {
+    if !simd_or_skip("scheme end-to-end parity") {
+        return;
+    }
+    prop_check("all_schemes scalar ≡ simd end-to-end", 6, |g| {
+        let (sc, sd) = both();
+        let d = g.usize_in(300, 1600);
+        let spec = sim_spec(d);
+        let b = Budget::paper_point(d, *g.pick(&[1u32, 2, 3, 4]));
+        let grad = g.grad_like(d..d + 1, g.f64_in(0.0, 0.6));
+        let weight = *g.pick(&[0.37f32, -1.5, 2.25]);
+        for scheme in registry::all_schemes() {
+            let (enc_a, dec_a) = build_pair_with(scheme, &b, 7, sc);
+            let (enc_b, dec_b) = build_pair_with(scheme, &b, 7, sd);
+            let mut ctx_a = EncodeCtx::new();
+            let mut ctx_b = EncodeCtx::new();
+            enc_a.encode(&grad, &spec, &mut ctx_a).unwrap();
+            enc_b.encode(&grad, &spec, &mut ctx_b).unwrap();
+            assert_eq!(ctx_a.payload(), ctx_b.payload(), "{scheme:?}: payload bytes diverge");
+            assert_bitwise(
+                ctx_b.reconstructed(),
+                ctx_a.reconstructed(),
+                &format!("{scheme:?}: encoder reconstruction"),
+            );
+            // decode the same payload through both backends
+            let dense_a = dec_a.decode_dense(ctx_a.payload(), &spec).unwrap();
+            let dense_b = dec_b.decode_dense(ctx_a.payload(), &spec).unwrap();
+            assert_bitwise(&dense_b, &dense_a, &format!("{scheme:?}: dense decode"));
+            let acc0 = g.vec_f32(d..d + 1, -1.0, 1.0);
+            for &w in &[1.0f32, weight] {
+                // fused w·ĝ fold
+                let mut aa = acc0.clone();
+                let mut ab = acc0.clone();
+                dec_a.decode_accumulate(ctx_a.payload(), &spec, w, &mut aa).unwrap();
+                dec_b.decode_accumulate(ctx_a.payload(), &spec, w, &mut ab).unwrap();
+                assert_bitwise(&ab, &aa, &format!("{scheme:?}: fused fold w={w}"));
+                // eq.-(7) range reduce: two windows concatenate to the
+                // serial fold, on either backend
+                let cut = g.usize_in(1, d);
+                let mut win_a = acc0[..cut].to_vec();
+                let mut tail_a = acc0[cut..].to_vec();
+                dec_a.decode_accumulate_range(ctx_a.payload(), &spec, w, 0, &mut win_a).unwrap();
+                dec_a.decode_accumulate_range(ctx_a.payload(), &spec, w, cut, &mut tail_a).unwrap();
+                let mut win_b = acc0[..cut].to_vec();
+                let mut tail_b = acc0[cut..].to_vec();
+                dec_b.decode_accumulate_range(ctx_a.payload(), &spec, w, 0, &mut win_b).unwrap();
+                dec_b.decode_accumulate_range(ctx_a.payload(), &spec, w, cut, &mut tail_b).unwrap();
+                win_a.extend_from_slice(&tail_a);
+                win_b.extend_from_slice(&tail_b);
+                assert_bitwise(&win_a, &aa, &format!("{scheme:?}: windowed ≡ serial w={w}"));
+                assert_bitwise(&win_b, &win_a, &format!("{scheme:?}: windowed fold w={w}"));
+            }
+        }
+    });
+}
+
+/// Degenerate gradient (every entry zero — survivors all quantize to the
+/// zero bin) stays backend-invariant too: this is the smallest payload
+/// the batched decode walk sees and the one where an off-by-one in the
+/// empty/short batches would hide.
+#[test]
+fn all_zero_gradient_is_backend_invariant() {
+    if !simd_or_skip("zero-gradient parity") {
+        return;
+    }
+    let (sc, sd) = both();
+    let d = 640;
+    let spec = sim_spec(d);
+    let b = Budget::paper_point(d, 2);
+    let grad = vec![0.0f32; d];
+    for scheme in registry::all_schemes() {
+        let (enc_a, dec_a) = build_pair_with(scheme, &b, 3, sc);
+        let (enc_b, dec_b) = build_pair_with(scheme, &b, 3, sd);
+        let mut ctx_a = EncodeCtx::new();
+        let mut ctx_b = EncodeCtx::new();
+        enc_a.encode(&grad, &spec, &mut ctx_a).unwrap();
+        enc_b.encode(&grad, &spec, &mut ctx_b).unwrap();
+        assert_eq!(ctx_a.payload(), ctx_b.payload(), "{scheme:?}: zero-grad payload diverges");
+        let mut acc_a = vec![0.25f32; d];
+        let mut acc_b = acc_a.clone();
+        dec_a.decode_accumulate(ctx_a.payload(), &spec, 0.37, &mut acc_a).unwrap();
+        dec_b.decode_accumulate(ctx_a.payload(), &spec, 0.37, &mut acc_b).unwrap();
+        assert_bitwise(&acc_b, &acc_a, &format!("{scheme:?}: zero-grad fold"));
+    }
+}
+
+/// Empty inputs are exact no-ops on every backend — the kernel-level
+/// face of the "empty survivors" case.
+#[test]
+fn empty_inputs_are_noops_on_every_backend() {
+    let mut backends: Vec<&'static dyn Kernels> = vec![kernels::scalar_kernels()];
+    backends.extend(kernels::simd_kernels());
+    for ks in backends {
+        let mut out = vec![0xa5u8; 2];
+        ks.pack(&[], 7, &mut out);
+        assert_eq!(out, vec![0xa5u8; 2], "{}: empty pack must append nothing", ks.name());
+        assert!(ks.unpack(&[], 0, 7, &mut []), "{}: empty unpack succeeds", ks.name());
+        let mut acc = vec![1.5f32; 3];
+        ks.scatter_add(&[], &[], 2.0, &mut acc);
+        ks.scatter_add_range(&[], &[], 2.0, 1, &mut acc);
+        assert_eq!(acc, vec![1.5f32; 3], "{}: empty folds are no-ops", ks.name());
+        let mut idx = [0u32; 0];
+        let mut ghat = [0f32; 0];
+        let blk = QuantBlock {
+            thresholds: [f32::INFINITY; MAX_LEVELS - 1],
+            centers: [0.0; MAX_LEVELS],
+        };
+        ks.quantize_block(&[], &blk.thresholds, &blk.centers, &mut idx, &mut ghat);
+    }
+}

@@ -57,7 +57,7 @@ fn hlo_quantize_matches_cpu_codec() {
     let q = design(&GenNorm::standardized(1.2), 2.0, 8);
     let (t, c) = q.padded_f32(16);
     let (ih, gh) = h.quantize(&g, &t, &c).unwrap();
-    let (ic, gc) = CpuCodec.quantize(&g, &t, &c).unwrap();
+    let (ic, gc) = CpuCodec::new().quantize(&g, &t, &c).unwrap();
     assert_eq!(ih, ic);
     assert_eq!(gh, gc);
 }
@@ -69,7 +69,7 @@ fn hlo_moments_match_cpu_codec() {
     let mut rng = Rng::new(7);
     let g: Vec<f32> = (0..70_000).map(|_| (rng.normal() * 0.02) as f32).collect();
     let mh = h.moments(&g).unwrap();
-    let mc = CpuCodec.moments(&g).unwrap();
+    let mc = CpuCodec::new().moments(&g).unwrap();
     for i in 0..8 {
         let rel = (mh[i] - mc[i]).abs() / mc[i].abs().max(1.0);
         // kernel accumulates in f32; CPU reference in f64
@@ -166,7 +166,7 @@ fn m22_compressor_on_hlo_codec_roundtrips() {
     // and the HLO path agrees with the pure-Rust codec end to end
     let comp_cpu = M22::new(
         M22Config { family: Family::GenNorm, m: 2.0, rq: 2, k, min_fit: 512 },
-        Arc::new(CpuCodec),
+        Arc::new(CpuCodec::new()),
         tables,
     );
     let (_, reconstructed_cpu, _) = encode_once(&comp_cpu, &g, spec).unwrap();
